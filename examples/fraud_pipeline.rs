@@ -1,0 +1,202 @@
+//! **End-to-end driver** (EXPERIMENTS.md §E2E): the full three-layer
+//! stack on a realistic workload.
+//!
+//! Pipeline per transaction (paper §2.1's fraud-detection use case):
+//!   synthetic fraud trace (Zipf cards/merchants, log-normal amounts)
+//!   → front-end routing (mlog topics) → back-end task processors
+//!   (reservoir + plan DAG + state store) → per-event accurate window
+//!   aggregates → reply topic → feature row → **AOT fraud scorer (PJRT)**
+//!   → block/allow decision.
+//!
+//! Reports end-to-end latency percentiles (coordinated-omission corrected
+//! at the paper's 500 ev/s), throughput capacity, decision stats, and
+//! reservoir cache health.
+//!
+//! ```text
+//! cargo run --release --example fraud_pipeline [-- --quick]
+//! ```
+
+use railgun::agg::AggKind;
+use railgun::config::{EngineConfig, StreamDef};
+use railgun::coordinator::Node;
+use railgun::mlog::{Broker, BrokerConfig};
+use railgun::plan::MetricSpec;
+use railgun::runtime::{artifacts_available, artifacts_dir, FraudScorer, Runtime};
+use railgun::util::bench::BenchOpts;
+use railgun::util::clock::ms;
+use railgun::util::hist::Histogram;
+use railgun::util::tmp::TempDir;
+use railgun::window::WindowSpec;
+use railgun::workload::{payments_schema, CoInjector, FraudGenerator, WorkloadConfig};
+use std::time::Duration;
+
+const BLOCK_THRESHOLD: f32 = 0.9;
+
+fn stream_def() -> StreamDef {
+    StreamDef {
+        name: "payments".into(),
+        schema: payments_schema(),
+        entities: vec!["card".into()],
+        metrics: vec![
+            MetricSpec::new(
+                "count_5m",
+                AggKind::Count,
+                None,
+                WindowSpec::sliding(5 * ms::MINUTE),
+                &["card"],
+            ),
+            MetricSpec::new(
+                "sum_5m",
+                AggKind::Sum,
+                Some("amount"),
+                WindowSpec::sliding(5 * ms::MINUTE),
+                &["card"],
+            ),
+            MetricSpec::new(
+                "avg_5m",
+                AggKind::Avg,
+                Some("amount"),
+                WindowSpec::sliding(5 * ms::MINUTE),
+                &["card"],
+            ),
+            MetricSpec::new(
+                "count_1h",
+                AggKind::Count,
+                None,
+                WindowSpec::sliding(ms::HOUR),
+                &["card"],
+            ),
+            MetricSpec::new(
+                "sum_1h",
+                AggKind::Sum,
+                Some("amount"),
+                WindowSpec::sliding(ms::HOUR),
+                &["card"],
+            ),
+            MetricSpec::new(
+                "distinct_merchants_1d",
+                AggKind::CountDistinct,
+                Some("merchant"),
+                WindowSpec::sliding(ms::DAY),
+                &["card"],
+            ),
+        ],
+    }
+}
+
+fn main() -> railgun::Result<()> {
+    railgun::util::logging::init();
+    let opts = BenchOpts::from_args();
+    let n_events = opts.scale(30_000);
+    let rate_eps = 500.0; // the paper's §4.1 sustained throughput
+
+    if !artifacts_available() {
+        eprintln!("fraud_pipeline: artifacts missing — run `make artifacts` first");
+        std::process::exit(1);
+    }
+    let tmp = TempDir::new("fraud_pipeline");
+
+    // --- the stack -------------------------------------------------------
+    let broker = Broker::open(BrokerConfig::in_memory())?;
+    let cfg = EngineConfig {
+        processor_units: 1, // single-core testbed
+        partitions_per_topic: 2,
+        ..EngineConfig::new(tmp.path().to_path_buf())
+    };
+    let node = Node::start("node0", cfg, broker)?;
+    node.register_stream(stream_def())?;
+    let mut collector = node.reply_collector()?;
+
+    let runtime = Runtime::cpu()?;
+    let scorer = FraudScorer::load(&runtime, &artifacts_dir())?;
+    println!(
+        "stack up: PJRT={} scorer batch={} features={:?}",
+        runtime.platform(),
+        scorer.meta().batch,
+        scorer.meta().feature_names
+    );
+
+    // --- workload ---------------------------------------------------------
+    let mut generator = FraudGenerator::new(WorkloadConfig {
+        seed: opts.seed,
+        ..WorkloadConfig::default()
+    });
+    let interarrival_ms = (1000.0f64 / rate_eps).max(1.0) as i64;
+    let mut injector = CoInjector::new(rate_eps);
+    let mut score_hist = Histogram::new();
+    let mut blocked = 0u64;
+    let mut scored = 0u64;
+    let mut score_sum = 0.0f64;
+
+    println!("driving {n_events} events at a virtual {rate_eps} ev/s …");
+    let wall_start = std::time::Instant::now();
+    for i in 0..n_events {
+        let ts = 1_600_000_000_000 + i as i64 * interarrival_ms;
+        let event = generator.next_event(ts);
+        let amount = event.values[2].as_f64().unwrap_or(0.0) as f32;
+        let cnp = matches!(event.values[3], railgun::event::Value::Bool(true));
+
+        // one full decision, timed end-to-end (ingest → replies → score)
+        let decision = injector.observe(|| -> railgun::Result<(f32, bool)> {
+            let receipt = node.frontend().ingest("payments", event.clone())?;
+            let replies = collector.await_event(
+                receipt.ingest_id,
+                receipt.fanout,
+                Duration::from_secs(30),
+            )?;
+            // assemble the feature row in artifact order
+            let mut by_name = std::collections::HashMap::new();
+            for r in &replies {
+                for m in &r.metrics {
+                    by_name.insert(m.name.clone(), m.value.unwrap_or(0.0) as f32);
+                }
+            }
+            let row: Vec<f32> = scorer
+                .meta()
+                .feature_names
+                .iter()
+                .map(|name| match name.as_str() {
+                    "amount" => amount,
+                    "is_cnp" => cnp as u8 as f32,
+                    other => by_name.get(other).copied().unwrap_or(0.0),
+                })
+                .collect();
+            let t0 = std::time::Instant::now();
+            let prob = scorer.score(&row, 1)?[0];
+            score_hist.record(t0.elapsed().as_nanos() as u64);
+            Ok((prob, prob > BLOCK_THRESHOLD))
+        })?;
+        let (prob, block) = decision;
+        scored += 1;
+        score_sum += prob as f64;
+        blocked += block as u64;
+    }
+    let wall = wall_start.elapsed();
+
+    // --- report ------------------------------------------------------------
+    let report = injector.report();
+    println!("\n== fraud_pipeline results ==");
+    println!(
+        "events={} wall={:.1}s capacity={:.0} ev/s (offered {:.0} ev/s, kept_up={})",
+        report.events,
+        wall.as_secs_f64(),
+        report.capacity_eps,
+        report.offered_eps,
+        report.kept_up
+    );
+    println!("end-to-end (CO-corrected): {}", injector.hist.summary_ms());
+    println!("service time only:         {}", injector.service_hist.summary_ms());
+    println!("scorer (PJRT) call:        {}", score_hist.summary_ms());
+    println!(
+        "decisions: scored={scored} blocked={blocked} ({:.3}%), mean score {:.4}",
+        100.0 * blocked as f64 / scored as f64,
+        score_sum / scored as f64
+    );
+    let p999_ms = injector.hist.quantile(0.999) as f64 / 1e6;
+    println!(
+        "paper L requirement (<250ms @ p99.9): {} ({p999_ms:.2}ms)",
+        if p999_ms < 250.0 { "MET" } else { "MISSED" }
+    );
+    node.shutdown(true);
+    Ok(())
+}

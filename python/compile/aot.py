@@ -1,0 +1,158 @@
+"""AOT compile path: lower the L2 graphs to HLO **text** artifacts.
+
+HLO text — not ``.serialize()`` — is the interchange format: jax ≥ 0.5
+emits HloModuleProto with 64-bit instruction ids, which the xla crate's
+xla_extension 0.5.1 rejects (``proto.id() <= INT_MAX``). The text parser
+reassigns ids and round-trips cleanly (see /opt/xla-example/README.md).
+
+Outputs (``make artifacts``):
+  artifacts/window_agg.hlo.txt    batched aggregation-state transition
+  artifacts/fraud_scorer.hlo.txt  fraud MLP with baked weights
+  artifacts/meta.json             shape contract for the rust runtime
+  artifacts/golden.json           input/output vectors the rust runtime
+                                  test replays to verify numerics
+
+Python runs only here — never on the request path.
+"""
+
+import argparse
+import json
+import os
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from compile import model
+from compile.kernels import ref
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO → XlaComputation → HLO text (id-safe interchange).
+
+    ``print_large_constants=True`` is load-bearing: the default printer
+    elides big literals as ``constant({...})``, which the text parser on
+    the rust side happily reads back as zeros — silently destroying the
+    scorer's baked weights.
+    """
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    text = comp.as_hlo_text(print_large_constants=True)
+    if "{...}" in text:
+        raise RuntimeError("HLO text still contains elided constants")
+    return text
+
+
+def lower_window_agg() -> str:
+    spec = lambda shape, dt: jax.ShapeDtypeStruct(shape, dt)
+    lowered = jax.jit(model.window_agg_step, donate_argnums=(0,)).lower(
+        spec((model.AGG_SLOTS, model.AGG_LANES), jnp.float32),
+        spec((model.AGG_BATCH,), jnp.int32),
+        spec((model.AGG_BATCH,), jnp.float32),
+        spec((model.AGG_BATCH,), jnp.float32),
+    )
+    return to_hlo_text(lowered)
+
+
+def lower_fraud_scorer(params) -> str:
+    scorer = model.make_fraud_scorer(params)
+    lowered = jax.jit(scorer).lower(
+        jax.ShapeDtypeStruct((model.SCORER_BATCH, model.SCORER_FEATURES), jnp.float32)
+    )
+    return to_hlo_text(lowered)
+
+
+def golden_vectors(params) -> dict:
+    """Deterministic test vectors, evaluated through the jitted graphs."""
+    rng = np.random.default_rng(0x60)  # fixed seed: artifacts reproducible
+    # window_agg case: includes duplicate slots, an expire, and padding
+    state = np.zeros((model.AGG_SLOTS, model.AGG_LANES), np.float32)
+    state[5, 0] = 2.0
+    state[5, 1] = 30.0
+    state[5, 2] = 500.0
+    slots = np.zeros((model.AGG_BATCH,), np.int32)
+    values = np.zeros((model.AGG_BATCH,), np.float32)
+    signs = np.zeros((model.AGG_BATCH,), np.float32)
+    slots[:6] = [5, 7, 7, 5, 1023, 5]
+    values[:6] = [10.0, 3.5, 2.5, 20.0, 1.25, 10.0]
+    signs[:6] = [1, 1, 1, 1, 1, -1]  # last row expires the first add
+    (new_state,) = jax.jit(model.window_agg_step)(
+        jnp.asarray(state), jnp.asarray(slots), jnp.asarray(values), jnp.asarray(signs)
+    )
+    touched = sorted({5, 7, 1023})
+    agg_case = {
+        "slots": slots[:6].tolist(),
+        "values": values[:6].tolist(),
+        "signs": signs[:6].tolist(),
+        "state_preload": {"slot": 5, "lanes": [2.0, 30.0, 500.0]},
+        "touched_slots": touched,
+        "expected_rows": {str(s): np.asarray(new_state)[s].tolist() for s in touched},
+    }
+
+    # scorer case: varied feature rows, rest padded with row 0
+    feats = np.tile(
+        rng.normal(50.0, 20.0, size=(1, model.SCORER_FEATURES)).astype(np.float32),
+        (model.SCORER_BATCH, 1),
+    )
+    feats[:8] = rng.normal(50.0, 20.0, size=(8, model.SCORER_FEATURES)).astype(np.float32)
+    scorer = model.make_fraud_scorer(params)
+    (probs,) = jax.jit(scorer)(jnp.asarray(feats))
+    probs = np.asarray(probs)
+    # cross-check against the pure-jnp reference before publishing
+    want = np.asarray(ref.fraud_mlp_ref(jnp.asarray(feats), params))
+    np.testing.assert_allclose(probs, want, rtol=1e-5, atol=1e-6)
+    scorer_case = {
+        "features": feats[:8].tolist(),
+        "expected_probs": probs[:8, 0].tolist(),
+    }
+    return {"window_agg": agg_case, "fraud_scorer": scorer_case}
+
+
+def main() -> None:
+    parser = argparse.ArgumentParser(description=__doc__)
+    parser.add_argument("--out-dir", default="../artifacts")
+    args = parser.parse_args()
+    os.makedirs(args.out_dir, exist_ok=True)
+
+    params = model.make_scorer_params()
+
+    agg_hlo = lower_window_agg()
+    with open(os.path.join(args.out_dir, "window_agg.hlo.txt"), "w") as f:
+        f.write(agg_hlo)
+    print(f"window_agg.hlo.txt: {len(agg_hlo)} chars")
+
+    scorer_hlo = lower_fraud_scorer(params)
+    with open(os.path.join(args.out_dir, "fraud_scorer.hlo.txt"), "w") as f:
+        f.write(scorer_hlo)
+    print(f"fraud_scorer.hlo.txt: {len(scorer_hlo)} chars")
+
+    meta = {
+        "window_agg": {
+            "slots": model.AGG_SLOTS,
+            "batch": model.AGG_BATCH,
+            "lanes": model.AGG_LANES,
+            "args": ["state[S,L] f32", "slots[B] i32", "values[B] f32", "signs[B] f32"],
+        },
+        "fraud_scorer": {
+            "batch": model.SCORER_BATCH,
+            "features": model.SCORER_FEATURES,
+            "hidden": model.SCORER_HIDDEN,
+            "feature_names": model.FEATURE_NAMES,
+            "args": ["features[B,F] f32"],
+        },
+    }
+    with open(os.path.join(args.out_dir, "meta.json"), "w") as f:
+        json.dump(meta, f, indent=2, sort_keys=True)
+
+    golden = golden_vectors(params)
+    with open(os.path.join(args.out_dir, "golden.json"), "w") as f:
+        json.dump(golden, f, indent=2, sort_keys=True)
+    print("meta.json + golden.json written")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,70 @@
+"""L1 Pallas kernel: fused fraud-scoring MLP.
+
+The paper's motivating pipeline feeds window aggregates into a model
+(§2.1). The scorer is a 2-layer MLP with the whole epilogue fused in one
+kernel (standardize → GEMM → bias+relu → GEMM → bias → sigmoid), the TPU
+analogue of fusing pointwise epilogues into a GPU GEMM: intermediate
+activations never leave VMEM.
+
+Batch is tiled over the grid; weight matrices are small enough (F×H,
+H×1) to be resident per program instance. Accumulation is f32 with
+``preferred_element_type`` pinned so lowering never silently picks a
+narrower accumulator.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Batch rows per program instance (multiple of the 8-row f32 tile).
+BLOCK_B = 32
+
+
+def _mlp_kernel(x_ref, mean_ref, std_ref, w1_ref, b1_ref, w2_ref, b2_ref, o_ref):
+    x = x_ref[...]  # [BB, F]
+    x = (x - mean_ref[...]) / std_ref[...]  # standardize in-kernel
+    h = jnp.dot(x, w1_ref[...], preferred_element_type=jnp.float32)
+    h = jnp.maximum(h + b1_ref[...], 0.0)
+    z = jnp.dot(h, w2_ref[...], preferred_element_type=jnp.float32)
+    z = z + b2_ref[...]
+    o_ref[...] = jax.nn.sigmoid(z)
+
+
+def fraud_mlp(x, params, *, block_b: int = BLOCK_B):
+    """Score a feature batch.
+
+    Args:
+      x: f32[B, F] raw feature rows.
+      params: dict with ``mean``/``std`` f32[F], ``w1`` f32[F, H],
+        ``b1`` f32[H], ``w2`` f32[H, 1], ``b2`` f32[1].
+      block_b: batch rows per program instance (B must be a multiple).
+
+    Returns:
+      f32[B, 1] fraud probabilities in (0, 1).
+    """
+    b, f = x.shape
+    if b % block_b:
+        raise ValueError(f"batch {b} not a multiple of block {block_b}")
+    h = params["w1"].shape[1]
+    if params["w1"].shape != (f, h) or params["w2"].shape != (h, 1):
+        raise ValueError("parameter shapes inconsistent with input")
+    grid = (b // block_b,)
+    full = lambda *shape: pl.BlockSpec(shape, lambda i: tuple(0 for _ in shape))
+    return pl.pallas_call(
+        functools.partial(_mlp_kernel),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_b, f), lambda i: (i, 0)),  # x block
+            full(f),  # mean
+            full(f),  # std
+            full(f, h),  # w1
+            full(h),  # b1
+            full(h, 1),  # w2
+            full(1),  # b2
+        ],
+        out_specs=pl.BlockSpec((block_b, 1), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, 1), jnp.float32),
+        interpret=True,  # CPU PJRT cannot run Mosaic custom-calls
+    )(x, params["mean"], params["std"], params["w1"], params["b1"], params["w2"], params["b2"])

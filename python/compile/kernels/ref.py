@@ -1,0 +1,25 @@
+"""Pure-jnp oracles for the Pallas kernels.
+
+These are the correctness ground truth: straightforward scatter/GEMM
+implementations with no tiling tricks. pytest (and hypothesis sweeps)
+assert the kernels match these to float tolerance.
+"""
+
+import jax.numpy as jnp
+
+
+def window_agg_update_ref(state, slots, deltas):
+    """Scatter-add reference for ``window_agg.window_agg_update``.
+
+    Out-of-range slots drop out (mode="drop"), matching the kernel's
+    one-hot formulation where no row matches.
+    """
+    return state.at[slots].add(deltas, mode="drop")
+
+
+def fraud_mlp_ref(x, params):
+    """Reference for ``mlp.fraud_mlp``."""
+    z = (x - params["mean"]) / params["std"]
+    h = jnp.maximum(z @ params["w1"] + params["b1"], 0.0)
+    y = h @ params["w2"] + params["b2"]
+    return 1.0 / (1.0 + jnp.exp(-y))

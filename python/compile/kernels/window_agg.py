@@ -1,0 +1,92 @@
+"""L1 Pallas kernel: batched sliding-window aggregation-state update.
+
+The numeric hot-spot of Railgun's back-end is applying a batch of
+arrive/expire deltas to per-group aggregation states (paper §3.3.2). On
+GPU this would be a scatter-add over threadblocks; on TPU scatters
+serialize on the VPU, so the kernel reformulates the update as a
+**one-hot × delta matmul** that runs on the MXU systolic array
+(DESIGN.md §5 Hardware-Adaptation):
+
+    new_state[S, L] = state[S, L] + onehot[S, B] @ deltas[B, L]
+
+where ``onehot[s, b] = (slots[b] == s)``. Slot blocks are tiled to VMEM
+via ``BlockSpec`` (block = BLOCK_S × L, a multiple of the (8, 128) f32
+tile); the B-sized delta batch is resident per program instance.
+
+Padding convention: a batch row with ``sign == 0`` contributes nothing
+(deltas are pre-multiplied by sign in the L2 wrapper), so fixed-shape AOT
+batches can be partially filled. ``interpret=True`` everywhere — the CPU
+PJRT plugin cannot execute Mosaic custom-calls.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Default lanes: [count, sum, sumsq] + padding to 8 for (8,128) tiling.
+LANES = 8
+# Slot block per program instance: 128 rows aligns the MXU contraction.
+BLOCK_S = 128
+
+
+def _window_agg_kernel(slots_ref, deltas_ref, state_ref, out_ref, *, block_s: int):
+    """One slot-block of the one-hot matmul accumulation."""
+    sb = pl.program_id(0)
+    slot_base = sb * block_s
+    slots = slots_ref[...]  # [B] int32
+    deltas = deltas_ref[...]  # [B, L] f32 (already sign-scaled)
+    batch = slots.shape[0]
+    rows = jax.lax.broadcasted_iota(jnp.int32, (block_s, batch), 0) + slot_base
+    onehot = (rows == slots[None, :]).astype(jnp.float32)
+    out_ref[...] = state_ref[...] + jnp.dot(
+        onehot, deltas, preferred_element_type=jnp.float32
+    )
+
+
+def window_agg_update(state, slots, deltas, *, block_s: int = BLOCK_S):
+    """Apply a delta batch to the aggregation-state matrix.
+
+    Args:
+      state:  f32[S, L] current per-slot states.
+      slots:  i32[B] target slot per batch entry (out-of-range = no-op).
+      deltas: f32[B, L] sign-scaled delta rows.
+      block_s: slot-block size (S must be a multiple).
+
+    Returns:
+      f32[S, L] updated states.
+    """
+    s, lanes = state.shape
+    if s % block_s:
+        raise ValueError(f"slots dim {s} not a multiple of block {block_s}")
+    batch = slots.shape[0]
+    if deltas.shape != (batch, lanes):
+        raise ValueError(f"deltas {deltas.shape} != ({batch}, {lanes})")
+    grid = (s // block_s,)
+    return pl.pallas_call(
+        functools.partial(_window_agg_kernel, block_s=block_s),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((batch,), lambda i: (0,)),  # slots: replicated
+            pl.BlockSpec((batch, lanes), lambda i: (0, 0)),  # deltas: replicated
+            pl.BlockSpec((block_s, lanes), lambda i: (i, 0)),  # state block
+        ],
+        out_specs=pl.BlockSpec((block_s, lanes), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((s, lanes), jnp.float32),
+        interpret=True,  # CPU PJRT cannot run Mosaic custom-calls
+    )(slots, deltas, state)
+
+
+def make_deltas(values, signs, lanes: int = LANES):
+    """Build sign-scaled delta rows [sign, sign·v, sign·v², 0, ...].
+
+    Lane 0 counts events, lane 1 accumulates the sum, lane 2 the sum of
+    squares (enough to serve count/sum/avg/stddev); remaining lanes pad
+    to the TPU tile width.
+    """
+    batch = values.shape[0]
+    cols = [signs, signs * values, signs * values * values]
+    zeros = jnp.zeros((batch,), jnp.float32)
+    cols.extend([zeros] * (lanes - len(cols)))
+    return jnp.stack(cols, axis=1)

@@ -1,0 +1,85 @@
+"""L2: the JAX compute graph lowered to the AOT artifacts.
+
+Two jitted entry points, both calling the L1 Pallas kernels:
+
+* ``window_agg_step`` — the batched aggregation-state transition used by
+  the rust back-end's vectorized-aggregator path. Raw per-event inputs
+  (slot, value, sign) are turned into sign-scaled delta rows and applied
+  to the state matrix in one MXU-shaped update. The state buffer is
+  donated at lowering time (in-place update, no copy).
+* ``fraud_scorer`` — the fraud-probability model over window-aggregate
+  feature rows (paper §2.1: "use streaming aggregations as inputs for
+  models and rules"). Weights are generated deterministically at AOT
+  time and baked into the artifact as constants: the rust hot path sends
+  features, gets probabilities, and never touches python.
+
+Shapes are fixed at AOT time (see ``aot.py``); the rust side pads
+partial batches (sign=0 rows / repeated feature rows are no-ops).
+"""
+
+import numpy as np
+
+import jax.numpy as jnp
+
+from compile.kernels.mlp import fraud_mlp
+from compile.kernels.window_agg import LANES, make_deltas, window_agg_update
+
+# ---- AOT shape contract (mirrored in artifacts/meta.json) -----------------
+AGG_SLOTS = 1024
+AGG_BATCH = 256
+AGG_LANES = LANES
+
+SCORER_BATCH = 64
+SCORER_FEATURES = 8
+SCORER_HIDDEN = 32
+
+#: Feature order the rust runtime must follow when building rows.
+FEATURE_NAMES = [
+    "amount",
+    "count_5m",
+    "sum_5m",
+    "avg_5m",
+    "count_1h",
+    "sum_1h",
+    "distinct_merchants_1d",
+    "is_cnp",
+]
+
+
+def window_agg_step(state, slots, values, signs):
+    """Batched state transition: returns the updated [S, L] state."""
+    deltas = make_deltas(values, signs, lanes=state.shape[1])
+    return (window_agg_update(state, slots, deltas),)
+
+
+def make_scorer_params(seed: int = 0x5C0E) -> dict:
+    """Deterministic scorer weights (the 'trained model' stand-in).
+
+    A reproduction note (DESIGN.md §1): the paper's actual fraud models
+    are proprietary; what matters architecturally is that a fixed model
+    is served from the rust hot path. Weights are seeded so artifacts are
+    reproducible build-to-build.
+    """
+    rng = np.random.default_rng(seed)
+    f, h = SCORER_FEATURES, SCORER_HIDDEN
+    scale1 = np.sqrt(2.0 / f)
+    scale2 = np.sqrt(2.0 / h)
+    return {
+        "mean": jnp.asarray(rng.normal(50.0, 10.0, size=(f,)), jnp.float32),
+        "std": jnp.asarray(rng.uniform(5.0, 50.0, size=(f,)), jnp.float32),
+        "w1": jnp.asarray(rng.normal(0.0, scale1, size=(f, h)), jnp.float32),
+        "b1": jnp.asarray(rng.normal(0.0, 0.1, size=(h,)), jnp.float32),
+        "w2": jnp.asarray(rng.normal(0.0, scale2, size=(h, 1)), jnp.float32),
+        "b2": jnp.asarray([0.0], jnp.float32),
+    }
+
+
+def make_fraud_scorer(params=None):
+    """Close over baked weights: ``scorer(features) -> (probs,)``."""
+    if params is None:
+        params = make_scorer_params()
+
+    def fraud_scorer(features):
+        return (fraud_mlp(features, params),)
+
+    return fraud_scorer

@@ -1,0 +1,5 @@
+"""pytest runs from python/ (see Makefile): make the package importable."""
+import os
+import sys
+
+sys.path.insert(0, os.path.dirname(os.path.dirname(os.path.abspath(__file__))))

@@ -1,0 +1,95 @@
+"""AOT path: artifacts build, HLO text is loadable-shaped, golden vectors
+reproduce through the jitted graphs."""
+
+import json
+import os
+import subprocess
+import sys
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from compile import aot, model
+
+
+@pytest.fixture(scope="module")
+def artifacts(tmp_path_factory):
+    out = tmp_path_factory.mktemp("artifacts")
+    env = dict(os.environ)
+    pkg_root = os.path.dirname(os.path.dirname(os.path.abspath(aot.__file__)))
+    env["PYTHONPATH"] = pkg_root
+    subprocess.run(
+        [sys.executable, "-m", "compile.aot", "--out-dir", str(out)],
+        check=True,
+        cwd=pkg_root,
+        env=env,
+    )
+    return out
+
+
+def test_artifacts_exist_and_are_hlo_text(artifacts):
+    for name in ["window_agg.hlo.txt", "fraud_scorer.hlo.txt"]:
+        text = (artifacts / name).read_text()
+        assert len(text) > 1000, name
+        assert "HloModule" in text, f"{name} must be HLO text"
+        # 64-bit-id proto issue does not apply to text, but sanity-check
+        # the entry computation exists
+        assert "ENTRY" in text, name
+        # regression: the default printer elides large constants as
+        # "{...}", which the rust-side text parser reads back as zeros —
+        # silently destroying the scorer's baked weights
+        assert "{...}" not in text, f"{name} has elided constants"
+
+
+def test_meta_matches_model_constants(artifacts):
+    meta = json.loads((artifacts / "meta.json").read_text())
+    assert meta["window_agg"]["slots"] == model.AGG_SLOTS
+    assert meta["window_agg"]["batch"] == model.AGG_BATCH
+    assert meta["window_agg"]["lanes"] == model.AGG_LANES
+    assert meta["fraud_scorer"]["features"] == model.SCORER_FEATURES
+    assert meta["fraud_scorer"]["feature_names"] == model.FEATURE_NAMES
+
+
+def test_golden_window_agg_reproduces(artifacts):
+    golden = json.loads((artifacts / "golden.json").read_text())
+    case = golden["window_agg"]
+    state = np.zeros((model.AGG_SLOTS, model.AGG_LANES), np.float32)
+    pre = case["state_preload"]
+    state[pre["slot"], : len(pre["lanes"])] = pre["lanes"]
+    slots = np.zeros((model.AGG_BATCH,), np.int32)
+    values = np.zeros((model.AGG_BATCH,), np.float32)
+    signs = np.zeros((model.AGG_BATCH,), np.float32)
+    n = len(case["slots"])
+    slots[:n] = case["slots"]
+    values[:n] = case["values"]
+    signs[:n] = case["signs"]
+    (new_state,) = jax.jit(model.window_agg_step)(
+        jnp.asarray(state), jnp.asarray(slots), jnp.asarray(values), jnp.asarray(signs)
+    )
+    new_state = np.asarray(new_state)
+    for s, row in case["expected_rows"].items():
+        np.testing.assert_allclose(new_state[int(s)], row, rtol=1e-6, atol=1e-6)
+
+
+def test_golden_scorer_reproduces(artifacts):
+    golden = json.loads((artifacts / "golden.json").read_text())
+    case = golden["fraud_scorer"]
+    feats = np.asarray(case["features"], np.float32)
+    batch = np.tile(feats[:1], (model.SCORER_BATCH, 1))
+    batch[: len(feats)] = feats
+    scorer = model.make_fraud_scorer()
+    (probs,) = jax.jit(scorer)(jnp.asarray(batch))
+    np.testing.assert_allclose(
+        np.asarray(probs)[: len(feats), 0], case["expected_probs"], rtol=1e-5, atol=1e-6
+    )
+
+
+def test_hlo_is_stable_across_lowerings():
+    """Same weights ⇒ identical artifact (reproducible builds)."""
+    params = model.make_scorer_params()
+    a = aot.lower_fraud_scorer(params)
+    b = aot.lower_fraud_scorer(params)
+    assert a == b

@@ -1,0 +1,89 @@
+"""L1 fraud-MLP kernel vs pure-jnp oracle."""
+
+import numpy as np
+import pytest
+
+import jax.numpy as jnp
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels.mlp import fraud_mlp
+from compile.kernels.ref import fraud_mlp_ref
+from compile.model import make_scorer_params, SCORER_FEATURES
+
+
+def rand_params(rng, f, h):
+    return {
+        "mean": jnp.asarray(rng.normal(0, 5, size=(f,)), jnp.float32),
+        "std": jnp.asarray(rng.uniform(0.5, 10, size=(f,)), jnp.float32),
+        "w1": jnp.asarray(rng.normal(0, 0.5, size=(f, h)), jnp.float32),
+        "b1": jnp.asarray(rng.normal(0, 0.1, size=(h,)), jnp.float32),
+        "w2": jnp.asarray(rng.normal(0, 0.5, size=(h, 1)), jnp.float32),
+        "b2": jnp.asarray(rng.normal(0, 0.1, size=(1,)), jnp.float32),
+    }
+
+
+def test_matches_reference_on_default_params():
+    rng = np.random.default_rng(1)
+    params = make_scorer_params()
+    x = jnp.asarray(rng.normal(50, 20, size=(64, SCORER_FEATURES)), jnp.float32)
+    got = fraud_mlp(x, params)
+    want = fraud_mlp_ref(x, params)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-5, atol=1e-6)
+
+
+def test_outputs_are_probabilities():
+    rng = np.random.default_rng(2)
+    params = make_scorer_params()
+    x = jnp.asarray(rng.normal(0, 100, size=(32, SCORER_FEATURES)), jnp.float32)
+    probs = np.asarray(fraud_mlp(x, params, block_b=32))
+    assert probs.shape == (32, 1)
+    # f32 sigmoid saturates to exactly 0/1 for extreme logits — the valid
+    # range is the closed interval
+    assert np.all(probs >= 0.0) and np.all(probs <= 1.0)
+    assert np.all(np.isfinite(probs))
+
+
+def test_batch_block_independence():
+    """Same rows, different block sizes ⇒ identical scores."""
+    rng = np.random.default_rng(3)
+    params = make_scorer_params()
+    x = jnp.asarray(rng.normal(50, 20, size=(64, SCORER_FEATURES)), jnp.float32)
+    a = np.asarray(fraud_mlp(x, params, block_b=8))
+    b = np.asarray(fraud_mlp(x, params, block_b=64))
+    np.testing.assert_allclose(a, b, rtol=1e-6)
+
+
+def test_shape_validation():
+    params = make_scorer_params()
+    x = jnp.zeros((33, SCORER_FEATURES), jnp.float32)  # not a block multiple
+    with pytest.raises(ValueError):
+        fraud_mlp(x, params, block_b=32)
+    bad = dict(params)
+    bad["w2"] = jnp.zeros((7, 1), jnp.float32)
+    with pytest.raises(ValueError):
+        fraud_mlp(jnp.zeros((32, SCORER_FEATURES), jnp.float32), bad, block_b=32)
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    batch_blocks=st.integers(1, 4),
+    block_b=st.sampled_from([8, 16, 32]),
+    features=st.integers(1, 16),
+    hidden=st.integers(1, 64),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_hypothesis_kernel_matches_ref(batch_blocks, block_b, features, hidden, seed):
+    rng = np.random.default_rng(seed)
+    params = rand_params(rng, features, hidden)
+    b = batch_blocks * block_b
+    x = jnp.asarray(rng.normal(0, 10, size=(b, features)), jnp.float32)
+    got = np.asarray(fraud_mlp(x, params, block_b=block_b))
+    want = np.asarray(fraud_mlp_ref(x, params))
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-6)
+
+
+def test_deterministic_params():
+    a = make_scorer_params()
+    b = make_scorer_params()
+    for k in a:
+        np.testing.assert_array_equal(np.asarray(a[k]), np.asarray(b[k]))

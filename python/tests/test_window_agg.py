@@ -1,0 +1,138 @@
+"""L1 window_agg kernel vs pure-jnp oracle — the core correctness signal."""
+
+import numpy as np
+import pytest
+
+import jax.numpy as jnp
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels.ref import window_agg_update_ref
+from compile.kernels.window_agg import LANES, make_deltas, window_agg_update
+
+
+def run_both(state, slots, deltas, block_s):
+    got = window_agg_update(
+        jnp.asarray(state), jnp.asarray(slots), jnp.asarray(deltas), block_s=block_s
+    )
+    want = window_agg_update_ref(
+        jnp.asarray(state), jnp.asarray(slots), jnp.asarray(deltas)
+    )
+    # The kernel's matmul and the reference's scatter-add sum duplicate
+    # slots in different orders; with f32 and cancelling signs the result
+    # differs by eps × accumulated magnitude. Scale atol accordingly.
+    mag = float(np.abs(np.asarray(deltas)).sum() + np.abs(np.asarray(state)).max()) + 1.0
+    np.testing.assert_allclose(
+        np.asarray(got), np.asarray(want), rtol=1e-5, atol=1e-6 * mag
+    )
+    return np.asarray(got)
+
+
+def test_basic_arrivals():
+    state = np.zeros((256, LANES), np.float32)
+    slots = np.array([3, 7, 3, 255], np.int32)
+    deltas = np.asarray(
+        make_deltas(
+            jnp.asarray([10.0, 2.0, 5.0, 1.0], jnp.float32),
+            jnp.asarray([1.0, 1.0, 1.0, 1.0], jnp.float32),
+        )
+    )
+    out = run_both(state, slots, deltas, block_s=128)
+    assert out[3, 0] == 2.0  # two events in slot 3
+    assert out[3, 1] == 15.0  # 10 + 5
+    assert out[3, 2] == 125.0  # 100 + 25
+    assert out[7, 0] == 1.0
+    assert out[255, 1] == 1.0
+    assert out[0].sum() == 0.0
+
+
+def test_expiry_cancels_arrival():
+    state = np.zeros((128, LANES), np.float32)
+    v = jnp.asarray([42.0, 42.0], jnp.float32)
+    s = jnp.asarray([1.0, -1.0], jnp.float32)
+    deltas = np.asarray(make_deltas(v, s))
+    out = run_both(state, np.array([9, 9], np.int32), deltas, block_s=128)
+    np.testing.assert_allclose(out, np.zeros_like(out), atol=1e-6)
+
+
+def test_sign_zero_rows_are_noops():
+    state = np.random.default_rng(0).normal(size=(128, LANES)).astype(np.float32)
+    v = jnp.asarray([5.0, 7.0], jnp.float32)
+    s = jnp.asarray([0.0, 0.0], jnp.float32)
+    deltas = np.asarray(make_deltas(v, s))
+    out = run_both(state, np.array([0, 1], np.int32), deltas, block_s=128)
+    np.testing.assert_allclose(out, state, atol=1e-6)
+
+
+def test_out_of_range_slot_drops():
+    state = np.zeros((128, LANES), np.float32)
+    deltas = np.asarray(
+        make_deltas(jnp.asarray([1.0], jnp.float32), jnp.asarray([1.0], jnp.float32))
+    )
+    out = run_both(state, np.array([999], np.int32), deltas, block_s=128)
+    assert out.sum() == 0.0
+
+
+def test_shape_validation():
+    state = jnp.zeros((100, LANES), jnp.float32)  # not a multiple of 128
+    slots = jnp.zeros((4,), jnp.int32)
+    deltas = jnp.zeros((4, LANES), jnp.float32)
+    with pytest.raises(ValueError):
+        window_agg_update(state, slots, deltas)
+    with pytest.raises(ValueError):
+        window_agg_update(
+            jnp.zeros((128, LANES), jnp.float32),
+            slots,
+            jnp.zeros((4, LANES + 1), jnp.float32),
+        )
+
+
+@settings(max_examples=30, deadline=None)
+@given(
+    n_slots_blocks=st.integers(1, 3),
+    batch=st.integers(1, 64),
+    block_s=st.sampled_from([8, 32, 128]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_hypothesis_kernel_matches_ref(n_slots_blocks, batch, block_s, seed):
+    """Sweep shapes, duplicate slots, mixed signs, preloaded state."""
+    rng = np.random.default_rng(seed)
+    s = n_slots_blocks * block_s
+    state = rng.normal(0.0, 10.0, size=(s, LANES)).astype(np.float32)
+    # slots include duplicates and occasional out-of-range entries
+    slots = rng.integers(0, s + 2, size=(batch,)).astype(np.int32)
+    values = rng.normal(0.0, 100.0, size=(batch,)).astype(np.float32)
+    signs = rng.choice([-1.0, 0.0, 1.0], size=(batch,)).astype(np.float32)
+    deltas = np.asarray(make_deltas(jnp.asarray(values), jnp.asarray(signs)))
+    run_both(state, slots, deltas, block_s=block_s)
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1))
+def test_hypothesis_sequential_updates_compose(seed):
+    """Applying two batches equals applying their concatenation."""
+    rng = np.random.default_rng(seed)
+    s, b = 128, 16
+    state = np.zeros((s, LANES), np.float32)
+    slots = rng.integers(0, s, size=(2 * b,)).astype(np.int32)
+    values = rng.normal(0.0, 10.0, size=(2 * b,)).astype(np.float32)
+    signs = np.ones((2 * b,), np.float32)
+    deltas = np.asarray(make_deltas(jnp.asarray(values), jnp.asarray(signs)))
+
+    step1 = window_agg_update(
+        jnp.asarray(state), jnp.asarray(slots[:b]), jnp.asarray(deltas[:b])
+    )
+    step2 = window_agg_update(step1, jnp.asarray(slots[b:]), jnp.asarray(deltas[b:]))
+    both = window_agg_update(
+        jnp.asarray(state), jnp.asarray(slots), jnp.asarray(deltas)
+    )
+    np.testing.assert_allclose(np.asarray(step2), np.asarray(both), rtol=1e-5, atol=1e-5)
+
+
+def test_make_deltas_layout():
+    v = jnp.asarray([3.0, 2.0], jnp.float32)
+    s = jnp.asarray([1.0, -1.0], jnp.float32)
+    d = np.asarray(make_deltas(v, s))
+    assert d.shape == (2, LANES)
+    np.testing.assert_allclose(d[0, :3], [1.0, 3.0, 9.0])
+    np.testing.assert_allclose(d[1, :3], [-1.0, -2.0, -4.0])
+    assert d[:, 3:].sum() == 0.0

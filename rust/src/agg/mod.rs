@@ -1,0 +1,124 @@
+//! Aggregation functions with **incremental add/evict** semantics.
+//!
+//! Real sliding windows (paper §2) re-evaluate on every event arrival, so
+//! aggregations must support both directions: `add` when an event enters
+//! the window (tail iterator) and `evict` when it leaves (head iterator).
+//! Invertible aggregates (count/sum/avg/variance) are O(1) both ways;
+//! min/max use a monotonic deque keyed by event sequence number (amortized
+//! O(1), exact); distinct-count keeps an exact value→multiplicity map.
+//!
+//! States serialize to compact bytes for the kvstore-backed state store
+//! (paper §3.3.2: aggregation states persisted in RocksDB).
+
+mod state;
+
+pub use state::AggState;
+
+use crate::error::{Error, Result};
+
+/// Supported aggregation functions.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum AggKind {
+    /// `COUNT(*)` — number of events in the window.
+    Count,
+    /// `SUM(field)`.
+    Sum,
+    /// `AVG(field)`.
+    Avg,
+    /// `MIN(field)` (exact, monotonic-deque backed).
+    Min,
+    /// `MAX(field)` (exact, monotonic-deque backed).
+    Max,
+    /// Population standard deviation of `field`.
+    StdDev,
+    /// Exact number of distinct values of `field` in the window.
+    CountDistinct,
+}
+
+impl AggKind {
+    /// Stable tag for serialization.
+    pub fn tag(self) -> u8 {
+        match self {
+            AggKind::Count => 0,
+            AggKind::Sum => 1,
+            AggKind::Avg => 2,
+            AggKind::Min => 3,
+            AggKind::Max => 4,
+            AggKind::StdDev => 5,
+            AggKind::CountDistinct => 6,
+        }
+    }
+
+    /// Inverse of [`AggKind::tag`].
+    pub fn from_tag(tag: u8) -> Result<Self> {
+        Ok(match tag {
+            0 => AggKind::Count,
+            1 => AggKind::Sum,
+            2 => AggKind::Avg,
+            3 => AggKind::Min,
+            4 => AggKind::Max,
+            5 => AggKind::StdDev,
+            6 => AggKind::CountDistinct,
+            t => return Err(Error::corrupt(format!("unknown agg tag {t}"))),
+        })
+    }
+
+    /// Parse from query-language name.
+    pub fn parse(name: &str) -> Result<Self> {
+        Ok(match name.to_ascii_lowercase().as_str() {
+            "count" => AggKind::Count,
+            "sum" => AggKind::Sum,
+            "avg" | "mean" => AggKind::Avg,
+            "min" => AggKind::Min,
+            "max" => AggKind::Max,
+            "stddev" | "std" => AggKind::StdDev,
+            "count_distinct" | "distinct" => AggKind::CountDistinct,
+            other => return Err(Error::invalid(format!("unknown aggregation '{other}'"))),
+        })
+    }
+
+    /// True if the function needs a field argument (`COUNT(*)` does not).
+    pub fn needs_field(self) -> bool {
+        !matches!(self, AggKind::Count)
+    }
+
+    /// Fresh empty state for this function.
+    pub fn new_state(self) -> AggState {
+        AggState::new(self)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tags_roundtrip() {
+        for k in [
+            AggKind::Count,
+            AggKind::Sum,
+            AggKind::Avg,
+            AggKind::Min,
+            AggKind::Max,
+            AggKind::StdDev,
+            AggKind::CountDistinct,
+        ] {
+            assert_eq!(AggKind::from_tag(k.tag()).unwrap(), k);
+        }
+        assert!(AggKind::from_tag(200).is_err());
+    }
+
+    #[test]
+    fn parse_names() {
+        assert_eq!(AggKind::parse("SUM").unwrap(), AggKind::Sum);
+        assert_eq!(AggKind::parse("count").unwrap(), AggKind::Count);
+        assert_eq!(AggKind::parse("mean").unwrap(), AggKind::Avg);
+        assert!(AggKind::parse("median").is_err());
+    }
+
+    #[test]
+    fn needs_field() {
+        assert!(!AggKind::Count.needs_field());
+        assert!(AggKind::Sum.needs_field());
+    }
+}

@@ -1,0 +1,478 @@
+//! Aggregation state: incremental updates + binary persistence.
+
+use crate::agg::AggKind;
+use crate::error::{Error, Result};
+use crate::util::varint;
+use std::collections::VecDeque;
+
+/// Numeric moments shared by count/sum/avg/stddev.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct Moments {
+    count: u64,
+    sum: f64,
+    sumsq: f64,
+}
+
+/// Monotonic deque entry for min/max.
+#[derive(Debug, Clone, PartialEq)]
+pub struct MonoEntry {
+    seq: u64,
+    value: f64,
+}
+
+/// Serializable, incrementally-updatable aggregation state.
+#[derive(Debug, Clone, PartialEq)]
+pub enum AggState {
+    /// count/sum/avg/stddev share the moments representation.
+    Moments(AggKind, Moments),
+    /// min (`is_min = true`) / max: monotonic deque over (seq, value).
+    Extremum {
+        /// True for MIN, false for MAX.
+        is_min: bool,
+        /// Candidate extrema in seq order; front is the current answer.
+        deque: VecDeque<MonoEntry>,
+    },
+    /// Exact distinct count: value-hash → multiplicity.
+    ///
+    /// Keyed by the 64-bit hash of the value's key-bytes; a hash collision
+    /// would conflate two values — acceptable at fraud-profile
+    /// cardinalities (~1e5 ⇒ collision odds ~1e-9).
+    Distinct(std::collections::BTreeMap<u64, u32>),
+}
+
+impl AggState {
+    /// Empty state for `kind`.
+    pub fn new(kind: AggKind) -> AggState {
+        match kind {
+            AggKind::Count | AggKind::Sum | AggKind::Avg | AggKind::StdDev => {
+                AggState::Moments(kind, Moments::default())
+            }
+            AggKind::Min => AggState::Extremum {
+                is_min: true,
+                deque: VecDeque::new(),
+            },
+            AggKind::Max => AggState::Extremum {
+                is_min: false,
+                deque: VecDeque::new(),
+            },
+            AggKind::CountDistinct => AggState::Distinct(Default::default()),
+        }
+    }
+
+    /// Event enters the window. `seq` is the reservoir sequence number
+    /// (drives min/max eviction); `value` is the aggregated field (`0.0`
+    /// for COUNT/COUNT_DISTINCT's unused slot; distinct uses `raw_hash`).
+    pub fn add(&mut self, seq: u64, value: f64, raw_hash: u64) {
+        match self {
+            AggState::Moments(_, m) => {
+                m.count += 1;
+                m.sum += value;
+                m.sumsq += value * value;
+            }
+            AggState::Extremum { is_min, deque } => {
+                let keep = |cand: f64, new: f64| {
+                    if *is_min {
+                        cand < new
+                    } else {
+                        cand > new
+                    }
+                };
+                while let Some(back) = deque.back() {
+                    if keep(back.value, value) {
+                        break;
+                    }
+                    deque.pop_back();
+                }
+                deque.push_back(MonoEntry { seq, value });
+            }
+            AggState::Distinct(map) => {
+                *map.entry(raw_hash).or_insert(0) += 1;
+            }
+        }
+    }
+
+    /// Event leaves the window (same arguments it was added with; events
+    /// expire in seq order).
+    pub fn evict(&mut self, seq: u64, value: f64, raw_hash: u64) {
+        match self {
+            AggState::Moments(_, m) => {
+                debug_assert!(m.count > 0, "evict from empty aggregation");
+                m.count = m.count.saturating_sub(1);
+                m.sum -= value;
+                m.sumsq -= value * value;
+                if m.count == 0 {
+                    // cancel accumulated float drift at the empty point
+                    m.sum = 0.0;
+                    m.sumsq = 0.0;
+                }
+            }
+            AggState::Extremum { deque, .. } => {
+                if let Some(front) = deque.front() {
+                    if front.seq == seq {
+                        deque.pop_front();
+                    }
+                }
+            }
+            AggState::Distinct(map) => {
+                if let Some(c) = map.get_mut(&raw_hash) {
+                    *c -= 1;
+                    if *c == 0 {
+                        map.remove(&raw_hash);
+                    }
+                }
+            }
+        }
+    }
+
+    /// Current aggregate value (`None` when the window is empty and the
+    /// function has no identity, e.g. MIN/AVG of nothing).
+    pub fn value(&self) -> Option<f64> {
+        match self {
+            AggState::Moments(kind, m) => match kind {
+                AggKind::Count => Some(m.count as f64),
+                AggKind::Sum => Some(m.sum),
+                AggKind::Avg => {
+                    if m.count == 0 {
+                        None
+                    } else {
+                        Some(m.sum / m.count as f64)
+                    }
+                }
+                AggKind::StdDev => {
+                    if m.count == 0 {
+                        None
+                    } else {
+                        let mean = m.sum / m.count as f64;
+                        let var = (m.sumsq / m.count as f64 - mean * mean).max(0.0);
+                        Some(var.sqrt())
+                    }
+                }
+                _ => unreachable!("non-moment kind in Moments"),
+            },
+            AggState::Extremum { deque, .. } => deque.front().map(|e| e.value),
+            AggState::Distinct(map) => Some(map.len() as f64),
+        }
+    }
+
+    /// Number of live entries the state tracks (observability).
+    pub fn footprint(&self) -> usize {
+        match self {
+            AggState::Moments(..) => 1,
+            AggState::Extremum { deque, .. } => deque.len(),
+            AggState::Distinct(map) => map.len(),
+        }
+    }
+
+    /// Serialize for the state store.
+    pub fn encode(&self, out: &mut Vec<u8>) {
+        match self {
+            AggState::Moments(kind, m) => {
+                out.push(kind.tag());
+                varint::write_u64(out, m.count);
+                out.extend_from_slice(&m.sum.to_bits().to_le_bytes());
+                out.extend_from_slice(&m.sumsq.to_bits().to_le_bytes());
+            }
+            AggState::Extremum { is_min, deque } => {
+                out.push(if *is_min {
+                    AggKind::Min.tag()
+                } else {
+                    AggKind::Max.tag()
+                });
+                varint::write_u64(out, deque.len() as u64);
+                for e in deque {
+                    varint::write_u64(out, e.seq);
+                    out.extend_from_slice(&e.value.to_bits().to_le_bytes());
+                }
+            }
+            AggState::Distinct(map) => {
+                out.push(AggKind::CountDistinct.tag());
+                varint::write_u64(out, map.len() as u64);
+                for (h, c) in map {
+                    varint::write_u64(out, *h);
+                    varint::write_u32(out, *c);
+                }
+            }
+        }
+    }
+
+    /// Deserialize a state previously written by [`AggState::encode`].
+    pub fn decode(buf: &[u8], pos: &mut usize) -> Result<AggState> {
+        let tag = *buf
+            .get(*pos)
+            .ok_or_else(|| Error::corrupt("agg state: empty"))?;
+        *pos += 1;
+        let kind = AggKind::from_tag(tag)?;
+        let read_f64 = |buf: &[u8], pos: &mut usize| -> Result<f64> {
+            let end = *pos + 8;
+            if end > buf.len() {
+                return Err(Error::corrupt("agg state: truncated f64"));
+            }
+            let v = f64::from_bits(u64::from_le_bytes(buf[*pos..end].try_into().unwrap()));
+            *pos = end;
+            Ok(v)
+        };
+        Ok(match kind {
+            AggKind::Count | AggKind::Sum | AggKind::Avg | AggKind::StdDev => {
+                let count = varint::read_u64(buf, pos)?;
+                let sum = read_f64(buf, pos)?;
+                let sumsq = read_f64(buf, pos)?;
+                AggState::Moments(kind, Moments { count, sum, sumsq })
+            }
+            AggKind::Min | AggKind::Max => {
+                let n = varint::read_u64(buf, pos)? as usize;
+                let mut deque = VecDeque::with_capacity(n);
+                for _ in 0..n {
+                    let seq = varint::read_u64(buf, pos)?;
+                    let value = read_f64(buf, pos)?;
+                    deque.push_back(MonoEntry { seq, value });
+                }
+                AggState::Extremum {
+                    is_min: kind == AggKind::Min,
+                    deque,
+                }
+            }
+            AggKind::CountDistinct => {
+                let n = varint::read_u64(buf, pos)? as usize;
+                let mut map = std::collections::BTreeMap::new();
+                for _ in 0..n {
+                    let h = varint::read_u64(buf, pos)?;
+                    let c = varint::read_u32(buf, pos)?;
+                    map.insert(h, c);
+                }
+                AggState::Distinct(map)
+            }
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::propcheck::check;
+    use crate::util::rng::Rng;
+
+    fn drive(kind: AggKind, ops: &[(bool, u64, f64)]) -> AggState {
+        // ops: (is_add, seq, value)
+        let mut st = AggState::new(kind);
+        for (add, seq, v) in ops {
+            if *add {
+                st.add(*seq, *v, (*v).to_bits());
+            } else {
+                st.evict(*seq, *v, (*v).to_bits());
+            }
+        }
+        st
+    }
+
+    #[test]
+    fn count_add_evict() {
+        let st = drive(
+            AggKind::Count,
+            &[(true, 0, 0.0), (true, 1, 0.0), (false, 0, 0.0)],
+        );
+        assert_eq!(st.value(), Some(1.0));
+    }
+
+    #[test]
+    fn sum_and_avg() {
+        let mut st = AggState::new(AggKind::Sum);
+        st.add(0, 10.0, 0);
+        st.add(1, 20.0, 0);
+        assert_eq!(st.value(), Some(30.0));
+        st.evict(0, 10.0, 0);
+        assert_eq!(st.value(), Some(20.0));
+
+        let mut st = AggState::new(AggKind::Avg);
+        assert_eq!(st.value(), None, "avg of empty is undefined");
+        st.add(0, 10.0, 0);
+        st.add(1, 20.0, 0);
+        assert_eq!(st.value(), Some(15.0));
+    }
+
+    #[test]
+    fn stddev_matches_direct() {
+        let vals = [2.0, 4.0, 4.0, 4.0, 5.0, 5.0, 7.0, 9.0];
+        let mut st = AggState::new(AggKind::StdDev);
+        for (i, v) in vals.iter().enumerate() {
+            st.add(i as u64, *v, 0);
+        }
+        assert!((st.value().unwrap() - 2.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn min_max_sliding_behaviour() {
+        // window of values with eviction in order: classic deque test
+        let mut mx = AggState::new(AggKind::Max);
+        let vals = [3.0, 1.0, 4.0, 1.0, 5.0, 9.0, 2.0, 6.0];
+        for (i, v) in vals.iter().enumerate() {
+            mx.add(i as u64, *v, 0);
+        }
+        assert_eq!(mx.value(), Some(9.0));
+        // evict up to and including seq 5 (value 9.0)
+        for (i, v) in vals.iter().enumerate().take(6) {
+            mx.evict(i as u64, *v, 0);
+        }
+        assert_eq!(mx.value(), Some(6.0), "max of remaining [2,6]");
+
+        let mut mn = AggState::new(AggKind::Min);
+        for (i, v) in vals.iter().enumerate() {
+            mn.add(i as u64, *v, 0);
+        }
+        assert_eq!(mn.value(), Some(1.0));
+        for (i, v) in vals.iter().enumerate().take(4) {
+            mn.evict(i as u64, *v, 0);
+        }
+        assert_eq!(mn.value(), Some(2.0), "min of [5,9,2,6]");
+    }
+
+    #[test]
+    fn distinct_counts_unique_values() {
+        let mut st = AggState::new(AggKind::CountDistinct);
+        for (i, h) in [10u64, 20, 10, 30, 20, 10].iter().enumerate() {
+            st.add(i as u64, 0.0, *h);
+        }
+        assert_eq!(st.value(), Some(3.0));
+        // evict one of the three 10s: still distinct 3
+        st.evict(0, 0.0, 10);
+        assert_eq!(st.value(), Some(3.0));
+        st.evict(2, 0.0, 10);
+        st.evict(5, 0.0, 10);
+        assert_eq!(st.value(), Some(2.0), "all 10s gone");
+    }
+
+    #[test]
+    fn empty_after_full_eviction() {
+        for kind in [
+            AggKind::Count,
+            AggKind::Sum,
+            AggKind::Avg,
+            AggKind::Min,
+            AggKind::Max,
+            AggKind::StdDev,
+            AggKind::CountDistinct,
+        ] {
+            let mut st = AggState::new(kind);
+            st.add(0, 5.0, 1);
+            st.evict(0, 5.0, 1);
+            match kind {
+                AggKind::Count | AggKind::CountDistinct => assert_eq!(st.value(), Some(0.0)),
+                AggKind::Sum => assert_eq!(st.value(), Some(0.0)),
+                _ => assert_eq!(st.value(), None, "{kind:?}"),
+            }
+            assert!(st.footprint() <= 1);
+        }
+    }
+
+    #[test]
+    fn encode_decode_roundtrip_all_kinds() {
+        let mut rng = Rng::new(77);
+        for kind in [
+            AggKind::Count,
+            AggKind::Sum,
+            AggKind::Avg,
+            AggKind::Min,
+            AggKind::Max,
+            AggKind::StdDev,
+            AggKind::CountDistinct,
+        ] {
+            let mut st = AggState::new(kind);
+            for i in 0..50u64 {
+                st.add(i, rng.next_f64() * 100.0, rng.next_below(10));
+            }
+            let mut buf = Vec::new();
+            st.encode(&mut buf);
+            let mut pos = 0;
+            let back = AggState::decode(&buf, &mut pos).unwrap();
+            assert_eq!(pos, buf.len());
+            assert_eq!(back, st, "{kind:?}");
+        }
+    }
+
+    #[test]
+    fn decode_garbage_errors() {
+        let mut pos = 0;
+        assert!(AggState::decode(&[], &mut pos).is_err());
+        let mut pos = 0;
+        assert!(AggState::decode(&[99], &mut pos).is_err());
+        let mut pos = 0;
+        assert!(AggState::decode(&[1, 5], &mut pos).is_err(), "truncated sum");
+    }
+
+    /// Property: add/evict over a sliding window ≡ recomputing the
+    /// aggregate from scratch over the live suffix.
+    #[test]
+    fn property_incremental_equals_recompute() {
+        check(
+            "agg incremental == recompute",
+            80,
+            |rng| {
+                let n = rng.index(60) + 2;
+                let w = rng.index(n) + 1;
+                let vals: Vec<u64> = (0..n).map(|_| rng.next_below(100)).collect();
+                (vals, w)
+            },
+            |(vals, w)| {
+                if *w == 0 || vals.is_empty() {
+                    return Ok(()); // degenerate shrink candidates
+                }
+                for kind in [
+                    AggKind::Count,
+                    AggKind::Sum,
+                    AggKind::Avg,
+                    AggKind::Min,
+                    AggKind::Max,
+                    AggKind::StdDev,
+                    AggKind::CountDistinct,
+                ] {
+                    let mut st = AggState::new(kind);
+                    for (i, v) in vals.iter().enumerate() {
+                        let vf = *v as f64;
+                        st.add(i as u64, vf, *v);
+                        if i >= *w {
+                            let old = vals[i - w] as f64;
+                            st.evict((i - w) as u64, old, vals[i - w]);
+                        }
+                        // recompute over live window vals[i-w+1 ..= i]
+                        let lo = i.saturating_sub(w - 1);
+                        let live: Vec<f64> = vals[lo..=i].iter().map(|v| *v as f64).collect();
+                        let expect = match kind {
+                            AggKind::Count => Some(live.len() as f64),
+                            AggKind::Sum => Some(live.iter().sum()),
+                            AggKind::Avg => {
+                                Some(live.iter().sum::<f64>() / live.len() as f64)
+                            }
+                            AggKind::Min => live.iter().copied().reduce(f64::min),
+                            AggKind::Max => live.iter().copied().reduce(f64::max),
+                            AggKind::StdDev => {
+                                let mean = live.iter().sum::<f64>() / live.len() as f64;
+                                let var = live.iter().map(|v| (v - mean) * (v - mean)).sum::<f64>()
+                                    / live.len() as f64;
+                                Some(var.sqrt())
+                            }
+                            AggKind::CountDistinct => {
+                                let mut set = std::collections::HashSet::new();
+                                for v in &vals[lo..=i] {
+                                    set.insert(*v);
+                                }
+                                Some(set.len() as f64)
+                            }
+                        };
+                        let got = st.value();
+                        let ok = match (got, expect) {
+                            (Some(a), Some(b)) => (a - b).abs() < 1e-6,
+                            (None, None) => true,
+                            _ => false,
+                        };
+                        if !ok {
+                            return Err(format!(
+                                "{kind:?} at i={i}: incremental={got:?} recompute={expect:?}"
+                            ));
+                        }
+                    }
+                }
+                Ok(())
+            },
+        );
+    }
+
+}

@@ -1,0 +1,15 @@
+//! Back-end layer (paper §3.3): processor units and task processors.
+//!
+//! A node runs a configured number of **processor units**, each a
+//! dedicated thread executing Algorithm 1: check operational tasks, poll
+//! the messaging layer, route records to **task processors**. Each task
+//! processor owns exactly one (topic, partition) — its event reservoir,
+//! aggregation plan and state store — and there is exactly one active
+//! task processor per (topic, partition) in the whole cluster, enforced
+//! by the consumer group's partition assignment.
+
+mod task_processor;
+mod unit;
+
+pub use task_processor::TaskProcessor;
+pub use unit::{Backend, OpTask};

@@ -1,0 +1,284 @@
+//! Processor units: the Algorithm-1 loop on a dedicated thread, plus the
+//! [`Backend`] that manages a node's units.
+
+use crate::config::EngineConfig;
+use crate::error::Result;
+use crate::frontend::Registry;
+use crate::mlog::{BrokerRef, Consumer, TopicPartition};
+use crate::backend::TaskProcessor;
+use std::collections::HashMap;
+use std::path::PathBuf;
+use std::sync::mpsc::{Receiver, Sender, TryRecvError};
+use std::time::Duration;
+
+/// Operational tasks delivered to a processor unit (Algorithm 1, line 2).
+pub enum OpTask {
+    /// The registered stream set changed: re-subscribe.
+    TopicsChanged,
+    /// Checkpoint all owned task processors, then ack.
+    Checkpoint(Sender<Result<()>>),
+    /// Graceful stop (leaves the consumer group ⇒ partitions migrate).
+    Shutdown,
+    /// Simulated crash: stop without leaving cleanly or checkpointing.
+    Crash,
+}
+
+/// Consumer group shared by every processor unit in the cluster.
+pub const BACKEND_GROUP: &str = "railgun-backend";
+
+/// A node's set of processor units.
+pub struct Backend {
+    units: Vec<UnitHandle>,
+}
+
+struct UnitHandle {
+    ops_tx: Sender<OpTask>,
+    join: Option<std::thread::JoinHandle<()>>,
+}
+
+impl Backend {
+    /// Spawn `cfg.processor_units` unit threads.
+    pub fn start(
+        broker: BrokerRef,
+        registry: Registry,
+        cfg: EngineConfig,
+        node_id: &str,
+    ) -> Result<Backend> {
+        let mut units = Vec::with_capacity(cfg.processor_units);
+        for unit_id in 0..cfg.processor_units {
+            let (ops_tx, ops_rx) = std::sync::mpsc::channel();
+            let broker = broker.clone();
+            let registry = registry.clone();
+            let cfg = cfg.clone();
+            let name = format!("{node_id}-unit{unit_id}");
+            let join = std::thread::Builder::new()
+                .name(name.clone())
+                .spawn(move || unit_loop(broker, registry, cfg, name, ops_rx))
+                .map_err(|e| crate::error::Error::internal(format!("spawn unit: {e}")))?;
+            units.push(UnitHandle {
+                ops_tx,
+                join: Some(join),
+            });
+        }
+        Ok(Backend { units })
+    }
+
+    /// Number of processor units.
+    pub fn unit_count(&self) -> usize {
+        self.units.len()
+    }
+
+    /// Tell every unit the topic set changed.
+    pub fn notify_topics_changed(&self) {
+        for u in &self.units {
+            let _ = u.ops_tx.send(OpTask::TopicsChanged);
+        }
+    }
+
+    /// Checkpoint every task processor on this node.
+    pub fn checkpoint(&self) -> Result<()> {
+        let mut acks = Vec::new();
+        for u in &self.units {
+            let (tx, rx) = std::sync::mpsc::channel();
+            if u.ops_tx.send(OpTask::Checkpoint(tx)).is_ok() {
+                acks.push(rx);
+            }
+        }
+        for rx in acks {
+            match rx.recv() {
+                Ok(r) => r?,
+                Err(_) => {} // unit already stopped
+            }
+        }
+        Ok(())
+    }
+
+    /// Stop all units. `graceful` leaves the group (partitions migrate
+    /// immediately); otherwise units vanish like a crash.
+    pub fn shutdown(mut self, graceful: bool) {
+        for u in &self.units {
+            let _ = u.ops_tx.send(if graceful {
+                OpTask::Shutdown
+            } else {
+                OpTask::Crash
+            });
+        }
+        for u in &mut self.units {
+            if let Some(j) = u.join.take() {
+                let _ = j.join();
+            }
+        }
+    }
+}
+
+/// The Algorithm-1 loop.
+fn unit_loop(
+    broker: BrokerRef,
+    registry: Registry,
+    cfg: EngineConfig,
+    unit_name: String,
+    ops_rx: Receiver<OpTask>,
+) {
+    let producer = broker.producer();
+    let mut consumer: Option<Consumer> = None;
+    let mut tasks: HashMap<TopicPartition, TaskProcessor> = HashMap::new();
+    let poll_timeout = Duration::from_millis(cfg.poll_timeout_ms);
+
+    'main: loop {
+        // 1. operational tasks
+        loop {
+            match ops_rx.try_recv() {
+                Ok(OpTask::TopicsChanged) => {
+                    // re-subscribe: drop membership, rejoin with new set
+                    consumer = None;
+                }
+                Ok(OpTask::Checkpoint(ack)) => {
+                    let mut result = Ok(());
+                    for tp in tasks.values_mut() {
+                        if let Err(e) = tp.checkpoint() {
+                            result = Err(e);
+                            break;
+                        }
+                    }
+                    let _ = ack.send(result);
+                }
+                Ok(OpTask::Shutdown) => {
+                    for tp in tasks.values_mut() {
+                        let _ = tp.checkpoint();
+                    }
+                    break 'main; // consumer Drop leaves the group
+                }
+                Ok(OpTask::Crash) => {
+                    // die without checkpointing; still leave the group so
+                    // the in-process failure detector reassigns at once
+                    // (models detection having fired)
+                    break 'main;
+                }
+                Err(TryRecvError::Empty) => break,
+                Err(TryRecvError::Disconnected) => break 'main,
+            }
+        }
+
+        // 2. (re)join the group when streams exist
+        if consumer.is_none() {
+            let topics: Vec<String> = {
+                let reg = registry.read().unwrap();
+                let mut t: Vec<String> =
+                    reg.values().flat_map(|def| def.topics()).collect();
+                t.sort();
+                t.dedup();
+                t
+            };
+            if topics.is_empty() {
+                std::thread::sleep(poll_timeout);
+                continue;
+            }
+            let refs: Vec<&str> = topics.iter().map(|s| s.as_str()).collect();
+            match broker.consumer(BACKEND_GROUP, &refs) {
+                Ok(c) => consumer = Some(c),
+                Err(e) => {
+                    log::warn!("{unit_name}: join failed: {e}");
+                    std::thread::sleep(poll_timeout);
+                    continue;
+                }
+            }
+        }
+        let c = consumer.as_mut().expect("just created");
+
+        // 3. poll
+        let polled = match c.poll(cfg.poll_batch, poll_timeout) {
+            Ok(p) => p,
+            Err(e) => {
+                log::error!("{unit_name}: poll failed: {e}");
+                continue;
+            }
+        };
+
+        // 4. rebalance ⇒ reconcile task processors (the migration hook)
+        if let Some(assignment) = polled.rebalanced {
+            if let Err(e) = reconcile(
+                &mut tasks,
+                &assignment,
+                &registry,
+                &cfg,
+                &producer,
+                c,
+                &unit_name,
+            ) {
+                log::error!("{unit_name}: reconcile failed: {e}");
+            }
+        }
+
+        // 5. route records to task processors
+        for (tp_key, record) in polled.records {
+            match tasks.get_mut(&tp_key) {
+                Some(tp) => {
+                    if let Err(e) = tp.process(&record) {
+                        log::error!("{unit_name}: {tp_key}: process failed: {e}");
+                    }
+                }
+                None => {
+                    // assignment race: record for a partition whose task
+                    // processor was not created (stream deregistered?)
+                    log::warn!("{unit_name}: dropping record for unowned {tp_key}");
+                }
+            }
+            // advisory commit for observability
+        }
+    }
+}
+
+/// Create/destroy task processors to match the new assignment, seeking
+/// each new partition to the processor's recovery offset.
+fn reconcile(
+    tasks: &mut HashMap<TopicPartition, TaskProcessor>,
+    assignment: &[TopicPartition],
+    registry: &Registry,
+    cfg: &EngineConfig,
+    producer: &crate::mlog::Producer,
+    consumer: &mut Consumer,
+    unit_name: &str,
+) -> Result<()> {
+    // drop task processors we no longer own (their state flushes on Drop
+    // via reservoir/kvstore Drop impls)
+    tasks.retain(|k, _| assignment.contains(k));
+    for tp_key in assignment {
+        if tasks.contains_key(tp_key) {
+            continue;
+        }
+        // topic is "<stream>.<entity>"
+        let (stream_name, entity) = match tp_key.topic.split_once('.') {
+            Some(x) => x,
+            None => continue, // reply topic or foreign topic
+        };
+        let def = {
+            let reg = registry.read().unwrap();
+            match reg.get(stream_name) {
+                Some(d) => d.clone(),
+                None => continue,
+            }
+        };
+        let dir: PathBuf = cfg
+            .data_dir
+            .join("tasks")
+            .join(&tp_key.topic)
+            .join(format!("p{}", tp_key.partition));
+        let tp = TaskProcessor::open(
+            dir,
+            def,
+            entity,
+            tp_key.partition,
+            cfg,
+            producer.clone(),
+            true,
+        )?;
+        log::info!(
+            "{unit_name}: took over {tp_key} (recovered {} events, resuming at offset {})",
+            tp.recovered_events,
+            tp.start_offset()
+        );
+        consumer.seek(tp_key.clone(), tp.start_offset());
+        tasks.insert(tp_key.clone(), tp);
+    }
+    Ok(())
+}

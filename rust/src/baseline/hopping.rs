@@ -1,0 +1,392 @@
+//! Flink-style hopping-window engine.
+
+use crate::agg::{AggKind, AggState};
+use crate::error::{Error, Result};
+use crate::event::{Event, SchemaRef, Value};
+use crate::kvstore::Store;
+use crate::util::hash::{self, FxHashMap};
+use crate::window::panes;
+use std::collections::BTreeMap;
+use std::sync::Arc;
+
+/// Hopping engine configuration (one metric, as in the paper's §4.2
+/// experiment: `sum(amount) group by card` over a 60-min window).
+#[derive(Debug, Clone)]
+pub struct HoppingConfig {
+    /// Window size (ms).
+    pub size_ms: i64,
+    /// Hop (ms).
+    pub hop_ms: i64,
+    /// Aggregation (additive only — hopping panes cannot evict; Min/Max
+    /// are fine because panes are add-only and die whole).
+    pub agg: AggKind,
+    /// Aggregated field.
+    pub field: Option<String>,
+    /// Group-by fields.
+    pub group_by: Vec<String>,
+    /// Persist pane states to the kvstore on every update (Flink+RocksDB
+    /// behaviour). Disable to measure the pure in-memory cost.
+    pub persist: bool,
+}
+
+/// A fired pane result.
+#[derive(Debug, Clone, PartialEq)]
+pub struct PaneResult {
+    /// Pane start (ms).
+    pub start: i64,
+    /// Fire time = start + size.
+    pub fire_time: i64,
+    /// Rendered group key.
+    pub group: String,
+    /// Aggregate over the pane.
+    pub value: Option<f64>,
+}
+
+struct PaneStates {
+    /// key-bytes → (display, state)
+    by_key: FxHashMap<Vec<u8>, (String, AggState)>,
+}
+
+/// The Type-2 baseline engine.
+pub struct HoppingEngine {
+    cfg: HoppingConfig,
+    schema: SchemaRef,
+    field_idx: Option<usize>,
+    group_idxs: Vec<usize>,
+    /// pane start → per-key states. BTreeMap so firing pops the oldest.
+    panes: BTreeMap<i64, PaneStates>,
+    store: Option<Arc<Store>>,
+    /// Highest event time seen (the watermark driving pane firing).
+    watermark: i64,
+    /// Most recent fired value per key (what a downstream rule "sees").
+    last_fired: FxHashMap<Vec<u8>, PaneResult>,
+    /// Counters: pane-state updates and store writes (the §2.2 cost
+    /// accounting).
+    pub pane_updates: u64,
+    /// kvstore writes performed.
+    pub store_writes: u64,
+    /// Panes fired.
+    pub panes_fired: u64,
+    scratch: Vec<u8>,
+}
+
+impl HoppingEngine {
+    /// Build the engine. `store` mirrors Flink's RocksDB state backend.
+    pub fn new(
+        cfg: HoppingConfig,
+        schema: SchemaRef,
+        store: Option<Arc<Store>>,
+    ) -> Result<HoppingEngine> {
+        if cfg.size_ms <= 0 || cfg.hop_ms <= 0 || cfg.hop_ms > cfg.size_ms {
+            return Err(Error::invalid("hopping: need 0 < hop ≤ size"));
+        }
+        if cfg.agg.needs_field() && cfg.field.is_none() {
+            return Err(Error::invalid("hopping: aggregation needs a field"));
+        }
+        let field_idx = match &cfg.field {
+            Some(f) => Some(
+                schema
+                    .index_of(f)
+                    .ok_or_else(|| Error::invalid(format!("unknown field '{f}'")))?,
+            ),
+            None => None,
+        };
+        let group_idxs = cfg
+            .group_by
+            .iter()
+            .map(|g| {
+                schema
+                    .index_of(g)
+                    .ok_or_else(|| Error::invalid(format!("unknown group-by '{g}'")))
+            })
+            .collect::<Result<Vec<_>>>()?;
+        Ok(HoppingEngine {
+            cfg,
+            schema,
+            field_idx,
+            group_idxs,
+            panes: BTreeMap::new(),
+            store,
+            watermark: i64::MIN,
+            last_fired: FxHashMap::default(),
+            pane_updates: 0,
+            store_writes: 0,
+            panes_fired: 0,
+            scratch: Vec::with_capacity(64),
+        })
+    }
+
+    /// Number of live panes (observability — `windowSize/hopSize` once
+    /// warm).
+    pub fn live_panes(&self) -> usize {
+        self.panes.len()
+    }
+
+    /// Process one event; returns panes fired by the watermark advance.
+    pub fn on_event(&mut self, event: &Event) -> Result<Vec<PaneResult>> {
+        let _ = &self.schema;
+        let ts = event.timestamp;
+        // 1. update every pane containing ts (the Θ(size/hop) fan-out)
+        let (val, raw_hash, include) = match self.field_idx {
+            None => (0.0, 0u64, true),
+            Some(fi) => match event.value(fi) {
+                Value::Null => (0.0, 0, false),
+                v => {
+                    if self.cfg.agg == AggKind::CountDistinct {
+                        let mut kb = Vec::with_capacity(16);
+                        v.key_bytes(&mut kb);
+                        (0.0, hash::hash64(&kb), true)
+                    } else {
+                        match v.as_f64() {
+                            Some(x) => (x, 0, true),
+                            None => (0.0, 0, false),
+                        }
+                    }
+                }
+            },
+        };
+        if include {
+            self.scratch.clear();
+            for &gi in &self.group_idxs {
+                event.value(gi).key_bytes(&mut self.scratch);
+                self.scratch.push(0x1f);
+            }
+            let display = self
+                .group_idxs
+                .iter()
+                .map(|&i| event.value(i).to_string())
+                .collect::<Vec<_>>()
+                .join(",");
+            for start in panes::pane_starts(ts, self.cfg.size_ms, self.cfg.hop_ms) {
+                let pane = self.panes.entry(start).or_insert_with(|| PaneStates {
+                    by_key: FxHashMap::default(),
+                });
+                let agg = self.cfg.agg;
+                let (_, state) = pane
+                    .by_key
+                    .entry(self.scratch.clone())
+                    .or_insert_with(|| (display.clone(), AggState::new(agg)));
+                state.add(0, val, raw_hash);
+                self.pane_updates += 1;
+                if self.cfg.persist {
+                    if let Some(store) = &self.store {
+                        // key: pane start ++ group key
+                        let mut k = Vec::with_capacity(self.scratch.len() + 9);
+                        k.extend_from_slice(&start.to_be_bytes());
+                        k.extend_from_slice(&self.scratch);
+                        let mut v = Vec::with_capacity(32);
+                        state.encode(&mut v);
+                        store.put(&k, &v)?;
+                        self.store_writes += 1;
+                    }
+                }
+            }
+        }
+        // 2. advance the watermark; fire panes whose end has passed
+        self.watermark = self.watermark.max(ts);
+        self.fire_up_to(self.watermark)
+    }
+
+    /// Fire every pane with `fire_time ≤ watermark` (Flink emits window
+    /// results when the window closes).
+    pub fn fire_up_to(&mut self, watermark: i64) -> Result<Vec<PaneResult>> {
+        let mut fired = Vec::new();
+        loop {
+            let start = match self.panes.keys().next() {
+                Some(&s) if panes::fire_time(s, self.cfg.size_ms) <= watermark => s,
+                _ => break,
+            };
+            let pane = self.panes.remove(&start).expect("checked above");
+            let fire_time = panes::fire_time(start, self.cfg.size_ms);
+            for (key, (display, state)) in pane.by_key {
+                let result = PaneResult {
+                    start,
+                    fire_time,
+                    group: display,
+                    value: state.value(),
+                };
+                self.last_fired.insert(key.clone(), result.clone());
+                if self.cfg.persist {
+                    if let Some(store) = &self.store {
+                        let mut k = Vec::with_capacity(key.len() + 9);
+                        k.extend_from_slice(&start.to_be_bytes());
+                        k.extend_from_slice(&key);
+                        store.delete(&k)?;
+                        self.store_writes += 1;
+                    }
+                }
+                self.panes_fired += 1;
+                fired.push(result);
+            }
+        }
+        Ok(fired)
+    }
+
+    /// The value a downstream rule sees for `group_values` right now: the
+    /// most recently fired pane's aggregate (hopping windows only publish
+    /// at hop boundaries — the accuracy gap of Figure 1).
+    pub fn visible_value(&mut self, group_values: &[Value]) -> Option<&PaneResult> {
+        self.scratch.clear();
+        let mut key = Vec::with_capacity(32);
+        for v in group_values {
+            v.key_bytes(&mut key);
+            key.push(0x1f);
+        }
+        self.last_fired.get(&key)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::event::{FieldType, Schema};
+    use crate::util::clock::ms;
+
+    fn schema() -> SchemaRef {
+        Schema::of(&[("card", FieldType::Str), ("amount", FieldType::F64)]).unwrap()
+    }
+
+    fn ev(ts: i64, card: &str, amount: f64) -> Event {
+        Event::new(ts, vec![Value::Str(card.into()), Value::F64(amount)])
+    }
+
+    fn engine(size: i64, hop: i64) -> HoppingEngine {
+        HoppingEngine::new(
+            HoppingConfig {
+                size_ms: size,
+                hop_ms: hop,
+                agg: AggKind::Sum,
+                field: Some("amount".into()),
+                group_by: vec!["card".into()],
+                persist: false,
+            },
+            schema(),
+            None,
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn pane_fanout_is_size_over_hop() {
+        let mut e = engine(5 * ms::MINUTE, ms::MINUTE);
+        e.on_event(&ev(10 * ms::MINUTE, "c1", 1.0)).unwrap();
+        assert_eq!(e.pane_updates, 5, "one update per overlapping pane");
+        assert_eq!(e.live_panes(), 5);
+    }
+
+    #[test]
+    fn tumbling_single_pane() {
+        let mut e = engine(ms::MINUTE, ms::MINUTE);
+        e.on_event(&ev(30_000, "c1", 1.0)).unwrap();
+        assert_eq!(e.pane_updates, 1);
+    }
+
+    #[test]
+    fn panes_fire_when_watermark_passes() {
+        let mut e = engine(2 * ms::MINUTE, ms::MINUTE);
+        e.on_event(&ev(0, "c1", 10.0)).unwrap();
+        e.on_event(&ev(30_000, "c1", 5.0)).unwrap();
+        // pane [-1min, 1min) fires when watermark ≥ 1min
+        let fired = e.on_event(&ev(ms::MINUTE + 1, "c1", 1.0)).unwrap();
+        assert_eq!(fired.len(), 1);
+        assert_eq!(fired[0].start, -ms::MINUTE);
+        assert_eq!(fired[0].value, Some(15.0), "both early events in pane");
+        // rule now "sees" 15 for c1
+        let seen = e.visible_value(&[Value::Str("c1".into())]).unwrap();
+        assert_eq!(seen.value, Some(15.0));
+    }
+
+    #[test]
+    fn fired_values_match_pane_contents_per_key() {
+        let mut e = engine(2 * ms::MINUTE, ms::MINUTE);
+        e.on_event(&ev(0, "a", 1.0)).unwrap();
+        e.on_event(&ev(1, "b", 2.0)).unwrap();
+        let fired = e.fire_up_to(10 * ms::MINUTE).unwrap();
+        // two panes contain the events ([-1m,1m) and [0,2m)) × 2 keys
+        assert_eq!(fired.len(), 4);
+        let a_total: f64 = fired
+            .iter()
+            .filter(|r| r.group == "a")
+            .map(|r| r.value.unwrap())
+            .sum();
+        assert_eq!(a_total, 2.0, "key a appears in 2 panes with value 1.0");
+    }
+
+    #[test]
+    fn figure1_hopping_never_sees_five() {
+        // the paper's Figure 1: 5 events in a true 5-min span, 1-min hop
+        let m = ms::MINUTE;
+        let mut e = HoppingEngine::new(
+            HoppingConfig {
+                size_ms: 5 * m,
+                hop_ms: m,
+                agg: AggKind::Count,
+                field: None,
+                group_by: vec!["card".into()],
+                persist: false,
+            },
+            schema(),
+            None,
+        )
+        .unwrap();
+        let times = [30_000, m + 30_000, 2 * m + 30_000, 3 * m + 30_000, 5 * m + 15_000];
+        let mut fired_all = Vec::new();
+        for t in times {
+            fired_all.extend(e.on_event(&ev(t, "c1", 1.0)).unwrap());
+        }
+        fired_all.extend(e.fire_up_to(i64::MAX).unwrap());
+        let max_count = fired_all
+            .iter()
+            .filter_map(|r| r.value)
+            .fold(0.0f64, f64::max);
+        assert!(
+            max_count < 5.0,
+            "no pane captures all 5 events (max={max_count})"
+        );
+    }
+
+    #[test]
+    fn persistence_writes_to_store() {
+        let tmp = crate::util::tmp::TempDir::new("hopping_store");
+        let store = Arc::new(
+            Store::open(tmp.path(), crate::kvstore::StoreOptions::default()).unwrap(),
+        );
+        let mut e = HoppingEngine::new(
+            HoppingConfig {
+                size_ms: 5 * ms::MINUTE,
+                hop_ms: ms::MINUTE,
+                agg: AggKind::Sum,
+                field: Some("amount".into()),
+                group_by: vec!["card".into()],
+                persist: true,
+            },
+            schema(),
+            Some(store),
+        )
+        .unwrap();
+        e.on_event(&ev(0, "c1", 5.0)).unwrap();
+        assert_eq!(e.store_writes, 5, "one store write per pane update");
+    }
+
+    #[test]
+    fn config_validation() {
+        let bad = |size, hop| {
+            HoppingEngine::new(
+                HoppingConfig {
+                    size_ms: size,
+                    hop_ms: hop,
+                    agg: AggKind::Count,
+                    field: None,
+                    group_by: vec![],
+                    persist: false,
+                },
+                schema(),
+                None,
+            )
+            .is_err()
+        };
+        assert!(bad(0, 1));
+        assert!(bad(1000, 0));
+        assert!(bad(1000, 2000));
+    }
+}

@@ -1,0 +1,19 @@
+//! Baseline engines (the paper's comparison targets, §2.2/§4.2).
+//!
+//! * [`HoppingEngine`] — the Type-2 (Flink-style) hopping-window
+//!   implementation: a fixed set of `windowSize/hopSize` overlapping pane
+//!   states per key, updated on arrival and discarded at fire time, with
+//!   pane states write-through persisted to the kvstore (Flink keeps them
+//!   in RocksDB). Events are discarded once applied — no reservoir. Its
+//!   per-event cost is `Θ(size/hop)` state updates, which is exactly the
+//!   blow-up Figure 5 measures as the hop shrinks.
+//! * [`ScanSlidingEngine`] — the Flink-blog "custom window" pattern the
+//!   paper cites ([13]): store every event per key, recompute the
+//!   aggregate from scratch per arrival by scanning the stored window —
+//!   accurate but quadratic.
+
+mod hopping;
+mod scan;
+
+pub use hopping::{HoppingConfig, HoppingEngine, PaneResult};
+pub use scan::ScanSlidingEngine;

@@ -1,0 +1,427 @@
+//! Engine configuration and stream definitions.
+//!
+//! [`EngineConfig`] is the node-level tuning surface (loaded from JSON by
+//! the CLI); [`StreamDef`] is the client-facing registration object: a
+//! schema, the *routing entities* (the paper's §3.2 per-entity topics)
+//! and the metric set.
+
+use crate::error::{Error, Result};
+use crate::event::{FieldType, Schema, SchemaRef};
+use crate::plan::MetricSpec;
+use crate::reservoir::Compression;
+use crate::util::json::Json;
+use std::path::PathBuf;
+
+/// Node-level engine configuration.
+#[derive(Debug, Clone)]
+pub struct EngineConfig {
+    /// Root data directory (mlog, reservoirs, state stores live below).
+    pub data_dir: PathBuf,
+    /// Processor units (dedicated threads) on this node (paper §3.3).
+    pub processor_units: usize,
+    /// Partitions per entity topic (cluster concurrency ceiling).
+    pub partitions_per_topic: u32,
+    /// Events per reservoir chunk.
+    pub chunk_events: usize,
+    /// Reservoir chunk-cache capacity (chunks).
+    pub cache_chunks: usize,
+    /// Reservoir compression level (None ⇒ uncompressed).
+    pub compression_level: Option<i32>,
+    /// Eager adjacent-chunk prefetch.
+    pub prefetch: bool,
+    /// State-store in-memory cache entries per task processor.
+    pub state_cache_entries: usize,
+    /// Max records fetched per poll.
+    pub poll_batch: usize,
+    /// Poll timeout in milliseconds.
+    pub poll_timeout_ms: u64,
+    /// Commit + checkpoint cadence, in events per task processor.
+    pub checkpoint_every: u64,
+}
+
+impl EngineConfig {
+    /// Sensible production-ish defaults rooted at `data_dir`.
+    pub fn new(data_dir: PathBuf) -> EngineConfig {
+        EngineConfig {
+            data_dir,
+            processor_units: 2,
+            partitions_per_topic: 4,
+            chunk_events: 512,
+            cache_chunks: 220,
+            compression_level: Some(1),
+            prefetch: true,
+            state_cache_entries: 100_000,
+            poll_batch: 256,
+            poll_timeout_ms: 10,
+            checkpoint_every: 10_000,
+        }
+    }
+
+    /// Small, fast configuration for tests.
+    pub fn for_testing(data_dir: PathBuf) -> EngineConfig {
+        EngineConfig {
+            processor_units: 1,
+            partitions_per_topic: 2,
+            chunk_events: 32,
+            cache_chunks: 16,
+            checkpoint_every: 100,
+            poll_timeout_ms: 5,
+            ..EngineConfig::new(data_dir)
+        }
+    }
+
+    /// Reservoir compression setting.
+    pub fn compression(&self) -> Compression {
+        match self.compression_level {
+            Some(level) => Compression::Zstd(level),
+            None => Compression::None,
+        }
+    }
+
+    /// Parse from a JSON document; absent keys keep defaults.
+    pub fn from_json(json: &Json) -> Result<EngineConfig> {
+        let obj = json
+            .as_obj()
+            .ok_or_else(|| Error::invalid("config must be a JSON object"))?;
+        let dir = obj
+            .get("data_dir")
+            .and_then(|j| j.as_str())
+            .ok_or_else(|| Error::invalid("config: missing 'data_dir'"))?;
+        let mut cfg = EngineConfig::new(PathBuf::from(dir));
+        let get_usize = |key: &str, default: usize| -> Result<usize> {
+            match obj.get(key) {
+                None => Ok(default),
+                Some(j) => j
+                    .as_i64()
+                    .filter(|v| *v > 0)
+                    .map(|v| v as usize)
+                    .ok_or_else(|| Error::invalid(format!("config: '{key}' must be a positive integer"))),
+            }
+        };
+        cfg.processor_units = get_usize("processor_units", cfg.processor_units)?;
+        cfg.partitions_per_topic = get_usize("partitions_per_topic", cfg.partitions_per_topic as usize)? as u32;
+        cfg.chunk_events = get_usize("chunk_events", cfg.chunk_events)?;
+        cfg.cache_chunks = get_usize("cache_chunks", cfg.cache_chunks)?;
+        cfg.state_cache_entries = get_usize("state_cache_entries", cfg.state_cache_entries)?;
+        cfg.poll_batch = get_usize("poll_batch", cfg.poll_batch)?;
+        cfg.poll_timeout_ms = get_usize("poll_timeout_ms", cfg.poll_timeout_ms as usize)? as u64;
+        cfg.checkpoint_every = get_usize("checkpoint_every", cfg.checkpoint_every as usize)? as u64;
+        if let Some(j) = obj.get("compression_level") {
+            cfg.compression_level = match j {
+                Json::Null => None,
+                _ => Some(j.as_i64().ok_or_else(|| {
+                    Error::invalid("config: 'compression_level' must be int or null")
+                })? as i32),
+            };
+        }
+        if let Some(j) = obj.get("prefetch") {
+            cfg.prefetch = j
+                .as_bool()
+                .ok_or_else(|| Error::invalid("config: 'prefetch' must be bool"))?;
+        }
+        Ok(cfg)
+    }
+
+    /// Load from a JSON file.
+    pub fn from_file(path: &std::path::Path) -> Result<EngineConfig> {
+        let text = std::fs::read_to_string(path)?;
+        Self::from_json(&Json::parse(&text)?)
+    }
+}
+
+/// A stream registration: schema + routing entities + metrics.
+#[derive(Debug, Clone)]
+pub struct StreamDef {
+    /// Stream name (topic prefix).
+    pub name: String,
+    /// Event schema.
+    pub schema: SchemaRef,
+    /// Routing entities (paper §3.2): one partitioned topic per entity;
+    /// each must be a `Str` field of the schema. Events are replicated to
+    /// every entity topic, hashed by that entity's value.
+    pub entities: Vec<String>,
+    /// Metrics computed over this stream.
+    pub metrics: Vec<MetricSpec>,
+}
+
+impl StreamDef {
+    /// Topic name for an entity.
+    pub fn topic_for(&self, entity: &str) -> String {
+        format!("{}.{}", self.name, entity)
+    }
+
+    /// All topics of this stream.
+    pub fn topics(&self) -> Vec<String> {
+        self.entities.iter().map(|e| self.topic_for(e)).collect()
+    }
+
+    /// The routing entity that serves a metric: the first registered
+    /// entity contained in the metric's group-by set. Accuracy only needs
+    /// events hashed by a *subset* of the group-by keys (paper §3.2), so
+    /// e.g. `group by (card, merchant)` can ride the `card` topic.
+    pub fn entity_for_metric(&self, m: &MetricSpec) -> Option<&str> {
+        self.entities
+            .iter()
+            .find(|e| m.group_by.iter().any(|g| g == *e))
+            .map(|s| s.as_str())
+    }
+
+    /// Metrics assigned to an entity's topic.
+    pub fn metrics_for_entity(&self, entity: &str) -> Vec<MetricSpec> {
+        self.metrics
+            .iter()
+            .filter(|m| self.entity_for_metric(m) == Some(entity))
+            .cloned()
+            .collect()
+    }
+
+    /// Validate coherence of the definition.
+    pub fn validate(&self) -> Result<()> {
+        if self.name.is_empty() || self.name.contains('/') || self.name.contains('.') {
+            return Err(Error::invalid(format!("bad stream name '{}'", self.name)));
+        }
+        if self.entities.is_empty() {
+            return Err(Error::invalid("stream needs at least one routing entity"));
+        }
+        for e in &self.entities {
+            match self.schema.index_of(e) {
+                Some(i) if self.schema.fields()[i].ftype == FieldType::Str => {}
+                Some(_) => {
+                    return Err(Error::invalid(format!(
+                        "entity '{e}' must be a string field"
+                    )))
+                }
+                None => return Err(Error::invalid(format!("entity '{e}' not in schema"))),
+            }
+        }
+        if self.metrics.is_empty() {
+            return Err(Error::invalid("stream needs at least one metric"));
+        }
+        for m in &self.metrics {
+            if self.entity_for_metric(m).is_none() {
+                return Err(Error::invalid(format!(
+                    "metric '{}' groups by {:?}, which contains no routing entity {:?}",
+                    m.name, m.group_by, self.entities
+                )));
+            }
+        }
+        Ok(())
+    }
+
+    /// Parse a stream definition from JSON:
+    ///
+    /// ```json
+    /// {"name": "payments",
+    ///  "schema": [{"name": "card", "type": "str"}, ...],
+    ///  "entities": ["card"],
+    ///  "metrics": [{"name": "sum5m", "agg": "sum", "field": "amount",
+    ///               "window_ms": 300000, "group_by": ["card"]}]}
+    /// ```
+    pub fn from_json(json: &Json) -> Result<StreamDef> {
+        use crate::agg::AggKind;
+        use crate::window::WindowSpec;
+        let obj = json
+            .as_obj()
+            .ok_or_else(|| Error::invalid("stream def must be an object"))?;
+        let name = obj
+            .get("name")
+            .and_then(|j| j.as_str())
+            .ok_or_else(|| Error::invalid("stream: missing 'name'"))?
+            .to_string();
+        let schema_arr = obj
+            .get("schema")
+            .and_then(|j| j.as_arr())
+            .ok_or_else(|| Error::invalid("stream: missing 'schema' array"))?;
+        let mut fields = Vec::new();
+        for f in schema_arr {
+            let fname = f
+                .get("name")
+                .and_then(|j| j.as_str())
+                .ok_or_else(|| Error::invalid("schema field: missing 'name'"))?;
+            let ftype = match f.get("type").and_then(|j| j.as_str()) {
+                Some("str") => FieldType::Str,
+                Some("i64") => FieldType::I64,
+                Some("f64") => FieldType::F64,
+                Some("bool") => FieldType::Bool,
+                other => {
+                    return Err(Error::invalid(format!(
+                        "schema field '{fname}': bad type {other:?}"
+                    )))
+                }
+            };
+            fields.push((fname, ftype));
+        }
+        let pairs: Vec<(&str, FieldType)> = fields.clone();
+        let schema = Schema::of(&pairs)?;
+        let entities = obj
+            .get("entities")
+            .and_then(|j| j.as_arr())
+            .ok_or_else(|| Error::invalid("stream: missing 'entities'"))?
+            .iter()
+            .map(|j| {
+                j.as_str()
+                    .map(|s| s.to_string())
+                    .ok_or_else(|| Error::invalid("entities must be strings"))
+            })
+            .collect::<Result<Vec<_>>>()?;
+        let metrics_arr = obj
+            .get("metrics")
+            .and_then(|j| j.as_arr())
+            .ok_or_else(|| Error::invalid("stream: missing 'metrics'"))?;
+        let mut metrics = Vec::new();
+        for m in metrics_arr {
+            let mname = m
+                .get("name")
+                .and_then(|j| j.as_str())
+                .ok_or_else(|| Error::invalid("metric: missing 'name'"))?;
+            let agg = AggKind::parse(
+                m.get("agg")
+                    .and_then(|j| j.as_str())
+                    .ok_or_else(|| Error::invalid("metric: missing 'agg'"))?,
+            )?;
+            let field = m.get("field").and_then(|j| j.as_str());
+            let window_ms = m
+                .get("window_ms")
+                .and_then(|j| j.as_i64())
+                .ok_or_else(|| Error::invalid("metric: missing 'window_ms'"))?;
+            let delay_ms = m.get("delay_ms").and_then(|j| j.as_i64()).unwrap_or(0);
+            let group_by: Vec<&str> = m
+                .get("group_by")
+                .and_then(|j| j.as_arr())
+                .map(|arr| arr.iter().filter_map(|j| j.as_str()).collect())
+                .unwrap_or_default();
+            let window = WindowSpec {
+                delay_ms,
+                ..WindowSpec::sliding(window_ms)
+            };
+            metrics.push(MetricSpec::new(mname, agg, field, window, &group_by));
+        }
+        let def = StreamDef {
+            name,
+            schema,
+            entities,
+            metrics,
+        };
+        def.validate()?;
+        Ok(def)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::agg::AggKind;
+    use crate::window::WindowSpec;
+    use crate::workload::payments_schema;
+
+    fn def() -> StreamDef {
+        StreamDef {
+            name: "payments".into(),
+            schema: payments_schema(),
+            entities: vec!["card".into(), "merchant".into()],
+            metrics: vec![
+                MetricSpec::new(
+                    "sum_by_card",
+                    AggKind::Sum,
+                    Some("amount"),
+                    WindowSpec::sliding(300_000),
+                    &["card"],
+                ),
+                MetricSpec::new(
+                    "avg_by_merchant",
+                    AggKind::Avg,
+                    Some("amount"),
+                    WindowSpec::sliding(300_000),
+                    &["merchant"],
+                ),
+                MetricSpec::new(
+                    "count_by_card_merchant",
+                    AggKind::Count,
+                    None,
+                    WindowSpec::sliding(300_000),
+                    &["card", "merchant"],
+                ),
+            ],
+        }
+    }
+
+    #[test]
+    fn topics_and_metric_assignment() {
+        let d = def();
+        d.validate().unwrap();
+        assert_eq!(d.topics(), vec!["payments.card", "payments.merchant"]);
+        // card-and-merchant metric rides the card topic (subset rule §3.2)
+        let card_metrics = d.metrics_for_entity("card");
+        let names: Vec<&str> = card_metrics.iter().map(|m| m.name.as_str()).collect();
+        assert_eq!(names, vec!["sum_by_card", "count_by_card_merchant"]);
+        let merchant_metrics = d.metrics_for_entity("merchant");
+        assert_eq!(merchant_metrics.len(), 1);
+    }
+
+    #[test]
+    fn validation_catches_mistakes() {
+        let mut d = def();
+        d.entities = vec!["amount".into()];
+        assert!(d.validate().is_err(), "non-str entity");
+        let mut d = def();
+        d.entities = vec!["nope".into()];
+        assert!(d.validate().is_err(), "unknown entity");
+        let mut d = def();
+        d.metrics[0].group_by = vec!["amount".into()];
+        assert!(d.validate().is_err(), "metric without routable entity");
+        let mut d = def();
+        d.name = "pay.ments".into();
+        assert!(d.validate().is_err(), "dot in stream name");
+        let mut d = def();
+        d.metrics.clear();
+        assert!(d.validate().is_err(), "no metrics");
+    }
+
+    #[test]
+    fn stream_def_from_json() {
+        let text = r#"{
+            "name": "payments",
+            "schema": [
+                {"name": "card", "type": "str"},
+                {"name": "amount", "type": "f64"}
+            ],
+            "entities": ["card"],
+            "metrics": [
+                {"name": "sum5m", "agg": "sum", "field": "amount",
+                 "window_ms": 300000, "group_by": ["card"]},
+                {"name": "cnt5m", "agg": "count",
+                 "window_ms": 300000, "group_by": ["card"]}
+            ]
+        }"#;
+        let d = StreamDef::from_json(&Json::parse(text).unwrap()).unwrap();
+        assert_eq!(d.name, "payments");
+        assert_eq!(d.metrics.len(), 2);
+        assert_eq!(d.metrics[0].agg, AggKind::Sum);
+        assert_eq!(d.schema.len(), 2);
+    }
+
+    #[test]
+    fn engine_config_defaults_and_json() {
+        let cfg = EngineConfig::from_json(
+            &Json::parse(r#"{"data_dir": "/tmp/x", "processor_units": 4, "prefetch": false}"#)
+                .unwrap(),
+        )
+        .unwrap();
+        assert_eq!(cfg.processor_units, 4);
+        assert!(!cfg.prefetch);
+        assert_eq!(cfg.partitions_per_topic, 4, "default kept");
+        assert!(EngineConfig::from_json(&Json::parse("{}").unwrap()).is_err());
+        assert!(EngineConfig::from_json(
+            &Json::parse(r#"{"data_dir": "/tmp/x", "poll_batch": -1}"#).unwrap()
+        )
+        .is_err());
+    }
+
+    #[test]
+    fn compression_mapping() {
+        let mut cfg = EngineConfig::new("/tmp/x".into());
+        assert!(matches!(cfg.compression(), Compression::Zstd(1)));
+        cfg.compression_level = None;
+        assert!(matches!(cfg.compression(), Compression::None));
+    }
+}

@@ -1,0 +1,184 @@
+//! Node and cluster coordination (paper §3, Figure 2).
+//!
+//! A [`Node`] bundles the three layers of a Railgun process: the
+//! messaging layer handle (broker), the front-end (routing + replies) and
+//! the back-end (processor units). All nodes of a [`Cluster`] share one
+//! broker — the paper's §3.3 equivalence ("two processor units on the
+//! same node are equivalent to two nodes with one unit each") means
+//! multi-node behaviour, including fail-over, is fully exercised by
+//! multiple Node instances over a shared messaging substrate.
+
+use crate::backend::Backend;
+use crate::config::{EngineConfig, StreamDef};
+use crate::error::Result;
+use crate::frontend::{FrontEnd, Registry, ReplyCollector};
+use crate::mlog::BrokerRef;
+use crate::util::hash::FxHashMap;
+use std::sync::{Arc, RwLock};
+
+/// One Railgun node: front-end + back-end over a shared broker.
+pub struct Node {
+    name: String,
+    config: EngineConfig,
+    broker: BrokerRef,
+    registry: Registry,
+    frontend: Arc<FrontEnd>,
+    backend: Option<Backend>,
+}
+
+impl Node {
+    /// Start a node with `cfg.processor_units` back-end threads.
+    pub fn start(name: &str, cfg: EngineConfig, broker: BrokerRef) -> Result<Node> {
+        std::fs::create_dir_all(&cfg.data_dir)?;
+        let registry: Registry = Arc::new(RwLock::new(FxHashMap::default()));
+        let frontend = Arc::new(FrontEnd::new(
+            broker.clone(),
+            registry.clone(),
+            cfg.partitions_per_topic,
+        ));
+        let backend = Backend::start(broker.clone(), registry.clone(), cfg.clone(), name)?;
+        Ok(Node {
+            name: name.to_string(),
+            config: cfg,
+            broker,
+            registry,
+            frontend,
+            backend: Some(backend),
+        })
+    }
+
+    /// Node name.
+    pub fn name(&self) -> &str {
+        &self.name
+    }
+
+    /// Engine configuration.
+    pub fn config(&self) -> &EngineConfig {
+        &self.config
+    }
+
+    /// The front-end (ingestion + reply collection).
+    pub fn frontend(&self) -> &Arc<FrontEnd> {
+        &self.frontend
+    }
+
+    /// The shared broker.
+    pub fn broker(&self) -> &BrokerRef {
+        &self.broker
+    }
+
+    /// Register a stream on this node and wake the back-end.
+    pub fn register_stream(&self, def: StreamDef) -> Result<()> {
+        self.frontend.register_stream(def)?;
+        if let Some(b) = &self.backend {
+            b.notify_topics_changed();
+        }
+        Ok(())
+    }
+
+    /// Adopt a stream definition registered by another node (topics
+    /// already exist on the shared broker).
+    pub fn adopt_stream(&self, def: Arc<StreamDef>) -> Result<()> {
+        def.validate()?;
+        self.registry
+            .write()
+            .unwrap()
+            .insert(def.name.clone(), def);
+        if let Some(b) = &self.backend {
+            b.notify_topics_changed();
+        }
+        Ok(())
+    }
+
+    /// New reply collector with a unique group.
+    pub fn reply_collector(&self) -> Result<ReplyCollector> {
+        static NEXT: std::sync::atomic::AtomicU64 = std::sync::atomic::AtomicU64::new(0);
+        let id = NEXT.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+        self.frontend
+            .reply_collector(&format!("collector-{}-{id}", self.name))
+    }
+
+    /// Checkpoint every task processor on this node.
+    pub fn checkpoint(&self) -> Result<()> {
+        match &self.backend {
+            Some(b) => b.checkpoint(),
+            None => Ok(()),
+        }
+    }
+
+    /// Stop the node. Graceful shutdown checkpoints and leaves the group
+    /// (partitions migrate to surviving nodes immediately); non-graceful
+    /// models a crash (no checkpoint; open-chunk events will be replayed
+    /// from the messaging layer by whoever takes over).
+    pub fn shutdown(mut self, graceful: bool) {
+        if let Some(b) = self.backend.take() {
+            b.shutdown(graceful);
+        }
+    }
+}
+
+impl Drop for Node {
+    fn drop(&mut self) {
+        if let Some(b) = self.backend.take() {
+            b.shutdown(true);
+        }
+    }
+}
+
+/// A set of nodes over one shared messaging substrate.
+pub struct Cluster {
+    broker: BrokerRef,
+    nodes: Vec<Node>,
+}
+
+impl Cluster {
+    /// Start `n` nodes, each with its own data dir under `base_cfg`'s.
+    pub fn start(n: usize, base_cfg: &EngineConfig, broker: BrokerRef) -> Result<Cluster> {
+        let mut nodes = Vec::with_capacity(n);
+        for i in 0..n {
+            let cfg = EngineConfig {
+                data_dir: base_cfg.data_dir.join(format!("node{i}")),
+                ..base_cfg.clone()
+            };
+            nodes.push(Node::start(&format!("node{i}"), cfg, broker.clone())?);
+        }
+        Ok(Cluster { broker, nodes })
+    }
+
+    /// Register a stream cluster-wide.
+    pub fn register_stream(&self, def: StreamDef) -> Result<()> {
+        let first = &self.nodes[0];
+        first.register_stream(def.clone())?;
+        let shared = first.frontend().stream(&def.name)?;
+        for node in &self.nodes[1..] {
+            node.adopt_stream(shared.clone())?;
+        }
+        Ok(())
+    }
+
+    /// Shared broker handle.
+    pub fn broker(&self) -> &BrokerRef {
+        &self.broker
+    }
+
+    /// Immutable node access.
+    pub fn node(&self, i: usize) -> &Node {
+        &self.nodes[i]
+    }
+
+    /// Number of live nodes.
+    pub fn len(&self) -> usize {
+        self.nodes.len()
+    }
+
+    /// True when the cluster has no nodes left.
+    pub fn is_empty(&self) -> bool {
+        self.nodes.is_empty()
+    }
+
+    /// Remove and stop a node (fail-over exercise).
+    pub fn kill_node(&mut self, i: usize, graceful: bool) {
+        let node = self.nodes.remove(i);
+        node.shutdown(graceful);
+    }
+}

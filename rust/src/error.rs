@@ -1,0 +1,91 @@
+//! Unified error type for the Railgun crate.
+
+use std::fmt;
+
+/// Crate-wide result alias.
+pub type Result<T> = std::result::Result<T, Error>;
+
+/// Unified error enumeration.
+///
+/// Each subsystem maps its failures into one of these variants; contextual
+/// detail goes in the message. We keep the set small so callers can match
+/// on recovery-relevant categories (I/O vs corruption vs configuration).
+#[derive(Debug, thiserror::Error)]
+pub enum Error {
+    /// Operating-system level I/O failure (disk, file handles).
+    #[error("io: {0}")]
+    Io(#[from] std::io::Error),
+
+    /// On-disk or on-wire data failed validation (bad magic, CRC mismatch,
+    /// truncated frame, undecodable field).
+    #[error("corrupt data: {0}")]
+    Corrupt(String),
+
+    /// Invalid configuration or invalid request from a client.
+    #[error("invalid: {0}")]
+    Invalid(String),
+
+    /// A named entity (topic, stream, metric, key) does not exist.
+    #[error("not found: {0}")]
+    NotFound(String),
+
+    /// The component is shut down or a channel peer has disconnected.
+    #[error("closed: {0}")]
+    Closed(String),
+
+    /// Failure inside the XLA/PJRT runtime layer.
+    #[error("runtime: {0}")]
+    Runtime(String),
+
+    /// Any other internal invariant violation.
+    #[error("internal: {0}")]
+    Internal(String),
+}
+
+impl Error {
+    /// Shorthand constructor for [`Error::Corrupt`].
+    pub fn corrupt(msg: impl fmt::Display) -> Self {
+        Error::Corrupt(msg.to_string())
+    }
+    /// Shorthand constructor for [`Error::Invalid`].
+    pub fn invalid(msg: impl fmt::Display) -> Self {
+        Error::Invalid(msg.to_string())
+    }
+    /// Shorthand constructor for [`Error::NotFound`].
+    pub fn not_found(msg: impl fmt::Display) -> Self {
+        Error::NotFound(msg.to_string())
+    }
+    /// Shorthand constructor for [`Error::Closed`].
+    pub fn closed(msg: impl fmt::Display) -> Self {
+        Error::Closed(msg.to_string())
+    }
+    /// Shorthand constructor for [`Error::Runtime`].
+    pub fn runtime(msg: impl fmt::Display) -> Self {
+        Error::Runtime(msg.to_string())
+    }
+    /// Shorthand constructor for [`Error::Internal`].
+    pub fn internal(msg: impl fmt::Display) -> Self {
+        Error::Internal(msg.to_string())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn display_includes_category_and_message() {
+        let e = Error::corrupt("bad magic 0xdead");
+        assert_eq!(e.to_string(), "corrupt data: bad magic 0xdead");
+        let e = Error::invalid("hop > window");
+        assert_eq!(e.to_string(), "invalid: hop > window");
+    }
+
+    #[test]
+    fn io_errors_convert() {
+        let io = std::io::Error::new(std::io::ErrorKind::NotFound, "gone");
+        let e: Error = io.into();
+        assert!(matches!(e, Error::Io(_)));
+        assert!(e.to_string().contains("gone"));
+    }
+}

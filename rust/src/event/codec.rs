@@ -1,0 +1,264 @@
+//! Binary event codec.
+//!
+//! The wire/disk format for a single event (used by the messaging layer
+//! payloads and, with timestamp delta-encoding, by reservoir chunks):
+//!
+//! ```text
+//! event      := timestamp:zigzag-varint  value*        (schema gives arity)
+//! value      := presence:u8 payload
+//! presence   := 0 (null) | 1 (present)
+//! payload    := Str  → len-varint bytes
+//!             | I64  → zigzag-varint
+//!             | F64  → 8 bytes LE bits
+//!             | Bool → u8
+//! ```
+//!
+//! The schema travels out-of-band (stream registration), so events carry
+//! no field names or type tags — the paper's reservoir stresses compact
+//! serialization because events are replicated per top-level entity
+//! (§3.3.1).
+
+use crate::error::{Error, Result};
+use crate::event::{Event, FieldType, Schema, Value};
+use crate::util::varint;
+
+/// Append `event` to `out` using `schema` for the field layout.
+///
+/// `base_ts` enables timestamp delta encoding within a chunk (pass 0 for
+/// standalone encoding).
+pub fn encode_into(out: &mut Vec<u8>, event: &Event, schema: &Schema, base_ts: i64) {
+    varint::write_i64(out, event.timestamp - base_ts);
+    debug_assert_eq!(event.values.len(), schema.len());
+    for (v, f) in event.values.iter().zip(schema.fields()) {
+        match v {
+            Value::Null => out.push(0),
+            _ => {
+                out.push(1);
+                match (v, f.ftype) {
+                    (Value::Str(s), FieldType::Str) => varint::write_str(out, s),
+                    (Value::I64(i), FieldType::I64) => {
+                        varint::write_i64(out, *i);
+                    }
+                    (Value::F64(x), FieldType::F64) => {
+                        out.extend_from_slice(&x.to_bits().to_le_bytes())
+                    }
+                    (Value::Bool(b), FieldType::Bool) => out.push(*b as u8),
+                    (v, t) => {
+                        // validate() should have rejected this upstream;
+                        // encode null rather than corrupt the stream.
+                        debug_assert!(false, "value {v:?} does not match {t:?}");
+                        *out.last_mut().unwrap() = 0;
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// Encode as a standalone byte vector.
+pub fn encode(event: &Event, schema: &Schema) -> Vec<u8> {
+    let mut out = Vec::with_capacity(16 + schema.len() * 8);
+    encode_into(&mut out, event, schema, 0);
+    out
+}
+
+/// Decode one event from `buf` at `*pos`, advancing `*pos`.
+pub fn decode_from(buf: &[u8], pos: &mut usize, schema: &Schema, base_ts: i64) -> Result<Event> {
+    let ts = base_ts + varint::read_i64(buf, pos)?;
+    let mut values = Vec::with_capacity(schema.len());
+    for f in schema.fields() {
+        let presence = *buf
+            .get(*pos)
+            .ok_or_else(|| Error::corrupt("event: truncated presence byte"))?;
+        *pos += 1;
+        match presence {
+            0 => values.push(Value::Null),
+            1 => values.push(match f.ftype {
+                FieldType::Str => Value::Str(varint::read_str(buf, pos)?.to_string()),
+                FieldType::I64 => Value::I64(varint::read_i64(buf, pos)?),
+                FieldType::F64 => {
+                    let end = *pos + 8;
+                    if end > buf.len() {
+                        return Err(Error::corrupt("event: truncated f64"));
+                    }
+                    let bits = u64::from_le_bytes(buf[*pos..end].try_into().unwrap());
+                    *pos = end;
+                    Value::F64(f64::from_bits(bits))
+                }
+                FieldType::Bool => {
+                    let b = *buf
+                        .get(*pos)
+                        .ok_or_else(|| Error::corrupt("event: truncated bool"))?;
+                    *pos += 1;
+                    Value::Bool(b != 0)
+                }
+            }),
+            p => return Err(Error::corrupt(format!("event: bad presence byte {p}"))),
+        }
+    }
+    Ok(Event::new(ts, values))
+}
+
+/// Decode a standalone encoded event (must consume the whole buffer).
+pub fn decode(buf: &[u8], schema: &Schema) -> Result<Event> {
+    let mut pos = 0;
+    let e = decode_from(buf, &mut pos, schema, 0)?;
+    if pos != buf.len() {
+        return Err(Error::corrupt(format!(
+            "event: {} trailing bytes",
+            buf.len() - pos
+        )));
+    }
+    Ok(e)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::event::SchemaRef;
+    use crate::util::rng::Rng;
+
+    fn schema() -> SchemaRef {
+        Schema::of(&[
+            ("card", FieldType::Str),
+            ("merchant", FieldType::Str),
+            ("amount", FieldType::F64),
+            ("count_flag", FieldType::Bool),
+            ("seq", FieldType::I64),
+        ])
+        .unwrap()
+    }
+
+    fn sample_event(ts: i64) -> Event {
+        Event::new(
+            ts,
+            vec![
+                Value::Str("card_42".into()),
+                Value::Str("merchant_7".into()),
+                Value::F64(123.45),
+                Value::Bool(true),
+                Value::I64(-99),
+            ],
+        )
+    }
+
+    #[test]
+    fn roundtrip_basic() {
+        let s = schema();
+        let e = sample_event(1_600_000_000_123);
+        let buf = encode(&e, &s);
+        assert_eq!(decode(&buf, &s).unwrap(), e);
+    }
+
+    #[test]
+    fn roundtrip_with_nulls() {
+        let s = schema();
+        let e = Event::new(
+            5,
+            vec![
+                Value::Null,
+                Value::Str("m".into()),
+                Value::Null,
+                Value::Null,
+                Value::I64(0),
+            ],
+        );
+        let buf = encode(&e, &s);
+        assert_eq!(decode(&buf, &s).unwrap(), e);
+    }
+
+    #[test]
+    fn delta_timestamp_encoding_is_smaller() {
+        let s = schema();
+        let e = sample_event(1_600_000_000_123);
+        let mut abs = Vec::new();
+        encode_into(&mut abs, &e, &s, 0);
+        let mut rel = Vec::new();
+        encode_into(&mut rel, &e, &s, 1_600_000_000_000);
+        assert!(rel.len() < abs.len());
+        let mut pos = 0;
+        let back = decode_from(&rel, &mut pos, &s, 1_600_000_000_000).unwrap();
+        assert_eq!(back, e);
+    }
+
+    #[test]
+    fn sequential_events_share_buffer() {
+        let s = schema();
+        let mut buf = Vec::new();
+        let events: Vec<Event> = (0..100).map(|i| sample_event(1000 + i)).collect();
+        for e in &events {
+            encode_into(&mut buf, e, &s, 1000);
+        }
+        let mut pos = 0;
+        for e in &events {
+            assert_eq!(&decode_from(&buf, &mut pos, &s, 1000).unwrap(), e);
+        }
+        assert_eq!(pos, buf.len());
+    }
+
+    #[test]
+    fn truncation_anywhere_errors_not_panics() {
+        let s = schema();
+        let buf = encode(&sample_event(777), &s);
+        for cut in 0..buf.len() {
+            assert!(decode(&buf[..cut], &s).is_err(), "cut at {cut}");
+        }
+    }
+
+    #[test]
+    fn trailing_bytes_rejected() {
+        let s = schema();
+        let mut buf = encode(&sample_event(777), &s);
+        buf.push(0xAB);
+        assert!(decode(&buf, &s).is_err());
+    }
+
+    #[test]
+    fn special_floats_roundtrip() {
+        let s = Schema::of(&[("x", FieldType::F64)]).unwrap();
+        for v in [f64::INFINITY, f64::NEG_INFINITY, 0.0, -0.0, f64::MIN_POSITIVE] {
+            let e = Event::new(0, vec![Value::F64(v)]);
+            let back = decode(&encode(&e, &s), &s).unwrap();
+            assert_eq!(back.values[0], Value::F64(v));
+        }
+        // NaN: bit-exact roundtrip
+        let e = Event::new(0, vec![Value::F64(f64::NAN)]);
+        let back = decode(&encode(&e, &s), &s).unwrap();
+        match back.values[0] {
+            Value::F64(x) => assert!(x.is_nan()),
+            _ => panic!("expected f64"),
+        }
+    }
+
+    #[test]
+    fn fuzz_roundtrip_random_events() {
+        let s = schema();
+        let mut rng = Rng::new(321);
+        for _ in 0..500 {
+            let e = Event::new(
+                rng.range_i64(-1_000_000, i64::MAX / 2),
+                vec![
+                    if rng.chance(0.1) {
+                        Value::Null
+                    } else {
+                        Value::Str(format!("card_{}", rng.next_below(100000)))
+                    },
+                    Value::Str(format!("m_{}", rng.next_below(2000))),
+                    Value::F64(rng.next_lognormal(3.0, 1.5)),
+                    Value::Bool(rng.chance(0.5)),
+                    Value::I64(rng.range_i64(i64::MIN / 2, i64::MAX / 2)),
+                ],
+            );
+            let buf = encode(&e, &s);
+            assert_eq!(decode(&buf, &s).unwrap(), e);
+        }
+    }
+
+    #[test]
+    fn empty_schema_event() {
+        let s = Schema::of(&[]).unwrap();
+        let e = Event::new(42, vec![]);
+        let buf = encode(&e, &s);
+        assert_eq!(decode(&buf, &s).unwrap(), e);
+    }
+}

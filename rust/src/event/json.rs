@@ -1,0 +1,158 @@
+//! JSON ⇄ Event conversion (client-facing ingestion format).
+//!
+//! The front-end accepts events as JSON objects: a required `timestamp`
+//! field (epoch millis) plus one member per schema field. Unknown members
+//! are rejected (fail-fast: silent field drops are how fraud metrics go
+//! quietly wrong).
+
+use crate::error::{Error, Result};
+use crate::event::{Event, FieldType, Schema, Value};
+use crate::util::json::Json;
+
+/// Parse a JSON object into an [`Event`] for `schema`.
+pub fn event_from_json(json: &Json, schema: &Schema) -> Result<Event> {
+    let obj = json
+        .as_obj()
+        .ok_or_else(|| Error::invalid("event json must be an object"))?;
+    let ts = obj
+        .get("timestamp")
+        .and_then(|j| j.as_i64())
+        .ok_or_else(|| Error::invalid("event json needs integer 'timestamp' (epoch ms)"))?;
+
+    let mut values = vec![Value::Null; schema.len()];
+    for (key, val) in obj {
+        if key == "timestamp" {
+            continue;
+        }
+        let idx = schema
+            .index_of(key)
+            .ok_or_else(|| Error::invalid(format!("unknown field '{key}'")))?;
+        let ftype = schema.fields()[idx].ftype;
+        values[idx] = match (val, ftype) {
+            (Json::Null, _) => Value::Null,
+            (Json::Str(s), FieldType::Str) => Value::Str(s.clone()),
+            (Json::Int(i), FieldType::I64) => Value::I64(*i),
+            (Json::Int(i), FieldType::F64) => Value::F64(*i as f64),
+            (Json::Float(f), FieldType::F64) => Value::F64(*f),
+            (Json::Bool(b), FieldType::Bool) => Value::Bool(*b),
+            (v, t) => {
+                return Err(Error::invalid(format!(
+                    "field '{key}' expects {t:?}, got {v:?}"
+                )))
+            }
+        };
+    }
+    Ok(Event::new(ts, values))
+}
+
+/// Parse from JSON text.
+pub fn event_from_json_str(text: &str, schema: &Schema) -> Result<Event> {
+    event_from_json(&Json::parse(text)?, schema)
+}
+
+/// Render an [`Event`] as a JSON object.
+pub fn event_to_json(event: &Event, schema: &Schema) -> Json {
+    let mut map = std::collections::BTreeMap::new();
+    map.insert("timestamp".to_string(), Json::Int(event.timestamp));
+    for (v, f) in event.values.iter().zip(schema.fields()) {
+        let j = match v {
+            Value::Null => Json::Null,
+            Value::Str(s) => Json::Str(s.clone()),
+            Value::I64(i) => Json::Int(*i),
+            Value::F64(x) => Json::Float(*x),
+            Value::Bool(b) => Json::Bool(*b),
+        };
+        map.insert(f.name.clone(), j);
+    }
+    Json::Obj(map)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::event::SchemaRef;
+
+    fn schema() -> SchemaRef {
+        Schema::of(&[
+            ("card", FieldType::Str),
+            ("amount", FieldType::F64),
+            ("is_cnp", FieldType::Bool),
+            ("seq", FieldType::I64),
+        ])
+        .unwrap()
+    }
+
+    #[test]
+    fn parse_full_event() {
+        let s = schema();
+        let e = event_from_json_str(
+            r#"{"timestamp": 1600000000000, "card": "c1", "amount": 9.5, "is_cnp": true, "seq": 7}"#,
+            &s,
+        )
+        .unwrap();
+        assert_eq!(e.timestamp, 1_600_000_000_000);
+        assert_eq!(e.values[0], Value::Str("c1".into()));
+        assert_eq!(e.values[1], Value::F64(9.5));
+        assert_eq!(e.values[2], Value::Bool(true));
+        assert_eq!(e.values[3], Value::I64(7));
+    }
+
+    #[test]
+    fn missing_fields_become_null() {
+        let s = schema();
+        let e = event_from_json_str(r#"{"timestamp": 1, "card": "c1"}"#, &s).unwrap();
+        assert_eq!(e.values[1], Value::Null);
+        s.validate(&e).unwrap();
+    }
+
+    #[test]
+    fn int_widens_to_f64_field() {
+        let s = schema();
+        let e = event_from_json_str(r#"{"timestamp": 1, "amount": 10}"#, &s).unwrap();
+        assert_eq!(e.values[1], Value::F64(10.0));
+    }
+
+    #[test]
+    fn unknown_field_rejected() {
+        let s = schema();
+        assert!(event_from_json_str(r#"{"timestamp": 1, "cvv": "123"}"#, &s).is_err());
+    }
+
+    #[test]
+    fn missing_timestamp_rejected() {
+        let s = schema();
+        assert!(event_from_json_str(r#"{"card": "c1"}"#, &s).is_err());
+        assert!(event_from_json_str(r#"{"timestamp": "late", "card": "c1"}"#, &s).is_err());
+    }
+
+    #[test]
+    fn type_mismatch_rejected() {
+        let s = schema();
+        assert!(event_from_json_str(r#"{"timestamp": 1, "card": 42}"#, &s).is_err());
+        assert!(event_from_json_str(r#"{"timestamp": 1, "is_cnp": "yes"}"#, &s).is_err());
+    }
+
+    #[test]
+    fn json_roundtrip() {
+        let s = schema();
+        let e = Event::new(
+            123,
+            vec![
+                Value::Str("c9".into()),
+                Value::F64(55.25),
+                Value::Bool(false),
+                Value::Null,
+            ],
+        );
+        let j = event_to_json(&e, &s);
+        let back = event_from_json(&j, &s).unwrap();
+        assert_eq!(back, e);
+    }
+
+    #[test]
+    fn non_object_rejected() {
+        let s = schema();
+        assert!(event_from_json(&Json::Arr(vec![]), &s).is_err());
+        assert!(event_from_json(&Json::Int(3), &s).is_err());
+    }
+}

@@ -1,0 +1,329 @@
+//! Event model: schemas, typed values and events.
+//!
+//! A data stream is an unbounded sequence of events, each a data point
+//! with a timestamp (paper §2). Railgun streams are schema-ful: a
+//! [`Schema`] declares the typed fields once at stream registration, and
+//! every [`Event`] stores a dense `Vec<Value>` indexed by field position
+//! (no per-event field names — this keeps the reservoir encoding compact
+//! and group-by lookups O(1)).
+
+pub mod codec;
+pub mod json;
+
+use crate::error::{Error, Result};
+use crate::util::clock::TimestampMs;
+use crate::util::hash::FxHashMap;
+use std::fmt;
+use std::sync::Arc;
+
+/// Type of an event field.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FieldType {
+    /// UTF-8 string (entity ids: card, merchant, …).
+    Str,
+    /// 64-bit signed integer.
+    I64,
+    /// 64-bit float (amounts).
+    F64,
+    /// Boolean flag.
+    Bool,
+}
+
+impl FieldType {
+    /// Stable numeric tag used by the binary codec.
+    pub fn tag(self) -> u8 {
+        match self {
+            FieldType::Str => 0,
+            FieldType::I64 => 1,
+            FieldType::F64 => 2,
+            FieldType::Bool => 3,
+        }
+    }
+
+    /// Inverse of [`FieldType::tag`].
+    pub fn from_tag(tag: u8) -> Result<Self> {
+        Ok(match tag {
+            0 => FieldType::Str,
+            1 => FieldType::I64,
+            2 => FieldType::F64,
+            3 => FieldType::Bool,
+            t => return Err(Error::corrupt(format!("unknown field type tag {t}"))),
+        })
+    }
+}
+
+/// A typed field value.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Value {
+    /// Missing value.
+    Null,
+    /// String.
+    Str(String),
+    /// Integer.
+    I64(i64),
+    /// Float.
+    F64(f64),
+    /// Boolean.
+    Bool(bool),
+}
+
+impl Value {
+    /// True if the value matches the declared type (or is null).
+    pub fn matches(&self, ftype: FieldType) -> bool {
+        matches!(
+            (self, ftype),
+            (Value::Null, _)
+                | (Value::Str(_), FieldType::Str)
+                | (Value::I64(_), FieldType::I64)
+                | (Value::F64(_), FieldType::F64)
+                | (Value::Bool(_), FieldType::Bool)
+        )
+    }
+
+    /// Numeric view (I64 widens to f64); `None` for non-numeric.
+    pub fn as_f64(&self) -> Option<f64> {
+        match self {
+            Value::F64(f) => Some(*f),
+            Value::I64(i) => Some(*i as f64),
+            _ => None,
+        }
+    }
+
+    /// String view.
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            Value::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+
+    /// Stable bytes used for group-by keys and routing hashes.
+    pub fn key_bytes(&self, out: &mut Vec<u8>) {
+        match self {
+            Value::Null => out.push(0xff),
+            Value::Str(s) => out.extend_from_slice(s.as_bytes()),
+            Value::I64(i) => out.extend_from_slice(&i.to_le_bytes()),
+            Value::F64(f) => out.extend_from_slice(&f.to_bits().to_le_bytes()),
+            Value::Bool(b) => out.push(*b as u8),
+        }
+    }
+}
+
+impl fmt::Display for Value {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Value::Null => write!(f, "null"),
+            Value::Str(s) => write!(f, "{s}"),
+            Value::I64(i) => write!(f, "{i}"),
+            Value::F64(x) => write!(f, "{x}"),
+            Value::Bool(b) => write!(f, "{b}"),
+        }
+    }
+}
+
+/// Declared field: name + type.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct FieldDef {
+    /// Field name (unique within the schema).
+    pub name: String,
+    /// Field type.
+    pub ftype: FieldType,
+}
+
+/// An immutable stream schema. Cheap to share via [`SchemaRef`].
+#[derive(Debug)]
+pub struct Schema {
+    fields: Vec<FieldDef>,
+    by_name: FxHashMap<String, usize>,
+}
+
+/// Shared schema handle.
+pub type SchemaRef = Arc<Schema>;
+
+impl Schema {
+    /// Build a schema; field names must be unique and non-empty.
+    pub fn new(fields: Vec<FieldDef>) -> Result<SchemaRef> {
+        let mut by_name = FxHashMap::default();
+        for (i, f) in fields.iter().enumerate() {
+            if f.name.is_empty() {
+                return Err(Error::invalid("schema: empty field name"));
+            }
+            if by_name.insert(f.name.clone(), i).is_some() {
+                return Err(Error::invalid(format!("schema: duplicate field '{}'", f.name)));
+            }
+        }
+        Ok(Arc::new(Schema { fields, by_name }))
+    }
+
+    /// Convenience constructor from `(name, type)` pairs.
+    pub fn of(pairs: &[(&str, FieldType)]) -> Result<SchemaRef> {
+        Self::new(
+            pairs
+                .iter()
+                .map(|(n, t)| FieldDef {
+                    name: n.to_string(),
+                    ftype: *t,
+                })
+                .collect(),
+        )
+    }
+
+    /// Field position by name.
+    pub fn index_of(&self, name: &str) -> Option<usize> {
+        self.by_name.get(name).copied()
+    }
+
+    /// All fields in declaration order.
+    pub fn fields(&self) -> &[FieldDef] {
+        &self.fields
+    }
+
+    /// Number of fields.
+    pub fn len(&self) -> usize {
+        self.fields.len()
+    }
+
+    /// True when the schema has no fields.
+    pub fn is_empty(&self) -> bool {
+        self.fields.is_empty()
+    }
+
+    /// Validate an event against this schema.
+    pub fn validate(&self, event: &Event) -> Result<()> {
+        if event.values.len() != self.fields.len() {
+            return Err(Error::invalid(format!(
+                "event has {} values, schema has {} fields",
+                event.values.len(),
+                self.fields.len()
+            )));
+        }
+        for (v, f) in event.values.iter().zip(&self.fields) {
+            if !v.matches(f.ftype) {
+                return Err(Error::invalid(format!(
+                    "field '{}' expects {:?}, got {v:?}",
+                    f.name, f.ftype
+                )));
+            }
+        }
+        Ok(())
+    }
+}
+
+/// A single stream event: timestamp + dense field values.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Event {
+    /// Event time, milliseconds since epoch. Windows are event-time driven.
+    pub timestamp: TimestampMs,
+    /// Field values, positionally aligned with the stream's [`Schema`].
+    pub values: Vec<Value>,
+}
+
+impl Event {
+    /// New event.
+    pub fn new(timestamp: TimestampMs, values: Vec<Value>) -> Self {
+        Event { timestamp, values }
+    }
+
+    /// Value at field position `idx`.
+    #[inline]
+    pub fn value(&self, idx: usize) -> &Value {
+        &self.values[idx]
+    }
+
+    /// Value by field name (schema lookup; hot paths should pre-resolve
+    /// indices instead).
+    pub fn value_by_name<'a>(&'a self, schema: &Schema, name: &str) -> Option<&'a Value> {
+        schema.index_of(name).map(|i| &self.values[i])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn payments_schema() -> SchemaRef {
+        Schema::of(&[
+            ("card", FieldType::Str),
+            ("merchant", FieldType::Str),
+            ("amount", FieldType::F64),
+        ])
+        .unwrap()
+    }
+
+    #[test]
+    fn schema_lookup() {
+        let s = payments_schema();
+        assert_eq!(s.index_of("card"), Some(0));
+        assert_eq!(s.index_of("amount"), Some(2));
+        assert_eq!(s.index_of("nope"), None);
+        assert_eq!(s.len(), 3);
+    }
+
+    #[test]
+    fn schema_rejects_duplicates_and_empty() {
+        assert!(Schema::of(&[("a", FieldType::I64), ("a", FieldType::Str)]).is_err());
+        assert!(Schema::of(&[("", FieldType::I64)]).is_err());
+    }
+
+    #[test]
+    fn validate_accepts_well_typed_event() {
+        let s = payments_schema();
+        let e = Event::new(
+            1000,
+            vec![
+                Value::Str("c1".into()),
+                Value::Str("m1".into()),
+                Value::F64(9.99),
+            ],
+        );
+        s.validate(&e).unwrap();
+    }
+
+    #[test]
+    fn validate_accepts_nulls() {
+        let s = payments_schema();
+        let e = Event::new(1000, vec![Value::Null, Value::Null, Value::Null]);
+        s.validate(&e).unwrap();
+    }
+
+    #[test]
+    fn validate_rejects_arity_and_type_mismatch() {
+        let s = payments_schema();
+        let short = Event::new(0, vec![Value::Str("c".into())]);
+        assert!(s.validate(&short).is_err());
+        let wrong = Event::new(
+            0,
+            vec![
+                Value::I64(5),
+                Value::Str("m".into()),
+                Value::F64(1.0),
+            ],
+        );
+        assert!(s.validate(&wrong).is_err());
+    }
+
+    #[test]
+    fn value_numeric_widening() {
+        assert_eq!(Value::I64(4).as_f64(), Some(4.0));
+        assert_eq!(Value::F64(2.5).as_f64(), Some(2.5));
+        assert_eq!(Value::Str("x".into()).as_f64(), None);
+        assert_eq!(Value::Null.as_f64(), None);
+    }
+
+    #[test]
+    fn key_bytes_distinguish_values() {
+        let mut a = Vec::new();
+        let mut b = Vec::new();
+        Value::Str("12".into()).key_bytes(&mut a);
+        Value::I64(12).key_bytes(&mut b);
+        assert_ne!(a, b);
+    }
+
+    #[test]
+    fn field_type_tags_roundtrip() {
+        for t in [FieldType::Str, FieldType::I64, FieldType::F64, FieldType::Bool] {
+            assert_eq!(FieldType::from_tag(t.tag()).unwrap(), t);
+        }
+        assert!(FieldType::from_tag(99).is_err());
+    }
+}

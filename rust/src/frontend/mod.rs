@@ -1,0 +1,535 @@
+//! Front-end layer (paper §3.2): client entry point, event routing and
+//! reply collection.
+//!
+//! On ingest, an event is **replicated to one topic per routing entity**
+//! of its stream, partitioned by the hash of that entity's value — this
+//! is what guarantees the processing unit computing a metric sees *every*
+//! event of its group (accuracy requirement A). The front-end also owns
+//! the reply topic: back-end task processors publish their metric values
+//! there, and [`ReplyCollector`] reassembles the per-event answer for the
+//! client (steps 5–6 of Figure 2).
+
+use crate::config::StreamDef;
+use crate::error::{Error, Result};
+use crate::event::{codec, Event};
+use crate::mlog::{BrokerRef, Consumer, Producer};
+use crate::util::hash::FxHashMap;
+use crate::util::json::Json;
+use crate::util::varint;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, RwLock};
+use std::time::{Duration, Instant};
+
+/// Name of the shared reply topic.
+pub const REPLY_TOPIC: &str = "railgun.replies";
+
+/// Registered streams, shared between front-end and back-end.
+pub type Registry = Arc<RwLock<FxHashMap<String, Arc<StreamDef>>>>;
+
+/// Envelope: what actually travels in an event topic record payload.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Envelope {
+    /// Front-end-assigned ingest id (reply correlation).
+    pub ingest_id: u64,
+    /// The event.
+    pub event: Event,
+}
+
+impl Envelope {
+    /// Encode with the stream schema.
+    pub fn encode(&self, schema: &crate::event::Schema) -> Vec<u8> {
+        let mut out = Vec::with_capacity(24);
+        varint::write_u64(&mut out, self.ingest_id);
+        codec::encode_into(&mut out, &self.event, schema, 0);
+        out
+    }
+
+    /// Decode with the stream schema.
+    pub fn decode(buf: &[u8], schema: &crate::event::Schema) -> Result<Envelope> {
+        let mut pos = 0;
+        let ingest_id = varint::read_u64(buf, &mut pos)?;
+        let event = codec::decode_from(buf, &mut pos, schema, 0)?;
+        if pos != buf.len() {
+            return Err(Error::corrupt("envelope: trailing bytes"));
+        }
+        Ok(Envelope { ingest_id, event })
+    }
+}
+
+/// One metric value inside a reply.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ReplyMetric {
+    /// Metric name.
+    pub name: String,
+    /// Rendered group key.
+    pub group: String,
+    /// Value (None = empty-window identity).
+    pub value: Option<f64>,
+}
+
+/// A back-end task processor's answer for one event.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ReplyMsg {
+    /// Correlates with [`Envelope::ingest_id`].
+    pub ingest_id: u64,
+    /// Source topic.
+    pub topic: String,
+    /// Source partition.
+    pub partition: u32,
+    /// Event timestamp.
+    pub event_ts: i64,
+    /// Metric values computed by that task processor.
+    pub metrics: Vec<ReplyMetric>,
+}
+
+impl ReplyMsg {
+    /// JSON encoding (replies are client-facing).
+    pub fn to_json(&self) -> Json {
+        Json::obj([
+            ("ingest_id", Json::Int(self.ingest_id as i64)),
+            ("topic", Json::Str(self.topic.clone())),
+            ("partition", Json::Int(self.partition as i64)),
+            ("event_ts", Json::Int(self.event_ts)),
+            (
+                "metrics",
+                Json::Arr(
+                    self.metrics
+                        .iter()
+                        .map(|m| {
+                            Json::obj([
+                                ("name", Json::Str(m.name.clone())),
+                                ("group", Json::Str(m.group.clone())),
+                                (
+                                    "value",
+                                    match m.value {
+                                        Some(v) => Json::Float(v),
+                                        None => Json::Null,
+                                    },
+                                ),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
+        ])
+    }
+
+    /// Parse from JSON.
+    pub fn from_json(json: &Json) -> Result<ReplyMsg> {
+        let get = |k: &str| {
+            json.get(k)
+                .ok_or_else(|| Error::corrupt(format!("reply: missing '{k}'")))
+        };
+        let metrics = get("metrics")?
+            .as_arr()
+            .ok_or_else(|| Error::corrupt("reply: 'metrics' not array"))?
+            .iter()
+            .map(|m| {
+                Ok(ReplyMetric {
+                    name: m
+                        .get("name")
+                        .and_then(|j| j.as_str())
+                        .ok_or_else(|| Error::corrupt("reply metric: missing name"))?
+                        .to_string(),
+                    group: m
+                        .get("group")
+                        .and_then(|j| j.as_str())
+                        .unwrap_or_default()
+                        .to_string(),
+                    value: m.get("value").and_then(|j| j.as_f64()),
+                })
+            })
+            .collect::<Result<Vec<_>>>()?;
+        Ok(ReplyMsg {
+            ingest_id: get("ingest_id")?
+                .as_i64()
+                .ok_or_else(|| Error::corrupt("reply: bad ingest_id"))? as u64,
+            topic: get("topic")?
+                .as_str()
+                .ok_or_else(|| Error::corrupt("reply: bad topic"))?
+                .to_string(),
+            partition: get("partition")?
+                .as_i64()
+                .ok_or_else(|| Error::corrupt("reply: bad partition"))? as u32,
+            event_ts: get("event_ts")?
+                .as_i64()
+                .ok_or_else(|| Error::corrupt("reply: bad event_ts"))?,
+            metrics,
+        })
+    }
+}
+
+/// Receipt for an ingested event.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct IngestReceipt {
+    /// Assigned ingest id.
+    pub ingest_id: u64,
+    /// Number of topic replicas written (= replies to expect).
+    pub fanout: u32,
+}
+
+/// The front-end: stream registration + event routing.
+pub struct FrontEnd {
+    broker: BrokerRef,
+    producer: Producer,
+    registry: Registry,
+    partitions_per_topic: u32,
+    next_ingest_id: AtomicU64,
+}
+
+impl FrontEnd {
+    /// Create a front-end over a broker.
+    pub fn new(broker: BrokerRef, registry: Registry, partitions_per_topic: u32) -> FrontEnd {
+        let producer = broker.producer();
+        // seed from wall-clock microseconds so ids never collide across
+        // process restarts (replies correlate by ingest_id on a durable
+        // reply topic)
+        let seed = std::time::SystemTime::now()
+            .duration_since(std::time::UNIX_EPOCH)
+            .map(|d| d.as_micros() as u64)
+            .unwrap_or(1)
+            << 16;
+        FrontEnd {
+            broker,
+            producer,
+            registry,
+            partitions_per_topic,
+            next_ingest_id: AtomicU64::new(seed),
+        }
+    }
+
+    /// Register a stream: validates the definition, creates one
+    /// partitioned topic per routing entity (+ the reply topic), and
+    /// publishes the definition in the shared registry.
+    pub fn register_stream(&self, def: StreamDef) -> Result<()> {
+        def.validate()?;
+        {
+            let reg = self.registry.read().unwrap();
+            if reg.contains_key(&def.name) {
+                return Err(Error::invalid(format!(
+                    "stream '{}' already registered",
+                    def.name
+                )));
+            }
+        }
+        for topic in def.topics() {
+            self.broker.ensure_topic(&topic, self.partitions_per_topic)?;
+        }
+        self.broker.ensure_topic(REPLY_TOPIC, 1)?;
+        self.registry
+            .write()
+            .unwrap()
+            .insert(def.name.clone(), Arc::new(def));
+        Ok(())
+    }
+
+    /// Remove a stream from the registry (topics are retained for replay).
+    pub fn deregister_stream(&self, name: &str) -> Result<()> {
+        self.registry
+            .write()
+            .unwrap()
+            .remove(name)
+            .map(|_| ())
+            .ok_or_else(|| Error::not_found(format!("stream '{name}'")))
+    }
+
+    /// Look up a registered stream.
+    pub fn stream(&self, name: &str) -> Result<Arc<StreamDef>> {
+        self.registry
+            .read()
+            .unwrap()
+            .get(name)
+            .cloned()
+            .ok_or_else(|| Error::not_found(format!("stream '{name}'")))
+    }
+
+    /// Ingest one event: validate, replicate to every entity topic
+    /// (hashed by that entity's value), return the receipt (step 2 of
+    /// Figure 2).
+    pub fn ingest(&self, stream: &str, event: Event) -> Result<IngestReceipt> {
+        let def = self.stream(stream)?;
+        def.schema.validate(&event)?;
+        let ingest_id = self.next_ingest_id.fetch_add(1, Ordering::Relaxed);
+        let env = Envelope { ingest_id, event };
+        let payload = env.encode(&def.schema);
+        let mut fanout = 0u32;
+        for entity in &def.entities {
+            let idx = def.schema.index_of(entity).expect("validated");
+            let mut key = Vec::with_capacity(24);
+            env.event.value(idx).key_bytes(&mut key);
+            self.producer.send_keyed(
+                &def.topic_for(entity),
+                &key,
+                env.event.timestamp,
+                payload.clone(),
+            )?;
+            fanout += 1;
+        }
+        Ok(IngestReceipt { ingest_id, fanout })
+    }
+
+    /// Ingest from client JSON.
+    pub fn ingest_json(&self, stream: &str, text: &str) -> Result<IngestReceipt> {
+        let def = self.stream(stream)?;
+        let event = crate::event::json::event_from_json_str(text, &def.schema)?;
+        self.ingest(stream, event)
+    }
+
+    /// Create a reply collector (its own consumer group so multiple
+    /// collectors are independent). The collector starts at the reply
+    /// topic's **end**: it only sees replies to events ingested after its
+    /// creation (stale replies from previous runs are skipped).
+    pub fn reply_collector(&self, group: &str) -> Result<ReplyCollector> {
+        self.broker.ensure_topic(REPLY_TOPIC, 1)?;
+        let mut consumer = self.broker.consumer(group, &[REPLY_TOPIC])?;
+        // force the initial assignment, then seek to the live end
+        let _ = consumer.poll(0, Duration::from_millis(0))?;
+        for tp in consumer.assignment().to_vec() {
+            let end = self.broker.end_offset(&tp)?;
+            consumer.seek(tp, end);
+        }
+        Ok(ReplyCollector {
+            consumer,
+            pending: FxHashMap::default(),
+        })
+    }
+}
+
+/// Collects reply messages and reassembles per-event answers.
+pub struct ReplyCollector {
+    consumer: Consumer,
+    /// ingest_id → replies received so far.
+    pending: FxHashMap<u64, Vec<ReplyMsg>>,
+}
+
+impl ReplyCollector {
+    /// Drain available replies into the pending map.
+    pub fn pump(&mut self, timeout: Duration) -> Result<usize> {
+        let polled = self.consumer.poll(1024, timeout)?;
+        let n = polled.records.len();
+        for (_, rec) in polled.records {
+            let text = std::str::from_utf8(&rec.payload)
+                .map_err(|e| Error::corrupt(format!("reply: {e}")))?;
+            let msg = ReplyMsg::from_json(&Json::parse(text)?)?;
+            self.pending.entry(msg.ingest_id).or_default().push(msg);
+        }
+        Ok(n)
+    }
+
+    /// Wait until `expected` replies for `ingest_id` have arrived (step 6
+    /// of Figure 2). Returns the replies, removing them from the pending
+    /// set.
+    pub fn await_event(
+        &mut self,
+        ingest_id: u64,
+        expected: u32,
+        timeout: Duration,
+    ) -> Result<Vec<ReplyMsg>> {
+        let deadline = Instant::now() + timeout;
+        loop {
+            if self
+                .pending
+                .get(&ingest_id)
+                .map(|v| v.len() >= expected as usize)
+                .unwrap_or(false)
+            {
+                return Ok(self.pending.remove(&ingest_id).unwrap());
+            }
+            let now = Instant::now();
+            if now >= deadline {
+                return Err(Error::closed(format!(
+                    "timed out waiting for {expected} replies to ingest {ingest_id} (have {})",
+                    self.pending.get(&ingest_id).map(|v| v.len()).unwrap_or(0)
+                )));
+            }
+            self.pump(deadline - now)?;
+        }
+    }
+
+    /// Non-blocking: take whatever replies have arrived for an event.
+    pub fn take_partial(&mut self, ingest_id: u64) -> Vec<ReplyMsg> {
+        self.pending.remove(&ingest_id).unwrap_or_default()
+    }
+
+    /// Number of events with outstanding replies.
+    pub fn pending_events(&self) -> usize {
+        self.pending.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::agg::AggKind;
+    use crate::event::Value;
+    use crate::mlog::{Broker, BrokerConfig};
+    use crate::plan::MetricSpec;
+    use crate::window::WindowSpec;
+    use crate::workload::payments_schema;
+
+    fn registry() -> Registry {
+        Arc::new(RwLock::new(FxHashMap::default()))
+    }
+
+    fn def() -> StreamDef {
+        StreamDef {
+            name: "payments".into(),
+            schema: payments_schema(),
+            entities: vec!["card".into(), "merchant".into()],
+            metrics: vec![
+                MetricSpec::new(
+                    "sum_by_card",
+                    AggKind::Sum,
+                    Some("amount"),
+                    WindowSpec::sliding(300_000),
+                    &["card"],
+                ),
+                MetricSpec::new(
+                    "avg_by_merchant",
+                    AggKind::Avg,
+                    Some("amount"),
+                    WindowSpec::sliding(300_000),
+                    &["merchant"],
+                ),
+            ],
+        }
+    }
+
+    fn ev(ts: i64, card: &str, merchant: &str, amount: f64) -> Event {
+        Event::new(
+            ts,
+            vec![
+                Value::Str(card.into()),
+                Value::Str(merchant.into()),
+                Value::F64(amount),
+                Value::Bool(false),
+            ],
+        )
+    }
+
+    #[test]
+    fn envelope_roundtrip() {
+        let schema = payments_schema();
+        let env = Envelope {
+            ingest_id: 42,
+            event: ev(1000, "c1", "m1", 9.5),
+        };
+        let buf = env.encode(&schema);
+        assert_eq!(Envelope::decode(&buf, &schema).unwrap(), env);
+        assert!(Envelope::decode(&buf[..buf.len() - 1], &schema).is_err());
+    }
+
+    #[test]
+    fn reply_json_roundtrip() {
+        let msg = ReplyMsg {
+            ingest_id: 7,
+            topic: "payments.card".into(),
+            partition: 3,
+            event_ts: 123,
+            metrics: vec![
+                ReplyMetric {
+                    name: "sum".into(),
+                    group: "c1".into(),
+                    value: Some(10.5),
+                },
+                ReplyMetric {
+                    name: "min".into(),
+                    group: "c1".into(),
+                    value: None,
+                },
+            ],
+        };
+        let back = ReplyMsg::from_json(&Json::parse(&msg.to_json().to_string()).unwrap()).unwrap();
+        assert_eq!(back, msg);
+    }
+
+    #[test]
+    fn register_creates_topics() {
+        let broker = Broker::open(BrokerConfig::in_memory()).unwrap();
+        let fe = FrontEnd::new(broker.clone(), registry(), 4);
+        fe.register_stream(def()).unwrap();
+        assert_eq!(broker.partition_count("payments.card"), Some(4));
+        assert_eq!(broker.partition_count("payments.merchant"), Some(4));
+        assert_eq!(broker.partition_count(REPLY_TOPIC), Some(1));
+        assert!(fe.register_stream(def()).is_err(), "duplicate stream");
+    }
+
+    #[test]
+    fn ingest_replicates_to_entity_topics_keyed_consistently() {
+        let broker = Broker::open(BrokerConfig::in_memory()).unwrap();
+        let fe = FrontEnd::new(broker.clone(), registry(), 4);
+        fe.register_stream(def()).unwrap();
+        let r1 = fe.ingest("payments", ev(1, "c1", "m1", 5.0)).unwrap();
+        assert_eq!(r1.fanout, 2);
+        let r2 = fe.ingest("payments", ev(2, "c1", "m2", 6.0)).unwrap();
+        assert!(r2.ingest_id > r1.ingest_id);
+        // same card ⇒ same partition of the card topic
+        let mut c = broker.consumer("g", &["payments.card"]).unwrap();
+        let mut partitions = std::collections::HashSet::new();
+        loop {
+            let p = c.poll(100, Duration::from_millis(10)).unwrap();
+            if p.records.is_empty() && p.rebalanced.is_none() {
+                break;
+            }
+            for (tp, rec) in p.records {
+                partitions.insert(tp.partition);
+                // envelope decodes with the schema
+                let env = Envelope::decode(&rec.payload, &payments_schema()).unwrap();
+                assert_eq!(env.event.values[0].as_str(), Some("c1"));
+            }
+        }
+        assert_eq!(partitions.len(), 1);
+    }
+
+    #[test]
+    fn ingest_validates_schema() {
+        let broker = Broker::open(BrokerConfig::in_memory()).unwrap();
+        let fe = FrontEnd::new(broker, registry(), 2);
+        fe.register_stream(def()).unwrap();
+        let bad = Event::new(0, vec![Value::I64(1)]);
+        assert!(fe.ingest("payments", bad).is_err());
+        assert!(fe.ingest("nope", ev(0, "c", "m", 1.0)).is_err());
+    }
+
+    #[test]
+    fn ingest_json_end_to_end() {
+        let broker = Broker::open(BrokerConfig::in_memory()).unwrap();
+        let fe = FrontEnd::new(broker, registry(), 2);
+        fe.register_stream(def()).unwrap();
+        let r = fe
+            .ingest_json(
+                "payments",
+                r#"{"timestamp": 5, "card": "c9", "merchant": "m3", "amount": 12.5}"#,
+            )
+            .unwrap();
+        assert_eq!(r.fanout, 2);
+        assert!(fe.ingest_json("payments", r#"{"card": "c9"}"#).is_err());
+    }
+
+    #[test]
+    fn reply_collector_assembles() {
+        let broker = Broker::open(BrokerConfig::in_memory()).unwrap();
+        let fe = FrontEnd::new(broker.clone(), registry(), 2);
+        fe.register_stream(def()).unwrap();
+        let mut rc = fe.reply_collector("collector").unwrap();
+        // simulate two task processors replying for ingest 5
+        let producer = broker.producer();
+        for (topic, p) in [("payments.card", 0u32), ("payments.merchant", 1u32)] {
+            let msg = ReplyMsg {
+                ingest_id: 5,
+                topic: topic.into(),
+                partition: p,
+                event_ts: 1,
+                metrics: vec![],
+            };
+            producer
+                .send(REPLY_TOPIC, 0, 1, vec![], msg.to_json().to_string().into_bytes())
+                .unwrap();
+        }
+        let replies = rc.await_event(5, 2, Duration::from_secs(5)).unwrap();
+        assert_eq!(replies.len(), 2);
+        assert_eq!(rc.pending_events(), 0);
+        // timeout on missing event
+        assert!(rc.await_event(99, 1, Duration::from_millis(30)).is_err());
+    }
+}

@@ -1,0 +1,132 @@
+//! Bloom filter for sstable point-lookup short-circuiting.
+//!
+//! Double hashing (Kirsch–Mitzenmacher): `h_i = h1 + i·h2`, which gives
+//! the asymptotic false-positive rate of k independent hashes from two.
+
+use crate::util::hash::hash64;
+
+/// Immutable bloom filter over a key set.
+#[derive(Debug, Clone)]
+pub struct BloomFilter {
+    bits: Vec<u64>,
+    n_bits: u64,
+    k: u32,
+}
+
+impl BloomFilter {
+    /// Build from keys with the given bits-per-key budget.
+    pub fn build<'a>(keys: impl Iterator<Item = &'a [u8]>, count: usize, bits_per_key: usize) -> Self {
+        let n_bits = ((count.max(1) * bits_per_key) as u64).max(64);
+        // optimal k = ln2 * bits/key, clamped to a sane range
+        let k = ((bits_per_key as f64 * 0.69) as u32).clamp(1, 12);
+        let mut bits = vec![0u64; n_bits.div_ceil(64) as usize];
+        let n_bits = bits.len() as u64 * 64;
+        for key in keys {
+            let h1 = hash64(key);
+            let h2 = h1.rotate_left(23) | 1; // odd ⇒ cycles all residues
+            for i in 0..k {
+                let bit = h1.wrapping_add((i as u64).wrapping_mul(h2)) % n_bits;
+                bits[(bit / 64) as usize] |= 1 << (bit % 64);
+            }
+        }
+        BloomFilter { bits, n_bits, k }
+    }
+
+    /// True if the key *may* be present; false means definitely absent.
+    #[inline]
+    pub fn may_contain(&self, key: &[u8]) -> bool {
+        let h1 = hash64(key);
+        let h2 = h1.rotate_left(23) | 1;
+        for i in 0..self.k {
+            let bit = h1.wrapping_add((i as u64).wrapping_mul(h2)) % self.n_bits;
+            if self.bits[(bit / 64) as usize] & (1 << (bit % 64)) == 0 {
+                return false;
+            }
+        }
+        true
+    }
+
+    /// Serialize (for the sstable footer).
+    pub fn encode(&self, out: &mut Vec<u8>) {
+        crate::util::varint::write_u32(out, self.k);
+        crate::util::varint::write_u64(out, self.bits.len() as u64);
+        for w in &self.bits {
+            out.extend_from_slice(&w.to_le_bytes());
+        }
+    }
+
+    /// Deserialize.
+    pub fn decode(buf: &[u8], pos: &mut usize) -> crate::error::Result<Self> {
+        use crate::util::varint;
+        let k = varint::read_u32(buf, pos)?;
+        let n_words = varint::read_u64(buf, pos)? as usize;
+        let mut bits = Vec::with_capacity(n_words);
+        for _ in 0..n_words {
+            let end = *pos + 8;
+            if end > buf.len() {
+                return Err(crate::error::Error::corrupt("bloom: truncated"));
+            }
+            bits.push(u64::from_le_bytes(buf[*pos..end].try_into().unwrap()));
+            *pos = end;
+        }
+        let n_bits = bits.len() as u64 * 64;
+        Ok(BloomFilter { bits, n_bits, k })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn no_false_negatives() {
+        let keys: Vec<Vec<u8>> = (0..1000).map(|i| format!("key{i}").into_bytes()).collect();
+        let bf = BloomFilter::build(keys.iter().map(|k| k.as_slice()), keys.len(), 10);
+        for k in &keys {
+            assert!(bf.may_contain(k), "false negative for {k:?}");
+        }
+    }
+
+    #[test]
+    fn false_positive_rate_is_low() {
+        let keys: Vec<Vec<u8>> = (0..10_000).map(|i| format!("in{i}").into_bytes()).collect();
+        let bf = BloomFilter::build(keys.iter().map(|k| k.as_slice()), keys.len(), 10);
+        let fp = (0..10_000)
+            .filter(|i| bf.may_contain(format!("out{i}").as_bytes()))
+            .count();
+        // 10 bits/key ⇒ ~1% theoretical; allow 3%
+        assert!(fp < 300, "false positive rate too high: {fp}/10000");
+    }
+
+    #[test]
+    fn empty_filter_rejects() {
+        let bf = BloomFilter::build(std::iter::empty(), 0, 10);
+        assert!(!bf.may_contain(b"anything"));
+    }
+
+    #[test]
+    fn encode_decode_roundtrip() {
+        let keys: Vec<Vec<u8>> = (0..100).map(|i| vec![i as u8, 7]).collect();
+        let bf = BloomFilter::build(keys.iter().map(|k| k.as_slice()), keys.len(), 10);
+        let mut buf = Vec::new();
+        bf.encode(&mut buf);
+        let mut pos = 0;
+        let back = BloomFilter::decode(&buf, &mut pos).unwrap();
+        assert_eq!(pos, buf.len());
+        for k in &keys {
+            assert!(back.may_contain(k));
+        }
+        assert_eq!(back.k, bf.k);
+        assert_eq!(back.bits, bf.bits);
+    }
+
+    #[test]
+    fn truncated_decode_errors() {
+        let keys: Vec<Vec<u8>> = (0..10).map(|i| vec![i as u8]).collect();
+        let bf = BloomFilter::build(keys.iter().map(|k| k.as_slice()), keys.len(), 10);
+        let mut buf = Vec::new();
+        bf.encode(&mut buf);
+        let mut pos = 0;
+        assert!(BloomFilter::decode(&buf[..buf.len() - 3], &mut pos).is_err());
+    }
+}

@@ -1,0 +1,129 @@
+//! In-memory write buffer: sorted map with tombstones.
+
+use std::collections::BTreeMap;
+
+/// Mutable, sorted staging area for recent writes. `None` values are
+/// tombstones (deletions that must shadow older sstable entries).
+#[derive(Debug, Default)]
+pub struct MemTable {
+    map: BTreeMap<Vec<u8>, Option<Vec<u8>>>,
+    approx_bytes: usize,
+}
+
+impl MemTable {
+    /// Empty memtable.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Insert/overwrite.
+    pub fn put(&mut self, key: Vec<u8>, value: Vec<u8>) {
+        self.approx_bytes += key.len() + value.len() + 32;
+        self.map.insert(key, Some(value));
+    }
+
+    /// Tombstone.
+    pub fn delete(&mut self, key: Vec<u8>) {
+        self.approx_bytes += key.len() + 32;
+        self.map.insert(key, None);
+    }
+
+    /// Lookup: `None` = unknown here; `Some(None)` = deleted;
+    /// `Some(Some(v))` = present.
+    pub fn get(&self, key: &[u8]) -> Option<Option<&[u8]>> {
+        self.map.get(key).map(|v| v.as_deref())
+    }
+
+    /// Sorted iteration over entries (including tombstones).
+    pub fn iter(&self) -> impl Iterator<Item = (&[u8], Option<&[u8]>)> {
+        self.map.iter().map(|(k, v)| (k.as_slice(), v.as_deref()))
+    }
+
+    /// Entries whose key starts with `prefix` (including tombstones).
+    pub fn scan_prefix<'a>(
+        &'a self,
+        prefix: &'a [u8],
+    ) -> impl Iterator<Item = (&'a [u8], Option<&'a [u8]>)> + 'a {
+        self.map
+            .range(prefix.to_vec()..)
+            .take_while(move |(k, _)| k.starts_with(prefix))
+            .map(|(k, v)| (k.as_slice(), v.as_deref()))
+    }
+
+    /// Approximate heap usage (flush trigger).
+    pub fn approx_bytes(&self) -> usize {
+        self.approx_bytes
+    }
+
+    /// True when no writes are buffered.
+    pub fn is_empty(&self) -> bool {
+        self.map.is_empty()
+    }
+
+    /// Number of buffered entries (incl. tombstones).
+    #[allow(dead_code)] // API completeness; exercised in tests
+    pub fn len(&self) -> usize {
+        self.map.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn put_get() {
+        let mut m = MemTable::new();
+        assert_eq!(m.get(b"a"), None);
+        m.put(b"a".to_vec(), b"1".to_vec());
+        assert_eq!(m.get(b"a"), Some(Some(b"1".as_slice())));
+    }
+
+    #[test]
+    fn delete_shadows() {
+        let mut m = MemTable::new();
+        m.put(b"a".to_vec(), b"1".to_vec());
+        m.delete(b"a".to_vec());
+        assert_eq!(m.get(b"a"), Some(None), "tombstone visible");
+        // deleting a key never seen still records the tombstone
+        m.delete(b"ghost".to_vec());
+        assert_eq!(m.get(b"ghost"), Some(None));
+    }
+
+    #[test]
+    fn iter_is_sorted_with_tombstones() {
+        let mut m = MemTable::new();
+        m.put(b"c".to_vec(), b"3".to_vec());
+        m.put(b"a".to_vec(), b"1".to_vec());
+        m.delete(b"b".to_vec());
+        let items: Vec<_> = m.iter().collect();
+        assert_eq!(items.len(), 3);
+        assert_eq!(items[0].0, b"a");
+        assert_eq!(items[1], (b"b".as_slice(), None));
+        assert_eq!(items[2].0, b"c");
+    }
+
+    #[test]
+    fn prefix_scan() {
+        let mut m = MemTable::new();
+        m.put(b"m1/a".to_vec(), b"1".to_vec());
+        m.put(b"m1/b".to_vec(), b"2".to_vec());
+        m.put(b"m2/a".to_vec(), b"3".to_vec());
+        let hits: Vec<_> = m.scan_prefix(b"m1/").collect();
+        assert_eq!(hits.len(), 2);
+        let all: Vec<_> = m.scan_prefix(b"").collect();
+        assert_eq!(all.len(), 3);
+        let none: Vec<_> = m.scan_prefix(b"zz").collect();
+        assert!(none.is_empty());
+    }
+
+    #[test]
+    fn bytes_grow() {
+        let mut m = MemTable::new();
+        let b0 = m.approx_bytes();
+        m.put(vec![0; 100], vec![0; 900]);
+        assert!(m.approx_bytes() >= b0 + 1000);
+        assert_eq!(m.len(), 1);
+        assert!(!m.is_empty());
+    }
+}

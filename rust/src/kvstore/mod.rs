@@ -1,0 +1,475 @@
+//! `kvstore` — embedded LSM key-value store (RocksDB replacement,
+//! DESIGN.md §1).
+//!
+//! Railgun persists **aggregation states** here (paper §3.3.2): the state
+//! store sits at the leaves of the plan DAG, keyed by
+//! `(metric id, group-by key)`. The access pattern is write-heavy point
+//! upserts with read-modify-write on the hot path, exactly what an LSM
+//! tree serves: writes hit a WAL + in-memory memtable; flushes produce
+//! immutable sorted tables with bloom filters; size-tiered compaction
+//! keeps read amplification bounded.
+//!
+//! ```
+//! use railgun::kvstore::{Store, StoreOptions};
+//! use railgun::util::tmp::TempDir;
+//! let tmp = TempDir::new("doc");
+//! let store = Store::open(tmp.path(), StoreOptions::default()).unwrap();
+//! store.put(b"k", b"v").unwrap();
+//! assert_eq!(store.get(b"k").unwrap(), Some(b"v".to_vec()));
+//! ```
+
+mod bloom;
+mod memtable;
+mod sstable;
+mod wal;
+
+pub use bloom::BloomFilter;
+
+use crate::error::{Error, Result};
+use memtable::MemTable;
+use sstable::{SsTable, TableBuilder};
+use std::path::{Path, PathBuf};
+use std::sync::Mutex;
+
+/// Tuning knobs for [`Store`].
+#[derive(Debug, Clone)]
+pub struct StoreOptions {
+    /// Flush the memtable to an sstable when it reaches this many bytes.
+    pub memtable_bytes: usize,
+    /// Compact (merge all tables) when the table count exceeds this.
+    pub max_tables: usize,
+    /// fsync the WAL every N writes (0 ⇒ never fsync; flush-only).
+    pub wal_sync_every: u32,
+    /// Bloom filter bits per key.
+    pub bloom_bits_per_key: usize,
+}
+
+impl Default for StoreOptions {
+    fn default() -> Self {
+        StoreOptions {
+            memtable_bytes: 4 << 20,
+            max_tables: 6,
+            wal_sync_every: 0,
+            bloom_bits_per_key: 10,
+        }
+    }
+}
+
+struct StoreInner {
+    mem: MemTable,
+    /// Immutable tables, newest first.
+    tables: Vec<SsTable>,
+    wal: wal::Wal,
+    next_table_id: u64,
+    opts: StoreOptions,
+    dir: PathBuf,
+}
+
+/// An embedded LSM key-value store. Thread-safe (single writer lock — the
+/// paper's task processors are single-threaded, so contention is nil).
+pub struct Store {
+    inner: Mutex<StoreInner>,
+}
+
+impl Store {
+    /// Open (or create) a store in `dir`, replaying the WAL and loading
+    /// table metadata.
+    pub fn open(dir: &Path, opts: StoreOptions) -> Result<Store> {
+        std::fs::create_dir_all(dir)?;
+        // load tables, newest (highest id) first
+        let mut ids: Vec<u64> = Vec::new();
+        for entry in std::fs::read_dir(dir)? {
+            let entry = entry?;
+            let name = entry.file_name().to_string_lossy().to_string();
+            if let Some(stem) = name.strip_suffix(".sst") {
+                ids.push(
+                    stem.parse()
+                        .map_err(|_| Error::corrupt(format!("bad sstable name {name}")))?,
+                );
+            }
+        }
+        ids.sort_unstable_by(|a, b| b.cmp(a));
+        let mut tables = Vec::with_capacity(ids.len());
+        for id in &ids {
+            tables.push(SsTable::open(&table_path(dir, *id))?);
+        }
+        let next_table_id = ids.first().map(|m| m + 1).unwrap_or(0);
+
+        // replay WAL into a fresh memtable
+        let mut mem = MemTable::new();
+        let wal_path = dir.join("wal.log");
+        for op in wal::replay(&wal_path)? {
+            match op {
+                wal::Op::Put(k, v) => mem.put(k, v),
+                wal::Op::Delete(k) => mem.delete(k),
+            }
+        }
+        let wal = wal::Wal::append_to(&wal_path, opts.wal_sync_every)?;
+        Ok(Store {
+            inner: Mutex::new(StoreInner {
+                mem,
+                tables,
+                wal,
+                next_table_id,
+                opts,
+                dir: dir.to_path_buf(),
+            }),
+        })
+    }
+
+    /// Insert or overwrite a key.
+    pub fn put(&self, key: &[u8], value: &[u8]) -> Result<()> {
+        let mut inner = self.inner.lock().unwrap();
+        inner.wal.append_put(key, value)?;
+        inner.mem.put(key.to_vec(), value.to_vec());
+        self.maybe_flush(&mut inner)
+    }
+
+    /// Delete a key (tombstone).
+    pub fn delete(&self, key: &[u8]) -> Result<()> {
+        let mut inner = self.inner.lock().unwrap();
+        inner.wal.append_delete(key)?;
+        inner.mem.delete(key.to_vec());
+        self.maybe_flush(&mut inner)
+    }
+
+    /// Point lookup.
+    pub fn get(&self, key: &[u8]) -> Result<Option<Vec<u8>>> {
+        let inner = self.inner.lock().unwrap();
+        // 1. memtable (includes tombstones)
+        if let Some(v) = inner.mem.get(key) {
+            return Ok(v.map(|s| s.to_vec()));
+        }
+        // 2. tables newest→oldest
+        for t in &inner.tables {
+            if let Some(v) = t.get(key)? {
+                return Ok(v);
+            }
+        }
+        Ok(None)
+    }
+
+    /// All live `(key, value)` pairs with the given prefix, sorted by key.
+    ///
+    /// Cold-path API (checkpoint inspection, metric enumeration) — merges
+    /// the memtable with every table.
+    pub fn scan_prefix(&self, prefix: &[u8]) -> Result<Vec<(Vec<u8>, Vec<u8>)>> {
+        let inner = self.inner.lock().unwrap();
+        use std::collections::BTreeMap;
+        let mut merged: BTreeMap<Vec<u8>, Option<Vec<u8>>> = BTreeMap::new();
+        // oldest → newest so newer wins
+        for t in inner.tables.iter().rev() {
+            for (k, v) in t.scan_prefix(prefix)? {
+                merged.insert(k, v);
+            }
+        }
+        for (k, v) in inner.mem.scan_prefix(prefix) {
+            merged.insert(k.to_vec(), v.map(|s| s.to_vec()));
+        }
+        Ok(merged
+            .into_iter()
+            .filter_map(|(k, v)| v.map(|v| (k, v)))
+            .collect())
+    }
+
+    /// Force-flush the memtable to an sstable (checkpoint barrier).
+    pub fn flush(&self) -> Result<()> {
+        let mut inner = self.inner.lock().unwrap();
+        self.flush_locked(&mut inner)
+    }
+
+    /// Number of immutable tables (compaction observability).
+    pub fn table_count(&self) -> usize {
+        self.inner.lock().unwrap().tables.len()
+    }
+
+    /// Approximate bytes buffered in the memtable.
+    pub fn memtable_bytes(&self) -> usize {
+        self.inner.lock().unwrap().mem.approx_bytes()
+    }
+
+    fn maybe_flush(&self, inner: &mut StoreInner) -> Result<()> {
+        if inner.mem.approx_bytes() >= inner.opts.memtable_bytes {
+            self.flush_locked(inner)?;
+        }
+        Ok(())
+    }
+
+    fn flush_locked(&self, inner: &mut StoreInner) -> Result<()> {
+        if inner.mem.is_empty() {
+            return Ok(());
+        }
+        let id = inner.next_table_id;
+        inner.next_table_id += 1;
+        let path = table_path(&inner.dir, id);
+        let mut b = TableBuilder::create(&path, inner.opts.bloom_bits_per_key)?;
+        for (k, v) in inner.mem.iter() {
+            b.add(k, v)?;
+        }
+        let table = b.finish()?;
+        inner.tables.insert(0, table);
+        inner.mem = MemTable::new();
+        // WAL entries are now durable in the table: start a fresh WAL
+        inner.wal = wal::Wal::create(&inner.dir.join("wal.log"), inner.opts.wal_sync_every)?;
+        if inner.tables.len() > inner.opts.max_tables {
+            self.compact_locked(inner)?;
+        }
+        Ok(())
+    }
+
+    /// Merge every table into one (size-tiered full compaction).
+    /// Tombstones are dropped — after a full merge nothing older can
+    /// resurrect.
+    fn compact_locked(&self, inner: &mut StoreInner) -> Result<()> {
+        use std::collections::BTreeMap;
+        let mut merged: BTreeMap<Vec<u8>, Option<Vec<u8>>> = BTreeMap::new();
+        for t in inner.tables.iter().rev() {
+            for (k, v) in t.scan_all()? {
+                merged.insert(k, v);
+            }
+        }
+        let id = inner.next_table_id;
+        inner.next_table_id += 1;
+        let path = table_path(&inner.dir, id);
+        let mut b = TableBuilder::create(&path, inner.opts.bloom_bits_per_key)?;
+        for (k, v) in &merged {
+            if let Some(v) = v {
+                b.add(k, Some(v))?;
+            }
+            // full compaction: drop tombstones entirely
+        }
+        let table = b.finish()?;
+        let old: Vec<PathBuf> = inner.tables.iter().map(|t| t.path().to_path_buf()).collect();
+        inner.tables = vec![table];
+        for p in old {
+            let _ = std::fs::remove_file(p);
+        }
+        Ok(())
+    }
+}
+
+fn table_path(dir: &Path, id: u64) -> PathBuf {
+    dir.join(format!("{id:012}.sst"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::propcheck::{check, Shrink};
+    use crate::util::tmp::TempDir;
+    use std::collections::HashMap;
+
+    fn small_opts() -> StoreOptions {
+        StoreOptions {
+            memtable_bytes: 1024, // force frequent flushes
+            max_tables: 3,
+            wal_sync_every: 0,
+            bloom_bits_per_key: 10,
+        }
+    }
+
+    #[test]
+    fn put_get_delete() {
+        let tmp = TempDir::new("kv_basic");
+        let s = Store::open(tmp.path(), StoreOptions::default()).unwrap();
+        assert_eq!(s.get(b"a").unwrap(), None);
+        s.put(b"a", b"1").unwrap();
+        s.put(b"b", b"2").unwrap();
+        assert_eq!(s.get(b"a").unwrap(), Some(b"1".to_vec()));
+        s.put(b"a", b"1x").unwrap();
+        assert_eq!(s.get(b"a").unwrap(), Some(b"1x".to_vec()));
+        s.delete(b"a").unwrap();
+        assert_eq!(s.get(b"a").unwrap(), None);
+        assert_eq!(s.get(b"b").unwrap(), Some(b"2".to_vec()));
+    }
+
+    #[test]
+    fn survives_flush_boundaries() {
+        let tmp = TempDir::new("kv_flush");
+        let s = Store::open(tmp.path(), small_opts()).unwrap();
+        for i in 0..500 {
+            s.put(format!("key{i:05}").as_bytes(), format!("val{i}").as_bytes())
+                .unwrap();
+        }
+        assert!(s.table_count() >= 1, "flushes happened");
+        for i in 0..500 {
+            assert_eq!(
+                s.get(format!("key{i:05}").as_bytes()).unwrap(),
+                Some(format!("val{i}").into_bytes()),
+                "key{i}"
+            );
+        }
+    }
+
+    #[test]
+    fn overwrites_across_tables_newest_wins() {
+        let tmp = TempDir::new("kv_overwrite");
+        let s = Store::open(tmp.path(), small_opts()).unwrap();
+        for round in 0..5 {
+            for i in 0..100 {
+                s.put(
+                    format!("k{i:03}").as_bytes(),
+                    format!("r{round}").as_bytes(),
+                )
+                .unwrap();
+            }
+            s.flush().unwrap();
+        }
+        for i in 0..100 {
+            assert_eq!(
+                s.get(format!("k{i:03}").as_bytes()).unwrap(),
+                Some(b"r4".to_vec())
+            );
+        }
+    }
+
+    #[test]
+    fn deletes_survive_compaction() {
+        let tmp = TempDir::new("kv_del_compact");
+        let s = Store::open(tmp.path(), small_opts()).unwrap();
+        for i in 0..200 {
+            s.put(format!("k{i:03}").as_bytes(), b"v").unwrap();
+        }
+        s.flush().unwrap();
+        for i in 0..100 {
+            s.delete(format!("k{i:03}").as_bytes()).unwrap();
+        }
+        // force enough flushes to trigger compaction
+        for round in 0..5 {
+            for i in 200..260 {
+                s.put(format!("x{round}{i}").as_bytes(), b"y").unwrap();
+            }
+            s.flush().unwrap();
+        }
+        assert!(s.table_count() <= 3, "compaction ran");
+        for i in 0..100 {
+            assert_eq!(s.get(format!("k{i:03}").as_bytes()).unwrap(), None, "k{i}");
+        }
+        for i in 100..200 {
+            assert_eq!(
+                s.get(format!("k{i:03}").as_bytes()).unwrap(),
+                Some(b"v".to_vec())
+            );
+        }
+    }
+
+    #[test]
+    fn wal_recovery_restores_unflushed_writes() {
+        let tmp = TempDir::new("kv_walrec");
+        {
+            let s = Store::open(tmp.path(), StoreOptions::default()).unwrap();
+            s.put(b"persisted", b"yes").unwrap();
+            s.delete(b"ghost").unwrap();
+            // no flush — data only in WAL + memtable
+        }
+        let s = Store::open(tmp.path(), StoreOptions::default()).unwrap();
+        assert_eq!(s.get(b"persisted").unwrap(), Some(b"yes".to_vec()));
+        assert_eq!(s.get(b"ghost").unwrap(), None);
+    }
+
+    #[test]
+    fn full_reopen_with_tables_and_wal() {
+        let tmp = TempDir::new("kv_reopen");
+        {
+            let s = Store::open(tmp.path(), small_opts()).unwrap();
+            for i in 0..300 {
+                s.put(format!("k{i:04}").as_bytes(), format!("v{i}").as_bytes())
+                    .unwrap();
+            }
+        }
+        let s = Store::open(tmp.path(), small_opts()).unwrap();
+        for i in 0..300 {
+            assert_eq!(
+                s.get(format!("k{i:04}").as_bytes()).unwrap(),
+                Some(format!("v{i}").into_bytes())
+            );
+        }
+    }
+
+    #[test]
+    fn scan_prefix_merges_all_sources() {
+        let tmp = TempDir::new("kv_scan");
+        let s = Store::open(tmp.path(), small_opts()).unwrap();
+        s.put(b"m1/card_a", b"1").unwrap();
+        s.put(b"m1/card_b", b"2").unwrap();
+        s.put(b"m2/card_a", b"3").unwrap();
+        s.flush().unwrap();
+        s.put(b"m1/card_c", b"4").unwrap(); // memtable only
+        s.delete(b"m1/card_a").unwrap(); // tombstone in memtable
+        let rows = s.scan_prefix(b"m1/").unwrap();
+        assert_eq!(
+            rows,
+            vec![
+                (b"m1/card_b".to_vec(), b"2".to_vec()),
+                (b"m1/card_c".to_vec(), b"4".to_vec()),
+            ]
+        );
+    }
+
+    #[test]
+    fn empty_value_and_binary_keys() {
+        let tmp = TempDir::new("kv_binary");
+        let s = Store::open(tmp.path(), StoreOptions::default()).unwrap();
+        let key = [0u8, 255, 1, 254, 0];
+        s.put(&key, b"").unwrap();
+        assert_eq!(s.get(&key).unwrap(), Some(vec![]));
+        s.flush().unwrap();
+        assert_eq!(s.get(&key).unwrap(), Some(vec![]));
+    }
+
+    /// Property: a Store behaves exactly like a HashMap under random
+    /// put/delete/get/flush sequences (get-after-put under compaction).
+    #[test]
+    fn property_store_matches_hashmap_model() {
+        #[derive(Debug, Clone)]
+        enum Op {
+            Put(u8, u8),
+            Del(u8),
+            Flush,
+        }
+        impl Shrink for Op {}
+        check(
+            "kvstore == hashmap model",
+            30,
+            |rng| {
+                let n = rng.index(120) + 5;
+                (0..n)
+                    .map(|_| match rng.index(5) {
+                        0 => Op::Del(rng.next_below(20) as u8),
+                        1 => Op::Flush,
+                        _ => Op::Put(rng.next_below(20) as u8, rng.next_below(255) as u8),
+                    })
+                    .collect::<Vec<Op>>()
+            },
+            |ops| {
+                let tmp = TempDir::new("kv_prop");
+                let s = Store::open(tmp.path(), small_opts()).unwrap();
+                let mut model: HashMap<Vec<u8>, Vec<u8>> = HashMap::new();
+                for op in ops {
+                    match op {
+                        Op::Put(k, v) => {
+                            let key = vec![b'k', *k];
+                            s.put(&key, &[*v]).map_err(|e| e.to_string())?;
+                            model.insert(key, vec![*v]);
+                        }
+                        Op::Del(k) => {
+                            let key = vec![b'k', *k];
+                            s.delete(&key).map_err(|e| e.to_string())?;
+                            model.remove(&key);
+                        }
+                        Op::Flush => s.flush().map_err(|e| e.to_string())?,
+                    }
+                }
+                for k in 0..20u8 {
+                    let key = vec![b'k', k];
+                    let got = s.get(&key).map_err(|e| e.to_string())?;
+                    let want = model.get(&key).cloned();
+                    if got != want {
+                        return Err(format!("key {k}: store={got:?} model={want:?}"));
+                    }
+                }
+                Ok(())
+            },
+        );
+    }
+}

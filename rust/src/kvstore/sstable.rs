@@ -1,0 +1,415 @@
+//! Immutable sorted string tables.
+//!
+//! Layout:
+//!
+//! ```text
+//! file   := entry* index bloom footer
+//! entry  := tag:u8 keylen:varint key [vallen:varint value]   tag: 1=put 0=del
+//! index  := count:varint (keylen:varint key offset:varint)*  every Nth entry
+//! footer := index_off:u64 bloom_off:u64 entries:u64 magic:u32   (28 bytes)
+//! ```
+//!
+//! The sparse index and bloom filter are resident in memory after open;
+//! `get` does one bounded `read_exact_at` of the relevant entry run, so a
+//! point lookup costs at most one disk read.
+
+use crate::error::{Error, Result};
+use crate::kvstore::bloom::BloomFilter;
+use crate::util::varint;
+use byteorder::{ByteOrder, LittleEndian};
+use std::fs::File;
+use std::io::{BufWriter, Write};
+use std::os::unix::fs::FileExt;
+use std::path::{Path, PathBuf};
+
+const MAGIC: u32 = 0x5354_4247; // "SBTG"
+const FOOTER_LEN: u64 = 28;
+/// One sparse-index entry every this many data entries.
+const INDEX_EVERY: usize = 16;
+
+/// Streaming sstable writer (keys must be added in sorted order).
+pub struct TableBuilder {
+    path: PathBuf,
+    file: BufWriter<File>,
+    offset: u64,
+    index: Vec<(Vec<u8>, u64)>,
+    keys: Vec<Vec<u8>>,
+    count: u64,
+    last_key: Option<Vec<u8>>,
+    bits_per_key: usize,
+}
+
+impl TableBuilder {
+    /// Create a new table file.
+    pub fn create(path: &Path, bits_per_key: usize) -> Result<TableBuilder> {
+        let file = File::create(path)?;
+        Ok(TableBuilder {
+            path: path.to_path_buf(),
+            file: BufWriter::new(file),
+            offset: 0,
+            index: Vec::new(),
+            keys: Vec::new(),
+            count: 0,
+            last_key: None,
+            bits_per_key,
+        })
+    }
+
+    /// Append an entry (`None` value = tombstone). Keys must arrive in
+    /// strictly increasing order.
+    pub fn add(&mut self, key: &[u8], value: Option<&[u8]>) -> Result<()> {
+        if let Some(last) = &self.last_key {
+            if key <= last.as_slice() {
+                return Err(Error::internal("sstable: keys must be strictly sorted"));
+            }
+        }
+        if self.count as usize % INDEX_EVERY == 0 {
+            self.index.push((key.to_vec(), self.offset));
+        }
+        let mut buf = Vec::with_capacity(key.len() + value.map_or(0, |v| v.len()) + 12);
+        match value {
+            Some(v) => {
+                buf.push(1);
+                varint::write_bytes(&mut buf, key);
+                varint::write_bytes(&mut buf, v);
+            }
+            None => {
+                buf.push(0);
+                varint::write_bytes(&mut buf, key);
+            }
+        }
+        self.file.write_all(&buf)?;
+        self.offset += buf.len() as u64;
+        self.keys.push(key.to_vec());
+        self.count += 1;
+        self.last_key = Some(key.to_vec());
+        Ok(())
+    }
+
+    /// Finish writing (index + bloom + footer) and open for reading.
+    pub fn finish(mut self) -> Result<SsTable> {
+        let index_off = self.offset;
+        let mut buf = Vec::new();
+        varint::write_u64(&mut buf, self.index.len() as u64);
+        for (k, off) in &self.index {
+            varint::write_bytes(&mut buf, k);
+            varint::write_u64(&mut buf, *off);
+        }
+        let bloom_off = index_off + buf.len() as u64;
+        let bloom = BloomFilter::build(
+            self.keys.iter().map(|k| k.as_slice()),
+            self.keys.len(),
+            self.bits_per_key,
+        );
+        bloom.encode(&mut buf);
+        let mut footer = [0u8; FOOTER_LEN as usize];
+        LittleEndian::write_u64(&mut footer[0..8], index_off);
+        LittleEndian::write_u64(&mut footer[8..16], bloom_off);
+        LittleEndian::write_u64(&mut footer[16..24], self.count);
+        LittleEndian::write_u32(&mut footer[24..28], MAGIC);
+        self.file.write_all(&buf)?;
+        self.file.write_all(&footer)?;
+        self.file.flush()?;
+        self.file.get_ref().sync_data()?;
+        drop(self.file);
+        SsTable::open(&self.path)
+    }
+}
+
+/// An open, immutable sstable.
+pub struct SsTable {
+    path: PathBuf,
+    file: File,
+    index: Vec<(Vec<u8>, u64)>,
+    bloom: BloomFilter,
+    data_len: u64,
+    count: u64,
+}
+
+impl std::fmt::Debug for SsTable {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("SsTable")
+            .field("path", &self.path)
+            .field("count", &self.count)
+            .finish()
+    }
+}
+
+impl SsTable {
+    /// Open a table, loading index + bloom into memory.
+    pub fn open(path: &Path) -> Result<SsTable> {
+        let file = File::open(path)?;
+        let len = file.metadata()?.len();
+        if len < FOOTER_LEN {
+            return Err(Error::corrupt(format!("sstable {path:?}: too short")));
+        }
+        let mut footer = [0u8; FOOTER_LEN as usize];
+        file.read_exact_at(&mut footer, len - FOOTER_LEN)?;
+        if LittleEndian::read_u32(&footer[24..28]) != MAGIC {
+            return Err(Error::corrupt(format!("sstable {path:?}: bad magic")));
+        }
+        let index_off = LittleEndian::read_u64(&footer[0..8]);
+        let bloom_off = LittleEndian::read_u64(&footer[8..16]);
+        let count = LittleEndian::read_u64(&footer[16..24]);
+        if index_off > bloom_off || bloom_off > len - FOOTER_LEN {
+            return Err(Error::corrupt(format!("sstable {path:?}: bad offsets")));
+        }
+        let mut meta = vec![0u8; (len - FOOTER_LEN - index_off) as usize];
+        file.read_exact_at(&mut meta, index_off)?;
+        let mut pos = 0usize;
+        let n = varint::read_u64(&meta, &mut pos)? as usize;
+        let mut index = Vec::with_capacity(n);
+        for _ in 0..n {
+            let k = varint::read_bytes(&meta, &mut pos)?.to_vec();
+            let off = varint::read_u64(&meta, &mut pos)?;
+            index.push((k, off));
+        }
+        if pos != (bloom_off - index_off) as usize {
+            return Err(Error::corrupt("sstable: index length mismatch"));
+        }
+        let bloom = BloomFilter::decode(&meta, &mut pos)?;
+        Ok(SsTable {
+            path: path.to_path_buf(),
+            file,
+            index,
+            bloom,
+            data_len: index_off,
+            count,
+        })
+    }
+
+    /// Path of the table file.
+    pub fn path(&self) -> &Path {
+        &self.path
+    }
+
+    /// Number of entries (incl. tombstones).
+    #[allow(dead_code)] // API completeness; exercised in tests
+    pub fn len(&self) -> u64 {
+        self.count
+    }
+
+    /// True if the table holds no entries.
+    #[allow(dead_code)]
+    pub fn is_empty(&self) -> bool {
+        self.count == 0
+    }
+
+    /// Point lookup. `Ok(None)` = not in this table;
+    /// `Ok(Some(None))` = tombstoned here; `Ok(Some(Some(v)))` = live.
+    pub fn get(&self, key: &[u8]) -> Result<Option<Option<Vec<u8>>>> {
+        if self.index.is_empty() || !self.bloom.may_contain(key) {
+            return Ok(None);
+        }
+        // greatest index entry with key ≤ target
+        let slot = match self.index.binary_search_by(|(k, _)| k.as_slice().cmp(key)) {
+            Ok(i) => i,
+            Err(0) => return Ok(None), // smaller than the first key
+            Err(i) => i - 1,
+        };
+        let start = self.index[slot].1;
+        let end = self
+            .index
+            .get(slot + 1)
+            .map(|(_, off)| *off)
+            .unwrap_or(self.data_len);
+        let mut run = vec![0u8; (end - start) as usize];
+        self.file.read_exact_at(&mut run, start)?;
+        let mut pos = 0usize;
+        while pos < run.len() {
+            let (k, v, next) = decode_entry(&run, pos)?;
+            if k == key {
+                return Ok(Some(v.map(|s| s.to_vec())));
+            }
+            if k > key {
+                break;
+            }
+            pos = next;
+        }
+        Ok(None)
+    }
+
+    /// Sequential scan of entries with prefix (includes tombstones).
+    pub fn scan_prefix(&self, prefix: &[u8]) -> Result<Vec<(Vec<u8>, Option<Vec<u8>>)>> {
+        let mut data = vec![0u8; self.data_len as usize];
+        self.file.read_exact_at(&mut data, 0)?;
+        let mut out = Vec::new();
+        let mut pos = 0usize;
+        while pos < data.len() {
+            let (k, v, next) = decode_entry(&data, pos)?;
+            if k.starts_with(prefix) {
+                out.push((k.to_vec(), v.map(|s| s.to_vec())));
+            }
+            pos = next;
+        }
+        Ok(out)
+    }
+
+    /// Full scan (compaction input).
+    pub fn scan_all(&self) -> Result<Vec<(Vec<u8>, Option<Vec<u8>>)>> {
+        self.scan_prefix(&[])
+    }
+}
+
+/// Decode one entry at `pos`; returns (key, value, next_pos).
+fn decode_entry(buf: &[u8], mut pos: usize) -> Result<(&[u8], Option<&[u8]>, usize)> {
+    let tag = *buf
+        .get(pos)
+        .ok_or_else(|| Error::corrupt("sstable: truncated tag"))?;
+    pos += 1;
+    let key = varint::read_bytes(buf, &mut pos)?;
+    match tag {
+        1 => {
+            let val = varint::read_bytes(buf, &mut pos)?;
+            Ok((key, Some(val), pos))
+        }
+        0 => Ok((key, None, pos)),
+        t => Err(Error::corrupt(format!("sstable: bad tag {t}"))),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::tmp::TempDir;
+
+    fn build(entries: &[(&[u8], Option<&[u8]>)]) -> (TempDir, SsTable) {
+        let tmp = TempDir::new("sst");
+        let mut b = TableBuilder::create(&tmp.join("t.sst"), 10).unwrap();
+        for (k, v) in entries {
+            b.add(k, *v).unwrap();
+        }
+        let t = b.finish().unwrap();
+        (tmp, t)
+    }
+
+    #[test]
+    fn get_hits_and_misses() {
+        let entries: Vec<(Vec<u8>, Option<Vec<u8>>)> = (0..100)
+            .map(|i| {
+                (
+                    format!("key{i:04}").into_bytes(),
+                    Some(format!("val{i}").into_bytes()),
+                )
+            })
+            .collect();
+        let refs: Vec<(&[u8], Option<&[u8]>)> = entries
+            .iter()
+            .map(|(k, v)| (k.as_slice(), v.as_deref()))
+            .collect();
+        let (_tmp, t) = build(&refs);
+        assert_eq!(t.len(), 100);
+        for i in 0..100 {
+            assert_eq!(
+                t.get(format!("key{i:04}").as_bytes()).unwrap(),
+                Some(Some(format!("val{i}").into_bytes()))
+            );
+        }
+        assert_eq!(t.get(b"key9999").unwrap(), None);
+        assert_eq!(t.get(b"aaa").unwrap(), None, "below first key");
+        assert_eq!(t.get(b"zzz").unwrap(), None, "above last key");
+    }
+
+    #[test]
+    fn tombstones_are_distinguished_from_absent() {
+        let (_tmp, t) = build(&[(b"a", Some(b"1")), (b"b", None), (b"c", Some(b"3"))]);
+        assert_eq!(t.get(b"a").unwrap(), Some(Some(b"1".to_vec())));
+        assert_eq!(t.get(b"b").unwrap(), Some(None), "tombstone");
+        assert_eq!(t.get(b"x").unwrap(), None, "absent");
+    }
+
+    #[test]
+    fn unsorted_keys_rejected() {
+        let tmp = TempDir::new("sst_unsorted");
+        let mut b = TableBuilder::create(&tmp.join("t.sst"), 10).unwrap();
+        b.add(b"b", Some(b"1")).unwrap();
+        assert!(b.add(b"a", Some(b"2")).is_err());
+        assert!(b.add(b"b", Some(b"2")).is_err(), "duplicates rejected");
+    }
+
+    #[test]
+    fn scan_prefix_returns_sorted_subset() {
+        let (_tmp, t) = build(&[
+            (b"m1/a", Some(b"1")),
+            (b"m1/b", None),
+            (b"m2/a", Some(b"2")),
+        ]);
+        let rows = t.scan_prefix(b"m1/").unwrap();
+        assert_eq!(rows.len(), 2);
+        assert_eq!(rows[0], (b"m1/a".to_vec(), Some(b"1".to_vec())));
+        assert_eq!(rows[1], (b"m1/b".to_vec(), None));
+    }
+
+    #[test]
+    fn reopen_preserves_everything() {
+        let entries: Vec<(Vec<u8>, Option<Vec<u8>>)> = (0..50)
+            .map(|i| (vec![i as u8, 0, 255], Some(vec![i as u8; i])))
+            .collect();
+        let tmp = TempDir::new("sst_reopen");
+        let path = tmp.join("t.sst");
+        {
+            let mut b = TableBuilder::create(&path, 10).unwrap();
+            for (k, v) in &entries {
+                b.add(k, v.as_deref()).unwrap();
+            }
+            b.finish().unwrap();
+        }
+        let t = SsTable::open(&path).unwrap();
+        for (k, v) in &entries {
+            assert_eq!(t.get(k).unwrap(), Some(v.clone()));
+        }
+    }
+
+    #[test]
+    fn corrupt_magic_rejected() {
+        let tmp = TempDir::new("sst_magic");
+        let path = tmp.join("t.sst");
+        {
+            let mut b = TableBuilder::create(&path, 10).unwrap();
+            b.add(b"a", Some(b"1")).unwrap();
+            b.finish().unwrap();
+        }
+        let mut data = std::fs::read(&path).unwrap();
+        let n = data.len();
+        data[n - 1] ^= 0xff;
+        std::fs::write(&path, &data).unwrap();
+        assert!(SsTable::open(&path).is_err());
+    }
+
+    #[test]
+    fn empty_table_works() {
+        let tmp = TempDir::new("sst_empty");
+        let b = TableBuilder::create(&tmp.join("t.sst"), 10).unwrap();
+        let t = b.finish().unwrap();
+        assert!(t.is_empty());
+        assert_eq!(t.get(b"anything").unwrap(), None);
+        assert!(t.scan_all().unwrap().is_empty());
+    }
+
+    #[test]
+    fn large_table_spanning_many_index_runs() {
+        let entries: Vec<(Vec<u8>, Option<Vec<u8>>)> = (0..2000)
+            .map(|i| {
+                (
+                    format!("{i:08}").into_bytes(),
+                    Some(i.to_string().into_bytes()),
+                )
+            })
+            .collect();
+        let refs: Vec<(&[u8], Option<&[u8]>)> = entries
+            .iter()
+            .map(|(k, v)| (k.as_slice(), v.as_deref()))
+            .collect();
+        let (_tmp, t) = build(&refs);
+        // probe boundaries of index runs
+        for i in [0usize, 15, 16, 17, 31, 32, 1000, 1999] {
+            assert_eq!(
+                t.get(format!("{i:08}").as_bytes()).unwrap(),
+                Some(Some(i.to_string().into_bytes())),
+                "entry {i}"
+            );
+        }
+        // absent keys between entries
+        assert_eq!(t.get(b"00000000x").unwrap(), None);
+    }
+}

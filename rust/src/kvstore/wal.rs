@@ -1,0 +1,216 @@
+//! Write-ahead log for the memtable.
+//!
+//! Frame: `crc32:u32 len:u32 body`, where
+//! `body := tag:u8 keylen:varint key [value]` (tag 1 = put, 0 = delete).
+//! Torn tails are truncated on replay (same recovery contract as
+//! [`crate::mlog::segment`]).
+
+use crate::error::Result;
+use crate::util::varint;
+use byteorder::{ByteOrder, LittleEndian};
+use std::fs::{File, OpenOptions};
+use std::io::{BufWriter, Read, Write};
+use std::path::Path;
+
+/// A logged operation.
+#[derive(Debug, PartialEq)]
+pub enum Op {
+    /// Key upsert.
+    Put(Vec<u8>, Vec<u8>),
+    /// Key tombstone.
+    Delete(Vec<u8>),
+}
+
+/// Append-only WAL writer.
+pub struct Wal {
+    file: BufWriter<File>,
+    sync_every: u32,
+    since_sync: u32,
+    scratch: Vec<u8>,
+}
+
+impl Wal {
+    /// Create/truncate the WAL (after a memtable flush).
+    pub fn create(path: &Path, sync_every: u32) -> Result<Wal> {
+        let file = OpenOptions::new()
+            .create(true)
+            .write(true)
+            .truncate(true)
+            .open(path)?;
+        Ok(Wal {
+            file: BufWriter::new(file),
+            sync_every,
+            since_sync: 0,
+            scratch: Vec::with_capacity(256),
+        })
+    }
+
+    /// Open for appending (on store open, after replay).
+    pub fn append_to(path: &Path, sync_every: u32) -> Result<Wal> {
+        let file = OpenOptions::new().create(true).append(true).open(path)?;
+        Ok(Wal {
+            file: BufWriter::new(file),
+            sync_every,
+            since_sync: 0,
+            scratch: Vec::with_capacity(256),
+        })
+    }
+
+    /// Log a put.
+    pub fn append_put(&mut self, key: &[u8], value: &[u8]) -> Result<()> {
+        self.scratch.clear();
+        self.scratch.push(1);
+        varint::write_bytes(&mut self.scratch, key);
+        self.scratch.extend_from_slice(value);
+        self.write_frame()
+    }
+
+    /// Log a delete.
+    pub fn append_delete(&mut self, key: &[u8]) -> Result<()> {
+        self.scratch.clear();
+        self.scratch.push(0);
+        varint::write_bytes(&mut self.scratch, key);
+        self.write_frame()
+    }
+
+    fn write_frame(&mut self) -> Result<()> {
+        let mut header = [0u8; 8];
+        LittleEndian::write_u32(&mut header[0..4], crc32fast::hash(&self.scratch));
+        LittleEndian::write_u32(&mut header[4..8], self.scratch.len() as u32);
+        self.file.write_all(&header)?;
+        self.file.write_all(&self.scratch)?;
+        // Perf (EXPERIMENTS.md §Perf): frames stay in the BufWriter — no
+        // per-write flush syscall on the hot path. BufWriter flushes when
+        // full and on drop (graceful shutdown), so WAL replay still
+        // recovers a cleanly-stopped store; a hard crash loses only the
+        // buffered tail, which the reservoir-replay recovery contract
+        // rebuilds anyway (DESIGN.md).
+        if self.sync_every > 0 {
+            self.since_sync += 1;
+            if self.since_sync >= self.sync_every {
+                self.file.flush()?;
+                self.file.get_ref().sync_data()?;
+                self.since_sync = 0;
+            }
+        }
+        Ok(())
+    }
+}
+
+/// Replay all intact frames; missing file ⇒ empty.
+pub fn replay(path: &Path) -> Result<Vec<Op>> {
+    let mut buf = Vec::new();
+    match File::open(path) {
+        Ok(mut f) => {
+            f.read_to_end(&mut buf)?;
+        }
+        Err(e) if e.kind() == std::io::ErrorKind::NotFound => return Ok(Vec::new()),
+        Err(e) => return Err(e.into()),
+    }
+    let mut ops = Vec::new();
+    let mut pos = 0usize;
+    while pos + 8 <= buf.len() {
+        let crc = LittleEndian::read_u32(&buf[pos..pos + 4]);
+        let len = LittleEndian::read_u32(&buf[pos + 4..pos + 8]) as usize;
+        let start = pos + 8;
+        let end = match start.checked_add(len) {
+            Some(e) if e <= buf.len() => e,
+            _ => break,
+        };
+        let body = &buf[start..end];
+        if crc32fast::hash(body) != crc {
+            break;
+        }
+        let mut p = 1usize;
+        let key = varint::read_bytes(body, &mut p)?.to_vec();
+        match body[0] {
+            1 => ops.push(Op::Put(key, body[p..].to_vec())),
+            0 => ops.push(Op::Delete(key)),
+            t => {
+                return Err(crate::error::Error::corrupt(format!(
+                    "wal: unknown op tag {t}"
+                )))
+            }
+        }
+        pos = end;
+    }
+    Ok(ops)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::tmp::TempDir;
+
+    #[test]
+    fn replay_roundtrip() {
+        let tmp = TempDir::new("wal_rt");
+        let path = tmp.join("wal.log");
+        {
+            let mut w = Wal::create(&path, 0).unwrap();
+            w.append_put(b"a", b"1").unwrap();
+            w.append_delete(b"b").unwrap();
+            w.append_put(b"c", b"").unwrap();
+        }
+        let ops = replay(&path).unwrap();
+        assert_eq!(
+            ops,
+            vec![
+                Op::Put(b"a".to_vec(), b"1".to_vec()),
+                Op::Delete(b"b".to_vec()),
+                Op::Put(b"c".to_vec(), vec![]),
+            ]
+        );
+    }
+
+    #[test]
+    fn missing_wal_is_empty() {
+        let tmp = TempDir::new("wal_missing");
+        assert!(replay(&tmp.join("nope.log")).unwrap().is_empty());
+    }
+
+    #[test]
+    fn torn_tail_truncated() {
+        let tmp = TempDir::new("wal_torn");
+        let path = tmp.join("wal.log");
+        {
+            let mut w = Wal::create(&path, 0).unwrap();
+            for i in 0..10u8 {
+                w.append_put(&[i], &[i, i]).unwrap();
+            }
+        }
+        let data = std::fs::read(&path).unwrap();
+        std::fs::write(&path, &data[..data.len() - 3]).unwrap();
+        let ops = replay(&path).unwrap();
+        assert_eq!(ops.len(), 9);
+    }
+
+    #[test]
+    fn append_to_continues_existing() {
+        let tmp = TempDir::new("wal_append");
+        let path = tmp.join("wal.log");
+        {
+            let mut w = Wal::create(&path, 0).unwrap();
+            w.append_put(b"a", b"1").unwrap();
+        }
+        {
+            let mut w = Wal::append_to(&path, 0).unwrap();
+            w.append_put(b"b", b"2").unwrap();
+        }
+        assert_eq!(replay(&path).unwrap().len(), 2);
+    }
+
+    #[test]
+    fn create_truncates() {
+        let tmp = TempDir::new("wal_trunc");
+        let path = tmp.join("wal.log");
+        {
+            let mut w = Wal::create(&path, 0).unwrap();
+            w.append_put(b"old", b"x").unwrap();
+        }
+        {
+            let _w = Wal::create(&path, 0).unwrap();
+        }
+        assert!(replay(&path).unwrap().is_empty());
+    }
+}

@@ -1,0 +1,59 @@
+//! # Railgun — real-time sliding windows for mission critical systems
+//!
+//! Reproduction of *"Railgun: streaming windows for mission critical
+//! systems"* (Oliveirinha, Gomes, Cardoso, Bizarro — Feedzai, CIDR '21).
+//!
+//! Railgun is a distributed streaming engine that computes **accurate,
+//! per-event aggregations over real sliding windows** at millisecond
+//! latencies. Unlike Type-2 engines (Flink, Kafka Streams, Spark
+//! Streaming) that approximate sliding windows with a fixed set of
+//! overlapping *hopping* windows, Railgun evaluates every window on every
+//! event arrival, backed by a low-memory-footprint, disk-backed **event
+//! reservoir**.
+//!
+//! ## Architecture (three layers)
+//!
+//! * **L3 — this crate**: the coordination/storage system. Messaging
+//!   ([`mlog`]), front-end routing ([`frontend`]), back-end processor
+//!   units ([`backend`]), the event reservoir ([`reservoir`]), operator
+//!   plans ([`plan`]), aggregation state ([`agg`], [`kvstore`]) and the
+//!   cluster coordinator ([`coordinator`]).
+//! * **L2 — JAX** (`python/compile/model.py`, build-time only): batched
+//!   aggregation-state transition and the fraud-scoring MLP, lowered
+//!   ahead-of-time to HLO text artifacts.
+//! * **L1 — Pallas** (`python/compile/kernels/`): the numeric hot-spot
+//!   kernels called by L2, validated against pure-jnp oracles.
+//!
+//! The [`runtime`] module loads the AOT artifacts through PJRT (`xla`
+//! crate) and executes them from the rust hot path; python never runs at
+//! request time.
+//!
+//! ## Quickstart
+//!
+//! See `examples/quickstart.rs`. In short: build a [`config::EngineConfig`],
+//! start a [`coordinator::Node`], register a stream and its metrics, feed
+//! events through the [`frontend::FrontEnd`] and read replies.
+
+pub mod agg;
+pub mod backend;
+pub mod baseline;
+pub mod config;
+pub mod coordinator;
+pub mod error;
+pub mod event;
+pub mod frontend;
+pub mod kvstore;
+pub mod mlog;
+pub mod plan;
+pub mod reservoir;
+pub mod runtime;
+pub mod util;
+pub mod window;
+pub mod workload;
+
+pub use error::{Error, Result};
+
+/// Crate version string (from Cargo metadata).
+pub fn version() -> &'static str {
+    env!("CARGO_PKG_VERSION")
+}

@@ -1,0 +1,131 @@
+//! `railgun` — leader entrypoint + CLI.
+//!
+//! ```text
+//! railgun serve --config <engine.json> --stream <stream.json>
+//!     Start a node, read events as JSON lines on stdin, write replies as
+//!     JSON lines on stdout.
+//! railgun check-artifacts
+//!     Load + execute the AOT artifacts, verify the runtime wiring.
+//! railgun version
+//! ```
+//!
+//! (Benchmarks and demos live in `cargo bench` / `cargo run --example`.)
+
+use railgun::config::{EngineConfig, StreamDef};
+use railgun::coordinator::Node;
+use railgun::error::Result;
+use railgun::mlog::{Broker, BrokerConfig};
+use railgun::util::json::Json;
+use std::io::{BufRead, Write};
+use std::time::Duration;
+
+fn main() {
+    railgun::util::logging::init();
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let code = match args.first().map(|s| s.as_str()) {
+        Some("serve") => cmd_serve(&args[1..]),
+        Some("check-artifacts") => cmd_check_artifacts(),
+        Some("version") => {
+            println!("railgun {}", railgun::version());
+            Ok(())
+        }
+        _ => {
+            eprintln!(
+                "usage: railgun <serve|check-artifacts|version>\n\
+                 \n  serve --config <engine.json> --stream <stream.json>\n\
+                 \n  check-artifacts   verify the AOT runtime path"
+            );
+            std::process::exit(2);
+        }
+    };
+    if let Err(e) = code {
+        eprintln!("railgun: {e}");
+        std::process::exit(1);
+    }
+}
+
+fn flag_value<'a>(args: &'a [String], name: &str) -> Option<&'a str> {
+    args.iter()
+        .position(|a| a == name)
+        .and_then(|i| args.get(i + 1))
+        .map(|s| s.as_str())
+}
+
+fn cmd_serve(args: &[String]) -> Result<()> {
+    let cfg_path = flag_value(args, "--config")
+        .ok_or_else(|| railgun::Error::invalid("serve: missing --config"))?;
+    let stream_path = flag_value(args, "--stream")
+        .ok_or_else(|| railgun::Error::invalid("serve: missing --stream"))?;
+    let cfg = EngineConfig::from_file(std::path::Path::new(cfg_path))?;
+    let stream_text = std::fs::read_to_string(stream_path)?;
+    let def = StreamDef::from_json(&Json::parse(&stream_text)?)?;
+    let stream_name = def.name.clone();
+
+    let broker = Broker::open(BrokerConfig::durable(cfg.data_dir.join("mlog")))?;
+    let node = Node::start("node0", cfg, broker)?;
+    node.register_stream(def)?;
+    let mut collector = node.reply_collector()?;
+    log::info!("serving stream '{stream_name}'; reading JSON events from stdin");
+
+    let stdin = std::io::stdin();
+    let stdout = std::io::stdout();
+    for line in stdin.lock().lines() {
+        let line = line?;
+        if line.trim().is_empty() {
+            continue;
+        }
+        let receipt = match node.frontend().ingest_json(&stream_name, &line) {
+            Ok(r) => r,
+            Err(e) => {
+                eprintln!("rejected: {e}");
+                continue;
+            }
+        };
+        let replies =
+            collector.await_event(receipt.ingest_id, receipt.fanout, Duration::from_secs(10))?;
+        let mut out = stdout.lock();
+        for r in replies {
+            writeln!(out, "{}", r.to_json().to_string())?;
+        }
+    }
+    node.shutdown(true);
+    Ok(())
+}
+
+fn cmd_check_artifacts() -> Result<()> {
+    use railgun::runtime::{
+        artifacts_available, artifacts_dir, FraudScorer, Runtime, VectorizedAgg,
+    };
+    if !artifacts_available() {
+        return Err(railgun::Error::not_found(format!(
+            "artifacts in {:?} — run `make artifacts`",
+            artifacts_dir()
+        )));
+    }
+    let rt = Runtime::cpu()?;
+    println!("PJRT platform: {}", rt.platform());
+    let scorer = FraudScorer::load(&rt, &artifacts_dir())?;
+    println!(
+        "fraud_scorer: batch={} features={} ({})",
+        scorer.meta().batch,
+        scorer.meta().features,
+        scorer.meta().feature_names.join(",")
+    );
+    let row = vec![42.0f32; scorer.meta().features];
+    let p = scorer.score(&row, 1)?;
+    println!("probe score: {:.6}", p[0]);
+    let mut agg = VectorizedAgg::load(&rt, &artifacts_dir())?;
+    agg.push(3, 10.0, true)?;
+    agg.push(3, 20.0, true)?;
+    let (count, sum, avg, _) = agg.aggregates(3)?;
+    assert_eq!((count, sum), (2.0, 30.0));
+    assert_eq!(avg, Some(15.0));
+    println!(
+        "window_agg: slots={} batch={} lanes={} — probe OK",
+        agg.meta().slots,
+        agg.meta().batch,
+        agg.meta().lanes
+    );
+    println!("artifacts OK");
+    Ok(())
+}

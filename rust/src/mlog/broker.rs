@@ -1,0 +1,373 @@
+//! The broker: topic registry + consumer-group coordinator.
+
+use crate::error::{Error, Result};
+use crate::mlog::group::{GroupState, MemberId};
+use crate::mlog::partition::Partition;
+pub use crate::mlog::partition::FsyncPolicy;
+use crate::mlog::consumer::{Consumer, Producer};
+use crate::mlog::TopicPartition;
+use crate::util::json::Json;
+use std::collections::BTreeMap;
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Condvar, Mutex, RwLock};
+use std::time::Duration;
+
+/// Broker configuration.
+#[derive(Debug, Clone)]
+pub struct BrokerConfig {
+    /// Root directory for durable topics (None ⇒ fully in-memory).
+    pub dir: Option<PathBuf>,
+    /// Segment fsync policy.
+    pub fsync: FsyncPolicy,
+    /// Roll segments at this size.
+    pub segment_bytes: u64,
+    /// In-memory tail length per partition.
+    pub retention_records: usize,
+    /// Evict a group member after this many broker poll-ticks without a
+    /// heartbeat (poll-counter based — virtual-time friendly).
+    pub session_timeout_ticks: u64,
+}
+
+impl BrokerConfig {
+    /// Fast, volatile broker for tests/benches.
+    pub fn in_memory() -> Self {
+        BrokerConfig {
+            dir: None,
+            fsync: FsyncPolicy::Never,
+            segment_bytes: 64 << 20,
+            retention_records: 1 << 20,
+            session_timeout_ticks: 100_000,
+        }
+    }
+
+    /// Durable broker rooted at `dir`.
+    pub fn durable(dir: PathBuf) -> Self {
+        BrokerConfig {
+            dir: Some(dir),
+            fsync: FsyncPolicy::EveryN(256),
+            segment_bytes: 64 << 20,
+            retention_records: 1 << 16,
+            session_timeout_ticks: 100_000,
+        }
+    }
+}
+
+#[derive(Debug)]
+pub(crate) struct Topic {
+    pub(crate) partitions: Vec<Arc<Partition>>,
+}
+
+/// Shared broker handle.
+pub type BrokerRef = Arc<Broker>;
+
+/// In-process message broker implementing the Kafka contract Railgun
+/// depends on (see module docs).
+#[derive(Debug)]
+pub struct Broker {
+    config: BrokerConfig,
+    topics: RwLock<BTreeMap<String, Arc<Topic>>>,
+    pub(crate) groups: Mutex<BTreeMap<String, GroupState>>,
+    /// Poll-tick counter for failure detection.
+    pub(crate) tick: AtomicU64,
+    /// Notified on any append; consumers park here.
+    pub(crate) data_mutex: Mutex<()>,
+    pub(crate) data_cond: Condvar,
+}
+
+impl Broker {
+    /// Open a broker. With a directory, existing topics are recovered
+    /// from disk (offsets continue after the last durable record).
+    pub fn open(config: BrokerConfig) -> Result<BrokerRef> {
+        let broker = Broker {
+            config: config.clone(),
+            topics: RwLock::new(BTreeMap::new()),
+            groups: Mutex::new(BTreeMap::new()),
+            tick: AtomicU64::new(0),
+            data_mutex: Mutex::new(()),
+            data_cond: Condvar::new(),
+        };
+        let broker = Arc::new(broker);
+        if let Some(dir) = &config.dir {
+            if dir.exists() {
+                for entry in std::fs::read_dir(dir)? {
+                    let entry = entry?;
+                    if entry.file_type()?.is_dir() {
+                        let topic = entry.file_name().to_string_lossy().to_string();
+                        broker.recover_topic(&topic)?;
+                    }
+                }
+            } else {
+                std::fs::create_dir_all(dir)?;
+            }
+        }
+        Ok(broker)
+    }
+
+    fn topic_dir(&self, topic: &str) -> Option<PathBuf> {
+        self.config.dir.as_ref().map(|d| d.join(topic))
+    }
+
+    fn recover_topic(self: &Arc<Self>, topic: &str) -> Result<()> {
+        let tdir = self.topic_dir(topic).expect("durable broker");
+        let meta_path = tdir.join("meta.json");
+        let meta = Json::parse(&std::fs::read_to_string(&meta_path).map_err(|e| {
+            Error::corrupt(format!("topic {topic}: missing meta.json: {e}"))
+        })?)?;
+        let n = meta
+            .get("partitions")
+            .and_then(|j| j.as_i64())
+            .ok_or_else(|| Error::corrupt("meta.json: missing 'partitions'"))? as u32;
+        let mut partitions = Vec::with_capacity(n as usize);
+        for p in 0..n {
+            partitions.push(Arc::new(Partition::recover(
+                p,
+                tdir.join(format!("p{p}")),
+                self.config.segment_bytes,
+                self.config.retention_records,
+                self.config.fsync,
+            )?));
+        }
+        self.topics
+            .write()
+            .unwrap()
+            .insert(topic.to_string(), Arc::new(Topic { partitions }));
+        Ok(())
+    }
+
+    /// Create a topic with `n` partitions. Err if it already exists.
+    pub fn create_topic(self: &Arc<Self>, name: &str, n: u32) -> Result<()> {
+        if n == 0 {
+            return Err(Error::invalid("topic needs at least one partition"));
+        }
+        if name.is_empty() || name.contains('/') {
+            return Err(Error::invalid(format!("bad topic name '{name}'")));
+        }
+        let mut topics = self.topics.write().unwrap();
+        if topics.contains_key(name) {
+            return Err(Error::invalid(format!("topic '{name}' already exists")));
+        }
+        let mut partitions = Vec::with_capacity(n as usize);
+        for p in 0..n {
+            let pdir = self.topic_dir(name).map(|d| d.join(format!("p{p}")));
+            partitions.push(Arc::new(Partition::create(
+                p,
+                pdir,
+                self.config.segment_bytes,
+                self.config.retention_records,
+                self.config.fsync,
+            )?));
+        }
+        if let Some(tdir) = self.topic_dir(name) {
+            std::fs::create_dir_all(&tdir)?;
+            let meta = Json::obj([("partitions", Json::Int(n as i64))]);
+            std::fs::write(tdir.join("meta.json"), meta.to_string())?;
+        }
+        topics.insert(name.to_string(), Arc::new(Topic { partitions }));
+        Ok(())
+    }
+
+    /// Create the topic if it does not exist yet (idempotent).
+    pub fn ensure_topic(self: &Arc<Self>, name: &str, n: u32) -> Result<()> {
+        if self.partition_count(name).is_some() {
+            return Ok(());
+        }
+        self.create_topic(name, n)
+    }
+
+    /// Number of partitions of a topic.
+    pub fn partition_count(&self, topic: &str) -> Option<u32> {
+        self.topics
+            .read()
+            .unwrap()
+            .get(topic)
+            .map(|t| t.partitions.len() as u32)
+    }
+
+    /// All topic names.
+    pub fn topic_names(&self) -> Vec<String> {
+        self.topics.read().unwrap().keys().cloned().collect()
+    }
+
+    pub(crate) fn partition(&self, topic: &str, p: u32) -> Result<Arc<Partition>> {
+        let topics = self.topics.read().unwrap();
+        let t = topics
+            .get(topic)
+            .ok_or_else(|| Error::not_found(format!("topic '{topic}'")))?;
+        t.partitions
+            .get(p as usize)
+            .cloned()
+            .ok_or_else(|| Error::not_found(format!("partition {topic}/{p}")))
+    }
+
+    /// End offset (log end) of a partition.
+    pub fn end_offset(&self, tp: &TopicPartition) -> Result<u64> {
+        Ok(self.partition(&tp.topic, tp.partition)?.end_offset())
+    }
+
+    /// New producer handle.
+    pub fn producer(self: &Arc<Self>) -> Producer {
+        Producer::new(self.clone())
+    }
+
+    /// Join `group` subscribed to `topics`; returns a consumer whose first
+    /// poll reports the initial assignment as a rebalance.
+    pub fn consumer(self: &Arc<Self>, group: &str, topics: &[&str]) -> Result<Consumer> {
+        {
+            let known = self.topics.read().unwrap();
+            for t in topics {
+                if !known.contains_key(*t) {
+                    return Err(Error::not_found(format!("topic '{t}'")));
+                }
+            }
+        }
+        let topic_names: Vec<String> = topics.iter().map(|s| s.to_string()).collect();
+        let tick = self.tick.load(Ordering::Relaxed);
+        let member_id: MemberId = {
+            let mut groups = self.groups.lock().unwrap();
+            let g = groups.entry(group.to_string()).or_default();
+            g.join(&topic_names, |t| self.partition_count(t).unwrap_or(0), tick)
+        };
+        Ok(Consumer::new(self.clone(), group.to_string(), member_id))
+    }
+
+    /// Leave a group (invoked by [`Consumer::leave`]/Drop).
+    pub(crate) fn leave_group(&self, group: &str, member: MemberId) {
+        let mut groups = self.groups.lock().unwrap();
+        if let Some(g) = groups.get_mut(group) {
+            g.leave(member, |t| self.partition_count(t).unwrap_or(0));
+        }
+    }
+
+    /// Heartbeat + stale-member eviction; returns (generation, evicted).
+    pub(crate) fn group_heartbeat(&self, group: &str, member: MemberId) -> (u64, Vec<MemberId>) {
+        let tick = self.tick.fetch_add(1, Ordering::Relaxed) + 1;
+        let mut groups = self.groups.lock().unwrap();
+        let g = groups.entry(group.to_string()).or_default();
+        let evicted = g.heartbeat(member, tick, self.config.session_timeout_ticks, |t| {
+            self.partition_count(t).unwrap_or(0)
+        });
+        (g.generation, evicted)
+    }
+
+    /// Force-evict a member (used by tests and the coordinator's failure
+    /// injection).
+    pub fn evict_member(&self, group: &str, member: MemberId) {
+        self.leave_group(group, member);
+        self.data_cond.notify_all();
+    }
+
+    /// Current assignment of a member.
+    pub(crate) fn assignment_of(&self, group: &str, member: MemberId) -> Vec<TopicPartition> {
+        let groups = self.groups.lock().unwrap();
+        groups
+            .get(group)
+            .map(|g| g.assignment_of(member))
+            .unwrap_or_default()
+    }
+
+    /// Committed offset for a partition within a group.
+    pub fn committed_offset(&self, group: &str, tp: &TopicPartition) -> Option<u64> {
+        let groups = self.groups.lock().unwrap();
+        groups.get(group).and_then(|g| g.committed_offset(tp))
+    }
+
+    /// Commit an offset for a group (monotonic).
+    pub fn commit_offset(&self, group: &str, tp: TopicPartition, offset: u64) {
+        let mut groups = self.groups.lock().unwrap();
+        groups.entry(group.to_string()).or_default().commit(tp, offset);
+    }
+
+    /// Park the calling consumer until any append happens or `timeout`.
+    pub(crate) fn wait_any_data(&self, timeout: Duration) {
+        let guard = self.data_mutex.lock().unwrap();
+        let _ = self.data_cond.wait_timeout(guard, timeout).unwrap();
+    }
+
+    /// Wake all parked consumers (called by producers after append).
+    pub(crate) fn notify_data(&self) {
+        self.data_cond.notify_all();
+    }
+
+    /// Fsync all partitions (checkpoint barrier).
+    pub fn sync_all(&self) -> Result<()> {
+        let topics = self.topics.read().unwrap();
+        for t in topics.values() {
+            for p in &t.partitions {
+                p.sync()?;
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::tmp::TempDir;
+
+    #[test]
+    fn create_topic_and_count() {
+        let b = Broker::open(BrokerConfig::in_memory()).unwrap();
+        b.create_topic("t", 3).unwrap();
+        assert_eq!(b.partition_count("t"), Some(3));
+        assert_eq!(b.partition_count("nope"), None);
+        assert!(b.create_topic("t", 3).is_err(), "duplicate rejected");
+        assert!(b.create_topic("", 1).is_err());
+        assert!(b.create_topic("x", 0).is_err());
+        assert_eq!(b.topic_names(), vec!["t".to_string()]);
+    }
+
+    #[test]
+    fn ensure_topic_is_idempotent() {
+        let b = Broker::open(BrokerConfig::in_memory()).unwrap();
+        b.ensure_topic("t", 2).unwrap();
+        b.ensure_topic("t", 2).unwrap();
+        assert_eq!(b.partition_count("t"), Some(2));
+    }
+
+    #[test]
+    fn durable_broker_recovers_topics_and_offsets() {
+        let tmp = TempDir::new("broker_recover");
+        let dir = tmp.path().to_path_buf();
+        {
+            let b = Broker::open(BrokerConfig {
+                fsync: FsyncPolicy::Always,
+                ..BrokerConfig::durable(dir.clone())
+            })
+            .unwrap();
+            b.create_topic("payments", 2).unwrap();
+            let p = b.producer();
+            for i in 0..20 {
+                p.send("payments", (i % 2) as u32, i as i64, vec![], vec![i as u8])
+                    .unwrap();
+            }
+        }
+        let b = Broker::open(BrokerConfig::durable(dir)).unwrap();
+        assert_eq!(b.partition_count("payments"), Some(2));
+        let tp = TopicPartition::new("payments", 0);
+        assert_eq!(b.end_offset(&tp).unwrap(), 10);
+        // appends continue after recovery
+        let p = b.producer();
+        let off = p.send("payments", 0, 99, vec![], vec![]).unwrap();
+        assert_eq!(off, 10);
+    }
+
+    #[test]
+    fn consumer_requires_existing_topic() {
+        let b = Broker::open(BrokerConfig::in_memory()).unwrap();
+        assert!(b.consumer("g", &["missing"]).is_err());
+    }
+
+    #[test]
+    fn commit_and_read_back() {
+        let b = Broker::open(BrokerConfig::in_memory()).unwrap();
+        b.create_topic("t", 1).unwrap();
+        let tp = TopicPartition::new("t", 0);
+        assert_eq!(b.committed_offset("g", &tp), None);
+        b.commit_offset("g", tp.clone(), 5);
+        assert_eq!(b.committed_offset("g", &tp), Some(5));
+        b.commit_offset("g", tp.clone(), 3);
+        assert_eq!(b.committed_offset("g", &tp), Some(5), "monotonic");
+    }
+}

@@ -1,0 +1,378 @@
+//! Producer and consumer handles.
+
+use crate::error::Result;
+use crate::mlog::broker::BrokerRef;
+use crate::mlog::group::MemberId;
+use crate::mlog::segment::Record;
+use crate::mlog::TopicPartition;
+use crate::util::hash;
+use std::collections::HashMap;
+use std::time::{Duration, Instant};
+
+/// Publishes records to topics.
+#[derive(Clone)]
+pub struct Producer {
+    broker: BrokerRef,
+}
+
+impl Producer {
+    pub(crate) fn new(broker: BrokerRef) -> Self {
+        Producer { broker }
+    }
+
+    /// Append to an explicit partition; returns the assigned offset.
+    pub fn send(
+        &self,
+        topic: &str,
+        partition: u32,
+        timestamp: i64,
+        key: Vec<u8>,
+        payload: Vec<u8>,
+    ) -> Result<u64> {
+        let p = self.broker.partition(topic, partition)?;
+        let off = p.append(timestamp, key, payload)?;
+        self.broker.notify_data();
+        Ok(off)
+    }
+
+    /// Append routed by key hash (stable across runs — see
+    /// [`crate::util::hash::hash64`]).
+    pub fn send_keyed(
+        &self,
+        topic: &str,
+        key: &[u8],
+        timestamp: i64,
+        payload: Vec<u8>,
+    ) -> Result<u64> {
+        let n = self
+            .broker
+            .partition_count(topic)
+            .ok_or_else(|| crate::error::Error::not_found(format!("topic '{topic}'")))?;
+        let partition = hash::partition_for(hash::hash64(key), n);
+        self.send(topic, partition, timestamp, key.to_vec(), payload)
+    }
+}
+
+/// Result of one [`Consumer::poll`].
+#[derive(Debug, Default)]
+pub struct PollResult {
+    /// Fetched records, tagged with their partition.
+    pub records: Vec<(TopicPartition, Record)>,
+    /// Set when the group rebalanced since the last poll: the consumer's
+    /// *new* full assignment. Task-processor migration hooks off this
+    /// (paper Algorithm 1).
+    pub rebalanced: Option<Vec<TopicPartition>>,
+}
+
+/// Group consumer with pull-based offsets.
+///
+/// Not `Clone`: each consumer is one group member. Dropping the consumer
+/// leaves the group (triggering a rebalance for the survivors).
+pub struct Consumer {
+    broker: BrokerRef,
+    group: String,
+    member: MemberId,
+    generation: u64,
+    assignment: Vec<TopicPartition>,
+    positions: HashMap<TopicPartition, u64>,
+    /// Round-robin cursor over the assignment for fetch fairness.
+    cursor: usize,
+    left: bool,
+}
+
+impl Consumer {
+    pub(crate) fn new(broker: BrokerRef, group: String, member: MemberId) -> Self {
+        Consumer {
+            broker,
+            group,
+            member,
+            generation: 0, // any live group has generation ≥ 1 ⇒ first poll rebalances
+            assignment: Vec::new(),
+            positions: HashMap::new(),
+            cursor: 0,
+            left: false,
+        }
+    }
+
+    /// This consumer's member id.
+    pub fn member_id(&self) -> MemberId {
+        self.member
+    }
+
+    /// Current assignment (valid as of the last poll).
+    pub fn assignment(&self) -> &[TopicPartition] {
+        &self.assignment
+    }
+
+    /// Fetch up to `max` records, blocking up to `timeout` when no data
+    /// is available. Also performs the group heartbeat; membership
+    /// changes surface in [`PollResult::rebalanced`].
+    pub fn poll(&mut self, max: usize, timeout: Duration) -> Result<PollResult> {
+        let deadline = Instant::now() + timeout;
+        let mut result = PollResult::default();
+        loop {
+            // 1. heartbeat + generation check
+            let (generation, _evicted) = self.broker.group_heartbeat(&self.group, self.member);
+            if generation != self.generation {
+                self.generation = generation;
+                self.refresh_assignment();
+                result.rebalanced = Some(self.assignment.clone());
+            }
+
+            // 2. fetch round-robin across assigned partitions
+            if !self.assignment.is_empty() {
+                let n = self.assignment.len();
+                for i in 0..n {
+                    if result.records.len() >= max {
+                        break;
+                    }
+                    let tp = &self.assignment[(self.cursor + i) % n];
+                    let pos = *self.positions.get(tp).unwrap_or(&0);
+                    let budget = max - result.records.len();
+                    let part = self.broker.partition(&tp.topic, tp.partition)?;
+                    let recs = part.fetch(pos, budget)?;
+                    if let Some(last) = recs.last() {
+                        self.positions.insert(tp.clone(), last.offset + 1);
+                    }
+                    for r in recs {
+                        result.records.push((tp.clone(), r));
+                    }
+                }
+                self.cursor = (self.cursor + 1) % n;
+            }
+
+            if !result.records.is_empty() || result.rebalanced.is_some() {
+                return Ok(result);
+            }
+            let now = Instant::now();
+            if now >= deadline {
+                return Ok(result);
+            }
+            // 3. park until data or deadline
+            self.broker.wait_any_data(deadline - now);
+        }
+    }
+
+    fn refresh_assignment(&mut self) {
+        let new_assignment = self.broker.assignment_of(&self.group, self.member);
+        // drop positions of partitions we no longer own
+        self.positions.retain(|tp, _| new_assignment.contains(tp));
+        // initialize newly-assigned partitions from the group's committed
+        // offset (0 when never committed — earliest, for replay semantics)
+        for tp in &new_assignment {
+            if !self.positions.contains_key(tp) {
+                let start = self.broker.committed_offset(&self.group, tp).unwrap_or(0);
+                self.positions.insert(tp.clone(), start);
+            }
+        }
+        self.assignment = new_assignment;
+        self.cursor = 0;
+    }
+
+    /// Commit a consumed offset (next-to-read convention: commit
+    /// `record.offset + 1`).
+    pub fn commit(&self, tp: TopicPartition, next_offset: u64) {
+        self.broker.commit_offset(&self.group, tp, next_offset);
+    }
+
+    /// Override the fetch position of an owned partition (rewind/replay).
+    pub fn seek(&mut self, tp: TopicPartition, offset: u64) {
+        self.positions.insert(tp, offset);
+    }
+
+    /// Current fetch position for a partition.
+    pub fn position(&self, tp: &TopicPartition) -> Option<u64> {
+        self.positions.get(tp).copied()
+    }
+
+    /// Gracefully leave the group (also triggered by Drop).
+    pub fn leave(&mut self) {
+        if !self.left {
+            self.left = true;
+            self.broker.leave_group(&self.group, self.member);
+            self.broker.notify_data();
+        }
+    }
+}
+
+impl Drop for Consumer {
+    fn drop(&mut self) {
+        self.leave();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::mlog::{Broker, BrokerConfig};
+
+    fn broker_with_topic(n: u32) -> BrokerRef {
+        let b = Broker::open(BrokerConfig::in_memory()).unwrap();
+        b.create_topic("t", n).unwrap();
+        b
+    }
+
+    const T: Duration = Duration::from_millis(20);
+
+    #[test]
+    fn first_poll_reports_initial_assignment() {
+        let b = broker_with_topic(4);
+        let mut c = b.consumer("g", &["t"]).unwrap();
+        let r = c.poll(10, T).unwrap();
+        assert_eq!(r.rebalanced.as_ref().unwrap().len(), 4);
+        assert!(r.records.is_empty());
+    }
+
+    #[test]
+    fn produce_then_consume() {
+        let b = broker_with_topic(2);
+        let p = b.producer();
+        for i in 0..10i64 {
+            p.send_keyed("t", format!("k{i}").as_bytes(), i, vec![i as u8])
+                .unwrap();
+        }
+        let mut c = b.consumer("g", &["t"]).unwrap();
+        let mut got = Vec::new();
+        while got.len() < 10 {
+            let r = c.poll(100, T).unwrap();
+            if r.records.is_empty() && r.rebalanced.is_none() {
+                break;
+            }
+            got.extend(r.records);
+        }
+        assert_eq!(got.len(), 10);
+    }
+
+    #[test]
+    fn keyed_routing_is_deterministic() {
+        let b = broker_with_topic(4);
+        let p = b.producer();
+        p.send_keyed("t", b"card_1", 0, vec![1]).unwrap();
+        p.send_keyed("t", b"card_1", 1, vec![2]).unwrap();
+        let mut c = b.consumer("g", &["t"]).unwrap();
+        let mut per_partition: HashMap<u32, usize> = HashMap::new();
+        loop {
+            let r = c.poll(100, T).unwrap();
+            if r.records.is_empty() && r.rebalanced.is_none() {
+                break;
+            }
+            for (tp, _) in r.records {
+                *per_partition.entry(tp.partition).or_default() += 1;
+            }
+        }
+        assert_eq!(per_partition.len(), 1, "same key ⇒ same partition");
+        assert_eq!(per_partition.values().sum::<usize>(), 2);
+    }
+
+    #[test]
+    fn two_consumers_split_work_and_rebalance_on_leave() {
+        let b = broker_with_topic(4);
+        let mut c1 = b.consumer("g", &["t"]).unwrap();
+        let r1 = c1.poll(1, T).unwrap();
+        assert_eq!(r1.rebalanced.unwrap().len(), 4);
+        let mut c2 = b.consumer("g", &["t"]).unwrap();
+        // both see the split on next poll
+        let a1 = c1.poll(1, T).unwrap().rebalanced.unwrap();
+        let a2 = c2.poll(1, T).unwrap().rebalanced.unwrap();
+        assert_eq!(a1.len() + a2.len(), 4);
+        // c2 leaves; c1 reclaims everything
+        c2.leave();
+        let a1 = c1.poll(1, T).unwrap().rebalanced.unwrap();
+        assert_eq!(a1.len(), 4);
+    }
+
+    #[test]
+    fn drop_leaves_group() {
+        let b = broker_with_topic(2);
+        let mut c1 = b.consumer("g", &["t"]).unwrap();
+        {
+            let mut c2 = b.consumer("g", &["t"]).unwrap();
+            let _ = c2.poll(1, T).unwrap();
+        } // dropped here
+        let a = c1.poll(1, T).unwrap().rebalanced.unwrap();
+        assert_eq!(a.len(), 2);
+    }
+
+    #[test]
+    fn committed_offsets_carry_across_members() {
+        let b = broker_with_topic(1);
+        let p = b.producer();
+        for i in 0..10i64 {
+            p.send("t", 0, i, vec![], vec![i as u8]).unwrap();
+        }
+        let tp = TopicPartition::new("t", 0);
+        {
+            let mut c = b.consumer("g", &["t"]).unwrap();
+            let r = c.poll(5, T).unwrap();
+            let consumed: Vec<_> = r.records;
+            assert_eq!(consumed.len(), 5);
+            c.commit(tp.clone(), 5);
+        }
+        // a new member of the same group resumes from the commit
+        let mut c = b.consumer("g", &["t"]).unwrap();
+        let r = c.poll(100, T).unwrap();
+        assert_eq!(r.records.len(), 5);
+        assert_eq!(r.records[0].1.offset, 5);
+    }
+
+    #[test]
+    fn seek_rewinds() {
+        let b = broker_with_topic(1);
+        let p = b.producer();
+        for i in 0..10i64 {
+            p.send("t", 0, i, vec![], vec![i as u8]).unwrap();
+        }
+        let mut c = b.consumer("g", &["t"]).unwrap();
+        let r = c.poll(100, T).unwrap();
+        assert_eq!(r.records.len(), 10);
+        let tp = TopicPartition::new("t", 0);
+        c.seek(tp.clone(), 3);
+        let r = c.poll(100, T).unwrap();
+        assert_eq!(r.records.len(), 7);
+        assert_eq!(r.records[0].1.offset, 3);
+    }
+
+    #[test]
+    fn poll_blocks_until_producer_sends() {
+        let b = broker_with_topic(1);
+        let mut c = b.consumer("g", &["t"]).unwrap();
+        let _ = c.poll(1, T).unwrap(); // swallow initial rebalance
+        let b2 = b.clone();
+        let t = std::thread::spawn(move || {
+            std::thread::sleep(Duration::from_millis(30));
+            b2.producer().send("t", 0, 1, vec![], vec![42]).unwrap();
+        });
+        let start = Instant::now();
+        let r = c.poll(1, Duration::from_secs(5)).unwrap();
+        assert_eq!(r.records.len(), 1);
+        assert!(start.elapsed() < Duration::from_secs(4));
+        t.join().unwrap();
+    }
+
+    #[test]
+    fn evicted_member_partitions_move() {
+        let b = broker_with_topic(2);
+        let mut c1 = b.consumer("g", &["t"]).unwrap();
+        let mut c2 = b.consumer("g", &["t"]).unwrap();
+        let _ = c1.poll(1, T).unwrap();
+        let _ = c2.poll(1, T).unwrap();
+        // kill c2 without leaving (simulated crash)
+        b.evict_member("g", c2.member_id());
+        let a1 = c1.poll(1, T).unwrap().rebalanced.unwrap();
+        assert_eq!(a1.len(), 2, "survivor owns all partitions");
+        std::mem::forget(c2); // crashed member never runs Drop
+    }
+
+    #[test]
+    fn multiple_groups_are_independent() {
+        let b = broker_with_topic(1);
+        let p = b.producer();
+        p.send("t", 0, 1, vec![], vec![7]).unwrap();
+        let mut ca = b.consumer("ga", &["t"]).unwrap();
+        let mut cb = b.consumer("gb", &["t"]).unwrap();
+        let ra = ca.poll(10, T).unwrap();
+        let rb = cb.poll(10, T).unwrap();
+        assert_eq!(ra.records.len(), 1);
+        assert_eq!(rb.records.len(), 1, "each group reads independently");
+    }
+}

@@ -1,0 +1,275 @@
+//! Consumer-group state: membership, partition assignment, committed
+//! offsets and failure detection.
+//!
+//! Assignment is *range* style over the sorted member list, recomputed on
+//! every membership change; each change bumps the group **generation**.
+//! Consumers notice a generation bump on their next poll and surface the
+//! new assignment to the caller (the paper's Algorithm 1 reassignment
+//! callback).
+
+use crate::mlog::TopicPartition;
+use std::collections::BTreeMap;
+
+/// Unique id of a group member (consumer).
+pub type MemberId = u64;
+
+/// Wall-less failure detection: members are evicted when they have not
+/// polled within `session_timeout` polls *of other members*. We count
+/// polls rather than wall time so virtual-time experiments behave
+/// identically to real deployments.
+#[derive(Debug)]
+pub struct GroupState {
+    /// Sorted membership (BTreeMap gives deterministic assignment order).
+    members: BTreeMap<MemberId, MemberState>,
+    /// Monotonic generation, bumped on every membership change.
+    pub generation: u64,
+    /// Committed offsets per partition (group-scoped).
+    pub committed: BTreeMap<TopicPartition, u64>,
+    /// Current assignment (recomputed on membership change).
+    assignment: BTreeMap<MemberId, Vec<TopicPartition>>,
+    /// Topics this group subscribes to (union over members).
+    pub topics: Vec<String>,
+    next_member_id: MemberId,
+}
+
+#[derive(Debug)]
+struct MemberState {
+    /// Poll-counter heartbeat (see struct docs).
+    last_seen_tick: u64,
+}
+
+impl Default for GroupState {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl GroupState {
+    /// Empty group.
+    pub fn new() -> Self {
+        GroupState {
+            members: BTreeMap::new(),
+            generation: 0,
+            committed: BTreeMap::new(),
+            assignment: BTreeMap::new(),
+            topics: Vec::new(),
+            next_member_id: 1,
+        }
+    }
+
+    /// Add a member; returns its id. Caller must pass the current list of
+    /// partitions per topic so assignment can be recomputed.
+    pub fn join(
+        &mut self,
+        topics: &[String],
+        partitions_of: impl Fn(&str) -> u32,
+        now_tick: u64,
+    ) -> MemberId {
+        let id = self.next_member_id;
+        self.next_member_id += 1;
+        self.members.insert(
+            id,
+            MemberState {
+                last_seen_tick: now_tick,
+            },
+        );
+        for t in topics {
+            if !self.topics.contains(t) {
+                self.topics.push(t.clone());
+            }
+        }
+        self.rebalance(&partitions_of);
+        id
+    }
+
+    /// Remove a member (graceful leave or eviction).
+    pub fn leave(&mut self, id: MemberId, partitions_of: impl Fn(&str) -> u32) {
+        if self.members.remove(&id).is_some() {
+            self.rebalance(&partitions_of);
+        }
+    }
+
+    /// Record a heartbeat for `id` at `tick` and evict any member whose
+    /// last heartbeat is older than `session_timeout_ticks`. Returns the
+    /// evicted ids.
+    pub fn heartbeat(
+        &mut self,
+        id: MemberId,
+        tick: u64,
+        session_timeout_ticks: u64,
+        partitions_of: impl Fn(&str) -> u32,
+    ) -> Vec<MemberId> {
+        if let Some(m) = self.members.get_mut(&id) {
+            m.last_seen_tick = tick;
+        }
+        let stale: Vec<MemberId> = self
+            .members
+            .iter()
+            .filter(|(mid, m)| {
+                **mid != id && tick.saturating_sub(m.last_seen_tick) > session_timeout_ticks
+            })
+            .map(|(mid, _)| *mid)
+            .collect();
+        if !stale.is_empty() {
+            for mid in &stale {
+                self.members.remove(mid);
+            }
+            self.rebalance(&partitions_of);
+        }
+        stale
+    }
+
+    /// Current assignment for a member (empty if unknown).
+    pub fn assignment_of(&self, id: MemberId) -> Vec<TopicPartition> {
+        self.assignment.get(&id).cloned().unwrap_or_default()
+    }
+
+    /// Number of live members.
+    #[allow(dead_code)] // observability API; exercised in tests
+    pub fn member_count(&self) -> usize {
+        self.members.len()
+    }
+
+    /// True if `id` is a live member.
+    #[allow(dead_code)]
+    pub fn is_member(&self, id: MemberId) -> bool {
+        self.members.contains_key(&id)
+    }
+
+    /// Recompute range assignment and bump the generation.
+    fn rebalance(&mut self, partitions_of: &impl Fn(&str) -> u32) {
+        self.generation += 1;
+        self.assignment.clear();
+        let member_ids: Vec<MemberId> = self.members.keys().copied().collect();
+        if member_ids.is_empty() {
+            return;
+        }
+        for id in &member_ids {
+            self.assignment.insert(*id, Vec::new());
+        }
+        // round-robin across the flattened (topic, partition) list so load
+        // spreads even when topics have few partitions.
+        let mut i = 0usize;
+        for topic in &self.topics {
+            for p in 0..partitions_of(topic) {
+                let owner = member_ids[i % member_ids.len()];
+                self.assignment
+                    .get_mut(&owner)
+                    .unwrap()
+                    .push(TopicPartition::new(topic.clone(), p));
+                i += 1;
+            }
+        }
+    }
+
+    /// Committed offset for a partition (None ⇒ start from 0).
+    pub fn committed_offset(&self, tp: &TopicPartition) -> Option<u64> {
+        self.committed.get(tp).copied()
+    }
+
+    /// Commit an offset (idempotent, monotonic).
+    pub fn commit(&mut self, tp: TopicPartition, offset: u64) {
+        let e = self.committed.entry(tp).or_insert(0);
+        if offset > *e {
+            *e = offset;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parts(_t: &str) -> u32 {
+        4
+    }
+
+    #[test]
+    fn single_member_owns_everything() {
+        let mut g = GroupState::new();
+        let id = g.join(&["t".into()], parts, 0);
+        assert_eq!(g.assignment_of(id).len(), 4);
+        assert_eq!(g.generation, 1);
+    }
+
+    #[test]
+    fn two_members_split_partitions() {
+        let mut g = GroupState::new();
+        let a = g.join(&["t".into()], parts, 0);
+        let b = g.join(&["t".into()], parts, 0);
+        let pa = g.assignment_of(a);
+        let pb = g.assignment_of(b);
+        assert_eq!(pa.len() + pb.len(), 4);
+        assert!(!pa.is_empty() && !pb.is_empty());
+        // disjoint
+        for p in &pa {
+            assert!(!pb.contains(p));
+        }
+        assert_eq!(g.generation, 2);
+    }
+
+    #[test]
+    fn leave_triggers_reassignment_covering_all() {
+        let mut g = GroupState::new();
+        let a = g.join(&["t".into()], parts, 0);
+        let b = g.join(&["t".into()], parts, 0);
+        g.leave(a, parts);
+        let pb = g.assignment_of(b);
+        assert_eq!(pb.len(), 4);
+        assert_eq!(g.generation, 3);
+        assert!(g.assignment_of(a).is_empty());
+    }
+
+    #[test]
+    fn multi_topic_round_robin() {
+        let mut g = GroupState::new();
+        let a = g.join(&["t1".into(), "t2".into()], |t| if t == "t1" { 2 } else { 3 }, 0);
+        let b = g.join(&["t1".into(), "t2".into()], |t| if t == "t1" { 2 } else { 3 }, 0);
+        let total = g.assignment_of(a).len() + g.assignment_of(b).len();
+        assert_eq!(total, 5);
+        // fairly split (round robin ⇒ |a|-|b| ≤ 1)
+        let diff = (g.assignment_of(a).len() as i64 - g.assignment_of(b).len() as i64).abs();
+        assert!(diff <= 1);
+    }
+
+    #[test]
+    fn heartbeat_evicts_stale_members() {
+        let mut g = GroupState::new();
+        let a = g.join(&["t".into()], parts, 0);
+        let b = g.join(&["t".into()], parts, 0);
+        // b heartbeats at tick 100; a last seen at 0; timeout 50
+        let evicted = g.heartbeat(b, 100, 50, parts);
+        assert_eq!(evicted, vec![a]);
+        assert!(!g.is_member(a));
+        assert_eq!(g.assignment_of(b).len(), 4);
+    }
+
+    #[test]
+    fn heartbeat_keeps_fresh_members() {
+        let mut g = GroupState::new();
+        let a = g.join(&["t".into()], parts, 0);
+        let b = g.join(&["t".into()], parts, 0);
+        let evicted = g.heartbeat(b, 10, 50, parts);
+        assert!(evicted.is_empty());
+        assert!(g.is_member(a));
+    }
+
+    #[test]
+    fn commits_are_monotonic() {
+        let mut g = GroupState::new();
+        let tp = TopicPartition::new("t", 0);
+        g.commit(tp.clone(), 10);
+        g.commit(tp.clone(), 5); // stale commit ignored
+        assert_eq!(g.committed_offset(&tp), Some(10));
+        g.commit(tp.clone(), 20);
+        assert_eq!(g.committed_offset(&tp), Some(20));
+    }
+
+    #[test]
+    fn empty_group_has_no_assignment() {
+        let mut g = GroupState::new();
+        let a = g.join(&["t".into()], parts, 0);
+        g.leave(a, parts);
+        assert_eq!(g.member_count(), 0);
+    }
+}

@@ -1,0 +1,69 @@
+//! `mlog` — the messaging substrate (Kafka replacement, DESIGN.md §1).
+//!
+//! Railgun's messaging layer (paper §3.1) requires exactly three
+//! properties from Kafka, all of which `mlog` implements in-process:
+//!
+//! 1. **Pull-based consumption**: consumers poll with their own offsets,
+//!    so a recovering node can rewind and replay without affecting the
+//!    end-to-end latency of healthy nodes.
+//! 2. **Partitioned topics**: a topic is a set of independent append-only
+//!    logs; the unique (topic, partition) pairs set the cluster's level
+//!    of concurrency (paper §3.3).
+//! 3. **Consumer groups with rebalance callbacks**: when a member joins,
+//!    leaves or is evicted (failure detection), partitions are
+//!    reassigned and the affected consumers observe the new assignment on
+//!    their next poll — the hook Algorithm 1 uses to migrate task
+//!    processors.
+//!
+//! Durability: records are framed to per-partition segment files (CRC'd,
+//! length-prefixed) when the broker is opened with a directory; an
+//! in-memory tail keeps polling off the disk. Retention truncates the
+//! in-memory tail only — segments stay for replay until pruned.
+//!
+//! ```
+//! use railgun::mlog::{Broker, BrokerConfig};
+//! let broker = Broker::open(BrokerConfig::in_memory()).unwrap();
+//! broker.create_topic("payments.card", 4).unwrap();
+//! let producer = broker.producer();
+//! producer.send_keyed("payments.card", b"card_1", 1000, b"payload".to_vec()).unwrap();
+//! let mut consumer = broker.consumer("group-a", &["payments.card"]).unwrap();
+//! let polled = consumer.poll(10, std::time::Duration::from_millis(10)).unwrap();
+//! assert_eq!(polled.records.len(), 1);
+//! ```
+
+mod broker;
+mod consumer;
+mod group;
+mod partition;
+mod segment;
+
+pub use broker::{Broker, BrokerConfig, BrokerRef, FsyncPolicy};
+pub use consumer::{Consumer, PollResult, Producer};
+pub use group::MemberId;
+pub use partition::{Partition, PartitionId};
+pub use segment::Record;
+
+/// A (topic, partition) coordinate.
+#[derive(Debug, Clone, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct TopicPartition {
+    /// Topic name.
+    pub topic: String,
+    /// Partition index within the topic.
+    pub partition: PartitionId,
+}
+
+impl TopicPartition {
+    /// Construct from parts.
+    pub fn new(topic: impl Into<String>, partition: PartitionId) -> Self {
+        TopicPartition {
+            topic: topic.into(),
+            partition,
+        }
+    }
+}
+
+impl std::fmt::Display for TopicPartition {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{}/{}", self.topic, self.partition)
+    }
+}

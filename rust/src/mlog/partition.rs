@@ -1,0 +1,395 @@
+//! A single partition: an append-only record log with an in-memory tail
+//! and optional on-disk segments.
+
+use crate::error::Result;
+use crate::mlog::segment::{self, Record, SegmentWriter};
+use std::collections::VecDeque;
+use std::path::PathBuf;
+use std::sync::{Condvar, Mutex};
+use std::time::Duration;
+
+/// Partition index within a topic.
+pub type PartitionId = u32;
+
+/// Durability policy for appended records.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FsyncPolicy {
+    /// Never fsync (OS decides). Fastest; crash may lose recent records —
+    /// the paper accepts this because the reservoir re-reads lost events
+    /// from upstream on recovery.
+    Never,
+    /// Flush to OS on every append, fsync every N appends.
+    EveryN(u32),
+    /// Fsync on every append (benchmark-only; not a realistic deployment).
+    Always,
+}
+
+#[derive(Debug)]
+struct PartitionInner {
+    /// Records currently kept in memory (tail of the log).
+    tail: VecDeque<Record>,
+    /// Offset of `tail.front()`.
+    tail_base: u64,
+    /// Next offset to assign.
+    next_offset: u64,
+    /// Active segment writer (None ⇒ in-memory broker).
+    writer: Option<SegmentWriter>,
+    appends_since_sync: u32,
+}
+
+/// A thread-safe partition log.
+#[derive(Debug)]
+pub struct Partition {
+    id: PartitionId,
+    dir: Option<PathBuf>,
+    segment_bytes: u64,
+    retention_records: usize,
+    fsync: FsyncPolicy,
+    inner: Mutex<PartitionInner>,
+    appended: Condvar,
+}
+
+impl Partition {
+    /// Create a partition. `dir` enables on-disk segments.
+    pub fn create(
+        id: PartitionId,
+        dir: Option<PathBuf>,
+        segment_bytes: u64,
+        retention_records: usize,
+        fsync: FsyncPolicy,
+    ) -> Result<Self> {
+        let writer = match &dir {
+            Some(d) => Some(SegmentWriter::create(d, 0)?),
+            None => None,
+        };
+        Ok(Partition {
+            id,
+            dir,
+            segment_bytes,
+            retention_records,
+            fsync,
+            inner: Mutex::new(PartitionInner {
+                tail: VecDeque::new(),
+                tail_base: 0,
+                next_offset: 0,
+                writer,
+                appends_since_sync: 0,
+            }),
+            appended: Condvar::new(),
+        })
+    }
+
+    /// Recover a partition from its on-disk segments.
+    pub fn recover(
+        id: PartitionId,
+        dir: PathBuf,
+        segment_bytes: u64,
+        retention_records: usize,
+        fsync: FsyncPolicy,
+    ) -> Result<Self> {
+        let mut tail = VecDeque::new();
+        let mut next_offset = 0u64;
+        for (_, path) in segment::list_segments(&dir)? {
+            for r in segment::read_segment(&path)? {
+                next_offset = r.offset + 1;
+                tail.push_back(r);
+            }
+        }
+        // honour retention on the recovered tail
+        let tail_base = if tail.len() > retention_records {
+            let drop_n = tail.len() - retention_records;
+            tail.drain(..drop_n);
+            tail.front().map(|r| r.offset).unwrap_or(next_offset)
+        } else {
+            tail.front().map(|r| r.offset).unwrap_or(0)
+        };
+        // append future records to a fresh segment starting at next_offset
+        let writer = Some(SegmentWriter::create(&dir, next_offset)?);
+        Ok(Partition {
+            id,
+            dir: Some(dir),
+            segment_bytes,
+            retention_records,
+            fsync,
+            inner: Mutex::new(PartitionInner {
+                tail,
+                tail_base,
+                next_offset,
+                writer,
+                appends_since_sync: 0,
+            }),
+            appended: Condvar::new(),
+        })
+    }
+
+    /// Partition id.
+    pub fn id(&self) -> PartitionId {
+        self.id
+    }
+
+    /// Append a record; returns its assigned offset.
+    pub fn append(&self, timestamp: i64, key: Vec<u8>, payload: Vec<u8>) -> Result<u64> {
+        let mut inner = self.inner.lock().unwrap();
+        let offset = inner.next_offset;
+        let record = Record {
+            offset,
+            timestamp,
+            key,
+            payload,
+        };
+        if inner.writer.is_some() {
+            self.write_durable(&mut inner, &record)?;
+        }
+        if inner.tail.is_empty() {
+            inner.tail_base = offset;
+        }
+        inner.tail.push_back(record);
+        inner.next_offset = offset + 1;
+        // retention: drop oldest in-memory records (segments keep them)
+        if inner.tail.len() > self.retention_records {
+            inner.tail.pop_front();
+            inner.tail_base += 1;
+        }
+        drop(inner);
+        self.appended.notify_all();
+        Ok(offset)
+    }
+
+    fn write_durable(&self, inner: &mut PartitionInner, record: &Record) -> Result<()> {
+        // roll the segment if full
+        let roll = inner
+            .writer
+            .as_ref()
+            .map(|w| w.bytes >= self.segment_bytes)
+            .unwrap_or(false);
+        if roll {
+            if let Some(w) = inner.writer.as_mut() {
+                w.sync()?;
+            }
+            let dir = self.dir.as_ref().expect("writer implies dir");
+            inner.writer = Some(SegmentWriter::create(dir, record.offset)?);
+        }
+        let policy = self.fsync;
+        let w = inner.writer.as_mut().expect("durable partition");
+        w.append(record)?;
+        match policy {
+            FsyncPolicy::Never => {}
+            FsyncPolicy::Always => w.sync()?,
+            FsyncPolicy::EveryN(n) => {
+                inner.appends_since_sync += 1;
+                if inner.appends_since_sync >= n {
+                    w.sync()?;
+                    inner.appends_since_sync = 0;
+                } else {
+                    w.flush()?;
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// Next offset that will be assigned (== current log end).
+    pub fn end_offset(&self) -> u64 {
+        self.inner.lock().unwrap().next_offset
+    }
+
+    /// Earliest offset still available in memory.
+    pub fn tail_base(&self) -> u64 {
+        self.inner.lock().unwrap().tail_base
+    }
+
+    /// Fetch up to `max` records starting at `offset`.
+    ///
+    /// Records older than the in-memory tail are read back from segments
+    /// (the replay path); the hot path always hits memory.
+    pub fn fetch(&self, offset: u64, max: usize) -> Result<Vec<Record>> {
+        let inner = self.inner.lock().unwrap();
+        if offset >= inner.next_offset || max == 0 {
+            return Ok(Vec::new());
+        }
+        if offset >= inner.tail_base {
+            let start = (offset - inner.tail_base) as usize;
+            return Ok(inner
+                .tail
+                .iter()
+                .skip(start)
+                .take(max)
+                .cloned()
+                .collect());
+        }
+        // cold read: walk segments
+        let dir = match &self.dir {
+            Some(d) => d.clone(),
+            None => {
+                // in-memory broker with truncated tail: data is gone
+                let start = 0usize;
+                return Ok(inner.tail.iter().skip(start).take(max).cloned().collect());
+            }
+        };
+        drop(inner); // don't hold the lock during disk I/O
+        let mut out = Vec::new();
+        for (base, path) in segment::list_segments(&dir)? {
+            if out.len() >= max {
+                break;
+            }
+            // skip segments that end before `offset`: we must open to know
+            // the end, so use base of the *next* segment as a bound.
+            let _ = base;
+            for r in segment::read_segment(&path)? {
+                if r.offset >= offset {
+                    out.push(r);
+                    if out.len() >= max {
+                        break;
+                    }
+                }
+            }
+        }
+        Ok(out)
+    }
+
+    /// Block until `end_offset() > offset` or the timeout elapses.
+    /// Returns true if data is available.
+    pub fn wait_for_data(&self, offset: u64, timeout: Duration) -> bool {
+        let inner = self.inner.lock().unwrap();
+        if inner.next_offset > offset {
+            return true;
+        }
+        let (inner, _timed_out) = self
+            .appended
+            .wait_timeout_while(inner, timeout, |i| i.next_offset <= offset)
+            .unwrap();
+        inner.next_offset > offset
+    }
+
+    /// Flush + fsync the active segment (checkpoint support).
+    pub fn sync(&self) -> Result<()> {
+        let mut inner = self.inner.lock().unwrap();
+        if let Some(w) = inner.writer.as_mut() {
+            w.sync()?;
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::tmp::TempDir;
+
+    fn mem_partition(retention: usize) -> Partition {
+        Partition::create(0, None, 1 << 20, retention, FsyncPolicy::Never).unwrap()
+    }
+
+    #[test]
+    fn append_assigns_monotonic_offsets() {
+        let p = mem_partition(1000);
+        for i in 0..100u64 {
+            let off = p.append(i as i64, vec![], vec![i as u8]).unwrap();
+            assert_eq!(off, i);
+        }
+        assert_eq!(p.end_offset(), 100);
+    }
+
+    #[test]
+    fn fetch_from_offset() {
+        let p = mem_partition(1000);
+        for i in 0..50u64 {
+            p.append(i as i64, vec![], vec![i as u8]).unwrap();
+        }
+        let recs = p.fetch(10, 5).unwrap();
+        assert_eq!(recs.len(), 5);
+        assert_eq!(recs[0].offset, 10);
+        assert_eq!(recs[4].offset, 14);
+        assert!(p.fetch(50, 5).unwrap().is_empty());
+        assert!(p.fetch(0, 0).unwrap().is_empty());
+    }
+
+    #[test]
+    fn retention_truncates_memory() {
+        let p = mem_partition(10);
+        for i in 0..100u64 {
+            p.append(i as i64, vec![], vec![]).unwrap();
+        }
+        assert_eq!(p.tail_base(), 90);
+        let recs = p.fetch(95, 100).unwrap();
+        assert_eq!(recs.len(), 5);
+    }
+
+    #[test]
+    fn durable_partition_replays_from_disk_below_tail() {
+        let tmp = TempDir::new("part_replay");
+        let p = Partition::create(
+            0,
+            Some(tmp.path().to_path_buf()),
+            1 << 12, // small segments to force rolling
+            10,      // tiny in-memory tail
+            FsyncPolicy::EveryN(16),
+        )
+        .unwrap();
+        for i in 0..200u64 {
+            p.append(i as i64, vec![], format!("payload_{i}").into_bytes())
+                .unwrap();
+        }
+        p.sync().unwrap();
+        // offset 0 is long out of the memory tail — must come from disk
+        let recs = p.fetch(0, 5).unwrap();
+        assert_eq!(recs.len(), 5);
+        assert_eq!(recs[0].offset, 0);
+        assert_eq!(recs[0].payload, b"payload_0");
+        // and fetching the tail still works
+        let recs = p.fetch(195, 10).unwrap();
+        assert_eq!(recs.len(), 5);
+    }
+
+    #[test]
+    fn recover_restores_offsets_and_records() {
+        let tmp = TempDir::new("part_recover");
+        let dir = tmp.path().to_path_buf();
+        {
+            let p = Partition::create(0, Some(dir.clone()), 1 << 12, 1000, FsyncPolicy::Always)
+                .unwrap();
+            for i in 0..30u64 {
+                p.append(i as i64, vec![], vec![i as u8]).unwrap();
+            }
+        }
+        let p = Partition::recover(0, dir, 1 << 12, 1000, FsyncPolicy::Never).unwrap();
+        assert_eq!(p.end_offset(), 30);
+        let recs = p.fetch(0, 100).unwrap();
+        assert_eq!(recs.len(), 30);
+        // appends continue from the recovered offset
+        let off = p.append(99, vec![], vec![]).unwrap();
+        assert_eq!(off, 30);
+    }
+
+    #[test]
+    fn wait_for_data_times_out_and_wakes() {
+        let p = std::sync::Arc::new(mem_partition(100));
+        assert!(!p.wait_for_data(0, Duration::from_millis(20)));
+        let p2 = p.clone();
+        let t = std::thread::spawn(move || {
+            std::thread::sleep(Duration::from_millis(30));
+            p2.append(1, vec![], vec![]).unwrap();
+        });
+        assert!(p.wait_for_data(0, Duration::from_secs(5)));
+        t.join().unwrap();
+    }
+
+    #[test]
+    fn segment_rolling_creates_multiple_files() {
+        let tmp = TempDir::new("part_roll");
+        let p = Partition::create(
+            0,
+            Some(tmp.path().to_path_buf()),
+            256, // tiny segments
+            1000,
+            FsyncPolicy::Never,
+        )
+        .unwrap();
+        for i in 0..100u64 {
+            p.append(i as i64, vec![], vec![0u8; 32]).unwrap();
+        }
+        p.sync().unwrap();
+        let segs = segment::list_segments(tmp.path()).unwrap();
+        assert!(segs.len() > 1, "expected rolled segments, got {}", segs.len());
+    }
+}

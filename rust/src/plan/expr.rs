@@ -1,0 +1,265 @@
+//! Filter expression mini-language (the plan DAG's Filter operator).
+//!
+//! Railgun restricts query expressibility to a strict operator order
+//! (paper §3.3.2) in exchange for aggressive plan sharing; filters are
+//! simple predicate trees over event fields, compiled against the stream
+//! schema once at registration time so evaluation is index-based.
+
+use crate::error::{Error, Result};
+use crate::event::{Event, Schema, Value};
+
+/// Comparison operator.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum CmpOp {
+    /// `=`
+    Eq,
+    /// `!=`
+    Ne,
+    /// `<`
+    Lt,
+    /// `<=`
+    Le,
+    /// `>`
+    Gt,
+    /// `>=`
+    Ge,
+}
+
+/// An (un-compiled) filter predicate over named fields.
+#[derive(Debug, Clone, PartialEq)]
+pub enum FilterExpr {
+    /// Compare a field against a literal.
+    Cmp {
+        /// Field name.
+        field: String,
+        /// Operator.
+        op: CmpOp,
+        /// Literal to compare against.
+        value: Value,
+    },
+    /// Conjunction.
+    And(Box<FilterExpr>, Box<FilterExpr>),
+    /// Disjunction.
+    Or(Box<FilterExpr>, Box<FilterExpr>),
+    /// Negation.
+    Not(Box<FilterExpr>),
+}
+
+impl FilterExpr {
+    /// Convenience: `field op value`.
+    pub fn cmp(field: &str, op: CmpOp, value: Value) -> FilterExpr {
+        FilterExpr::Cmp {
+            field: field.to_string(),
+            op,
+            value,
+        }
+    }
+
+    /// `self AND other`.
+    pub fn and(self, other: FilterExpr) -> FilterExpr {
+        FilterExpr::And(Box::new(self), Box::new(other))
+    }
+
+    /// `self OR other`.
+    pub fn or(self, other: FilterExpr) -> FilterExpr {
+        FilterExpr::Or(Box::new(self), Box::new(other))
+    }
+
+    /// Compile against a schema (resolves field names to indices).
+    pub fn compile(&self, schema: &Schema) -> Result<CompiledExpr> {
+        Ok(match self {
+            FilterExpr::Cmp { field, op, value } => {
+                let idx = schema
+                    .index_of(field)
+                    .ok_or_else(|| Error::invalid(format!("filter: unknown field '{field}'")))?;
+                CompiledExpr::Cmp {
+                    idx,
+                    op: *op,
+                    value: value.clone(),
+                }
+            }
+            FilterExpr::And(a, b) => {
+                CompiledExpr::And(Box::new(a.compile(schema)?), Box::new(b.compile(schema)?))
+            }
+            FilterExpr::Or(a, b) => {
+                CompiledExpr::Or(Box::new(a.compile(schema)?), Box::new(b.compile(schema)?))
+            }
+            FilterExpr::Not(a) => CompiledExpr::Not(Box::new(a.compile(schema)?)),
+        })
+    }
+}
+
+/// Index-resolved predicate, ready for hot-path evaluation.
+#[derive(Debug, Clone, PartialEq)]
+pub enum CompiledExpr {
+    /// Field-index comparison.
+    Cmp {
+        /// Field position in the schema.
+        idx: usize,
+        /// Operator.
+        op: CmpOp,
+        /// Literal.
+        value: Value,
+    },
+    /// Conjunction.
+    And(Box<CompiledExpr>, Box<CompiledExpr>),
+    /// Disjunction.
+    Or(Box<CompiledExpr>, Box<CompiledExpr>),
+    /// Negation.
+    Not(Box<CompiledExpr>),
+}
+
+impl CompiledExpr {
+    /// Evaluate against an event. Null fields compare false (SQL-ish
+    /// three-valued logic collapsed to false).
+    pub fn eval(&self, event: &Event) -> bool {
+        match self {
+            CompiledExpr::Cmp { idx, op, value } => cmp_values(event.value(*idx), value, *op),
+            CompiledExpr::And(a, b) => a.eval(event) && b.eval(event),
+            CompiledExpr::Or(a, b) => a.eval(event) || b.eval(event),
+            CompiledExpr::Not(a) => !a.eval(event),
+        }
+    }
+}
+
+fn cmp_values(lhs: &Value, rhs: &Value, op: CmpOp) -> bool {
+    use std::cmp::Ordering;
+    let ord: Option<Ordering> = match (lhs, rhs) {
+        (Value::Null, _) | (_, Value::Null) => None,
+        (Value::Str(a), Value::Str(b)) => Some(a.cmp(b)),
+        (Value::Bool(a), Value::Bool(b)) => Some(a.cmp(b)),
+        // numerics compare cross-type (I64 vs F64)
+        (a, b) => match (a.as_f64(), b.as_f64()) {
+            (Some(x), Some(y)) => x.partial_cmp(&y),
+            _ => None,
+        },
+    };
+    match ord {
+        None => false,
+        Some(o) => match op {
+            CmpOp::Eq => o == Ordering::Equal,
+            CmpOp::Ne => o != Ordering::Equal,
+            CmpOp::Lt => o == Ordering::Less,
+            CmpOp::Le => o != Ordering::Greater,
+            CmpOp::Gt => o == Ordering::Greater,
+            CmpOp::Ge => o != Ordering::Less,
+        },
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::event::{FieldType, Schema, SchemaRef};
+
+    fn schema() -> SchemaRef {
+        Schema::of(&[
+            ("card", FieldType::Str),
+            ("amount", FieldType::F64),
+            ("cnp", FieldType::Bool),
+            ("n", FieldType::I64),
+        ])
+        .unwrap()
+    }
+
+    fn ev(card: &str, amount: f64, cnp: bool, n: i64) -> Event {
+        Event::new(
+            0,
+            vec![
+                Value::Str(card.into()),
+                Value::F64(amount),
+                Value::Bool(cnp),
+                Value::I64(n),
+            ],
+        )
+    }
+
+    #[test]
+    fn numeric_comparisons() {
+        let s = schema();
+        let e = ev("c1", 100.0, true, 5);
+        let gt = FilterExpr::cmp("amount", CmpOp::Gt, Value::F64(50.0))
+            .compile(&s)
+            .unwrap();
+        assert!(gt.eval(&e));
+        let lt = FilterExpr::cmp("amount", CmpOp::Lt, Value::F64(50.0))
+            .compile(&s)
+            .unwrap();
+        assert!(!lt.eval(&e));
+        // i64 field vs f64 literal (cross-type numeric)
+        let ge = FilterExpr::cmp("n", CmpOp::Ge, Value::F64(5.0))
+            .compile(&s)
+            .unwrap();
+        assert!(ge.eval(&e));
+        let eq = FilterExpr::cmp("n", CmpOp::Eq, Value::I64(5))
+            .compile(&s)
+            .unwrap();
+        assert!(eq.eval(&e));
+    }
+
+    #[test]
+    fn string_and_bool_comparisons() {
+        let s = schema();
+        let e = ev("c1", 1.0, true, 0);
+        assert!(FilterExpr::cmp("card", CmpOp::Eq, Value::Str("c1".into()))
+            .compile(&s)
+            .unwrap()
+            .eval(&e));
+        assert!(FilterExpr::cmp("card", CmpOp::Ne, Value::Str("c2".into()))
+            .compile(&s)
+            .unwrap()
+            .eval(&e));
+        assert!(FilterExpr::cmp("cnp", CmpOp::Eq, Value::Bool(true))
+            .compile(&s)
+            .unwrap()
+            .eval(&e));
+    }
+
+    #[test]
+    fn boolean_combinators() {
+        let s = schema();
+        let e = ev("c1", 100.0, false, 0);
+        let expr = FilterExpr::cmp("amount", CmpOp::Gt, Value::F64(50.0))
+            .and(FilterExpr::cmp("cnp", CmpOp::Eq, Value::Bool(true)));
+        assert!(!expr.compile(&s).unwrap().eval(&e));
+        let expr = FilterExpr::cmp("amount", CmpOp::Gt, Value::F64(50.0))
+            .or(FilterExpr::cmp("cnp", CmpOp::Eq, Value::Bool(true)));
+        assert!(expr.compile(&s).unwrap().eval(&e));
+        let expr = FilterExpr::Not(Box::new(FilterExpr::cmp(
+            "cnp",
+            CmpOp::Eq,
+            Value::Bool(true),
+        )));
+        assert!(expr.compile(&s).unwrap().eval(&e));
+    }
+
+    #[test]
+    fn nulls_compare_false() {
+        let s = schema();
+        let e = Event::new(0, vec![Value::Null, Value::Null, Value::Null, Value::Null]);
+        for op in [CmpOp::Eq, CmpOp::Ne, CmpOp::Lt, CmpOp::Ge] {
+            let expr = FilterExpr::cmp("amount", op, Value::F64(1.0))
+                .compile(&s)
+                .unwrap();
+            assert!(!expr.eval(&e), "{op:?} against null must be false");
+        }
+    }
+
+    #[test]
+    fn type_mismatch_compares_false() {
+        let s = schema();
+        let e = ev("c1", 1.0, true, 0);
+        let expr = FilterExpr::cmp("card", CmpOp::Eq, Value::F64(1.0))
+            .compile(&s)
+            .unwrap();
+        assert!(!expr.eval(&e));
+    }
+
+    #[test]
+    fn unknown_field_fails_compile() {
+        let s = schema();
+        assert!(FilterExpr::cmp("nope", CmpOp::Eq, Value::I64(1))
+            .compile(&s)
+            .is_err());
+    }
+}

@@ -1,0 +1,603 @@
+//! The plan DAG (paper §3.3.2): `Window → Filter → GroupBy → Aggregator`
+//! with **prefix sharing**.
+//!
+//! Metrics over the same (topic, partition) compile into one DAG; metrics
+//! sharing a window spec share the `Window` node (and therefore its
+//! reservoir iterators), metrics sharing a filter share the `Filter`
+//! node, and metrics grouping by the same fields share the group-key
+//! computation — the optimization Figure 4 of the paper illustrates for
+//! Q1/Q2.
+//!
+//! The Window node is driven by *iterator bundles*: one reservoir
+//! iterator per distinct time offset. A window with size `w` and delay
+//! `d` subscribes its **arrive** role to the bundle at offset `d` (its
+//! tail) and its **expire** role to the bundle at offset `d + w` (its
+//! head). Aligned windows therefore share iterators — e.g. all
+//! zero-delay sliding windows share one tail iterator at offset 0,
+//! reproducing the paper's Figure 3 sharing rule; misaligned windows
+//! (Figure 6 bottom) cannot share.
+
+pub mod expr;
+mod statestore;
+
+pub use expr::{CmpOp, CompiledExpr, FilterExpr};
+pub use statestore::StateStore;
+
+use crate::agg::{AggKind, AggState};
+use crate::error::{Error, Result};
+use crate::event::{Event, SchemaRef, Value};
+use crate::reservoir::{ResIterator, Reservoir};
+use crate::util::clock::TimestampMs;
+use crate::util::hash;
+use crate::window::WindowSpec;
+
+/// A metric registration (one aggregation query).
+#[derive(Debug, Clone)]
+pub struct MetricSpec {
+    /// Unique metric name.
+    pub name: String,
+    /// Aggregation function.
+    pub agg: AggKind,
+    /// Aggregated field (None only for `COUNT(*)`).
+    pub field: Option<String>,
+    /// Window specification.
+    pub window: WindowSpec,
+    /// Group-by fields (may be empty for a global aggregate).
+    pub group_by: Vec<String>,
+    /// Optional pre-aggregation filter.
+    pub filter: Option<FilterExpr>,
+}
+
+impl MetricSpec {
+    /// Convenience constructor for the common `agg(field) group by g` case.
+    pub fn new(
+        name: &str,
+        agg: AggKind,
+        field: Option<&str>,
+        window: WindowSpec,
+        group_by: &[&str],
+    ) -> MetricSpec {
+        MetricSpec {
+            name: name.to_string(),
+            agg,
+            field: field.map(|s| s.to_string()),
+            window,
+            group_by: group_by.iter().map(|s| s.to_string()).collect(),
+            filter: None,
+        }
+    }
+
+    /// Attach a filter.
+    pub fn with_filter(mut self, f: FilterExpr) -> MetricSpec {
+        self.filter = Some(f);
+        self
+    }
+}
+
+/// One per-event metric result (sent to the reply topic).
+#[derive(Debug, Clone, PartialEq)]
+pub struct MetricReply {
+    /// Metric id within this plan.
+    pub metric_id: u32,
+    /// Metric name.
+    pub metric: String,
+    /// Rendered group key (fields joined with `,`).
+    pub group: String,
+    /// Aggregate value after this event (None = empty-window identity).
+    pub value: Option<f64>,
+    /// Timestamp of the triggering event.
+    pub event_ts: TimestampMs,
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum Role {
+    Arrive,
+    Expire,
+}
+
+struct AggNode {
+    metric_id: u32,
+    kind: AggKind,
+    field_idx: Option<usize>,
+}
+
+struct GroupNode {
+    field_idxs: Vec<usize>,
+    aggs: Vec<usize>,
+}
+
+struct FilterNode {
+    expr: Option<CompiledExpr>,
+    groups: Vec<usize>,
+}
+
+struct WindowNode {
+    spec: WindowSpec,
+    filters: Vec<usize>,
+}
+
+struct Bundle {
+    offset_ms: i64,
+    iter: ResIterator,
+    /// (window node, role) pairs fed by this iterator.
+    subs: Vec<(usize, Role)>,
+}
+
+struct Topo {
+    schema: SchemaRef,
+    windows: Vec<WindowNode>,
+    filters: Vec<FilterNode>,
+    groups: Vec<GroupNode>,
+    aggs: Vec<AggNode>,
+    metric_names: Vec<String>,
+}
+
+/// A compiled plan over one task processor's reservoir + state store.
+pub struct Plan {
+    topo: Topo,
+    bundles: Vec<Bundle>,
+    state: StateStore,
+    last_t_eval: TimestampMs,
+    key_scratch: Vec<u8>,
+}
+
+impl Plan {
+    /// Compile `specs` into a shared DAG. Iterators start at sequence 0 —
+    /// callers recovering from a checkpoint must call
+    /// [`Plan::restore_positions`] before the first advance.
+    pub fn build(
+        schema: SchemaRef,
+        specs: &[MetricSpec],
+        reservoir: &Reservoir,
+        state: StateStore,
+    ) -> Result<Plan> {
+        let mut plan = Plan {
+            topo: Topo {
+                schema,
+                windows: Vec::new(),
+                filters: Vec::new(),
+                groups: Vec::new(),
+                aggs: Vec::new(),
+                metric_names: Vec::new(),
+            },
+            bundles: Vec::new(),
+            state,
+            last_t_eval: i64::MIN,
+            key_scratch: Vec::with_capacity(64),
+        };
+        for spec in specs {
+            plan.register(spec, reservoir)?;
+        }
+        Ok(plan)
+    }
+
+    /// Register a metric into the DAG (with prefix sharing); returns its
+    /// metric id. Does **not** backfill — see [`Plan::add_metric_backfill`].
+    pub fn register(&mut self, spec: &MetricSpec, reservoir: &Reservoir) -> Result<u32> {
+        spec.window.validate()?;
+        if spec.name.is_empty() {
+            return Err(Error::invalid("metric name must not be empty"));
+        }
+        if self.topo.metric_names.iter().any(|n| n == &spec.name) {
+            return Err(Error::invalid(format!("metric '{}' already exists", spec.name)));
+        }
+        if spec.agg.needs_field() && spec.field.is_none() {
+            return Err(Error::invalid(format!(
+                "metric '{}': {:?} needs a field",
+                spec.name, spec.agg
+            )));
+        }
+        let field_idx = match &spec.field {
+            Some(f) => Some(
+                self.topo
+                    .schema
+                    .index_of(f)
+                    .ok_or_else(|| Error::invalid(format!("unknown field '{f}'")))?,
+            ),
+            None => None,
+        };
+        let group_idxs: Vec<usize> = spec
+            .group_by
+            .iter()
+            .map(|g| {
+                self.topo
+                    .schema
+                    .index_of(g)
+                    .ok_or_else(|| Error::invalid(format!("unknown group-by field '{g}'")))
+            })
+            .collect::<Result<_>>()?;
+        let compiled = match &spec.filter {
+            Some(f) => Some(f.compile(&self.topo.schema)?),
+            None => None,
+        };
+
+        // window node (shared by spec equality)
+        let w_idx = match self.topo.windows.iter().position(|w| w.spec == spec.window) {
+            Some(i) => i,
+            None => {
+                self.topo.windows.push(WindowNode {
+                    spec: spec.window,
+                    filters: Vec::new(),
+                });
+                let w_idx = self.topo.windows.len() - 1;
+                // subscribe its bundles
+                self.subscribe(spec.window.tail_offset(), w_idx, Role::Arrive, reservoir);
+                self.subscribe(spec.window.head_offset(), w_idx, Role::Expire, reservoir);
+                w_idx
+            }
+        };
+        // filter node (shared within the window)
+        let f_idx = match self.topo.windows[w_idx]
+            .filters
+            .iter()
+            .find(|&&f| self.topo.filters[f].expr == compiled)
+        {
+            Some(&i) => i,
+            None => {
+                self.topo.filters.push(FilterNode {
+                    expr: compiled,
+                    groups: Vec::new(),
+                });
+                let f_idx = self.topo.filters.len() - 1;
+                self.topo.windows[w_idx].filters.push(f_idx);
+                f_idx
+            }
+        };
+        // group node (shared within the filter)
+        let g_idx = match self.topo.filters[f_idx]
+            .groups
+            .iter()
+            .find(|&&g| self.topo.groups[g].field_idxs == group_idxs)
+        {
+            Some(&i) => i,
+            None => {
+                self.topo.groups.push(GroupNode {
+                    field_idxs: group_idxs,
+                    aggs: Vec::new(),
+                });
+                let g_idx = self.topo.groups.len() - 1;
+                self.topo.filters[f_idx].groups.push(g_idx);
+                g_idx
+            }
+        };
+        // aggregator leaf
+        let metric_id = self.topo.metric_names.len() as u32;
+        self.topo.metric_names.push(spec.name.clone());
+        self.topo.aggs.push(AggNode {
+            metric_id,
+            kind: spec.agg,
+            field_idx,
+        });
+        let a_idx = self.topo.aggs.len() - 1;
+        self.topo.groups[g_idx].aggs.push(a_idx);
+        Ok(metric_id)
+    }
+
+    fn subscribe(&mut self, offset_ms: i64, w_idx: usize, role: Role, reservoir: &Reservoir) {
+        match self.bundles.iter_mut().find(|b| b.offset_ms == offset_ms) {
+            Some(b) => b.subs.push((w_idx, role)),
+            None => self.bundles.push(Bundle {
+                offset_ms,
+                iter: reservoir.iterator_at(0),
+                subs: vec![(w_idx, role)],
+            }),
+        }
+    }
+
+    /// Advance evaluation time to `t_eval` (must be monotonic), draining
+    /// every iterator bundle up to its bound and updating aggregation
+    /// states. Returns the per-event metric replies for arrivals at
+    /// offset 0 (the live arrival frontier).
+    pub fn advance(&mut self, t_eval: TimestampMs) -> Result<Vec<MetricReply>> {
+        if t_eval < self.last_t_eval {
+            return Err(Error::invalid(format!(
+                "advance: t_eval went backwards ({t_eval} < {})",
+                self.last_t_eval
+            )));
+        }
+        let mut replies = Vec::new();
+        let mut bundles = std::mem::take(&mut self.bundles);
+        // Drain in decreasing offset order: expirations (large offsets)
+        // must update state before the live arrival (offset 0) emits its
+        // replies, so every reply reflects the exact window content at
+        // T_eval.
+        bundles.sort_by_key(|b| std::cmp::Reverse(b.offset_ms));
+        let mut failed: Option<Error> = None;
+        'outer: for b in &mut bundles {
+            let bound = t_eval - b.offset_ms;
+            let emit = b.offset_ms == 0;
+            loop {
+                match b.iter.peek_ts() {
+                    Ok(Some(ts)) if ts < bound => {}
+                    Ok(_) => break,
+                    Err(e) => {
+                        failed = Some(e);
+                        break 'outer;
+                    }
+                }
+                let topo = &self.topo;
+                let state = &mut self.state;
+                let scratch = &mut self.key_scratch;
+                let subs = &b.subs;
+                let replies_ref = &mut replies;
+                let mut inner_err: Option<Error> = None;
+                let stepped = b.iter.next(|seq, event| {
+                    for (w_idx, role) in subs {
+                        if let Err(e) = dispatch(
+                            topo,
+                            state,
+                            scratch,
+                            *w_idx,
+                            *role,
+                            seq,
+                            event,
+                            emit,
+                            None,
+                            replies_ref,
+                        ) {
+                            inner_err = Some(e);
+                            return;
+                        }
+                    }
+                });
+                if let Some(e) = inner_err {
+                    failed = Some(e);
+                    break 'outer;
+                }
+                match stepped {
+                    Ok(Some(())) => {}
+                    Ok(None) => break,
+                    Err(e) => {
+                        failed = Some(e);
+                        break 'outer;
+                    }
+                }
+            }
+        }
+        self.bundles = bundles;
+        if let Some(e) = failed {
+            return Err(e);
+        }
+        self.last_t_eval = t_eval;
+        Ok(replies)
+    }
+
+    /// Add a metric at runtime and **backfill** its state from the
+    /// reservoir history (the paper's §5 future-work item). Returns the
+    /// new metric id.
+    pub fn add_metric_backfill(
+        &mut self,
+        spec: &MetricSpec,
+        reservoir: &Reservoir,
+    ) -> Result<u32> {
+        let metric_id = self.register(spec, reservoir)?;
+        if self.last_t_eval == i64::MIN {
+            return Ok(metric_id); // nothing processed yet
+        }
+        // find the window node of the new metric
+        let w_idx = self
+            .topo
+            .windows
+            .iter()
+            .position(|w| w.spec == spec.window)
+            .expect("window registered above");
+        // replay history into this metric only, via temp iterators
+        for (offset, role) in [
+            (spec.window.tail_offset(), Role::Arrive),
+            (spec.window.head_offset(), Role::Expire),
+        ] {
+            let bound = self.last_t_eval - offset;
+            let mut it = reservoir.iterator_at(0);
+            loop {
+                match it.peek_ts()? {
+                    Some(ts) if ts < bound => {}
+                    _ => break,
+                }
+                let topo = &self.topo;
+                let state = &mut self.state;
+                let scratch = &mut self.key_scratch;
+                let mut inner_err: Option<Error> = None;
+                let mut sink = Vec::new();
+                it.next(|seq, event| {
+                    if let Err(e) = dispatch(
+                        topo,
+                        state,
+                        scratch,
+                        w_idx,
+                        role,
+                        seq,
+                        event,
+                        false,
+                        Some(metric_id),
+                        &mut sink,
+                    ) {
+                        inner_err = Some(e);
+                    }
+                })?;
+                if let Some(e) = inner_err {
+                    return Err(e);
+                }
+            }
+            // a freshly-created bundle must start where the backfill ended
+            if let Some(b) = self.bundles.iter_mut().find(|b| b.offset_ms == offset) {
+                if b.iter.seq() == 0 {
+                    b.iter.seek(it.seq());
+                }
+            }
+        }
+        Ok(metric_id)
+    }
+
+    /// Current aggregate value for a metric + group key values.
+    pub fn value_for(&mut self, metric: &str, group_values: &[Value]) -> Result<Option<f64>> {
+        let metric_id = self
+            .topo
+            .metric_names
+            .iter()
+            .position(|n| n == metric)
+            .ok_or_else(|| Error::not_found(format!("metric '{metric}'")))?
+            as u32;
+        let mut key = Vec::with_capacity(32);
+        for v in group_values {
+            v.key_bytes(&mut key);
+            key.push(0x1f);
+        }
+        self.state.value(metric_id, &key)
+    }
+
+    /// Metric name by id.
+    pub fn metric_name(&self, metric_id: u32) -> Option<&str> {
+        self.topo.metric_names.get(metric_id as usize).map(|s| s.as_str())
+    }
+
+    /// Number of registered metrics.
+    pub fn metric_count(&self) -> usize {
+        self.topo.metric_names.len()
+    }
+
+    /// Number of live reservoir iterators (the paper's Figure 6 x-axis).
+    pub fn iterator_count(&self) -> usize {
+        self.bundles.len()
+    }
+
+    /// DAG node counts `(windows, filters, groups, aggs)` — prefix-sharing
+    /// observability, used by the ablation bench.
+    pub fn node_counts(&self) -> (usize, usize, usize, usize) {
+        (
+            self.topo.windows.len(),
+            self.topo.filters.len(),
+            self.topo.groups.len(),
+            self.topo.aggs.len(),
+        )
+    }
+
+    /// Last evaluation time.
+    pub fn last_t_eval(&self) -> TimestampMs {
+        self.last_t_eval
+    }
+
+    /// Iterator positions per bundle offset, sorted by offset
+    /// (checkpointing).
+    pub fn positions(&self) -> Vec<(i64, u64)> {
+        let mut v: Vec<(i64, u64)> = self
+            .bundles
+            .iter()
+            .map(|b| (b.offset_ms, b.iter.seq()))
+            .collect();
+        v.sort_unstable();
+        v
+    }
+
+    /// Restore iterator positions + evaluation time from a checkpoint.
+    pub fn restore_positions(&mut self, positions: &[(i64, u64)], t_eval: TimestampMs) {
+        for (offset, seq) in positions {
+            if let Some(b) = self.bundles.iter_mut().find(|b| b.offset_ms == *offset) {
+                b.iter.seek(*seq);
+            }
+        }
+        self.last_t_eval = t_eval;
+    }
+
+    /// Access the state store (checkpoint flush, stats).
+    pub fn state(&mut self) -> &mut StateStore {
+        &mut self.state
+    }
+}
+
+/// Route one event through a window node's sub-DAG.
+#[allow(clippy::too_many_arguments)]
+fn dispatch(
+    topo: &Topo,
+    state: &mut StateStore,
+    scratch: &mut Vec<u8>,
+    w_idx: usize,
+    role: Role,
+    seq: u64,
+    event: &Event,
+    emit: bool,
+    only_metric: Option<u32>,
+    replies: &mut Vec<MetricReply>,
+) -> Result<()> {
+    let win = &topo.windows[w_idx];
+    for &f_idx in &win.filters {
+        let fnode = &topo.filters[f_idx];
+        if let Some(expr) = &fnode.expr {
+            if !expr.eval(event) {
+                continue;
+            }
+        }
+        for &g_idx in &fnode.groups {
+            let gnode = &topo.groups[g_idx];
+            // group key: field key-bytes joined by 0x1f separators
+            scratch.clear();
+            for &idx in &gnode.field_idxs {
+                event.value(idx).key_bytes(scratch);
+                scratch.push(0x1f);
+            }
+            for &a_idx in &gnode.aggs {
+                let anode = &topo.aggs[a_idx];
+                if let Some(only) = only_metric {
+                    if anode.metric_id != only {
+                        continue;
+                    }
+                }
+                // resolve the aggregated value; SQL semantics: NULL (and
+                // non-numeric) values are excluded from field aggregates.
+                let (val, raw_hash, include) = match anode.field_idx {
+                    None => (0.0, 0u64, true),
+                    Some(fi) => {
+                        let v = event.value(fi);
+                        match v {
+                            Value::Null => (0.0, 0, false),
+                            _ => {
+                                if anode.kind == AggKind::CountDistinct {
+                                    let mut kb = Vec::with_capacity(16);
+                                    v.key_bytes(&mut kb);
+                                    (0.0, hash::hash64(&kb), true)
+                                } else {
+                                    match v.as_f64() {
+                                        Some(x) => (x, 0, true),
+                                        None => (0.0, 0, false),
+                                    }
+                                }
+                            }
+                        }
+                    }
+                };
+                let kind = anode.kind;
+                let value = if include {
+                    state.update(
+                        anode.metric_id,
+                        scratch,
+                        || AggState::new(kind),
+                        |st| match role {
+                            Role::Arrive => st.add(seq, val, raw_hash),
+                            Role::Expire => st.evict(seq, val, raw_hash),
+                        },
+                    )?
+                } else {
+                    state.value(anode.metric_id, scratch)?
+                };
+                if emit && role == Role::Arrive {
+                    let group = gnode
+                        .field_idxs
+                        .iter()
+                        .map(|&i| event.value(i).to_string())
+                        .collect::<Vec<_>>()
+                        .join(",");
+                    replies.push(MetricReply {
+                        metric_id: anode.metric_id,
+                        metric: topo.metric_names[anode.metric_id as usize].clone(),
+                        group,
+                        value,
+                        event_ts: event.timestamp,
+                    });
+                }
+            }
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests;

@@ -1,0 +1,278 @@
+//! The aggregation **state store** (paper §3.3.2): kvstore-backed
+//! persistence with a bounded in-memory cache.
+//!
+//! Keys are `varint(metric_id) ++ group_key_bytes`. Updates are
+//! write-through: the hot path mutates the cached state and appends the
+//! encoded state to the kvstore (WAL + memtable — no fsync, no disk read).
+//! The cache is sized in entries; eviction drops the in-memory copy only
+//! (the kvstore holds the durable truth), which bounds memory even with
+//! unbounded group-by cardinality.
+
+use crate::agg::AggState;
+use crate::error::Result;
+use crate::kvstore::Store;
+use crate::util::hash::FxHashMap;
+use crate::util::varint;
+use std::collections::VecDeque;
+use std::sync::Arc;
+
+/// Cached, persistent aggregation states.
+pub struct StateStore {
+    store: Arc<Store>,
+    cache: FxHashMap<Vec<u8>, AggState>,
+    /// Insertion-order queue for cheap approximate-LRU eviction.
+    order: VecDeque<Vec<u8>>,
+    capacity: usize,
+    /// Cache misses that hit the kvstore (observability).
+    pub kv_reads: u64,
+    /// Write-throughs to the kvstore.
+    pub kv_writes: u64,
+    scratch: Vec<u8>,
+    key_scratch: Vec<u8>,
+}
+
+impl StateStore {
+    /// Wrap a kvstore with an `capacity`-entry state cache.
+    pub fn new(store: Arc<Store>, capacity: usize) -> StateStore {
+        StateStore {
+            store,
+            cache: FxHashMap::default(),
+            order: VecDeque::new(),
+            capacity: capacity.max(16),
+            kv_reads: 0,
+            kv_writes: 0,
+            scratch: Vec::with_capacity(64),
+            key_scratch: Vec::with_capacity(64),
+        }
+    }
+
+    /// Compose the storage key for `(metric_id, group_key)`.
+    pub fn compose_key(metric_id: u32, group_key: &[u8]) -> Vec<u8> {
+        let mut k = Vec::with_capacity(group_key.len() + 5);
+        varint::write_u32(&mut k, metric_id);
+        k.extend_from_slice(group_key);
+        k
+    }
+
+    /// Mutate the state for a key, creating it with `init` when absent,
+    /// then persist. Returns the post-update aggregate value.
+    ///
+    /// Hot path: the composed key lives in a reused scratch buffer and is
+    /// only heap-allocated when a new cache entry is inserted
+    /// (EXPERIMENTS.md §Perf).
+    pub fn update(
+        &mut self,
+        metric_id: u32,
+        group_key: &[u8],
+        init: impl FnOnce() -> AggState,
+        f: impl FnOnce(&mut AggState),
+    ) -> Result<Option<f64>> {
+        self.key_scratch.clear();
+        varint::write_u32(&mut self.key_scratch, metric_id);
+        self.key_scratch.extend_from_slice(group_key);
+        if !self.cache.contains_key(self.key_scratch.as_slice()) {
+            let loaded = match self.store.get(&self.key_scratch)? {
+                Some(bytes) => {
+                    self.kv_reads += 1;
+                    let mut pos = 0;
+                    AggState::decode(&bytes, &mut pos)?
+                }
+                None => init(),
+            };
+            let key = self.key_scratch.clone();
+            self.insert_cached(key, loaded);
+        }
+        let st = self
+            .cache
+            .get_mut(self.key_scratch.as_slice())
+            .expect("just inserted");
+        f(st);
+        let value = st.value();
+        // write-through
+        self.scratch.clear();
+        st.encode(&mut self.scratch);
+        self.store.put(&self.key_scratch, &self.scratch)?;
+        self.kv_writes += 1;
+        Ok(value)
+    }
+
+    /// Read the current aggregate value (no mutation).
+    pub fn value(&mut self, metric_id: u32, group_key: &[u8]) -> Result<Option<f64>> {
+        let key = Self::compose_key(metric_id, group_key);
+        if let Some(st) = self.cache.get(&key) {
+            return Ok(st.value());
+        }
+        match self.store.get(&key)? {
+            Some(bytes) => {
+                self.kv_reads += 1;
+                let mut pos = 0;
+                let st = AggState::decode(&bytes, &mut pos)?;
+                let v = st.value();
+                self.insert_cached(key, st);
+                Ok(v)
+            }
+            None => Ok(None),
+        }
+    }
+
+    /// Drop every state of a metric (metric deletion / backfill reset).
+    pub fn clear_metric(&mut self, metric_id: u32) -> Result<()> {
+        let prefix = {
+            let mut p = Vec::new();
+            varint::write_u32(&mut p, metric_id);
+            p
+        };
+        self.cache.retain(|k, _| !k.starts_with(&prefix));
+        for (k, _) in self.store.scan_prefix(&prefix)? {
+            self.store.delete(&k)?;
+        }
+        Ok(())
+    }
+
+    /// Flush underlying kvstore (checkpoint barrier).
+    pub fn flush(&self) -> Result<()> {
+        self.store.flush()
+    }
+
+    /// Number of states currently cached in memory.
+    pub fn cached_states(&self) -> usize {
+        self.cache.len()
+    }
+
+    fn insert_cached(&mut self, key: Vec<u8>, st: AggState) {
+        self.cache.insert(key.clone(), st);
+        self.order.push_back(key);
+        while self.cache.len() > self.capacity {
+            if let Some(old) = self.order.pop_front() {
+                // evicted entries were write-through persisted already
+                self.cache.remove(&old);
+            } else {
+                break;
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::agg::AggKind;
+    use crate::kvstore::StoreOptions;
+    use crate::util::tmp::TempDir;
+
+    fn setup(capacity: usize) -> (TempDir, StateStore) {
+        let tmp = TempDir::new("statestore");
+        let store = Arc::new(Store::open(tmp.path(), StoreOptions::default()).unwrap());
+        (tmp, StateStore::new(store, capacity))
+    }
+
+    #[test]
+    fn update_creates_and_accumulates() {
+        let (_tmp, mut ss) = setup(100);
+        let v = ss
+            .update(1, b"card_a", || AggState::new(AggKind::Sum), |st| {
+                st.add(0, 10.0, 0)
+            })
+            .unwrap();
+        assert_eq!(v, Some(10.0));
+        let v = ss
+            .update(1, b"card_a", || AggState::new(AggKind::Sum), |st| {
+                st.add(1, 5.0, 0)
+            })
+            .unwrap();
+        assert_eq!(v, Some(15.0));
+    }
+
+    #[test]
+    fn metrics_are_namespaced() {
+        let (_tmp, mut ss) = setup(100);
+        ss.update(1, b"k", || AggState::new(AggKind::Count), |st| {
+            st.add(0, 0.0, 0)
+        })
+        .unwrap();
+        ss.update(2, b"k", || AggState::new(AggKind::Count), |st| {
+            st.add(0, 0.0, 0)
+        })
+        .unwrap();
+        assert_eq!(ss.value(1, b"k").unwrap(), Some(1.0));
+        assert_eq!(ss.value(2, b"k").unwrap(), Some(1.0));
+        assert_eq!(ss.value(3, b"k").unwrap(), None);
+    }
+
+    #[test]
+    fn eviction_falls_back_to_kvstore() {
+        let (_tmp, mut ss) = setup(16); // tiny cache (min)
+        for i in 0..200u32 {
+            ss.update(
+                1,
+                format!("card_{i}").as_bytes(),
+                || AggState::new(AggKind::Sum),
+                |st| st.add(0, i as f64, 0),
+            )
+            .unwrap();
+        }
+        assert!(ss.cached_states() <= 16);
+        // every state still readable (from kvstore)
+        for i in 0..200u32 {
+            let v = ss.value(1, format!("card_{i}").as_bytes()).unwrap();
+            assert_eq!(v, Some(i as f64), "card_{i}");
+        }
+        assert!(ss.kv_reads > 0, "evicted states were re-read");
+    }
+
+    #[test]
+    fn update_after_eviction_resumes_from_persisted_state() {
+        let (_tmp, mut ss) = setup(16);
+        ss.update(1, b"victim", || AggState::new(AggKind::Sum), |st| {
+            st.add(0, 7.0, 0)
+        })
+        .unwrap();
+        // push it out of the cache
+        for i in 0..50u32 {
+            ss.update(
+                1,
+                format!("filler_{i}").as_bytes(),
+                || AggState::new(AggKind::Sum),
+                |st| st.add(0, 1.0, 0),
+            )
+            .unwrap();
+        }
+        let v = ss
+            .update(1, b"victim", || AggState::new(AggKind::Sum), |st| {
+                st.add(1, 3.0, 0)
+            })
+            .unwrap();
+        assert_eq!(v, Some(10.0), "accumulated across eviction");
+    }
+
+    #[test]
+    fn clear_metric_removes_only_that_metric() {
+        let (_tmp, mut ss) = setup(100);
+        for m in [1u32, 2] {
+            ss.update(m, b"k", || AggState::new(AggKind::Count), |st| {
+                st.add(0, 0.0, 0)
+            })
+            .unwrap();
+        }
+        ss.clear_metric(1).unwrap();
+        assert_eq!(ss.value(1, b"k").unwrap(), None);
+        assert_eq!(ss.value(2, b"k").unwrap(), Some(1.0));
+    }
+
+    #[test]
+    fn persists_across_reopen() {
+        let tmp = TempDir::new("statestore_reopen");
+        {
+            let store = Arc::new(Store::open(tmp.path(), StoreOptions::default()).unwrap());
+            let mut ss = StateStore::new(store, 100);
+            ss.update(7, b"card_z", || AggState::new(AggKind::Sum), |st| {
+                st.add(0, 42.0, 0)
+            })
+            .unwrap();
+            ss.flush().unwrap();
+        }
+        let store = Arc::new(Store::open(tmp.path(), StoreOptions::default()).unwrap());
+        let mut ss = StateStore::new(store, 100);
+        assert_eq!(ss.value(7, b"card_z").unwrap(), Some(42.0));
+    }
+}

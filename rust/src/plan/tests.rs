@@ -1,0 +1,565 @@
+//! Plan DAG tests: semantics vs a brute-force oracle, prefix sharing,
+//! iterator sharing, backfill.
+
+use super::*;
+use crate::agg::AggKind;
+use crate::event::{FieldType, Schema, SchemaRef};
+use crate::kvstore::{Store, StoreOptions};
+use crate::reservoir::{Reservoir, ReservoirConfig};
+use crate::util::clock::ms;
+use crate::util::rng::Rng;
+use crate::util::tmp::TempDir;
+use std::sync::Arc;
+
+fn schema() -> SchemaRef {
+    Schema::of(&[
+        ("card", FieldType::Str),
+        ("merchant", FieldType::Str),
+        ("amount", FieldType::F64),
+    ])
+    .unwrap()
+}
+
+fn ev(ts: i64, card: &str, merchant: &str, amount: f64) -> Event {
+    Event::new(
+        ts,
+        vec![
+            Value::Str(card.into()),
+            Value::Str(merchant.into()),
+            Value::F64(amount),
+        ],
+    )
+}
+
+struct Rig {
+    _tmp: TempDir,
+    reservoir: Reservoir,
+    plan: Plan,
+}
+
+fn rig(specs: &[MetricSpec]) -> Rig {
+    let tmp = TempDir::new("plan");
+    let rcfg = ReservoirConfig {
+        chunk_events: 16,
+        cache_chunks: 8,
+        ..ReservoirConfig::new(tmp.join("reservoir"))
+    };
+    let reservoir = Reservoir::open(rcfg, schema()).unwrap();
+    let store = Arc::new(Store::open(&tmp.join("state"), StoreOptions::default()).unwrap());
+    let state = StateStore::new(store, 10_000);
+    let plan = Plan::build(schema(), specs, &reservoir, state).unwrap();
+    Rig {
+        _tmp: tmp,
+        reservoir,
+        plan,
+    }
+}
+
+impl Rig {
+    /// Append + advance, the per-event cycle of a task processor.
+    fn feed(&mut self, e: Event) -> Vec<MetricReply> {
+        let t_eval = e.timestamp + 1;
+        self.reservoir.append(e).unwrap();
+        self.plan.advance(t_eval).unwrap()
+    }
+}
+
+fn q1_specs() -> Vec<MetricSpec> {
+    // the paper's Example 1
+    vec![
+        MetricSpec::new(
+            "sum_amount_by_card",
+            AggKind::Sum,
+            Some("amount"),
+            WindowSpec::sliding(5 * ms::MINUTE),
+            &["card"],
+        ),
+        MetricSpec::new(
+            "count_by_card",
+            AggKind::Count,
+            None,
+            WindowSpec::sliding(5 * ms::MINUTE),
+            &["card"],
+        ),
+        MetricSpec::new(
+            "avg_amount_by_merchant",
+            AggKind::Avg,
+            Some("amount"),
+            WindowSpec::sliding(5 * ms::MINUTE),
+            &["merchant"],
+        ),
+    ]
+}
+
+#[test]
+fn example1_dag_shares_prefix() {
+    let r = rig(&q1_specs());
+    // Figure 4: one window, one filter (none), two group nodes, three aggs
+    assert_eq!(r.plan.node_counts(), (1, 1, 2, 3));
+    // Figure 3: shared tail (offset 0) + shared head (offset 5min) = 2
+    assert_eq!(r.plan.iterator_count(), 2);
+}
+
+#[test]
+fn per_event_values_match_query() {
+    let mut r = rig(&q1_specs());
+    let m = ms::MINUTE;
+    let replies = r.feed(ev(0, "c1", "m1", 10.0));
+    assert_eq!(replies.len(), 3);
+    let sum = replies
+        .iter()
+        .find(|x| x.metric == "sum_amount_by_card")
+        .unwrap();
+    assert_eq!(sum.value, Some(10.0));
+    assert_eq!(sum.group, "c1");
+
+    let replies = r.feed(ev(m, "c1", "m2", 5.0));
+    let sum = replies
+        .iter()
+        .find(|x| x.metric == "sum_amount_by_card")
+        .unwrap();
+    assert_eq!(sum.value, Some(15.0));
+
+    // different card: independent group
+    let replies = r.feed(ev(m + 1, "c2", "m1", 100.0));
+    let sum = replies
+        .iter()
+        .find(|x| x.metric == "sum_amount_by_card")
+        .unwrap();
+    assert_eq!(sum.value, Some(100.0));
+    assert_eq!(sum.group, "c2");
+}
+
+#[test]
+fn events_expire_exactly_at_window_boundary() {
+    let mut r = rig(&q1_specs());
+    let m = ms::MINUTE;
+    r.feed(ev(0, "c1", "m1", 10.0));
+    r.feed(ev(m, "c1", "m1", 20.0));
+    // at 5:00 + 1ms the event at 0:00 is out (T−w ≤ t < T with w=5min)
+    let replies = r.feed(ev(5 * m, "c1", "m1", 1.0));
+    let sum = replies
+        .iter()
+        .find(|x| x.metric == "sum_amount_by_card")
+        .unwrap();
+    assert_eq!(sum.value, Some(21.0), "event at t=0 expired, t=1min alive");
+
+    let replies = r.feed(ev(6 * m, "c1", "m1", 1.0));
+    let sum = replies
+        .iter()
+        .find(|x| x.metric == "sum_amount_by_card")
+        .unwrap();
+    assert_eq!(sum.value, Some(2.0), "event at 1min expired too");
+}
+
+#[test]
+fn figure1_rule_triggers_on_fifth_event() {
+    // count(*) per card over 5 minutes; rule: block when count > 4
+    let specs = vec![MetricSpec::new(
+        "tx_count",
+        AggKind::Count,
+        None,
+        WindowSpec::sliding(5 * ms::MINUTE),
+        &["card"],
+    )];
+    let mut r = rig(&specs);
+    let m = ms::MINUTE;
+    let times = [30_000, m + 30_000, 2 * m + 30_000, 3 * m + 30_000, 5 * m + 15_000];
+    let mut counts = Vec::new();
+    for t in times {
+        let replies = r.feed(ev(t, "c1", "m1", 1.0));
+        counts.push(replies[0].value.unwrap());
+    }
+    assert_eq!(counts, vec![1.0, 2.0, 3.0, 4.0, 5.0]);
+    assert!(counts[4] > 4.0, "real sliding window catches the attack");
+}
+
+#[test]
+fn filter_is_applied_and_shared() {
+    let big = FilterExpr::cmp("amount", CmpOp::Gt, Value::F64(50.0));
+    let specs = vec![
+        MetricSpec::new(
+            "big_sum",
+            AggKind::Sum,
+            Some("amount"),
+            WindowSpec::sliding(ms::MINUTE),
+            &["card"],
+        )
+        .with_filter(big.clone()),
+        MetricSpec::new(
+            "big_count",
+            AggKind::Count,
+            None,
+            WindowSpec::sliding(ms::MINUTE),
+            &["card"],
+        )
+        .with_filter(big),
+        MetricSpec::new(
+            "all_count",
+            AggKind::Count,
+            None,
+            WindowSpec::sliding(ms::MINUTE),
+            &["card"],
+        ),
+    ];
+    let mut r = rig(&specs);
+    // shared window; two filter nodes (Some + None); group nodes under each
+    assert_eq!(r.plan.node_counts().0, 1);
+    assert_eq!(r.plan.node_counts().1, 2);
+
+    r.feed(ev(0, "c1", "m1", 10.0)); // fails filter
+    let replies = r.feed(ev(1, "c1", "m1", 60.0)); // passes
+    let big_sum = replies.iter().find(|x| x.metric == "big_sum").unwrap();
+    assert_eq!(big_sum.value, Some(60.0), "only the 60 counted");
+    let all = replies.iter().find(|x| x.metric == "all_count").unwrap();
+    assert_eq!(all.value, Some(2.0));
+    // filtered-out event produced no reply for filtered metrics
+    let first = r.plan.value_for("big_count", &[Value::Str("c1".into())]).unwrap();
+    assert_eq!(first, Some(1.0));
+}
+
+#[test]
+fn misaligned_windows_do_not_share_iterators() {
+    let specs = vec![
+        MetricSpec::new(
+            "m0",
+            AggKind::Count,
+            None,
+            WindowSpec::sliding(ms::MINUTE),
+            &["card"],
+        ),
+        MetricSpec::new(
+            "m1",
+            AggKind::Count,
+            None,
+            WindowSpec::sliding_delayed(ms::MINUTE, 10_000),
+            &["card"],
+        ),
+        MetricSpec::new(
+            "m2",
+            AggKind::Count,
+            None,
+            WindowSpec::sliding_delayed(ms::MINUTE, 20_000),
+            &["card"],
+        ),
+    ];
+    let r = rig(&specs);
+    // 3 windows × 2 iterators, nothing aligns
+    assert_eq!(r.plan.iterator_count(), 6);
+}
+
+#[test]
+fn aligned_heads_and_tails_share() {
+    let specs = vec![
+        MetricSpec::new(
+            "w1",
+            AggKind::Count,
+            None,
+            WindowSpec::sliding(ms::MINUTE),
+            &["card"],
+        ),
+        MetricSpec::new(
+            "w5",
+            AggKind::Count,
+            None,
+            WindowSpec::sliding(5 * ms::MINUTE),
+            &["card"],
+        ),
+        // delayed by 1min with 4min size: head at 5min aligns with w5's head
+        MetricSpec::new(
+            "w4d1",
+            AggKind::Count,
+            None,
+            WindowSpec::sliding_delayed(4 * ms::MINUTE, ms::MINUTE),
+            &["card"],
+        ),
+    ];
+    let r = rig(&specs);
+    // offsets: tails {0, 0, 1min}, heads {1min, 5min, 5min}
+    // distinct: {0, 1min, 5min} = 3 iterators
+    assert_eq!(r.plan.iterator_count(), 3);
+}
+
+#[test]
+fn delayed_window_values_lag() {
+    let specs = vec![
+        MetricSpec::new(
+            "live",
+            AggKind::Count,
+            None,
+            WindowSpec::sliding(ms::MINUTE),
+            &["card"],
+        ),
+        MetricSpec::new(
+            "delayed",
+            AggKind::Count,
+            None,
+            WindowSpec::sliding_delayed(ms::MINUTE, 30_000),
+            &["card"],
+        ),
+    ];
+    let mut r = rig(&specs);
+    r.feed(ev(0, "c1", "m1", 1.0));
+    r.feed(ev(10_000, "c1", "m1", 1.0));
+    // delayed window [T-90s, T-30s) at T=10s: empty
+    assert_eq!(
+        r.plan.value_for("delayed", &[Value::Str("c1".into())]).unwrap(),
+        None
+    );
+    r.feed(ev(45_000, "c1", "m1", 1.0));
+    // at T=45s+1: delayed covers [−45s, 15s) ⇒ events at 0 and 10s
+    assert_eq!(
+        r.plan.value_for("delayed", &[Value::Str("c1".into())]).unwrap(),
+        Some(2.0)
+    );
+    assert_eq!(
+        r.plan.value_for("live", &[Value::Str("c1".into())]).unwrap(),
+        Some(3.0),
+        "live 1-min window [T-60s, T) still holds all three events"
+    );
+}
+
+#[test]
+fn brute_force_oracle_randomized() {
+    let specs = vec![
+        MetricSpec::new(
+            "sum5",
+            AggKind::Sum,
+            Some("amount"),
+            WindowSpec::sliding(5 * ms::MINUTE),
+            &["card"],
+        ),
+        MetricSpec::new(
+            "min5",
+            AggKind::Min,
+            Some("amount"),
+            WindowSpec::sliding(5 * ms::MINUTE),
+            &["card"],
+        ),
+        MetricSpec::new(
+            "distinct_merchants",
+            AggKind::CountDistinct,
+            Some("merchant"),
+            WindowSpec::sliding(5 * ms::MINUTE),
+            &["card"],
+        ),
+    ];
+    let mut r = rig(&specs);
+    let mut rng = Rng::new(42);
+    let mut history: Vec<Event> = Vec::new();
+    let mut ts = 0i64;
+    for _ in 0..600 {
+        ts += rng.range_i64(1, 40_000); // up to 40s apart
+        let card = format!("c{}", rng.next_below(4));
+        let merchant = format!("m{}", rng.next_below(3));
+        let amount = (rng.next_below(1000) as f64) / 10.0;
+        let e = ev(ts, &card, &merchant, amount);
+        history.push(e.clone());
+        let replies = r.feed(e);
+        let t_eval = ts + 1;
+        let live: Vec<&Event> = history
+            .iter()
+            .filter(|h| {
+                t_eval - 5 * ms::MINUTE <= h.timestamp
+                    && h.timestamp < t_eval
+                    && h.values[0].as_str() == Some(card.as_str())
+            })
+            .collect();
+        let sum: f64 = live.iter().filter_map(|h| h.values[2].as_f64()).sum();
+        let min = live
+            .iter()
+            .filter_map(|h| h.values[2].as_f64())
+            .fold(f64::INFINITY, f64::min);
+        let distinct = live
+            .iter()
+            .filter_map(|h| h.values[1].as_str())
+            .collect::<std::collections::HashSet<_>>()
+            .len();
+        let got_sum = replies.iter().find(|x| x.metric == "sum5").unwrap();
+        assert!(
+            (got_sum.value.unwrap() - sum).abs() < 1e-6,
+            "sum at ts={ts}: got {:?} want {sum}",
+            got_sum.value
+        );
+        let got_min = replies.iter().find(|x| x.metric == "min5").unwrap();
+        assert_eq!(got_min.value, Some(min), "min at ts={ts}");
+        let got_d = replies
+            .iter()
+            .find(|x| x.metric == "distinct_merchants")
+            .unwrap();
+        assert_eq!(got_d.value, Some(distinct as f64), "distinct at ts={ts}");
+    }
+}
+
+#[test]
+fn backfill_matches_never_removed_metric() {
+    let base = MetricSpec::new(
+        "from_start",
+        AggKind::Sum,
+        Some("amount"),
+        WindowSpec::sliding(5 * ms::MINUTE),
+        &["card"],
+    );
+    let mut r = rig(&[base]);
+    let m = ms::MINUTE;
+    for i in 0..50 {
+        let card = if i % 2 == 0 { "c1" } else { "c2" };
+        r.feed(ev(i * 10_000, card, "m1", i as f64));
+    }
+    // add the same-shaped metric later with backfill
+    let late = MetricSpec::new(
+        "added_late",
+        AggKind::Sum,
+        Some("amount"),
+        WindowSpec::sliding(5 * ms::MINUTE),
+        &["card"],
+    );
+    r.plan.add_metric_backfill(&late, &r.reservoir).unwrap();
+    for card in ["c1", "c2"] {
+        let a = r
+            .plan
+            .value_for("from_start", &[Value::Str(card.into())])
+            .unwrap();
+        let b = r
+            .plan
+            .value_for("added_late", &[Value::Str(card.into())])
+            .unwrap();
+        assert_eq!(a, b, "backfilled metric equals always-on metric ({card})");
+    }
+    // and it keeps tracking correctly forward
+    let replies = r.feed(ev(50 * 10_000 + m, "c1", "m1", 7.5));
+    let a = replies.iter().find(|x| x.metric == "from_start").unwrap();
+    let b = replies.iter().find(|x| x.metric == "added_late").unwrap();
+    assert_eq!(a.value, b.value);
+}
+
+#[test]
+fn registration_errors() {
+    let r = rig(&q1_specs());
+    let mut plan = r.plan;
+    // duplicate name
+    assert!(plan
+        .register(
+            &MetricSpec::new(
+                "sum_amount_by_card",
+                AggKind::Sum,
+                Some("amount"),
+                WindowSpec::sliding(1000),
+                &["card"],
+            ),
+            &r.reservoir,
+        )
+        .is_err());
+    // missing field for SUM
+    assert!(plan
+        .register(
+            &MetricSpec::new("x", AggKind::Sum, None, WindowSpec::sliding(1000), &["card"]),
+            &r.reservoir,
+        )
+        .is_err());
+    // unknown field
+    assert!(plan
+        .register(
+            &MetricSpec::new(
+                "y",
+                AggKind::Sum,
+                Some("nope"),
+                WindowSpec::sliding(1000),
+                &["card"],
+            ),
+            &r.reservoir,
+        )
+        .is_err());
+    // bad window
+    assert!(plan
+        .register(
+            &MetricSpec::new("z", AggKind::Count, None, WindowSpec::sliding(0), &["card"]),
+            &r.reservoir,
+        )
+        .is_err());
+}
+
+#[test]
+fn advance_rejects_time_regression() {
+    let mut r = rig(&q1_specs());
+    r.feed(ev(1000, "c1", "m1", 1.0));
+    assert!(r.plan.advance(500).is_err());
+}
+
+#[test]
+fn global_aggregate_empty_group_by() {
+    let specs = vec![MetricSpec::new(
+        "total",
+        AggKind::Count,
+        None,
+        WindowSpec::sliding(ms::MINUTE),
+        &[],
+    )];
+    let mut r = rig(&specs);
+    r.feed(ev(0, "c1", "m1", 1.0));
+    let replies = r.feed(ev(1, "c2", "m2", 1.0));
+    assert_eq!(replies[0].value, Some(2.0));
+    assert_eq!(replies[0].group, "");
+}
+
+#[test]
+fn null_fields_are_excluded_from_field_aggs() {
+    let specs = vec![
+        MetricSpec::new(
+            "sum",
+            AggKind::Sum,
+            Some("amount"),
+            WindowSpec::sliding(ms::MINUTE),
+            &["card"],
+        ),
+        MetricSpec::new(
+            "count",
+            AggKind::Count,
+            None,
+            WindowSpec::sliding(ms::MINUTE),
+            &["card"],
+        ),
+    ];
+    let mut r = rig(&specs);
+    r.feed(ev(0, "c1", "m1", 5.0));
+    let e = Event::new(
+        10,
+        vec![Value::Str("c1".into()), Value::Str("m1".into()), Value::Null],
+    );
+    let replies = r.feed(e);
+    let sum = replies.iter().find(|x| x.metric == "sum").unwrap();
+    assert_eq!(sum.value, Some(5.0), "null amount not summed");
+    let count = replies.iter().find(|x| x.metric == "count").unwrap();
+    assert_eq!(count.value, Some(2.0), "count(*) includes the event");
+    // ... and the expiry path is symmetric (no double-evict panic)
+    let replies = r.feed(ev(2 * ms::MINUTE, "c1", "m1", 1.0));
+    let sum = replies.iter().find(|x| x.metric == "sum").unwrap();
+    assert_eq!(sum.value, Some(1.0));
+}
+
+#[test]
+fn checkpoint_positions_roundtrip() {
+    let mut r = rig(&q1_specs());
+    for i in 0..40 {
+        r.feed(ev(i * 1000, "c1", "m1", 1.0));
+    }
+    let pos = r.plan.positions();
+    let t = r.plan.last_t_eval();
+    assert_eq!(pos.len(), 2);
+    let tail = pos.iter().find(|(o, _)| *o == 0).unwrap();
+    assert_eq!(tail.1, 40, "tail iterator consumed all 40 events");
+    // restore into a fresh plan over the same reservoir/state
+    let store = Arc::new(
+        Store::open(&r._tmp.join("state2"), StoreOptions::default()).unwrap(),
+    );
+    let mut plan2 = Plan::build(
+        schema(),
+        &q1_specs(),
+        &r.reservoir,
+        StateStore::new(store, 1000),
+    )
+    .unwrap();
+    plan2.restore_positions(&pos, t);
+    assert_eq!(plan2.positions(), pos);
+    assert_eq!(plan2.last_t_eval(), t);
+}

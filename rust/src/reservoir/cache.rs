@@ -1,0 +1,257 @@
+//! Chunk cache with LRU eviction and hit/miss/prefetch accounting.
+//!
+//! The paper's Figure 6 (bottom) hinges on this component: latency stays
+//! flat while every iterator's next chunk fits in cache, and degrades as
+//! the iterator count approaches the cache capacity (their run: 220 cache
+//! elements, knee at ~240 iterators). The counters exported here are what
+//! the fig6 bench reports.
+
+use crate::reservoir::chunk::DecodedChunk;
+use crate::util::hash::FxHashMap;
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+
+/// Cache statistics (atomic: shared with the prefetch thread).
+#[derive(Debug, Default)]
+pub struct CacheStats {
+    /// Iterator chunk requests served from cache.
+    pub hits: AtomicU64,
+    /// Iterator chunk requests that had to read the file synchronously —
+    /// I/O on the critical path, exactly what eager caching is meant to
+    /// prevent.
+    pub misses: AtomicU64,
+    /// Prefetch requests issued.
+    pub prefetch_issued: AtomicU64,
+    /// Prefetch loads completed (includes already-cached no-ops).
+    pub prefetch_done: AtomicU64,
+    /// Chunks evicted by LRU pressure.
+    pub evictions: AtomicU64,
+}
+
+impl CacheStats {
+    /// Hit rate over iterator requests.
+    pub fn hit_rate(&self) -> f64 {
+        let h = self.hits.load(Ordering::Relaxed) as f64;
+        let m = self.misses.load(Ordering::Relaxed) as f64;
+        if h + m == 0.0 {
+            1.0
+        } else {
+            h / (h + m)
+        }
+    }
+
+    /// (hits, misses, prefetch_issued, prefetch_done, evictions) snapshot.
+    pub fn snapshot(&self) -> (u64, u64, u64, u64, u64) {
+        (
+            self.hits.load(Ordering::Relaxed),
+            self.misses.load(Ordering::Relaxed),
+            self.prefetch_issued.load(Ordering::Relaxed),
+            self.prefetch_done.load(Ordering::Relaxed),
+            self.evictions.load(Ordering::Relaxed),
+        )
+    }
+}
+
+/// LRU map of chunk_id → decoded chunk.
+///
+/// Eviction only drops the cache's reference: iterators hold their own
+/// `Arc<DecodedChunk>`, so an in-use chunk's memory is released when the
+/// last iterator moves off it (the paper's "each iterator requires one
+/// chunk in-memory" accounting).
+#[derive(Debug)]
+pub struct ChunkCache {
+    map: FxHashMap<u64, Arc<DecodedChunk>>,
+    /// LRU order: front = oldest. Touched ids get pushed to the back;
+    /// stale duplicates in the queue are skipped on eviction.
+    order: VecDeque<u64>,
+    capacity: usize,
+    stats: Arc<CacheStats>,
+}
+
+impl ChunkCache {
+    /// Cache holding at most `capacity` chunks.
+    pub fn new(capacity: usize, stats: Arc<CacheStats>) -> Self {
+        ChunkCache {
+            map: FxHashMap::default(),
+            order: VecDeque::with_capacity(capacity * 2),
+            capacity: capacity.max(1),
+            stats,
+        }
+    }
+
+    /// Lookup without stats accounting (prefetcher dedup check).
+    pub fn peek(&self, chunk_id: u64) -> Option<Arc<DecodedChunk>> {
+        self.map.get(&chunk_id).cloned()
+    }
+
+    /// Lookup from an iterator: counts hit/miss.
+    pub fn get(&mut self, chunk_id: u64) -> Option<Arc<DecodedChunk>> {
+        match self.map.get(&chunk_id).cloned() {
+            Some(c) => {
+                self.stats.hits.fetch_add(1, Ordering::Relaxed);
+                self.touch(chunk_id);
+                Some(c)
+            }
+            None => {
+                self.stats.misses.fetch_add(1, Ordering::Relaxed);
+                None
+            }
+        }
+    }
+
+    /// Insert a chunk (from seal, sync load, or prefetch).
+    pub fn insert(&mut self, chunk: Arc<DecodedChunk>) {
+        let id = chunk.chunk_id;
+        if self.map.insert(id, chunk).is_none() {
+            self.order.push_back(id);
+            self.evict_if_needed();
+        } else {
+            self.touch(id);
+        }
+    }
+
+    fn touch(&mut self, chunk_id: u64) {
+        // lazy LRU: append; stale entries are skipped during eviction.
+        self.order.push_back(chunk_id);
+        // bound the queue so it can't grow unboundedly under heavy touching
+        if self.order.len() > self.capacity * 8 {
+            self.compact_order();
+        }
+    }
+
+    fn compact_order(&mut self) {
+        let mut seen = crate::util::hash::FxHashSet::default();
+        let mut fresh = VecDeque::with_capacity(self.map.len());
+        // iterate from back (most recent) keeping first occurrence
+        for &id in self.order.iter().rev() {
+            if self.map.contains_key(&id) && seen.insert(id) {
+                fresh.push_front(id);
+            }
+        }
+        self.order = fresh;
+    }
+
+    fn evict_if_needed(&mut self) {
+        while self.map.len() > self.capacity {
+            match self.order.pop_front() {
+                Some(id) => {
+                    // skip stale queue entries (already evicted or touched
+                    // later — i.e. id appears again later in the queue)
+                    let last_pos_is_front = !self.order.contains(&id);
+                    if last_pos_is_front && self.map.remove(&id).is_some() {
+                        self.stats.evictions.fetch_add(1, Ordering::Relaxed);
+                    }
+                }
+                None => break,
+            }
+        }
+    }
+
+    /// Number of cached chunks.
+    pub fn len(&self) -> usize {
+        self.map.len()
+    }
+
+    /// True when nothing is cached.
+    pub fn is_empty(&self) -> bool {
+        self.map.is_empty()
+    }
+
+    /// Capacity in chunks.
+    pub fn capacity(&self) -> usize {
+        self.capacity
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::event::Event;
+
+    fn chunk(id: u64) -> Arc<DecodedChunk> {
+        Arc::new(DecodedChunk {
+            chunk_id: id,
+            base_seq: id * 10,
+            events: vec![Event::new(id as i64, vec![])],
+        })
+    }
+
+    fn cache(cap: usize) -> (ChunkCache, Arc<CacheStats>) {
+        let stats = Arc::new(CacheStats::default());
+        (ChunkCache::new(cap, stats.clone()), stats)
+    }
+
+    #[test]
+    fn insert_get_hit_miss_counting() {
+        let (mut c, stats) = cache(4);
+        c.insert(chunk(1));
+        assert!(c.get(1).is_some());
+        assert!(c.get(2).is_none());
+        let (h, m, ..) = stats.snapshot();
+        assert_eq!((h, m), (1, 1));
+        assert!((stats.hit_rate() - 0.5).abs() < 1e-9);
+    }
+
+    #[test]
+    fn lru_evicts_oldest() {
+        let (mut c, stats) = cache(3);
+        for id in 0..3 {
+            c.insert(chunk(id));
+        }
+        // touch 0 so it's most-recent
+        assert!(c.get(0).is_some());
+        c.insert(chunk(3)); // evicts 1 (oldest untouched)
+        assert_eq!(c.len(), 3);
+        assert!(c.peek(1).is_none(), "1 evicted");
+        assert!(c.peek(0).is_some(), "0 survived (touched)");
+        assert!(c.peek(2).is_some());
+        assert!(c.peek(3).is_some());
+        assert_eq!(stats.evictions.load(Ordering::Relaxed), 1);
+    }
+
+    #[test]
+    fn reinsert_does_not_duplicate() {
+        let (mut c, _) = cache(2);
+        c.insert(chunk(1));
+        c.insert(chunk(1));
+        c.insert(chunk(2));
+        assert_eq!(c.len(), 2);
+        assert!(c.peek(1).is_some());
+    }
+
+    #[test]
+    fn heavy_touching_stays_bounded() {
+        let (mut c, _) = cache(4);
+        for id in 0..4 {
+            c.insert(chunk(id));
+        }
+        for _ in 0..10_000 {
+            let _ = c.get(2);
+        }
+        assert!(c.order.len() <= 4 * 8 + 1, "order queue bounded");
+        c.insert(chunk(99));
+        assert!(c.peek(2).is_some(), "hot chunk survives");
+    }
+
+    #[test]
+    fn capacity_one() {
+        let (mut c, _) = cache(1);
+        c.insert(chunk(1));
+        c.insert(chunk(2));
+        assert_eq!(c.len(), 1);
+        assert!(c.peek(2).is_some());
+    }
+
+    #[test]
+    fn peek_does_not_count() {
+        let (mut c, stats) = cache(2);
+        c.insert(chunk(1));
+        let _ = c.peek(1);
+        let _ = c.peek(9);
+        let (h, m, ..) = stats.snapshot();
+        assert_eq!((h, m), (0, 0));
+        let _ = c.get(1);
+        assert_eq!(stats.snapshot().0, 1);
+    }
+}

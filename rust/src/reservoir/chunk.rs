@@ -1,0 +1,278 @@
+//! Chunk format: a fixed-count group of contiguous events, serialized,
+//! compressed and persisted as one immutable file.
+//!
+//! File layout (little-endian):
+//!
+//! ```text
+//! header  := magic:u32 chunk_id:u64 base_seq:u64 count:u32 codec:u8
+//!            first_ts:i64 raw_len:u32
+//! payload := codec(raw)          raw := event* (codec::encode_into,
+//!                                               base_ts = first_ts)
+//! trailer := crc32(payload):u32
+//! ```
+//!
+//! Every sealed chunk holds exactly `chunk_events` events, which makes
+//! event sequence numbers directly addressable:
+//! `seq ∈ chunk k ⇔ k = seq / chunk_events` — the property the reservoir
+//! iterators rely on for O(1) chunk location.
+
+use crate::error::{Error, Result};
+use crate::event::{codec, Event, SchemaRef};
+use byteorder::{ByteOrder, LittleEndian};
+use std::path::Path;
+
+const MAGIC: u32 = 0x52_47_43_4B; // "RGCK"
+const HEADER_LEN: usize = 4 + 8 + 8 + 4 + 1 + 8 + 4;
+
+/// Payload compression codec.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Compression {
+    /// No compression (ablation baseline).
+    None,
+    /// zstd at the given level (paper: "aggressively compress" — level 1
+    /// is the latency-friendly default).
+    Zstd(i32),
+}
+
+impl Compression {
+    fn tag(self) -> u8 {
+        match self {
+            Compression::None => 0,
+            Compression::Zstd(_) => 1,
+        }
+    }
+}
+
+/// An immutable, fully-decoded chunk of events.
+#[derive(Debug)]
+pub struct DecodedChunk {
+    /// Chunk index (sequential from 0).
+    pub chunk_id: u64,
+    /// Sequence number of `events[0]`.
+    pub base_seq: u64,
+    /// The events, in arrival order.
+    pub events: Vec<Event>,
+}
+
+impl DecodedChunk {
+    /// Event by global sequence number (must belong to this chunk).
+    #[inline]
+    pub fn event_at(&self, seq: u64) -> &Event {
+        &self.events[(seq - self.base_seq) as usize]
+    }
+
+    /// True if `seq` falls inside this chunk.
+    #[inline]
+    pub fn contains(&self, seq: u64) -> bool {
+        seq >= self.base_seq && seq < self.base_seq + self.events.len() as u64
+    }
+}
+
+/// Encode a sealed chunk to its on-disk representation.
+pub fn encode_chunk(
+    chunk_id: u64,
+    base_seq: u64,
+    events: &[Event],
+    schema: &SchemaRef,
+    compression: Compression,
+) -> Result<Vec<u8>> {
+    let first_ts = events.first().map(|e| e.timestamp).unwrap_or(0);
+    let mut raw = Vec::with_capacity(events.len() * 32);
+    for e in events {
+        codec::encode_into(&mut raw, e, schema, first_ts);
+    }
+    let payload = match compression {
+        Compression::None => raw.clone(),
+        Compression::Zstd(level) => zstd::bulk::compress(&raw, level)
+            .map_err(|e| Error::internal(format!("zstd compress: {e}")))?,
+    };
+    let mut out = Vec::with_capacity(HEADER_LEN + payload.len() + 4);
+    let mut header = [0u8; HEADER_LEN];
+    LittleEndian::write_u32(&mut header[0..4], MAGIC);
+    LittleEndian::write_u64(&mut header[4..12], chunk_id);
+    LittleEndian::write_u64(&mut header[12..20], base_seq);
+    LittleEndian::write_u32(&mut header[20..24], events.len() as u32);
+    header[24] = compression.tag();
+    LittleEndian::write_i64(&mut header[25..33], first_ts);
+    LittleEndian::write_u32(&mut header[33..37], raw.len() as u32);
+    out.extend_from_slice(&header);
+    out.extend_from_slice(&payload);
+    let mut crc = [0u8; 4];
+    LittleEndian::write_u32(&mut crc, crc32fast::hash(&payload));
+    out.extend_from_slice(&crc);
+    Ok(out)
+}
+
+/// Decode a chunk file image produced by [`encode_chunk`].
+pub fn decode_chunk(buf: &[u8], schema: &SchemaRef) -> Result<DecodedChunk> {
+    if buf.len() < HEADER_LEN + 4 {
+        return Err(Error::corrupt("chunk: too short"));
+    }
+    if LittleEndian::read_u32(&buf[0..4]) != MAGIC {
+        return Err(Error::corrupt("chunk: bad magic"));
+    }
+    let chunk_id = LittleEndian::read_u64(&buf[4..12]);
+    let base_seq = LittleEndian::read_u64(&buf[12..20]);
+    let count = LittleEndian::read_u32(&buf[20..24]) as usize;
+    let codec_tag = buf[24];
+    let first_ts = LittleEndian::read_i64(&buf[25..33]);
+    let raw_len = LittleEndian::read_u32(&buf[33..37]) as usize;
+    let payload = &buf[HEADER_LEN..buf.len() - 4];
+    let crc = LittleEndian::read_u32(&buf[buf.len() - 4..]);
+    if crc32fast::hash(payload) != crc {
+        return Err(Error::corrupt("chunk: crc mismatch"));
+    }
+    let raw = match codec_tag {
+        0 => payload.to_vec(),
+        1 => zstd::bulk::decompress(payload, raw_len)
+            .map_err(|e| Error::corrupt(format!("chunk: zstd: {e}")))?,
+        t => return Err(Error::corrupt(format!("chunk: unknown codec {t}"))),
+    };
+    if raw.len() != raw_len {
+        return Err(Error::corrupt("chunk: raw length mismatch"));
+    }
+    let mut events = Vec::with_capacity(count);
+    let mut pos = 0usize;
+    for _ in 0..count {
+        events.push(codec::decode_from(&raw, &mut pos, schema, first_ts)?);
+    }
+    if pos != raw.len() {
+        return Err(Error::corrupt("chunk: trailing bytes after events"));
+    }
+    Ok(DecodedChunk {
+        chunk_id,
+        base_seq,
+        events,
+    })
+}
+
+/// Chunk file name.
+pub fn chunk_file_name(chunk_id: u64) -> String {
+    format!("{chunk_id:016}.chk")
+}
+
+/// Read + decode a chunk file.
+pub fn read_chunk_file(dir: &Path, chunk_id: u64, schema: &SchemaRef) -> Result<DecodedChunk> {
+    let path = dir.join(chunk_file_name(chunk_id));
+    let buf = std::fs::read(&path)
+        .map_err(|e| Error::Io(std::io::Error::new(e.kind(), format!("{path:?}: {e}"))))?;
+    let c = decode_chunk(&buf, schema)?;
+    if c.chunk_id != chunk_id {
+        return Err(Error::corrupt(format!(
+            "chunk file {path:?} claims id {}",
+            c.chunk_id
+        )));
+    }
+    Ok(c)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::event::{FieldType, Schema, Value};
+    use crate::util::rng::Rng;
+
+    fn schema() -> SchemaRef {
+        Schema::of(&[("card", FieldType::Str), ("amount", FieldType::F64)]).unwrap()
+    }
+
+    fn events(n: usize, base_ts: i64) -> Vec<Event> {
+        let mut rng = Rng::new(1);
+        (0..n)
+            .map(|i| {
+                Event::new(
+                    base_ts + i as i64 * 10,
+                    vec![
+                        Value::Str(format!("card_{}", rng.next_below(50))),
+                        Value::F64(rng.next_lognormal(3.0, 1.0)),
+                    ],
+                )
+            })
+            .collect()
+    }
+
+    #[test]
+    fn roundtrip_zstd() {
+        let s = schema();
+        let evs = events(256, 1_600_000_000_000);
+        let buf = encode_chunk(3, 768, &evs, &s, Compression::Zstd(1)).unwrap();
+        let c = decode_chunk(&buf, &s).unwrap();
+        assert_eq!(c.chunk_id, 3);
+        assert_eq!(c.base_seq, 768);
+        assert_eq!(c.events, evs);
+    }
+
+    #[test]
+    fn roundtrip_uncompressed() {
+        let s = schema();
+        let evs = events(64, 0);
+        let buf = encode_chunk(0, 0, &evs, &s, Compression::None).unwrap();
+        let c = decode_chunk(&buf, &s).unwrap();
+        assert_eq!(c.events, evs);
+    }
+
+    #[test]
+    fn compression_shrinks_realistic_events() {
+        let s = schema();
+        let evs = events(512, 1_600_000_000_000);
+        let plain = encode_chunk(0, 0, &evs, &s, Compression::None).unwrap();
+        let zstd1 = encode_chunk(0, 0, &evs, &s, Compression::Zstd(1)).unwrap();
+        assert!(
+            (zstd1.len() as f64) < plain.len() as f64 * 0.8,
+            "zstd {} vs plain {}",
+            zstd1.len(),
+            plain.len()
+        );
+    }
+
+    #[test]
+    fn corrupt_payload_detected() {
+        let s = schema();
+        let evs = events(16, 0);
+        let mut buf = encode_chunk(0, 0, &evs, &s, Compression::Zstd(1)).unwrap();
+        let mid = buf.len() / 2;
+        buf[mid] ^= 0xff;
+        assert!(decode_chunk(&buf, &s).is_err());
+    }
+
+    #[test]
+    fn truncated_chunk_detected() {
+        let s = schema();
+        let evs = events(16, 0);
+        let buf = encode_chunk(0, 0, &evs, &s, Compression::Zstd(1)).unwrap();
+        for cut in [0usize, 10, HEADER_LEN, buf.len() - 1] {
+            assert!(decode_chunk(&buf[..cut], &s).is_err(), "cut {cut}");
+        }
+    }
+
+    #[test]
+    fn event_at_and_contains() {
+        let s = schema();
+        let evs = events(10, 100);
+        let buf = encode_chunk(2, 20, &evs, &s, Compression::None).unwrap();
+        let c = decode_chunk(&buf, &s).unwrap();
+        assert!(c.contains(20) && c.contains(29));
+        assert!(!c.contains(19) && !c.contains(30));
+        assert_eq!(c.event_at(25), &evs[5]);
+    }
+
+    #[test]
+    fn file_roundtrip() {
+        let s = schema();
+        let tmp = crate::util::tmp::TempDir::new("chunkfile");
+        let evs = events(32, 500);
+        let buf = encode_chunk(7, 224, &evs, &s, Compression::Zstd(1)).unwrap();
+        std::fs::write(tmp.path().join(chunk_file_name(7)), &buf).unwrap();
+        let c = read_chunk_file(tmp.path(), 7, &s).unwrap();
+        assert_eq!(c.events, evs);
+        assert!(read_chunk_file(tmp.path(), 8, &s).is_err(), "missing file");
+    }
+
+    #[test]
+    fn empty_chunk_roundtrip() {
+        let s = schema();
+        let buf = encode_chunk(0, 0, &[], &s, Compression::Zstd(1)).unwrap();
+        let c = decode_chunk(&buf, &s).unwrap();
+        assert!(c.events.is_empty());
+    }
+}

@@ -1,0 +1,651 @@
+//! The **event reservoir** (paper §3.3.1) — Railgun's core storage
+//! component and the enabler of real sliding windows over long horizons.
+//!
+//! Events are appended to an in-memory *open chunk*; when it reaches a
+//! fixed event count it is *sealed*: handed (already encoded+compressed)
+//! to a background writer thread that persists it as an immutable,
+//! ordered chunk file. I/O is therefore never on the event-processing
+//! path. Windows read the reservoir through [`ResIterator`]s; when an
+//! iterator starts a new chunk, the *adjacent* chunk is eagerly loaded
+//! into the shared [`cache::ChunkCache`] by a background prefetch thread,
+//! so advancing windows find their next chunk already in memory (the
+//! paper's claim that "windows of years are equivalent to windows of
+//! seconds").
+//!
+//! Durability contract: sealed chunks are durable; open-chunk events are
+//! lost on crash and recovered by replaying the messaging layer from the
+//! last sealed sequence number ([`Reservoir::durable_len`]).
+
+pub mod cache;
+pub mod chunk;
+mod iterator;
+
+pub use cache::CacheStats;
+pub use chunk::{Compression, DecodedChunk};
+pub use iterator::ResIterator;
+
+use crate::error::{Error, Result};
+use crate::event::{Event, SchemaRef};
+use crate::util::hash::FxHashMap;
+use cache::ChunkCache;
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::mpsc::{Receiver, Sender};
+use std::sync::{Arc, Mutex, RwLock};
+
+/// Reservoir tuning knobs.
+#[derive(Debug, Clone)]
+pub struct ReservoirConfig {
+    /// Directory for chunk files.
+    pub dir: PathBuf,
+    /// Events per sealed chunk (fixed ⇒ O(1) seq→chunk addressing).
+    pub chunk_events: usize,
+    /// Chunk cache capacity (the paper's Fig. 6 experiment uses 220).
+    pub cache_chunks: usize,
+    /// Payload compression.
+    pub compression: Compression,
+    /// Eager adjacent-chunk caching (ablation switch).
+    pub prefetch: bool,
+    /// fsync chunk files after write.
+    pub fsync: bool,
+}
+
+impl ReservoirConfig {
+    /// Defaults tuned for the benchmarks (512-event chunks, 220-chunk
+    /// cache — the paper's cache size).
+    pub fn new(dir: PathBuf) -> Self {
+        ReservoirConfig {
+            dir,
+            chunk_events: 512,
+            cache_chunks: 220,
+            compression: Compression::Zstd(1),
+            prefetch: true,
+            fsync: false,
+        }
+    }
+}
+
+/// Open (mutable) chunk state shared between the reservoir and tail
+/// iterators.
+#[derive(Debug)]
+pub(crate) struct OpenChunk {
+    pub base_seq: u64,
+    pub events: Vec<Event>,
+}
+
+/// State shared with iterators and background threads.
+pub(crate) struct Shared {
+    pub dir: PathBuf,
+    pub schema: SchemaRef,
+    pub chunk_events: usize,
+    pub prefetch: bool,
+    pub cache: Mutex<ChunkCache>,
+    pub stats: Arc<CacheStats>,
+    /// Sealed chunks whose file write has not completed yet.
+    pub pending: Mutex<FxHashMap<u64, Arc<DecodedChunk>>>,
+    /// Number of sealed chunks (files that exist or are pending).
+    pub sealed_chunks: AtomicU64,
+    /// Prefetch request queue (None after shutdown).
+    pub prefetch_tx: Mutex<Option<Sender<u64>>>,
+    /// Set when the writer thread hits an I/O error.
+    pub write_failed: AtomicBool,
+}
+
+impl Shared {
+    /// Fetch a sealed chunk: cache → pending → synchronous file read.
+    pub(crate) fn chunk(&self, chunk_id: u64) -> Result<Arc<DecodedChunk>> {
+        if let Some(c) = self.cache.lock().unwrap().get(chunk_id) {
+            return Ok(c);
+        }
+        if let Some(c) = self.pending.lock().unwrap().get(&chunk_id) {
+            return Ok(c.clone());
+        }
+        // cache miss: blocking read (exactly what prefetch should avoid)
+        let c = Arc::new(chunk::read_chunk_file(&self.dir, chunk_id, &self.schema)?);
+        self.cache.lock().unwrap().insert(c.clone());
+        Ok(c)
+    }
+
+    /// Ask the background loader to warm `chunk_id`.
+    pub(crate) fn request_prefetch(&self, chunk_id: u64) {
+        if !self.prefetch || chunk_id >= self.sealed_chunks.load(Ordering::Acquire) {
+            return;
+        }
+        if self.cache.lock().unwrap().peek(chunk_id).is_some() {
+            return;
+        }
+        if let Some(tx) = self.prefetch_tx.lock().unwrap().as_ref() {
+            if tx.send(chunk_id).is_ok() {
+                self.stats.prefetch_issued.fetch_add(1, Ordering::Relaxed);
+            }
+        }
+    }
+}
+
+enum WriteJob {
+    Chunk { chunk_id: u64, bytes: Vec<u8> },
+    Sync(Sender<()>),
+    Shutdown,
+}
+
+/// The disk-backed event reservoir. One per task processor.
+pub struct Reservoir {
+    shared: Arc<Shared>,
+    open: Arc<RwLock<OpenChunk>>,
+    next_seq: u64,
+    writer_tx: Sender<WriteJob>,
+    writer: Option<std::thread::JoinHandle<()>>,
+    prefetcher: Option<std::thread::JoinHandle<()>>,
+    compression: Compression,
+}
+
+impl std::fmt::Debug for Reservoir {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("Reservoir")
+            .field("dir", &self.shared.dir)
+            .field("next_seq", &self.next_seq)
+            .field(
+                "sealed_chunks",
+                &self.shared.sealed_chunks.load(Ordering::Relaxed),
+            )
+            .finish()
+    }
+}
+
+impl Reservoir {
+    /// Open a reservoir, recovering sealed chunks from `config.dir`.
+    ///
+    /// After recovery, [`Self::len`] == [`Self::durable_len`]; the caller
+    /// must replay newer events from the messaging layer.
+    pub fn open(config: ReservoirConfig, schema: SchemaRef) -> Result<Reservoir> {
+        std::fs::create_dir_all(&config.dir)?;
+        if config.chunk_events == 0 {
+            return Err(Error::invalid("chunk_events must be > 0"));
+        }
+        // recover: sealed chunks must be contiguous 0..n
+        let mut ids: Vec<u64> = Vec::new();
+        for entry in std::fs::read_dir(&config.dir)? {
+            let name = entry?.file_name().to_string_lossy().to_string();
+            if let Some(stem) = name.strip_suffix(".chk") {
+                ids.push(
+                    stem.parse()
+                        .map_err(|_| Error::corrupt(format!("bad chunk file {name}")))?,
+                );
+            }
+        }
+        ids.sort_unstable();
+        let mut sealed = 0u64;
+        for id in &ids {
+            if *id == sealed {
+                sealed += 1;
+            } else {
+                // gap ⇒ later files are unreachable leftovers; ignore them
+                log::warn!(
+                    "reservoir {}: ignoring non-contiguous chunk {id}",
+                    config.dir.display()
+                );
+                break;
+            }
+        }
+
+        let stats = Arc::new(CacheStats::default());
+        let (prefetch_tx, prefetch_rx) = std::sync::mpsc::channel::<u64>();
+        let shared = Arc::new(Shared {
+            dir: config.dir.clone(),
+            schema,
+            chunk_events: config.chunk_events,
+            prefetch: config.prefetch,
+            cache: Mutex::new(ChunkCache::new(config.cache_chunks, stats.clone())),
+            stats,
+            pending: Mutex::new(FxHashMap::default()),
+            sealed_chunks: AtomicU64::new(sealed),
+            prefetch_tx: Mutex::new(Some(prefetch_tx)),
+            write_failed: AtomicBool::new(false),
+        });
+
+        let (writer_tx, writer_rx) = std::sync::mpsc::channel::<WriteJob>();
+        let writer = std::thread::Builder::new()
+            .name("reservoir-writer".into())
+            .spawn({
+                let shared = shared.clone();
+                let fsync = config.fsync;
+                move || writer_loop(shared, writer_rx, fsync)
+            })
+            .map_err(|e| Error::internal(format!("spawn writer: {e}")))?;
+        let prefetcher = std::thread::Builder::new()
+            .name("reservoir-prefetch".into())
+            .spawn({
+                let shared = shared.clone();
+                move || prefetch_loop(shared, prefetch_rx)
+            })
+            .map_err(|e| Error::internal(format!("spawn prefetcher: {e}")))?;
+
+        let next_seq = sealed * config.chunk_events as u64;
+        Ok(Reservoir {
+            shared: shared.clone(),
+            open: Arc::new(RwLock::new(OpenChunk {
+                base_seq: next_seq,
+                events: Vec::with_capacity(config.chunk_events),
+            })),
+            next_seq,
+            writer_tx,
+            writer: Some(writer),
+            prefetcher: Some(prefetcher),
+            compression: config.compression,
+        })
+    }
+
+    /// Append an event; returns its sequence number. Seals + hands off the
+    /// chunk to the writer thread when full (no I/O on this path).
+    pub fn append(&mut self, event: Event) -> Result<u64> {
+        let seq = self.next_seq;
+        let seal = {
+            let mut open = self.open.write().unwrap();
+            open.events.push(event);
+            open.events.len() >= self.shared.chunk_events
+        };
+        self.next_seq += 1;
+        if seal {
+            self.seal()?;
+        }
+        Ok(seq)
+    }
+
+    fn seal(&mut self) -> Result<()> {
+        let (base_seq, events) = {
+            let mut open = self.open.write().unwrap();
+            let base = open.base_seq;
+            let events = std::mem::take(&mut open.events);
+            open.base_seq = base + events.len() as u64;
+            open.events.reserve(self.shared.chunk_events);
+            (base, events)
+        };
+        let chunk_id = base_seq / self.shared.chunk_events as u64;
+        let bytes = chunk::encode_chunk(
+            chunk_id,
+            base_seq,
+            &events,
+            &self.shared.schema,
+            self.compression,
+        )?;
+        let decoded = Arc::new(DecodedChunk {
+            chunk_id,
+            base_seq,
+            events,
+        });
+        // newest chunk is hot: put it in both pending (until durable) and
+        // the cache (tail-adjacent iterators will want it)
+        self.shared
+            .pending
+            .lock()
+            .unwrap()
+            .insert(chunk_id, decoded.clone());
+        self.shared.cache.lock().unwrap().insert(decoded);
+        self.shared
+            .sealed_chunks
+            .store(chunk_id + 1, Ordering::Release);
+        self.writer_tx
+            .send(WriteJob::Chunk { chunk_id, bytes })
+            .map_err(|_| Error::closed("reservoir writer thread gone"))?;
+        Ok(())
+    }
+
+    /// Total events appended (including the open chunk).
+    pub fn len(&self) -> u64 {
+        self.next_seq
+    }
+
+    /// True when no events have been appended.
+    pub fn is_empty(&self) -> bool {
+        self.next_seq == 0
+    }
+
+    /// Events that survive a crash (sealed chunks only).
+    pub fn durable_len(&self) -> u64 {
+        self.shared.sealed_chunks.load(Ordering::Acquire) * self.shared.chunk_events as u64
+    }
+
+    /// Create an iterator positioned at `seq`.
+    pub fn iterator_at(&self, seq: u64) -> ResIterator {
+        ResIterator::new(self.shared.clone(), self.open.clone(), seq)
+    }
+
+    /// Cache statistics handle.
+    pub fn cache_stats(&self) -> Arc<CacheStats> {
+        self.shared.stats.clone()
+    }
+
+    /// Chunks currently resident (cache + pending writes).
+    pub fn resident_chunks(&self) -> usize {
+        let c = self.shared.cache.lock().unwrap().len();
+        let p = self.shared.pending.lock().unwrap().len();
+        c + p
+    }
+
+    /// Event schema.
+    pub fn schema(&self) -> &SchemaRef {
+        &self.shared.schema
+    }
+
+    /// Block until every queued chunk write is durable. Errors if the
+    /// writer thread reported an I/O failure.
+    pub fn sync(&self) -> Result<()> {
+        let (ack_tx, ack_rx) = std::sync::mpsc::channel();
+        self.writer_tx
+            .send(WriteJob::Sync(ack_tx))
+            .map_err(|_| Error::closed("reservoir writer thread gone"))?;
+        ack_rx
+            .recv()
+            .map_err(|_| Error::closed("reservoir writer thread gone"))?;
+        if self.shared.write_failed.load(Ordering::Acquire) {
+            return Err(Error::internal("reservoir: chunk write failed (see log)"));
+        }
+        Ok(())
+    }
+}
+
+impl Drop for Reservoir {
+    fn drop(&mut self) {
+        let _ = self.writer_tx.send(WriteJob::Shutdown);
+        *self.shared.prefetch_tx.lock().unwrap() = None;
+        if let Some(h) = self.writer.take() {
+            let _ = h.join();
+        }
+        if let Some(h) = self.prefetcher.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+fn writer_loop(shared: Arc<Shared>, rx: Receiver<WriteJob>, fsync: bool) {
+    use std::io::Write;
+    while let Ok(job) = rx.recv() {
+        match job {
+            WriteJob::Chunk { chunk_id, bytes } => {
+                let path = shared.dir.join(chunk::chunk_file_name(chunk_id));
+                let result = (|| -> std::io::Result<()> {
+                    let mut f = std::fs::File::create(&path)?;
+                    f.write_all(&bytes)?;
+                    if fsync {
+                        f.sync_data()?;
+                    }
+                    Ok(())
+                })();
+                match result {
+                    Ok(()) => {
+                        // durable: the cache/file now serve reads
+                        shared.pending.lock().unwrap().remove(&chunk_id);
+                    }
+                    Err(e) => {
+                        log::error!("reservoir: writing chunk {chunk_id} failed: {e}");
+                        shared.write_failed.store(true, Ordering::Release);
+                        // keep it in pending so reads still work
+                    }
+                }
+            }
+            WriteJob::Sync(ack) => {
+                let _ = ack.send(());
+            }
+            WriteJob::Shutdown => break,
+        }
+    }
+}
+
+fn prefetch_loop(shared: Arc<Shared>, rx: Receiver<u64>) {
+    while let Ok(chunk_id) = rx.recv() {
+        let done = |s: &Shared| {
+            s.stats
+                .prefetch_done
+                .fetch_add(1, std::sync::atomic::Ordering::Relaxed)
+        };
+        if shared.cache.lock().unwrap().peek(chunk_id).is_some() {
+            done(&shared);
+            continue;
+        }
+        if let Some(c) = shared.pending.lock().unwrap().get(&chunk_id).cloned() {
+            shared.cache.lock().unwrap().insert(c);
+            done(&shared);
+            continue;
+        }
+        match chunk::read_chunk_file(&shared.dir, chunk_id, &shared.schema) {
+            Ok(c) => {
+                shared.cache.lock().unwrap().insert(Arc::new(c));
+                done(&shared);
+            }
+            Err(e) => {
+                // non-fatal: the iterator will fall back to a sync read
+                log::debug!("prefetch of chunk {chunk_id} failed: {e}");
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::event::{FieldType, Schema, Value};
+    use crate::util::tmp::TempDir;
+
+    fn schema() -> SchemaRef {
+        Schema::of(&[("card", FieldType::Str), ("amount", FieldType::F64)]).unwrap()
+    }
+
+    fn ev(i: u64) -> Event {
+        Event::new(
+            1000 + i as i64,
+            vec![
+                Value::Str(format!("card_{}", i % 7)),
+                Value::F64(i as f64 * 0.5),
+            ],
+        )
+    }
+
+    fn config(tmp: &TempDir) -> ReservoirConfig {
+        ReservoirConfig {
+            chunk_events: 16,
+            cache_chunks: 8,
+            ..ReservoirConfig::new(tmp.path().to_path_buf())
+        }
+    }
+
+    #[test]
+    fn append_assigns_sequential_seqs() {
+        let tmp = TempDir::new("res_seq");
+        let mut r = Reservoir::open(config(&tmp), schema()).unwrap();
+        for i in 0..100 {
+            assert_eq!(r.append(ev(i)).unwrap(), i);
+        }
+        assert_eq!(r.len(), 100);
+        // 100 events / 16 per chunk = 6 sealed
+        r.sync().unwrap();
+        assert_eq!(r.durable_len(), 96);
+    }
+
+    #[test]
+    fn iterate_all_events_across_chunks() {
+        let tmp = TempDir::new("res_iter");
+        let mut r = Reservoir::open(config(&tmp), schema()).unwrap();
+        let events: Vec<Event> = (0..100).map(ev).collect();
+        for e in &events {
+            r.append(e.clone()).unwrap();
+        }
+        let mut it = r.iterator_at(0);
+        let mut got = Vec::new();
+        while let Some(e) = it.next(|_, e| e.clone()).unwrap() {
+            got.push(e);
+        }
+        assert_eq!(got, events);
+        assert_eq!(it.seq(), 100);
+        // at the end: peek is None
+        assert_eq!(it.peek_ts().unwrap(), None);
+    }
+
+    #[test]
+    fn iterator_sees_open_chunk_immediately() {
+        let tmp = TempDir::new("res_open");
+        let mut r = Reservoir::open(config(&tmp), schema()).unwrap();
+        let mut it = r.iterator_at(0);
+        assert_eq!(it.peek_ts().unwrap(), None);
+        r.append(ev(0)).unwrap();
+        assert_eq!(it.peek_ts().unwrap(), Some(1000));
+    }
+
+    #[test]
+    fn iterator_starting_mid_stream() {
+        let tmp = TempDir::new("res_mid");
+        let mut r = Reservoir::open(config(&tmp), schema()).unwrap();
+        for i in 0..64 {
+            r.append(ev(i)).unwrap();
+        }
+        let mut it = r.iterator_at(40);
+        let first = it.next(|seq, e| (seq, e.timestamp)).unwrap().unwrap();
+        assert_eq!(first, (40, 1040));
+    }
+
+    #[test]
+    fn recovery_keeps_sealed_drops_open() {
+        let tmp = TempDir::new("res_recover");
+        {
+            let mut r = Reservoir::open(config(&tmp), schema()).unwrap();
+            for i in 0..50 {
+                r.append(ev(i)).unwrap();
+            }
+            r.sync().unwrap();
+        } // 48 sealed (3 chunks), 2 open lost
+        let r = Reservoir::open(config(&tmp), schema()).unwrap();
+        assert_eq!(r.len(), 48);
+        assert_eq!(r.durable_len(), 48);
+        let mut it = r.iterator_at(0);
+        let mut n = 0;
+        while it.next(|_, _| ()).unwrap().is_some() {
+            n += 1;
+        }
+        assert_eq!(n, 48);
+    }
+
+    #[test]
+    fn recovered_reservoir_accepts_appends() {
+        let tmp = TempDir::new("res_reappend");
+        {
+            let mut r = Reservoir::open(config(&tmp), schema()).unwrap();
+            for i in 0..32 {
+                r.append(ev(i)).unwrap();
+            }
+            r.sync().unwrap();
+        }
+        let mut r = Reservoir::open(config(&tmp), schema()).unwrap();
+        assert_eq!(r.append(ev(32)).unwrap(), 32);
+        let mut it = r.iterator_at(30);
+        let seqs: (u64, u64, u64) = {
+            let a = it.next(|s, _| s).unwrap().unwrap();
+            let b = it.next(|s, _| s).unwrap().unwrap();
+            let c = it.next(|s, _| s).unwrap().unwrap();
+            (a, b, c)
+        };
+        assert_eq!(seqs, (30, 31, 32));
+    }
+
+    #[test]
+    fn cold_iteration_reads_from_disk() {
+        let tmp = TempDir::new("res_cold");
+        let cfg = ReservoirConfig {
+            chunk_events: 16,
+            cache_chunks: 2, // tiny cache: old chunks must be evicted
+            prefetch: false, // force synchronous misses
+            ..ReservoirConfig::new(tmp.path().to_path_buf())
+        };
+        let mut r = Reservoir::open(cfg, schema()).unwrap();
+        for i in 0..160 {
+            r.append(ev(i)).unwrap();
+        }
+        r.sync().unwrap();
+        let stats = r.cache_stats();
+        let misses_before = stats.snapshot().1;
+        let mut it = r.iterator_at(0);
+        let mut n = 0;
+        while it.next(|_, _| ()).unwrap().is_some() {
+            n += 1;
+        }
+        assert_eq!(n, 160);
+        assert!(
+            stats.snapshot().1 > misses_before,
+            "old chunks must be disk reads"
+        );
+    }
+
+    #[test]
+    fn prefetch_warms_next_chunk() {
+        let tmp = TempDir::new("res_prefetch");
+        let cfg = ReservoirConfig {
+            chunk_events: 64,
+            cache_chunks: 4,
+            prefetch: true,
+            ..ReservoirConfig::new(tmp.path().to_path_buf())
+        };
+        let mut r = Reservoir::open(cfg, schema()).unwrap();
+        for i in 0..(64 * 30) {
+            r.append(ev(i)).unwrap();
+        }
+        r.sync().unwrap();
+        let stats = r.cache_stats();
+        // walk a head iterator through all chunks, pausing to let the
+        // prefetcher keep up (it has its own thread)
+        let mut it = r.iterator_at(0);
+        let mut n = 0u64;
+        while it.next(|_, _| ()).unwrap().is_some() {
+            n += 1;
+            if n % 64 == 0 {
+                std::thread::sleep(std::time::Duration::from_millis(2));
+            }
+        }
+        assert_eq!(n, 64 * 30);
+        let (_h, _m, issued, done, _) = stats.snapshot();
+        assert!(issued > 10, "prefetches were issued: {issued}");
+        assert!(done > 0, "prefetches completed: {done}");
+    }
+
+    #[test]
+    fn compression_none_roundtrips() {
+        let tmp = TempDir::new("res_nocomp");
+        let cfg = ReservoirConfig {
+            chunk_events: 8,
+            compression: Compression::None,
+            ..ReservoirConfig::new(tmp.path().to_path_buf())
+        };
+        let mut r = Reservoir::open(cfg, schema()).unwrap();
+        for i in 0..20 {
+            r.append(ev(i)).unwrap();
+        }
+        r.sync().unwrap();
+        let mut it = r.iterator_at(0);
+        let mut n = 0;
+        while it.next(|_, _| ()).unwrap().is_some() {
+            n += 1;
+        }
+        assert_eq!(n, 20);
+    }
+
+    #[test]
+    fn two_iterators_are_independent() {
+        let tmp = TempDir::new("res_two_iters");
+        let mut r = Reservoir::open(config(&tmp), schema()).unwrap();
+        for i in 0..50 {
+            r.append(ev(i)).unwrap();
+        }
+        let mut head = r.iterator_at(0);
+        let mut tail = r.iterator_at(45);
+        assert_eq!(head.next(|s, _| s).unwrap(), Some(0));
+        assert_eq!(tail.next(|s, _| s).unwrap(), Some(45));
+        assert_eq!(head.next(|s, _| s).unwrap(), Some(1));
+    }
+
+    #[test]
+    fn zero_chunk_events_rejected() {
+        let tmp = TempDir::new("res_zero");
+        let cfg = ReservoirConfig {
+            chunk_events: 0,
+            ..ReservoirConfig::new(tmp.path().to_path_buf())
+        };
+        assert!(Reservoir::open(cfg, schema()).is_err());
+    }
+}

@@ -1,0 +1,39 @@
+//! Runtime: load and execute the AOT artifacts via PJRT (`xla` crate).
+//!
+//! The compile path (python, build-time only — see `python/compile/`)
+//! lowers the L2 JAX graphs to HLO **text**; this module parses the text
+//! (`HloModuleProto::from_text_file`, which reassigns instruction ids and
+//! sidesteps the jax≥0.5 64-bit-id proto incompatibility), compiles each
+//! module once on the PJRT CPU client, and executes from the rust hot
+//! path. Python never runs at request time.
+
+mod pjrt;
+mod scorer;
+mod window_agg;
+
+pub use pjrt::{Executable, Runtime};
+pub use scorer::{FraudScorer, ScorerBatcher, ScorerMeta};
+pub use window_agg::{AggMeta, VectorizedAgg};
+
+use std::path::PathBuf;
+
+/// Resolve the artifacts directory: `RAILGUN_ARTIFACTS` env override, else
+/// `<repo>/artifacts` (CARGO_MANIFEST_DIR at build time, cwd fallback).
+pub fn artifacts_dir() -> PathBuf {
+    if let Ok(dir) = std::env::var("RAILGUN_ARTIFACTS") {
+        return PathBuf::from(dir);
+    }
+    let manifest = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if manifest.exists() {
+        return manifest;
+    }
+    PathBuf::from("artifacts")
+}
+
+/// True when `make artifacts` has produced the AOT outputs.
+pub fn artifacts_available() -> bool {
+    let dir = artifacts_dir();
+    dir.join("window_agg.hlo.txt").exists()
+        && dir.join("fraud_scorer.hlo.txt").exists()
+        && dir.join("meta.json").exists()
+}

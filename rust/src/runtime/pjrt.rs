@@ -1,0 +1,104 @@
+//! Thin wrapper over the `xla` crate's PJRT client.
+
+use crate::error::{Error, Result};
+use std::path::Path;
+
+/// A PJRT client (CPU). One per process; executables borrow it.
+pub struct Runtime {
+    client: xla::PjRtClient,
+}
+
+impl Runtime {
+    /// Create the CPU PJRT client.
+    pub fn cpu() -> Result<Runtime> {
+        let client = xla::PjRtClient::cpu()
+            .map_err(|e| Error::runtime(format!("PjRtClient::cpu: {e}")))?;
+        Ok(Runtime { client })
+    }
+
+    /// PJRT platform name (observability).
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Load an HLO-text artifact and compile it (once; execution is
+    /// cheap thereafter).
+    pub fn load_hlo_text(&self, path: &Path) -> Result<Executable> {
+        let proto = xla::HloModuleProto::from_text_file(path)
+            .map_err(|e| Error::runtime(format!("parse {path:?}: {e}")))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .map_err(|e| Error::runtime(format!("compile {path:?}: {e}")))?;
+        Ok(Executable {
+            exe,
+            name: path
+                .file_name()
+                .map(|s| s.to_string_lossy().into_owned())
+                .unwrap_or_default(),
+        })
+    }
+}
+
+/// A compiled artifact, executable from the hot path.
+pub struct Executable {
+    exe: xla::PjRtLoadedExecutable,
+    name: String,
+}
+
+impl Executable {
+    /// Execute with literal inputs; returns the untupled outputs.
+    ///
+    /// The compile path lowers with `return_tuple=True`, so the PJRT
+    /// result is a single tuple literal which we decompose.
+    pub fn run(&self, inputs: &[xla::Literal]) -> Result<Vec<xla::Literal>> {
+        let result = self
+            .exe
+            .execute::<xla::Literal>(inputs)
+            .map_err(|e| Error::runtime(format!("{}: execute: {e}", self.name)))?;
+        let buffer = result
+            .first()
+            .and_then(|d| d.first())
+            .ok_or_else(|| Error::runtime(format!("{}: empty result", self.name)))?;
+        let tuple = buffer
+            .to_literal_sync()
+            .map_err(|e| Error::runtime(format!("{}: to_literal: {e}", self.name)))?;
+        tuple
+            .to_tuple()
+            .map_err(|e| Error::runtime(format!("{}: untuple: {e}", self.name)))
+    }
+
+    /// Artifact name (file stem).
+    pub fn name(&self) -> &str {
+        &self.name
+    }
+}
+
+/// Build an f32 literal of the given dimensions.
+pub(crate) fn literal_f32(data: &[f32], dims: &[i64]) -> Result<xla::Literal> {
+    let n: i64 = dims.iter().product();
+    if n as usize != data.len() {
+        return Err(Error::runtime(format!(
+            "literal shape {dims:?} wants {n} elements, got {}",
+            data.len()
+        )));
+    }
+    xla::Literal::vec1(data)
+        .reshape(dims)
+        .map_err(|e| Error::runtime(format!("reshape: {e}")))
+}
+
+/// Build an i32 literal of the given dimensions.
+pub(crate) fn literal_i32(data: &[i32], dims: &[i64]) -> Result<xla::Literal> {
+    let n: i64 = dims.iter().product();
+    if n as usize != data.len() {
+        return Err(Error::runtime(format!(
+            "literal shape {dims:?} wants {n} elements, got {}",
+            data.len()
+        )));
+    }
+    xla::Literal::vec1(data)
+        .reshape(dims)
+        .map_err(|e| Error::runtime(format!("reshape: {e}")))
+}

@@ -1,0 +1,149 @@
+//! The fraud scorer: AOT-compiled MLP served from the rust hot path.
+//!
+//! Scoring is **micro-batched**: the artifact has a fixed batch shape
+//! (`meta.json`), so callers accumulate feature rows and flush when the
+//! batch fills (or on an explicit deadline in the serving loop). Partial
+//! batches pad by repeating the last row — pure overhead, no semantic
+//! effect, exactly what the paper-scale serving path would do.
+
+use crate::error::{Error, Result};
+use crate::runtime::pjrt::{literal_f32, Executable, Runtime};
+use crate::util::json::Json;
+use std::path::Path;
+
+/// Shape contract of the scorer artifact (from `meta.json`).
+#[derive(Debug, Clone)]
+pub struct ScorerMeta {
+    /// Fixed batch size.
+    pub batch: usize,
+    /// Feature count per row.
+    pub features: usize,
+    /// Feature names, in row order (`python/compile/model.py`).
+    pub feature_names: Vec<String>,
+}
+
+/// AOT fraud scorer.
+pub struct FraudScorer {
+    exe: Executable,
+    meta: ScorerMeta,
+}
+
+impl FraudScorer {
+    /// Load + compile the scorer artifact from `dir`.
+    pub fn load(runtime: &Runtime, dir: &Path) -> Result<FraudScorer> {
+        let meta_text = std::fs::read_to_string(dir.join("meta.json"))?;
+        let meta_json = Json::parse(&meta_text)?;
+        let scorer = meta_json
+            .get("fraud_scorer")
+            .ok_or_else(|| Error::runtime("meta.json: missing fraud_scorer"))?;
+        let get = |k: &str| -> Result<i64> {
+            scorer
+                .get(k)
+                .and_then(|j| j.as_i64())
+                .ok_or_else(|| Error::runtime(format!("meta.json: missing {k}")))
+        };
+        let meta = ScorerMeta {
+            batch: get("batch")? as usize,
+            features: get("features")? as usize,
+            feature_names: scorer
+                .get("feature_names")
+                .and_then(|j| j.as_arr())
+                .map(|arr| {
+                    arr.iter()
+                        .filter_map(|j| j.as_str().map(|s| s.to_string()))
+                        .collect()
+                })
+                .unwrap_or_default(),
+        };
+        let exe = runtime.load_hlo_text(&dir.join("fraud_scorer.hlo.txt"))?;
+        Ok(FraudScorer { exe, meta })
+    }
+
+    /// Shape contract.
+    pub fn meta(&self) -> &ScorerMeta {
+        &self.meta
+    }
+
+    /// Score `n_rows` feature rows (flattened row-major). Rows beyond the
+    /// batch capacity are rejected; partial batches are padded.
+    pub fn score(&self, rows_flat: &[f32], n_rows: usize) -> Result<Vec<f32>> {
+        let (b, f) = (self.meta.batch, self.meta.features);
+        if n_rows == 0 {
+            return Ok(Vec::new());
+        }
+        if n_rows > b {
+            return Err(Error::runtime(format!(
+                "scorer batch overflow: {n_rows} > {b}"
+            )));
+        }
+        if rows_flat.len() != n_rows * f {
+            return Err(Error::runtime(format!(
+                "expected {n_rows}×{f} features, got {}",
+                rows_flat.len()
+            )));
+        }
+        let mut padded = Vec::with_capacity(b * f);
+        padded.extend_from_slice(rows_flat);
+        let last_row = &rows_flat[(n_rows - 1) * f..];
+        for _ in n_rows..b {
+            padded.extend_from_slice(last_row);
+        }
+        let input = literal_f32(&padded, &[b as i64, f as i64])?;
+        let outputs = self.exe.run(&[input])?;
+        let probs: Vec<f32> = outputs
+            .first()
+            .ok_or_else(|| Error::runtime("scorer: no output"))?
+            .to_vec::<f32>()
+            .map_err(|e| Error::runtime(format!("scorer output: {e}")))?;
+        Ok(probs[..n_rows].to_vec())
+    }
+}
+
+/// Accumulates feature rows and flushes fixed-size batches.
+pub struct ScorerBatcher<'a> {
+    scorer: &'a FraudScorer,
+    buf: Vec<f32>,
+    rows: usize,
+}
+
+impl<'a> ScorerBatcher<'a> {
+    /// New batcher over a scorer.
+    pub fn new(scorer: &'a FraudScorer) -> Self {
+        let cap = scorer.meta.batch * scorer.meta.features;
+        ScorerBatcher {
+            scorer,
+            buf: Vec::with_capacity(cap),
+            rows: 0,
+        }
+    }
+
+    /// Push one feature row; returns scores when the batch filled.
+    pub fn push(&mut self, row: &[f32]) -> Result<Option<Vec<f32>>> {
+        if row.len() != self.scorer.meta.features {
+            return Err(Error::runtime(format!(
+                "row has {} features, scorer wants {}",
+                row.len(),
+                self.scorer.meta.features
+            )));
+        }
+        self.buf.extend_from_slice(row);
+        self.rows += 1;
+        if self.rows == self.scorer.meta.batch {
+            return Ok(Some(self.flush()?));
+        }
+        Ok(None)
+    }
+
+    /// Flush whatever is buffered (possibly a partial batch).
+    pub fn flush(&mut self) -> Result<Vec<f32>> {
+        let scores = self.scorer.score(&self.buf, self.rows)?;
+        self.buf.clear();
+        self.rows = 0;
+        Ok(scores)
+    }
+
+    /// Buffered (unflushed) rows.
+    pub fn pending(&self) -> usize {
+        self.rows
+    }
+}

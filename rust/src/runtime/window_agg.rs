@@ -1,0 +1,139 @@
+//! Vectorized aggregation backend: the AOT `window_agg` artifact.
+//!
+//! An alternative to the scalar per-event state updates in
+//! [`crate::plan`]: arrive/expire deltas are accumulated into fixed-size
+//! batches and applied to a slot-indexed state matrix in one XLA call
+//! (the L1 one-hot-matmul kernel). The ablation bench compares this
+//! against the scalar path; on real TPU hardware the batched path is the
+//! one that scales (DESIGN.md §5).
+
+use crate::error::{Error, Result};
+use crate::runtime::pjrt::{literal_f32, literal_i32, Executable, Runtime};
+use crate::util::json::Json;
+use std::path::Path;
+
+/// Shape contract of the window_agg artifact.
+#[derive(Debug, Clone, Copy)]
+pub struct AggMeta {
+    /// Slot count (state rows).
+    pub slots: usize,
+    /// Delta batch size.
+    pub batch: usize,
+    /// State lanes (`[count, sum, sumsq, pad…]`).
+    pub lanes: usize,
+}
+
+/// Host-resident state matrix + the compiled update executable.
+pub struct VectorizedAgg {
+    exe: Executable,
+    meta: AggMeta,
+    state: Vec<f32>,
+    // pending delta batch
+    slots: Vec<i32>,
+    values: Vec<f32>,
+    signs: Vec<f32>,
+    /// XLA executions performed (bench observability).
+    pub flushes: u64,
+}
+
+impl VectorizedAgg {
+    /// Load + compile the artifact from `dir`.
+    pub fn load(runtime: &Runtime, dir: &Path) -> Result<VectorizedAgg> {
+        let meta_text = std::fs::read_to_string(dir.join("meta.json"))?;
+        let meta_json = Json::parse(&meta_text)?;
+        let agg = meta_json
+            .get("window_agg")
+            .ok_or_else(|| Error::runtime("meta.json: missing window_agg"))?;
+        let get = |k: &str| -> Result<usize> {
+            agg.get(k)
+                .and_then(|j| j.as_i64())
+                .map(|v| v as usize)
+                .ok_or_else(|| Error::runtime(format!("meta.json: missing {k}")))
+        };
+        let meta = AggMeta {
+            slots: get("slots")?,
+            batch: get("batch")?,
+            lanes: get("lanes")?,
+        };
+        let exe = runtime.load_hlo_text(&dir.join("window_agg.hlo.txt"))?;
+        Ok(VectorizedAgg {
+            exe,
+            meta,
+            state: vec![0.0; meta.slots * meta.lanes],
+            slots: Vec::with_capacity(meta.batch),
+            values: Vec::with_capacity(meta.batch),
+            signs: Vec::with_capacity(meta.batch),
+            flushes: 0,
+        })
+    }
+
+    /// Shape contract.
+    pub fn meta(&self) -> AggMeta {
+        self.meta
+    }
+
+    /// Queue one delta; flushes automatically when the batch fills.
+    pub fn push(&mut self, slot: u32, value: f32, arrive: bool) -> Result<()> {
+        if slot as usize >= self.meta.slots {
+            return Err(Error::runtime(format!(
+                "slot {slot} out of range ({})",
+                self.meta.slots
+            )));
+        }
+        self.slots.push(slot as i32);
+        self.values.push(value);
+        self.signs.push(if arrive { 1.0 } else { -1.0 });
+        if self.slots.len() == self.meta.batch {
+            self.flush()?;
+        }
+        Ok(())
+    }
+
+    /// Apply all queued deltas (pads the batch with sign-0 rows).
+    pub fn flush(&mut self) -> Result<()> {
+        if self.slots.is_empty() {
+            return Ok(());
+        }
+        let b = self.meta.batch;
+        self.slots.resize(b, 0);
+        self.values.resize(b, 0.0);
+        self.signs.resize(b, 0.0); // sign 0 ⇒ no-op rows
+        let state = literal_f32(
+            &self.state,
+            &[self.meta.slots as i64, self.meta.lanes as i64],
+        )?;
+        let slots = literal_i32(&self.slots, &[b as i64])?;
+        let values = literal_f32(&self.values, &[b as i64])?;
+        let signs = literal_f32(&self.signs, &[b as i64])?;
+        let outputs = self.exe.run(&[state, slots, values, signs])?;
+        self.state = outputs
+            .first()
+            .ok_or_else(|| Error::runtime("window_agg: no output"))?
+            .to_vec::<f32>()
+            .map_err(|e| Error::runtime(format!("window_agg output: {e}")))?;
+        self.slots.clear();
+        self.values.clear();
+        self.signs.clear();
+        self.flushes += 1;
+        Ok(())
+    }
+
+    /// `[count, sum, sumsq]` for a slot (flushes pending deltas first).
+    pub fn lanes(&mut self, slot: u32) -> Result<(f64, f64, f64)> {
+        self.flush()?;
+        let base = slot as usize * self.meta.lanes;
+        let row = &self.state[base..base + 3];
+        Ok((row[0] as f64, row[1] as f64, row[2] as f64))
+    }
+
+    /// Derived aggregates for a slot: (count, sum, avg, stddev).
+    pub fn aggregates(&mut self, slot: u32) -> Result<(f64, f64, Option<f64>, Option<f64>)> {
+        let (count, sum, sumsq) = self.lanes(slot)?;
+        if count <= 0.0 {
+            return Ok((0.0, 0.0, None, None));
+        }
+        let mean = sum / count;
+        let var = (sumsq / count - mean * mean).max(0.0);
+        Ok((count, sum, Some(mean), Some(var.sqrt())))
+    }
+}

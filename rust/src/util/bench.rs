@@ -1,0 +1,169 @@
+//! Bench harness (criterion is unavailable offline — DESIGN.md §1).
+//!
+//! All `rust/benches/*.rs` binaries use this: warmup, timed measurement
+//! into a [`Histogram`], and aligned table output so EXPERIMENTS.md rows
+//! can be pasted straight from bench stdout.
+
+use crate::util::hist::Histogram;
+use std::time::Instant;
+
+/// One measured series (a row of a paper figure/table).
+#[derive(Debug, Clone)]
+pub struct Series {
+    /// Row label, e.g. `hop=1s` or `window=7d`.
+    pub label: String,
+    /// Latency histogram (nanoseconds).
+    pub hist: Histogram,
+    /// Events processed per wall-clock second during measurement.
+    pub throughput_eps: f64,
+    /// Extra key=value annotations (state sizes, cache hit rates, …).
+    pub notes: Vec<(String, String)>,
+}
+
+impl Series {
+    /// New empty series.
+    pub fn new(label: impl Into<String>) -> Self {
+        Series {
+            label: label.into(),
+            hist: Histogram::new(),
+            throughput_eps: 0.0,
+            notes: Vec::new(),
+        }
+    }
+
+    /// Attach an annotation.
+    pub fn note(&mut self, key: impl Into<String>, value: impl std::fmt::Display) {
+        self.notes.push((key.into(), value.to_string()));
+    }
+}
+
+/// Time a closure over `n` iterations, recording per-iteration nanos.
+pub fn measure_iters(hist: &mut Histogram, n: u64, mut f: impl FnMut()) {
+    for _ in 0..n {
+        let t0 = Instant::now();
+        f();
+        hist.record(t0.elapsed().as_nanos() as u64);
+    }
+}
+
+/// Pretty-print a set of series as a percentile table.
+pub fn print_table(title: &str, series: &[Series]) {
+    println!("\n== {title} ==");
+    println!(
+        "{:<28} {:>10} {:>10} {:>10} {:>10} {:>10} {:>10} {:>12}",
+        "series", "p50(ms)", "p90(ms)", "p99(ms)", "p99.9(ms)", "p99.99(ms)", "max(ms)", "thrpt(ev/s)"
+    );
+    for s in series {
+        let q = |p: f64| s.hist.quantile(p) as f64 / 1e6;
+        println!(
+            "{:<28} {:>10.3} {:>10.3} {:>10.3} {:>10.3} {:>10.3} {:>10.3} {:>12.0}",
+            s.label,
+            q(0.50),
+            q(0.90),
+            q(0.99),
+            q(0.999),
+            q(0.9999),
+            s.hist.max() as f64 / 1e6,
+            s.throughput_eps,
+        );
+        if !s.notes.is_empty() {
+            let notes: Vec<String> = s.notes.iter().map(|(k, v)| format!("{k}={v}")).collect();
+            println!("{:<28}   {}", "", notes.join(" "));
+        }
+    }
+}
+
+/// Emit a machine-readable line per series (consumed by EXPERIMENTS.md
+/// tooling / grep).
+pub fn print_csv(bench: &str, series: &[Series]) {
+    println!("#csv bench,series,p50_ms,p90_ms,p99_ms,p999_ms,p9999_ms,max_ms,throughput_eps,n");
+    for s in series {
+        let q = |p: f64| s.hist.quantile(p) as f64 / 1e6;
+        println!(
+            "#csv {bench},{},{:.4},{:.4},{:.4},{:.4},{:.4},{:.4},{:.0},{}",
+            s.label,
+            q(0.50),
+            q(0.90),
+            q(0.99),
+            q(0.999),
+            q(0.9999),
+            s.hist.max() as f64 / 1e6,
+            s.throughput_eps,
+            s.hist.count()
+        );
+    }
+}
+
+/// Parse common bench CLI flags: `--quick` (shrink workloads ~10x for CI),
+/// `--seed N`.
+#[derive(Debug, Clone, Copy)]
+pub struct BenchOpts {
+    /// Reduce workload sizes by ~10× (used by `cargo bench -- --quick`).
+    pub quick: bool,
+    /// Workload RNG seed.
+    pub seed: u64,
+}
+
+impl BenchOpts {
+    /// Parse from `std::env::args`, ignoring the harness's own flags.
+    pub fn from_args() -> Self {
+        let args: Vec<String> = std::env::args().collect();
+        let quick = args.iter().any(|a| a == "--quick")
+            || std::env::var("RAILGUN_BENCH_QUICK").is_ok();
+        let seed = args
+            .iter()
+            .position(|a| a == "--seed")
+            .and_then(|i| args.get(i + 1))
+            .and_then(|s| s.parse().ok())
+            .unwrap_or(0x5EED);
+        BenchOpts { quick, seed }
+    }
+
+    /// Scale a workload size down in quick mode.
+    pub fn scale(&self, n: u64) -> u64 {
+        if self.quick {
+            (n / 10).max(1)
+        } else {
+            n
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn measure_records_one_sample_per_iter() {
+        let mut h = Histogram::new();
+        measure_iters(&mut h, 100, || {
+            std::hint::black_box(1 + 1);
+        });
+        assert_eq!(h.count(), 100);
+    }
+
+    #[test]
+    fn series_notes_accumulate() {
+        let mut s = Series::new("hop=1s");
+        s.note("panes", 3600);
+        s.note("cache_hit", "99.2%");
+        assert_eq!(s.notes.len(), 2);
+    }
+
+    #[test]
+    fn print_does_not_panic() {
+        let mut s = Series::new("x");
+        s.hist.record(1_000_000);
+        print_table("smoke", &[s.clone()]);
+        print_csv("smoke", &[s]);
+    }
+
+    #[test]
+    fn opts_scale() {
+        let o = BenchOpts { quick: true, seed: 1 };
+        assert_eq!(o.scale(1000), 100);
+        assert_eq!(o.scale(5), 1);
+        let o = BenchOpts { quick: false, seed: 1 };
+        assert_eq!(o.scale(1000), 1000);
+    }
+}

@@ -1,0 +1,155 @@
+//! Clocks: real (system) and virtual (test/bench) time sources.
+//!
+//! Railgun windows are **event-time** driven: window advance is decided by
+//! event timestamps, not wall-clock. The engine therefore only needs a
+//! clock for (a) latency measurement and (b) pacing the injector. Both
+//! uses go through the [`Clock`] trait so experiments can run in virtual
+//! time (DESIGN.md §1: the 35-minute paper runs are compressed by
+//! synthesizing event-time at exact cadence while measuring real
+//! per-event processing cost).
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+use std::time::{SystemTime, UNIX_EPOCH};
+
+/// Milliseconds since the unix epoch (the event timestamp domain).
+pub type TimestampMs = i64;
+
+/// A source of monotonic nanoseconds and wall-clock milliseconds.
+pub trait Clock: Send + Sync {
+    /// Monotonic nanoseconds (for latency measurement).
+    fn now_nanos(&self) -> u64;
+    /// Wall-clock milliseconds since epoch (for event timestamps).
+    fn now_millis(&self) -> TimestampMs;
+}
+
+/// Real clock backed by `std::time`.
+#[derive(Debug, Default, Clone, Copy)]
+pub struct SystemClock;
+
+impl SystemClock {
+    /// Shared start instant so `now_nanos` is comparable across clones.
+    fn start() -> std::time::Instant {
+        use once_cell::sync::OnceCell;
+        static START: OnceCell<std::time::Instant> = OnceCell::new();
+        *START.get_or_init(std::time::Instant::now)
+    }
+}
+
+impl Clock for SystemClock {
+    fn now_nanos(&self) -> u64 {
+        Self::start().elapsed().as_nanos() as u64
+    }
+    fn now_millis(&self) -> TimestampMs {
+        SystemTime::now()
+            .duration_since(UNIX_EPOCH)
+            .expect("system clock before epoch")
+            .as_millis() as TimestampMs
+    }
+}
+
+/// Deterministic, manually-advanced clock for tests and virtual-time
+/// experiments. Thread-safe; all clones share state.
+#[derive(Debug, Clone, Default)]
+pub struct VirtualClock {
+    nanos: Arc<AtomicU64>,
+}
+
+impl VirtualClock {
+    /// New clock at t=0.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// New clock starting at the given epoch milliseconds.
+    pub fn starting_at_millis(ms: TimestampMs) -> Self {
+        let c = Self::new();
+        c.nanos.store((ms as u64) * 1_000_000, Ordering::SeqCst);
+        c
+    }
+
+    /// Advance by `ns` nanoseconds.
+    pub fn advance_nanos(&self, ns: u64) {
+        self.nanos.fetch_add(ns, Ordering::SeqCst);
+    }
+
+    /// Advance by `ms` milliseconds.
+    pub fn advance_millis(&self, ms: u64) {
+        self.advance_nanos(ms * 1_000_000);
+    }
+
+    /// Jump to an absolute millisecond timestamp (must not go backwards).
+    pub fn set_millis(&self, ms: TimestampMs) {
+        let target = (ms as u64) * 1_000_000;
+        let prev = self.nanos.swap(target, Ordering::SeqCst);
+        debug_assert!(target >= prev, "virtual clock moved backwards");
+    }
+}
+
+impl Clock for VirtualClock {
+    fn now_nanos(&self) -> u64 {
+        self.nanos.load(Ordering::SeqCst)
+    }
+    fn now_millis(&self) -> TimestampMs {
+        (self.nanos.load(Ordering::SeqCst) / 1_000_000) as TimestampMs
+    }
+}
+
+/// Convenience duration constants in the event-time (ms) domain.
+pub mod ms {
+    /// One second in milliseconds.
+    pub const SECOND: i64 = 1_000;
+    /// One minute in milliseconds.
+    pub const MINUTE: i64 = 60 * SECOND;
+    /// One hour in milliseconds.
+    pub const HOUR: i64 = 60 * MINUTE;
+    /// One day in milliseconds.
+    pub const DAY: i64 = 24 * HOUR;
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn virtual_clock_starts_at_zero_and_advances() {
+        let c = VirtualClock::new();
+        assert_eq!(c.now_nanos(), 0);
+        assert_eq!(c.now_millis(), 0);
+        c.advance_millis(250);
+        assert_eq!(c.now_millis(), 250);
+        c.advance_nanos(1_500_000);
+        assert_eq!(c.now_millis(), 251);
+    }
+
+    #[test]
+    fn virtual_clock_clones_share_state() {
+        let a = VirtualClock::new();
+        let b = a.clone();
+        a.advance_millis(10);
+        assert_eq!(b.now_millis(), 10);
+    }
+
+    #[test]
+    fn virtual_clock_absolute_start() {
+        let c = VirtualClock::starting_at_millis(1_600_000_000_000);
+        assert_eq!(c.now_millis(), 1_600_000_000_000);
+        c.set_millis(1_600_000_000_500);
+        assert_eq!(c.now_millis(), 1_600_000_000_500);
+    }
+
+    #[test]
+    fn system_clock_monotonic() {
+        let c = SystemClock;
+        let a = c.now_nanos();
+        let b = c.now_nanos();
+        assert!(b >= a);
+        assert!(c.now_millis() > 1_600_000_000_000); // after Sep 2020
+    }
+
+    #[test]
+    fn ms_constants() {
+        assert_eq!(ms::MINUTE, 60_000);
+        assert_eq!(ms::DAY, 86_400_000);
+    }
+}

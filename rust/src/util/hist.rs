@@ -1,0 +1,308 @@
+//! HDR-style latency histogram.
+//!
+//! The paper reports end-to-end latency percentiles up to p99.99
+//! (Figures 5–6). `criterion`/`hdrhistogram` are unavailable offline, so
+//! this is a log-linear bucketed histogram: values are bucketed with a
+//! fixed relative precision (sub-bucket resolution per power-of-two
+//! magnitude), giving bounded relative error (<1/2^precision) across the
+//! full `u64` range with a few KiB of counters — the same scheme as
+//! HdrHistogram.
+
+/// Log-linear histogram of `u64` samples (we record nanoseconds).
+#[derive(Debug, Clone)]
+pub struct Histogram {
+    /// `precision` sub-bucket bits per magnitude (HdrHistogram's
+    /// "significant figures" analogue). 7 bits ⇒ <0.8% relative error.
+    precision: u32,
+    /// counts[magnitude][sub]; flattened.
+    counts: Vec<u64>,
+    total: u64,
+    min: u64,
+    max: u64,
+    sum: u128,
+}
+
+impl Default for Histogram {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Histogram {
+    /// Default histogram: 7 sub-bucket bits (≈0.8% relative error).
+    pub fn new() -> Self {
+        Self::with_precision(7)
+    }
+
+    /// Histogram with `precision` sub-bucket bits (1..=12).
+    pub fn with_precision(precision: u32) -> Self {
+        assert!((1..=12).contains(&precision));
+        let magnitudes = 64 - precision; // values < 2^precision live in mag 0
+        let buckets = (magnitudes as usize + 1) << precision;
+        Histogram {
+            precision,
+            counts: vec![0; buckets],
+            total: 0,
+            min: u64::MAX,
+            max: 0,
+            sum: 0,
+        }
+    }
+
+    #[inline]
+    fn bucket_of(&self, value: u64) -> usize {
+        let p = self.precision;
+        // magnitude 0 holds values in [0, 2^p) exactly (linear).
+        let mag = (64 - value.leading_zeros()).saturating_sub(p);
+        let sub = (value >> mag) as usize & ((1usize << p) - 1);
+        ((mag as usize) << p) | sub
+    }
+
+    /// Representative (lower-bound) value of a bucket index.
+    ///
+    /// Inverse of [`Self::bucket_of`]: a value `v` with `mag > 0` maps to
+    /// `sub = v >> mag` (which keeps its top bit, so `sub ∈ [2^(p-1), 2^p)`),
+    /// hence the bucket covers `[sub << mag, (sub+1) << mag)` and the
+    /// relative error is at most `1/sub ≤ 2^-(p-1)`.
+    fn value_of(&self, bucket: usize) -> u64 {
+        let p = self.precision;
+        let mag = (bucket >> p) as u32;
+        let sub = (bucket & ((1 << p) - 1)) as u64;
+        sub << mag
+    }
+
+    /// Record one sample.
+    #[inline]
+    pub fn record(&mut self, value: u64) {
+        let b = self.bucket_of(value);
+        self.counts[b] += 1;
+        self.total += 1;
+        self.sum += value as u128;
+        if value < self.min {
+            self.min = value;
+        }
+        if value > self.max {
+            self.max = value;
+        }
+    }
+
+    /// Record `n` identical samples (used for coordinated-omission
+    /// back-fill, see `workload::injector`).
+    pub fn record_n(&mut self, value: u64, n: u64) {
+        if n == 0 {
+            return;
+        }
+        let b = self.bucket_of(value);
+        self.counts[b] += n;
+        self.total += n;
+        self.sum += value as u128 * n as u128;
+        if value < self.min {
+            self.min = value;
+        }
+        if value > self.max {
+            self.max = value;
+        }
+    }
+
+    /// Total number of recorded samples.
+    pub fn count(&self) -> u64 {
+        self.total
+    }
+
+    /// Smallest recorded sample (0 when empty).
+    pub fn min(&self) -> u64 {
+        if self.total == 0 {
+            0
+        } else {
+            self.min
+        }
+    }
+
+    /// Largest recorded sample.
+    pub fn max(&self) -> u64 {
+        self.max
+    }
+
+    /// Mean of recorded samples.
+    pub fn mean(&self) -> f64 {
+        if self.total == 0 {
+            0.0
+        } else {
+            self.sum as f64 / self.total as f64
+        }
+    }
+
+    /// Value at quantile `q` in `[0, 1]` (e.g. 0.999 for p99.9).
+    ///
+    /// Returns the representative value of the bucket containing the
+    /// q-th sample; exact for min/max, ≤ precision error elsewhere.
+    pub fn quantile(&self, q: f64) -> u64 {
+        if self.total == 0 {
+            return 0;
+        }
+        let q = q.clamp(0.0, 1.0);
+        let rank = ((q * self.total as f64).ceil() as u64).max(1);
+        let mut seen = 0u64;
+        for (i, &c) in self.counts.iter().enumerate() {
+            if c == 0 {
+                continue;
+            }
+            seen += c;
+            if seen >= rank {
+                // clamp representative to observed extremes for sane tails
+                return self.value_of(i).clamp(self.min, self.max);
+            }
+        }
+        self.max
+    }
+
+    /// Merge another histogram (must have equal precision).
+    pub fn merge(&mut self, other: &Histogram) {
+        assert_eq!(self.precision, other.precision);
+        for (a, b) in self.counts.iter_mut().zip(other.counts.iter()) {
+            *a += b;
+        }
+        self.total += other.total;
+        self.sum += other.sum;
+        self.min = self.min.min(other.min);
+        self.max = self.max.max(other.max);
+    }
+
+    /// Render the standard percentile row used by benches:
+    /// `p50 p90 p99 p99.9 p99.99 max` in milliseconds.
+    pub fn summary_ms(&self) -> String {
+        let ms = |v: u64| v as f64 / 1e6;
+        format!(
+            "p50={:.3}ms p90={:.3}ms p99={:.3}ms p99.9={:.3}ms p99.99={:.3}ms max={:.3}ms n={}",
+            ms(self.quantile(0.50)),
+            ms(self.quantile(0.90)),
+            ms(self.quantile(0.99)),
+            ms(self.quantile(0.999)),
+            ms(self.quantile(0.9999)),
+            ms(self.max()),
+            self.count(),
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn empty_histogram_is_zeroes() {
+        let h = Histogram::new();
+        assert_eq!(h.count(), 0);
+        assert_eq!(h.quantile(0.5), 0);
+        assert_eq!(h.min(), 0);
+        assert_eq!(h.mean(), 0.0);
+    }
+
+    #[test]
+    fn single_value() {
+        let mut h = Histogram::new();
+        h.record(12345);
+        assert_eq!(h.count(), 1);
+        assert_eq!(h.min(), 12345);
+        assert_eq!(h.max(), 12345);
+        // quantiles clamp to observed extremes
+        assert_eq!(h.quantile(0.0), 12345);
+        assert_eq!(h.quantile(1.0), 12345);
+    }
+
+    #[test]
+    fn small_values_are_exact() {
+        let mut h = Histogram::new();
+        for v in 0..100u64 {
+            h.record(v);
+        }
+        // magnitude-0 buckets are linear: quantiles exact for v < 2^7.
+        // rank = ceil(q*n) ⇒ q=0.5 picks the 50th smallest of 0..=99 = 49.
+        assert_eq!(h.quantile(0.5), 49);
+        assert_eq!(h.quantile(0.99), 98);
+        assert_eq!(h.quantile(1.0), 99);
+    }
+
+    #[test]
+    fn relative_error_bounded() {
+        let mut h = Histogram::new();
+        let mut rng = Rng::new(5);
+        let mut vals = Vec::new();
+        for _ in 0..100_000 {
+            let v = rng.next_below(1_000_000_000) + 1;
+            vals.push(v);
+            h.record(v);
+        }
+        vals.sort_unstable();
+        for &q in &[0.5, 0.9, 0.99, 0.999] {
+            let exact = vals[((q * vals.len() as f64).ceil() as usize - 1).min(vals.len() - 1)];
+            let approx = h.quantile(q);
+            let rel = (approx as f64 - exact as f64).abs() / exact as f64;
+            assert!(rel < 0.02, "q={q} exact={exact} approx={approx} rel={rel}");
+        }
+    }
+
+    #[test]
+    fn merge_equals_combined_recording() {
+        let mut a = Histogram::new();
+        let mut b = Histogram::new();
+        let mut c = Histogram::new();
+        let mut rng = Rng::new(6);
+        for i in 0..10_000u64 {
+            let v = rng.next_below(1 << 40);
+            if i % 2 == 0 {
+                a.record(v);
+            } else {
+                b.record(v);
+            }
+            c.record(v);
+        }
+        a.merge(&b);
+        assert_eq!(a.count(), c.count());
+        assert_eq!(a.max(), c.max());
+        assert_eq!(a.quantile(0.99), c.quantile(0.99));
+    }
+
+    #[test]
+    fn record_n_matches_loop() {
+        let mut a = Histogram::new();
+        let mut b = Histogram::new();
+        a.record_n(777, 42);
+        for _ in 0..42 {
+            b.record(777);
+        }
+        assert_eq!(a.count(), b.count());
+        assert_eq!(a.quantile(0.5), b.quantile(0.5));
+        assert_eq!(a.mean(), b.mean());
+    }
+
+    #[test]
+    fn mean_is_exact() {
+        let mut h = Histogram::new();
+        for v in [10u64, 20, 30] {
+            h.record(v);
+        }
+        assert!((h.mean() - 20.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn huge_values_do_not_overflow() {
+        let mut h = Histogram::new();
+        h.record(u64::MAX);
+        h.record(u64::MAX / 2);
+        assert_eq!(h.max(), u64::MAX);
+        assert!(h.quantile(1.0) >= u64::MAX / 2);
+    }
+
+    #[test]
+    fn summary_renders() {
+        let mut h = Histogram::new();
+        for i in 1..=1000u64 {
+            h.record(i * 1_000_000); // 1..1000 ms
+        }
+        let s = h.summary_ms();
+        assert!(s.contains("p50="), "{s}");
+        assert!(s.contains("n=1000"), "{s}");
+    }
+}

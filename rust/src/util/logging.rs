@@ -1,0 +1,70 @@
+//! Tiny stderr logger backing the `log` facade (env_logger is not in the
+//! offline crate set). Level comes from `RAILGUN_LOG` (error|warn|info|
+//! debug|trace), default `info`.
+
+use log::{Level, LevelFilter, Metadata, Record};
+use std::io::Write;
+use std::time::{SystemTime, UNIX_EPOCH};
+
+struct StderrLogger {
+    level: LevelFilter,
+}
+
+impl log::Log for StderrLogger {
+    fn enabled(&self, metadata: &Metadata) -> bool {
+        metadata.level() <= self.level
+    }
+
+    fn log(&self, record: &Record) {
+        if !self.enabled(record.metadata()) {
+            return;
+        }
+        let now = SystemTime::now()
+            .duration_since(UNIX_EPOCH)
+            .unwrap_or_default();
+        let secs = now.as_secs();
+        let millis = now.subsec_millis();
+        let lvl = match record.level() {
+            Level::Error => "ERROR",
+            Level::Warn => "WARN ",
+            Level::Info => "INFO ",
+            Level::Debug => "DEBUG",
+            Level::Trace => "TRACE",
+        };
+        // best-effort: never panic in the logger
+        let _ = writeln!(
+            std::io::stderr(),
+            "[{secs}.{millis:03} {lvl} {}] {}",
+            record.target(),
+            record.args()
+        );
+    }
+
+    fn flush(&self) {}
+}
+
+/// Install the logger (idempotent). Reads `RAILGUN_LOG` for the level.
+pub fn init() {
+    let level = match std::env::var("RAILGUN_LOG").as_deref() {
+        Ok("error") => LevelFilter::Error,
+        Ok("warn") => LevelFilter::Warn,
+        Ok("debug") => LevelFilter::Debug,
+        Ok("trace") => LevelFilter::Trace,
+        Ok("off") => LevelFilter::Off,
+        _ => LevelFilter::Info,
+    };
+    let logger = Box::new(StderrLogger { level });
+    if log::set_boxed_logger(logger).is_ok() {
+        log::set_max_level(level);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn init_is_idempotent() {
+        super::init();
+        super::init(); // second call must not panic
+        log::info!("logger smoke test");
+    }
+}

@@ -1,0 +1,20 @@
+//! General-purpose utilities shared across the engine.
+//!
+//! Everything in here exists because the build is fully offline against a
+//! small vendored crate set (see DESIGN.md §1): deterministic RNGs
+//! ([`rng`]), an HDR-style latency histogram ([`hist`]), virtual/system
+//! clocks ([`clock`]), fast non-cryptographic hashing ([`hash`]), varint
+//! codecs ([`varint`]), a small JSON reader/writer ([`json`]), a stderr
+//! logger ([`logging`]) and a property-testing mini-framework
+//! ([`propcheck`]).
+
+pub mod bench;
+pub mod clock;
+pub mod hash;
+pub mod hist;
+pub mod json;
+pub mod logging;
+pub mod propcheck;
+pub mod rng;
+pub mod tmp;
+pub mod varint;

@@ -1,0 +1,74 @@
+//! Scratch directories for tests, benches and examples.
+
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicU64, Ordering};
+
+static COUNTER: AtomicU64 = AtomicU64::new(0);
+
+/// A unique scratch directory, removed on drop.
+#[derive(Debug)]
+pub struct TempDir {
+    path: PathBuf,
+    keep: bool,
+}
+
+impl TempDir {
+    /// Create a fresh directory under the system temp dir.
+    pub fn new(tag: &str) -> TempDir {
+        let path = std::env::temp_dir().join(format!(
+            "railgun_{tag}_{}_{}",
+            std::process::id(),
+            COUNTER.fetch_add(1, Ordering::Relaxed)
+        ));
+        std::fs::create_dir_all(&path).expect("create temp dir");
+        TempDir { path, keep: false }
+    }
+
+    /// The directory path.
+    pub fn path(&self) -> &Path {
+        &self.path
+    }
+
+    /// Subpath helper.
+    pub fn join(&self, rel: &str) -> PathBuf {
+        self.path.join(rel)
+    }
+
+    /// Leak the directory (skip cleanup) — for post-mortem debugging.
+    pub fn keep(mut self) -> PathBuf {
+        self.keep = true;
+        self.path.clone()
+    }
+}
+
+impl Drop for TempDir {
+    fn drop(&mut self) {
+        if !self.keep {
+            let _ = std::fs::remove_dir_all(&self.path);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tempdir_is_created_and_removed() {
+        let p;
+        {
+            let t = TempDir::new("tmp_unit");
+            p = t.path().to_path_buf();
+            assert!(p.is_dir());
+            std::fs::write(t.join("f.txt"), b"x").unwrap();
+        }
+        assert!(!p.exists());
+    }
+
+    #[test]
+    fn two_tempdirs_are_distinct() {
+        let a = TempDir::new("x");
+        let b = TempDir::new("x");
+        assert_ne!(a.path(), b.path());
+    }
+}

@@ -1,0 +1,229 @@
+//! LEB128 varint + zigzag codecs.
+//!
+//! The event codec ([`crate::event::codec`]), reservoir chunk format and
+//! kvstore record format all use varints to keep serialized events small —
+//! the paper stresses that reservoir storage efficiency matters because
+//! events are replicated across task processors (§3.3.1).
+
+use crate::error::{Error, Result};
+
+/// Append `v` as LEB128 to `out`. Returns bytes written (1..=10).
+#[inline]
+pub fn write_u64(out: &mut Vec<u8>, mut v: u64) -> usize {
+    let mut n = 0;
+    loop {
+        n += 1;
+        let byte = (v & 0x7f) as u8;
+        v >>= 7;
+        if v == 0 {
+            out.push(byte);
+            return n;
+        }
+        out.push(byte | 0x80);
+    }
+}
+
+/// Append a zigzag-encoded signed value.
+#[inline]
+pub fn write_i64(out: &mut Vec<u8>, v: i64) -> usize {
+    write_u64(out, zigzag(v))
+}
+
+/// Append a u32 varint.
+#[inline]
+pub fn write_u32(out: &mut Vec<u8>, v: u32) -> usize {
+    write_u64(out, v as u64)
+}
+
+/// Zigzag-map a signed value to unsigned.
+#[inline]
+pub fn zigzag(v: i64) -> u64 {
+    ((v << 1) ^ (v >> 63)) as u64
+}
+
+/// Inverse of [`zigzag`].
+#[inline]
+pub fn unzigzag(v: u64) -> i64 {
+    ((v >> 1) as i64) ^ -((v & 1) as i64)
+}
+
+/// Read a LEB128 u64 from `buf` starting at `*pos`, advancing `*pos`.
+#[inline]
+pub fn read_u64(buf: &[u8], pos: &mut usize) -> Result<u64> {
+    let mut result = 0u64;
+    let mut shift = 0u32;
+    loop {
+        let byte = *buf
+            .get(*pos)
+            .ok_or_else(|| Error::corrupt("varint: unexpected end of buffer"))?;
+        *pos += 1;
+        if shift == 63 && byte > 1 {
+            return Err(Error::corrupt("varint: overflows u64"));
+        }
+        result |= ((byte & 0x7f) as u64) << shift;
+        if byte & 0x80 == 0 {
+            return Ok(result);
+        }
+        shift += 7;
+        if shift > 63 {
+            return Err(Error::corrupt("varint: too many continuation bytes"));
+        }
+    }
+}
+
+/// Read a zigzag-encoded signed value.
+#[inline]
+pub fn read_i64(buf: &[u8], pos: &mut usize) -> Result<i64> {
+    Ok(unzigzag(read_u64(buf, pos)?))
+}
+
+/// Read a u32 varint (errors if the value exceeds u32).
+#[inline]
+pub fn read_u32(buf: &[u8], pos: &mut usize) -> Result<u32> {
+    let v = read_u64(buf, pos)?;
+    u32::try_from(v).map_err(|_| Error::corrupt("varint: overflows u32"))
+}
+
+/// Append a length-prefixed byte string.
+pub fn write_bytes(out: &mut Vec<u8>, bytes: &[u8]) {
+    write_u64(out, bytes.len() as u64);
+    out.extend_from_slice(bytes);
+}
+
+/// Read a length-prefixed byte string as a slice view.
+pub fn read_bytes<'a>(buf: &'a [u8], pos: &mut usize) -> Result<&'a [u8]> {
+    let len = read_u64(buf, pos)? as usize;
+    let end = pos
+        .checked_add(len)
+        .ok_or_else(|| Error::corrupt("bytes: length overflow"))?;
+    if end > buf.len() {
+        return Err(Error::corrupt(format!(
+            "bytes: length {len} exceeds remaining {}",
+            buf.len() - *pos
+        )));
+    }
+    let s = &buf[*pos..end];
+    *pos = end;
+    Ok(s)
+}
+
+/// Append a length-prefixed UTF-8 string.
+pub fn write_str(out: &mut Vec<u8>, s: &str) {
+    write_bytes(out, s.as_bytes());
+}
+
+/// Read a length-prefixed UTF-8 string.
+pub fn read_str<'a>(buf: &'a [u8], pos: &mut usize) -> Result<&'a str> {
+    std::str::from_utf8(read_bytes(buf, pos)?)
+        .map_err(|e| Error::corrupt(format!("string: invalid utf-8: {e}")))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn u64_roundtrip_edges() {
+        for v in [
+            0u64,
+            1,
+            127,
+            128,
+            16383,
+            16384,
+            u32::MAX as u64,
+            u64::MAX - 1,
+            u64::MAX,
+        ] {
+            let mut buf = Vec::new();
+            write_u64(&mut buf, v);
+            let mut pos = 0;
+            assert_eq!(read_u64(&buf, &mut pos).unwrap(), v);
+            assert_eq!(pos, buf.len());
+        }
+    }
+
+    #[test]
+    fn i64_roundtrip_edges() {
+        for v in [0i64, 1, -1, 63, -64, i64::MAX, i64::MIN, 42, -9999999] {
+            let mut buf = Vec::new();
+            write_i64(&mut buf, v);
+            let mut pos = 0;
+            assert_eq!(read_i64(&buf, &mut pos).unwrap(), v);
+        }
+    }
+
+    #[test]
+    fn zigzag_small_negatives_are_small() {
+        // the point of zigzag: small magnitude ⇒ small encoding
+        let mut buf = Vec::new();
+        write_i64(&mut buf, -1);
+        assert_eq!(buf.len(), 1);
+    }
+
+    #[test]
+    fn truncated_varint_errors() {
+        let mut buf = Vec::new();
+        write_u64(&mut buf, u64::MAX);
+        for cut in 0..buf.len() {
+            let mut pos = 0;
+            assert!(read_u64(&buf[..cut], &mut pos).is_err());
+        }
+    }
+
+    #[test]
+    fn overlong_varint_errors() {
+        let buf = [0x80u8; 11];
+        let mut pos = 0;
+        assert!(read_u64(&buf, &mut pos).is_err());
+    }
+
+    #[test]
+    fn u64_overflow_detected() {
+        // 10-byte varint encoding 2^64 exactly
+        let buf = [0x80, 0x80, 0x80, 0x80, 0x80, 0x80, 0x80, 0x80, 0x80, 0x02];
+        let mut pos = 0;
+        assert!(read_u64(&buf, &mut pos).is_err());
+    }
+
+    #[test]
+    fn bytes_roundtrip() {
+        let mut buf = Vec::new();
+        write_bytes(&mut buf, b"hello");
+        write_bytes(&mut buf, b"");
+        write_str(&mut buf, "καλημέρα");
+        let mut pos = 0;
+        assert_eq!(read_bytes(&buf, &mut pos).unwrap(), b"hello");
+        assert_eq!(read_bytes(&buf, &mut pos).unwrap(), b"");
+        assert_eq!(read_str(&buf, &mut pos).unwrap(), "καλημέρα");
+        assert_eq!(pos, buf.len());
+    }
+
+    #[test]
+    fn bytes_length_beyond_buffer_errors() {
+        let mut buf = Vec::new();
+        write_u64(&mut buf, 100); // claims 100 bytes, provides none
+        let mut pos = 0;
+        assert!(read_bytes(&buf, &mut pos).is_err());
+    }
+
+    #[test]
+    fn invalid_utf8_errors() {
+        let mut buf = Vec::new();
+        write_bytes(&mut buf, &[0xff, 0xfe]);
+        let mut pos = 0;
+        assert!(read_str(&buf, &mut pos).is_err());
+    }
+
+    #[test]
+    fn sequential_values_roundtrip() {
+        let mut buf = Vec::new();
+        for v in 0..2000u64 {
+            write_u64(&mut buf, v * v);
+        }
+        let mut pos = 0;
+        for v in 0..2000u64 {
+            assert_eq!(read_u64(&buf, &mut pos).unwrap(), v * v);
+        }
+    }
+}

@@ -1,0 +1,260 @@
+//! Window definitions and time semantics (paper §2).
+//!
+//! A window `w` over a stream has size `w_s`; an event with timestamp
+//! `t_i` belongs to an evaluation at `T_eval` iff
+//! `T_eval − w_s ≤ t_i < T_eval`.
+//!
+//! * **Real sliding windows**: `T_eval` is the moment right after each
+//!   event arrival — Railgun's mode, evaluated incrementally via the
+//!   reservoir's head/tail iterators (see [`crate::plan`]).
+//! * **Hopping windows**: `T_eval` advances by a fixed step `s` (the
+//!   *hop*); an event belongs to `⌈w_s/s⌉` overlapping *panes*. This
+//!   module provides the pane arithmetic used by the Flink-style
+//!   baseline ([`crate::baseline`]).
+//! * **Tumbling windows**: hopping with `s = w_s`.
+
+use crate::error::{Error, Result};
+use crate::util::clock::TimestampMs;
+
+/// Kind of window evaluation.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum WindowKind {
+    /// Evaluate after every event (accurate, Railgun's mode).
+    Sliding,
+    /// Evaluate every `hop_ms` (Type-2 engines' approximation).
+    Hopping {
+        /// The hop (step) in milliseconds.
+        hop_ms: i64,
+    },
+}
+
+/// A window specification.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct WindowSpec {
+    /// Window length in milliseconds.
+    pub size_ms: i64,
+    /// Evaluation mode.
+    pub kind: WindowKind,
+    /// Evaluation lag in milliseconds: the window covers
+    /// `[T−delay−size, T−delay)`. 0 for ordinary windows; non-zero
+    /// models the *misaligned windows* of the paper's Figure 6 (bottom)
+    /// experiment (misaligned windows cannot share iterators).
+    pub delay_ms: i64,
+}
+
+impl WindowSpec {
+    /// A real sliding window of `size_ms`.
+    pub fn sliding(size_ms: i64) -> Self {
+        WindowSpec {
+            size_ms,
+            kind: WindowKind::Sliding,
+            delay_ms: 0,
+        }
+    }
+
+    /// A hopping window.
+    pub fn hopping(size_ms: i64, hop_ms: i64) -> Self {
+        WindowSpec {
+            size_ms,
+            kind: WindowKind::Hopping { hop_ms },
+            delay_ms: 0,
+        }
+    }
+
+    /// A tumbling window (hop == size).
+    pub fn tumbling(size_ms: i64) -> Self {
+        Self::hopping(size_ms, size_ms)
+    }
+
+    /// Misaligned sliding window (Figure 6 bottom).
+    pub fn sliding_delayed(size_ms: i64, delay_ms: i64) -> Self {
+        WindowSpec {
+            size_ms,
+            kind: WindowKind::Sliding,
+            delay_ms,
+        }
+    }
+
+    /// Validate the specification.
+    pub fn validate(&self) -> Result<()> {
+        if self.size_ms <= 0 {
+            return Err(Error::invalid("window size must be positive"));
+        }
+        if self.delay_ms < 0 {
+            return Err(Error::invalid("window delay must be non-negative"));
+        }
+        if let WindowKind::Hopping { hop_ms } = self.kind {
+            if hop_ms <= 0 {
+                return Err(Error::invalid("hop must be positive"));
+            }
+            if hop_ms > self.size_ms {
+                return Err(Error::invalid("hop larger than window size"));
+            }
+        }
+        Ok(())
+    }
+
+    /// Offset of the *tail* bound from `T_eval` (arriving events cross it).
+    pub fn tail_offset(&self) -> i64 {
+        self.delay_ms
+    }
+
+    /// Offset of the *head* bound from `T_eval` (expiring events cross it).
+    pub fn head_offset(&self) -> i64 {
+        self.delay_ms + self.size_ms
+    }
+
+    /// Number of concurrent pane states a hopping implementation must
+    /// maintain: `⌈size/hop⌉` (paper §2.2: `windowSize/hopSize`).
+    pub fn pane_count(&self) -> i64 {
+        match self.kind {
+            WindowKind::Sliding => 0,
+            WindowKind::Hopping { hop_ms } => (self.size_ms + hop_ms - 1) / hop_ms,
+        }
+    }
+}
+
+/// Pane arithmetic for hopping windows.
+///
+/// A *pane* is one physical window instance `[start, start+size)` with
+/// `start ≡ 0 (mod hop)`.
+pub mod panes {
+    use super::TimestampMs;
+
+    /// Start of the latest pane containing `ts`.
+    pub fn latest_pane_start(ts: TimestampMs, hop_ms: i64) -> i64 {
+        ts.div_euclid(hop_ms) * hop_ms
+    }
+
+    /// Starts of every pane containing `ts` (newest first).
+    pub fn pane_starts(ts: TimestampMs, size_ms: i64, hop_ms: i64) -> Vec<i64> {
+        let mut out = Vec::with_capacity((size_ms / hop_ms) as usize + 1);
+        let mut start = latest_pane_start(ts, hop_ms);
+        // pane [start, start+size) contains ts while start > ts - size
+        while start > ts - size_ms {
+            out.push(start);
+            start -= hop_ms;
+        }
+        out
+    }
+
+    /// `T_eval` at which the pane starting at `start` fires.
+    pub fn fire_time(start: i64, size_ms: i64) -> i64 {
+        start + size_ms
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::clock::ms;
+
+    #[test]
+    fn spec_constructors_and_validation() {
+        assert!(WindowSpec::sliding(ms::MINUTE * 5).validate().is_ok());
+        assert!(WindowSpec::hopping(ms::MINUTE * 5, ms::MINUTE).validate().is_ok());
+        assert!(WindowSpec::tumbling(ms::MINUTE).validate().is_ok());
+        assert!(WindowSpec::sliding(0).validate().is_err());
+        assert!(WindowSpec::hopping(1000, 0).validate().is_err());
+        assert!(WindowSpec::hopping(1000, 2000).validate().is_err());
+        assert!(WindowSpec::sliding_delayed(1000, -1).validate().is_err());
+    }
+
+    #[test]
+    fn offsets() {
+        let w = WindowSpec::sliding(5 * ms::MINUTE);
+        assert_eq!(w.tail_offset(), 0);
+        assert_eq!(w.head_offset(), 5 * ms::MINUTE);
+        let d = WindowSpec::sliding_delayed(5 * ms::MINUTE, 30_000);
+        assert_eq!(d.tail_offset(), 30_000);
+        assert_eq!(d.head_offset(), 5 * ms::MINUTE + 30_000);
+    }
+
+    #[test]
+    fn pane_count_matches_paper_formula() {
+        // 5-min window, 1-min hop ⇒ 5 concurrent panes (paper Figure 1)
+        assert_eq!(
+            WindowSpec::hopping(5 * ms::MINUTE, ms::MINUTE).pane_count(),
+            5
+        );
+        // 60-min window, 1-s hop ⇒ 3600 panes (paper §4.2 blow-up)
+        assert_eq!(
+            WindowSpec::hopping(60 * ms::MINUTE, ms::SECOND).pane_count(),
+            3600
+        );
+        assert_eq!(WindowSpec::sliding(1000).pane_count(), 0);
+    }
+
+    #[test]
+    fn pane_starts_contain_ts() {
+        let size = 5 * ms::MINUTE;
+        let hop = ms::MINUTE;
+        let ts = 7 * ms::MINUTE + 30_000; // 7.5 min
+        let starts = panes::pane_starts(ts, size, hop);
+        assert_eq!(starts.len(), 5);
+        for s in &starts {
+            assert!(*s <= ts && ts < s + size, "pane [{s}, {}) ∋ {ts}", s + size);
+            assert_eq!(s % hop, 0);
+        }
+        // newest first
+        assert_eq!(starts[0], 7 * ms::MINUTE);
+        assert_eq!(starts[4], 3 * ms::MINUTE);
+    }
+
+    #[test]
+    fn pane_starts_tumbling_is_single() {
+        let starts = panes::pane_starts(12_345, 1000, 1000);
+        assert_eq!(starts, vec![12_000]);
+    }
+
+    #[test]
+    fn pane_starts_negative_ts() {
+        // event-time can precede the epoch in tests
+        let starts = panes::pane_starts(-500, 1000, 500);
+        assert_eq!(starts.len(), 2);
+        for s in &starts {
+            assert!(*s <= -500 && -500 < s + 1000);
+        }
+    }
+
+    #[test]
+    fn fire_time() {
+        assert_eq!(panes::fire_time(60_000, 300_000), 360_000);
+    }
+
+    /// Figure 1 scenario: five events inside one true 5-minute span, but
+    /// no 1-min-hop pane contains all five.
+    #[test]
+    fn figure1_hopping_misses_what_sliding_catches() {
+        let m = ms::MINUTE;
+        // events at 0:30, 1:30, 2:30, 3:30, 5:15 — the last four minutes
+        // and 45 seconds apart, so one true 5-min span holds all five, but
+        // they straddle every 1-min pane boundary.
+        let events = [
+            30_000,
+            m + 30_000,
+            2 * m + 30_000,
+            3 * m + 30_000,
+            5 * m + 15_000,
+        ];
+        let size = 5 * m;
+        let hop = m;
+        // true sliding window ending right after the last event:
+        let t_eval = events[4] + 1;
+        let in_sliding = events
+            .iter()
+            .filter(|t| t_eval - size <= **t && **t < t_eval)
+            .count();
+        assert_eq!(in_sliding, 5, "real sliding window sees all 5");
+        // every hopping pane: count events it contains
+        let mut best = 0;
+        for start in (0..=6 * m).step_by(hop as usize) {
+            let n = events
+                .iter()
+                .filter(|t| start <= **t && **t < start + size)
+                .count();
+            best = best.max(n);
+        }
+        assert!(best < 5, "no 1-min-hop pane captures all 5 (best={best})");
+    }
+}

@@ -1,0 +1,98 @@
+//! Shared experiment driver used by `rust/benches/*`: builds a
+//! single-node Railgun stack, injects the synthetic fraud workload at a
+//! virtual rate, and records coordinated-omission-corrected latencies.
+
+use crate::config::{EngineConfig, StreamDef};
+use crate::coordinator::Node;
+use crate::error::Result;
+use crate::mlog::{Broker, BrokerConfig};
+use crate::plan::MetricSpec;
+use crate::util::bench::Series;
+use crate::util::tmp::TempDir;
+use crate::workload::{payments_schema, CoInjector, FraudGenerator, WorkloadConfig};
+use std::time::Duration;
+
+/// Experiment knobs for one Railgun end-to-end run.
+pub struct RailgunRun {
+    /// Metrics to register (all routed by `card`).
+    pub metrics: Vec<MetricSpec>,
+    /// Events to drive.
+    pub events: u64,
+    /// Offered rate (ev/s) for CO correction (the paper uses 500).
+    pub rate_eps: f64,
+    /// Event-time spacing in milliseconds (decouples the event-time span
+    /// from wall-clock so long windows are exercisable — DESIGN.md §1).
+    pub event_spacing_ms: i64,
+    /// Workload shape.
+    pub workload: WorkloadConfig,
+    /// Engine config overrides applied to the testing defaults.
+    pub tune: fn(&mut EngineConfig),
+    /// Warmup events (recorded separately, excluded from the series).
+    pub warmup: u64,
+}
+
+impl RailgunRun {
+    /// Defaults: Q1-ish workload at the paper's 500 ev/s.
+    pub fn new(metrics: Vec<MetricSpec>, events: u64) -> RailgunRun {
+        RailgunRun {
+            metrics,
+            events,
+            rate_eps: 500.0,
+            event_spacing_ms: 2,
+            workload: WorkloadConfig::default(),
+            tune: |_| {},
+            warmup: 0,
+        }
+    }
+
+    /// Execute and return the labelled series.
+    pub fn run(self, label: &str) -> Result<Series> {
+        let tmp = TempDir::new("bench_run");
+        let broker = Broker::open(BrokerConfig::in_memory())?;
+        let mut cfg = EngineConfig {
+            processor_units: 1,
+            partitions_per_topic: 2,
+            ..EngineConfig::new(tmp.path().to_path_buf())
+        };
+        (self.tune)(&mut cfg);
+        let node = Node::start("bench", cfg, broker)?;
+        node.register_stream(StreamDef {
+            name: "payments".into(),
+            schema: payments_schema(),
+            entities: vec!["card".into()],
+            metrics: self.metrics,
+        })?;
+        let mut collector = node.reply_collector()?;
+        let mut generator = FraudGenerator::new(self.workload);
+        let mut injector = CoInjector::new(self.rate_eps);
+
+        let base_ts = 1_600_000_000_000i64;
+        for i in 0..(self.warmup + self.events) {
+            let ts = base_ts + i as i64 * self.event_spacing_ms;
+            let event = generator.next_event(ts);
+            let recording = i >= self.warmup;
+            let work = || -> Result<()> {
+                let receipt = node.frontend().ingest("payments", event)?;
+                collector.await_event(
+                    receipt.ingest_id,
+                    receipt.fanout,
+                    Duration::from_secs(60),
+                )?;
+                Ok(())
+            };
+            if recording {
+                injector.observe(work)?;
+            } else {
+                work()?;
+            }
+        }
+        let report = injector.report();
+        let mut series = Series::new(label);
+        series.hist = injector.hist.clone();
+        series.throughput_eps = report.capacity_eps;
+        series.note("kept_up", report.kept_up);
+        series.note("service_p50_us", injector.service_hist.quantile(0.5) / 1000);
+        node.shutdown(true);
+        Ok(series)
+    }
+}

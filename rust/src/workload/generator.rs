@@ -1,0 +1,183 @@
+//! Fraud-transaction generator.
+
+use crate::event::{Event, FieldType, Schema, SchemaRef, Value};
+use crate::util::clock::TimestampMs;
+use crate::util::rng::{Rng, Zipf};
+
+/// Workload shape parameters.
+#[derive(Debug, Clone)]
+pub struct WorkloadConfig {
+    /// Number of distinct cards (paper-scale default 50k).
+    pub cards: usize,
+    /// Number of distinct merchants.
+    pub merchants: usize,
+    /// Zipf skew for card popularity (1.0 ≈ web-traffic skew).
+    pub card_skew: f64,
+    /// Zipf skew for merchant popularity.
+    pub merchant_skew: f64,
+    /// Log-normal μ for amounts (exp(μ) ≈ median amount).
+    pub amount_mu: f64,
+    /// Log-normal σ for amounts.
+    pub amount_sigma: f64,
+    /// Fraction of card-not-present transactions.
+    pub cnp_rate: f64,
+    /// RNG seed.
+    pub seed: u64,
+}
+
+impl Default for WorkloadConfig {
+    fn default() -> Self {
+        WorkloadConfig {
+            cards: 50_000,
+            merchants: 2_000,
+            card_skew: 1.05,
+            merchant_skew: 1.1,
+            amount_mu: 3.2,  // median ≈ €24.5
+            amount_sigma: 1.2,
+            cnp_rate: 0.25,
+            seed: 0xF4A0D,
+        }
+    }
+}
+
+/// The canonical `payments` stream schema used across examples/benches.
+pub fn payments_schema() -> SchemaRef {
+    Schema::of(&[
+        ("card", FieldType::Str),
+        ("merchant", FieldType::Str),
+        ("amount", FieldType::F64),
+        ("cnp", FieldType::Bool),
+    ])
+    .expect("static schema is valid")
+}
+
+/// Deterministic synthetic payment stream.
+pub struct FraudGenerator {
+    rng: Rng,
+    cards: Zipf,
+    merchants: Zipf,
+    cfg: WorkloadConfig,
+}
+
+impl FraudGenerator {
+    /// Build from config (Zipf CDF precomputation is O(cards)).
+    pub fn new(cfg: WorkloadConfig) -> FraudGenerator {
+        FraudGenerator {
+            rng: Rng::new(cfg.seed),
+            cards: Zipf::new(cfg.cards, cfg.card_skew),
+            merchants: Zipf::new(cfg.merchants, cfg.merchant_skew),
+            cfg,
+        }
+    }
+
+    /// Generate the next event at `ts`.
+    pub fn next_event(&mut self, ts: TimestampMs) -> Event {
+        let card = self.cards.sample(&mut self.rng);
+        let merchant = self.merchants.sample(&mut self.rng);
+        let amount = self
+            .rng
+            .next_lognormal(self.cfg.amount_mu, self.cfg.amount_sigma);
+        let cnp = self.rng.chance(self.cfg.cnp_rate);
+        Event::new(
+            ts,
+            vec![
+                Value::Str(format!("card_{card:06}")),
+                Value::Str(format!("m_{merchant:05}")),
+                Value::F64((amount * 100.0).round() / 100.0),
+                Value::Bool(cnp),
+            ],
+        )
+    }
+
+    /// Generate a burst of `n` events from the *same* card at `ts`
+    /// (adversarial cadence — the paper's §2.1 attack scenario).
+    pub fn attack_burst(&mut self, ts: TimestampMs, n: usize, spacing_ms: i64) -> Vec<Event> {
+        let card = format!("card_attacker");
+        let merchant = self.merchants.sample(&mut self.rng);
+        (0..n)
+            .map(|i| {
+                Event::new(
+                    ts + i as i64 * spacing_ms,
+                    vec![
+                        Value::Str(card.clone()),
+                        Value::Str(format!("m_{merchant:05}")),
+                        Value::F64(9.99),
+                        Value::Bool(true),
+                    ],
+                )
+            })
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::collections::HashSet;
+
+    fn small() -> WorkloadConfig {
+        WorkloadConfig {
+            cards: 1000,
+            merchants: 100,
+            ..WorkloadConfig::default()
+        }
+    }
+
+    #[test]
+    fn events_validate_against_schema() {
+        let schema = payments_schema();
+        let mut g = FraudGenerator::new(small());
+        for i in 0..100 {
+            let e = g.next_event(i * 1000);
+            schema.validate(&e).unwrap();
+            assert_eq!(e.timestamp, i * 1000);
+        }
+    }
+
+    #[test]
+    fn deterministic_for_seed() {
+        let mut a = FraudGenerator::new(small());
+        let mut b = FraudGenerator::new(small());
+        for i in 0..50 {
+            assert_eq!(a.next_event(i), b.next_event(i));
+        }
+    }
+
+    #[test]
+    fn card_popularity_is_skewed() {
+        let mut g = FraudGenerator::new(small());
+        let mut counts: std::collections::HashMap<String, u32> = Default::default();
+        for i in 0..20_000 {
+            let e = g.next_event(i);
+            *counts
+                .entry(e.values[0].as_str().unwrap().to_string())
+                .or_default() += 1;
+        }
+        let mut v: Vec<u32> = counts.values().copied().collect();
+        v.sort_unstable_by(|a, b| b.cmp(a));
+        assert!(v[0] > 200, "head card is hot (zipf): {}", v[0]);
+        assert!(counts.len() > 300, "long tail is populated: {}", counts.len());
+    }
+
+    #[test]
+    fn amounts_are_positive_and_dispersed() {
+        let mut g = FraudGenerator::new(small());
+        let mut distinct = HashSet::new();
+        for i in 0..1000 {
+            let a = g.next_event(i).values[2].as_f64().unwrap();
+            assert!(a > 0.0);
+            distinct.insert((a * 100.0) as i64);
+        }
+        assert!(distinct.len() > 500, "amounts vary: {}", distinct.len());
+    }
+
+    #[test]
+    fn attack_burst_is_single_card_with_cadence() {
+        let mut g = FraudGenerator::new(small());
+        let burst = g.attack_burst(1000, 5, 60_000);
+        assert_eq!(burst.len(), 5);
+        let cards: HashSet<&str> = burst.iter().map(|e| e.values[0].as_str().unwrap()).collect();
+        assert_eq!(cards.len(), 1);
+        assert_eq!(burst[4].timestamp - burst[0].timestamp, 4 * 60_000);
+    }
+}

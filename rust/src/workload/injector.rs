@@ -1,0 +1,178 @@
+//! Latency injection with **coordinated-omission correction** (paper
+//! §4.1, cite [14]).
+//!
+//! The paper injects at a sustained 500 ev/s and corrects latencies for
+//! coordinated omission. On this testbed we cannot spend 35 wall-clock
+//! minutes per sweep point, so the injector runs the engine at full speed
+//! while *accounting* in the open-loop arrival model:
+//!
+//! ```text
+//! intended_i  = i / rate                 (arrivals are a fixed cadence)
+//! start_i     = max(intended_i, done_{i-1})   (engine is sequential)
+//! done_i      = start_i + service_i      (service_i measured per event)
+//! latency_i   = done_i − intended_i      (queueing + service)
+//! ```
+//!
+//! This is exactly the correction [14] prescribes: an engine slower than
+//! the interarrival gap accumulates queueing delay and its corrected tail
+//! explodes ("unable to keep up", Figure 5); an engine faster than the
+//! gap reports pure service latency. The model is conservative for
+//! Railgun (no pipelining credit) and exact for single-threaded task
+//! processors.
+
+use crate::util::hist::Histogram;
+use std::time::Instant;
+
+/// Coordinated-omission-corrected latency recorder.
+pub struct CoInjector {
+    /// Nanoseconds between intended arrivals.
+    interarrival_ns: u64,
+    /// Intended start of the next event (ns since measurement start).
+    next_intended_ns: u64,
+    /// Completion time of the previous event.
+    prev_done_ns: u64,
+    /// Corrected end-to-end latency histogram.
+    pub hist: Histogram,
+    /// Raw service-time histogram (no queueing model).
+    pub service_hist: Histogram,
+    events: u64,
+    service_total_ns: u64,
+}
+
+/// Summary of an injection run.
+#[derive(Debug, Clone)]
+pub struct InjectorReport {
+    /// Events processed.
+    pub events: u64,
+    /// Offered load (ev/s).
+    pub offered_eps: f64,
+    /// Achieved service throughput (ev/s) — capacity of the engine.
+    pub capacity_eps: f64,
+    /// True if the engine kept up with the offered rate (final backlog
+    /// below one interarrival).
+    pub kept_up: bool,
+}
+
+impl CoInjector {
+    /// Injector at `rate_eps` events/second.
+    pub fn new(rate_eps: f64) -> CoInjector {
+        assert!(rate_eps > 0.0);
+        CoInjector {
+            interarrival_ns: (1e9 / rate_eps) as u64,
+            next_intended_ns: 0,
+            prev_done_ns: 0,
+            hist: Histogram::new(),
+            service_hist: Histogram::new(),
+            events: 0,
+            service_total_ns: 0,
+        }
+    }
+
+    /// Run `f` as the service of one event and record corrected latency.
+    pub fn observe<R>(&mut self, f: impl FnOnce() -> R) -> R {
+        let t0 = Instant::now();
+        let out = f();
+        let service_ns = t0.elapsed().as_nanos() as u64;
+        self.record_service(service_ns);
+        out
+    }
+
+    /// Record a pre-measured service time.
+    pub fn record_service(&mut self, service_ns: u64) {
+        let intended = self.next_intended_ns;
+        self.next_intended_ns += self.interarrival_ns;
+        let start = intended.max(self.prev_done_ns);
+        let done = start + service_ns;
+        self.prev_done_ns = done;
+        self.hist.record(done - intended);
+        self.service_hist.record(service_ns);
+        self.events += 1;
+        self.service_total_ns += service_ns;
+    }
+
+    /// Current backlog (how far completion trails the arrival clock), ns.
+    pub fn backlog_ns(&self) -> u64 {
+        self.prev_done_ns
+            .saturating_sub(self.next_intended_ns.saturating_sub(self.interarrival_ns))
+    }
+
+    /// Finish and summarize.
+    pub fn report(&self) -> InjectorReport {
+        let offered_eps = 1e9 / self.interarrival_ns as f64;
+        let capacity_eps = if self.service_total_ns == 0 {
+            f64::INFINITY
+        } else {
+            self.events as f64 * 1e9 / self.service_total_ns as f64
+        };
+        InjectorReport {
+            events: self.events,
+            offered_eps,
+            capacity_eps,
+            kept_up: self.backlog_ns() <= self.interarrival_ns,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fast_engine_reports_service_latency() {
+        let mut inj = CoInjector::new(1000.0); // 1ms interarrival
+        for _ in 0..1000 {
+            inj.record_service(100_000); // 0.1ms service
+        }
+        let r = inj.report();
+        assert!(r.kept_up);
+        // corrected latency equals service latency when no queueing
+        let p99 = inj.hist.quantile(0.99);
+        assert!((90_000..=120_000).contains(&p99), "p99={p99}");
+        assert!(r.capacity_eps > 5000.0);
+    }
+
+    #[test]
+    fn slow_engine_accumulates_queueing_delay() {
+        let mut inj = CoInjector::new(1000.0); // 1ms interarrival
+        for _ in 0..1000 {
+            inj.record_service(2_000_000); // 2ms service: 2x overloaded
+        }
+        let r = inj.report();
+        assert!(!r.kept_up);
+        // the last event waited ~1000 × 1ms of backlog
+        let max = inj.hist.max();
+        assert!(
+            max > 900_000_000,
+            "tail must show ~1s of accumulated queueing, got {max}"
+        );
+        // while raw service time stays flat at 2ms
+        assert!(inj.service_hist.quantile(0.99) < 3_000_000);
+    }
+
+    #[test]
+    fn bursty_service_recovers() {
+        let mut inj = CoInjector::new(1000.0);
+        // one 50ms stall then fast events
+        inj.record_service(50_000_000);
+        for _ in 0..200 {
+            inj.record_service(10_000); // 0.01ms
+        }
+        // CO correction: events right after the stall carry its delay
+        let p90 = inj.hist.quantile(0.90);
+        assert!(p90 > 1_000_000, "stall visible in corrected p90: {p90}");
+        let r = inj.report();
+        assert!(r.kept_up, "backlog drains after the stall");
+    }
+
+    #[test]
+    fn observe_measures_closure() {
+        let mut inj = CoInjector::new(10.0);
+        let v = inj.observe(|| {
+            std::thread::sleep(std::time::Duration::from_millis(2));
+            42
+        });
+        assert_eq!(v, 42);
+        assert!(inj.service_hist.max() >= 2_000_000);
+        assert_eq!(inj.report().events, 1);
+    }
+}

@@ -1,0 +1,15 @@
+//! Synthetic fraud workload (DESIGN.md §1 substitution for the paper's
+//! proprietary client dataset) + the latency-measuring injector.
+//!
+//! The dataset's role in the paper is to provide "real-world dictionary
+//! cardinality for aggregation states" (§4.1): the generator draws cards
+//! and merchants from Zipf distributions with realistic cardinalities and
+//! log-normal transaction amounts, so the state-store population and
+//! group-by skew behave like production traffic.
+
+pub mod driver;
+mod generator;
+mod injector;
+
+pub use generator::{payments_schema, FraudGenerator, WorkloadConfig};
+pub use injector::{CoInjector, InjectorReport};

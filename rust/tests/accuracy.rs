@@ -1,0 +1,219 @@
+//! Accuracy (requirement A): Railgun's real sliding windows vs the
+//! hopping-window approximation — the paper's Figure 1 / §2.1 argument,
+//! exercised end-to-end and under randomized adversarial schedules.
+
+use railgun::agg::AggKind;
+use railgun::baseline::{HoppingConfig, HoppingEngine, ScanSlidingEngine};
+use railgun::config::{EngineConfig, StreamDef};
+use railgun::coordinator::Node;
+use railgun::event::{Event, Value};
+use railgun::mlog::{Broker, BrokerConfig};
+use railgun::plan::MetricSpec;
+use railgun::util::clock::ms;
+use railgun::util::rng::Rng;
+use railgun::util::tmp::TempDir;
+use railgun::window::WindowSpec;
+use railgun::workload::payments_schema;
+use std::time::Duration;
+
+fn ev(ts: i64, card: &str, amount: f64) -> Event {
+    Event::new(
+        ts,
+        vec![
+            Value::Str(card.into()),
+            Value::Str("m1".into()),
+            Value::F64(amount),
+            Value::Bool(false),
+        ],
+    )
+}
+
+/// Figure 1, end-to-end: the business rule "block when count in 5 min
+/// exceeds 4" triggers on Railgun's fifth event but never on any
+/// 1-min-hop pane.
+#[test]
+fn figure1_railgun_triggers_hopping_does_not() {
+    let m = ms::MINUTE;
+    let times = [30_000, m + 30_000, 2 * m + 30_000, 3 * m + 30_000, 5 * m + 15_000];
+
+    // Railgun end-to-end
+    let tmp = TempDir::new("acc_fig1");
+    let broker = Broker::open(BrokerConfig::in_memory()).unwrap();
+    let node = Node::start(
+        "n0",
+        EngineConfig::for_testing(tmp.path().to_path_buf()),
+        broker,
+    )
+    .unwrap();
+    node.register_stream(StreamDef {
+        name: "payments".into(),
+        schema: payments_schema(),
+        entities: vec!["card".into()],
+        metrics: vec![MetricSpec::new(
+            "tx_count_5m",
+            AggKind::Count,
+            None,
+            WindowSpec::sliding(5 * m),
+            &["card"],
+        )],
+    })
+    .unwrap();
+    let mut collector = node.reply_collector().unwrap();
+    let mut railgun_counts = Vec::new();
+    for t in times {
+        let receipt = node
+            .frontend()
+            .ingest("payments", ev(t, "attacker", 9.99))
+            .unwrap();
+        let replies = collector
+            .await_event(receipt.ingest_id, receipt.fanout, Duration::from_secs(30))
+            .unwrap();
+        railgun_counts.push(replies[0].metrics[0].value.unwrap());
+    }
+    assert_eq!(railgun_counts, vec![1.0, 2.0, 3.0, 4.0, 5.0]);
+    assert!(railgun_counts[4] > 4.0, "rule triggers on the 5th event");
+
+    // hopping baseline never sees 5
+    let mut hop = HoppingEngine::new(
+        HoppingConfig {
+            size_ms: 5 * m,
+            hop_ms: m,
+            agg: AggKind::Count,
+            field: None,
+            group_by: vec!["card".into()],
+            persist: false,
+        },
+        payments_schema(),
+        None,
+    )
+    .unwrap();
+    let mut fired = Vec::new();
+    for t in times {
+        fired.extend(hop.on_event(&ev(t, "attacker", 9.99)).unwrap());
+    }
+    fired.extend(hop.fire_up_to(i64::MAX).unwrap());
+    let best = fired.iter().filter_map(|r| r.value).fold(0.0f64, f64::max);
+    assert!(best < 5.0, "hopping max count {best} < 5 ⇒ rule never fires");
+    node.shutdown(true);
+}
+
+/// Randomized adversarial schedules: whenever a true 5-min span contains
+/// ≥5 events, the sliding count must reach 5 while hopping may miss it;
+/// and the hopping count never exceeds the sliding count's truth.
+#[test]
+fn randomized_attack_schedules_sliding_is_exact() {
+    let m = ms::MINUTE;
+    let mut rng = Rng::new(2024);
+    let mut hopping_missed = 0;
+    let trials = 40;
+    for _ in 0..trials {
+        // 5 events spread over slightly less than 5 minutes, random offset
+        let offset = rng.range_i64(0, 10 * m);
+        let span = rng.range_i64(3 * m, 5 * m - 1000);
+        let mut times: Vec<i64> = (0..5)
+            .map(|_| offset + rng.range_i64(0, span))
+            .collect();
+        times.sort_unstable();
+
+        // exact sliding count via the scan baseline (accurate oracle)
+        let mut scan = ScanSlidingEngine::new(
+            5 * m,
+            AggKind::Count,
+            None,
+            &["card"],
+            &payments_schema(),
+        )
+        .unwrap();
+        let mut max_sliding: f64 = 0.0;
+        for t in &times {
+            let v = scan.on_event(&ev(*t, "x", 1.0)).unwrap().unwrap();
+            max_sliding = max_sliding.max(v);
+        }
+        assert_eq!(max_sliding, 5.0, "all 5 events within one 5-min span");
+
+        // hopping with 1-min hop
+        let mut hop = HoppingEngine::new(
+            HoppingConfig {
+                size_ms: 5 * m,
+                hop_ms: m,
+                agg: AggKind::Count,
+                field: None,
+                group_by: vec!["card".into()],
+                persist: false,
+            },
+            payments_schema(),
+            None,
+        )
+        .unwrap();
+        let mut fired = Vec::new();
+        for t in &times {
+            fired.extend(hop.on_event(&ev(*t, "x", 1.0)).unwrap());
+        }
+        fired.extend(hop.fire_up_to(i64::MAX).unwrap());
+        let max_hop = fired.iter().filter_map(|r| r.value).fold(0.0f64, f64::max);
+        assert!(max_hop <= 5.0, "hopping can never over-count");
+        if max_hop < 5.0 {
+            hopping_missed += 1;
+        }
+    }
+    assert!(
+        hopping_missed > 0,
+        "across {trials} random schedules, hopping missed at least one attack"
+    );
+}
+
+/// The scan-recompute baseline is accurate but its cost explodes; Railgun
+/// plan values must equal the scan baseline's on identical input.
+#[test]
+fn railgun_matches_accurate_scan_baseline() {
+    let tmp = TempDir::new("acc_scan_match");
+    let broker = Broker::open(BrokerConfig::in_memory()).unwrap();
+    let node = Node::start(
+        "n0",
+        EngineConfig::for_testing(tmp.path().to_path_buf()),
+        broker,
+    )
+    .unwrap();
+    node.register_stream(StreamDef {
+        name: "payments".into(),
+        schema: payments_schema(),
+        entities: vec!["card".into()],
+        metrics: vec![MetricSpec::new(
+            "sum_5m",
+            AggKind::Sum,
+            Some("amount"),
+            WindowSpec::sliding(5 * ms::MINUTE),
+            &["card"],
+        )],
+    })
+    .unwrap();
+    let mut collector = node.reply_collector().unwrap();
+    let mut scan = ScanSlidingEngine::new(
+        5 * ms::MINUTE,
+        AggKind::Sum,
+        Some("amount"),
+        &["card"],
+        &payments_schema(),
+    )
+    .unwrap();
+
+    let mut rng = Rng::new(7);
+    let mut ts = 0i64;
+    for i in 0..200 {
+        ts += rng.range_i64(100, 20_000);
+        let card = format!("c{}", rng.next_below(3));
+        let amount = (rng.next_below(500) as f64) / 10.0;
+        let event = ev(ts, &card, amount);
+        let want = scan.on_event(&event).unwrap().unwrap();
+        let receipt = node.frontend().ingest("payments", event).unwrap();
+        let replies = collector
+            .await_event(receipt.ingest_id, receipt.fanout, Duration::from_secs(30))
+            .unwrap();
+        let got = replies[0].metrics[0].value.unwrap();
+        assert!(
+            (got - want).abs() < 1e-6,
+            "event {i}: railgun {got} vs scan {want}"
+        );
+    }
+    node.shutdown(true);
+}

@@ -1,0 +1,159 @@
+//! Distribution (requirement D): multiple nodes share work over the
+//! messaging layer; killing a node migrates its partitions to survivors
+//! without losing accuracy.
+
+use railgun::agg::AggKind;
+use railgun::config::{EngineConfig, StreamDef};
+use railgun::coordinator::Cluster;
+use railgun::event::{Event, Value};
+use railgun::mlog::{Broker, BrokerConfig};
+use railgun::plan::MetricSpec;
+use railgun::util::clock::ms;
+use railgun::util::tmp::TempDir;
+use railgun::window::WindowSpec;
+use railgun::workload::payments_schema;
+use std::time::Duration;
+
+fn def() -> StreamDef {
+    StreamDef {
+        name: "payments".into(),
+        schema: payments_schema(),
+        entities: vec!["card".into()],
+        metrics: vec![MetricSpec::new(
+            "count_by_card",
+            AggKind::Count,
+            None,
+            WindowSpec::sliding(ms::HOUR),
+            &["card"],
+        )],
+    }
+}
+
+fn ev(ts: i64, card: &str) -> Event {
+    Event::new(
+        ts,
+        vec![
+            Value::Str(card.into()),
+            Value::Str("m1".into()),
+            Value::F64(1.0),
+            Value::Bool(false),
+        ],
+    )
+}
+
+#[test]
+fn two_nodes_split_partitions_and_agree_on_values() {
+    let tmp = TempDir::new("dist_two_nodes");
+    let broker = Broker::open(BrokerConfig::in_memory()).unwrap();
+    let cfg = EngineConfig {
+        partitions_per_topic: 4,
+        ..EngineConfig::for_testing(tmp.path().to_path_buf())
+    };
+    let cluster = Cluster::start(2, &cfg, broker).unwrap();
+    cluster.register_stream(def()).unwrap();
+    let mut collector = cluster.node(0).reply_collector().unwrap();
+
+    // feed events for 8 cards; counts must be exact regardless of which
+    // node's unit owns which partition
+    for round in 0..5i64 {
+        for c in 0..8 {
+            let card = format!("c{c}");
+            let receipt = cluster
+                .node(0)
+                .frontend()
+                .ingest("payments", ev(round * 1000 + c, &card))
+                .unwrap();
+            let replies = collector
+                .await_event(receipt.ingest_id, receipt.fanout, Duration::from_secs(30))
+                .unwrap();
+            let count = replies[0].metrics[0].value.unwrap();
+            assert_eq!(count, (round + 1) as f64, "card {card} round {round}");
+        }
+    }
+}
+
+#[test]
+fn killing_a_node_migrates_partitions_without_losing_state() {
+    let tmp = TempDir::new("dist_failover");
+    let broker = Broker::open(BrokerConfig::in_memory()).unwrap();
+    let cfg = EngineConfig {
+        partitions_per_topic: 4,
+        ..EngineConfig::for_testing(tmp.path().to_path_buf())
+    };
+    let mut cluster = Cluster::start(2, &cfg, broker).unwrap();
+    cluster.register_stream(def()).unwrap();
+    let mut collector = cluster.node(0).reply_collector().unwrap();
+
+    // phase 1: both nodes alive, feed 3 events per card
+    for round in 0..3i64 {
+        for c in 0..8 {
+            let receipt = cluster
+                .node(0)
+                .frontend()
+                .ingest("payments", ev(round * 1000 + c, &format!("c{c}")))
+                .unwrap();
+            collector
+                .await_event(receipt.ingest_id, receipt.fanout, Duration::from_secs(30))
+                .unwrap();
+        }
+    }
+
+    // kill node 1 (graceful=false models a crash: no checkpoint; its
+    // partitions are re-assigned and rebuilt from the messaging layer)
+    cluster.kill_node(1, false);
+
+    // phase 2: survivor must produce continuous, accurate counts
+    for round in 3..6i64 {
+        for c in 0..8 {
+            let card = format!("c{c}");
+            let receipt = cluster
+                .node(0)
+                .frontend()
+                .ingest("payments", ev(round * 1000 + c, &card))
+                .unwrap();
+            let replies = collector
+                .await_event(receipt.ingest_id, receipt.fanout, Duration::from_secs(60))
+                .unwrap();
+            let count = replies[0].metrics[0].value.unwrap();
+            assert_eq!(
+                count,
+                (round + 1) as f64,
+                "card {card} after failover (round {round})"
+            );
+        }
+    }
+}
+
+#[test]
+fn graceful_shutdown_also_migrates() {
+    let tmp = TempDir::new("dist_graceful");
+    let broker = Broker::open(BrokerConfig::in_memory()).unwrap();
+    let cfg = EngineConfig {
+        partitions_per_topic: 2,
+        ..EngineConfig::for_testing(tmp.path().to_path_buf())
+    };
+    let mut cluster = Cluster::start(2, &cfg, broker).unwrap();
+    cluster.register_stream(def()).unwrap();
+    let mut collector = cluster.node(0).reply_collector().unwrap();
+
+    let receipt = cluster
+        .node(0)
+        .frontend()
+        .ingest("payments", ev(0, "c1"))
+        .unwrap();
+    collector
+        .await_event(receipt.ingest_id, receipt.fanout, Duration::from_secs(30))
+        .unwrap();
+
+    cluster.kill_node(1, true);
+
+    let receipt = cluster
+        .node(0)
+        .frontend()
+        .ingest("payments", ev(1000, "c1"))
+        .unwrap();
+    let replies = collector
+        .await_event(receipt.ingest_id, receipt.fanout, Duration::from_secs(60))
+        .unwrap();
+    assert_eq!(replies[0].metrics[0].value, Some(2.0));
+}

@@ -1,0 +1,219 @@
+//! End-to-end pipeline correctness: ingest through the front-end, process
+//! in back-end task processors, collect replies, and compare every
+//! per-event metric value against a brute-force oracle.
+
+use railgun::agg::AggKind;
+use railgun::config::{EngineConfig, StreamDef};
+use railgun::coordinator::Node;
+use railgun::event::{Event, Value};
+use railgun::mlog::{Broker, BrokerConfig};
+use railgun::plan::MetricSpec;
+use railgun::util::clock::ms;
+use railgun::util::rng::Rng;
+use railgun::util::tmp::TempDir;
+use railgun::window::WindowSpec;
+use railgun::workload::payments_schema;
+use std::time::Duration;
+
+fn payments_def() -> StreamDef {
+    StreamDef {
+        name: "payments".into(),
+        schema: payments_schema(),
+        entities: vec!["card".into(), "merchant".into()],
+        metrics: vec![
+            MetricSpec::new(
+                "sum_by_card",
+                AggKind::Sum,
+                Some("amount"),
+                WindowSpec::sliding(5 * ms::MINUTE),
+                &["card"],
+            ),
+            MetricSpec::new(
+                "count_by_card",
+                AggKind::Count,
+                None,
+                WindowSpec::sliding(5 * ms::MINUTE),
+                &["card"],
+            ),
+            MetricSpec::new(
+                "avg_by_merchant",
+                AggKind::Avg,
+                Some("amount"),
+                WindowSpec::sliding(5 * ms::MINUTE),
+                &["merchant"],
+            ),
+        ],
+    }
+}
+
+fn ev(ts: i64, card: &str, merchant: &str, amount: f64) -> Event {
+    Event::new(
+        ts,
+        vec![
+            Value::Str(card.into()),
+            Value::Str(merchant.into()),
+            Value::F64(amount),
+            Value::Bool(false),
+        ],
+    )
+}
+
+#[test]
+fn end_to_end_values_match_brute_force_oracle() {
+    let tmp = TempDir::new("e2e_oracle");
+    let broker = Broker::open(BrokerConfig::in_memory()).unwrap();
+    let node = Node::start(
+        "n0",
+        EngineConfig::for_testing(tmp.path().to_path_buf()),
+        broker,
+    )
+    .unwrap();
+    node.register_stream(payments_def()).unwrap();
+    let mut collector = node.reply_collector().unwrap();
+
+    let mut rng = Rng::new(99);
+    let mut history: Vec<Event> = Vec::new();
+    let mut ts = 0i64;
+    let n_events = 300;
+    for i in 0..n_events {
+        ts += rng.range_i64(1, 30_000);
+        let card = format!("c{}", rng.next_below(5));
+        let merchant = format!("m{}", rng.next_below(3));
+        let amount = (rng.next_below(10_000) as f64) / 100.0;
+        let event = ev(ts, &card, &merchant, amount);
+        history.push(event.clone());
+
+        let receipt = node.frontend().ingest("payments", event).unwrap();
+        assert_eq!(receipt.fanout, 2, "card + merchant topics");
+        let replies = collector
+            .await_event(receipt.ingest_id, receipt.fanout, Duration::from_secs(30))
+            .unwrap();
+        assert_eq!(replies.len(), 2, "event {i}");
+
+        // oracle over history
+        let t_eval = ts + 1;
+        let in_window =
+            |e: &&Event| t_eval - 5 * ms::MINUTE <= e.timestamp && e.timestamp < t_eval;
+        let card_events: Vec<&Event> = history
+            .iter()
+            .filter(in_window)
+            .filter(|e| e.values[0].as_str() == Some(card.as_str()))
+            .collect();
+        let merchant_events: Vec<&Event> = history
+            .iter()
+            .filter(in_window)
+            .filter(|e| e.values[1].as_str() == Some(merchant.as_str()))
+            .collect();
+        let want_sum: f64 = card_events.iter().filter_map(|e| e.values[2].as_f64()).sum();
+        let want_count = card_events.len() as f64;
+        let amounts: Vec<f64> = merchant_events
+            .iter()
+            .filter_map(|e| e.values[2].as_f64())
+            .collect();
+        let want_avg = amounts.iter().sum::<f64>() / amounts.len() as f64;
+
+        let mut checked = 0;
+        for reply in &replies {
+            for m in &reply.metrics {
+                match m.name.as_str() {
+                    "sum_by_card" => {
+                        assert!(
+                            (m.value.unwrap() - want_sum).abs() < 1e-6,
+                            "event {i}: sum {} vs oracle {want_sum}",
+                            m.value.unwrap()
+                        );
+                        checked += 1;
+                    }
+                    "count_by_card" => {
+                        assert_eq!(m.value, Some(want_count), "event {i}");
+                        checked += 1;
+                    }
+                    "avg_by_merchant" => {
+                        assert!(
+                            (m.value.unwrap() - want_avg).abs() < 1e-6,
+                            "event {i}: avg {} vs oracle {want_avg}",
+                            m.value.unwrap()
+                        );
+                        checked += 1;
+                    }
+                    other => panic!("unexpected metric {other}"),
+                }
+            }
+        }
+        assert_eq!(checked, 3, "event {i}: every metric was replied");
+    }
+    node.shutdown(true);
+}
+
+#[test]
+fn json_ingestion_path() {
+    let tmp = TempDir::new("e2e_json");
+    let broker = Broker::open(BrokerConfig::in_memory()).unwrap();
+    let node = Node::start(
+        "n0",
+        EngineConfig::for_testing(tmp.path().to_path_buf()),
+        broker,
+    )
+    .unwrap();
+    node.register_stream(payments_def()).unwrap();
+    let mut collector = node.reply_collector().unwrap();
+    let receipt = node
+        .frontend()
+        .ingest_json(
+            "payments",
+            r#"{"timestamp": 1000, "card": "c1", "merchant": "m1", "amount": 25.0}"#,
+        )
+        .unwrap();
+    let replies = collector
+        .await_event(receipt.ingest_id, receipt.fanout, Duration::from_secs(30))
+        .unwrap();
+    let sum = replies
+        .iter()
+        .flat_map(|r| &r.metrics)
+        .find(|m| m.name == "sum_by_card")
+        .unwrap();
+    assert_eq!(sum.value, Some(25.0));
+    assert_eq!(sum.group, "c1");
+    node.shutdown(true);
+}
+
+#[test]
+fn multiple_groups_route_to_consistent_partitions() {
+    // many cards; per-card counts must be exact even with 2 partitions
+    // per topic (routing must never split a card across partitions)
+    let tmp = TempDir::new("e2e_routing");
+    let broker = Broker::open(BrokerConfig::in_memory()).unwrap();
+    let node = Node::start(
+        "n0",
+        EngineConfig::for_testing(tmp.path().to_path_buf()),
+        broker,
+    )
+    .unwrap();
+    node.register_stream(payments_def()).unwrap();
+    let mut collector = node.reply_collector().unwrap();
+
+    let mut last_count = std::collections::HashMap::new();
+    for i in 0..120i64 {
+        let card = format!("c{}", i % 12);
+        let receipt = node
+            .frontend()
+            .ingest("payments", ev(i * 1000, &card, "m1", 1.0))
+            .unwrap();
+        let replies = collector
+            .await_event(receipt.ingest_id, receipt.fanout, Duration::from_secs(30))
+            .unwrap();
+        let count = replies
+            .iter()
+            .flat_map(|r| &r.metrics)
+            .find(|m| m.name == "count_by_card")
+            .unwrap()
+            .value
+            .unwrap();
+        last_count.insert(card, count);
+    }
+    // 120 events / 12 cards within a 2-min span (< 5-min window) ⇒ 10 each
+    for (card, count) in last_count {
+        assert_eq!(count, 10.0, "{card}");
+    }
+    node.shutdown(true);
+}

@@ -1,0 +1,228 @@
+//! Cross-module property tests (coordinator invariants) using the
+//! in-repo propcheck framework (DESIGN.md §1: proptest substitute).
+
+use railgun::agg::AggKind;
+use railgun::event::{Event, FieldType, Schema, Value};
+use railgun::kvstore::{Store, StoreOptions};
+use railgun::mlog::{Broker, BrokerConfig, TopicPartition};
+use railgun::plan::{MetricSpec, Plan, StateStore};
+use railgun::reservoir::{Reservoir, ReservoirConfig};
+use railgun::util::clock::ms;
+use railgun::util::hash::{hash_str, partition_for};
+use railgun::util::propcheck::{check, Shrink};
+use railgun::util::tmp::TempDir;
+use railgun::window::WindowSpec;
+use std::sync::Arc;
+use std::time::Duration;
+
+/// Router invariant: same key ⇒ same partition; all partitions reachable.
+#[test]
+fn property_routing_deterministic_and_covering() {
+    check(
+        "routing deterministic + covering",
+        50,
+        |rng| {
+            let n_parts = rng.index(15) as u32 + 1;
+            let n_keys = rng.index(400) + 50;
+            (n_parts, n_keys)
+        },
+        |(n_parts, n_keys)| {
+            if *n_parts == 0 {
+                return Ok(());
+            }
+            let mut hit = vec![false; *n_parts as usize];
+            for i in 0..*n_keys {
+                let key = format!("card_{i}");
+                let p1 = partition_for(hash_str(&key), *n_parts);
+                let p2 = partition_for(hash_str(&key), *n_parts);
+                if p1 != p2 {
+                    return Err(format!("key {key} routed to {p1} then {p2}"));
+                }
+                if p1 >= *n_parts {
+                    return Err(format!("partition {p1} out of range"));
+                }
+                hit[p1 as usize] = true;
+            }
+            if *n_keys > *n_parts as usize * 30 && !hit.iter().all(|&h| h) {
+                return Err("some partition never hit".into());
+            }
+            Ok(())
+        },
+    );
+}
+
+/// mlog invariant: offsets are dense and replay returns identical data.
+#[test]
+fn property_mlog_offsets_dense_and_replay_deterministic() {
+    #[derive(Debug, Clone)]
+    struct Payloads(Vec<u8>);
+    impl Shrink for Payloads {
+        fn shrinks(&self) -> Vec<Self> {
+            self.0.shrinks().into_iter().map(Payloads).collect()
+        }
+    }
+    check(
+        "mlog dense offsets + deterministic replay",
+        30,
+        |rng| {
+            let n = rng.index(200) + 1;
+            Payloads((0..n).map(|_| rng.next_below(256) as u8).collect())
+        },
+        |Payloads(payloads)| {
+            let broker = Broker::open(BrokerConfig::in_memory()).map_err(|e| e.to_string())?;
+            broker.create_topic("t", 1).map_err(|e| e.to_string())?;
+            let producer = broker.producer();
+            for (i, b) in payloads.iter().enumerate() {
+                let off = producer
+                    .send("t", 0, i as i64, vec![], vec![*b])
+                    .map_err(|e| e.to_string())?;
+                if off != i as u64 {
+                    return Err(format!("offset {off} != {i}"));
+                }
+            }
+            // replay twice; must be identical
+            let read = |group: &str| -> Result<Vec<u8>, String> {
+                let mut c = broker.consumer(group, &["t"]).map_err(|e| e.to_string())?;
+                let mut out = Vec::new();
+                loop {
+                    let p = c
+                        .poll(64, Duration::from_millis(5))
+                        .map_err(|e| e.to_string())?;
+                    if p.records.is_empty() && p.rebalanced.is_none() {
+                        break;
+                    }
+                    for (_, r) in p.records {
+                        out.push(r.payload[0]);
+                    }
+                }
+                Ok(out)
+            };
+            let a = read("g1")?;
+            let b = read("g2")?;
+            if a != *payloads || b != *payloads {
+                return Err("replay mismatch".into());
+            }
+            Ok(())
+        },
+    );
+}
+
+/// Window containment invariant: for any event sequence, after advancing
+/// to T the plan's count equals |{t : T−w ≤ t < T}| exactly.
+#[test]
+fn property_sliding_window_containment() {
+    #[derive(Debug, Clone)]
+    struct Gaps(Vec<u64>);
+    impl Shrink for Gaps {
+        fn shrinks(&self) -> Vec<Self> {
+            self.0.shrinks().into_iter().map(Gaps).collect()
+        }
+    }
+    check(
+        "sliding window containment",
+        25,
+        |rng| {
+            let n = rng.index(150) + 1;
+            Gaps((0..n).map(|_| rng.next_below(45_000)).collect())
+        },
+        |Gaps(gaps)| {
+            let w = ms::MINUTE;
+            let tmp = TempDir::new("prop_window");
+            let schema = Schema::of(&[("k", FieldType::Str)]).map_err(|e| e.to_string())?;
+            let rcfg = ReservoirConfig {
+                chunk_events: 8,
+                cache_chunks: 4,
+                ..ReservoirConfig::new(tmp.join("r"))
+            };
+            let mut res = Reservoir::open(rcfg, schema.clone()).map_err(|e| e.to_string())?;
+            let store = Arc::new(
+                Store::open(&tmp.join("s"), StoreOptions::default()).map_err(|e| e.to_string())?,
+            );
+            let specs = vec![MetricSpec::new(
+                "cnt",
+                AggKind::Count,
+                None,
+                WindowSpec::sliding(w),
+                &["k"],
+            )];
+            let mut plan = Plan::build(schema, &specs, &res, StateStore::new(store, 1000))
+                .map_err(|e| e.to_string())?;
+            let mut history: Vec<i64> = Vec::new();
+            let mut ts = 0i64;
+            for gap in gaps {
+                ts += *gap as i64;
+                history.push(ts);
+                res.append(Event::new(ts, vec![Value::Str("k1".into())]))
+                    .map_err(|e| e.to_string())?;
+                let replies = plan.advance(ts + 1).map_err(|e| e.to_string())?;
+                let got = replies
+                    .last()
+                    .and_then(|r| r.value)
+                    .ok_or("missing reply")?;
+                let want = history
+                    .iter()
+                    .filter(|t| ts + 1 - w <= **t && **t < ts + 1)
+                    .count() as f64;
+                if got != want {
+                    return Err(format!("at ts={ts}: count {got} != containment {want}"));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+/// Group rebalance invariant: any sequence of joins/leaves keeps the
+/// partition assignment a disjoint cover of all partitions.
+#[test]
+fn property_rebalance_disjoint_cover() {
+    #[derive(Debug, Clone)]
+    struct Ops(Vec<bool>); // true = join, false = leave oldest
+    impl Shrink for Ops {
+        fn shrinks(&self) -> Vec<Self> {
+            self.0.shrinks().into_iter().map(Ops).collect()
+        }
+    }
+    check(
+        "rebalance disjoint cover",
+        40,
+        |rng| {
+            let n = rng.index(20) + 2;
+            Ops((0..n).map(|_| rng.chance(0.6)).collect())
+        },
+        |Ops(ops)| {
+            let broker = Broker::open(BrokerConfig::in_memory()).map_err(|e| e.to_string())?;
+            broker.create_topic("t", 6).map_err(|e| e.to_string())?;
+            let mut consumers: Vec<railgun::mlog::Consumer> = Vec::new();
+            for op in ops {
+                if *op {
+                    consumers.push(broker.consumer("g", &["t"]).map_err(|e| e.to_string())?);
+                } else if !consumers.is_empty() {
+                    let mut c = consumers.remove(0);
+                    c.leave();
+                }
+                if consumers.is_empty() {
+                    continue;
+                }
+                // poll everyone to observe the current generation
+                let mut seen: Vec<TopicPartition> = Vec::new();
+                for c in consumers.iter_mut() {
+                    let _ = c
+                        .poll(1, Duration::from_millis(1))
+                        .map_err(|e| e.to_string())?;
+                    seen.extend(c.assignment().iter().cloned());
+                }
+                seen.sort();
+                let before = seen.len();
+                seen.dedup();
+                if seen.len() != before {
+                    return Err("overlapping assignment".into());
+                }
+                if seen.len() != 6 {
+                    return Err(format!("cover has {} of 6 partitions", seen.len()));
+                }
+            }
+            Ok(())
+        },
+    );
+}

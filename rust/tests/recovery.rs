@@ -1,0 +1,200 @@
+//! Recovery: node restart over the same data dirs must reconstruct
+//! accurate states (sealed chunks + messaging-layer replay), the paper's
+//! §3.1/§3.3.1 recovery contract.
+
+use railgun::agg::AggKind;
+use railgun::config::{EngineConfig, StreamDef};
+use railgun::coordinator::Node;
+use railgun::event::{Event, Value};
+use railgun::mlog::{Broker, BrokerConfig, FsyncPolicy};
+use railgun::plan::MetricSpec;
+use railgun::util::clock::ms;
+use railgun::util::tmp::TempDir;
+use railgun::window::WindowSpec;
+use railgun::workload::payments_schema;
+use std::time::Duration;
+
+fn def() -> StreamDef {
+    StreamDef {
+        name: "payments".into(),
+        schema: payments_schema(),
+        entities: vec!["card".into()],
+        metrics: vec![
+            MetricSpec::new(
+                "count1h",
+                AggKind::Count,
+                None,
+                WindowSpec::sliding(ms::HOUR),
+                &["card"],
+            ),
+            MetricSpec::new(
+                "sum1h",
+                AggKind::Sum,
+                Some("amount"),
+                WindowSpec::sliding(ms::HOUR),
+                &["card"],
+            ),
+        ],
+    }
+}
+
+fn ev(ts: i64, card: &str, amount: f64) -> Event {
+    Event::new(
+        ts,
+        vec![
+            Value::Str(card.into()),
+            Value::Str("m1".into()),
+            Value::F64(amount),
+            Value::Bool(false),
+        ],
+    )
+}
+
+/// Full-process restart: durable broker + node data dirs survive; the
+/// restarted node must continue with exact metric values.
+#[test]
+fn node_restart_preserves_metric_accuracy() {
+    let tmp = TempDir::new("recovery_restart");
+    let broker_dir = tmp.join("broker");
+    let node_dir = tmp.join("node");
+    let broker_cfg = BrokerConfig {
+        fsync: FsyncPolicy::Always,
+        ..BrokerConfig::durable(broker_dir.clone())
+    };
+
+    // phase 1: run, ingest 120 events, kill without checkpoint
+    {
+        let broker = Broker::open(broker_cfg.clone()).unwrap();
+        let node = Node::start("n0", EngineConfig::for_testing(node_dir.clone()), broker)
+            .unwrap();
+        node.register_stream(def()).unwrap();
+        let mut collector = node.reply_collector().unwrap();
+        for i in 0..120i64 {
+            let receipt = node
+                .frontend()
+                .ingest("payments", ev(i * 1000, &format!("c{}", i % 4), 2.0))
+                .unwrap();
+            collector
+                .await_event(receipt.ingest_id, receipt.fanout, Duration::from_secs(30))
+                .unwrap();
+        }
+        node.shutdown(false); // crash-style: no checkpoint
+    }
+
+    // phase 2: full restart over the same dirs
+    let broker = Broker::open(broker_cfg).unwrap();
+    let node = Node::start("n0", EngineConfig::for_testing(node_dir), broker).unwrap();
+    node.register_stream(def()).unwrap();
+    let mut collector = node.reply_collector().unwrap();
+
+    // next event per card: counts continue from 30 (120 events / 4 cards)
+    for c in 0..4 {
+        let card = format!("c{c}");
+        let receipt = node
+            .frontend()
+            .ingest("payments", ev(121_000 + c, &card, 2.0))
+            .unwrap();
+        let replies = collector
+            .await_event(receipt.ingest_id, receipt.fanout, Duration::from_secs(60))
+            .unwrap();
+        let count = replies[0]
+            .metrics
+            .iter()
+            .find(|m| m.name == "count1h")
+            .unwrap()
+            .value
+            .unwrap();
+        assert_eq!(count, 31.0, "card {card}: 30 before restart + 1 now");
+        let sum = replies[0]
+            .metrics
+            .iter()
+            .find(|m| m.name == "sum1h")
+            .unwrap()
+            .value
+            .unwrap();
+        assert!((sum - 62.0).abs() < 1e-9, "card {card}: sum {sum}");
+    }
+    node.shutdown(true);
+}
+
+/// Replay determinism: running the same ingest sequence twice (one run
+/// interrupted + recovered) must yield identical final metric values.
+#[test]
+fn interrupted_run_equals_uninterrupted_run() {
+    let run = |interrupt: bool, tag: &str| -> Vec<(String, f64)> {
+        let tmp = TempDir::new(tag);
+        let broker_cfg = BrokerConfig {
+            fsync: FsyncPolicy::Always,
+            ..BrokerConfig::durable(tmp.join("broker"))
+        };
+        let node_dir = tmp.join("node");
+        let feed = |node: &Node,
+                    collector: &mut railgun::frontend::ReplyCollector,
+                    lo: i64,
+                    hi: i64| {
+            for i in lo..hi {
+                let receipt = node
+                    .frontend()
+                    .ingest(
+                        "payments",
+                        ev(i * 500, &format!("c{}", i % 3), (i % 5) as f64),
+                    )
+                    .unwrap();
+                collector
+                    .await_event(receipt.ingest_id, receipt.fanout, Duration::from_secs(60))
+                    .unwrap();
+            }
+        };
+        let collect_finals = |node: &Node,
+                              collector: &mut railgun::frontend::ReplyCollector|
+         -> Vec<(String, f64)> {
+            // one probe event per card reads the final value
+            let mut finals = Vec::new();
+            for c in 0..3 {
+                let card = format!("c{c}");
+                let receipt = node
+                    .frontend()
+                    .ingest("payments", ev(200_000 + c as i64, &card, 0.0))
+                    .unwrap();
+                let replies = collector
+                    .await_event(receipt.ingest_id, receipt.fanout, Duration::from_secs(60))
+                    .unwrap();
+                for m in &replies[0].metrics {
+                    finals.push((format!("{card}/{}", m.name), m.value.unwrap()));
+                }
+            }
+            finals.sort_by(|a, b| a.0.cmp(&b.0));
+            finals
+        };
+
+        if interrupt {
+            {
+                let broker = Broker::open(broker_cfg.clone()).unwrap();
+                let node =
+                    Node::start("n0", EngineConfig::for_testing(node_dir.clone()), broker)
+                        .unwrap();
+                node.register_stream(def()).unwrap();
+                let mut collector = node.reply_collector().unwrap();
+                feed(&node, &mut collector, 0, 60);
+                node.shutdown(false);
+            }
+            let broker = Broker::open(broker_cfg).unwrap();
+            let node = Node::start("n0", EngineConfig::for_testing(node_dir), broker).unwrap();
+            node.register_stream(def()).unwrap();
+            let mut collector = node.reply_collector().unwrap();
+            feed(&node, &mut collector, 60, 100);
+            collect_finals(&node, &mut collector)
+        } else {
+            let broker = Broker::open(broker_cfg).unwrap();
+            let node = Node::start("n0", EngineConfig::for_testing(node_dir), broker).unwrap();
+            node.register_stream(def()).unwrap();
+            let mut collector = node.reply_collector().unwrap();
+            feed(&node, &mut collector, 0, 100);
+            collect_finals(&node, &mut collector)
+        }
+    };
+
+    let a = run(false, "recovery_base");
+    let b = run(true, "recovery_interrupted");
+    assert_eq!(a, b, "recovered run must equal uninterrupted run");
+}

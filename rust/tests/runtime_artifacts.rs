@@ -1,0 +1,193 @@
+//! Runtime ↔ artifact integration: load the AOT HLO-text artifacts on the
+//! PJRT CPU client and verify numerics against python's golden vectors
+//! (`artifacts/golden.json`, produced by `make artifacts`).
+//!
+//! These tests skip (with a warning) when artifacts are missing so plain
+//! `cargo test` works before `make artifacts`; the Makefile `test` target
+//! always builds artifacts first.
+
+use railgun::runtime::{artifacts_available, artifacts_dir, FraudScorer, Runtime, VectorizedAgg};
+use railgun::util::json::Json;
+
+macro_rules! require_artifacts {
+    () => {
+        if !artifacts_available() {
+            eprintln!("SKIP: artifacts missing — run `make artifacts` first");
+            return;
+        }
+    };
+}
+
+fn golden() -> Json {
+    let text = std::fs::read_to_string(artifacts_dir().join("golden.json")).unwrap();
+    Json::parse(&text).unwrap()
+}
+
+#[test]
+fn scorer_matches_python_golden_vectors() {
+    require_artifacts!();
+    let rt = Runtime::cpu().unwrap();
+    let scorer = FraudScorer::load(&rt, &artifacts_dir()).unwrap();
+    assert_eq!(scorer.meta().features, 8);
+    assert_eq!(scorer.meta().feature_names.len(), 8);
+
+    let g = golden();
+    let case = g.get("fraud_scorer").unwrap();
+    let rows: Vec<Vec<f64>> = case
+        .get("features")
+        .unwrap()
+        .as_arr()
+        .unwrap()
+        .iter()
+        .map(|r| r.as_arr().unwrap().iter().map(|v| v.as_f64().unwrap()).collect())
+        .collect();
+    let expected: Vec<f64> = case
+        .get("expected_probs")
+        .unwrap()
+        .as_arr()
+        .unwrap()
+        .iter()
+        .map(|v| v.as_f64().unwrap())
+        .collect();
+    let flat: Vec<f32> = rows.iter().flatten().map(|v| *v as f32).collect();
+    let probs = scorer.score(&flat, rows.len()).unwrap();
+    assert_eq!(probs.len(), expected.len());
+    for (i, (got, want)) in probs.iter().zip(&expected).enumerate() {
+        assert!(
+            (*got as f64 - want).abs() < 1e-5,
+            "row {i}: rust PJRT {got} vs python {want}"
+        );
+    }
+}
+
+#[test]
+fn window_agg_matches_python_golden_vectors() {
+    require_artifacts!();
+    let rt = Runtime::cpu().unwrap();
+    let mut agg = VectorizedAgg::load(&rt, &artifacts_dir()).unwrap();
+    let meta = agg.meta();
+    assert_eq!(meta.lanes, 8);
+
+    let g = golden();
+    let case = g.get("window_agg").unwrap();
+    // preload state by pushing synthetic events that produce the preload
+    // lanes: count=2, sum=30, sumsq=500 ⇒ two events with v² summing 500:
+    // v=10 (100) and v=20 (400)
+    let pre = case.get("state_preload").unwrap();
+    let slot = pre.get("slot").unwrap().as_i64().unwrap() as u32;
+    agg.push(slot, 10.0, true).unwrap();
+    agg.push(slot, 20.0, true).unwrap();
+
+    let slots: Vec<u32> = case
+        .get("slots")
+        .unwrap()
+        .as_arr()
+        .unwrap()
+        .iter()
+        .map(|v| v.as_i64().unwrap() as u32)
+        .collect();
+    let values: Vec<f32> = case
+        .get("values")
+        .unwrap()
+        .as_arr()
+        .unwrap()
+        .iter()
+        .map(|v| v.as_f64().unwrap() as f32)
+        .collect();
+    let signs: Vec<f64> = case
+        .get("signs")
+        .unwrap()
+        .as_arr()
+        .unwrap()
+        .iter()
+        .map(|v| v.as_f64().unwrap())
+        .collect();
+    for ((s, v), sign) in slots.iter().zip(&values).zip(&signs) {
+        agg.push(*s, *v, *sign > 0.0).unwrap();
+    }
+    let expected = case.get("expected_rows").unwrap().as_obj().unwrap();
+    for (slot_str, row) in expected {
+        let slot: u32 = slot_str.parse().unwrap();
+        let want: Vec<f64> = row
+            .as_arr()
+            .unwrap()
+            .iter()
+            .map(|v| v.as_f64().unwrap())
+            .collect();
+        let (count, sum, sumsq) = agg.lanes(slot).unwrap();
+        assert!(
+            (count - want[0]).abs() < 1e-4
+                && (sum - want[1]).abs() < 1e-3
+                && (sumsq - want[2]).abs() < 1e-2,
+            "slot {slot}: rust ({count}, {sum}, {sumsq}) vs python {want:?}"
+        );
+    }
+}
+
+#[test]
+fn vectorized_agg_incremental_semantics() {
+    require_artifacts!();
+    let rt = Runtime::cpu().unwrap();
+    let mut agg = VectorizedAgg::load(&rt, &artifacts_dir()).unwrap();
+    // arrivals
+    for v in [10.0f32, 20.0, 30.0] {
+        agg.push(42, v, true).unwrap();
+    }
+    let (count, sum, avg, std) = agg.aggregates(42).unwrap();
+    assert_eq!(count, 3.0);
+    assert_eq!(sum, 60.0);
+    assert_eq!(avg, Some(20.0));
+    assert!((std.unwrap() - (200.0f64 / 3.0).sqrt()).abs() < 1e-4);
+    // expire the first
+    agg.push(42, 10.0, false).unwrap();
+    let (count, sum, avg, _) = agg.aggregates(42).unwrap();
+    assert_eq!(count, 2.0);
+    assert_eq!(sum, 50.0);
+    assert_eq!(avg, Some(25.0));
+    // untouched slot
+    let (c, s, a, d) = agg.aggregates(7).unwrap();
+    assert_eq!((c, s), (0.0, 0.0));
+    assert!(a.is_none() && d.is_none());
+}
+
+#[test]
+fn scorer_batcher_flushes_full_and_partial() {
+    require_artifacts!();
+    let rt = Runtime::cpu().unwrap();
+    let scorer = FraudScorer::load(&rt, &artifacts_dir()).unwrap();
+    let f = scorer.meta().features;
+    let b = scorer.meta().batch;
+    let mut batcher = railgun::runtime::ScorerBatcher::new(&scorer);
+    let row: Vec<f32> = (0..f).map(|i| i as f32 * 10.0).collect();
+    // full batch auto-flush
+    let mut auto = None;
+    for _ in 0..b {
+        auto = batcher.push(&row).unwrap();
+    }
+    let scores = auto.expect("flush on full batch");
+    assert_eq!(scores.len(), b);
+    // identical rows ⇒ identical scores
+    assert!(scores.windows(2).all(|w| (w[0] - w[1]).abs() < 1e-7));
+    // partial flush
+    batcher.push(&row).unwrap();
+    batcher.push(&row).unwrap();
+    let partial = batcher.flush().unwrap();
+    assert_eq!(partial.len(), 2);
+    assert!((partial[0] - scores[0]).abs() < 1e-6, "padding is inert");
+    assert_eq!(batcher.pending(), 0);
+}
+
+#[test]
+fn scorer_rejects_bad_shapes() {
+    require_artifacts!();
+    let rt = Runtime::cpu().unwrap();
+    let scorer = FraudScorer::load(&rt, &artifacts_dir()).unwrap();
+    let f = scorer.meta().features;
+    let b = scorer.meta().batch;
+    assert!(scorer.score(&vec![0.0; f], 2).is_err(), "row count mismatch");
+    assert!(
+        scorer.score(&vec![0.0; (b + 1) * f], b + 1).is_err(),
+        "batch overflow"
+    );
+    assert!(scorer.score(&[], 0).unwrap().is_empty());
+}
