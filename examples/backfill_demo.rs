@@ -68,7 +68,7 @@ fn main() -> railgun::Result<()> {
             offset: i,
             timestamp: env.event.timestamp,
             key: vec![],
-            payload: env.encode(&schema),
+            payload: env.encode(&schema).into(),
         })?;
     }
     println!(
@@ -124,7 +124,7 @@ fn main() -> railgun::Result<()> {
         offset: 20_000,
         timestamp: env.event.timestamp,
         key: vec![],
-        payload: env.encode(&schema),
+        payload: env.encode(&schema).into(),
     })?;
     let after_sum = tp.query("sum_30m", &[Value::Str(probe_card.into())])?;
     let after_avg = tp.query("avg_30m", &[Value::Str(probe_card.into())])?;

@@ -104,7 +104,7 @@ fn run(shared: bool, events: u64, seed: u64) -> Series {
             offset: i,
             timestamp: event.timestamp,
             key: vec![],
-            payload: Envelope { ingest_id: i, event }.encode(&schema),
+            payload: Envelope { ingest_id: i, event }.encode(&schema).into(),
         };
         injector.observe(|| tp.process(&record).unwrap());
     }

@@ -96,7 +96,7 @@ fn main() {
                     offset: i,
                     timestamp: event.timestamp,
                     key: vec![],
-                    payload: Envelope { ingest_id: i, event }.encode(&schema),
+                    payload: Envelope { ingest_id: i, event }.encode(&schema).into(),
                 })
                 .unwrap();
             }

@@ -94,7 +94,8 @@ fn run_with_windows(n_windows: usize, events: u64, seed: u64) -> Series {
                 ingest_id: i,
                 event,
             }
-            .encode(&schema),
+            .encode(&schema)
+            .into(),
         };
         if i >= warmup {
             injector.observe(|| tp.process(&record).unwrap());

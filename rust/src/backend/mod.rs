@@ -7,6 +7,13 @@
 //! aggregation plan and state store — and there is exactly one active
 //! task processor per (topic, partition) in the whole cluster, enforced
 //! by the consumer group's partition assignment.
+//!
+//! Records flow through in **batches**: a poll's records are grouped per
+//! partition and handed to [`TaskProcessor::process_batch`], which
+//! appends the whole batch to the reservoir, evaluates the plan at every
+//! event timestamp (per-event accuracy is the paper's non-negotiable
+//! requirement — batching only amortizes locking, allocation and reply
+//! publishing), and emits one binary reply record per batch.
 
 mod task_processor;
 mod unit;

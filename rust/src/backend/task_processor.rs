@@ -1,12 +1,20 @@
 //! A task processor: reservoir + plan + state store for one
 //! (topic, partition), per paper §3.3.
+//!
+//! Records arrive in **batches** ([`TaskProcessor::process_batch`]): all
+//! envelopes are decoded and appended to the reservoir in one pass, the
+//! plan evaluates every window at every event timestamp via
+//! [`Plan::advance_batch`] (per-event accuracy is preserved — batching
+//! only amortizes overheads), and the replies of the whole batch are
+//! published as **one** reply-topic record (bounded by the
+//! `reply_flush_events` config knob) in the varint binary codec.
 
 use crate::config::{EngineConfig, StreamDef};
 use crate::error::{Error, Result};
 use crate::frontend::{Envelope, ReplyMetric, ReplyMsg, REPLY_TOPIC};
 use crate::kvstore::{Store, StoreOptions};
 use crate::mlog::{Producer, Record};
-use crate::plan::{MetricSpec, Plan, StateStore};
+use crate::plan::{MetricReply, MetricSpec, Plan, StateStore};
 use crate::reservoir::{Reservoir, ReservoirConfig};
 use std::path::PathBuf;
 use std::sync::Arc;
@@ -25,6 +33,8 @@ pub struct TaskProcessor {
     /// Emit replies to the reply topic (disabled during tests/benches
     /// that read states directly).
     replies_enabled: bool,
+    /// Flush the accumulated reply batch after this many messages.
+    reply_flush_events: usize,
     events_since_checkpoint: u64,
     checkpoint_every: u64,
     /// Number of events replayed during recovery (observability).
@@ -103,13 +113,31 @@ impl TaskProcessor {
                 cursor.next(|_, _| ())?;
             }
             // all iterators begin at start_seq; replay drains them forward
+            // in batches (the same coalesced-write path as live traffic)
             let positions: Vec<(i64, u64)> =
                 plan.positions().iter().map(|(o, _)| (*o, start_seq)).collect();
             plan.restore_positions(&positions, i64::MIN);
             let mut replay = reservoir.iterator_at(start_seq);
-            while let Some(ts) = replay.next(|_, e| e.timestamp)? {
-                let _ = plan.advance(ts + 1)?; // replies dropped during replay
-                recovered_events += 1;
+            let mut t_evals: Vec<i64> = Vec::with_capacity(1024);
+            let mut sink = Vec::new();
+            let mut last_t = i64::MIN;
+            loop {
+                t_evals.clear();
+                sink.clear(); // replies are dropped during replay
+                while t_evals.len() < 1024 {
+                    match replay.next(|_, e| e.timestamp)? {
+                        Some(ts) => {
+                            last_t = (ts + 1).max(last_t);
+                            t_evals.push(last_t);
+                        }
+                        None => break,
+                    }
+                }
+                if t_evals.is_empty() {
+                    break;
+                }
+                plan.advance_batch(&t_evals, &mut sink)?;
+                recovered_events += t_evals.len() as u64;
             }
         }
 
@@ -122,6 +150,7 @@ impl TaskProcessor {
             producer,
             processed: durable,
             replies_enabled,
+            reply_flush_events: cfg.reply_flush_events.max(1),
             events_since_checkpoint: 0,
             checkpoint_every: cfg.checkpoint_every,
             recovered_events,
@@ -148,52 +177,123 @@ impl TaskProcessor {
         self.processed
     }
 
-    /// Process one record (decode → reservoir append → plan advance →
-    /// reply publish).
+    /// Process one record — the single-record special case of
+    /// [`TaskProcessor::process_batch`].
     pub fn process(&mut self, record: &Record) -> Result<()> {
-        if record.offset < self.processed {
-            return Ok(()); // duplicate from a rewind/replay
+        self.process_batch(std::slice::from_ref(record))
+    }
+
+    /// Process a batch of records from this processor's partition:
+    /// decode every envelope, append them all to the reservoir, advance
+    /// the plan **per event timestamp** (accuracy requirement — batching
+    /// never skips an evaluation), then publish the batch's replies as
+    /// one reply record (flushed early every `reply_flush_events`
+    /// messages to bound record size).
+    ///
+    /// Duplicates below the processed offset are skipped; an offset gap
+    /// is an error (records within an exclusively-owned partition are
+    /// contiguous). A corrupt or gapped record fails the call, but the
+    /// valid prefix before it is still fully processed — the same
+    /// degraded-mode behavior as the old per-record loop.
+    pub fn process_batch(&mut self, records: &[Record]) -> Result<()> {
+        let mut envelopes = Vec::with_capacity(records.len());
+        let mut expected = self.processed;
+        let mut failed: Option<Error> = None;
+        for record in records {
+            if record.offset < expected {
+                continue; // duplicate from a rewind/replay
+            }
+            if record.offset > expected {
+                failed = Some(Error::internal(format!(
+                    "{}/{}: offset gap (expected {}, got {})",
+                    self.topic, self.partition, expected, record.offset
+                )));
+                break;
+            }
+            match Envelope::decode(&record.payload, &self.stream.schema) {
+                Ok(env) => {
+                    envelopes.push(env);
+                    expected += 1;
+                }
+                Err(e) => {
+                    failed = Some(e);
+                    break;
+                }
+            }
         }
-        if record.offset > self.processed {
-            return Err(Error::internal(format!(
-                "{}/{}: offset gap (expected {}, got {})",
-                self.topic, self.partition, self.processed, record.offset
-            )));
-        }
-        let env = Envelope::decode(&record.payload, &self.stream.schema)?;
-        let ts = env.event.timestamp;
-        self.reservoir.append(env.event)?;
-        self.processed += 1;
-        // event-time may jitter slightly across producers; clamp monotonic
-        let t_eval = (ts + 1).max(self.plan.last_t_eval());
-        let replies = self.plan.advance(t_eval)?;
-        if self.replies_enabled {
-            let msg = ReplyMsg {
-                ingest_id: env.ingest_id,
-                topic: self.topic.clone(),
-                partition: self.partition,
-                event_ts: ts,
-                metrics: replies
-                    .into_iter()
-                    .map(|r| ReplyMetric {
-                        name: r.metric,
-                        group: r.group,
-                        value: r.value,
-                    })
-                    .collect(),
+        if envelopes.is_empty() {
+            return match failed {
+                Some(e) => Err(e),
+                None => Ok(()),
             };
-            self.producer.send(
-                REPLY_TOPIC,
-                0,
-                ts,
-                vec![],
-                msg.to_json().to_string().into_bytes(),
-            )?;
         }
-        self.events_since_checkpoint += 1;
+
+        // one reservoir pass; event-time may jitter slightly across
+        // producers, so evaluation times are clamped monotonic.
+        // `processed` advances with every successful append so a
+        // mid-batch failure can never double-append on redelivery.
+        let mut meta = Vec::with_capacity(envelopes.len());
+        let mut t_evals = Vec::with_capacity(envelopes.len());
+        let mut last_t = self.plan.last_t_eval();
+        for env in envelopes {
+            let ts = env.event.timestamp;
+            self.reservoir.append(env.event)?;
+            self.processed += 1;
+            self.events_since_checkpoint += 1;
+            meta.push((env.ingest_id, ts));
+            last_t = (ts + 1).max(last_t);
+            t_evals.push(last_t);
+        }
+
+        // evaluate per event; on a plan error the evaluated prefix's
+        // replies are still published below (the plan's iterators resume
+        // from their positions on the next batch — appended events are
+        // evaluated then, at later eval times, as in the per-record loop)
+        let mut per_event: Vec<Vec<MetricReply>> = Vec::new();
+        let plan_result = self.plan.advance_batch(&t_evals, &mut per_event);
+        if self.replies_enabled {
+            let mut pending: Vec<ReplyMsg> = Vec::with_capacity(per_event.len());
+            for ((ingest_id, ts), replies) in meta.into_iter().zip(per_event) {
+                pending.push(ReplyMsg {
+                    ingest_id,
+                    topic: self.topic.clone(),
+                    partition: self.partition,
+                    event_ts: ts,
+                    metrics: replies
+                        .into_iter()
+                        .map(|r| ReplyMetric {
+                            name: r.metric,
+                            group: r.group,
+                            value: r.value,
+                        })
+                        .collect(),
+                });
+                if pending.len() >= self.reply_flush_events {
+                    self.flush_replies(&mut pending)?;
+                }
+            }
+            self.flush_replies(&mut pending)?;
+        }
+        if let Some(e) = failed {
+            return Err(e);
+        }
+        plan_result?;
+
         if self.events_since_checkpoint >= self.checkpoint_every {
             self.checkpoint()?;
         }
+        Ok(())
+    }
+
+    /// Publish the accumulated reply messages as one reply-topic record.
+    fn flush_replies(&mut self, pending: &mut Vec<ReplyMsg>) -> Result<()> {
+        if pending.is_empty() {
+            return Ok(());
+        }
+        let ts = pending.last().expect("non-empty").event_ts;
+        let payload = ReplyMsg::encode_batch(pending);
+        self.producer.send(REPLY_TOPIC, 0, ts, vec![], payload)?;
+        pending.clear();
         Ok(())
     }
 
@@ -278,7 +378,7 @@ mod tests {
             offset,
             timestamp: ts,
             key: card.as_bytes().to_vec(),
-            payload: env.encode(&payments_schema()),
+            payload: env.encode(&payments_schema()).into(),
         }
     }
 
@@ -410,15 +510,93 @@ mod tests {
         let mut c = broker.consumer("t", &[REPLY_TOPIC]).unwrap();
         let polled = c.poll(10, std::time::Duration::from_millis(100)).unwrap();
         assert_eq!(polled.records.len(), 1);
-        let msg = ReplyMsg::from_json(
-            &crate::util::json::Json::parse(
-                std::str::from_utf8(&polled.records[0].1.payload).unwrap(),
-            )
-            .unwrap(),
+        let msgs = ReplyMsg::decode_batch(&polled.records[0].1.payload).unwrap();
+        assert_eq!(msgs.len(), 1);
+        assert_eq!(msgs[0].ingest_id, 1);
+        assert_eq!(msgs[0].metrics.len(), 2);
+    }
+
+    #[test]
+    fn batch_replies_ride_one_record() {
+        let tmp = TempDir::new("tp_batch_replies");
+        let broker = Broker::open(BrokerConfig::in_memory()).unwrap();
+        broker.create_topic(REPLY_TOPIC, 1).unwrap();
+        let cfg = EngineConfig::for_testing(tmp.path().to_path_buf());
+        let mut tp = TaskProcessor::open(
+            tmp.path().to_path_buf(),
+            stream(),
+            "card",
+            0,
+            &cfg,
+            broker.producer(),
+            true,
         )
         .unwrap();
-        assert_eq!(msg.ingest_id, 1);
-        assert_eq!(msg.metrics.len(), 2);
+        let records: Vec<Record> = (0..10u64)
+            .map(|i| record(i, 1000 + i as i64, "c1", 1.0))
+            .collect();
+        tp.process_batch(&records).unwrap();
+        let mut c = broker.consumer("t", &[REPLY_TOPIC]).unwrap();
+        let polled = c.poll(100, std::time::Duration::from_millis(100)).unwrap();
+        assert_eq!(polled.records.len(), 1, "one reply record for the batch");
+        let msgs = ReplyMsg::decode_batch(&polled.records[0].1.payload).unwrap();
+        assert_eq!(msgs.len(), 10);
+        for (i, m) in msgs.iter().enumerate() {
+            assert_eq!(m.ingest_id, i as u64 + 1);
+            assert_eq!(m.metrics.len(), 2);
+        }
+    }
+
+    #[test]
+    fn process_batch_equals_per_record_processing() {
+        let records: Vec<Record> = (0..150u64)
+            .map(|i| {
+                record(
+                    i,
+                    i as i64 * 2000,
+                    if i % 3 == 0 { "c1" } else { "c2" },
+                    (i % 7) as f64,
+                )
+            })
+            .collect();
+        let tmp_a = TempDir::new("tp_single_path");
+        let mut tp_a = open_tp(tmp_a.path().to_path_buf(), false);
+        for r in &records {
+            tp_a.process(r).unwrap();
+        }
+        let tmp_b = TempDir::new("tp_batch_path");
+        let mut tp_b = open_tp(tmp_b.path().to_path_buf(), false);
+        for chunk in records.chunks(13) {
+            tp_b.process_batch(chunk).unwrap();
+        }
+        assert_eq!(tp_a.processed(), tp_b.processed());
+        for card in ["c1", "c2"] {
+            for metric in ["sum5m", "cnt5m"] {
+                let a = tp_a.query(metric, &[Value::Str(card.into())]).unwrap();
+                let b = tp_b.query(metric, &[Value::Str(card.into())]).unwrap();
+                assert_eq!(a, b, "{metric}/{card}");
+            }
+        }
+    }
+
+    #[test]
+    fn process_batch_skips_duplicates_and_rejects_gaps() {
+        let tmp = TempDir::new("tp_batch_dup");
+        let mut tp = open_tp(tmp.path().to_path_buf(), false);
+        let records: Vec<Record> =
+            (0..5u64).map(|i| record(i, 1000 + i as i64, "c1", 1.0)).collect();
+        tp.process_batch(&records).unwrap();
+        // a replayed overlap (offsets 3..8) only applies the new tail
+        let overlap: Vec<Record> =
+            (3..8u64).map(|i| record(i, 1000 + i as i64, "c1", 1.0)).collect();
+        tp.process_batch(&overlap).unwrap();
+        assert_eq!(tp.processed(), 8);
+        assert_eq!(
+            tp.query("cnt5m", &[Value::Str("c1".into())]).unwrap(),
+            Some(8.0)
+        );
+        let gap: Vec<Record> = vec![record(11, 2000, "c1", 1.0)];
+        assert!(tp.process_batch(&gap).is_err());
     }
 
     #[test]

@@ -1,11 +1,17 @@
 //! Processor units: the Algorithm-1 loop on a dedicated thread, plus the
 //! [`Backend`] that manages a node's units.
+//!
+//! The loop is batch-first: each poll's records are grouped per
+//! (topic, partition) run and handed to the owning task processor as one
+//! [`TaskProcessor::process_batch`] call, so per-record dispatch and
+//! per-record reply publishing are amortized across the poll batch
+//! (sized by the `poll_batch` config knob).
 
+use crate::backend::TaskProcessor;
 use crate::config::EngineConfig;
 use crate::error::Result;
 use crate::frontend::Registry;
-use crate::mlog::{BrokerRef, Consumer, TopicPartition};
-use crate::backend::TaskProcessor;
+use crate::mlog::{BrokerRef, Consumer, Record, TopicPartition};
 use std::collections::HashMap;
 use std::path::PathBuf;
 use std::sync::mpsc::{Receiver, Sender, TryRecvError};
@@ -209,18 +215,34 @@ fn unit_loop(
             }
         }
 
-        // 5. route records to task processors
+        // 5. route records to task processors, one batch per partition
+        // run: records of one partition are contiguous within a poll, so
+        // run-length grouping preserves order and hands each processor
+        // its whole slice in a single process_batch call
+        let mut batches: Vec<(TopicPartition, Vec<Record>)> = Vec::new();
         for (tp_key, record) in polled.records {
+            match batches.last_mut() {
+                Some((last_key, records)) if *last_key == tp_key => records.push(record),
+                _ => batches.push((tp_key, vec![record])),
+            }
+        }
+        for (tp_key, records) in batches {
             match tasks.get_mut(&tp_key) {
                 Some(tp) => {
-                    if let Err(e) = tp.process(&record) {
-                        log::error!("{unit_name}: {tp_key}: process failed: {e}");
+                    if let Err(e) = tp.process_batch(&records) {
+                        log::error!(
+                            "{unit_name}: {tp_key}: processing a {}-record batch failed: {e}",
+                            records.len()
+                        );
                     }
                 }
                 None => {
-                    // assignment race: record for a partition whose task
+                    // assignment race: records for a partition whose task
                     // processor was not created (stream deregistered?)
-                    log::warn!("{unit_name}: dropping record for unowned {tp_key}");
+                    log::warn!(
+                        "{unit_name}: dropping {} records for unowned {tp_key}",
+                        records.len()
+                    );
                 }
             }
             // advisory commit for observability

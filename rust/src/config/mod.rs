@@ -37,6 +37,15 @@ pub struct EngineConfig {
     pub poll_timeout_ms: u64,
     /// Commit + checkpoint cadence, in events per task processor.
     pub checkpoint_every: u64,
+    /// Max records per front-end producer append batch: an
+    /// [`crate::frontend::FrontEnd::ingest_batch`] call groups records by
+    /// (topic, partition) and caps each partition append at this many
+    /// records (bounds the time a partition lock is held per batch).
+    pub ingest_batch: usize,
+    /// Max reply messages a task processor accumulates before flushing
+    /// them as one reply-topic record (bounds reply record size; a batch
+    /// always flushes at its end regardless).
+    pub reply_flush_events: usize,
 }
 
 impl EngineConfig {
@@ -54,6 +63,8 @@ impl EngineConfig {
             poll_batch: 256,
             poll_timeout_ms: 10,
             checkpoint_every: 10_000,
+            ingest_batch: 256,
+            reply_flush_events: 256,
         }
     }
 
@@ -106,6 +117,8 @@ impl EngineConfig {
         cfg.poll_batch = get_usize("poll_batch", cfg.poll_batch)?;
         cfg.poll_timeout_ms = get_usize("poll_timeout_ms", cfg.poll_timeout_ms as usize)? as u64;
         cfg.checkpoint_every = get_usize("checkpoint_every", cfg.checkpoint_every as usize)? as u64;
+        cfg.ingest_batch = get_usize("ingest_batch", cfg.ingest_batch)?;
+        cfg.reply_flush_events = get_usize("reply_flush_events", cfg.reply_flush_events)?;
         if let Some(j) = obj.get("compression_level") {
             cfg.compression_level = match j {
                 Json::Null => None,
@@ -403,12 +416,17 @@ mod tests {
     #[test]
     fn engine_config_defaults_and_json() {
         let cfg = EngineConfig::from_json(
-            &Json::parse(r#"{"data_dir": "/tmp/x", "processor_units": 4, "prefetch": false}"#)
-                .unwrap(),
+            &Json::parse(
+                r#"{"data_dir": "/tmp/x", "processor_units": 4, "prefetch": false,
+                    "ingest_batch": 512, "reply_flush_events": 32}"#,
+            )
+            .unwrap(),
         )
         .unwrap();
         assert_eq!(cfg.processor_units, 4);
         assert!(!cfg.prefetch);
+        assert_eq!(cfg.ingest_batch, 512);
+        assert_eq!(cfg.reply_flush_events, 32);
         assert_eq!(cfg.partitions_per_topic, 4, "default kept");
         assert!(EngineConfig::from_json(&Json::parse("{}").unwrap()).is_err());
         assert!(EngineConfig::from_json(

@@ -31,11 +31,10 @@ impl Node {
     pub fn start(name: &str, cfg: EngineConfig, broker: BrokerRef) -> Result<Node> {
         std::fs::create_dir_all(&cfg.data_dir)?;
         let registry: Registry = Arc::new(RwLock::new(FxHashMap::default()));
-        let frontend = Arc::new(FrontEnd::new(
-            broker.clone(),
-            registry.clone(),
-            cfg.partitions_per_topic,
-        ));
+        let frontend = Arc::new(
+            FrontEnd::new(broker.clone(), registry.clone(), cfg.partitions_per_topic)
+                .with_ingest_batch(cfg.ingest_batch),
+        );
         let backend = Backend::start(broker.clone(), registry.clone(), cfg.clone(), name)?;
         Ok(Node {
             name: name.to_string(),

@@ -8,11 +8,26 @@
 //! the reply topic: back-end task processors publish their metric values
 //! there, and [`ReplyCollector`] reassembles the per-event answer for the
 //! client (steps 5–6 of Figure 2).
+//!
+//! The ingest path is **batch-first**: [`FrontEnd::ingest_batch`] encodes
+//! each envelope once, shares the payload bytes across entity topics
+//! (`Arc<[u8]>`-backed records), groups the replicas by
+//! (topic, partition) and issues **one producer append per partition**.
+//! [`FrontEnd::ingest`] is the single-event special case of the same
+//! path. Batching is purely a transport/amortization concern — the
+//! back-end still evaluates every window at every event timestamp, so
+//! per-event accuracy is untouched.
+//!
+//! Replies travel in the varint binary codec (same family as the event
+//! codec), one record per (task-processor, batch) with multiple
+//! [`ReplyMsg`]s per record; [`ReplyMsg::to_json`] remains for
+//! client-facing rendering only.
 
 use crate::config::StreamDef;
 use crate::error::{Error, Result};
 use crate::event::{codec, Event};
-use crate::mlog::{BrokerRef, Consumer, Producer};
+use crate::mlog::{BatchEntry, BrokerRef, Consumer, Payload, Producer};
+use crate::util::hash;
 use crate::util::hash::FxHashMap;
 use crate::util::json::Json;
 use crate::util::varint;
@@ -83,7 +98,89 @@ pub struct ReplyMsg {
 }
 
 impl ReplyMsg {
-    /// JSON encoding (replies are client-facing).
+    /// Append the varint binary encoding (the on-wire reply format; the
+    /// same codec family the event envelopes use).
+    pub fn encode_into(&self, out: &mut Vec<u8>) {
+        varint::write_u64(out, self.ingest_id);
+        varint::write_str(out, &self.topic);
+        varint::write_u32(out, self.partition);
+        varint::write_i64(out, self.event_ts);
+        varint::write_u64(out, self.metrics.len() as u64);
+        for m in &self.metrics {
+            varint::write_str(out, &m.name);
+            varint::write_str(out, &m.group);
+            match m.value {
+                Some(v) => {
+                    out.push(1);
+                    out.extend_from_slice(&v.to_bits().to_le_bytes());
+                }
+                None => out.push(0),
+            }
+        }
+    }
+
+    /// Decode one message from `buf` at `*pos`, advancing `*pos`.
+    pub fn decode_from(buf: &[u8], pos: &mut usize) -> Result<ReplyMsg> {
+        let ingest_id = varint::read_u64(buf, pos)?;
+        let topic = varint::read_str(buf, pos)?.to_string();
+        let partition = varint::read_u32(buf, pos)?;
+        let event_ts = varint::read_i64(buf, pos)?;
+        let n = varint::read_u64(buf, pos)? as usize;
+        let mut metrics = Vec::with_capacity(n.min(1024));
+        for _ in 0..n {
+            let name = varint::read_str(buf, pos)?.to_string();
+            let group = varint::read_str(buf, pos)?.to_string();
+            let present = *buf
+                .get(*pos)
+                .ok_or_else(|| Error::corrupt("reply: truncated value marker"))?;
+            *pos += 1;
+            let value = match present {
+                0 => None,
+                1 => {
+                    let end = *pos + 8;
+                    let bytes = buf
+                        .get(*pos..end)
+                        .ok_or_else(|| Error::corrupt("reply: truncated f64"))?;
+                    *pos = end;
+                    Some(f64::from_bits(u64::from_le_bytes(
+                        bytes.try_into().expect("8-byte slice"),
+                    )))
+                }
+                t => return Err(Error::corrupt(format!("reply: bad value marker {t}"))),
+            };
+            metrics.push(ReplyMetric { name, group, value });
+        }
+        Ok(ReplyMsg {
+            ingest_id,
+            topic,
+            partition,
+            event_ts,
+            metrics,
+        })
+    }
+
+    /// Encode a batch of replies as one reply-topic record payload
+    /// (messages are simply concatenated; the codec is self-delimiting).
+    pub fn encode_batch(msgs: &[ReplyMsg]) -> Vec<u8> {
+        let mut out = Vec::with_capacity(64 * msgs.len());
+        for m in msgs {
+            m.encode_into(&mut out);
+        }
+        out
+    }
+
+    /// Decode every message of a reply-topic record payload.
+    pub fn decode_batch(buf: &[u8]) -> Result<Vec<ReplyMsg>> {
+        let mut out = Vec::new();
+        let mut pos = 0;
+        while pos < buf.len() {
+            out.push(ReplyMsg::decode_from(buf, &mut pos)?);
+        }
+        Ok(out)
+    }
+
+    /// JSON rendering (client-facing output only — the wire format is
+    /// [`ReplyMsg::encode_batch`]).
     pub fn to_json(&self) -> Json {
         Json::obj([
             ("ingest_id", Json::Int(self.ingest_id as i64)),
@@ -113,50 +210,6 @@ impl ReplyMsg {
             ),
         ])
     }
-
-    /// Parse from JSON.
-    pub fn from_json(json: &Json) -> Result<ReplyMsg> {
-        let get = |k: &str| {
-            json.get(k)
-                .ok_or_else(|| Error::corrupt(format!("reply: missing '{k}'")))
-        };
-        let metrics = get("metrics")?
-            .as_arr()
-            .ok_or_else(|| Error::corrupt("reply: 'metrics' not array"))?
-            .iter()
-            .map(|m| {
-                Ok(ReplyMetric {
-                    name: m
-                        .get("name")
-                        .and_then(|j| j.as_str())
-                        .ok_or_else(|| Error::corrupt("reply metric: missing name"))?
-                        .to_string(),
-                    group: m
-                        .get("group")
-                        .and_then(|j| j.as_str())
-                        .unwrap_or_default()
-                        .to_string(),
-                    value: m.get("value").and_then(|j| j.as_f64()),
-                })
-            })
-            .collect::<Result<Vec<_>>>()?;
-        Ok(ReplyMsg {
-            ingest_id: get("ingest_id")?
-                .as_i64()
-                .ok_or_else(|| Error::corrupt("reply: bad ingest_id"))? as u64,
-            topic: get("topic")?
-                .as_str()
-                .ok_or_else(|| Error::corrupt("reply: bad topic"))?
-                .to_string(),
-            partition: get("partition")?
-                .as_i64()
-                .ok_or_else(|| Error::corrupt("reply: bad partition"))? as u32,
-            event_ts: get("event_ts")?
-                .as_i64()
-                .ok_or_else(|| Error::corrupt("reply: bad event_ts"))?,
-            metrics,
-        })
-    }
 }
 
 /// Receipt for an ingested event.
@@ -174,6 +227,8 @@ pub struct FrontEnd {
     producer: Producer,
     registry: Registry,
     partitions_per_topic: u32,
+    /// Max records per producer append batch (config `ingest_batch`).
+    ingest_batch: usize,
     next_ingest_id: AtomicU64,
 }
 
@@ -194,8 +249,16 @@ impl FrontEnd {
             producer,
             registry,
             partitions_per_topic,
+            ingest_batch: 256,
             next_ingest_id: AtomicU64::new(seed),
         }
+    }
+
+    /// Cap the number of records per producer append batch (the engine
+    /// config's `ingest_batch` knob; values below 1 are clamped to 1).
+    pub fn with_ingest_batch(mut self, ingest_batch: usize) -> FrontEnd {
+        self.ingest_batch = ingest_batch.max(1);
+        self
     }
 
     /// Register a stream: validates the definition, creates one
@@ -245,27 +308,95 @@ impl FrontEnd {
 
     /// Ingest one event: validate, replicate to every entity topic
     /// (hashed by that entity's value), return the receipt (step 2 of
-    /// Figure 2).
+    /// Figure 2). Literally the single-event case of
+    /// [`FrontEnd::ingest_batch`] — one routing implementation, so the
+    /// per-event and batched paths can never drift.
     pub fn ingest(&self, stream: &str, event: Event) -> Result<IngestReceipt> {
+        let receipts = self.ingest_batch(stream, vec![event])?;
+        Ok(*receipts.first().expect("one event in, one receipt out"))
+    }
+
+    /// Ingest a batch of events in one pass (the batch-first hot path):
+    /// every envelope is validated and encoded **once**, replicas share
+    /// the payload bytes across entity topics, and the records are
+    /// grouped by (topic, partition) so each partition sees **one**
+    /// append (at most `ingest_batch` records each) instead of one per
+    /// event.
+    ///
+    /// Semantically identical to calling [`FrontEnd::ingest`] per event —
+    /// per-partition record order follows the input order, and the
+    /// back-end still evaluates every window at every event timestamp —
+    /// it only amortizes locking, allocation and encoding.
+    ///
+    /// Failure semantics: publication is not atomic across partitions
+    /// (exactly like the messaging layer it sits on). Groups are
+    /// appended in deterministic (entity, partition) order; if an append
+    /// errors, the whole batch must be treated as indeterminate — a
+    /// prefix of the groups may already be durable, and retrying
+    /// re-publishes those events under fresh ingest ids. The per-event
+    /// path bounds the same non-atomicity to one event's entity fanout.
+    /// (An idempotent-producer dedup layer is a ROADMAP follow-up.)
+    pub fn ingest_batch(&self, stream: &str, events: Vec<Event>) -> Result<Vec<IngestReceipt>> {
         let def = self.stream(stream)?;
-        def.schema.validate(&event)?;
-        let ingest_id = self.next_ingest_id.fetch_add(1, Ordering::Relaxed);
-        let env = Envelope { ingest_id, event };
-        let payload = env.encode(&def.schema);
-        let mut fanout = 0u32;
-        for entity in &def.entities {
-            let idx = def.schema.index_of(entity).expect("validated");
-            let mut key = Vec::with_capacity(24);
-            env.event.value(idx).key_bytes(&mut key);
-            self.producer.send_keyed(
-                &def.topic_for(entity),
-                &key,
-                env.event.timestamp,
-                payload.clone(),
-            )?;
-            fanout += 1;
+        if events.is_empty() {
+            return Ok(Vec::new());
         }
-        Ok(IngestReceipt { ingest_id, fanout })
+        for event in &events {
+            def.schema.validate(event)?;
+        }
+        let first_id = self
+            .next_ingest_id
+            .fetch_add(events.len() as u64, Ordering::Relaxed);
+        let fanout = def.entities.len() as u32;
+        let entity_idxs: Vec<usize> = def
+            .entities
+            .iter()
+            .map(|e| def.schema.index_of(e).expect("validated"))
+            .collect();
+        let topics = def.topics();
+        let partition_counts: Vec<u32> = topics
+            .iter()
+            .map(|t| {
+                self.broker
+                    .partition_count(t)
+                    .ok_or_else(|| Error::not_found(format!("topic '{t}'")))
+            })
+            .collect::<Result<_>>()?;
+        // group replicas by (entity, partition), preserving input order
+        let mut groups: FxHashMap<(usize, u32), Vec<BatchEntry>> = FxHashMap::default();
+        let mut receipts = Vec::with_capacity(events.len());
+        for (i, event) in events.into_iter().enumerate() {
+            let ingest_id = first_id + i as u64;
+            let env = Envelope { ingest_id, event };
+            let payload: Payload = env.encode(&def.schema).into();
+            for (e_idx, &field_idx) in entity_idxs.iter().enumerate() {
+                let mut key = Vec::with_capacity(24);
+                env.event.value(field_idx).key_bytes(&mut key);
+                let partition = hash::partition_for(hash::hash64(&key), partition_counts[e_idx]);
+                groups.entry((e_idx, partition)).or_default().push(BatchEntry {
+                    timestamp: env.event.timestamp,
+                    key,
+                    payload: payload.clone(),
+                });
+            }
+            receipts.push(IngestReceipt { ingest_id, fanout });
+        }
+        // one producer append per (topic, partition), capped at
+        // `ingest_batch` records per call; deterministic group order so a
+        // mid-batch failure leaves a *prefix* of this ordering durable
+        let mut groups: Vec<((usize, u32), Vec<BatchEntry>)> = groups.into_iter().collect();
+        groups.sort_by_key(|(k, _)| *k);
+        for ((e_idx, partition), entries) in groups {
+            let topic = &topics[e_idx];
+            let mut rest = entries;
+            while rest.len() > self.ingest_batch {
+                let tail = rest.split_off(self.ingest_batch);
+                self.producer.send_batch(topic, partition, rest)?;
+                rest = tail;
+            }
+            self.producer.send_batch(topic, partition, rest)?;
+        }
+        Ok(receipts)
     }
 
     /// Ingest from client JSON.
@@ -303,15 +434,17 @@ pub struct ReplyCollector {
 }
 
 impl ReplyCollector {
-    /// Drain available replies into the pending map.
+    /// Drain available replies into the pending map. Each reply record
+    /// may carry a whole batch of messages; returns the number of
+    /// messages absorbed.
     pub fn pump(&mut self, timeout: Duration) -> Result<usize> {
         let polled = self.consumer.poll(1024, timeout)?;
-        let n = polled.records.len();
+        let mut n = 0;
         for (_, rec) in polled.records {
-            let text = std::str::from_utf8(&rec.payload)
-                .map_err(|e| Error::corrupt(format!("reply: {e}")))?;
-            let msg = ReplyMsg::from_json(&Json::parse(text)?)?;
-            self.pending.entry(msg.ingest_id).or_default().push(msg);
+            for msg in ReplyMsg::decode_batch(&rec.payload)? {
+                self.pending.entry(msg.ingest_id).or_default().push(msg);
+                n += 1;
+            }
         }
         Ok(n)
     }
@@ -419,10 +552,9 @@ mod tests {
         assert!(Envelope::decode(&buf[..buf.len() - 1], &schema).is_err());
     }
 
-    #[test]
-    fn reply_json_roundtrip() {
-        let msg = ReplyMsg {
-            ingest_id: 7,
+    fn reply_msg(ingest_id: u64) -> ReplyMsg {
+        ReplyMsg {
+            ingest_id,
             topic: "payments.card".into(),
             partition: 3,
             event_ts: 123,
@@ -438,9 +570,28 @@ mod tests {
                     value: None,
                 },
             ],
-        };
-        let back = ReplyMsg::from_json(&Json::parse(&msg.to_json().to_string()).unwrap()).unwrap();
-        assert_eq!(back, msg);
+        }
+    }
+
+    #[test]
+    fn reply_binary_roundtrip() {
+        let msgs = vec![reply_msg(7), reply_msg(8), reply_msg(9)];
+        let buf = ReplyMsg::encode_batch(&msgs);
+        assert_eq!(ReplyMsg::decode_batch(&buf).unwrap(), msgs);
+        // truncation anywhere inside the last message is detected
+        assert!(ReplyMsg::decode_batch(&buf[..buf.len() - 1]).is_err());
+        assert!(ReplyMsg::decode_batch(&[]).unwrap().is_empty());
+    }
+
+    #[test]
+    fn reply_json_rendering() {
+        let json = reply_msg(7).to_json().to_string();
+        let parsed = Json::parse(&json).unwrap();
+        assert_eq!(parsed.get("ingest_id").and_then(|j| j.as_i64()), Some(7));
+        assert_eq!(
+            parsed.get("metrics").and_then(|j| j.as_arr()).map(|a| a.len()),
+            Some(2)
+        );
     }
 
     #[test]
@@ -507,27 +658,111 @@ mod tests {
     }
 
     #[test]
+    fn ingest_batch_matches_per_event_routing() {
+        // the same events through ingest() and ingest_batch() must land
+        // in the same partitions, in the same per-partition order, with
+        // identical envelope payload bytes
+        let events: Vec<Event> = (0..40)
+            .map(|i| ev(i, &format!("c{}", i % 5), &format!("m{}", i % 3), i as f64))
+            .collect();
+        let drain = |broker: &crate::mlog::BrokerRef| {
+            let mut out: Vec<(String, u32, Vec<u8>)> = Vec::new();
+            for topic in ["payments.card", "payments.merchant"] {
+                let mut c = broker.consumer(&format!("drain-{topic}"), &[topic]).unwrap();
+                loop {
+                    let p = c.poll(1000, Duration::from_millis(10)).unwrap();
+                    if p.records.is_empty() && p.rebalanced.is_none() {
+                        break;
+                    }
+                    for (tp, rec) in p.records {
+                        // strip the ingest-id prefix: ids differ per front-end
+                        let mut pos = 0;
+                        varint::read_u64(&rec.payload, &mut pos).unwrap();
+                        out.push((tp.topic, tp.partition, rec.payload[pos..].to_vec()));
+                    }
+                }
+            }
+            out
+        };
+
+        let broker_a = Broker::open(BrokerConfig::in_memory()).unwrap();
+        let fe_a = FrontEnd::new(broker_a.clone(), registry(), 4);
+        fe_a.register_stream(def()).unwrap();
+        for e in &events {
+            fe_a.ingest("payments", e.clone()).unwrap();
+        }
+
+        let broker_b = Broker::open(BrokerConfig::in_memory()).unwrap();
+        // tiny ingest_batch cap to exercise the chunked append path
+        let fe_b = FrontEnd::new(broker_b.clone(), registry(), 4).with_ingest_batch(7);
+        fe_b.register_stream(def()).unwrap();
+        let receipts = fe_b.ingest_batch("payments", events.clone()).unwrap();
+        assert_eq!(receipts.len(), events.len());
+        for w in receipts.windows(2) {
+            assert_eq!(w[1].ingest_id, w[0].ingest_id + 1);
+        }
+        assert!(receipts.iter().all(|r| r.fanout == 2));
+
+        assert_eq!(drain(&broker_a), drain(&broker_b));
+        assert!(fe_b.ingest_batch("payments", Vec::new()).unwrap().is_empty());
+    }
+
+    #[test]
+    fn ingest_batch_validates_all_events_upfront() {
+        let broker = Broker::open(BrokerConfig::in_memory()).unwrap();
+        let fe = FrontEnd::new(broker.clone(), registry(), 2);
+        fe.register_stream(def()).unwrap();
+        let bad = vec![ev(1, "c1", "m1", 5.0), Event::new(0, vec![Value::I64(1)])];
+        assert!(fe.ingest_batch("payments", bad).is_err());
+        // nothing was published: the batch is validated before routing
+        let mut c = broker.consumer("g", &["payments.card"]).unwrap();
+        let p = c.poll(10, Duration::from_millis(10)).unwrap();
+        assert!(p.records.is_empty());
+    }
+
+    #[test]
     fn reply_collector_assembles() {
         let broker = Broker::open(BrokerConfig::in_memory()).unwrap();
         let fe = FrontEnd::new(broker.clone(), registry(), 2);
         fe.register_stream(def()).unwrap();
         let mut rc = fe.reply_collector("collector").unwrap();
-        // simulate two task processors replying for ingest 5
+        // simulate two task processors replying for ingest 5; one of them
+        // batches its reply with a message for ingest 6
         let producer = broker.producer();
-        for (topic, p) in [("payments.card", 0u32), ("payments.merchant", 1u32)] {
-            let msg = ReplyMsg {
+        let batches: [Vec<ReplyMsg>; 2] = [
+            vec![ReplyMsg {
                 ingest_id: 5,
-                topic: topic.into(),
-                partition: p,
+                topic: "payments.card".into(),
+                partition: 0,
                 event_ts: 1,
                 metrics: vec![],
-            };
+            }],
+            vec![
+                ReplyMsg {
+                    ingest_id: 5,
+                    topic: "payments.merchant".into(),
+                    partition: 1,
+                    event_ts: 1,
+                    metrics: vec![],
+                },
+                ReplyMsg {
+                    ingest_id: 6,
+                    topic: "payments.merchant".into(),
+                    partition: 1,
+                    event_ts: 2,
+                    metrics: vec![],
+                },
+            ],
+        ];
+        for batch in &batches {
             producer
-                .send(REPLY_TOPIC, 0, 1, vec![], msg.to_json().to_string().into_bytes())
+                .send(REPLY_TOPIC, 0, 1, vec![], ReplyMsg::encode_batch(batch))
                 .unwrap();
         }
         let replies = rc.await_event(5, 2, Duration::from_secs(5)).unwrap();
         assert_eq!(replies.len(), 2);
+        let replies = rc.await_event(6, 1, Duration::from_secs(5)).unwrap();
+        assert_eq!(replies.len(), 1);
         assert_eq!(rc.pending_events(), 0);
         // timeout on missing event
         assert!(rc.await_event(99, 1, Duration::from_millis(30)).is_err());

@@ -26,7 +26,8 @@
 //!
 //! The [`runtime`] module loads the AOT artifacts through PJRT (`xla`
 //! crate) and executes them from the rust hot path; python never runs at
-//! request time.
+//! request time. The PJRT layer is behind the non-default `pjrt` cargo
+//! feature — the default build is pure Rust.
 //!
 //! ## Quickstart
 //!

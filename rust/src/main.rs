@@ -92,6 +92,15 @@ fn cmd_serve(args: &[String]) -> Result<()> {
     Ok(())
 }
 
+#[cfg(not(feature = "pjrt"))]
+fn cmd_check_artifacts() -> Result<()> {
+    Err(railgun::Error::invalid(
+        "this binary was built without the `pjrt` feature; \
+         rebuild with `--features pjrt` (requires the `xla` crate)",
+    ))
+}
+
+#[cfg(feature = "pjrt")]
 fn cmd_check_artifacts() -> Result<()> {
     use railgun::runtime::{
         artifacts_available, artifacts_dir, FraudScorer, Runtime, VectorizedAgg,

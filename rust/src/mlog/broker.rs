@@ -349,7 +349,7 @@ mod tests {
         assert_eq!(b.end_offset(&tp).unwrap(), 10);
         // appends continue after recovery
         let p = b.producer();
-        let off = p.send("payments", 0, 99, vec![], vec![]).unwrap();
+        let off = p.send("payments", 0, 99, vec![], Vec::<u8>::new()).unwrap();
         assert_eq!(off, 10);
     }
 

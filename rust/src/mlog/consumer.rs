@@ -3,7 +3,8 @@
 use crate::error::Result;
 use crate::mlog::broker::BrokerRef;
 use crate::mlog::group::MemberId;
-use crate::mlog::segment::Record;
+use crate::mlog::partition::BatchEntry;
+use crate::mlog::segment::{Payload, Record};
 use crate::mlog::TopicPartition;
 use crate::util::hash;
 use std::collections::HashMap;
@@ -27,12 +28,27 @@ impl Producer {
         partition: u32,
         timestamp: i64,
         key: Vec<u8>,
-        payload: Vec<u8>,
+        payload: impl Into<Payload>,
     ) -> Result<u64> {
         let p = self.broker.partition(topic, partition)?;
         let off = p.append(timestamp, key, payload)?;
         self.broker.notify_data();
         Ok(off)
+    }
+
+    /// Append a batch to an explicit partition: one partition-lock
+    /// acquisition and one consumer wake-up for the whole batch. Returns
+    /// the offset of the first record (offsets are contiguous).
+    pub fn send_batch(
+        &self,
+        topic: &str,
+        partition: u32,
+        entries: Vec<BatchEntry>,
+    ) -> Result<u64> {
+        let p = self.broker.partition(topic, partition)?;
+        let base = p.append_batch(entries)?;
+        self.broker.notify_data();
+        Ok(base)
     }
 
     /// Append routed by key hash (stable across runs — see
@@ -42,14 +58,21 @@ impl Producer {
         topic: &str,
         key: &[u8],
         timestamp: i64,
-        payload: Vec<u8>,
+        payload: impl Into<Payload>,
     ) -> Result<u64> {
+        let partition = self.partition_for_key(topic, key)?;
+        self.send(topic, partition, timestamp, key.to_vec(), payload)
+    }
+
+    /// Partition a key routes to (the producer-side hash used by
+    /// [`Self::send_keyed`], exposed so batching callers can group
+    /// entries per partition before one [`Self::send_batch`] each).
+    pub fn partition_for_key(&self, topic: &str, key: &[u8]) -> Result<u32> {
         let n = self
             .broker
             .partition_count(topic)
             .ok_or_else(|| crate::error::Error::not_found(format!("topic '{topic}'")))?;
-        let partition = hash::partition_for(hash::hash64(key), n);
-        self.send(topic, partition, timestamp, key.to_vec(), payload)
+        Ok(hash::partition_for(hash::hash64(key), n))
     }
 }
 

@@ -20,6 +20,13 @@
 //! in-memory tail keeps polling off the disk. Retention truncates the
 //! in-memory tail only — segments stay for replay until pruned.
 //!
+//! The data plane is **batch-first**: producers can hand a whole
+//! [`BatchEntry`] batch to one partition ([`Producer::send_batch`] /
+//! [`Partition::append_batch`]), paying the partition lock, tail
+//! bookkeeping and consumer wake-up once per batch. Record payloads are
+//! `Arc<[u8]>` ([`Payload`]) so the front-end's per-entity replicas share
+//! one encoded buffer.
+//!
 //! ```
 //! use railgun::mlog::{Broker, BrokerConfig};
 //! let broker = Broker::open(BrokerConfig::in_memory()).unwrap();
@@ -40,8 +47,8 @@ mod segment;
 pub use broker::{Broker, BrokerConfig, BrokerRef, FsyncPolicy};
 pub use consumer::{Consumer, PollResult, Producer};
 pub use group::MemberId;
-pub use partition::{Partition, PartitionId};
-pub use segment::Record;
+pub use partition::{BatchEntry, Partition, PartitionId};
+pub use segment::{Payload, Record};
 
 /// A (topic, partition) coordinate.
 #[derive(Debug, Clone, PartialEq, Eq, Hash, PartialOrd, Ord)]

@@ -2,7 +2,7 @@
 //! and optional on-disk segments.
 
 use crate::error::Result;
-use crate::mlog::segment::{self, Record, SegmentWriter};
+use crate::mlog::segment::{self, Payload, Record, SegmentWriter};
 use std::collections::VecDeque;
 use std::path::PathBuf;
 use std::sync::{Condvar, Mutex};
@@ -10,6 +10,18 @@ use std::time::Duration;
 
 /// Partition index within a topic.
 pub type PartitionId = u32;
+
+/// One record-to-be, pre-assembled by a producer for a batched append.
+/// Offsets are assigned by the partition at append time.
+#[derive(Debug, Clone)]
+pub struct BatchEntry {
+    /// Producer-supplied timestamp (epoch ms).
+    pub timestamp: i64,
+    /// Routing key bytes (may be empty).
+    pub key: Vec<u8>,
+    /// Payload bytes (shareable across entity-topic replicas).
+    pub payload: Payload,
+}
 
 /// Durability policy for appended records.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -128,31 +140,58 @@ impl Partition {
     }
 
     /// Append a record; returns its assigned offset.
-    pub fn append(&self, timestamp: i64, key: Vec<u8>, payload: Vec<u8>) -> Result<u64> {
-        let mut inner = self.inner.lock().unwrap();
-        let offset = inner.next_offset;
-        let record = Record {
-            offset,
+    pub fn append(
+        &self,
+        timestamp: i64,
+        key: Vec<u8>,
+        payload: impl Into<Payload>,
+    ) -> Result<u64> {
+        self.append_batch(vec![BatchEntry {
             timestamp,
             key,
-            payload,
-        };
-        if inner.writer.is_some() {
-            self.write_durable(&mut inner, &record)?;
+            payload: payload.into(),
+        }])
+    }
+
+    /// Append a batch of records under **one** lock acquisition; returns
+    /// the offset assigned to the first entry (offsets are contiguous).
+    ///
+    /// This is the partition half of the batch-first data plane: the
+    /// mutex, tail bookkeeping, retention pass and consumer notification
+    /// are paid once per batch instead of once per record.
+    pub fn append_batch(&self, entries: Vec<BatchEntry>) -> Result<u64> {
+        let mut inner = self.inner.lock().unwrap();
+        let base = inner.next_offset;
+        if entries.is_empty() {
+            return Ok(base);
         }
-        if inner.tail.is_empty() {
-            inner.tail_base = offset;
+        for (i, entry) in entries.into_iter().enumerate() {
+            let record = Record {
+                offset: base + i as u64,
+                timestamp: entry.timestamp,
+                key: entry.key,
+                payload: entry.payload,
+            };
+            if inner.writer.is_some() {
+                self.write_durable(&mut inner, &record)?;
+            }
+            if inner.tail.is_empty() {
+                inner.tail_base = record.offset;
+            }
+            // keep next_offset in step with the tail so an I/O error
+            // mid-batch leaves the log consistent (appended prefix kept)
+            inner.next_offset = record.offset + 1;
+            inner.tail.push_back(record);
         }
-        inner.tail.push_back(record);
-        inner.next_offset = offset + 1;
         // retention: drop oldest in-memory records (segments keep them)
         if inner.tail.len() > self.retention_records {
-            inner.tail.pop_front();
-            inner.tail_base += 1;
+            let drop_n = inner.tail.len() - self.retention_records;
+            inner.tail.drain(..drop_n);
+            inner.tail_base += drop_n as u64;
         }
         drop(inner);
         self.appended.notify_all();
-        Ok(offset)
+        Ok(base)
     }
 
     fn write_durable(&self, inner: &mut PartitionInner, record: &Record) -> Result<()> {
@@ -291,6 +330,63 @@ mod tests {
     }
 
     #[test]
+    fn append_batch_assigns_contiguous_offsets() {
+        let p = mem_partition(1000);
+        let entries: Vec<BatchEntry> = (0..10u64)
+            .map(|i| BatchEntry {
+                timestamp: i as i64,
+                key: vec![],
+                payload: vec![i as u8].into(),
+            })
+            .collect();
+        assert_eq!(p.append_batch(entries).unwrap(), 0);
+        assert_eq!(p.append(99, vec![], vec![42u8]).unwrap(), 10);
+        assert_eq!(p.append_batch(Vec::new()).unwrap(), 11, "empty batch is a no-op");
+        let recs = p.fetch(0, 100).unwrap();
+        assert_eq!(recs.len(), 11);
+        for (i, r) in recs.iter().enumerate() {
+            assert_eq!(r.offset, i as u64);
+        }
+        assert_eq!(&recs[3].payload[..], &[3u8]);
+    }
+
+    #[test]
+    fn append_batch_honours_retention() {
+        let p = mem_partition(10);
+        let entries: Vec<BatchEntry> = (0..100u64)
+            .map(|i| BatchEntry {
+                timestamp: i as i64,
+                key: vec![],
+                payload: Payload::from(&[][..]),
+            })
+            .collect();
+        p.append_batch(entries).unwrap();
+        assert_eq!(p.tail_base(), 90);
+        assert_eq!(p.fetch(95, 100).unwrap().len(), 5);
+    }
+
+    #[test]
+    fn append_batch_is_durable() {
+        let tmp = TempDir::new("part_batch_durable");
+        let dir = tmp.path().to_path_buf();
+        {
+            let p = Partition::create(0, Some(dir.clone()), 1 << 12, 1000, FsyncPolicy::Always)
+                .unwrap();
+            let entries: Vec<BatchEntry> = (0..30u64)
+                .map(|i| BatchEntry {
+                    timestamp: i as i64,
+                    key: vec![],
+                    payload: vec![i as u8].into(),
+                })
+                .collect();
+            p.append_batch(entries).unwrap();
+        }
+        let p = Partition::recover(0, dir, 1 << 12, 1000, FsyncPolicy::Never).unwrap();
+        assert_eq!(p.end_offset(), 30);
+        assert_eq!(p.fetch(0, 100).unwrap().len(), 30);
+    }
+
+    #[test]
     fn fetch_from_offset() {
         let p = mem_partition(1000);
         for i in 0..50u64 {
@@ -308,7 +404,7 @@ mod tests {
     fn retention_truncates_memory() {
         let p = mem_partition(10);
         for i in 0..100u64 {
-            p.append(i as i64, vec![], vec![]).unwrap();
+            p.append(i as i64, vec![], Payload::from(&[][..])).unwrap();
         }
         assert_eq!(p.tail_base(), 90);
         let recs = p.fetch(95, 100).unwrap();
@@ -335,7 +431,7 @@ mod tests {
         let recs = p.fetch(0, 5).unwrap();
         assert_eq!(recs.len(), 5);
         assert_eq!(recs[0].offset, 0);
-        assert_eq!(recs[0].payload, b"payload_0");
+        assert_eq!(&recs[0].payload[..], b"payload_0");
         // and fetching the tail still works
         let recs = p.fetch(195, 10).unwrap();
         assert_eq!(recs.len(), 5);
@@ -357,7 +453,7 @@ mod tests {
         let recs = p.fetch(0, 100).unwrap();
         assert_eq!(recs.len(), 30);
         // appends continue from the recovered offset
-        let off = p.append(99, vec![], vec![]).unwrap();
+        let off = p.append(99, vec![], Payload::from(&[][..])).unwrap();
         assert_eq!(off, 30);
     }
 
@@ -368,7 +464,7 @@ mod tests {
         let p2 = p.clone();
         let t = std::thread::spawn(move || {
             std::thread::sleep(Duration::from_millis(30));
-            p2.append(1, vec![], vec![]).unwrap();
+            p2.append(1, vec![], Payload::from(&[][..])).unwrap();
         });
         assert!(p.wait_for_data(0, Duration::from_secs(5)));
         t.join().unwrap();

@@ -17,6 +17,16 @@ use byteorder::{ByteOrder, LittleEndian};
 use std::fs::{File, OpenOptions};
 use std::io::{BufWriter, Read, Write};
 use std::path::{Path, PathBuf};
+use std::sync::Arc;
+
+/// Record payload bytes, cheaply shareable.
+///
+/// The front-end replicates one encoded event to every entity topic of
+/// its stream; an `Arc<[u8]>` lets all replicas (and the in-memory tail
+/// copies handed to consumers) share one allocation instead of cloning
+/// the bytes per topic (the per-entity `payload.clone()` the batch-first
+/// refactor removed).
+pub type Payload = Arc<[u8]>;
 
 /// A single message in a partition log.
 #[derive(Debug, Clone, PartialEq)]
@@ -27,8 +37,8 @@ pub struct Record {
     pub timestamp: i64,
     /// Routing key bytes (may be empty).
     pub key: Vec<u8>,
-    /// Opaque payload.
-    pub payload: Vec<u8>,
+    /// Opaque payload (shared, immutable).
+    pub payload: Payload,
 }
 
 impl Record {
@@ -44,7 +54,7 @@ impl Record {
         let offset = varint::read_u64(body, &mut pos)?;
         let timestamp = varint::read_i64(body, &mut pos)?;
         let key = varint::read_bytes(body, &mut pos)?.to_vec();
-        let payload = body[pos..].to_vec();
+        let payload = Payload::from(&body[pos..]);
         Ok(Record {
             offset,
             timestamp,
@@ -193,7 +203,7 @@ mod tests {
             offset,
             timestamp: 1000 + offset as i64,
             key: format!("k{offset}").into_bytes(),
-            payload: payload.to_vec(),
+            payload: payload.into(),
         }
     }
 
@@ -286,7 +296,7 @@ mod tests {
             offset: 0,
             timestamp: -5,
             key: vec![],
-            payload: vec![],
+            payload: Payload::from(&[][..]),
         };
         w.append(&r).unwrap();
         w.sync().unwrap();

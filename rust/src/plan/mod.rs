@@ -16,6 +16,12 @@
 //! zero-delay sliding windows share one tail iterator at offset 0,
 //! reproducing the paper's Figure 3 sharing rule; misaligned windows
 //! (Figure 6 bottom) cannot share.
+//!
+//! The batch-first data plane drives the DAG through
+//! [`Plan::advance_batch`]: one call evaluates a whole batch of event
+//! timestamps, still **once per event** (accuracy is non-negotiable),
+//! while iterator positions carry over between evaluations and
+//! state-store write-throughs are coalesced across the batch.
 
 pub mod expr;
 mod statestore;
@@ -360,6 +366,50 @@ impl Plan {
         }
         self.last_t_eval = t_eval;
         Ok(replies)
+    }
+
+    /// Advance evaluation time through a whole batch of per-event
+    /// timestamps, pushing the replies of each evaluation into
+    /// `replies_out` (aligned with `t_evals`).
+    ///
+    /// **Every window is still evaluated at every event timestamp** —
+    /// batching changes none of the paper's per-event accuracy semantics.
+    /// What it amortizes: the iterator bundles keep their positions
+    /// between consecutive evaluations (no re-seek), and state-store
+    /// write-throughs are deferred and coalesced so a group touched by
+    /// many events in the batch is persisted once
+    /// ([`StateStore::begin_deferred`]).
+    ///
+    /// On error, `replies_out` holds the replies of the successfully
+    /// evaluated prefix (so callers can still publish them), and the
+    /// coalesced state writes of that prefix are flushed.
+    ///
+    /// `t_evals` must be monotonically non-decreasing (callers clamp
+    /// event-time jitter, as the single-event path does).
+    pub fn advance_batch(
+        &mut self,
+        t_evals: &[TimestampMs],
+        replies_out: &mut Vec<Vec<MetricReply>>,
+    ) -> Result<()> {
+        replies_out.reserve(t_evals.len());
+        self.state.begin_deferred();
+        let mut failed: Option<Error> = None;
+        for &t_eval in t_evals {
+            match self.advance(t_eval) {
+                Ok(replies) => replies_out.push(replies),
+                Err(e) => {
+                    failed = Some(e);
+                    break;
+                }
+            }
+        }
+        // flush coalesced writes even on failure: the kvstore must not
+        // lag the cache for states already mutated by this batch
+        let flushed = self.state.end_deferred();
+        if let Some(e) = failed {
+            return Err(e);
+        }
+        flushed
     }
 
     /// Add a metric at runtime and **backfill** its state from the

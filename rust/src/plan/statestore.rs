@@ -7,11 +7,19 @@
 //! The cache is sized in entries; eviction drops the in-memory copy only
 //! (the kvstore holds the durable truth), which bounds memory even with
 //! unbounded group-by cardinality.
+//!
+//! **Deferred mode** ([`StateStore::begin_deferred`] /
+//! [`StateStore::end_deferred`]) coalesces write-throughs across a batch
+//! of events: updates only mark their key dirty, and the batch end
+//! persists each dirty state **once** — a group touched by many events
+//! of a batch pays one kvstore write instead of one per event. Eviction
+//! of a dirty entry persists it first, so the kvstore never lags the
+//! cache for states that leave memory.
 
 use crate::agg::AggState;
 use crate::error::Result;
 use crate::kvstore::Store;
-use crate::util::hash::FxHashMap;
+use crate::util::hash::{FxHashMap, FxHashSet};
 use crate::util::varint;
 use std::collections::VecDeque;
 use std::sync::Arc;
@@ -27,6 +35,10 @@ pub struct StateStore {
     pub kv_reads: u64,
     /// Write-throughs to the kvstore.
     pub kv_writes: u64,
+    /// When set, updates mark keys dirty instead of writing through.
+    deferred: bool,
+    /// Keys updated since the deferral began.
+    dirty: FxHashSet<Vec<u8>>,
     scratch: Vec<u8>,
     key_scratch: Vec<u8>,
 }
@@ -41,9 +53,47 @@ impl StateStore {
             capacity: capacity.max(16),
             kv_reads: 0,
             kv_writes: 0,
+            deferred: false,
+            dirty: FxHashSet::default(),
             scratch: Vec::with_capacity(64),
             key_scratch: Vec::with_capacity(64),
         }
+    }
+
+    /// Enter deferred mode: subsequent [`StateStore::update`]s mark their
+    /// key dirty instead of writing through. Pair with
+    /// [`StateStore::end_deferred`].
+    pub fn begin_deferred(&mut self) {
+        self.deferred = true;
+    }
+
+    /// Leave deferred mode, persisting every dirty state once. A key is
+    /// un-marked only after its write succeeds, so a failed persist
+    /// leaves the remaining keys dirty — eviction still writes them out
+    /// and a later `end_deferred` retries them.
+    pub fn end_deferred(&mut self) -> Result<()> {
+        self.deferred = false;
+        let keys: Vec<Vec<u8>> = self.dirty.iter().cloned().collect();
+        for key in keys {
+            self.persist(&key)?;
+            self.dirty.remove(&key);
+        }
+        Ok(())
+    }
+
+    /// Write the cached state for `key` through to the kvstore (no-op if
+    /// the key is not cached — an evicted dirty key was persisted at
+    /// eviction time).
+    fn persist(&mut self, key: &[u8]) -> Result<()> {
+        if let Some(st) = self.cache.get(key) {
+            self.scratch.clear();
+            st.encode(&mut self.scratch);
+        } else {
+            return Ok(());
+        }
+        self.store.put(key, &self.scratch)?;
+        self.kv_writes += 1;
+        Ok(())
     }
 
     /// Compose the storage key for `(metric_id, group_key)`.
@@ -80,7 +130,7 @@ impl StateStore {
                 None => init(),
             };
             let key = self.key_scratch.clone();
-            self.insert_cached(key, loaded);
+            self.insert_cached(key, loaded)?;
         }
         let st = self
             .cache
@@ -88,11 +138,18 @@ impl StateStore {
             .expect("just inserted");
         f(st);
         let value = st.value();
-        // write-through
-        self.scratch.clear();
-        st.encode(&mut self.scratch);
-        self.store.put(&self.key_scratch, &self.scratch)?;
-        self.kv_writes += 1;
+        if self.deferred {
+            // coalesced write-through: persist once at end_deferred
+            if !self.dirty.contains(self.key_scratch.as_slice()) {
+                self.dirty.insert(self.key_scratch.clone());
+            }
+        } else {
+            // write-through
+            self.scratch.clear();
+            st.encode(&mut self.scratch);
+            self.store.put(&self.key_scratch, &self.scratch)?;
+            self.kv_writes += 1;
+        }
         Ok(value)
     }
 
@@ -108,7 +165,7 @@ impl StateStore {
                 let mut pos = 0;
                 let st = AggState::decode(&bytes, &mut pos)?;
                 let v = st.value();
-                self.insert_cached(key, st);
+                self.insert_cached(key, st)?;
                 Ok(v)
             }
             None => Ok(None),
@@ -123,6 +180,7 @@ impl StateStore {
             p
         };
         self.cache.retain(|k, _| !k.starts_with(&prefix));
+        self.dirty.retain(|k| !k.starts_with(&prefix));
         for (k, _) in self.store.scan_prefix(&prefix)? {
             self.store.delete(&k)?;
         }
@@ -139,17 +197,23 @@ impl StateStore {
         self.cache.len()
     }
 
-    fn insert_cached(&mut self, key: Vec<u8>, st: AggState) {
+    fn insert_cached(&mut self, key: Vec<u8>, st: AggState) -> Result<()> {
         self.cache.insert(key.clone(), st);
         self.order.push_back(key);
         while self.cache.len() > self.capacity {
             if let Some(old) = self.order.pop_front() {
-                // evicted entries were write-through persisted already
+                // deferred-dirty entries must hit the kvstore before the
+                // in-memory copy goes away; everything else was
+                // write-through persisted already
+                if self.dirty.remove(&old) {
+                    self.persist(&old)?;
+                }
                 self.cache.remove(&old);
             } else {
                 break;
             }
         }
+        Ok(())
     }
 }
 
@@ -257,6 +321,69 @@ mod tests {
         ss.clear_metric(1).unwrap();
         assert_eq!(ss.value(1, b"k").unwrap(), None);
         assert_eq!(ss.value(2, b"k").unwrap(), Some(1.0));
+    }
+
+    #[test]
+    fn deferred_mode_coalesces_writes() {
+        let (_tmp, mut ss) = setup(100);
+        ss.begin_deferred();
+        for i in 0..50u64 {
+            ss.update(1, b"hot_key", || AggState::new(AggKind::Sum), |st| {
+                st.add(i, 1.0, 0)
+            })
+            .unwrap();
+        }
+        assert_eq!(ss.kv_writes, 0, "writes deferred during the batch");
+        ss.end_deferred().unwrap();
+        assert_eq!(ss.kv_writes, 1, "one coalesced write for the hot key");
+        assert_eq!(ss.value(1, b"hot_key").unwrap(), Some(50.0));
+        // back in write-through mode
+        ss.update(1, b"hot_key", || AggState::new(AggKind::Sum), |st| {
+            st.add(50, 1.0, 0)
+        })
+        .unwrap();
+        assert_eq!(ss.kv_writes, 2);
+    }
+
+    #[test]
+    fn deferred_state_survives_reopen() {
+        let tmp = TempDir::new("statestore_deferred_reopen");
+        {
+            let store = Arc::new(Store::open(tmp.path(), StoreOptions::default()).unwrap());
+            let mut ss = StateStore::new(store, 100);
+            ss.begin_deferred();
+            ss.update(3, b"k", || AggState::new(AggKind::Sum), |st| {
+                st.add(0, 5.0, 0)
+            })
+            .unwrap();
+            ss.end_deferred().unwrap();
+            ss.flush().unwrap();
+        }
+        let store = Arc::new(Store::open(tmp.path(), StoreOptions::default()).unwrap());
+        let mut ss = StateStore::new(store, 100);
+        assert_eq!(ss.value(3, b"k").unwrap(), Some(5.0));
+    }
+
+    #[test]
+    fn deferred_dirty_entry_evicted_is_persisted() {
+        let (_tmp, mut ss) = setup(16); // min capacity
+        ss.begin_deferred();
+        ss.update(1, b"victim", || AggState::new(AggKind::Sum), |st| {
+            st.add(0, 7.0, 0)
+        })
+        .unwrap();
+        // push the victim out of the cache while still dirty
+        for i in 0..50u32 {
+            ss.update(
+                1,
+                format!("filler_{i}").as_bytes(),
+                || AggState::new(AggKind::Sum),
+                |st| st.add(0, 1.0, 0),
+            )
+            .unwrap();
+        }
+        ss.end_deferred().unwrap();
+        assert_eq!(ss.value(1, b"victim").unwrap(), Some(7.0));
     }
 
     #[test]

@@ -538,6 +538,69 @@ fn null_fields_are_excluded_from_field_aggs() {
 }
 
 #[test]
+fn advance_batch_equals_per_event_advance() {
+    // the same event stream through advance() and advance_batch() must
+    // produce identical replies and identical final state — batching is
+    // transport-only, never a semantics change
+    let mut rng = Rng::new(7);
+    let events: Vec<Event> = (0..200)
+        .map(|i| {
+            ev(
+                i * 700 + rng.range_i64(0, 500),
+                &format!("c{}", rng.next_below(4)),
+                &format!("m{}", rng.next_below(3)),
+                rng.next_below(100) as f64,
+            )
+        })
+        .collect();
+
+    let mut single = rig(&q1_specs());
+    let mut single_replies = Vec::new();
+    for e in &events {
+        single_replies.extend(single.feed(e.clone()));
+    }
+
+    let mut batched = rig(&q1_specs());
+    let mut batched_replies = Vec::new();
+    let mut last_t = i64::MIN;
+    for chunk in events.chunks(17) {
+        let mut t_evals = Vec::with_capacity(chunk.len());
+        for e in chunk {
+            last_t = (e.timestamp + 1).max(last_t);
+            t_evals.push(last_t);
+            batched.reservoir.append(e.clone()).unwrap();
+        }
+        let mut out = Vec::new();
+        batched.plan.advance_batch(&t_evals, &mut out).unwrap();
+        for replies in out {
+            batched_replies.extend(replies);
+        }
+    }
+
+    assert_eq!(single_replies, batched_replies);
+    for card in ["c0", "c1", "c2", "c3"] {
+        let key = [Value::Str(card.into())];
+        assert_eq!(
+            single.plan.value_for("sum_amount_by_card", &key).unwrap(),
+            batched.plan.value_for("sum_amount_by_card", &key).unwrap(),
+            "{card}"
+        );
+    }
+}
+
+#[test]
+fn advance_batch_rejects_time_regression_mid_batch() {
+    let mut r = rig(&q1_specs());
+    r.reservoir.append(ev(1000, "c1", "m1", 1.0)).unwrap();
+    let mut out = Vec::new();
+    assert!(r.plan.advance_batch(&[1001, 500], &mut out).is_err());
+    assert_eq!(out.len(), 1, "the evaluated prefix's replies survive the error");
+    // the store is still usable after the failed batch
+    r.reservoir.append(ev(2000, "c1", "m1", 1.0)).unwrap();
+    assert!(r.plan.advance(2001).is_ok());
+}
+
+#[test]
 fn checkpoint_positions_roundtrip() {
     let mut r = rig(&q1_specs());
     for i in 0..40 {

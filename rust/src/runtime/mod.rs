@@ -6,13 +6,24 @@
 //! sidesteps the jax≥0.5 64-bit-id proto incompatibility), compiles each
 //! module once on the PJRT CPU client, and executes from the rust hot
 //! path. Python never runs at request time.
+//!
+//! The PJRT layer is gated behind the non-default `pjrt` cargo feature
+//! (it needs the `xla` crate, which is not in the offline crate set);
+//! the default build is pure Rust and only exposes the artifact-path
+//! helpers below.
 
+#[cfg(feature = "pjrt")]
 mod pjrt;
+#[cfg(feature = "pjrt")]
 mod scorer;
+#[cfg(feature = "pjrt")]
 mod window_agg;
 
+#[cfg(feature = "pjrt")]
 pub use pjrt::{Executable, Runtime};
+#[cfg(feature = "pjrt")]
 pub use scorer::{FraudScorer, ScorerBatcher, ScorerMeta};
+#[cfg(feature = "pjrt")]
 pub use window_agg::{AggMeta, VectorizedAgg};
 
 use std::path::PathBuf;
