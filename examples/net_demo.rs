@@ -1,0 +1,110 @@
+//! Net demo: a node serving the binary TCP protocol on loopback, driven
+//! by the blocking client — the smallest end-to-end client/server round
+//! trip, plus a short closed-loop latency measurement.
+//!
+//! ```text
+//! cargo run --release --example net_demo
+//! ```
+
+use railgun::agg::AggKind;
+use railgun::config::{EngineConfig, StreamDef};
+use railgun::coordinator::Node;
+use railgun::event::{Event, Value};
+use railgun::mlog::{Broker, BrokerConfig};
+use railgun::net::{run_closed_loop, BenchOptions, NetClient};
+use railgun::plan::MetricSpec;
+use railgun::util::clock::ms;
+use railgun::util::tmp::TempDir;
+use railgun::window::WindowSpec;
+use railgun::workload::payments_schema;
+use std::time::Duration;
+
+fn main() -> railgun::Result<()> {
+    railgun::util::logging::init();
+    let tmp = TempDir::new("net_demo");
+
+    // 1. a node that also listens on an ephemeral loopback port
+    let cfg = EngineConfig {
+        listen_addr: Some("127.0.0.1:0".to_string()),
+        ..EngineConfig::for_testing(tmp.path().to_path_buf())
+    };
+    let broker = Broker::open(BrokerConfig::in_memory())?;
+    let node = Node::start("node0", cfg, broker)?;
+    node.register_stream(StreamDef {
+        name: "payments".into(),
+        schema: payments_schema(),
+        entities: vec!["card".into(), "merchant".into()],
+        metrics: vec![
+            MetricSpec::new(
+                "sum_amount_5m_by_card",
+                AggKind::Sum,
+                Some("amount"),
+                WindowSpec::sliding(5 * ms::MINUTE),
+                &["card"],
+            ),
+            MetricSpec::new(
+                "count_5m_by_merchant",
+                AggKind::Count,
+                None,
+                WindowSpec::sliding(5 * ms::MINUTE),
+                &["merchant"],
+            ),
+        ],
+    })?;
+    let addr = node.net_addr().expect("listening").to_string();
+    println!("node listening on {addr}");
+
+    // 2. a remote client: handshake fetches schema + fanout
+    let mut client = NetClient::connect(&addr, "payments")?;
+    println!(
+        "connected: fanout={} schema has {} fields",
+        client.fanout(),
+        client.schema().len()
+    );
+
+    // 3. ingest a batch over the wire, await each event's full answer
+    let events: Vec<Event> = (0..5)
+        .map(|i| {
+            Event::new(
+                1_000 * i,
+                vec![
+                    Value::Str("card_42".into()),
+                    Value::Str(format!("merchant_{}", i % 2)),
+                    Value::F64(10.0 + i as f64),
+                    Value::Bool(false),
+                ],
+            )
+        })
+        .collect();
+    let ack = client.ingest_batch(events, Duration::from_secs(10))?;
+    println!(
+        "ingested {} events (ids {}..{})",
+        ack.count,
+        ack.first_ingest_id,
+        ack.first_ingest_id + ack.count as u64
+    );
+    for i in 0..ack.count as u64 {
+        let replies =
+            client.await_event(ack.first_ingest_id + i, ack.fanout, Duration::from_secs(10))?;
+        for r in &replies {
+            println!("event {i}: {}", r.to_json().to_string());
+        }
+    }
+
+    // 4. a short closed-loop run: throughput + tail latency from outside
+    let report = run_closed_loop(
+        &addr,
+        "payments",
+        &BenchOptions {
+            events: 5_000,
+            batch: 128,
+            pipeline: 4,
+            cardinality: 100,
+            timeout: Duration::from_secs(60),
+        },
+    )?;
+    println!("{}", report.render());
+
+    node.shutdown(true);
+    Ok(())
+}

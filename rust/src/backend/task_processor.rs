@@ -35,6 +35,8 @@ pub struct TaskProcessor {
     replies_enabled: bool,
     /// Flush the accumulated reply batch after this many messages.
     reply_flush_events: usize,
+    /// Shard count of the reply topic (replies route by ingest id).
+    reply_partitions: u32,
     events_since_checkpoint: u64,
     checkpoint_every: u64,
     /// Number of events replayed during recovery (observability).
@@ -141,6 +143,10 @@ impl TaskProcessor {
             }
         }
 
+        // the reply topic is created by stream registration before any
+        // task processor exists; fall back to a single shard if a test
+        // wires a processor without it
+        let reply_partitions = producer.partition_count(REPLY_TOPIC).unwrap_or(1);
         Ok(TaskProcessor {
             topic,
             partition,
@@ -151,6 +157,7 @@ impl TaskProcessor {
             processed: durable,
             replies_enabled,
             reply_flush_events: cfg.reply_flush_events.max(1),
+            reply_partitions,
             events_since_checkpoint: 0,
             checkpoint_every: cfg.checkpoint_every,
             recovered_events,
@@ -285,14 +292,31 @@ impl TaskProcessor {
         Ok(())
     }
 
-    /// Publish the accumulated reply messages as one reply-topic record.
+    /// Publish the accumulated reply messages, one reply-topic record per
+    /// shard the batch's ingest ids route to (the reply topic is sharded
+    /// by ingest id — [`crate::frontend::reply_partition_for`] — so
+    /// multiple collectors and the net server's reply streams scale).
     fn flush_replies(&mut self, pending: &mut Vec<ReplyMsg>) -> Result<()> {
         if pending.is_empty() {
             return Ok(());
         }
         let ts = pending.last().expect("non-empty").event_ts;
-        let payload = ReplyMsg::encode_batch(pending);
-        self.producer.send(REPLY_TOPIC, 0, ts, vec![], payload)?;
+        if self.reply_partitions <= 1 {
+            let payload = ReplyMsg::encode_batch(pending);
+            self.producer.send(REPLY_TOPIC, 0, ts, vec![], payload)?;
+        } else {
+            // one pass: bucket each message's encoding into its shard
+            let mut shards: Vec<Vec<u8>> = vec![Vec::new(); self.reply_partitions as usize];
+            for msg in pending.iter() {
+                let p = crate::frontend::reply_partition_for(msg.ingest_id, self.reply_partitions);
+                msg.encode_into(&mut shards[p as usize]);
+            }
+            for (p, payload) in shards.into_iter().enumerate() {
+                if !payload.is_empty() {
+                    self.producer.send(REPLY_TOPIC, p as u32, ts, vec![], payload)?;
+                }
+            }
+        }
         pending.clear();
         Ok(())
     }
@@ -545,6 +569,51 @@ mod tests {
             assert_eq!(m.ingest_id, i as u64 + 1);
             assert_eq!(m.metrics.len(), 2);
         }
+    }
+
+    #[test]
+    fn replies_shard_by_ingest_id() {
+        let tmp = TempDir::new("tp_shard_replies");
+        let broker = Broker::open(BrokerConfig::in_memory()).unwrap();
+        broker.create_topic(REPLY_TOPIC, 4).unwrap();
+        let cfg = EngineConfig::for_testing(tmp.path().to_path_buf());
+        let mut tp = TaskProcessor::open(
+            tmp.path().to_path_buf(),
+            stream(),
+            "card",
+            0,
+            &cfg,
+            broker.producer(),
+            true,
+        )
+        .unwrap();
+        let records: Vec<Record> = (0..12u64)
+            .map(|i| record(i, 1000 + i as i64, "c1", 1.0))
+            .collect();
+        tp.process_batch(&records).unwrap();
+        let mut c = broker.consumer("t", &[REPLY_TOPIC]).unwrap();
+        let mut seen = 0usize;
+        let mut partitions = std::collections::HashSet::new();
+        loop {
+            let polled = c.poll(100, std::time::Duration::from_millis(20)).unwrap();
+            if polled.records.is_empty() && polled.rebalanced.is_none() {
+                break;
+            }
+            for (tp_key, rec) in polled.records {
+                for msg in ReplyMsg::decode_batch(&rec.payload).unwrap() {
+                    assert_eq!(
+                        tp_key.partition,
+                        crate::frontend::reply_partition_for(msg.ingest_id, 4),
+                        "reply for ingest {} landed on wrong shard",
+                        msg.ingest_id
+                    );
+                    partitions.insert(tp_key.partition);
+                    seen += 1;
+                }
+            }
+        }
+        assert_eq!(seen, 12, "every event's reply arrives exactly once");
+        assert!(partitions.len() > 1, "contiguous ids spread across shards");
     }
 
     #[test]

@@ -46,6 +46,22 @@ pub struct EngineConfig {
     /// them as one reply-topic record (bounds reply record size; a batch
     /// always flushes at its end regardless).
     pub reply_flush_events: usize,
+    /// Shards of the reply topic. Replies route by ingest id
+    /// ([`crate::frontend::reply_partition_for`]) so multiple reply
+    /// collectors — and the net server's per-connection reply streams —
+    /// scale across partitions. Only effective for the process that first
+    /// creates the reply topic.
+    pub reply_partitions: u32,
+    /// TCP listen address for the binary ingest/reply protocol
+    /// (`rust/src/net/`). `None` ⇒ no server; `"127.0.0.1:0"` binds an
+    /// ephemeral port (printed by `railgun serve`).
+    pub listen_addr: Option<String>,
+    /// Max accepted wire-frame body size in bytes (oversized frames are
+    /// rejected with a protocol error before allocation).
+    pub net_max_frame_bytes: usize,
+    /// Set TCP_NODELAY on accepted connections (latency over batching;
+    /// the protocol batches explicitly, so the default is on).
+    pub net_nodelay: bool,
 }
 
 impl EngineConfig {
@@ -65,6 +81,10 @@ impl EngineConfig {
             checkpoint_every: 10_000,
             ingest_batch: 256,
             reply_flush_events: 256,
+            reply_partitions: 4,
+            listen_addr: None,
+            net_max_frame_bytes: 8 << 20,
+            net_nodelay: true,
         }
     }
 
@@ -77,6 +97,7 @@ impl EngineConfig {
             cache_chunks: 16,
             checkpoint_every: 100,
             poll_timeout_ms: 5,
+            reply_partitions: 2,
             ..EngineConfig::new(data_dir)
         }
     }
@@ -119,6 +140,25 @@ impl EngineConfig {
         cfg.checkpoint_every = get_usize("checkpoint_every", cfg.checkpoint_every as usize)? as u64;
         cfg.ingest_batch = get_usize("ingest_batch", cfg.ingest_batch)?;
         cfg.reply_flush_events = get_usize("reply_flush_events", cfg.reply_flush_events)?;
+        cfg.reply_partitions = get_usize("reply_partitions", cfg.reply_partitions as usize)? as u32;
+        cfg.net_max_frame_bytes = get_usize("net_max_frame_bytes", cfg.net_max_frame_bytes)?;
+        if let Some(j) = obj.get("listen_addr") {
+            cfg.listen_addr = match j {
+                Json::Null => None,
+                _ => Some(
+                    j.as_str()
+                        .ok_or_else(|| {
+                            Error::invalid("config: 'listen_addr' must be a string or null")
+                        })?
+                        .to_string(),
+                ),
+            };
+        }
+        if let Some(j) = obj.get("net_nodelay") {
+            cfg.net_nodelay = j
+                .as_bool()
+                .ok_or_else(|| Error::invalid("config: 'net_nodelay' must be bool"))?;
+        }
         if let Some(j) = obj.get("compression_level") {
             cfg.compression_level = match j {
                 Json::Null => None,
@@ -428,9 +468,37 @@ mod tests {
         assert_eq!(cfg.ingest_batch, 512);
         assert_eq!(cfg.reply_flush_events, 32);
         assert_eq!(cfg.partitions_per_topic, 4, "default kept");
+        assert_eq!(cfg.reply_partitions, 4, "default kept");
+        assert_eq!(cfg.listen_addr, None, "no server by default");
         assert!(EngineConfig::from_json(&Json::parse("{}").unwrap()).is_err());
         assert!(EngineConfig::from_json(
             &Json::parse(r#"{"data_dir": "/tmp/x", "poll_batch": -1}"#).unwrap()
+        )
+        .is_err());
+    }
+
+    #[test]
+    fn net_config_from_json() {
+        let cfg = EngineConfig::from_json(
+            &Json::parse(
+                r#"{"data_dir": "/tmp/x", "listen_addr": "127.0.0.1:7171",
+                    "reply_partitions": 8, "net_max_frame_bytes": 1048576,
+                    "net_nodelay": false}"#,
+            )
+            .unwrap(),
+        )
+        .unwrap();
+        assert_eq!(cfg.listen_addr.as_deref(), Some("127.0.0.1:7171"));
+        assert_eq!(cfg.reply_partitions, 8);
+        assert_eq!(cfg.net_max_frame_bytes, 1 << 20);
+        assert!(!cfg.net_nodelay);
+        let cfg = EngineConfig::from_json(
+            &Json::parse(r#"{"data_dir": "/tmp/x", "listen_addr": null}"#).unwrap(),
+        )
+        .unwrap();
+        assert_eq!(cfg.listen_addr, None);
+        assert!(EngineConfig::from_json(
+            &Json::parse(r#"{"data_dir": "/tmp/x", "listen_addr": 5}"#).unwrap()
         )
         .is_err());
     }

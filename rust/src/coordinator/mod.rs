@@ -13,10 +13,13 @@ use crate::config::{EngineConfig, StreamDef};
 use crate::error::Result;
 use crate::frontend::{FrontEnd, Registry, ReplyCollector};
 use crate::mlog::BrokerRef;
+use crate::net::{NetOptions, NetServer};
 use crate::util::hash::FxHashMap;
 use std::sync::{Arc, RwLock};
 
-/// One Railgun node: front-end + back-end over a shared broker.
+/// One Railgun node: front-end + back-end over a shared broker, plus an
+/// optional TCP server (`EngineConfig::listen_addr`) exposing the binary
+/// ingest/reply protocol.
 pub struct Node {
     name: String,
     config: EngineConfig,
@@ -24,6 +27,7 @@ pub struct Node {
     registry: Registry,
     frontend: Arc<FrontEnd>,
     backend: Option<Backend>,
+    net: Option<NetServer>,
 }
 
 impl Node {
@@ -33,9 +37,19 @@ impl Node {
         let registry: Registry = Arc::new(RwLock::new(FxHashMap::default()));
         let frontend = Arc::new(
             FrontEnd::new(broker.clone(), registry.clone(), cfg.partitions_per_topic)
-                .with_ingest_batch(cfg.ingest_batch),
+                .with_ingest_batch(cfg.ingest_batch)
+                .with_reply_partitions(cfg.reply_partitions),
         );
         let backend = Backend::start(broker.clone(), registry.clone(), cfg.clone(), name)?;
+        let net = match &cfg.listen_addr {
+            Some(addr) => Some(NetServer::start(
+                frontend.clone(),
+                broker.clone(),
+                addr,
+                NetOptions::from_config(&cfg),
+            )?),
+            None => None,
+        };
         Ok(Node {
             name: name.to_string(),
             config: cfg,
@@ -43,7 +57,13 @@ impl Node {
             registry,
             frontend,
             backend: Some(backend),
+            net,
         })
+    }
+
+    /// Bound address of the node's TCP server (None when not listening).
+    pub fn net_addr(&self) -> Option<std::net::SocketAddr> {
+        self.net.as_ref().map(|n| n.local_addr())
     }
 
     /// Node name.
@@ -110,6 +130,9 @@ impl Node {
     /// models a crash (no checkpoint; open-chunk events will be replayed
     /// from the messaging layer by whoever takes over).
     pub fn shutdown(mut self, graceful: bool) {
+        if let Some(n) = self.net.take() {
+            n.shutdown();
+        }
         if let Some(b) = self.backend.take() {
             b.shutdown(graceful);
         }
@@ -118,6 +141,9 @@ impl Node {
 
 impl Drop for Node {
     fn drop(&mut self) {
+        if let Some(n) = self.net.take() {
+            n.shutdown();
+        }
         if let Some(b) = self.backend.take() {
             b.shutdown(true);
         }

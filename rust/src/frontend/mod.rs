@@ -38,6 +38,22 @@ use std::time::{Duration, Instant};
 /// Name of the shared reply topic.
 pub const REPLY_TOPIC: &str = "railgun.replies";
 
+/// Reply-topic partition an ingest id routes to.
+///
+/// The reply topic is sharded (`EngineConfig::reply_partitions`) and
+/// replies are routed by ingest id so multiple collectors — and the net
+/// server's per-connection reply streams — scale across partitions.
+/// Front-end ingest ids are assigned contiguously, so the modulo spreads
+/// consecutive events round-robin over the shards.
+#[inline]
+pub fn reply_partition_for(ingest_id: u64, partitions: u32) -> u32 {
+    if partitions <= 1 {
+        0
+    } else {
+        (ingest_id % partitions as u64) as u32
+    }
+}
+
 /// Registered streams, shared between front-end and back-end.
 pub type Registry = Arc<RwLock<FxHashMap<String, Arc<StreamDef>>>>;
 
@@ -227,6 +243,8 @@ pub struct FrontEnd {
     producer: Producer,
     registry: Registry,
     partitions_per_topic: u32,
+    /// Reply-topic shard count (config `reply_partitions`).
+    reply_partitions: u32,
     /// Max records per producer append batch (config `ingest_batch`).
     ingest_batch: usize,
     next_ingest_id: AtomicU64,
@@ -249,6 +267,7 @@ impl FrontEnd {
             producer,
             registry,
             partitions_per_topic,
+            reply_partitions: 1,
             ingest_batch: 256,
             next_ingest_id: AtomicU64::new(seed),
         }
@@ -259,6 +278,20 @@ impl FrontEnd {
     pub fn with_ingest_batch(mut self, ingest_batch: usize) -> FrontEnd {
         self.ingest_batch = ingest_batch.max(1);
         self
+    }
+
+    /// Shard count for the reply topic (the engine config's
+    /// `reply_partitions` knob; values below 1 are clamped to 1). Only
+    /// effective for the process that first creates the reply topic —
+    /// later frontends adopt the existing shard count.
+    pub fn with_reply_partitions(mut self, reply_partitions: u32) -> FrontEnd {
+        self.reply_partitions = reply_partitions.max(1);
+        self
+    }
+
+    /// Configured reply-topic shard count.
+    pub fn reply_partitions(&self) -> u32 {
+        self.reply_partitions
     }
 
     /// Register a stream: validates the definition, creates one
@@ -278,7 +311,7 @@ impl FrontEnd {
         for topic in def.topics() {
             self.broker.ensure_topic(&topic, self.partitions_per_topic)?;
         }
-        self.broker.ensure_topic(REPLY_TOPIC, 1)?;
+        self.broker.ensure_topic(REPLY_TOPIC, self.reply_partitions)?;
         self.registry
             .write()
             .unwrap()
@@ -337,6 +370,29 @@ impl FrontEnd {
     /// path bounds the same non-atomicity to one event's entity fanout.
     /// (An idempotent-producer dedup layer is a ROADMAP follow-up.)
     pub fn ingest_batch(&self, stream: &str, events: Vec<Event>) -> Result<Vec<IngestReceipt>> {
+        let first_id = self.reserve_ingest_ids(events.len() as u64);
+        self.ingest_batch_reserved(stream, events, first_id)
+    }
+
+    /// Reserve `count` contiguous ingest ids without publishing anything.
+    ///
+    /// Lets a caller know a batch's id range **before** the events hit
+    /// the messaging layer — the net server uses this to register its
+    /// reply routes first, so a reply can never race the registration.
+    /// Ids burned on a batch that later fails validation are simply
+    /// never used.
+    pub fn reserve_ingest_ids(&self, count: u64) -> u64 {
+        self.next_ingest_id.fetch_add(count, Ordering::Relaxed)
+    }
+
+    /// [`FrontEnd::ingest_batch`] with a caller-reserved id range (from
+    /// [`FrontEnd::reserve_ingest_ids`] with `events.len()`).
+    pub fn ingest_batch_reserved(
+        &self,
+        stream: &str,
+        events: Vec<Event>,
+        first_id: u64,
+    ) -> Result<Vec<IngestReceipt>> {
         let def = self.stream(stream)?;
         if events.is_empty() {
             return Ok(Vec::new());
@@ -344,9 +400,6 @@ impl FrontEnd {
         for event in &events {
             def.schema.validate(event)?;
         }
-        let first_id = self
-            .next_ingest_id
-            .fetch_add(events.len() as u64, Ordering::Relaxed);
         let fanout = def.entities.len() as u32;
         let entity_idxs: Vec<usize> = def
             .entities
@@ -362,8 +415,11 @@ impl FrontEnd {
                     .ok_or_else(|| Error::not_found(format!("topic '{t}'")))
             })
             .collect::<Result<_>>()?;
-        // group replicas by (entity, partition), preserving input order
-        let mut groups: FxHashMap<(usize, u32), Vec<BatchEntry>> = FxHashMap::default();
+        // build every replica into one flat vec, then group by
+        // (entity, partition) with a stable sort — no per-batch hash map,
+        // no per-group vec: runs are drained straight into the producer
+        let mut replicas: Vec<((usize, u32), BatchEntry)> =
+            Vec::with_capacity(events.len() * entity_idxs.len());
         let mut receipts = Vec::with_capacity(events.len());
         for (i, event) in events.into_iter().enumerate() {
             let ingest_id = first_id + i as u64;
@@ -373,28 +429,42 @@ impl FrontEnd {
                 let mut key = Vec::with_capacity(24);
                 env.event.value(field_idx).key_bytes(&mut key);
                 let partition = hash::partition_for(hash::hash64(&key), partition_counts[e_idx]);
-                groups.entry((e_idx, partition)).or_default().push(BatchEntry {
-                    timestamp: env.event.timestamp,
-                    key,
-                    payload: payload.clone(),
-                });
+                replicas.push((
+                    (e_idx, partition),
+                    BatchEntry {
+                        timestamp: env.event.timestamp,
+                        key,
+                        payload: payload.clone(),
+                    },
+                ));
             }
             receipts.push(IngestReceipt { ingest_id, fanout });
         }
-        // one producer append per (topic, partition), capped at
-        // `ingest_batch` records per call; deterministic group order so a
-        // mid-batch failure leaves a *prefix* of this ordering durable
-        let mut groups: Vec<((usize, u32), Vec<BatchEntry>)> = groups.into_iter().collect();
-        groups.sort_by_key(|(k, _)| *k);
-        for ((e_idx, partition), entries) in groups {
+        // stable sort keeps input order within each (entity, partition)
+        // run; one producer append per run, capped at `ingest_batch`
+        // records per call. Runs are consumed from the vec's tail, so the
+        // group order is deterministic (descending (entity, partition)) —
+        // a mid-batch failure leaves a prefix of that ordering durable.
+        replicas.sort_by_key(|(k, _)| *k);
+        while let Some(key) = replicas.last().map(|(k, _)| *k) {
+            let (e_idx, partition) = key;
             let topic = &topics[e_idx];
-            let mut rest = entries;
-            while rest.len() > self.ingest_batch {
-                let tail = rest.split_off(self.ingest_batch);
-                self.producer.send_batch(topic, partition, rest)?;
-                rest = tail;
+            let run_start = replicas.partition_point(|(k, _)| *k < key);
+            // chunks are drained front-to-back within the run so the
+            // per-partition record order follows the input order
+            while replicas.len() - run_start > self.ingest_batch {
+                let chunk_end = run_start + self.ingest_batch;
+                self.producer.send_batch(
+                    topic,
+                    partition,
+                    replicas.drain(run_start..chunk_end).map(|(_, e)| e),
+                )?;
             }
-            self.producer.send_batch(topic, partition, rest)?;
+            self.producer.send_batch(
+                topic,
+                partition,
+                replicas.drain(run_start..).map(|(_, e)| e),
+            )?;
         }
         Ok(receipts)
     }
@@ -411,7 +481,7 @@ impl FrontEnd {
     /// topic's **end**: it only sees replies to events ingested after its
     /// creation (stale replies from previous runs are skipped).
     pub fn reply_collector(&self, group: &str) -> Result<ReplyCollector> {
-        self.broker.ensure_topic(REPLY_TOPIC, 1)?;
+        self.broker.ensure_topic(REPLY_TOPIC, self.reply_partitions)?;
         let mut consumer = self.broker.consumer(group, &[REPLY_TOPIC])?;
         // force the initial assignment, then seek to the live end
         let _ = consumer.poll(0, Duration::from_millis(0))?;
@@ -603,6 +673,43 @@ mod tests {
         assert_eq!(broker.partition_count("payments.merchant"), Some(4));
         assert_eq!(broker.partition_count(REPLY_TOPIC), Some(1));
         assert!(fe.register_stream(def()).is_err(), "duplicate stream");
+    }
+
+    #[test]
+    fn reply_topic_sharding_and_routing() {
+        assert_eq!(reply_partition_for(0, 4), 0);
+        assert_eq!(reply_partition_for(7, 4), 3);
+        assert_eq!(reply_partition_for(7, 1), 0);
+        assert_eq!(reply_partition_for(7, 0), 0);
+        let broker = Broker::open(BrokerConfig::in_memory()).unwrap();
+        let fe = FrontEnd::new(broker.clone(), registry(), 2).with_reply_partitions(4);
+        fe.register_stream(def()).unwrap();
+        assert_eq!(broker.partition_count(REPLY_TOPIC), Some(4));
+        // a collector subscribes every shard and still assembles replies
+        let mut rc = fe.reply_collector("sharded").unwrap();
+        let producer = broker.producer();
+        for id in 0..8u64 {
+            let msg = ReplyMsg {
+                ingest_id: id,
+                topic: "payments.card".into(),
+                partition: 0,
+                event_ts: 1,
+                metrics: vec![],
+            };
+            producer
+                .send(
+                    REPLY_TOPIC,
+                    reply_partition_for(id, 4),
+                    1,
+                    vec![],
+                    ReplyMsg::encode_batch(&[msg]),
+                )
+                .unwrap();
+        }
+        for id in 0..8u64 {
+            let replies = rc.await_event(id, 1, Duration::from_secs(5)).unwrap();
+            assert_eq!(replies.len(), 1);
+        }
     }
 
     #[test]

@@ -16,8 +16,9 @@
 //! * **L3 — this crate**: the coordination/storage system. Messaging
 //!   ([`mlog`]), front-end routing ([`frontend`]), back-end processor
 //!   units ([`backend`]), the event reservoir ([`reservoir`]), operator
-//!   plans ([`plan`]), aggregation state ([`agg`], [`kvstore`]) and the
-//!   cluster coordinator ([`coordinator`]).
+//!   plans ([`plan`]), aggregation state ([`agg`], [`kvstore`]), the
+//!   cluster coordinator ([`coordinator`]) and the client/server
+//!   boundary ([`net`]).
 //! * **L2 — JAX** (`python/compile/model.py`, build-time only): batched
 //!   aggregation-state transition and the fraud-scoring MLP, lowered
 //!   ahead-of-time to HLO text artifacts.
@@ -29,11 +30,38 @@
 //! request time. The PJRT layer is behind the non-default `pjrt` cargo
 //! feature — the default build is pure Rust.
 //!
+//! ## The net layer
+//!
+//! [`net`] turns the node into an actually-distributed server: a
+//! length-prefixed, CRC-checked binary TCP protocol (versioned frames
+//! over the same varint event/reply codecs the engine uses internally),
+//! a multi-threaded `std::net` server fronting
+//! [`frontend::FrontEnd::ingest_batch`], and a blocking, pipelining
+//! client. Replies flow back per connection: the reply topic is
+//! **sharded** ([`config::EngineConfig::reply_partitions`]), task
+//! processors route each reply record by ingest id
+//! ([`frontend::reply_partition_for`]), and the server's reply pump
+//! subscribes every shard and routes each message to the connection that
+//! ingested it. The paper-central numbers — end-to-end ingest→reply
+//! latency percentiles under load — are measured from outside the engine
+//! by the closed-loop [`net::bench`] harness (`railgun bench-client`).
+//!
 //! ## Quickstart
 //!
 //! See `examples/quickstart.rs`. In short: build a [`config::EngineConfig`],
 //! start a [`coordinator::Node`], register a stream and its metrics, feed
 //! events through the [`frontend::FrontEnd`] and read replies.
+//!
+//! Over the network (see `examples/net_demo.rs`):
+//!
+//! ```text
+//! # terminal 1 — a serving node (prints "LISTEN 127.0.0.1:<port>")
+//! railgun serve --config engine.json --stream stream.json --listen 127.0.0.1:0
+//!
+//! # terminal 2 — closed-loop latency/throughput from a second process
+//! railgun bench-client --addr 127.0.0.1:<port> --stream payments \
+//!     --events 200000 --batch 256 --pipeline 8
+//! ```
 
 pub mod agg;
 pub mod backend;
@@ -45,6 +73,7 @@ pub mod event;
 pub mod frontend;
 pub mod kvstore;
 pub mod mlog;
+pub mod net;
 pub mod plan;
 pub mod reservoir;
 pub mod runtime;

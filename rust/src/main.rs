@@ -1,9 +1,16 @@
 //! `railgun` — leader entrypoint + CLI.
 //!
 //! ```text
-//! railgun serve --config <engine.json> --stream <stream.json>
-//!     Start a node, read events as JSON lines on stdin, write replies as
-//!     JSON lines on stdout.
+//! railgun serve --config <engine.json> --stream <stream.json> [--listen <addr>]
+//!     Start a node. Without --listen (or config listen_addr): read events
+//!     as JSON lines on stdin, write replies as JSON lines on stdout.
+//!     With --listen: serve the binary TCP ingest/reply protocol; prints
+//!     "LISTEN <addr>" (the resolved port for --listen 127.0.0.1:0) and
+//!     runs until stdin reaches EOF, then shuts down cleanly.
+//! railgun bench-client --addr <addr> --stream <name> [--events N]
+//!     [--batch N] [--pipeline N] [--cardinality N] [--timeout-secs N]
+//!     Drive a remote node closed-loop; reports throughput and
+//!     p50/p99/p999 ingest→reply latency.
 //! railgun check-artifacts
 //!     Load + execute the AOT artifacts, verify the runtime wiring.
 //! railgun version
@@ -15,6 +22,7 @@ use railgun::config::{EngineConfig, StreamDef};
 use railgun::coordinator::Node;
 use railgun::error::Result;
 use railgun::mlog::{Broker, BrokerConfig};
+use railgun::net::BenchOptions;
 use railgun::util::json::Json;
 use std::io::{BufRead, Write};
 use std::time::Duration;
@@ -24,6 +32,7 @@ fn main() {
     let args: Vec<String> = std::env::args().skip(1).collect();
     let code = match args.first().map(|s| s.as_str()) {
         Some("serve") => cmd_serve(&args[1..]),
+        Some("bench-client") => cmd_bench_client(&args[1..]),
         Some("check-artifacts") => cmd_check_artifacts(),
         Some("version") => {
             println!("railgun {}", railgun::version());
@@ -31,8 +40,10 @@ fn main() {
         }
         _ => {
             eprintln!(
-                "usage: railgun <serve|check-artifacts|version>\n\
-                 \n  serve --config <engine.json> --stream <stream.json>\n\
+                "usage: railgun <serve|bench-client|check-artifacts|version>\n\
+                 \n  serve --config <engine.json> --stream <stream.json> [--listen <addr>]\n\
+                 \n  bench-client --addr <host:port> --stream <name> [--events N]\n\
+                 \n      [--batch N] [--pipeline N] [--cardinality N] [--timeout-secs N]\n\
                  \n  check-artifacts   verify the AOT runtime path"
             );
             std::process::exit(2);
@@ -51,12 +62,24 @@ fn flag_value<'a>(args: &'a [String], name: &str) -> Option<&'a str> {
         .map(|s| s.as_str())
 }
 
+fn flag_u64(args: &[String], name: &str, default: u64) -> Result<u64> {
+    match flag_value(args, name) {
+        None => Ok(default),
+        Some(v) => v
+            .parse()
+            .map_err(|_| railgun::Error::invalid(format!("{name}: bad number '{v}'"))),
+    }
+}
+
 fn cmd_serve(args: &[String]) -> Result<()> {
     let cfg_path = flag_value(args, "--config")
         .ok_or_else(|| railgun::Error::invalid("serve: missing --config"))?;
     let stream_path = flag_value(args, "--stream")
         .ok_or_else(|| railgun::Error::invalid("serve: missing --stream"))?;
-    let cfg = EngineConfig::from_file(std::path::Path::new(cfg_path))?;
+    let mut cfg = EngineConfig::from_file(std::path::Path::new(cfg_path))?;
+    if let Some(addr) = flag_value(args, "--listen") {
+        cfg.listen_addr = Some(addr.to_string());
+    }
     let stream_text = std::fs::read_to_string(stream_path)?;
     let def = StreamDef::from_json(&Json::parse(&stream_text)?)?;
     let stream_name = def.name.clone();
@@ -64,6 +87,22 @@ fn cmd_serve(args: &[String]) -> Result<()> {
     let broker = Broker::open(BrokerConfig::durable(cfg.data_dir.join("mlog")))?;
     let node = Node::start("node0", cfg, broker)?;
     node.register_stream(def)?;
+
+    if let Some(addr) = node.net_addr() {
+        // binary TCP protocol mode: announce the resolved address (the
+        // loopback smoke job binds :0 and parses this line), then serve
+        // until stdin closes — the caller's clean-shutdown handle
+        println!("LISTEN {addr}");
+        std::io::stdout().flush()?;
+        log::info!("serving stream '{stream_name}' on {addr}; EOF on stdin stops the node");
+        let stdin = std::io::stdin();
+        for line in stdin.lock().lines() {
+            let _ = line?; // control channel: content is ignored
+        }
+        node.shutdown(true);
+        return Ok(());
+    }
+
     let mut collector = node.reply_collector()?;
     log::info!("serving stream '{stream_name}'; reading JSON events from stdin");
 
@@ -89,6 +128,39 @@ fn cmd_serve(args: &[String]) -> Result<()> {
         }
     }
     node.shutdown(true);
+    Ok(())
+}
+
+fn cmd_bench_client(args: &[String]) -> Result<()> {
+    let addr = flag_value(args, "--addr")
+        .ok_or_else(|| railgun::Error::invalid("bench-client: missing --addr"))?;
+    let stream = flag_value(args, "--stream")
+        .ok_or_else(|| railgun::Error::invalid("bench-client: missing --stream"))?;
+    let defaults = BenchOptions::default();
+    let opts = BenchOptions {
+        events: flag_u64(args, "--events", defaults.events)?,
+        batch: flag_u64(args, "--batch", defaults.batch as u64)? as usize,
+        pipeline: flag_u64(args, "--pipeline", defaults.pipeline as u64)? as usize,
+        cardinality: flag_u64(args, "--cardinality", defaults.cardinality)?,
+        timeout: Duration::from_secs(flag_u64(
+            args,
+            "--timeout-secs",
+            defaults.timeout.as_secs(),
+        )?),
+    };
+    log::info!(
+        "bench-client: {} events to {addr}/{stream} (batch={}, pipeline={})",
+        opts.events,
+        opts.batch,
+        opts.pipeline
+    );
+    let report = railgun::net::run_closed_loop(addr, stream, &opts)?;
+    println!("{}", report.render());
+    if report.events_completed == 0 {
+        return Err(railgun::Error::internal(
+            "bench-client: no event completed its reply fanout",
+        ));
+    }
     Ok(())
 }
 

@@ -38,13 +38,14 @@ impl Producer {
 
     /// Append a batch to an explicit partition: one partition-lock
     /// acquisition and one consumer wake-up for the whole batch. Returns
-    /// the offset of the first record (offsets are contiguous).
-    pub fn send_batch(
-        &self,
-        topic: &str,
-        partition: u32,
-        entries: Vec<BatchEntry>,
-    ) -> Result<u64> {
+    /// the offset of the first record (offsets are contiguous). Generic
+    /// over any entry iterator so batching callers (the front-end's
+    /// sort-by-partition grouping) can drain runs straight into the
+    /// partition without a per-group `Vec`.
+    pub fn send_batch<I>(&self, topic: &str, partition: u32, entries: I) -> Result<u64>
+    where
+        I: IntoIterator<Item = BatchEntry>,
+    {
         let p = self.broker.partition(topic, partition)?;
         let base = p.append_batch(entries)?;
         self.broker.notify_data();
@@ -62,6 +63,11 @@ impl Producer {
     ) -> Result<u64> {
         let partition = self.partition_for_key(topic, key)?;
         self.send(topic, partition, timestamp, key.to_vec(), payload)
+    }
+
+    /// Number of partitions of a topic (None when the topic is unknown).
+    pub fn partition_count(&self, topic: &str) -> Option<u32> {
+        self.broker.partition_count(topic)
     }
 
     /// Partition a key routes to (the producer-side hash used by

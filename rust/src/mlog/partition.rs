@@ -47,6 +47,8 @@ struct PartitionInner {
     /// Active segment writer (None ⇒ in-memory broker).
     writer: Option<SegmentWriter>,
     appends_since_sync: u32,
+    /// Reusable frame buffer for batched segment writes.
+    batch_buf: Vec<u8>,
 }
 
 /// A thread-safe partition log.
@@ -86,6 +88,7 @@ impl Partition {
                 next_offset: 0,
                 writer,
                 appends_since_sync: 0,
+                batch_buf: Vec::new(),
             }),
             appended: Condvar::new(),
         })
@@ -129,6 +132,7 @@ impl Partition {
                 next_offset,
                 writer,
                 appends_since_sync: 0,
+                batch_buf: Vec::new(),
             }),
             appended: Condvar::new(),
         })
@@ -146,11 +150,11 @@ impl Partition {
         key: Vec<u8>,
         payload: impl Into<Payload>,
     ) -> Result<u64> {
-        self.append_batch(vec![BatchEntry {
+        self.append_batch(std::iter::once(BatchEntry {
             timestamp,
             key,
             payload: payload.into(),
-        }])
+        }))
     }
 
     /// Append a batch of records under **one** lock acquisition; returns
@@ -158,69 +162,144 @@ impl Partition {
     ///
     /// This is the partition half of the batch-first data plane: the
     /// mutex, tail bookkeeping, retention pass and consumer notification
-    /// are paid once per batch instead of once per record.
-    pub fn append_batch(&self, entries: Vec<BatchEntry>) -> Result<u64> {
-        let mut inner = self.inner.lock().unwrap();
+    /// are paid once per batch instead of once per record. On a durable
+    /// partition the whole batch is framed into one reusable buffer and
+    /// handed to the segment writer as a **single** `write_all` (one per
+    /// segment chunk when the batch spans a roll), and the fsync policy is
+    /// applied **once per batch**: `Always` syncs once at the batch end,
+    /// `EveryN` counts the batch as its record count.
+    ///
+    /// Failure semantics: an I/O error mid-batch keeps the durably-written
+    /// prefix (whole frame-buffer flushes) in the tail and `next_offset`,
+    /// and fails the rest of the batch.
+    pub fn append_batch<I>(&self, entries: I) -> Result<u64>
+    where
+        I: IntoIterator<Item = BatchEntry>,
+    {
+        let mut guard = self.inner.lock().unwrap();
+        let inner = &mut *guard;
         let base = inner.next_offset;
-        if entries.is_empty() {
-            return Ok(base);
-        }
-        for (i, entry) in entries.into_iter().enumerate() {
+        let durable = inner.writer.is_some();
+        let tail_start = inner.tail.len();
+        let mut buf = std::mem::take(&mut inner.batch_buf);
+        buf.clear();
+        let mut total = 0u64; // records consumed from the iterator
+        let mut committed = 0u64; // records handed to a successful write_all
+        let mut buffered = 0u64; // records framed in `buf`, not yet written
+        let mut failed: Option<crate::error::Error> = None;
+
+        for entry in entries {
             let record = Record {
-                offset: base + i as u64,
+                offset: base + total,
                 timestamp: entry.timestamp,
                 key: entry.key,
                 payload: entry.payload,
             };
-            if inner.writer.is_some() {
-                self.write_durable(&mut inner, &record)?;
+            if durable {
+                // roll when the projected segment size spills over: flush
+                // the frames buffered so far into the old segment first
+                let projected = inner.writer.as_ref().expect("durable").bytes
+                    + buf.len() as u64;
+                if projected >= self.segment_bytes {
+                    // flush + sync the old segment first: those frames are
+                    // durable (and stay committed) even if opening the
+                    // next segment fails below
+                    let mut flush_res = Ok(());
+                    {
+                        let w = inner.writer.as_mut().expect("durable partition");
+                        if !buf.is_empty() {
+                            flush_res = w.append_encoded(&buf);
+                        }
+                        if flush_res.is_ok() {
+                            flush_res = w.sync();
+                        }
+                    }
+                    match flush_res {
+                        Ok(()) => {
+                            committed += buffered;
+                            buffered = 0;
+                            buf.clear();
+                        }
+                        Err(e) => {
+                            failed = Some(e);
+                            break;
+                        }
+                    }
+                    let dir = self.dir.as_ref().expect("writer implies dir");
+                    match SegmentWriter::create(dir, record.offset) {
+                        Ok(w) => inner.writer = Some(w),
+                        Err(e) => {
+                            failed = Some(e);
+                            break;
+                        }
+                    }
+                }
+                SegmentWriter::encode_frame(&mut buf, &record);
+                buffered += 1;
             }
             if inner.tail.is_empty() {
                 inner.tail_base = record.offset;
             }
-            // keep next_offset in step with the tail so an I/O error
-            // mid-batch leaves the log consistent (appended prefix kept)
-            inner.next_offset = record.offset + 1;
             inner.tail.push_back(record);
+            total += 1;
         }
+
+        if durable && failed.is_none() && total > 0 {
+            let appended = if buf.is_empty() {
+                Ok(())
+            } else {
+                inner.writer.as_mut().expect("durable").append_encoded(&buf)
+            };
+            // records count as committed only once the whole write *and*
+            // the batch's fsync-policy action succeeded: a failed sync
+            // must not ack (and serve) records of unproven durability
+            let flushed = match appended {
+                Ok(()) => self.sync_batch(inner, total),
+                Err(e) => Err(e),
+            };
+            match flushed {
+                Ok(()) => committed += buffered,
+                Err(e) => failed = Some(e),
+            }
+        }
+
+        // commit the (durable) prefix: on failure, records beyond the last
+        // successful write are dropped from the tail and never assigned
+        let keep = if durable && failed.is_some() { committed } else { total };
+        inner.tail.truncate(tail_start + keep as usize);
+        inner.next_offset = base + keep;
         // retention: drop oldest in-memory records (segments keep them)
         if inner.tail.len() > self.retention_records {
             let drop_n = inner.tail.len() - self.retention_records;
             inner.tail.drain(..drop_n);
             inner.tail_base += drop_n as u64;
         }
-        drop(inner);
-        self.appended.notify_all();
-        Ok(base)
+        buf.clear();
+        inner.batch_buf = buf;
+        drop(guard);
+        if keep > 0 {
+            self.appended.notify_all();
+        }
+        match failed {
+            Some(e) => Err(e),
+            None => Ok(base),
+        }
     }
 
-    fn write_durable(&self, inner: &mut PartitionInner, record: &Record) -> Result<()> {
-        // roll the segment if full
-        let roll = inner
-            .writer
-            .as_ref()
-            .map(|w| w.bytes >= self.segment_bytes)
-            .unwrap_or(false);
-        if roll {
-            if let Some(w) = inner.writer.as_mut() {
-                w.sync()?;
-            }
-            let dir = self.dir.as_ref().expect("writer implies dir");
-            inner.writer = Some(SegmentWriter::create(dir, record.offset)?);
-        }
-        let policy = self.fsync;
-        let w = inner.writer.as_mut().expect("durable partition");
-        w.append(record)?;
-        match policy {
+    /// Apply the fsync policy once for a batch of `total` records.
+    fn sync_batch(&self, inner: &mut PartitionInner, total: u64) -> Result<()> {
+        match self.fsync {
             FsyncPolicy::Never => {}
-            FsyncPolicy::Always => w.sync()?,
+            FsyncPolicy::Always => inner.writer.as_mut().expect("durable").sync()?,
             FsyncPolicy::EveryN(n) => {
-                inner.appends_since_sync += 1;
+                inner.appends_since_sync = inner
+                    .appends_since_sync
+                    .saturating_add(total.min(u32::MAX as u64) as u32);
                 if inner.appends_since_sync >= n {
-                    w.sync()?;
+                    inner.writer.as_mut().expect("durable").sync()?;
                     inner.appends_since_sync = 0;
                 } else {
-                    w.flush()?;
+                    inner.writer.as_mut().expect("durable").flush()?;
                 }
             }
         }

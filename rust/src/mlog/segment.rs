@@ -109,18 +109,40 @@ impl SegmentWriter {
         })
     }
 
+    /// Append the framed encoding of one record to `out` (the exact
+    /// bytes [`SegmentWriter::append_encoded`] expects). Exposed so the
+    /// partition's batch path can frame a whole batch into one buffer and
+    /// hand it to the writer as a single `write_all`.
+    pub fn encode_frame(out: &mut Vec<u8>, record: &Record) {
+        let header_start = out.len();
+        out.extend_from_slice(&[0u8; 8]);
+        record.encode_body(out);
+        let body_len = out.len() - header_start - 8;
+        let crc = crc32fast::hash(&out[header_start + 8..]);
+        LittleEndian::write_u32(&mut out[header_start..header_start + 4], crc);
+        LittleEndian::write_u32(
+            &mut out[header_start + 4..header_start + 8],
+            body_len as u32,
+        );
+    }
+
+    /// Append pre-framed bytes (one or more [`SegmentWriter::encode_frame`]
+    /// outputs) with a single buffered write.
+    pub fn append_encoded(&mut self, frames: &[u8]) -> Result<()> {
+        self.file.write_all(frames)?;
+        self.bytes += frames.len() as u64;
+        Ok(())
+    }
+
     /// Append one record (buffered; call [`Self::flush`]/[`Self::sync`]
     /// per the broker's fsync policy).
     pub fn append(&mut self, record: &Record) -> Result<()> {
         self.scratch.clear();
-        record.encode_body(&mut self.scratch);
-        let mut header = [0u8; 8];
-        LittleEndian::write_u32(&mut header[0..4], crc32fast::hash(&self.scratch));
-        LittleEndian::write_u32(&mut header[4..8], self.scratch.len() as u32);
-        self.file.write_all(&header)?;
-        self.file.write_all(&self.scratch)?;
-        self.bytes += 8 + self.scratch.len() as u64;
-        Ok(())
+        Self::encode_frame(&mut self.scratch, record);
+        let frames = std::mem::take(&mut self.scratch);
+        let res = self.append_encoded(&frames);
+        self.scratch = frames;
+        res
     }
 
     /// Flush buffered frames to the OS.

@@ -1,0 +1,267 @@
+//! Closed-loop latency/throughput harness for a remote Railgun node.
+//!
+//! Drives a `railgun serve --listen` process over the binary protocol:
+//! keeps a fixed number of ingest batches in flight (closed loop — the
+//! next batch is sent only when a slot frees up, so the harness measures
+//! the system at a sustainable load instead of overrunning it), stamps
+//! each batch at send time, and records one end-to-end sample per event
+//! when its **last** reply arrives (ingest → all fanout replies). The
+//! external-driver design follows the benchmarking literature: latency
+//! measured inside the engine hides queueing, so the clock starts at the
+//! client.
+//!
+//! Latencies land in the crate's HDR-style [`Histogram`]; the report
+//! prints throughput plus p50/p99/p999 (and a machine-greppable RESULT
+//! line used by the CI loopback smoke job).
+
+use crate::error::{Error, Result};
+use crate::event::{Event, FieldType, Schema, Value};
+use crate::net::client::NetClient;
+use crate::util::hash::FxHashMap;
+use crate::util::hist::Histogram;
+use std::time::{Duration, Instant};
+
+/// Harness parameters.
+#[derive(Debug, Clone)]
+pub struct BenchOptions {
+    /// Total events to ingest.
+    pub events: u64,
+    /// Events per ingest batch.
+    pub batch: usize,
+    /// Max batches in flight (closed-loop window).
+    pub pipeline: usize,
+    /// Distinct values per string (entity) field.
+    pub cardinality: u64,
+    /// Give up (reporting what completed) after this long.
+    pub timeout: Duration,
+}
+
+impl Default for BenchOptions {
+    fn default() -> Self {
+        BenchOptions {
+            events: 100_000,
+            batch: 256,
+            pipeline: 8,
+            cardinality: 10_000,
+            timeout: Duration::from_secs(60),
+        }
+    }
+}
+
+/// Harness outcome.
+#[derive(Debug)]
+pub struct BenchReport {
+    /// Events sent.
+    pub events_sent: u64,
+    /// Events whose full reply fanout arrived.
+    pub events_completed: u64,
+    /// Total reply messages received.
+    pub replies: u64,
+    /// Wall time from first send to last completion.
+    pub elapsed: Duration,
+    /// Ingest → last-reply latency per completed event, in nanoseconds.
+    pub hist: Histogram,
+}
+
+impl BenchReport {
+    /// Completed events per second.
+    pub fn events_per_sec(&self) -> f64 {
+        let secs = self.elapsed.as_secs_f64();
+        if secs <= 0.0 {
+            0.0
+        } else {
+            self.events_completed as f64 / secs
+        }
+    }
+
+    /// Human summary + machine-greppable RESULT line.
+    pub fn render(&self) -> String {
+        let ms = |q: f64| self.hist.quantile(q) as f64 / 1e6;
+        format!(
+            "ingest→reply latency: p50={:.3}ms p99={:.3}ms p999={:.3}ms max={:.3}ms\n\
+             throughput: {:.0} events/s ({} events, {} replies, {:.2}s)\n\
+             RESULT events={} completed={} replies={} events_per_sec={:.0} \
+             p50_ms={:.3} p99_ms={:.3} p999_ms={:.3}",
+            ms(0.50),
+            ms(0.99),
+            ms(0.999),
+            self.hist.max() as f64 / 1e6,
+            self.events_per_sec(),
+            self.events_sent,
+            self.replies,
+            self.elapsed.as_secs_f64(),
+            self.events_sent,
+            self.events_completed,
+            self.replies,
+            self.events_per_sec(),
+            ms(0.50),
+            ms(0.99),
+            ms(0.999),
+        )
+    }
+}
+
+/// Generate `n` schema-conforming events. Deterministic in `base` so runs
+/// are reproducible; string fields cycle through `cardinality` values
+/// (spreading load across partitions), numeric fields vary smoothly.
+pub fn synth_events(schema: &Schema, base: u64, n: usize, cardinality: u64) -> Vec<Event> {
+    let now_ms = std::time::SystemTime::now()
+        .duration_since(std::time::UNIX_EPOCH)
+        .map(|d| d.as_millis() as i64)
+        .unwrap_or(0);
+    let cardinality = cardinality.max(1);
+    (0..n)
+        .map(|i| {
+            let k = base + i as u64;
+            let values = schema
+                .fields()
+                .iter()
+                .enumerate()
+                .map(|(f, field)| match field.ftype {
+                    // offset per field so co-hashed entities decorrelate
+                    FieldType::Str => Value::Str(format!(
+                        "{}_{}",
+                        field.name,
+                        k.wrapping_mul(2654435761).wrapping_add(f as u64) % cardinality
+                    )),
+                    FieldType::F64 => Value::F64((k % 997) as f64 * 0.5),
+                    FieldType::I64 => Value::I64(k as i64),
+                    FieldType::Bool => Value::Bool(k % 2 == 0),
+                })
+                .collect();
+            Event::new(now_ms, values)
+        })
+        .collect()
+}
+
+/// Run the closed loop against `addr`, ingesting into `stream`.
+pub fn run_closed_loop(addr: &str, stream: &str, opts: &BenchOptions) -> Result<BenchReport> {
+    if opts.events == 0 || opts.batch == 0 || opts.pipeline == 0 {
+        return Err(Error::invalid("bench: events, batch and pipeline must be > 0"));
+    }
+    let mut client = NetClient::connect(addr, stream)?;
+    let schema = client.schema().clone();
+
+    let start = Instant::now();
+    let mut last_done = start;
+    let mut sent = 0u64;
+    let mut inflight_batches = 0usize;
+    let mut seq_times: FxHashMap<u64, Instant> = FxHashMap::default();
+    // ingest id → (batch send time, replies still expected)
+    let mut open: FxHashMap<u64, (Instant, u32)> = FxHashMap::default();
+    // replies that arrived before their batch's ack was processed
+    let mut early: FxHashMap<u64, u32> = FxHashMap::default();
+    let mut hist = Histogram::new();
+    let mut completed = 0u64;
+    let mut replies = 0u64;
+    let mut sink: Vec<crate::frontend::ReplyMsg> = Vec::new();
+
+    while (sent < opts.events || inflight_batches > 0 || !open.is_empty()) && start.elapsed() < opts.timeout
+    {
+        // fill the pipeline window
+        while sent < opts.events && inflight_batches < opts.pipeline {
+            let n = opts.batch.min((opts.events - sent) as usize);
+            let events = synth_events(&schema, sent, n, opts.cardinality);
+            let seq = client.send_batch(events)?;
+            seq_times.insert(seq, Instant::now());
+            sent += n as u64;
+            inflight_batches += 1;
+        }
+
+        client.pump(Duration::from_millis(1))?;
+
+        while let Some(ack) = client.try_ack() {
+            let t0 = seq_times.remove(&ack.seq).unwrap_or(start);
+            inflight_batches = inflight_batches.saturating_sub(1);
+            for id in ack.first_ingest_id..ack.first_ingest_id + ack.count as u64 {
+                let pre = early.remove(&id).unwrap_or(0).min(ack.fanout);
+                if pre == ack.fanout {
+                    hist.record(t0.elapsed().as_nanos() as u64);
+                    completed += 1;
+                    last_done = Instant::now();
+                } else {
+                    open.insert(id, (t0, ack.fanout - pre));
+                }
+            }
+        }
+
+        sink.clear();
+        client.drain_replies(&mut sink);
+        for msg in &sink {
+            replies += 1;
+            let done = match open.get_mut(&msg.ingest_id) {
+                Some(entry) => {
+                    entry.1 -= 1;
+                    entry.1 == 0
+                }
+                None => {
+                    // ack not processed yet: count it for later
+                    *early.entry(msg.ingest_id).or_insert(0) += 1;
+                    false
+                }
+            };
+            if done {
+                if let Some((t0, _)) = open.remove(&msg.ingest_id) {
+                    hist.record(t0.elapsed().as_nanos() as u64);
+                    completed += 1;
+                    last_done = Instant::now();
+                }
+            }
+        }
+    }
+
+    Ok(BenchReport {
+        events_sent: sent,
+        events_completed: completed,
+        replies,
+        elapsed: last_done.duration_since(start).max(Duration::from_nanos(1)),
+        hist,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workload::payments_schema;
+
+    #[test]
+    fn synth_events_conform_to_schema() {
+        let schema = payments_schema();
+        let events = synth_events(&schema, 500, 64, 10);
+        assert_eq!(events.len(), 64);
+        for e in &events {
+            schema.validate(e).unwrap();
+        }
+        // deterministic in base
+        let again = synth_events(&schema, 500, 64, 10);
+        for (a, b) in events.iter().zip(&again) {
+            assert_eq!(a.values, b.values);
+        }
+        // cardinality bounds distinct entity values
+        let cards: std::collections::HashSet<&str> = events
+            .iter()
+            .filter_map(|e| e.values[0].as_str())
+            .collect();
+        assert!(cards.len() <= 10);
+        assert!(cards.len() > 1, "load spreads across entities");
+    }
+
+    #[test]
+    fn report_renders_result_line() {
+        let mut hist = Histogram::new();
+        for i in 1..=100u64 {
+            hist.record(i * 1_000_000);
+        }
+        let report = BenchReport {
+            events_sent: 100,
+            events_completed: 100,
+            replies: 200,
+            elapsed: Duration::from_secs(2),
+            hist,
+        };
+        assert!((report.events_per_sec() - 50.0).abs() < 1e-9);
+        let text = report.render();
+        assert!(text.contains("RESULT events=100"), "{text}");
+        assert!(text.contains("p999_ms="), "{text}");
+    }
+}

@@ -1,0 +1,317 @@
+//! Blocking client for the binary ingest/reply protocol, with batched
+//! pipelining.
+//!
+//! The client separates *sending* from *acknowledgement* so callers can
+//! keep several [`NetClient::send_batch`] calls in flight before reading
+//! the matching [`BatchAck`]s ([`NetClient::recv_ack`]) — the pipelining
+//! the closed-loop bench harness uses to keep the server busy without
+//! giving up per-batch receipts. Reply frames arrive asynchronously and
+//! are buffered by ingest id regardless of what the caller is currently
+//! waiting for, so acks and replies can interleave arbitrarily on the
+//! wire.
+//!
+//! Socket reads go through an internal reassembly buffer: a read timeout
+//! can never split a frame, because frames are only parsed once fully
+//! buffered.
+
+use crate::error::{Error, Result};
+use crate::event::{Event, SchemaRef};
+use crate::frontend::ReplyMsg;
+use crate::net::wire::{self, Frame, HEADER_LEN, PROTOCOL_VERSION};
+use crate::util::hash::FxHashMap;
+use byteorder::{ByteOrder, LittleEndian};
+use std::collections::VecDeque;
+use std::io::{Cursor, Read, Write};
+use std::net::{TcpStream, ToSocketAddrs};
+use std::time::{Duration, Instant};
+
+/// Receipt for one pipelined ingest batch.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct BatchAck {
+    /// Client-assigned batch sequence number (from [`NetClient::send_batch`]).
+    pub seq: u64,
+    /// First ingest id of the batch (ids are contiguous).
+    pub first_ingest_id: u64,
+    /// Events accepted.
+    pub count: u32,
+    /// Replies to expect per event.
+    pub fanout: u32,
+}
+
+/// A blocking protocol client bound to one stream.
+pub struct NetClient {
+    stream: TcpStream,
+    schema: SchemaRef,
+    fanout: u32,
+    max_frame: usize,
+    next_seq: u64,
+    /// Reassembly buffer for inbound bytes.
+    rbuf: Vec<u8>,
+    /// Acks received but not yet handed to the caller, in arrival order.
+    acks: VecDeque<BatchAck>,
+    /// Replies buffered by ingest id.
+    replies: FxHashMap<u64, Vec<ReplyMsg>>,
+    reply_count: usize,
+}
+
+impl NetClient {
+    /// Connect and handshake for `stream_name` with default limits.
+    pub fn connect(addr: impl ToSocketAddrs, stream_name: &str) -> Result<NetClient> {
+        Self::connect_with(addr, stream_name, wire::DEFAULT_MAX_FRAME)
+    }
+
+    /// Connect with an explicit max inbound frame size.
+    pub fn connect_with(
+        addr: impl ToSocketAddrs,
+        stream_name: &str,
+        max_frame: usize,
+    ) -> Result<NetClient> {
+        let mut stream = TcpStream::connect(addr)?;
+        let _ = stream.set_nodelay(true);
+        wire::write_frame(
+            &mut stream,
+            &Frame::Hello {
+                version: PROTOCOL_VERSION,
+                stream: stream_name.to_string(),
+            },
+            None,
+        )?;
+        // the handshake is strictly request/response: a plain blocking
+        // read (bounded so a dead server cannot hang us forever) is safe
+        stream.set_read_timeout(Some(Duration::from_secs(10)))?;
+        let frame = wire::read_frame(&mut stream, None, max_frame)?
+            .ok_or_else(|| Error::closed("server closed during handshake"))?;
+        stream.set_read_timeout(None)?;
+        match frame {
+            Frame::HelloOk {
+                version,
+                fanout,
+                fields,
+            } => {
+                if version != PROTOCOL_VERSION {
+                    return Err(Error::invalid(format!(
+                        "server speaks protocol {version}, client speaks {PROTOCOL_VERSION}"
+                    )));
+                }
+                let schema = wire::schema_from_fields(&fields)?;
+                Ok(NetClient {
+                    stream,
+                    schema,
+                    fanout,
+                    max_frame,
+                    next_seq: 0,
+                    rbuf: Vec::with_capacity(64 * 1024),
+                    acks: VecDeque::new(),
+                    replies: FxHashMap::default(),
+                    reply_count: 0,
+                })
+            }
+            Frame::Err { message, .. } => {
+                Err(Error::invalid(format!("handshake rejected: {message}")))
+            }
+            other => Err(Error::corrupt(format!(
+                "expected HELLO_OK, got {other:?}"
+            ))),
+        }
+    }
+
+    /// The stream schema, as served by the server.
+    pub fn schema(&self) -> &SchemaRef {
+        &self.schema
+    }
+
+    /// Replies to expect per ingested event.
+    pub fn fanout(&self) -> u32 {
+        self.fanout
+    }
+
+    /// Send one ingest batch without waiting for its ack; returns the
+    /// batch's sequence number. Pair with [`NetClient::recv_ack`].
+    pub fn send_batch(&mut self, events: Vec<Event>) -> Result<u64> {
+        let seq = self.next_seq;
+        self.next_seq += 1;
+        let frame = Frame::IngestBatch { seq, events };
+        let bytes = frame.encode(Some(&self.schema))?;
+        self.stream.write_all(&bytes)?;
+        Ok(seq)
+    }
+
+    /// Send a batch and block for its ack (the non-pipelined convenience
+    /// path). Replies arriving meanwhile are buffered.
+    pub fn ingest_batch(&mut self, events: Vec<Event>, timeout: Duration) -> Result<BatchAck> {
+        self.send_batch(events)?;
+        self.recv_ack(timeout)
+    }
+
+    /// Block until the next ingest ack arrives (acks are delivered in
+    /// batch-send order). Reply frames received while waiting are
+    /// buffered. A server `ERR` frame surfaces as `Err`.
+    pub fn recv_ack(&mut self, timeout: Duration) -> Result<BatchAck> {
+        let deadline = Instant::now() + timeout;
+        loop {
+            if let Some(ack) = self.acks.pop_front() {
+                return Ok(ack);
+            }
+            if !self.pump_once(deadline)? {
+                return Err(Error::closed("timed out waiting for ingest ack"));
+            }
+        }
+    }
+
+    /// Pop an already-received ack without blocking.
+    pub fn try_ack(&mut self) -> Option<BatchAck> {
+        self.acks.pop_front()
+    }
+
+    /// Read whatever is available until `timeout`, absorbing acks and
+    /// replies into the client's buffers. Returns the number of frames
+    /// absorbed (0 on timeout).
+    pub fn pump(&mut self, timeout: Duration) -> Result<usize> {
+        let deadline = Instant::now() + timeout;
+        let mut n = 0usize;
+        // absorb the first frame with the full timeout, then drain
+        // whatever is already buffered/readable without further waiting
+        if self.pump_once(deadline)? {
+            n += 1;
+            while self.pump_once(Instant::now())? {
+                n += 1;
+            }
+        }
+        Ok(n)
+    }
+
+    /// Move every buffered reply into `sink` (arrival order within an
+    /// ingest id; ids in arbitrary order).
+    pub fn drain_replies(&mut self, sink: &mut Vec<ReplyMsg>) {
+        for (_, mut msgs) in self.replies.drain() {
+            sink.append(&mut msgs);
+        }
+        self.reply_count = 0;
+    }
+
+    /// Buffered reply count.
+    pub fn pending_replies(&self) -> usize {
+        self.reply_count
+    }
+
+    /// Take the buffered replies for one ingest id (non-blocking).
+    pub fn take_event(&mut self, ingest_id: u64) -> Vec<ReplyMsg> {
+        match self.replies.remove(&ingest_id) {
+            Some(msgs) => {
+                self.reply_count -= msgs.len();
+                msgs
+            }
+            None => Vec::new(),
+        }
+    }
+
+    /// Block until `expected` replies for `ingest_id` are buffered, then
+    /// take them (the remote analogue of
+    /// [`crate::frontend::ReplyCollector::await_event`]).
+    pub fn await_event(
+        &mut self,
+        ingest_id: u64,
+        expected: u32,
+        timeout: Duration,
+    ) -> Result<Vec<ReplyMsg>> {
+        let deadline = Instant::now() + timeout;
+        loop {
+            let have = self.replies.get(&ingest_id).map(|v| v.len()).unwrap_or(0);
+            if have >= expected as usize {
+                return Ok(self.take_event(ingest_id));
+            }
+            if !self.pump_once(deadline)? {
+                return Err(Error::closed(format!(
+                    "timed out waiting for {expected} replies to ingest {ingest_id} (have {have})"
+                )));
+            }
+        }
+    }
+
+    /// Absorb exactly one frame, waiting until `deadline` for bytes.
+    /// Returns false when the deadline passes with no complete frame.
+    fn pump_once(&mut self, deadline: Instant) -> Result<bool> {
+        loop {
+            if let Some(frame) = self.parse_buffered()? {
+                self.absorb(frame)?;
+                return Ok(true);
+            }
+            let now = Instant::now();
+            if now >= deadline {
+                return Ok(false);
+            }
+            let wait = (deadline - now).min(Duration::from_millis(50));
+            self.stream
+                .set_read_timeout(Some(wait.max(Duration::from_millis(1))))?;
+            let mut chunk = [0u8; 64 * 1024];
+            match self.stream.read(&mut chunk) {
+                Ok(0) => return Err(Error::closed("server closed the connection")),
+                Ok(n) => self.rbuf.extend_from_slice(&chunk[..n]),
+                Err(e)
+                    if e.kind() == std::io::ErrorKind::WouldBlock
+                        || e.kind() == std::io::ErrorKind::TimedOut
+                        || e.kind() == std::io::ErrorKind::Interrupted => {}
+                Err(e) => return Err(e.into()),
+            }
+        }
+    }
+
+    /// Parse one complete frame off the front of the reassembly buffer.
+    fn parse_buffered(&mut self) -> Result<Option<Frame>> {
+        if self.rbuf.len() < HEADER_LEN {
+            return Ok(None);
+        }
+        let len = LittleEndian::read_u32(&self.rbuf[3..7]) as usize;
+        if len > self.max_frame {
+            return Err(Error::corrupt(format!(
+                "frame: body of {len} bytes exceeds max frame size {}",
+                self.max_frame
+            )));
+        }
+        let total = HEADER_LEN + len;
+        if self.rbuf.len() < total {
+            return Ok(None);
+        }
+        let frame = {
+            let mut cursor = Cursor::new(&self.rbuf[..total]);
+            wire::read_frame(&mut cursor, Some(&self.schema), self.max_frame)?
+                .expect("complete frame buffered")
+        };
+        self.rbuf.drain(..total);
+        Ok(Some(frame))
+    }
+
+    fn absorb(&mut self, frame: Frame) -> Result<()> {
+        match frame {
+            Frame::IngestAck {
+                seq,
+                first_ingest_id,
+                count,
+                fanout,
+            } => {
+                self.acks.push_back(BatchAck {
+                    seq,
+                    first_ingest_id,
+                    count,
+                    fanout,
+                });
+                Ok(())
+            }
+            Frame::ReplyBatch { msgs } => {
+                for m in msgs {
+                    self.reply_count += 1;
+                    self.replies.entry(m.ingest_id).or_default().push(m);
+                }
+                Ok(())
+            }
+            Frame::Err { fatal, message } => Err(if fatal {
+                Error::closed(format!("server error (fatal): {message}"))
+            } else {
+                Error::invalid(format!("server error: {message}"))
+            }),
+            other => Err(Error::corrupt(format!(
+                "unexpected frame from server: {other:?}"
+            ))),
+        }
+    }
+}

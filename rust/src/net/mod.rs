@@ -1,0 +1,30 @@
+//! `net` — the client/server boundary: a length-prefixed, CRC-checked
+//! binary TCP protocol over the existing varint event/reply codecs.
+//!
+//! The paper's evaluation is end-to-end: ingest→reply latency percentiles
+//! measured from *outside* the engine under sustained load. That needs a
+//! real process boundary — this module provides it:
+//!
+//! * [`wire`] — the frame codec (HELLO / HELLO_OK / INGEST_BATCH /
+//!   INGEST_ACK / REPLY_BATCH / ERR), versioned, CRC'd, size-capped;
+//! * [`server`] — a multi-threaded `std::net` TCP server fronting
+//!   [`crate::frontend::FrontEnd::ingest_batch`], streaming each
+//!   connection's replies back by subscribing the (sharded) reply topic
+//!   and routing on ingest id;
+//! * [`client`] — a blocking client with batched pipelining;
+//! * [`bench`] — the closed-loop harness behind `railgun bench-client`
+//!   (throughput + p50/p99/p999 ingest→reply latency).
+//!
+//! Start a server with `railgun serve --listen 127.0.0.1:7171 …` (or
+//! `EngineConfig::listen_addr`), point [`client::NetClient::connect`] or
+//! `railgun bench-client` at it.
+
+pub mod bench;
+pub mod client;
+pub mod server;
+pub mod wire;
+
+pub use bench::{run_closed_loop, BenchOptions, BenchReport};
+pub use client::{BatchAck, NetClient};
+pub use server::{NetOptions, NetServer};
+pub use wire::{Frame, PROTOCOL_VERSION};

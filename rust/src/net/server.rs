@@ -1,0 +1,596 @@
+//! Multi-threaded TCP server fronting a node's [`FrontEnd`].
+//!
+//! Threads:
+//!
+//! * **accept loop** — non-blocking accept + per-connection setup (and
+//!   reaping of finished connection threads);
+//! * **per-connection reader** — decodes frames; for each ingest batch
+//!   it **reserves** the ingest-id range
+//!   ([`FrontEnd::reserve_ingest_ids`]), registers it in the reply route
+//!   table, and only then publishes via
+//!   [`FrontEnd::ingest_batch_reserved`] — so a reply can never race its
+//!   route registration — then acks;
+//! * **per-connection writer** — single owner of the socket's write half;
+//!   acks, errors and reply batches all funnel through its channel, so
+//!   frame writes never interleave;
+//! * **reply pump** — one consumer (own group, starts at the live end)
+//!   over every shard of the reply topic; decodes reply records and routes
+//!   each [`ReplyMsg`] to the connection that ingested its `ingest_id`.
+//!
+//! Routing is exact, not broadcast: the reply topic is shared by every
+//! collector in the cluster, so the pump stashes replies for ingest ids
+//! it has no route for (other nodes' collectors, rejected batches) and
+//! prunes the stash on a short time horizon — foreign replies never
+//! accumulate, and thanks to reserve-before-publish the pruning can
+//! never touch a live client's replies.
+//!
+//! A malformed frame (bad magic/CRC, oversized, truncated, undecodable
+//! body) poisons only its own connection: the reader answers with a fatal
+//! ERR frame where possible and closes; the listener, the pump and every
+//! other connection keep running.
+
+use crate::config::EngineConfig;
+use crate::error::Result;
+use crate::frontend::{FrontEnd, ReplyMsg, REPLY_TOPIC};
+use crate::mlog::BrokerRef;
+use crate::net::wire::{self, Frame, PROTOCOL_VERSION};
+use crate::util::hash::FxHashMap;
+use std::io::Write;
+use std::net::{Shutdown, SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::mpsc::{Receiver, SyncSender, TryRecvError, TrySendError};
+use std::sync::{mpsc, Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+/// Stash entries survive this long while waiting for their ingest-id
+/// range to be registered (a reply races the reader's registration by
+/// milliseconds at most; the slack is generous).
+const STASH_KEEP: Duration = Duration::from_secs(2);
+/// Hard cap on stashed reply messages (protects the server from reply
+/// traffic that belongs to other collectors entirely).
+const STASH_MAX_MSGS: usize = 100_000;
+/// Bound on each connection's writer queue. The reader's acks use a
+/// blocking send (per-connection backpressure: a client that stops
+/// reading stops being read from), while the reply pump uses try_send
+/// and drops the batch for that connection when the queue is full — a
+/// stalled client times out instead of growing server memory.
+const CONN_QUEUE_FRAMES: usize = 1024;
+
+/// Tuning for the TCP server (subset of [`EngineConfig`]).
+#[derive(Debug, Clone)]
+pub struct NetOptions {
+    /// Max accepted frame body size in bytes.
+    pub max_frame_bytes: usize,
+    /// Set TCP_NODELAY on accepted connections.
+    pub nodelay: bool,
+}
+
+impl Default for NetOptions {
+    fn default() -> Self {
+        NetOptions {
+            max_frame_bytes: wire::DEFAULT_MAX_FRAME,
+            nodelay: true,
+        }
+    }
+}
+
+impl NetOptions {
+    /// Extract the net knobs from an engine config.
+    pub fn from_config(cfg: &EngineConfig) -> NetOptions {
+        NetOptions {
+            max_frame_bytes: cfg.net_max_frame_bytes,
+            nodelay: cfg.net_nodelay,
+        }
+    }
+}
+
+/// Messages funneled into a connection's writer thread.
+enum ConnMsg {
+    /// Write this frame.
+    Frame(Frame),
+    /// The reader is done: flush and exit.
+    Close,
+}
+
+struct Route {
+    conn_id: u64,
+    remaining: u32,
+}
+
+#[derive(Default)]
+struct RouteTable {
+    /// ingest id → owning connection + replies still expected.
+    routes: FxHashMap<u64, Route>,
+    /// Replies that arrived before their range was registered:
+    /// ingest id → (arrival time, messages).
+    stash: FxHashMap<u64, (Instant, Vec<ReplyMsg>)>,
+    stash_msgs: usize,
+}
+
+struct Shared {
+    frontend: Arc<FrontEnd>,
+    opts: NetOptions,
+    next_conn_id: AtomicU64,
+    /// conn id → writer channel (the pump's reply destination).
+    conns: Mutex<FxHashMap<u64, SyncSender<ConnMsg>>>,
+    /// Accepted sockets by conn id, kept so shutdown can unblock their
+    /// readers; entries are removed when the connection's reader exits.
+    socks: Mutex<FxHashMap<u64, TcpStream>>,
+    conn_joins: Mutex<Vec<JoinHandle<()>>>,
+    routes: Mutex<RouteTable>,
+}
+
+impl Shared {
+    /// Route the ingest-id range of a freshly accepted batch to `conn_id`,
+    /// delivering (and uncounting) anything the pump stashed first.
+    fn register_replies(&self, conn_id: u64, first: u64, count: u32, fanout: u32) {
+        if count == 0 || fanout == 0 {
+            return;
+        }
+        let mut early: Vec<ReplyMsg> = Vec::new();
+        {
+            let mut table = self.routes.lock().unwrap();
+            for id in first..first + count as u64 {
+                let mut remaining = fanout;
+                if let Some((_, msgs)) = table.stash.remove(&id) {
+                    table.stash_msgs -= msgs.len();
+                    remaining = remaining.saturating_sub(msgs.len() as u32);
+                    early.extend(msgs);
+                }
+                if remaining > 0 {
+                    table.routes.insert(id, Route { conn_id, remaining });
+                }
+            }
+        }
+        if !early.is_empty() {
+            let tx = self.conns.lock().unwrap().get(&conn_id).cloned();
+            if let Some(tx) = tx {
+                let _ = tx.try_send(ConnMsg::Frame(Frame::ReplyBatch { msgs: early }));
+            }
+        }
+    }
+
+    /// Drop the routes of a reserved range whose ingest was rejected.
+    fn unregister_replies(&self, first: u64, count: u32) {
+        let mut table = self.routes.lock().unwrap();
+        for id in first..first + count as u64 {
+            table.routes.remove(&id);
+        }
+    }
+}
+
+/// The TCP server. Dropping (or [`NetServer::shutdown`]) stops every
+/// thread and closes every connection.
+pub struct NetServer {
+    local_addr: SocketAddr,
+    running: Arc<AtomicBool>,
+    shared: Arc<Shared>,
+    accept_join: Option<JoinHandle<()>>,
+    pump_join: Option<JoinHandle<()>>,
+}
+
+impl NetServer {
+    /// Bind `addr` (e.g. `"127.0.0.1:0"` for an ephemeral port) and start
+    /// the accept loop + reply pump over `frontend`'s broker.
+    pub fn start(
+        frontend: Arc<FrontEnd>,
+        broker: BrokerRef,
+        addr: &str,
+        opts: NetOptions,
+    ) -> Result<NetServer> {
+        let listener = TcpListener::bind(addr)?;
+        let local_addr = listener.local_addr()?;
+        listener.set_nonblocking(true)?;
+        let running = Arc::new(AtomicBool::new(true));
+        let shared = Arc::new(Shared {
+            frontend,
+            opts,
+            next_conn_id: AtomicU64::new(0),
+            conns: Mutex::new(FxHashMap::default()),
+            socks: Mutex::new(FxHashMap::default()),
+            conn_joins: Mutex::new(Vec::new()),
+            routes: Mutex::new(RouteTable::default()),
+        });
+
+        static NEXT_SERVER: AtomicU64 = AtomicU64::new(0);
+        let server_id = NEXT_SERVER.fetch_add(1, Ordering::Relaxed);
+        let group = format!("railgun-net-{}-{server_id}", std::process::id());
+
+        let pump_join = {
+            let shared = shared.clone();
+            let running = running.clone();
+            std::thread::Builder::new()
+                .name(format!("net-pump-{server_id}"))
+                .spawn(move || reply_pump(broker, shared, running, group))
+                .map_err(|e| crate::error::Error::internal(format!("spawn pump: {e}")))?
+        };
+        let accept_join = {
+            let shared = shared.clone();
+            let running = running.clone();
+            std::thread::Builder::new()
+                .name(format!("net-accept-{server_id}"))
+                .spawn(move || accept_loop(listener, shared, running))
+                .map_err(|e| crate::error::Error::internal(format!("spawn accept: {e}")))?
+        };
+        log::info!("net server listening on {local_addr}");
+        Ok(NetServer {
+            local_addr,
+            running,
+            shared,
+            accept_join: Some(accept_join),
+            pump_join: Some(pump_join),
+        })
+    }
+
+    /// Bound address (resolves the actual port when bound with `:0`).
+    pub fn local_addr(&self) -> SocketAddr {
+        self.local_addr
+    }
+
+    /// Number of live connections (observability).
+    pub fn connection_count(&self) -> usize {
+        self.shared.conns.lock().unwrap().len()
+    }
+
+    /// Stop the server: unbind, close every connection, join all threads.
+    pub fn shutdown(mut self) {
+        self.stop();
+    }
+
+    fn stop(&mut self) {
+        if !self.running.swap(false, Ordering::SeqCst) {
+            return;
+        }
+        // join the accept loop first: once it is gone, no connection is
+        // mid-setup, so the socket sweep below is complete and every
+        // blocked reader gets unblocked
+        if let Some(j) = self.accept_join.take() {
+            let _ = j.join();
+        }
+        for (_, s) in self.shared.socks.lock().unwrap().drain() {
+            let _ = s.shutdown(Shutdown::Both);
+        }
+        if let Some(j) = self.pump_join.take() {
+            let _ = j.join();
+        }
+        let joins: Vec<JoinHandle<()>> =
+            std::mem::take(&mut *self.shared.conn_joins.lock().unwrap());
+        for j in joins {
+            let _ = j.join();
+        }
+    }
+}
+
+impl Drop for NetServer {
+    fn drop(&mut self) {
+        self.stop();
+    }
+}
+
+fn accept_loop(listener: TcpListener, shared: Arc<Shared>, running: Arc<AtomicBool>) {
+    while running.load(Ordering::Relaxed) {
+        match listener.accept() {
+            Ok((stream, peer)) => {
+                if let Err(e) = setup_conn(stream, &shared) {
+                    log::warn!("net: failed to set up connection from {peer}: {e}");
+                }
+            }
+            Err(ref e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                // reap handles of connections that already finished, so a
+                // long-lived server doesn't accumulate them
+                shared
+                    .conn_joins
+                    .lock()
+                    .unwrap()
+                    .retain(|j| !j.is_finished());
+                std::thread::sleep(Duration::from_millis(5));
+            }
+            Err(e) => {
+                log::warn!("net: accept error: {e}");
+                std::thread::sleep(Duration::from_millis(20));
+            }
+        }
+    }
+}
+
+fn setup_conn(stream: TcpStream, shared: &Arc<Shared>) -> Result<()> {
+    let conn_id = shared.next_conn_id.fetch_add(1, Ordering::Relaxed);
+    // the listener is non-blocking; on BSD-derived platforms the accepted
+    // socket inherits that flag, which would turn every read into an
+    // instant WouldBlock "protocol error"
+    stream.set_nonblocking(false)?;
+    let _ = stream.set_nodelay(shared.opts.nodelay);
+    let wstream = stream.try_clone()?;
+    shared.socks.lock().unwrap().insert(conn_id, stream.try_clone()?);
+    let (tx, rx) = mpsc::sync_channel::<ConnMsg>(CONN_QUEUE_FRAMES);
+    shared.conns.lock().unwrap().insert(conn_id, tx.clone());
+    let writer = std::thread::Builder::new()
+        .name(format!("net-conn{conn_id}-w"))
+        .spawn(move || conn_writer(wstream, rx))?;
+    let reader = {
+        let shared = shared.clone();
+        std::thread::Builder::new()
+            .name(format!("net-conn{conn_id}-r"))
+            .spawn(move || {
+                session(stream, &shared, conn_id, &tx);
+                shared.conns.lock().unwrap().remove(&conn_id);
+                shared.socks.lock().unwrap().remove(&conn_id);
+                let _ = tx.send(ConnMsg::Close);
+            })?
+    };
+    shared.conn_joins.lock().unwrap().extend([writer, reader]);
+    Ok(())
+}
+
+/// The per-connection protocol state machine (reader side). Every
+/// outbound frame goes through `tx` so writes never interleave with the
+/// pump's reply batches.
+fn session(stream: TcpStream, shared: &Arc<Shared>, conn_id: u64, tx: &SyncSender<ConnMsg>) {
+    let max_frame = shared.opts.max_frame_bytes;
+    let mut reader = std::io::BufReader::with_capacity(64 * 1024, stream);
+    let fatal = |tx: &SyncSender<ConnMsg>, message: String| {
+        let _ = tx.send(ConnMsg::Frame(Frame::Err {
+            fatal: true,
+            message,
+        }));
+    };
+
+    // handshake: exactly one HELLO
+    let (stream_name, schema, fanout) = match wire::read_frame(&mut reader, None, max_frame) {
+        Ok(Some(Frame::Hello { version, stream })) => {
+            if version != PROTOCOL_VERSION {
+                fatal(
+                    tx,
+                    format!(
+                        "unsupported protocol version {version} (server speaks {PROTOCOL_VERSION})"
+                    ),
+                );
+                return;
+            }
+            match shared.frontend.stream(&stream) {
+                Ok(def) => {
+                    let fanout = def.entities.len() as u32;
+                    let ok = Frame::HelloOk {
+                        version: PROTOCOL_VERSION,
+                        fanout,
+                        fields: wire::schema_fields(&def.schema),
+                    };
+                    if tx.send(ConnMsg::Frame(ok)).is_err() {
+                        return;
+                    }
+                    (stream, def.schema.clone(), fanout)
+                }
+                Err(e) => {
+                    fatal(tx, format!("handshake rejected: {e}"));
+                    return;
+                }
+            }
+        }
+        Ok(Some(_)) => {
+            fatal(tx, "expected HELLO as the first frame".to_string());
+            return;
+        }
+        Ok(None) => return, // closed before the handshake
+        Err(e) => {
+            fatal(tx, format!("protocol error: {e}"));
+            return;
+        }
+    };
+
+    loop {
+        match wire::read_frame(&mut reader, Some(&schema), max_frame) {
+            Ok(Some(Frame::IngestBatch { seq, events })) => {
+                // reserve the id range and route it to this connection
+                // BEFORE publishing: the back-end can start replying the
+                // moment records land, and a reply must never race its
+                // route registration
+                let count = events.len() as u32;
+                let first = shared.frontend.reserve_ingest_ids(count as u64);
+                shared.register_replies(conn_id, first, count, fanout);
+                match shared
+                    .frontend
+                    .ingest_batch_reserved(&stream_name, events, first)
+                {
+                    Ok(receipts) => {
+                        debug_assert_eq!(receipts.len() as u32, count);
+                        let ack = Frame::IngestAck {
+                            seq,
+                            first_ingest_id: first,
+                            count,
+                            fanout,
+                        };
+                        if tx.send(ConnMsg::Frame(ack)).is_err() {
+                            return;
+                        }
+                    }
+                    Err(e) => {
+                        // a rejected batch is the client's problem, not a
+                        // protocol violation: answer and keep serving.
+                        // Drop the routes; replies for any partially
+                        // published prefix fall back to the stash and age
+                        // out.
+                        shared.unregister_replies(first, count);
+                        let err = Frame::Err {
+                            fatal: false,
+                            message: format!("ingest rejected (seq {seq}): {e}"),
+                        };
+                        if tx.send(ConnMsg::Frame(err)).is_err() {
+                            return;
+                        }
+                    }
+                }
+            }
+            Ok(Some(other)) => {
+                fatal(
+                    tx,
+                    format!("unexpected frame {other:?} (only INGEST_BATCH after HELLO)"),
+                );
+                return;
+            }
+            Ok(None) => return, // clean client close
+            Err(e) => {
+                // corrupt/oversized/truncated frame: this connection can
+                // no longer be trusted, but only this connection
+                fatal(tx, format!("protocol error: {e}"));
+                return;
+            }
+        }
+    }
+}
+
+/// Writer side of one connection: drains the channel, batching writes and
+/// flushing once per drained burst.
+fn conn_writer(stream: TcpStream, rx: Receiver<ConnMsg>) {
+    let mut w = std::io::BufWriter::with_capacity(256 * 1024, stream);
+    'outer: loop {
+        let mut msg = match rx.recv() {
+            Ok(m) => m,
+            Err(_) => break,
+        };
+        loop {
+            match msg {
+                ConnMsg::Frame(f) => {
+                    if wire::write_frame(&mut w, &f, None).is_err() {
+                        break 'outer;
+                    }
+                }
+                ConnMsg::Close => break 'outer,
+            }
+            match rx.try_recv() {
+                Ok(m) => msg = m,
+                Err(TryRecvError::Empty) | Err(TryRecvError::Disconnected) => break,
+            }
+        }
+        if w.flush().is_err() {
+            break;
+        }
+    }
+    let _ = w.flush();
+}
+
+/// The reply pump: one consumer over every reply-topic shard, routing
+/// each message to the connection that owns its ingest id.
+fn reply_pump(broker: BrokerRef, shared: Arc<Shared>, running: Arc<AtomicBool>, group: String) {
+    let reply_partitions = shared.frontend.reply_partitions();
+    if let Err(e) = broker.ensure_topic(REPLY_TOPIC, reply_partitions) {
+        log::error!("net pump: cannot ensure reply topic: {e}");
+        return;
+    }
+    let mut consumer = match broker.consumer(&group, &[REPLY_TOPIC]) {
+        Ok(c) => c,
+        Err(e) => {
+            log::error!("net pump: cannot subscribe reply topic: {e}");
+            return;
+        }
+    };
+    // force the initial assignment, then start at the live end: replies
+    // to events ingested before this server existed belong to others
+    let _ = consumer.poll(0, Duration::from_millis(0));
+    for tp in consumer.assignment().to_vec() {
+        if let Ok(end) = broker.end_offset(&tp) {
+            consumer.seek(tp, end);
+        }
+    }
+
+    let mut deliveries: FxHashMap<u64, Vec<ReplyMsg>> = FxHashMap::default();
+    while running.load(Ordering::Relaxed) {
+        let polled = match consumer.poll(4096, Duration::from_millis(50)) {
+            Ok(p) => p,
+            Err(e) => {
+                log::warn!("net pump: poll failed: {e}");
+                std::thread::sleep(Duration::from_millis(20));
+                continue;
+            }
+        };
+        if polled.records.is_empty() {
+            continue;
+        }
+        // decode outside the routes lock: connection readers contend on
+        // it for every ingest registration, and bulk decoding under the
+        // lock would add avoidable ack latency
+        let mut decoded: Vec<ReplyMsg> = Vec::new();
+        for (_, rec) in polled.records {
+            match ReplyMsg::decode_batch(&rec.payload) {
+                Ok(mut m) => decoded.append(&mut m),
+                Err(e) => log::warn!("net pump: undecodable reply record: {e}"),
+            }
+        }
+        {
+            let mut table = shared.routes.lock().unwrap();
+            let now = Instant::now();
+            for msg in decoded {
+                let id = msg.ingest_id;
+                let routed = match table.routes.get_mut(&id) {
+                    Some(route) => {
+                        route.remaining -= 1;
+                        Some((route.conn_id, route.remaining == 0))
+                    }
+                    None => None,
+                };
+                match routed {
+                    Some((conn_id, done)) => {
+                        if done {
+                            table.routes.remove(&id);
+                        }
+                        deliveries.entry(conn_id).or_default().push(msg);
+                    }
+                    None => {
+                        // not registered (not ours, or a rejected batch's
+                        // partial prefix): stash
+                        table.stash_msgs += 1;
+                        table
+                            .stash
+                            .entry(id)
+                            .or_insert_with(|| (now, Vec::new()))
+                            .1
+                            .push(msg);
+                    }
+                }
+            }
+            // prune stash entries nobody claimed within the race window
+            // (replies that belong to other collectors on the shared
+            // reply topic — never this server's clients)
+            if table.stash_msgs > 0 {
+                let mut removed = 0usize;
+                table.stash.retain(|_, v| {
+                    if now.duration_since(v.0) < STASH_KEEP {
+                        true
+                    } else {
+                        removed += v.1.len();
+                        false
+                    }
+                });
+                table.stash_msgs -= removed;
+                if table.stash_msgs > STASH_MAX_MSGS {
+                    log::warn!(
+                        "net pump: dropping {} stashed replies (no owner registered)",
+                        table.stash_msgs
+                    );
+                    table.stash.clear();
+                    table.stash_msgs = 0;
+                }
+            }
+        }
+        for (conn_id, msgs) in deliveries.drain() {
+            let tx = shared.conns.lock().unwrap().get(&conn_id).cloned();
+            if let Some(tx) = tx {
+                match tx.try_send(ConnMsg::Frame(Frame::ReplyBatch { msgs })) {
+                    Ok(()) => {}
+                    Err(TrySendError::Full(_)) => {
+                        // slow consumer: drop this delivery rather than
+                        // letting one stalled client grow server memory;
+                        // the client sees a reply timeout
+                        log::warn!(
+                            "net pump: conn {conn_id} writer queue full; dropping replies"
+                        );
+                    }
+                    Err(TrySendError::Disconnected(_)) => {
+                        // writer is gone; drop the stale channel entry
+                        shared.conns.lock().unwrap().remove(&conn_id);
+                    }
+                }
+            }
+        }
+    }
+}

@@ -1,0 +1,687 @@
+//! The binary wire protocol: length-prefixed, CRC-checked frames.
+//!
+//! Frame layout (little-endian):
+//!
+//! ```text
+//! frame  := magic:u16 kind:u8 len:u32 crc:u32 body
+//! magic  := 0x4752 (bytes "RG" on the wire)
+//! crc    := crc32(body); len := body length in bytes
+//! ```
+//!
+//! Bodies reuse the crate's varint codec family: events travel in the
+//! stream-schema event codec ([`crate::event::codec`]), replies in the
+//! [`ReplyMsg`] codec — the exact bytes the in-process path publishes to
+//! the reply topic, which is what makes the remote path byte-equivalent.
+//!
+//! Session flow:
+//!
+//! ```text
+//! client                          server
+//!   HELLO {version, stream}  →
+//!                             ←  HELLO_OK {version, fanout, schema} | ERR
+//!   INGEST_BATCH {seq, events} →                    (pipelined freely)
+//!                             ←  INGEST_ACK {seq, first_id, n, fanout}
+//!                             ←  REPLY_BATCH {msgs}  (async, interleaved)
+//! ```
+//!
+//! Robustness: a reader rejects frames with a bad magic, a bad CRC, a
+//! truncated body or a body larger than its `max_frame` cap *before*
+//! trusting any of the content; the connection is then unusable (byte
+//! streams cannot resync) but the server process and its other
+//! connections are unaffected.
+
+use crate::error::{Error, Result};
+use crate::event::{codec, Event, FieldType, Schema, SchemaRef};
+use crate::frontend::ReplyMsg;
+use crate::util::varint;
+use byteorder::{ByteOrder, LittleEndian};
+use std::io::{Read, Write};
+
+/// Protocol version carried in HELLO / HELLO_OK.
+pub const PROTOCOL_VERSION: u32 = 1;
+
+/// Frame magic ("RG", little-endian u16).
+pub const MAGIC: u16 = 0x4752;
+
+/// Frame header size in bytes (magic + kind + len + crc).
+pub const HEADER_LEN: usize = 11;
+
+/// Default max frame body size (mirrors `EngineConfig::net_max_frame_bytes`).
+pub const DEFAULT_MAX_FRAME: usize = 8 << 20;
+
+const KIND_HELLO: u8 = 1;
+const KIND_HELLO_OK: u8 = 2;
+const KIND_INGEST_BATCH: u8 = 3;
+const KIND_INGEST_ACK: u8 = 4;
+const KIND_REPLY_BATCH: u8 = 5;
+const KIND_ERR: u8 = 6;
+
+/// One protocol frame.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Frame {
+    /// Client handshake: protocol version + stream to ingest into.
+    Hello {
+        /// Client protocol version.
+        version: u32,
+        /// Target stream name.
+        stream: String,
+    },
+    /// Server handshake answer: version, per-event reply fanout, and the
+    /// stream schema (so the client can encode events / decode replies
+    /// without out-of-band knowledge).
+    HelloOk {
+        /// Server protocol version.
+        version: u32,
+        /// Replies to expect per ingested event.
+        fanout: u32,
+        /// Stream schema fields as (name, type-tag) pairs.
+        fields: Vec<(String, FieldType)>,
+    },
+    /// A batch of events to ingest. `seq` is a client-chosen correlation
+    /// number echoed in the matching [`Frame::IngestAck`].
+    IngestBatch {
+        /// Client batch sequence number.
+        seq: u64,
+        /// Events, schema-encoded.
+        events: Vec<Event>,
+    },
+    /// Receipt for one ingest batch: ingest ids are contiguous from
+    /// `first_ingest_id`.
+    IngestAck {
+        /// Echoed client sequence number.
+        seq: u64,
+        /// First assigned ingest id.
+        first_ingest_id: u64,
+        /// Number of events accepted.
+        count: u32,
+        /// Replies to expect per event.
+        fanout: u32,
+    },
+    /// A batch of reply messages routed to this connection by ingest id.
+    ReplyBatch {
+        /// The replies.
+        msgs: Vec<ReplyMsg>,
+    },
+    /// Server-side error. `fatal` tells the client whether the connection
+    /// is still usable (a rejected batch is not fatal; a protocol
+    /// violation is).
+    Err {
+        /// Whether the server will close the connection.
+        fatal: bool,
+        /// Human-readable cause.
+        message: String,
+    },
+}
+
+impl Frame {
+    fn kind(&self) -> u8 {
+        match self {
+            Frame::Hello { .. } => KIND_HELLO,
+            Frame::HelloOk { .. } => KIND_HELLO_OK,
+            Frame::IngestBatch { .. } => KIND_INGEST_BATCH,
+            Frame::IngestAck { .. } => KIND_INGEST_ACK,
+            Frame::ReplyBatch { .. } => KIND_REPLY_BATCH,
+            Frame::Err { .. } => KIND_ERR,
+        }
+    }
+
+    /// Encode the frame body. `schema` is required only for
+    /// [`Frame::IngestBatch`] (events are schema-encoded).
+    pub fn encode_body(&self, schema: Option<&Schema>) -> Result<Vec<u8>> {
+        let mut out = Vec::with_capacity(64);
+        match self {
+            Frame::Hello { version, stream } => {
+                varint::write_u32(&mut out, *version);
+                varint::write_str(&mut out, stream);
+            }
+            Frame::HelloOk {
+                version,
+                fanout,
+                fields,
+            } => {
+                varint::write_u32(&mut out, *version);
+                varint::write_u32(&mut out, *fanout);
+                varint::write_u64(&mut out, fields.len() as u64);
+                for (name, ftype) in fields {
+                    varint::write_str(&mut out, name);
+                    out.push(ftype.tag());
+                }
+            }
+            Frame::IngestBatch { seq, events } => {
+                let schema = schema.ok_or_else(|| {
+                    Error::internal("encode INGEST_BATCH: schema not established")
+                })?;
+                varint::write_u64(&mut out, *seq);
+                varint::write_u64(&mut out, events.len() as u64);
+                for event in events {
+                    codec::encode_into(&mut out, event, schema, 0);
+                }
+            }
+            Frame::IngestAck {
+                seq,
+                first_ingest_id,
+                count,
+                fanout,
+            } => {
+                varint::write_u64(&mut out, *seq);
+                varint::write_u64(&mut out, *first_ingest_id);
+                varint::write_u32(&mut out, *count);
+                varint::write_u32(&mut out, *fanout);
+            }
+            Frame::ReplyBatch { msgs } => {
+                varint::write_u64(&mut out, msgs.len() as u64);
+                for m in msgs {
+                    m.encode_into(&mut out);
+                }
+            }
+            Frame::Err { fatal, message } => {
+                out.push(*fatal as u8);
+                varint::write_str(&mut out, message);
+            }
+        }
+        Ok(out)
+    }
+
+    /// Decode a frame body of a given `kind`. `schema` is required only
+    /// for [`Frame::IngestBatch`].
+    pub fn decode_body(kind: u8, body: &[u8], schema: Option<&Schema>) -> Result<Frame> {
+        let mut pos = 0usize;
+        let frame = match kind {
+            KIND_HELLO => {
+                let version = varint::read_u32(body, &mut pos)?;
+                let stream = varint::read_str(body, &mut pos)?.to_string();
+                Frame::Hello { version, stream }
+            }
+            KIND_HELLO_OK => {
+                let version = varint::read_u32(body, &mut pos)?;
+                let fanout = varint::read_u32(body, &mut pos)?;
+                let n = varint::read_u64(body, &mut pos)? as usize;
+                if n > 4096 {
+                    return Err(Error::corrupt(format!("HELLO_OK: absurd field count {n}")));
+                }
+                let mut fields = Vec::with_capacity(n);
+                for _ in 0..n {
+                    let name = varint::read_str(body, &mut pos)?.to_string();
+                    let tag = *body
+                        .get(pos)
+                        .ok_or_else(|| Error::corrupt("HELLO_OK: truncated field tag"))?;
+                    pos += 1;
+                    fields.push((name, FieldType::from_tag(tag)?));
+                }
+                Frame::HelloOk {
+                    version,
+                    fanout,
+                    fields,
+                }
+            }
+            KIND_INGEST_BATCH => {
+                let schema = schema.ok_or_else(|| {
+                    Error::invalid("INGEST_BATCH before HELLO established a stream")
+                })?;
+                let seq = varint::read_u64(body, &mut pos)?;
+                let n = varint::read_u64(body, &mut pos)? as usize;
+                if n > body.len() {
+                    // every event takes ≥1 byte; reject absurd counts
+                    // before reserving memory for them
+                    return Err(Error::corrupt(format!(
+                        "INGEST_BATCH: count {n} exceeds body size {}",
+                        body.len()
+                    )));
+                }
+                // cap the pre-reservation: a forged count must not force
+                // a huge allocation before decoding fails
+                let mut events = Vec::with_capacity(n.min(4096));
+                for _ in 0..n {
+                    events.push(codec::decode_from(body, &mut pos, schema, 0)?);
+                }
+                Frame::IngestBatch { seq, events }
+            }
+            KIND_INGEST_ACK => {
+                let seq = varint::read_u64(body, &mut pos)?;
+                let first_ingest_id = varint::read_u64(body, &mut pos)?;
+                let count = varint::read_u32(body, &mut pos)?;
+                let fanout = varint::read_u32(body, &mut pos)?;
+                Frame::IngestAck {
+                    seq,
+                    first_ingest_id,
+                    count,
+                    fanout,
+                }
+            }
+            KIND_REPLY_BATCH => {
+                let n = varint::read_u64(body, &mut pos)? as usize;
+                if n > body.len() {
+                    return Err(Error::corrupt(format!(
+                        "REPLY_BATCH: count {n} exceeds body size {}",
+                        body.len()
+                    )));
+                }
+                let mut msgs = Vec::with_capacity(n.min(4096));
+                for _ in 0..n {
+                    msgs.push(ReplyMsg::decode_from(body, &mut pos)?);
+                }
+                Frame::ReplyBatch { msgs }
+            }
+            KIND_ERR => {
+                let fatal = match body
+                    .get(pos)
+                    .ok_or_else(|| Error::corrupt("ERR: truncated fatal flag"))?
+                {
+                    0 => false,
+                    1 => true,
+                    t => return Err(Error::corrupt(format!("ERR: bad fatal flag {t}"))),
+                };
+                pos += 1;
+                let message = varint::read_str(body, &mut pos)?.to_string();
+                Frame::Err { fatal, message }
+            }
+            k => return Err(Error::corrupt(format!("unknown frame kind {k}"))),
+        };
+        if pos != body.len() {
+            return Err(Error::corrupt(format!(
+                "frame kind {kind}: {} trailing bytes",
+                body.len() - pos
+            )));
+        }
+        Ok(frame)
+    }
+
+    /// Encode the full frame (header + body) into a byte vector.
+    pub fn encode(&self, schema: Option<&Schema>) -> Result<Vec<u8>> {
+        let body = self.encode_body(schema)?;
+        let mut out = Vec::with_capacity(HEADER_LEN + body.len());
+        out.extend_from_slice(&MAGIC.to_le_bytes());
+        out.push(self.kind());
+        let mut word = [0u8; 4];
+        LittleEndian::write_u32(&mut word, body.len() as u32);
+        out.extend_from_slice(&word);
+        LittleEndian::write_u32(&mut word, crc32fast::hash(&body));
+        out.extend_from_slice(&word);
+        out.extend_from_slice(&body);
+        Ok(out)
+    }
+}
+
+/// Write one frame to `w` (single `write_all`, no flush — callers batch
+/// flushes across pipelined frames).
+pub fn write_frame<W: Write>(w: &mut W, frame: &Frame, schema: Option<&Schema>) -> Result<()> {
+    let bytes = frame.encode(schema)?;
+    w.write_all(&bytes)?;
+    Ok(())
+}
+
+/// Read one frame from `r`.
+///
+/// Returns `Ok(None)` on a clean EOF at a frame boundary. Frames with a
+/// bad magic, an oversized body (`> max_frame`), a CRC mismatch or a
+/// malformed body return `Err` — the stream can no longer be trusted.
+pub fn read_frame<R: Read>(
+    r: &mut R,
+    schema: Option<&Schema>,
+    max_frame: usize,
+) -> Result<Option<Frame>> {
+    let mut header = [0u8; HEADER_LEN];
+    // distinguish clean EOF (no bytes) from a truncated header
+    let mut filled = 0usize;
+    while filled < HEADER_LEN {
+        match r.read(&mut header[filled..]) {
+            Ok(0) => {
+                if filled == 0 {
+                    return Ok(None);
+                }
+                return Err(Error::corrupt("frame: truncated header at EOF"));
+            }
+            Ok(n) => filled += n,
+            Err(e) if e.kind() == std::io::ErrorKind::Interrupted => {}
+            Err(e) => return Err(e.into()),
+        }
+    }
+    let magic = LittleEndian::read_u16(&header[0..2]);
+    if magic != MAGIC {
+        return Err(Error::corrupt(format!("frame: bad magic {magic:#06x}")));
+    }
+    let kind = header[2];
+    let len = LittleEndian::read_u32(&header[3..7]) as usize;
+    let crc = LittleEndian::read_u32(&header[7..11]);
+    if len > max_frame {
+        return Err(Error::corrupt(format!(
+            "frame: body of {len} bytes exceeds max frame size {max_frame}"
+        )));
+    }
+    let mut body = vec![0u8; len];
+    r.read_exact(&mut body)
+        .map_err(|e| Error::corrupt(format!("frame: truncated body: {e}")))?;
+    if crc32fast::hash(&body) != crc {
+        return Err(Error::corrupt("frame: CRC mismatch"));
+    }
+    Frame::decode_body(kind, &body, schema).map(Some)
+}
+
+/// Schema fields as the (name, type) pairs HELLO_OK carries.
+pub fn schema_fields(schema: &Schema) -> Vec<(String, FieldType)> {
+    schema
+        .fields()
+        .iter()
+        .map(|f| (f.name.clone(), f.ftype))
+        .collect()
+}
+
+/// Rebuild a schema from HELLO_OK (name, type) pairs.
+pub fn schema_from_fields(fields: &[(String, FieldType)]) -> Result<SchemaRef> {
+    let pairs: Vec<(&str, FieldType)> = fields
+        .iter()
+        .map(|(n, t)| (n.as_str(), *t))
+        .collect();
+    Schema::of(&pairs)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::event::Value;
+    use crate::frontend::ReplyMetric;
+    use crate::util::propcheck::{check, Shrink};
+    use crate::workload::payments_schema;
+    use std::io::Cursor;
+
+    fn ev(ts: i64, card: &str, amount: f64) -> Event {
+        Event::new(
+            ts,
+            vec![
+                Value::Str(card.into()),
+                Value::Str("m1".into()),
+                Value::F64(amount),
+                Value::Bool(false),
+            ],
+        )
+    }
+
+    fn sample_frames() -> Vec<Frame> {
+        vec![
+            Frame::Hello {
+                version: PROTOCOL_VERSION,
+                stream: "payments".into(),
+            },
+            Frame::HelloOk {
+                version: PROTOCOL_VERSION,
+                fanout: 2,
+                fields: schema_fields(&payments_schema()),
+            },
+            Frame::IngestBatch {
+                seq: 7,
+                events: vec![ev(1000, "c1", 5.0), ev(2000, "c2", -1.5)],
+            },
+            Frame::IngestAck {
+                seq: 7,
+                first_ingest_id: u64::MAX - 3,
+                count: 2,
+                fanout: 2,
+            },
+            Frame::ReplyBatch {
+                msgs: vec![ReplyMsg {
+                    ingest_id: 42,
+                    topic: "payments.card".into(),
+                    partition: 3,
+                    event_ts: 1000,
+                    metrics: vec![
+                        ReplyMetric {
+                            name: "sum".into(),
+                            group: "c1".into(),
+                            value: Some(5.0),
+                        },
+                        ReplyMetric {
+                            name: "min".into(),
+                            group: "c1".into(),
+                            value: None,
+                        },
+                    ],
+                }],
+            },
+            Frame::Err {
+                fatal: true,
+                message: "boom".into(),
+            },
+        ]
+    }
+
+    #[test]
+    fn frames_roundtrip_through_a_stream() {
+        let schema = payments_schema();
+        let mut buf = Vec::new();
+        let frames = sample_frames();
+        for f in &frames {
+            write_frame(&mut buf, f, Some(&schema)).unwrap();
+        }
+        let mut cursor = Cursor::new(buf);
+        for f in &frames {
+            let back = read_frame(&mut cursor, Some(&schema), DEFAULT_MAX_FRAME)
+                .unwrap()
+                .expect("frame present");
+            assert_eq!(&back, f);
+        }
+        assert!(read_frame(&mut cursor, Some(&schema), DEFAULT_MAX_FRAME)
+            .unwrap()
+            .is_none(), "clean EOF after the last frame");
+    }
+
+    #[test]
+    fn truncation_anywhere_is_rejected_not_misread() {
+        let schema = payments_schema();
+        for f in sample_frames() {
+            let bytes = f.encode(Some(&schema)).unwrap();
+            for cut in 1..bytes.len() {
+                let mut cursor = Cursor::new(bytes[..cut].to_vec());
+                assert!(
+                    read_frame(&mut cursor, Some(&schema), DEFAULT_MAX_FRAME).is_err(),
+                    "cut at {cut}/{} of {f:?} must error",
+                    bytes.len()
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn corrupt_bytes_fail_crc() {
+        let schema = payments_schema();
+        let frame = Frame::IngestBatch {
+            seq: 1,
+            events: vec![ev(1, "c", 1.0)],
+        };
+        let bytes = frame.encode(Some(&schema)).unwrap();
+        // flip one bit in every body position: CRC must catch each
+        for i in HEADER_LEN..bytes.len() {
+            let mut bad = bytes.clone();
+            bad[i] ^= 0x40;
+            let mut cursor = Cursor::new(bad);
+            assert!(read_frame(&mut cursor, Some(&schema), DEFAULT_MAX_FRAME).is_err());
+        }
+        // bad magic
+        let mut bad = bytes.clone();
+        bad[0] = 0;
+        assert!(read_frame(&mut Cursor::new(bad), Some(&schema), DEFAULT_MAX_FRAME).is_err());
+        // unknown kind (fix up nothing else: kind is outside the CRC'd body)
+        let mut bad = bytes;
+        bad[2] = 0xEE;
+        assert!(read_frame(&mut Cursor::new(bad), Some(&schema), DEFAULT_MAX_FRAME).is_err());
+    }
+
+    #[test]
+    fn oversized_frames_are_rejected_before_allocation() {
+        let schema = payments_schema();
+        // forged header claiming a huge body
+        let mut bytes = Vec::new();
+        bytes.extend_from_slice(&MAGIC.to_le_bytes());
+        bytes.push(3);
+        bytes.extend_from_slice(&u32::MAX.to_le_bytes());
+        bytes.extend_from_slice(&0u32.to_le_bytes());
+        let err = read_frame(&mut Cursor::new(bytes), Some(&schema), 1024).unwrap_err();
+        assert!(err.to_string().contains("max frame size"), "{err}");
+        // a legitimately encoded frame above the cap is also refused
+        let frame = Frame::IngestBatch {
+            seq: 1,
+            events: (0..64).map(|i| ev(i, "cccccccccccc", 1.0)).collect(),
+        };
+        let bytes = frame.encode(Some(&schema)).unwrap();
+        assert!(read_frame(&mut Cursor::new(bytes), Some(&schema), 16).is_err());
+    }
+
+    #[test]
+    fn ingest_batch_needs_schema() {
+        let schema = payments_schema();
+        let frame = Frame::IngestBatch {
+            seq: 1,
+            events: vec![ev(1, "c", 1.0)],
+        };
+        let bytes = frame.encode(Some(&schema)).unwrap();
+        assert!(read_frame(&mut Cursor::new(bytes), None, DEFAULT_MAX_FRAME).is_err());
+        assert!(frame.encode(None).is_err());
+    }
+
+    #[test]
+    fn schema_fields_roundtrip() {
+        let schema = payments_schema();
+        let fields = schema_fields(&schema);
+        let back = schema_from_fields(&fields).unwrap();
+        assert_eq!(back.len(), schema.len());
+        for (i, f) in schema.fields().iter().enumerate() {
+            assert_eq!(back.fields()[i], *f);
+        }
+    }
+
+    /// Propcheck input: parameters describing a random frame.
+    #[derive(Debug, Clone)]
+    struct FrameSpec {
+        kind: u8,
+        a: u64,
+        b: u64,
+        n: usize,
+        s: String,
+        flag: bool,
+    }
+
+    impl Shrink for FrameSpec {
+        fn shrinks(&self) -> Vec<Self> {
+            let mut out = Vec::new();
+            for n in self.n.shrinks() {
+                out.push(FrameSpec { n, ..self.clone() });
+            }
+            for a in self.a.shrinks().into_iter().take(2) {
+                out.push(FrameSpec { a, ..self.clone() });
+            }
+            out
+        }
+    }
+
+    fn frame_of(spec: &FrameSpec) -> Frame {
+        match spec.kind % 6 {
+            0 => Frame::Hello {
+                version: spec.a as u32,
+                stream: spec.s.clone(),
+            },
+            1 => Frame::HelloOk {
+                version: spec.a as u32,
+                fanout: spec.b as u32,
+                fields: schema_fields(&payments_schema()),
+            },
+            2 => Frame::IngestBatch {
+                seq: spec.a,
+                events: (0..spec.n)
+                    .map(|i| ev(spec.b as i64 + i as i64, &spec.s, i as f64 / 3.0))
+                    .collect(),
+            },
+            3 => Frame::IngestAck {
+                seq: spec.a,
+                first_ingest_id: spec.b,
+                count: spec.n as u32,
+                fanout: 2,
+            },
+            4 => Frame::ReplyBatch {
+                msgs: (0..spec.n)
+                    .map(|i| ReplyMsg {
+                        ingest_id: spec.a.wrapping_add(i as u64),
+                        topic: spec.s.clone(),
+                        partition: spec.b as u32 % 64,
+                        event_ts: spec.b as i64,
+                        metrics: vec![ReplyMetric {
+                            name: "m".into(),
+                            group: spec.s.clone(),
+                            value: if spec.flag { Some(i as f64) } else { None },
+                        }],
+                    })
+                    .collect(),
+            },
+            _ => Frame::Err {
+                fatal: spec.flag,
+                message: spec.s.clone(),
+            },
+        }
+    }
+
+    #[test]
+    fn prop_random_frames_roundtrip() {
+        let schema = payments_schema();
+        check(
+            "wire frame roundtrip",
+            200,
+            |rng| FrameSpec {
+                kind: rng.next_below(6) as u8,
+                a: rng.next_u64(),
+                b: rng.next_u64(),
+                n: rng.index(20),
+                s: format!("s{}", rng.next_below(1000)),
+                flag: rng.chance(0.5),
+            },
+            |spec| {
+                let frame = frame_of(spec);
+                let bytes = frame
+                    .encode(Some(&schema))
+                    .map_err(|e| format!("encode: {e}"))?;
+                let back = read_frame(&mut Cursor::new(bytes), Some(&schema), DEFAULT_MAX_FRAME)
+                    .map_err(|e| format!("decode: {e}"))?
+                    .ok_or("unexpected EOF")?;
+                if back == frame {
+                    Ok(())
+                } else {
+                    Err(format!("mismatch: {back:?} != {frame:?}"))
+                }
+            },
+        );
+    }
+
+    #[test]
+    fn prop_truncated_random_frames_error() {
+        let schema = payments_schema();
+        check(
+            "wire frame truncation",
+            60,
+            |rng| {
+                (
+                    FrameSpec {
+                        kind: rng.next_below(6) as u8,
+                        a: rng.next_u64(),
+                        b: rng.next_u64(),
+                        n: rng.index(8),
+                        s: format!("s{}", rng.next_below(1000)),
+                        flag: rng.chance(0.5),
+                    },
+                    rng.next_u64(),
+                )
+            },
+            |(spec, cut_seed)| {
+                let frame = frame_of(spec);
+                let bytes = frame
+                    .encode(Some(&schema))
+                    .map_err(|e| format!("encode: {e}"))?;
+                let cut = 1 + (cut_seed % (bytes.len() as u64 - 1)) as usize;
+                match read_frame(
+                    &mut Cursor::new(bytes[..cut].to_vec()),
+                    Some(&schema),
+                    DEFAULT_MAX_FRAME,
+                ) {
+                    Err(_) => Ok(()),
+                    Ok(f) => Err(format!("truncated frame decoded as {f:?}")),
+                }
+            },
+        );
+    }
+}

@@ -282,11 +282,21 @@ impl Plan {
     fn subscribe(&mut self, offset_ms: i64, w_idx: usize, role: Role, reservoir: &Reservoir) {
         match self.bundles.iter_mut().find(|b| b.offset_ms == offset_ms) {
             Some(b) => b.subs.push((w_idx, role)),
-            None => self.bundles.push(Bundle {
-                offset_ms,
-                iter: reservoir.iterator_at(0),
-                subs: vec![(w_idx, role)],
-            }),
+            None => {
+                // keep bundles ordered by decreasing offset at registration
+                // time: expirations (large offsets) must drain before the
+                // live arrival frontier (offset 0), and hoisting the order
+                // here saves a sort on every advance() call
+                let pos = self.bundles.partition_point(|b| b.offset_ms > offset_ms);
+                self.bundles.insert(
+                    pos,
+                    Bundle {
+                        offset_ms,
+                        iter: reservoir.iterator_at(0),
+                        subs: vec![(w_idx, role)],
+                    },
+                );
+            }
         }
     }
 
@@ -302,12 +312,13 @@ impl Plan {
             )));
         }
         let mut replies = Vec::new();
+        // Bundles are kept in decreasing offset order by subscribe():
+        // expirations (large offsets) update state before the live arrival
+        // (offset 0) emits its replies, so every reply reflects the exact
+        // window content at T_eval. The ordering invariant is maintained
+        // at registration time — no per-advance sort.
         let mut bundles = std::mem::take(&mut self.bundles);
-        // Drain in decreasing offset order: expirations (large offsets)
-        // must update state before the live arrival (offset 0) emits its
-        // replies, so every reply reflects the exact window content at
-        // T_eval.
-        bundles.sort_by_key(|b| std::cmp::Reverse(b.offset_ms));
+        debug_assert!(bundles.windows(2).all(|w| w[0].offset_ms >= w[1].offset_ms));
         let mut failed: Option<Error> = None;
         'outer: for b in &mut bundles {
             let bound = t_eval - b.offset_ms;

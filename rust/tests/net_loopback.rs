@@ -1,0 +1,437 @@
+//! Loopback tests for the net subsystem: client/server roundtrips,
+//! poison-frame isolation, the closed-loop bench harness, and the
+//! equivalence of remote replies with the in-process ingest path — both
+//! in-process (fast) and across a real process boundary (spawning the
+//! `railgun` binary).
+
+use railgun::agg::AggKind;
+use railgun::config::{EngineConfig, StreamDef};
+use railgun::coordinator::Node;
+use railgun::event::{Event, Value};
+use railgun::frontend::ReplyMsg;
+use railgun::mlog::{Broker, BrokerConfig};
+use railgun::net::{wire, BenchOptions, NetClient};
+use railgun::net::wire::Frame;
+use railgun::plan::MetricSpec;
+use railgun::util::tmp::TempDir;
+use railgun::window::WindowSpec;
+use railgun::workload::payments_schema;
+use std::io::{Read, Write};
+use std::time::Duration;
+
+const LONG: Duration = Duration::from_secs(20);
+
+fn payments_def() -> StreamDef {
+    StreamDef {
+        name: "payments".into(),
+        schema: payments_schema(),
+        entities: vec!["card".into(), "merchant".into()],
+        metrics: vec![
+            MetricSpec::new(
+                "sum_by_card",
+                AggKind::Sum,
+                Some("amount"),
+                WindowSpec::sliding(300_000),
+                &["card"],
+            ),
+            MetricSpec::new(
+                "cnt_by_merchant",
+                AggKind::Count,
+                None,
+                WindowSpec::sliding(300_000),
+                &["merchant"],
+            ),
+        ],
+    }
+}
+
+fn ev(ts: i64, card: &str, merchant: &str, amount: f64) -> Event {
+    Event::new(
+        ts,
+        vec![
+            Value::Str(card.into()),
+            Value::Str(merchant.into()),
+            Value::F64(amount),
+            Value::Bool(false),
+        ],
+    )
+}
+
+fn sample_events(n: usize) -> Vec<Event> {
+    (0..n)
+        .map(|i| {
+            ev(
+                1_000 * i as i64,
+                &format!("c{}", i % 7),
+                &format!("m{}", i % 3),
+                (i % 11) as f64 * 1.5,
+            )
+        })
+        .collect()
+}
+
+/// Start a listening node on an ephemeral loopback port.
+fn listening_node(tmp: &TempDir) -> (Node, String) {
+    let cfg = EngineConfig {
+        listen_addr: Some("127.0.0.1:0".to_string()),
+        ..EngineConfig::for_testing(tmp.path().to_path_buf())
+    };
+    let broker = Broker::open(BrokerConfig::in_memory()).unwrap();
+    let node = Node::start("net-node", cfg, broker).unwrap();
+    node.register_stream(payments_def()).unwrap();
+    let addr = node.net_addr().expect("listening").to_string();
+    (node, addr)
+}
+
+/// Ingest through the wire and collect each event's full reply set.
+fn ingest_remote(addr: &str, events: &[Event]) -> Vec<Vec<ReplyMsg>> {
+    let mut client = NetClient::connect(addr, "payments").unwrap();
+    assert_eq!(client.fanout(), 2);
+    let ack = client.ingest_batch(events.to_vec(), LONG).unwrap();
+    assert_eq!(ack.count as usize, events.len());
+    assert_eq!(ack.fanout, 2);
+    (0..ack.count as u64)
+        .map(|i| {
+            client
+                .await_event(ack.first_ingest_id + i, ack.fanout, LONG)
+                .unwrap()
+        })
+        .collect()
+}
+
+/// Ingest in-process and collect each event's full reply set.
+fn ingest_local(node: &Node, events: &[Event]) -> Vec<Vec<ReplyMsg>> {
+    let mut collector = node.reply_collector().unwrap();
+    let receipts = node
+        .frontend()
+        .ingest_batch("payments", events.to_vec())
+        .unwrap();
+    receipts
+        .iter()
+        .map(|r| collector.await_event(r.ingest_id, r.fanout, LONG).unwrap())
+        .collect()
+}
+
+/// Canonical bytes of one event's reply set, with the (front-end-chosen)
+/// ingest id normalized away so two independent ingests compare equal.
+fn normalize(per_event: Vec<Vec<ReplyMsg>>) -> Vec<Vec<u8>> {
+    per_event
+        .into_iter()
+        .map(|mut msgs| {
+            for m in &mut msgs {
+                m.ingest_id = 0;
+            }
+            msgs.sort_by(|a, b| a.topic.cmp(&b.topic).then(a.partition.cmp(&b.partition)));
+            let mut buf = Vec::new();
+            for m in &msgs {
+                m.encode_into(&mut buf);
+            }
+            buf
+        })
+        .collect()
+}
+
+#[test]
+fn remote_ingest_reply_roundtrip() {
+    let tmp = TempDir::new("net_roundtrip");
+    let (node, addr) = listening_node(&tmp);
+    let events = sample_events(20);
+    let per_event = ingest_remote(&addr, &events);
+    assert_eq!(per_event.len(), 20);
+    for (i, msgs) in per_event.iter().enumerate() {
+        assert_eq!(msgs.len(), 2, "event {i}: one reply per entity topic");
+        let topics: Vec<&str> = msgs.iter().map(|m| m.topic.as_str()).collect();
+        assert!(topics.contains(&"payments.card"), "{topics:?}");
+        assert!(topics.contains(&"payments.merchant"), "{topics:?}");
+        for m in msgs {
+            assert_eq!(m.event_ts, events[i].timestamp);
+            assert!(!m.metrics.is_empty());
+        }
+    }
+    node.shutdown(true);
+}
+
+#[test]
+fn pipelined_batches_ack_in_order_with_contiguous_ids() {
+    let tmp = TempDir::new("net_pipeline");
+    let (node, addr) = listening_node(&tmp);
+    let mut client = NetClient::connect(&addr, "payments").unwrap();
+    let mut seqs = Vec::new();
+    for chunk in sample_events(30).chunks(10) {
+        seqs.push(client.send_batch(chunk.to_vec()).unwrap());
+    }
+    let mut next_id = None;
+    for seq in seqs {
+        let ack = client.recv_ack(LONG).unwrap();
+        assert_eq!(ack.seq, seq, "acks arrive in send order");
+        assert_eq!(ack.count, 10);
+        if let Some(expect) = next_id {
+            assert_eq!(ack.first_ingest_id, expect, "ids are contiguous");
+        }
+        next_id = Some(ack.first_ingest_id + ack.count as u64);
+    }
+    node.shutdown(true);
+}
+
+#[test]
+fn unknown_stream_and_bad_version_are_rejected() {
+    let tmp = TempDir::new("net_reject");
+    let (node, addr) = listening_node(&tmp);
+    // unknown stream: clean protocol-level rejection
+    let err = NetClient::connect(&addr, "nope").unwrap_err();
+    assert!(err.to_string().contains("rejected"), "{err}");
+    // wrong protocol version, via a raw socket
+    let mut raw = std::net::TcpStream::connect(&addr).unwrap();
+    let hello = Frame::Hello {
+        version: 999,
+        stream: "payments".into(),
+    };
+    raw.write_all(&hello.encode(None).unwrap()).unwrap();
+    raw.set_read_timeout(Some(LONG)).unwrap();
+    match wire::read_frame(&mut raw, None, wire::DEFAULT_MAX_FRAME).unwrap() {
+        Some(Frame::Err { fatal, message }) => {
+            assert!(fatal);
+            assert!(message.contains("version"), "{message}");
+        }
+        other => panic!("expected fatal ERR, got {other:?}"),
+    }
+    // the server is unaffected: a good client still works
+    assert_eq!(ingest_remote(&addr, &sample_events(3)).len(), 3);
+    node.shutdown(true);
+}
+
+#[test]
+fn corrupt_and_oversized_frames_poison_only_their_connection() {
+    let tmp = TempDir::new("net_poison");
+    let (node, addr) = listening_node(&tmp);
+
+    // garbage bytes: the connection dies (ERR or plain close)…
+    let mut raw = std::net::TcpStream::connect(&addr).unwrap();
+    raw.write_all(&[0xde, 0xad, 0xbe, 0xef].repeat(8)).unwrap();
+    raw.set_read_timeout(Some(LONG)).unwrap();
+    match wire::read_frame(&mut raw, None, wire::DEFAULT_MAX_FRAME) {
+        Ok(Some(Frame::Err { fatal, .. })) => assert!(fatal),
+        Ok(Some(other)) => panic!("expected ERR, got {other:?}"),
+        Ok(None) | Err(_) => {} // connection closed without a frame: fine
+    }
+
+    // …an oversized frame header likewise…
+    let mut raw = std::net::TcpStream::connect(&addr).unwrap();
+    let mut forged = Vec::new();
+    forged.extend_from_slice(&wire::MAGIC.to_le_bytes());
+    forged.push(3); // INGEST_BATCH
+    forged.extend_from_slice(&(u32::MAX).to_le_bytes()); // absurd length
+    forged.extend_from_slice(&0u32.to_le_bytes());
+    raw.write_all(&forged).unwrap();
+    raw.set_read_timeout(Some(LONG)).unwrap();
+    match wire::read_frame(&mut raw, None, wire::DEFAULT_MAX_FRAME) {
+        Ok(Some(Frame::Err { fatal, message })) => {
+            assert!(fatal);
+            assert!(message.contains("max frame"), "{message}");
+        }
+        Ok(Some(other)) => panic!("expected ERR, got {other:?}"),
+        Ok(None) | Err(_) => {}
+    }
+
+    // …a CRC flip on an otherwise valid frame too…
+    let mut raw = std::net::TcpStream::connect(&addr).unwrap();
+    let mut bytes = Frame::Hello {
+        version: wire::PROTOCOL_VERSION,
+        stream: "payments".into(),
+    }
+    .encode(None)
+    .unwrap();
+    let last = bytes.len() - 1;
+    bytes[last] ^= 0x01;
+    raw.write_all(&bytes).unwrap();
+    raw.set_read_timeout(Some(LONG)).unwrap();
+    match wire::read_frame(&mut raw, None, wire::DEFAULT_MAX_FRAME) {
+        Ok(Some(Frame::Err { fatal, .. })) => assert!(fatal),
+        Ok(Some(other)) => panic!("expected ERR, got {other:?}"),
+        Ok(None) | Err(_) => {}
+    }
+
+    // …but the server process and fresh connections are unharmed
+    let per_event = ingest_remote(&addr, &sample_events(5));
+    assert_eq!(per_event.len(), 5);
+    node.shutdown(true);
+}
+
+#[test]
+fn rejected_batch_is_not_fatal() {
+    let tmp = TempDir::new("net_rejected_batch");
+    let (node, addr) = listening_node(&tmp);
+    let mut client = NetClient::connect(&addr, "payments").unwrap();
+    // schema-invalid event: wrong arity
+    let bad = vec![Event::new(5, vec![Value::I64(1)])];
+    let err = client.ingest_batch(bad, LONG).unwrap_err();
+    assert!(err.to_string().contains("ingest rejected"), "{err}");
+    // the same connection keeps working afterwards
+    let ack = client.ingest_batch(sample_events(4), LONG).unwrap();
+    assert_eq!(ack.count, 4);
+    let replies = client
+        .await_event(ack.first_ingest_id, ack.fanout, LONG)
+        .unwrap();
+    assert_eq!(replies.len(), 2);
+    node.shutdown(true);
+}
+
+#[test]
+fn remote_replies_equal_in_process_replies() {
+    let events = sample_events(40);
+
+    let tmp_remote = TempDir::new("net_eq_remote");
+    let (remote_node, addr) = listening_node(&tmp_remote);
+    let remote = normalize(ingest_remote(&addr, &events));
+    remote_node.shutdown(true);
+
+    let tmp_local = TempDir::new("net_eq_local");
+    let broker = Broker::open(BrokerConfig::in_memory()).unwrap();
+    let local_node = Node::start(
+        "local-node",
+        EngineConfig::for_testing(tmp_local.path().to_path_buf()),
+        broker,
+    )
+    .unwrap();
+    local_node.register_stream(payments_def()).unwrap();
+    let local = normalize(ingest_local(&local_node, &events));
+    local_node.shutdown(true);
+
+    assert_eq!(remote.len(), local.len());
+    for (i, (r, l)) in remote.iter().zip(local.iter()).enumerate() {
+        assert_eq!(r, l, "event {i}: remote reply bytes differ from in-process");
+    }
+}
+
+#[test]
+fn closed_loop_bench_completes_every_event() {
+    let tmp = TempDir::new("net_bench");
+    let (node, addr) = listening_node(&tmp);
+    let opts = BenchOptions {
+        events: 2_000,
+        batch: 128,
+        pipeline: 4,
+        cardinality: 50,
+        timeout: Duration::from_secs(60),
+    };
+    let report = railgun::net::run_closed_loop(&addr, "payments", &opts).unwrap();
+    assert_eq!(report.events_sent, 2_000);
+    assert_eq!(report.events_completed, 2_000);
+    assert_eq!(report.replies, 2 * 2_000, "fanout 2 replies per event");
+    assert!(report.hist.count() == 2_000);
+    let text = report.render();
+    assert!(text.contains("RESULT events=2000"), "{text}");
+    node.shutdown(true);
+}
+
+/// The real thing: a separate `railgun serve --listen` OS process, driven
+/// over loopback, must produce byte-identical replies to the in-process
+/// path and shut down cleanly on stdin EOF.
+#[test]
+fn two_process_loopback_equivalence_and_clean_shutdown() {
+    let tmp = TempDir::new("net_two_proc");
+    let data_dir = tmp.join("serve-data");
+    let engine_json = format!(
+        r#"{{"data_dir": "{}", "processor_units": 1, "partitions_per_topic": 2,
+             "reply_partitions": 2}}"#,
+        data_dir.display()
+    );
+    let stream_json = r#"{
+        "name": "payments",
+        "schema": [
+            {"name": "card", "type": "str"},
+            {"name": "merchant", "type": "str"},
+            {"name": "amount", "type": "f64"},
+            {"name": "cnp", "type": "bool"}
+        ],
+        "entities": ["card", "merchant"],
+        "metrics": [
+            {"name": "sum_by_card", "agg": "sum", "field": "amount",
+             "window_ms": 300000, "group_by": ["card"]},
+            {"name": "cnt_by_merchant", "agg": "count",
+             "window_ms": 300000, "group_by": ["merchant"]}
+        ]
+    }"#;
+    let engine_path = tmp.join("engine.json");
+    let stream_path = tmp.join("stream.json");
+    std::fs::write(&engine_path, engine_json).unwrap();
+    std::fs::write(&stream_path, stream_json).unwrap();
+
+    let mut child = std::process::Command::new(env!("CARGO_BIN_EXE_railgun"))
+        .arg("serve")
+        .arg("--config")
+        .arg(&engine_path)
+        .arg("--stream")
+        .arg(&stream_path)
+        .arg("--listen")
+        .arg("127.0.0.1:0")
+        .stdin(std::process::Stdio::piped())
+        .stdout(std::process::Stdio::piped())
+        .stderr(std::process::Stdio::null())
+        .spawn()
+        .expect("spawn railgun serve");
+
+    // parse "LISTEN <addr>" from the child's stdout
+    let mut stdout = child.stdout.take().expect("piped stdout");
+    let addr = {
+        let mut buf = Vec::new();
+        let mut byte = [0u8; 1];
+        loop {
+            match stdout.read(&mut byte) {
+                Ok(0) => panic!("serve exited before announcing its address"),
+                Ok(_) => {
+                    if byte[0] == b'\n' {
+                        break;
+                    }
+                    buf.push(byte[0]);
+                }
+                Err(e) => panic!("reading serve stdout: {e}"),
+            }
+        }
+        let line = String::from_utf8(buf).unwrap();
+        let addr = line
+            .strip_prefix("LISTEN ")
+            .unwrap_or_else(|| panic!("unexpected announcement: {line}"))
+            .trim()
+            .to_string();
+        addr
+    };
+
+    // drive the remote process and an equivalent in-process node
+    let events = sample_events(30);
+    let remote = normalize(ingest_remote(&addr, &events));
+
+    let tmp_local = TempDir::new("net_two_proc_local");
+    let broker = Broker::open(BrokerConfig::in_memory()).unwrap();
+    let local_node = Node::start(
+        "local-node",
+        EngineConfig::for_testing(tmp_local.path().to_path_buf()),
+        broker,
+    )
+    .unwrap();
+    local_node.register_stream(payments_def()).unwrap();
+    let local = normalize(ingest_local(&local_node, &events));
+    local_node.shutdown(true);
+
+    assert_eq!(remote.len(), local.len());
+    for (i, (r, l)) in remote.iter().zip(local.iter()).enumerate() {
+        assert_eq!(r, l, "event {i}: cross-process reply bytes differ");
+    }
+
+    // closing stdin must shut the server down cleanly
+    drop(child.stdin.take());
+    let status = {
+        let deadline = std::time::Instant::now() + Duration::from_secs(30);
+        loop {
+            match child.try_wait().expect("try_wait") {
+                Some(status) => break status,
+                None if std::time::Instant::now() > deadline => {
+                    let _ = child.kill();
+                    panic!("serve did not exit within 30s of stdin EOF");
+                }
+                None => std::thread::sleep(Duration::from_millis(50)),
+            }
+        }
+    };
+    assert!(status.success(), "serve exited with {status}");
+}
