@@ -67,7 +67,7 @@ fn main() -> railgun::Result<()> {
         tp.process(&Record {
             offset: i,
             timestamp: env.event.timestamp,
-            key: vec![],
+            key: vec![].into(),
             payload: env.encode(&schema).into(),
         })?;
     }
@@ -123,7 +123,7 @@ fn main() -> railgun::Result<()> {
     tp.process(&Record {
         offset: 20_000,
         timestamp: env.event.timestamp,
-        key: vec![],
+        key: vec![].into(),
         payload: env.encode(&schema).into(),
     })?;
     let after_sum = tp.query("sum_30m", &[Value::Str(probe_card.into())])?;

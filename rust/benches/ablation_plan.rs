@@ -103,7 +103,7 @@ fn run(shared: bool, events: u64, seed: u64) -> Series {
         let record = Record {
             offset: i,
             timestamp: event.timestamp,
-            key: vec![],
+            key: vec![].into(),
             payload: Envelope { ingest_id: i, event }.encode(&schema).into(),
         };
         injector.observe(|| tp.process(&record).unwrap());

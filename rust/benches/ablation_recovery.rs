@@ -95,7 +95,7 @@ fn main() {
                 tp.process(&Record {
                     offset: i,
                     timestamp: event.timestamp,
-                    key: vec![],
+                    key: vec![].into(),
                     payload: Envelope { ingest_id: i, event }.encode(&schema).into(),
                 })
                 .unwrap();

@@ -1,6 +1,8 @@
-//! Batch-first data plane throughput: the fig5-style workload
-//! (`sum(amount) group by card`, 60-minute sliding window, synthetic
-//! fraud trace) driven through the full stack by both client paths:
+//! Batch-first data plane throughput + the plan evaluation hot path.
+//!
+//! **Part 1 — ingest paths.** The fig5-style workload (`sum(amount)
+//! group by card`, 60-minute sliding window, synthetic fraud trace)
+//! driven through the full stack by both client paths:
 //!
 //! * **per-event** — `ingest` one event, await its replies, repeat (the
 //!   seed's request-response hot path: every event pays producer
@@ -10,26 +12,48 @@
 //!   processed batch, coalesced state-store writes).
 //!
 //! Per-event evaluation accuracy is identical on both paths (see
-//! `rust/tests/batch_equivalence.rs`); this bench measures the
-//! amortization win only. The headline check: batched ingest sustains
-//! **≥ 2×** the per-event events/sec.
+//! `rust/tests/batch_equivalence.rs`); this measures the amortization
+//! win only. Headline check: batched ingest sustains **≥ 2×** the
+//! per-event events/sec.
+//!
+//! **Part 2 — plan hot path** (`--hotpath-only` runs just this). High
+//! group cardinality, every aggregation kind on one shared window,
+//! driven straight through `Plan::advance_batch` with the streamed
+//! reply encoding — the zero-allocation evaluation path. The baseline
+//! series drives the **same** engine plus an op-for-op emulation of the
+//! per-event allocations the pre-refactor path performed (metric-name
+//! `String` clone and `Vec<String>`+`join` group render per reply,
+//! per-event reply `Vec`s, `Vec<u8>`-keyed state-cache probe with
+//! clone-on-insert, dirty-set key clones drained into a `Vec<Vec<u8>>`
+//! per batch, a fresh `Vec` per `COUNT_DISTINCT` event — the originals
+//! live in git history). Headline check: the streamed/interned path
+//! sustains **≥ 1.5×** the legacy-allocation baseline (enforced on
+//! full-size runs; `--quick` — the CI smoke on shared runners —
+//! reports the ratio without a noise-sensitive hard gate), and the
+//! result is emitted as `BENCH_plan_hotpath.json`.
 //!
 //! ```text
-//! cargo bench --bench batch_throughput [-- --quick]
+//! cargo bench --bench batch_throughput [-- --quick] [-- --hotpath-only]
 //! ```
 
 use railgun::agg::AggKind;
 use railgun::config::{EngineConfig, StreamDef};
 use railgun::coordinator::Node;
-use railgun::event::Event;
-use railgun::frontend::ReplyCollector;
+use railgun::event::{Event, Value};
+use railgun::frontend::{ReplyCollector, ReplyMsg};
+use railgun::kvstore::{Store, StoreOptions};
 use railgun::mlog::{Broker, BrokerConfig};
-use railgun::plan::MetricSpec;
+use railgun::plan::{MetricReply, MetricSpec, Plan, ReplyCtx, ReplySink, StateStore};
+use railgun::reservoir::{Reservoir, ReservoirConfig};
 use railgun::util::bench::{print_csv, print_table, BenchOpts, Series};
 use railgun::util::clock::ms;
+use railgun::util::hash::{hash64, FxHashMap, FxHashSet};
+use railgun::util::json::Json;
 use railgun::util::tmp::TempDir;
+use railgun::util::varint;
 use railgun::window::WindowSpec;
 use railgun::workload::{payments_schema, FraudGenerator, WorkloadConfig};
+use std::sync::Arc;
 use std::time::{Duration, Instant};
 
 const WINDOW: i64 = 60 * ms::MINUTE;
@@ -134,36 +158,374 @@ fn batched_series(n: u64, seed: u64, batch: usize) -> Series {
     s
 }
 
+// ---------------------------------------------------------------------------
+// Part 2: the plan evaluation hot path (streamed/interned vs legacy-alloc)
+// ---------------------------------------------------------------------------
+
+const HOTPATH_WINDOW: i64 = 60 * ms::SECOND;
+const HOTPATH_BATCH: usize = 1024;
+
+/// Every aggregation kind over one shared sliding window, grouped by
+/// card — one window node, one group node, seven aggregator leaves.
+fn hotpath_specs() -> Vec<MetricSpec> {
+    let w = WindowSpec::sliding(HOTPATH_WINDOW);
+    vec![
+        MetricSpec::new("cnt", AggKind::Count, None, w, &["card"]),
+        MetricSpec::new("sum", AggKind::Sum, Some("amount"), w, &["card"]),
+        MetricSpec::new("avg", AggKind::Avg, Some("amount"), w, &["card"]),
+        MetricSpec::new("sdev", AggKind::StdDev, Some("amount"), w, &["card"]),
+        MetricSpec::new("min", AggKind::Min, Some("amount"), w, &["card"]),
+        MetricSpec::new("max", AggKind::Max, Some("amount"), w, &["card"]),
+        MetricSpec::new(
+            "dmerch",
+            AggKind::CountDistinct,
+            Some("merchant"),
+            w,
+            &["card"],
+        ),
+    ]
+}
+
+/// Deterministic high-cardinality event stream (cards cycle so the
+/// steady state — every group interned — dominates the measurement).
+fn hotpath_events(n: u64, cards: u64) -> Vec<Event> {
+    let base = 1_600_000_000_000i64;
+    (0..n)
+        .map(|i| {
+            Event::new(
+                base + i as i64 * 5,
+                vec![
+                    Value::Str(format!("c{}", i % cards)),
+                    Value::Str(format!("m{}", i % 503)),
+                    Value::F64((i % 997) as f64 / 7.0),
+                    Value::Bool(false),
+                ],
+            )
+        })
+        .collect()
+}
+
+fn hotpath_rig(tmp: &TempDir, tag: &str) -> (Reservoir, Plan) {
+    let rcfg = ReservoirConfig {
+        chunk_events: 4096,
+        cache_chunks: 64,
+        ..ReservoirConfig::new(tmp.join(tag).join("reservoir"))
+    };
+    let reservoir = Reservoir::open(rcfg, payments_schema()).unwrap();
+    let store =
+        Arc::new(Store::open(&tmp.join(tag).join("state"), StoreOptions::default()).unwrap());
+    // the slab must hold the whole working set (7 metrics x cards
+    // groups) — the bench measures the zero-allocation steady state,
+    // not eviction/reload churn
+    let state = StateStore::new(store, 256 * 1024);
+    let plan = Plan::build(payments_schema(), &hotpath_specs(), &reservoir, state).unwrap();
+    (reservoir, plan)
+}
+
+/// The production reply path in miniature: POD replies streamed into a
+/// reusable encode buffer via `ReplyMsg::encode_parts` (names resolved
+/// from the interner at encode time), mirroring the task processor's
+/// per-shard sink without a broker in the loop.
+struct StreamedSink {
+    buf: Vec<u8>,
+    current: Vec<MetricReply>,
+    ingest: u64,
+    msgs: u64,
+}
+
+impl ReplySink for StreamedSink {
+    fn push(&mut self, _ctx: &ReplyCtx<'_>, reply: MetricReply) {
+        self.current.push(reply);
+    }
+
+    fn event_done(&mut self, ctx: &ReplyCtx<'_>, t_eval: i64) {
+        self.ingest += 1;
+        ReplyMsg::encode_parts(
+            &mut self.buf,
+            self.ingest,
+            "bench.card",
+            0,
+            t_eval,
+            self.current
+                .iter()
+                .map(|m| (ctx.metric_name(m.metric_id), ctx.group(m.group_id), m.value)),
+        );
+        self.current.clear();
+        self.msgs += 1;
+        if self.buf.len() > 1 << 20 {
+            self.buf.clear(); // discard encoded records, keep capacity
+        }
+    }
+}
+
+struct LegacyMetric {
+    name: String,
+    group: String,
+    value: Option<f64>,
+}
+
+struct LegacyReplyMsg {
+    ingest_id: u64,
+    topic: String,
+    event_ts: i64,
+    metrics: Vec<LegacyMetric>,
+}
+
+/// Op-for-op emulation of the per-event costs the pre-refactor path
+/// paid (the original code was deleted by the zero-allocation refactor;
+/// see git history). Per reply: metric-name `String` clone, group
+/// rendered through a `Vec<String>` + `join`, a composed `Vec<u8>`
+/// state key hashed against a byte-keyed map with clone-on-insert, and
+/// a dirty-set key clone per first touch. Per event: a fresh metrics
+/// `Vec` and (for COUNT_DISTINCT) a fresh 16-byte `Vec`. Per batch: the
+/// dirty keys cloned out into a `Vec<Vec<u8>>` (the old
+/// `end_deferred`). The live engine underneath is identical, so the
+/// measured gap is the steady-state cost of exactly this allocation and
+/// hashing churn — a conservative bound, since the old byte-keyed state
+/// cache also replaced the (cheaper) slab indexing that both series pay
+/// here.
+struct LegacySink {
+    pending: Vec<LegacyReplyMsg>,
+    current: Vec<LegacyMetric>,
+    cache_keys: FxHashMap<Vec<u8>, u64>,
+    dirty: FxHashSet<Vec<u8>>,
+    distinct_metric: u32,
+    encode_buf: Vec<u8>,
+    ingest: u64,
+}
+
+impl ReplySink for LegacySink {
+    fn push(&mut self, ctx: &ReplyCtx<'_>, r: MetricReply) {
+        let name = ctx.metric_name(r.metric_id).to_string();
+        let fields: Vec<String> = ctx.group(r.group_id).split(',').map(str::to_string).collect();
+        let group = fields.join(",");
+        let mut key = Vec::with_capacity(32);
+        varint::write_u32(&mut key, r.metric_id);
+        key.extend_from_slice(group.as_bytes());
+        if !self.cache_keys.contains_key(&key) {
+            self.cache_keys.insert(key.clone(), 0);
+        }
+        if r.metric_id == self.distinct_metric {
+            let mut kb = Vec::with_capacity(16);
+            kb.extend_from_slice(group.as_bytes());
+            std::hint::black_box(hash64(&kb));
+        }
+        if !self.dirty.contains(key.as_slice()) {
+            self.dirty.insert(key);
+        }
+        self.current.push(LegacyMetric {
+            name,
+            group,
+            value: r.value,
+        });
+    }
+
+    fn event_done(&mut self, _ctx: &ReplyCtx<'_>, t_eval: i64) {
+        self.ingest += 1;
+        self.pending.push(LegacyReplyMsg {
+            ingest_id: self.ingest,
+            // the old path materialized one ReplyMsg per event, cloning
+            // the source topic name into it
+            topic: "bench.card".to_string(),
+            event_ts: t_eval,
+            metrics: std::mem::take(&mut self.current),
+        });
+        if self.pending.len() >= 64 {
+            for m in &self.pending {
+                ReplyMsg::encode_parts(
+                    &mut self.encode_buf,
+                    m.ingest_id,
+                    &m.topic,
+                    0,
+                    m.event_ts,
+                    m.metrics
+                        .iter()
+                        .map(|x| (x.name.as_str(), x.group.as_str(), x.value)),
+                );
+            }
+            self.encode_buf.clear();
+            self.pending.clear();
+        }
+    }
+}
+
+/// Drive `n` events through the plan in `HOTPATH_BATCH`-sized
+/// `advance_batch` calls, returning events/sec; `per_batch` runs after
+/// every batch (the legacy series drains its emulated dirty set there).
+fn hotpath_drive<S: ReplySink>(
+    label: &str,
+    events: Vec<Event>,
+    reservoir: &mut Reservoir,
+    plan: &mut Plan,
+    sink: &mut S,
+    mut per_batch: impl FnMut(&mut S),
+) -> Series {
+    let n = events.len() as u64;
+    let mut t_evals: Vec<i64> = Vec::with_capacity(HOTPATH_BATCH);
+    let mut it = events.into_iter();
+    let mut last_t = i64::MIN;
+    let t0 = Instant::now();
+    loop {
+        t_evals.clear();
+        while t_evals.len() < HOTPATH_BATCH {
+            match it.next() {
+                Some(e) => {
+                    last_t = (e.timestamp + 1).max(last_t);
+                    t_evals.push(last_t);
+                    reservoir.append(e).unwrap();
+                }
+                None => break,
+            }
+        }
+        if t_evals.is_empty() {
+            break;
+        }
+        plan.advance_batch(&t_evals, sink).unwrap();
+        per_batch(sink);
+    }
+    let elapsed = t0.elapsed();
+    let mut s = Series::new(label);
+    s.throughput_eps = n as f64 / elapsed.as_secs_f64();
+    s.note("events", n);
+    s.note("groups", plan.interned_groups());
+    s
+}
+
+/// Returns `(streamed, legacy)` series and emits `BENCH_plan_hotpath.json`.
+fn plan_hotpath(opts: &BenchOpts) -> (Series, Series) {
+    let n = opts.scale(400_000);
+    let cards = (n / 20).max(1_000);
+    let tmp = TempDir::new("plan_hotpath");
+
+    let (mut res_a, mut plan_a) = hotpath_rig(&tmp, "streamed");
+    let mut streamed_sink = StreamedSink {
+        buf: Vec::with_capacity(1 << 20),
+        current: Vec::new(),
+        ingest: 0,
+        msgs: 0,
+    };
+    let streamed = hotpath_drive(
+        "streamed(interned)",
+        hotpath_events(n, cards),
+        &mut res_a,
+        &mut plan_a,
+        &mut streamed_sink,
+        |_| {},
+    );
+    assert_eq!(streamed_sink.msgs, n, "one reply message per event");
+
+    let (mut res_b, mut plan_b) = hotpath_rig(&tmp, "legacy");
+    let mut legacy_sink = LegacySink {
+        pending: Vec::new(),
+        current: Vec::new(),
+        cache_keys: FxHashMap::default(),
+        dirty: FxHashSet::default(),
+        // the COUNT_DISTINCT metric is registered last in hotpath_specs
+        distinct_metric: (hotpath_specs().len() - 1) as u32,
+        encode_buf: Vec::new(),
+        ingest: 0,
+    };
+    let legacy = hotpath_drive(
+        "legacy-alloc(emulated)",
+        hotpath_events(n, cards),
+        &mut res_b,
+        &mut plan_b,
+        &mut legacy_sink,
+        |sink| {
+            // the old end_deferred: every dirty key cloned out per batch
+            let drained: Vec<Vec<u8>> = sink.dirty.iter().cloned().collect();
+            std::hint::black_box(drained.len());
+            sink.dirty.clear();
+        },
+    );
+
+    let speedup = streamed.throughput_eps / legacy.throughput_eps;
+    let json = Json::obj([
+        ("bench", Json::Str("plan_hotpath".into())),
+        ("events", Json::Int(n as i64)),
+        ("group_cardinality", Json::Int(cards as i64)),
+        ("agg_kinds", Json::Int(hotpath_specs().len() as i64)),
+        (
+            "series",
+            Json::Arr(
+                [&streamed, &legacy]
+                    .iter()
+                    .map(|s| {
+                        Json::obj([
+                            ("label", Json::Str(s.label.clone())),
+                            ("throughput_eps", Json::Float(s.throughput_eps)),
+                        ])
+                    })
+                    .collect(),
+            ),
+        ),
+        ("speedup", Json::Float(speedup)),
+        ("target", Json::Float(1.5)),
+    ]);
+    std::fs::write("BENCH_plan_hotpath.json", format!("{json}\n"))
+        .expect("write BENCH_plan_hotpath.json");
+    (streamed, legacy)
+}
+
 fn main() {
     railgun::util::logging::init();
     let opts = BenchOpts::from_args();
-    let n = opts.scale(30_000);
+    let hotpath_only = std::env::args().any(|a| a == "--hotpath-only");
 
-    let single = per_event_series(n, opts.seed);
-    let mut series = vec![single.clone()];
-    for batch in [32usize, 256] {
-        series.push(batched_series(n, opts.seed, batch));
+    if !hotpath_only {
+        let n = opts.scale(30_000);
+        let single = per_event_series(n, opts.seed);
+        let mut series = vec![single.clone()];
+        for batch in [32usize, 256] {
+            series.push(batched_series(n, opts.seed, batch));
+        }
+
+        print_table(
+            "Batch-first data plane — fig5 workload (60-min window, sum by card / avg by merchant)",
+            &series,
+        );
+        print_csv("batch_throughput", &series);
+
+        let best = series[1..]
+            .iter()
+            .map(|s| s.throughput_eps)
+            .fold(0.0f64, f64::max);
+        let speedup = best / single.throughput_eps;
+        println!(
+            "\nbatched vs per-event speedup: {speedup:.2}x (target ≥ 2x) — \
+             {:.0} ev/s vs {:.0} ev/s",
+            best, single.throughput_eps
+        );
+        assert!(
+            speedup >= 2.0,
+            "batched ingest must sustain ≥ 2x the per-event path (got {speedup:.2}x)"
+        );
+        println!("shape check passed: batched ≥ 2x per-event");
     }
 
+    let (streamed, legacy) = plan_hotpath(&opts);
     print_table(
-        "Batch-first data plane — fig5 workload (60-min window, sum by card / avg by merchant)",
-        &series,
+        "Plan evaluation hot path — all agg kinds, high group cardinality (60s window)",
+        &[streamed.clone(), legacy.clone()],
     );
-    print_csv("batch_throughput", &series);
-
-    let best = series[1..]
-        .iter()
-        .map(|s| s.throughput_eps)
-        .fold(0.0f64, f64::max);
-    let speedup = best / single.throughput_eps;
+    print_csv("plan_hotpath", &[streamed.clone(), legacy.clone()]);
+    let speedup = streamed.throughput_eps / legacy.throughput_eps;
     println!(
-        "\nbatched vs per-event speedup: {speedup:.2}x (target ≥ 2x) — \
-         {:.0} ev/s vs {:.0} ev/s",
-        best, single.throughput_eps
+        "\nstreamed/interned vs legacy-alloc speedup: {speedup:.2}x (target ≥ 1.5x) — \
+         {:.0} ev/s vs {:.0} ev/s (BENCH_plan_hotpath.json written)",
+        streamed.throughput_eps, legacy.throughput_eps
     );
-    assert!(
-        speedup >= 2.0,
-        "batched ingest must sustain ≥ 2x the per-event path (got {speedup:.2}x)"
-    );
-    println!("shape check passed: batched ≥ 2x per-event");
+    // the ≥1.5x gate is enforced on full-size runs; --quick (the CI
+    // smoke, 10x-reduced workload on shared runners) reports the ratio
+    // and emits the artifact without a noise-sensitive hard failure
+    if opts.quick {
+        println!("quick mode: speedup gate reported, not enforced");
+    } else {
+        assert!(
+            speedup >= 1.5,
+            "the zero-allocation hot path must sustain ≥ 1.5x the legacy-allocation \
+             baseline (got {speedup:.2}x)"
+        );
+        println!("shape check passed: hot path ≥ 1.5x legacy baseline");
+    }
 }

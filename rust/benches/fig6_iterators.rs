@@ -89,7 +89,7 @@ fn run_with_windows(n_windows: usize, events: u64, seed: u64) -> Series {
         let record = Record {
             offset: i,
             timestamp: event.timestamp,
-            key: vec![],
+            key: vec![].into(),
             payload: Envelope {
                 ingest_id: i,
                 event,

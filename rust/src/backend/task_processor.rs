@@ -6,16 +6,25 @@
 //! plan evaluates every window at every event timestamp via
 //! [`Plan::advance_batch`] (per-event accuracy is preserved — batching
 //! only amortizes overheads), and the replies of the whole batch are
-//! published as **one** reply-topic record (bounded by the
+//! published as **one** reply-topic record per shard (bounded by the
 //! `reply_flush_events` config knob) in the varint binary codec.
+//!
+//! Replies are **streamed**: the plan pushes POD
+//! [`MetricReply`]s into this processor's [`ReplySink`], which encodes
+//! each event's reply message straight into reusable per-shard record
+//! buffers ([`ReplyMsg::encode_parts`]), resolving metric and group
+//! names from the plan's interner at encode time. No per-event
+//! `Vec<MetricReply>`, no owned name/group `String`s — the wire format
+//! is byte-identical to the materialized `ReplyMsg` path it replaced.
 
 use crate::config::{EngineConfig, StreamDef};
 use crate::error::{Error, Result};
-use crate::frontend::{Envelope, ReplyMetric, ReplyMsg, REPLY_TOPIC};
+use crate::frontend::{reply_partition_for, Envelope, ReplyMsg, REPLY_TOPIC};
 use crate::kvstore::{Store, StoreOptions};
 use crate::mlog::{Producer, Record};
-use crate::plan::{MetricReply, MetricSpec, Plan, StateStore};
+use crate::plan::{MetricReply, MetricSpec, Plan, ReplyCtx, ReplySink, StateStore};
 use crate::reservoir::{Reservoir, ReservoirConfig};
+use crate::util::clock::TimestampMs;
 use std::path::PathBuf;
 use std::sync::Arc;
 
@@ -41,6 +50,96 @@ pub struct TaskProcessor {
     checkpoint_every: u64,
     /// Number of events replayed during recovery (observability).
     pub recovered_events: u64,
+    /// Reusable per-batch evaluation times (no per-batch allocation).
+    t_evals: Vec<TimestampMs>,
+    /// Reusable per-batch (ingest_id, event_ts) metadata.
+    reply_meta: Vec<(u64, i64)>,
+    /// Reusable POD reply buffer for the event currently being encoded.
+    reply_current: Vec<MetricReply>,
+    /// Reusable per-shard reply-record encode buffers.
+    reply_shards: Vec<Vec<u8>>,
+}
+
+/// The task processor's [`ReplySink`]: encodes each event's replies
+/// straight into the per-shard record buffer its ingest id routes to.
+/// Producer errors are latched (`send_err`) and surfaced after the
+/// plan's batch completes, preserving the pre-streaming error order
+/// (send error > decode error > plan error).
+struct ShardEncodeSink<'a> {
+    /// (ingest_id, event_ts) per appended event, in evaluation order.
+    meta: &'a [(u64, i64)],
+    /// Next `meta` entry — `event_done` fires once per evaluated event.
+    next: usize,
+    current: &'a mut Vec<MetricReply>,
+    shards: &'a mut [Vec<u8>],
+    topic: &'a str,
+    partition: u32,
+    reply_partitions: u32,
+    /// Flush the shard buffers after this many encoded messages.
+    flush_events: usize,
+    buffered: usize,
+    last_ts: i64,
+    producer: &'a Producer,
+    send_err: Option<Error>,
+}
+
+impl ShardEncodeSink<'_> {
+    /// Publish every non-empty shard buffer as one reply-topic record.
+    fn flush(&mut self) {
+        if self.buffered == 0 {
+            return;
+        }
+        for (p, buf) in self.shards.iter_mut().enumerate() {
+            if buf.is_empty() {
+                continue;
+            }
+            if self.send_err.is_none() {
+                if let Err(e) =
+                    self.producer
+                        .send(REPLY_TOPIC, p as u32, self.last_ts, vec![], &buf[..])
+                {
+                    self.send_err = Some(e);
+                }
+            }
+            buf.clear();
+        }
+        self.buffered = 0;
+    }
+}
+
+impl ReplySink for ShardEncodeSink<'_> {
+    fn push(&mut self, _ctx: &ReplyCtx<'_>, reply: MetricReply) {
+        self.current.push(reply);
+    }
+
+    fn event_done(&mut self, ctx: &ReplyCtx<'_>, _t_eval: TimestampMs) {
+        let (ingest_id, ts) = match self.meta.get(self.next) {
+            Some(&m) => m,
+            None => {
+                // recovery replay advances without ingested records
+                self.current.clear();
+                return;
+            }
+        };
+        self.next += 1;
+        let shard = reply_partition_for(ingest_id, self.reply_partitions) as usize;
+        ReplyMsg::encode_parts(
+            &mut self.shards[shard],
+            ingest_id,
+            self.topic,
+            self.partition,
+            ts,
+            self.current
+                .iter()
+                .map(|m| (ctx.metric_name(m.metric_id), ctx.group(m.group_id), m.value)),
+        );
+        self.current.clear();
+        self.last_ts = ts;
+        self.buffered += 1;
+        if self.buffered >= self.flush_events {
+            self.flush();
+        }
+    }
 }
 
 impl TaskProcessor {
@@ -121,11 +220,9 @@ impl TaskProcessor {
             plan.restore_positions(&positions, i64::MIN);
             let mut replay = reservoir.iterator_at(start_seq);
             let mut t_evals: Vec<i64> = Vec::with_capacity(1024);
-            let mut sink = Vec::new();
             let mut last_t = i64::MIN;
             loop {
                 t_evals.clear();
-                sink.clear(); // replies are dropped during replay
                 while t_evals.len() < 1024 {
                     match replay.next(|_, e| e.timestamp)? {
                         Some(ts) => {
@@ -138,7 +235,10 @@ impl TaskProcessor {
                 if t_evals.is_empty() {
                     break;
                 }
-                plan.advance_batch(&t_evals, &mut sink)?;
+                // replies are discarded during replay; the dispatch pass
+                // re-interns every live group, rebuilding the interner
+                // state the checkpoint deliberately does not persist
+                plan.advance_batch(&t_evals, &mut ())?;
                 recovered_events += t_evals.len() as u64;
             }
         }
@@ -161,6 +261,10 @@ impl TaskProcessor {
             events_since_checkpoint: 0,
             checkpoint_every: cfg.checkpoint_every,
             recovered_events,
+            t_evals: Vec::new(),
+            reply_meta: Vec::new(),
+            reply_current: Vec::new(),
+            reply_shards: vec![Vec::new(); reply_partitions.max(1) as usize],
         })
     }
 
@@ -239,48 +343,52 @@ impl TaskProcessor {
         // producers, so evaluation times are clamped monotonic.
         // `processed` advances with every successful append so a
         // mid-batch failure can never double-append on redelivery.
-        let mut meta = Vec::with_capacity(envelopes.len());
-        let mut t_evals = Vec::with_capacity(envelopes.len());
+        self.reply_meta.clear();
+        self.t_evals.clear();
         let mut last_t = self.plan.last_t_eval();
         for env in envelopes {
             let ts = env.event.timestamp;
             self.reservoir.append(env.event)?;
             self.processed += 1;
             self.events_since_checkpoint += 1;
-            meta.push((env.ingest_id, ts));
+            self.reply_meta.push((env.ingest_id, ts));
             last_t = (ts + 1).max(last_t);
-            t_evals.push(last_t);
+            self.t_evals.push(last_t);
         }
 
-        // evaluate per event; on a plan error the evaluated prefix's
-        // replies are still published below (the plan's iterators resume
-        // from their positions on the next batch — appended events are
-        // evaluated then, at later eval times, as in the per-record loop)
-        let mut per_event: Vec<Vec<MetricReply>> = Vec::new();
-        let plan_result = self.plan.advance_batch(&t_evals, &mut per_event);
-        if self.replies_enabled {
-            let mut pending: Vec<ReplyMsg> = Vec::with_capacity(per_event.len());
-            for ((ingest_id, ts), replies) in meta.into_iter().zip(per_event) {
-                pending.push(ReplyMsg {
-                    ingest_id,
-                    topic: self.topic.clone(),
-                    partition: self.partition,
-                    event_ts: ts,
-                    metrics: replies
-                        .into_iter()
-                        .map(|r| ReplyMetric {
-                            name: r.metric,
-                            group: r.group,
-                            value: r.value,
-                        })
-                        .collect(),
-                });
-                if pending.len() >= self.reply_flush_events {
-                    self.flush_replies(&mut pending)?;
-                }
+        // evaluate per event, streaming each event's replies straight
+        // into the per-shard record buffers its ingest id routes to (the
+        // reply topic is sharded — [`crate::frontend::reply_partition_for`]
+        // — so multiple collectors and the net server's reply streams
+        // scale). On a plan error the evaluated prefix's replies are
+        // still published (the plan's iterators resume from their
+        // positions on the next batch — appended events are evaluated
+        // then, at later eval times, as in the per-record loop).
+        let plan_result = if self.replies_enabled {
+            self.reply_current.clear();
+            let mut sink = ShardEncodeSink {
+                meta: &self.reply_meta,
+                next: 0,
+                current: &mut self.reply_current,
+                shards: &mut self.reply_shards,
+                topic: &self.topic,
+                partition: self.partition,
+                reply_partitions: self.reply_partitions,
+                flush_events: self.reply_flush_events,
+                buffered: 0,
+                last_ts: 0,
+                producer: &self.producer,
+                send_err: None,
+            };
+            let r = self.plan.advance_batch(&self.t_evals, &mut sink);
+            sink.flush();
+            if let Some(e) = sink.send_err {
+                return Err(e);
             }
-            self.flush_replies(&mut pending)?;
-        }
+            r
+        } else {
+            self.plan.advance_batch(&self.t_evals, &mut ())
+        };
         if let Some(e) = failed {
             return Err(e);
         }
@@ -289,35 +397,6 @@ impl TaskProcessor {
         if self.events_since_checkpoint >= self.checkpoint_every {
             self.checkpoint()?;
         }
-        Ok(())
-    }
-
-    /// Publish the accumulated reply messages, one reply-topic record per
-    /// shard the batch's ingest ids route to (the reply topic is sharded
-    /// by ingest id — [`crate::frontend::reply_partition_for`] — so
-    /// multiple collectors and the net server's reply streams scale).
-    fn flush_replies(&mut self, pending: &mut Vec<ReplyMsg>) -> Result<()> {
-        if pending.is_empty() {
-            return Ok(());
-        }
-        let ts = pending.last().expect("non-empty").event_ts;
-        if self.reply_partitions <= 1 {
-            let payload = ReplyMsg::encode_batch(pending);
-            self.producer.send(REPLY_TOPIC, 0, ts, vec![], payload)?;
-        } else {
-            // one pass: bucket each message's encoding into its shard
-            let mut shards: Vec<Vec<u8>> = vec![Vec::new(); self.reply_partitions as usize];
-            for msg in pending.iter() {
-                let p = crate::frontend::reply_partition_for(msg.ingest_id, self.reply_partitions);
-                msg.encode_into(&mut shards[p as usize]);
-            }
-            for (p, payload) in shards.into_iter().enumerate() {
-                if !payload.is_empty() {
-                    self.producer.send(REPLY_TOPIC, p as u32, ts, vec![], payload)?;
-                }
-            }
-        }
-        pending.clear();
         Ok(())
     }
 
@@ -401,7 +480,7 @@ mod tests {
         Record {
             offset,
             timestamp: ts,
-            key: card.as_bytes().to_vec(),
+            key: card.as_bytes().into(),
             payload: env.encode(&payments_schema()).into(),
         }
     }

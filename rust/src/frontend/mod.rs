@@ -114,18 +114,29 @@ pub struct ReplyMsg {
 }
 
 impl ReplyMsg {
-    /// Append the varint binary encoding (the on-wire reply format; the
-    /// same codec family the event envelopes use).
-    pub fn encode_into(&self, out: &mut Vec<u8>) {
-        varint::write_u64(out, self.ingest_id);
-        varint::write_str(out, &self.topic);
-        varint::write_u32(out, self.partition);
-        varint::write_i64(out, self.event_ts);
-        varint::write_u64(out, self.metrics.len() as u64);
-        for m in &self.metrics {
-            varint::write_str(out, &m.name);
-            varint::write_str(out, &m.group);
-            match m.value {
+    /// Streaming encoder: append one reply message built from parts,
+    /// without materializing a `ReplyMsg` (owned `String`s). This is the
+    /// task processors' zero-allocation reply path — metric/group names
+    /// arrive as borrowed `&str`s resolved from the plan's interner.
+    /// [`ReplyMsg::encode_into`] delegates here, so the two encodings can
+    /// never drift: the wire format stays byte-identical.
+    pub fn encode_parts<'m>(
+        out: &mut Vec<u8>,
+        ingest_id: u64,
+        topic: &str,
+        partition: u32,
+        event_ts: i64,
+        metrics: impl ExactSizeIterator<Item = (&'m str, &'m str, Option<f64>)>,
+    ) {
+        varint::write_u64(out, ingest_id);
+        varint::write_str(out, topic);
+        varint::write_u32(out, partition);
+        varint::write_i64(out, event_ts);
+        varint::write_u64(out, metrics.len() as u64);
+        for (name, group, value) in metrics {
+            varint::write_str(out, name);
+            varint::write_str(out, group);
+            match value {
                 Some(v) => {
                     out.push(1);
                     out.extend_from_slice(&v.to_bits().to_le_bytes());
@@ -133,6 +144,21 @@ impl ReplyMsg {
                 None => out.push(0),
             }
         }
+    }
+
+    /// Append the varint binary encoding (the on-wire reply format; the
+    /// same codec family the event envelopes use).
+    pub fn encode_into(&self, out: &mut Vec<u8>) {
+        Self::encode_parts(
+            out,
+            self.ingest_id,
+            &self.topic,
+            self.partition,
+            self.event_ts,
+            self.metrics
+                .iter()
+                .map(|m| (m.name.as_str(), m.group.as_str(), m.value)),
+        );
     }
 
     /// Decode one message from `buf` at `*pos`, advancing `*pos`.

@@ -136,6 +136,11 @@ impl Consumer {
     /// Fetch up to `max` records, blocking up to `timeout` when no data
     /// is available. Also performs the group heartbeat; membership
     /// changes surface in [`PollResult::rebalanced`].
+    ///
+    /// Records come out of the partition's in-memory tail as cheap
+    /// clones: payload **and** key are `Arc<[u8]>`-backed, so a poll
+    /// bumps refcounts instead of copying bytes — no per-record
+    /// allocation on the hot consume path.
     pub fn poll(&mut self, max: usize, timeout: Duration) -> Result<PollResult> {
         let deadline = Instant::now() + timeout;
         let mut result = PollResult::default();

@@ -12,7 +12,9 @@ use std::time::Duration;
 pub type PartitionId = u32;
 
 /// One record-to-be, pre-assembled by a producer for a batched append.
-/// Offsets are assigned by the partition at append time.
+/// Offsets are assigned by the partition at append time. The key moves
+/// into the record's shared `Arc<[u8]>` backing, so consumers cloning
+/// the record out of the tail never copy it.
 #[derive(Debug, Clone)]
 pub struct BatchEntry {
     /// Producer-supplied timestamp (epoch ms).
@@ -192,7 +194,14 @@ impl Partition {
             let record = Record {
                 offset: base + total,
                 timestamp: entry.timestamp,
-                key: entry.key,
+                // key-less records (every reply record) share one static
+                // empty Arc; keyed records pay one Vec→Arc move per
+                // append, repaid by allocation-free clones on every poll
+                key: if entry.key.is_empty() {
+                    segment::empty_bytes()
+                } else {
+                    entry.key.into()
+                },
                 payload: entry.payload,
             };
             if durable {

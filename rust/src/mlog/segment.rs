@@ -28,15 +28,28 @@ use std::sync::Arc;
 /// refactor removed).
 pub type Payload = Arc<[u8]>;
 
+/// Shared empty byte buffer: key-less records (reply records, tests)
+/// clone this instead of allocating a fresh `Arc` per record.
+pub fn empty_bytes() -> Payload {
+    static EMPTY: once_cell::sync::Lazy<Payload> =
+        once_cell::sync::Lazy::new(|| Payload::from(&[][..]));
+    EMPTY.clone()
+}
+
 /// A single message in a partition log.
+///
+/// Both `key` and `payload` are `Arc<[u8]>`-backed: cloning a record out
+/// of the in-memory tail (every [`crate::mlog::Consumer::poll`]) bumps
+/// two refcounts instead of copying bytes — polling the reply/ingest
+/// topics allocates nothing per record.
 #[derive(Debug, Clone, PartialEq)]
 pub struct Record {
     /// Monotonic offset within the partition (assigned by the broker).
     pub offset: u64,
     /// Producer-supplied timestamp (epoch ms).
     pub timestamp: i64,
-    /// Routing key bytes (may be empty).
-    pub key: Vec<u8>,
+    /// Routing key bytes (shared, immutable; may be empty).
+    pub key: Payload,
     /// Opaque payload (shared, immutable).
     pub payload: Payload,
 }
@@ -53,7 +66,7 @@ impl Record {
         let mut pos = 0;
         let offset = varint::read_u64(body, &mut pos)?;
         let timestamp = varint::read_i64(body, &mut pos)?;
-        let key = varint::read_bytes(body, &mut pos)?.to_vec();
+        let key = Payload::from(varint::read_bytes(body, &mut pos)?);
         let payload = Payload::from(&body[pos..]);
         Ok(Record {
             offset,
@@ -224,7 +237,7 @@ mod tests {
         Record {
             offset,
             timestamp: 1000 + offset as i64,
-            key: format!("k{offset}").into_bytes(),
+            key: format!("k{offset}").into_bytes().into(),
             payload: payload.into(),
         }
     }
@@ -317,7 +330,7 @@ mod tests {
         let r = Record {
             offset: 0,
             timestamp: -5,
-            key: vec![],
+            key: Payload::from(&[][..]),
             payload: Payload::from(&[][..]),
         };
         w.append(&r).unwrap();

@@ -1,0 +1,134 @@
+//! Group-key interning: the zero-allocation half of the per-event
+//! group-by path.
+//!
+//! The pre-interning hot path re-rendered every group on every reply
+//! (`Vec<String>` + `join`) and keyed the state cache by freshly-composed
+//! `Vec<u8>`s. The interner collapses all of that to **one hash lookup
+//! per (event, group node)**: `Plan::dispatch` builds the group's key
+//! bytes in a reusable scratch buffer, resolves them to a dense
+//! [`GroupId`], and everything downstream — state slab indexing, reply
+//! routing, display rendering — works with the `u32` id. The interner
+//! owns the canonical key bytes (the map keys) and the display string,
+//! rendered **once** when a group is first seen, so the steady-state
+//! per-event loop allocates nothing.
+//!
+//! Ids are assigned densely in first-seen order and are **not** persisted:
+//! recovery replays the reservoir through the same dispatch path, which
+//! re-interns every live group deterministically (and re-renders its
+//! display from the replayed events), so interner state survives restarts
+//! without a checkpoint format of its own.
+
+use crate::util::hash::FxHashMap;
+
+/// Dense id of an interned group key within one [`crate::plan::Plan`].
+///
+/// Assigned contiguously from 0 in first-seen order — suitable for
+/// direct `Vec` indexing (the state slab, per-group side tables).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct GroupId(pub u32);
+
+/// One interned group: canonical key bytes → dense id + display string.
+pub struct GroupInterner {
+    /// Canonical key bytes → id. Lookup hashes the scratch key once;
+    /// the boxed key is allocated only when a new group is interned.
+    ids: FxHashMap<Box<[u8]>, u32>,
+    /// id → rendered display (group-by field values joined with `,`).
+    displays: Vec<String>,
+}
+
+impl GroupInterner {
+    /// Empty interner.
+    pub fn new() -> GroupInterner {
+        GroupInterner {
+            ids: FxHashMap::default(),
+            displays: Vec::new(),
+        }
+    }
+
+    /// Resolve `key` to its dense id, interning it when first seen.
+    /// `render` produces the display string and runs **only** for a new
+    /// group — the steady-state path is one hash + map probe, no
+    /// allocation, no rendering.
+    #[inline]
+    pub fn intern(&mut self, key: &[u8], render: impl FnOnce() -> String) -> GroupId {
+        if let Some(&id) = self.ids.get(key) {
+            return GroupId(id);
+        }
+        let id = self.displays.len() as u32;
+        self.ids.insert(key.into(), id);
+        self.displays.push(render());
+        GroupId(id)
+    }
+
+    /// Non-interning lookup (query/inspection paths).
+    pub fn lookup(&self, key: &[u8]) -> Option<GroupId> {
+        self.ids.get(key).map(|&id| GroupId(id))
+    }
+
+    /// Display string of an interned group.
+    #[inline]
+    pub fn display(&self, id: GroupId) -> &str {
+        &self.displays[id.0 as usize]
+    }
+
+    /// Number of interned groups.
+    pub fn len(&self) -> usize {
+        self.displays.len()
+    }
+
+    /// True when no group has been interned yet.
+    pub fn is_empty(&self) -> bool {
+        self.displays.is_empty()
+    }
+}
+
+impl Default for GroupInterner {
+    fn default() -> Self {
+        GroupInterner::new()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn interns_densely_in_first_seen_order() {
+        let mut i = GroupInterner::new();
+        assert!(i.is_empty());
+        let a = i.intern(b"c1\x1f", || "c1".to_string());
+        let b = i.intern(b"c2\x1f", || "c2".to_string());
+        assert_eq!(a, GroupId(0));
+        assert_eq!(b, GroupId(1));
+        assert_eq!(i.len(), 2);
+        assert_eq!(i.display(a), "c1");
+        assert_eq!(i.display(b), "c2");
+    }
+
+    #[test]
+    fn repeat_intern_reuses_id_and_never_rerenders() {
+        let mut i = GroupInterner::new();
+        let a = i.intern(b"k", || "k".to_string());
+        let again = i.intern(b"k", || panic!("render must not run for a known group"));
+        assert_eq!(a, again);
+        assert_eq!(i.len(), 1);
+    }
+
+    #[test]
+    fn lookup_does_not_intern() {
+        let mut i = GroupInterner::new();
+        assert_eq!(i.lookup(b"x"), None);
+        let id = i.intern(b"x", || "x".to_string());
+        assert_eq!(i.lookup(b"x"), Some(id));
+        assert_eq!(i.len(), 1);
+    }
+
+    #[test]
+    fn empty_key_is_a_valid_group() {
+        // global aggregates (no group-by) intern the empty key
+        let mut i = GroupInterner::new();
+        let id = i.intern(b"", || String::new());
+        assert_eq!(i.display(id), "");
+        assert_eq!(i.intern(b"", || unreachable!()), id);
+    }
+}

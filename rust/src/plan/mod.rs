@@ -22,11 +22,37 @@
 //! timestamps, still **once per event** (accuracy is non-negotiable),
 //! while iterator positions carry over between evaluations and
 //! state-store write-throughs are coalesced across the batch.
+//!
+//! ## Zero allocations per event (steady state)
+//!
+//! The per-event evaluation path allocates nothing once every live group
+//! has been seen:
+//!
+//! * group keys are built in a reusable scratch buffer and resolved to a
+//!   dense [`GroupId`] by the plan's [`GroupInterner`] — one hash probe;
+//!   canonical key bytes and the rendered display string are owned by the
+//!   interner and materialized once per group, never per event;
+//! * aggregation states live in the [`StateStore`]'s dense slab, indexed
+//!   by `(metric_id, GroupId)` — two `Vec` indexings, no key composition,
+//!   no byte-key hashing (kvstore keys are composed only when a slot is
+//!   created or spilled; the on-disk format is unchanged);
+//! * `COUNT_DISTINCT` hashes the aggregated value's key bytes through the
+//!   tail of the same scratch buffer instead of a per-event `Vec`;
+//! * replies are POD [`MetricReply`]s streamed into a caller-supplied
+//!   [`ReplySink`] — the task processor's sink encodes them straight into
+//!   its per-shard reply-record buffers, resolving metric/group names
+//!   from the interner at encode time ([`ReplyCtx`]), so no per-event
+//!   `Vec<MetricReply>` or owned `String`s exist anywhere on the path.
+//!
+//! Interner ids are rebuilt deterministically by recovery replay (states
+//! are reconstructed from the reservoir), so no id mapping is persisted.
 
 pub mod expr;
+mod interner;
 mod statestore;
 
 pub use expr::{CmpOp, CompiledExpr, FilterExpr};
+pub use interner::{GroupId, GroupInterner};
 pub use statestore::StateStore;
 
 use crate::agg::{AggKind, AggState};
@@ -36,6 +62,7 @@ use crate::reservoir::{ResIterator, Reservoir};
 use crate::util::clock::TimestampMs;
 use crate::util::hash;
 use crate::window::WindowSpec;
+use std::fmt::Write as _;
 
 /// A metric registration (one aggregation query).
 #[derive(Debug, Clone)]
@@ -80,19 +107,107 @@ impl MetricSpec {
     }
 }
 
-/// One per-event metric result (sent to the reply topic).
-#[derive(Debug, Clone, PartialEq)]
+/// One per-event metric result — plain old data; metric and group names
+/// are resolved from a [`ReplyCtx`] at encode/render time, never cloned
+/// on the hot path.
+#[derive(Debug, Clone, Copy, PartialEq)]
 pub struct MetricReply {
     /// Metric id within this plan.
+    pub metric_id: u32,
+    /// Interned group key.
+    pub group_id: GroupId,
+    /// Aggregate value after this event (None = empty-window identity).
+    pub value: Option<f64>,
+    /// Timestamp of the triggering event.
+    pub event_ts: TimestampMs,
+}
+
+/// Name/display resolution handed to [`ReplySink`] callbacks: borrows the
+/// plan's metric table and group interner for the duration of one
+/// callback.
+pub struct ReplyCtx<'a> {
+    topo: &'a Topo,
+    interner: &'a GroupInterner,
+}
+
+impl ReplyCtx<'_> {
+    /// Metric name by id.
+    #[inline]
+    pub fn metric_name(&self, metric_id: u32) -> &str {
+        &self.topo.metric_names[metric_id as usize]
+    }
+
+    /// Rendered group key (group-by field values joined with `,`).
+    #[inline]
+    pub fn group(&self, group_id: GroupId) -> &str {
+        self.interner.display(group_id)
+    }
+}
+
+/// Receives the replies of an evaluation as they are produced — the
+/// zero-allocation alternative to returning `Vec`s of owned replies.
+///
+/// [`Plan::advance_batch`] pushes every reply of the evaluation at
+/// `t_evals[i]` via [`ReplySink::push`], then calls
+/// [`ReplySink::event_done`] exactly once per **successful** evaluation
+/// (aligned with `t_evals` order). Replies pushed by an evaluation that
+/// then fails receive no `event_done` — sinks that buffer per event
+/// should discard the partial event on the next boundary or batch.
+pub trait ReplySink {
+    /// One metric reply of the current evaluation.
+    fn push(&mut self, ctx: &ReplyCtx<'_>, reply: MetricReply);
+    /// The evaluation at `t_eval` completed (even when it produced no
+    /// replies — the task processor publishes an empty reply message so
+    /// clients still get their per-event acknowledgement).
+    fn event_done(&mut self, _ctx: &ReplyCtx<'_>, _t_eval: TimestampMs) {}
+}
+
+/// Discarding sink (recovery replay, backfill).
+impl ReplySink for () {
+    #[inline]
+    fn push(&mut self, _ctx: &ReplyCtx<'_>, _reply: MetricReply) {}
+}
+
+/// An owned, display-resolved reply — test/demo/oracle convenience; the
+/// hot path streams POD [`MetricReply`]s instead.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ResolvedReply {
+    /// Metric id within the plan.
     pub metric_id: u32,
     /// Metric name.
     pub metric: String,
     /// Rendered group key (fields joined with `,`).
     pub group: String,
-    /// Aggregate value after this event (None = empty-window identity).
+    /// Aggregate value after this event.
     pub value: Option<f64>,
     /// Timestamp of the triggering event.
     pub event_ts: TimestampMs,
+}
+
+/// Sink that materializes owned [`ResolvedReply`]s grouped per
+/// evaluation (tests, demos — allocates freely by design).
+#[derive(Default)]
+pub struct CollectingSink {
+    /// Replies per completed evaluation, aligned with the `t_evals` of
+    /// the driving `advance_batch` call.
+    pub events: Vec<Vec<ResolvedReply>>,
+    current: Vec<ResolvedReply>,
+}
+
+impl ReplySink for CollectingSink {
+    fn push(&mut self, ctx: &ReplyCtx<'_>, r: MetricReply) {
+        self.current.push(ResolvedReply {
+            metric_id: r.metric_id,
+            metric: ctx.metric_name(r.metric_id).to_string(),
+            group: ctx.group(r.group_id).to_string(),
+            value: r.value,
+            event_ts: r.event_ts,
+        });
+    }
+
+    fn event_done(&mut self, _ctx: &ReplyCtx<'_>, _t_eval: TimestampMs) {
+        self.events.push(std::mem::take(&mut self.current));
+    }
 }
 
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -143,6 +258,7 @@ pub struct Plan {
     topo: Topo,
     bundles: Vec<Bundle>,
     state: StateStore,
+    interner: GroupInterner,
     last_t_eval: TimestampMs,
     key_scratch: Vec<u8>,
 }
@@ -168,6 +284,7 @@ impl Plan {
             },
             bundles: Vec::new(),
             state,
+            interner: GroupInterner::new(),
             last_t_eval: i64::MIN,
             key_scratch: Vec::with_capacity(64),
         };
@@ -302,16 +419,21 @@ impl Plan {
 
     /// Advance evaluation time to `t_eval` (must be monotonic), draining
     /// every iterator bundle up to its bound and updating aggregation
-    /// states. Returns the per-event metric replies for arrivals at
-    /// offset 0 (the live arrival frontier).
-    pub fn advance(&mut self, t_eval: TimestampMs) -> Result<Vec<MetricReply>> {
+    /// states. Replies of arrivals at offset 0 (the live arrival
+    /// frontier) stream into `sink`; `sink.event_done` fires once on
+    /// success. This is the hot path — it performs no allocations in
+    /// steady state.
+    pub fn advance_into<S: ReplySink + ?Sized>(
+        &mut self,
+        t_eval: TimestampMs,
+        sink: &mut S,
+    ) -> Result<()> {
         if t_eval < self.last_t_eval {
             return Err(Error::invalid(format!(
                 "advance: t_eval went backwards ({t_eval} < {})",
                 self.last_t_eval
             )));
         }
-        let mut replies = Vec::new();
         // Bundles are kept in decreasing offset order by subscribe():
         // expirations (large offsets) update state before the live arrival
         // (offset 0) emits its replies, so every reply reflects the exact
@@ -334,15 +456,16 @@ impl Plan {
                 }
                 let topo = &self.topo;
                 let state = &mut self.state;
+                let interner = &mut self.interner;
                 let scratch = &mut self.key_scratch;
                 let subs = &b.subs;
-                let replies_ref = &mut replies;
                 let mut inner_err: Option<Error> = None;
                 let stepped = b.iter.next(|seq, event| {
                     for (w_idx, role) in subs {
                         if let Err(e) = dispatch(
                             topo,
                             state,
+                            interner,
                             scratch,
                             *w_idx,
                             *role,
@@ -350,7 +473,7 @@ impl Plan {
                             event,
                             emit,
                             None,
-                            replies_ref,
+                            sink,
                         ) {
                             inner_err = Some(e);
                             return;
@@ -376,12 +499,28 @@ impl Plan {
             return Err(e);
         }
         self.last_t_eval = t_eval;
-        Ok(replies)
+        sink.event_done(
+            &ReplyCtx {
+                topo: &self.topo,
+                interner: &self.interner,
+            },
+            t_eval,
+        );
+        Ok(())
+    }
+
+    /// [`Plan::advance_into`] with collected, display-resolved replies —
+    /// the single-event convenience for tests, demos and oracles (it
+    /// allocates; the data plane uses sinks).
+    pub fn advance(&mut self, t_eval: TimestampMs) -> Result<Vec<ResolvedReply>> {
+        let mut sink = CollectingSink::default();
+        self.advance_into(t_eval, &mut sink)?;
+        Ok(sink.events.pop().unwrap_or_default())
     }
 
     /// Advance evaluation time through a whole batch of per-event
-    /// timestamps, pushing the replies of each evaluation into
-    /// `replies_out` (aligned with `t_evals`).
+    /// timestamps, streaming the replies of each evaluation into `sink`
+    /// (one `event_done` per `t_evals` entry, in order).
     ///
     /// **Every window is still evaluated at every event timestamp** —
     /// batching changes none of the paper's per-event accuracy semantics.
@@ -391,27 +530,23 @@ impl Plan {
     /// many events in the batch is persisted once
     /// ([`StateStore::begin_deferred`]).
     ///
-    /// On error, `replies_out` holds the replies of the successfully
+    /// On error, the sink has received the replies of the successfully
     /// evaluated prefix (so callers can still publish them), and the
     /// coalesced state writes of that prefix are flushed.
     ///
     /// `t_evals` must be monotonically non-decreasing (callers clamp
     /// event-time jitter, as the single-event path does).
-    pub fn advance_batch(
+    pub fn advance_batch<S: ReplySink + ?Sized>(
         &mut self,
         t_evals: &[TimestampMs],
-        replies_out: &mut Vec<Vec<MetricReply>>,
+        sink: &mut S,
     ) -> Result<()> {
-        replies_out.reserve(t_evals.len());
         self.state.begin_deferred();
         let mut failed: Option<Error> = None;
         for &t_eval in t_evals {
-            match self.advance(t_eval) {
-                Ok(replies) => replies_out.push(replies),
-                Err(e) => {
-                    failed = Some(e);
-                    break;
-                }
+            if let Err(e) = self.advance_into(t_eval, sink) {
+                failed = Some(e);
+                break;
             }
         }
         // flush coalesced writes even on failure: the kvstore must not
@@ -456,13 +591,15 @@ impl Plan {
                 }
                 let topo = &self.topo;
                 let state = &mut self.state;
+                let interner = &mut self.interner;
                 let scratch = &mut self.key_scratch;
                 let mut inner_err: Option<Error> = None;
-                let mut sink = Vec::new();
+                let mut sink = ();
                 it.next(|seq, event| {
                     if let Err(e) = dispatch(
                         topo,
                         state,
+                        interner,
                         scratch,
                         w_idx,
                         role,
@@ -503,7 +640,12 @@ impl Plan {
             v.key_bytes(&mut key);
             key.push(0x1f);
         }
-        self.state.value(metric_id, &key)
+        match self.interner.lookup(&key) {
+            Some(group) => self.state.value(metric_id, group, &key),
+            // a group this plan instance never dispatched can only exist
+            // as a persisted state in a reopened kvstore
+            None => self.state.value_by_key(metric_id, &key),
+        }
     }
 
     /// Metric name by id.
@@ -514,6 +656,11 @@ impl Plan {
     /// Number of registered metrics.
     pub fn metric_count(&self) -> usize {
         self.topo.metric_names.len()
+    }
+
+    /// Number of groups interned so far (observability).
+    pub fn interned_groups(&self) -> usize {
+        self.interner.len()
     }
 
     /// Number of live reservoir iterators (the paper's Figure 6 x-axis).
@@ -550,6 +697,8 @@ impl Plan {
     }
 
     /// Restore iterator positions + evaluation time from a checkpoint.
+    /// The group interner needs no restoring: states are rebuilt by
+    /// replaying the reservoir, which re-interns every live group.
     pub fn restore_positions(&mut self, positions: &[(i64, u64)], t_eval: TimestampMs) {
         for (offset, seq) in positions {
             if let Some(b) = self.bundles.iter_mut().find(|b| b.offset_ms == *offset) {
@@ -565,11 +714,26 @@ impl Plan {
     }
 }
 
+/// Render a group's display string — runs once per interned group, not
+/// per event. Byte-for-byte identical to the per-reply rendering the
+/// pre-interning path produced (`values joined with ','`).
+fn render_group(gnode: &GroupNode, event: &Event) -> String {
+    let mut s = String::new();
+    for (i, &idx) in gnode.field_idxs.iter().enumerate() {
+        if i > 0 {
+            s.push(',');
+        }
+        let _ = write!(s, "{}", event.value(idx));
+    }
+    s
+}
+
 /// Route one event through a window node's sub-DAG.
 #[allow(clippy::too_many_arguments)]
-fn dispatch(
+fn dispatch<S: ReplySink + ?Sized>(
     topo: &Topo,
     state: &mut StateStore,
+    interner: &mut GroupInterner,
     scratch: &mut Vec<u8>,
     w_idx: usize,
     role: Role,
@@ -577,7 +741,7 @@ fn dispatch(
     event: &Event,
     emit: bool,
     only_metric: Option<u32>,
-    replies: &mut Vec<MetricReply>,
+    sink: &mut S,
 ) -> Result<()> {
     let win = &topo.windows[w_idx];
     for &f_idx in &win.filters {
@@ -589,12 +753,15 @@ fn dispatch(
         }
         for &g_idx in &fnode.groups {
             let gnode = &topo.groups[g_idx];
-            // group key: field key-bytes joined by 0x1f separators
+            // group key: field key-bytes joined by 0x1f separators,
+            // hashed once by the interner and resolved to a dense id
             scratch.clear();
             for &idx in &gnode.field_idxs {
                 event.value(idx).key_bytes(scratch);
                 scratch.push(0x1f);
             }
+            let group = interner.intern(&scratch[..], || render_group(gnode, event));
+            let group_key_len = scratch.len();
             for &a_idx in &gnode.aggs {
                 let anode = &topo.aggs[a_idx];
                 if let Some(only) = only_metric {
@@ -612,9 +779,13 @@ fn dispatch(
                             Value::Null => (0.0, 0, false),
                             _ => {
                                 if anode.kind == AggKind::CountDistinct {
-                                    let mut kb = Vec::with_capacity(16);
-                                    v.key_bytes(&mut kb);
-                                    (0.0, hash::hash64(&kb), true)
+                                    // hash the value's key bytes through
+                                    // the tail of the group-key scratch —
+                                    // no per-event Vec
+                                    v.key_bytes(scratch);
+                                    let h = hash::hash64(&scratch[group_key_len..]);
+                                    scratch.truncate(group_key_len);
+                                    (0.0, h, true)
                                 } else {
                                     match v.as_f64() {
                                         Some(x) => (x, 0, true),
@@ -629,7 +800,8 @@ fn dispatch(
                 let value = if include {
                     state.update(
                         anode.metric_id,
-                        scratch,
+                        group,
+                        &scratch[..group_key_len],
                         || AggState::new(kind),
                         |st| match role {
                             Role::Arrive => st.add(seq, val, raw_hash),
@@ -637,22 +809,21 @@ fn dispatch(
                         },
                     )?
                 } else {
-                    state.value(anode.metric_id, scratch)?
+                    state.value(anode.metric_id, group, &scratch[..group_key_len])?
                 };
                 if emit && role == Role::Arrive {
-                    let group = gnode
-                        .field_idxs
-                        .iter()
-                        .map(|&i| event.value(i).to_string())
-                        .collect::<Vec<_>>()
-                        .join(",");
-                    replies.push(MetricReply {
-                        metric_id: anode.metric_id,
-                        metric: topo.metric_names[anode.metric_id as usize].clone(),
-                        group,
-                        value,
-                        event_ts: event.timestamp,
-                    });
+                    sink.push(
+                        &ReplyCtx {
+                            topo,
+                            interner: &*interner,
+                        },
+                        MetricReply {
+                            metric_id: anode.metric_id,
+                            group_id: group,
+                            value,
+                            event_ts: event.timestamp,
+                        },
+                    );
                 }
             }
         }

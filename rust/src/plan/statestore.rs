@@ -1,102 +1,145 @@
-//! The aggregation **state store** (paper §3.3.2): kvstore-backed
-//! persistence with a bounded in-memory cache.
+//! The aggregation **state store** (paper §3.3.2): a dense in-memory
+//! slab fronting kvstore persistence.
 //!
-//! Keys are `varint(metric_id) ++ group_key_bytes`. Updates are
-//! write-through: the hot path mutates the cached state and appends the
-//! encoded state to the kvstore (WAL + memtable — no fsync, no disk read).
-//! The cache is sized in entries; eviction drops the in-memory copy only
-//! (the kvstore holds the durable truth), which bounds memory even with
-//! unbounded group-by cardinality.
+//! ## Slab layout (zero allocations per event)
 //!
-//! **Deferred mode** ([`StateStore::begin_deferred`] /
-//! [`StateStore::end_deferred`]) coalesces write-throughs across a batch
-//! of events: updates only mark their key dirty, and the batch end
-//! persists each dirty state **once** — a group touched by many events
-//! of a batch pays one kvstore write instead of one per event. Eviction
-//! of a dirty entry persists it first, so the kvstore never lags the
-//! cache for states that leave memory.
+//! Live states sit in a dense `Vec<Slot>` slab; the hot path resolves
+//! `(metric_id, GroupId)` to a slot through `slot_of[metric_id][group_id]`
+//! — two array indexings, no hashing, no key composition. Group ids come
+//! from the plan's group-key interner ([`crate::plan::GroupInterner`]),
+//! which is the only place group-key bytes are hashed (once per event
+//! and group node).
+//!
+//! The composed kvstore key `varint(metric_id) ++ group_key_bytes` is
+//! materialized **once**, when a slot is created, and cached in the slot
+//! for every later write-through/spill — the **on-disk format is
+//! unchanged** from the byte-keyed store, so persisted states survive
+//! this refactor and `value_by_key` can still read them without an id.
+//!
+//! Capacity is in slots; eviction (approximate LRU by insertion order)
+//! spills a dirty state to the kvstore and recycles the slot through a
+//! free list, which bounds the **state** memory (the heavy part —
+//! aggregation payloads) even with unbounded group-by cardinality.
+//! Evicted states reload from the kvstore on next touch. Two small
+//! per-group residues do grow with total distinct groups seen: the
+//! `slot_of` index rows (4 bytes per (metric, group)) and the plan's
+//! interner entries (key bytes + display string per group, never
+//! evicted) — a deliberate trade for the zero-allocation hot path; see
+//! the ROADMAP follow-up on interner eviction.
+//!
+//! ## Deferred mode
+//!
+//! [`StateStore::begin_deferred`] / [`StateStore::end_deferred`] coalesce
+//! write-throughs across a batch: updates push their **slot id** into a
+//! dense dirty `Vec<u32>` (deduplicated by a per-slot flag) and the batch
+//! end persists each dirty state once. Draining moves no key bytes —
+//! the pre-slab store cloned every dirty `Vec<u8>` key per batch; the
+//! dirty vec is drained in place and its capacity is reused across
+//! batches (see the `end_deferred_*` regression tests). Eviction of a
+//! dirty slot persists it first, so the kvstore never lags the cache for
+//! states that leave memory.
 
-use crate::agg::AggState;
+use crate::agg::{AggKind, AggState};
 use crate::error::Result;
 use crate::kvstore::Store;
-use crate::util::hash::{FxHashMap, FxHashSet};
+use crate::plan::GroupId;
 use crate::util::varint;
 use std::collections::VecDeque;
 use std::sync::Arc;
 
-/// Cached, persistent aggregation states.
+/// `slot_of` sentinel: no slot for this (metric, group).
+const NO_SLOT: u32 = u32::MAX;
+
+/// One cached aggregation state.
+struct Slot {
+    state: AggState,
+    /// Composed kvstore key (`varint(metric_id) ++ group_key_bytes`),
+    /// allocated once at slot creation and reused for every persist.
+    key: Box<[u8]>,
+    metric_id: u32,
+    group_id: u32,
+    /// Slot id is in the deferred dirty vec.
+    dirty: bool,
+    /// Occupied; false ⇒ on the free list.
+    live: bool,
+    /// Bumped when the slot is freed; stale LRU entries are skipped by
+    /// generation mismatch.
+    gen: u32,
+}
+
+/// Cached, persistent aggregation states keyed by `(metric_id, GroupId)`.
 pub struct StateStore {
     store: Arc<Store>,
-    cache: FxHashMap<Vec<u8>, AggState>,
-    /// Insertion-order queue for cheap approximate-LRU eviction.
-    order: VecDeque<Vec<u8>>,
+    /// Dense slab; index = slot id.
+    slots: Vec<Slot>,
+    /// Recycled slot ids.
+    free: Vec<u32>,
+    /// `slot_of[metric_id][group_id]` → slot id (`NO_SLOT` when absent).
+    slot_of: Vec<Vec<u32>>,
+    /// Insertion-order `(slot, gen)` queue for approximate-LRU eviction.
+    order: VecDeque<(u32, u32)>,
+    /// Occupied slots.
+    live: usize,
     capacity: usize,
     /// Cache misses that hit the kvstore (observability).
     pub kv_reads: u64,
     /// Write-throughs to the kvstore.
     pub kv_writes: u64,
-    /// When set, updates mark keys dirty instead of writing through.
+    /// When set, updates mark slots dirty instead of writing through.
     deferred: bool,
-    /// Keys updated since the deferral began.
-    dirty: FxHashSet<Vec<u8>>,
+    /// Dirty slot ids — dense, drained in place, no key bytes cloned.
+    dirty: Vec<u32>,
     scratch: Vec<u8>,
-    key_scratch: Vec<u8>,
 }
 
 impl StateStore {
-    /// Wrap a kvstore with an `capacity`-entry state cache.
+    /// Wrap a kvstore with a `capacity`-slot state cache.
     pub fn new(store: Arc<Store>, capacity: usize) -> StateStore {
         StateStore {
             store,
-            cache: FxHashMap::default(),
+            slots: Vec::new(),
+            free: Vec::new(),
+            slot_of: Vec::new(),
             order: VecDeque::new(),
+            live: 0,
             capacity: capacity.max(16),
             kv_reads: 0,
             kv_writes: 0,
             deferred: false,
-            dirty: FxHashSet::default(),
+            dirty: Vec::new(),
             scratch: Vec::with_capacity(64),
-            key_scratch: Vec::with_capacity(64),
         }
     }
 
     /// Enter deferred mode: subsequent [`StateStore::update`]s mark their
-    /// key dirty instead of writing through. Pair with
+    /// slot dirty instead of writing through. Pair with
     /// [`StateStore::end_deferred`].
     pub fn begin_deferred(&mut self) {
         self.deferred = true;
     }
 
-    /// Leave deferred mode, persisting every dirty state once. A key is
-    /// un-marked only after its write succeeds, so a failed persist
-    /// leaves the remaining keys dirty — eviction still writes them out
-    /// and a later `end_deferred` retries them.
+    /// Leave deferred mode, persisting every dirty state once. The dirty
+    /// vec is drained in place (no key cloning; capacity is reused by the
+    /// next batch). A slot is popped only after its write succeeds, so a
+    /// failed persist leaves the remaining slots dirty — eviction still
+    /// writes them out and a later `end_deferred` retries them.
     pub fn end_deferred(&mut self) -> Result<()> {
         self.deferred = false;
-        let keys: Vec<Vec<u8>> = self.dirty.iter().cloned().collect();
-        for key in keys {
-            self.persist(&key)?;
-            self.dirty.remove(&key);
+        while let Some(&id) = self.dirty.last() {
+            let slot = &self.slots[id as usize];
+            // an evicted-then-recycled slot may appear here with its
+            // dirty flag already cleared (spilled at eviction time) or
+            // twice (recycled + re-dirtied): the flag is the truth
+            if slot.live && slot.dirty {
+                self.persist_slot(id)?;
+            }
+            self.dirty.pop();
         }
         Ok(())
     }
 
-    /// Write the cached state for `key` through to the kvstore (no-op if
-    /// the key is not cached — an evicted dirty key was persisted at
-    /// eviction time).
-    fn persist(&mut self, key: &[u8]) -> Result<()> {
-        if let Some(st) = self.cache.get(key) {
-            self.scratch.clear();
-            st.encode(&mut self.scratch);
-        } else {
-            return Ok(());
-        }
-        self.store.put(key, &self.scratch)?;
-        self.kv_writes += 1;
-        Ok(())
-    }
-
-    /// Compose the storage key for `(metric_id, group_key)`.
+    /// Compose the storage key for `(metric_id, group_key)` — the on-disk
+    /// key format, unchanged from the byte-keyed store.
     pub fn compose_key(metric_id: u32, group_key: &[u8]) -> Vec<u8> {
         let mut k = Vec::with_capacity(group_key.len() + 5);
         varint::write_u32(&mut k, metric_id);
@@ -104,69 +147,210 @@ impl StateStore {
         k
     }
 
-    /// Mutate the state for a key, creating it with `init` when absent,
-    /// then persist. Returns the post-update aggregate value.
+    /// Slot for `(metric_id, group)` if one is live.
+    #[inline]
+    fn lookup_slot(&self, metric_id: u32, group: GroupId) -> Option<u32> {
+        match self
+            .slot_of
+            .get(metric_id as usize)
+            .and_then(|row| row.get(group.0 as usize))
+        {
+            Some(&s) if s != NO_SLOT => Some(s),
+            _ => None,
+        }
+    }
+
+    /// Resolve `(metric_id, group)` to a slot, loading a spilled state
+    /// from the kvstore on miss. With `init` None, a state that exists
+    /// neither in the slab nor on disk resolves to `Ok(None)`.
+    fn load_slot(
+        &mut self,
+        metric_id: u32,
+        group: GroupId,
+        group_key: &[u8],
+        init: Option<&mut dyn FnMut() -> AggState>,
+    ) -> Result<Option<u32>> {
+        if let Some(s) = self.lookup_slot(metric_id, group) {
+            return Ok(Some(s));
+        }
+        // cold path: first touch of this (metric, group) — or reload of a
+        // spilled state. The composed key allocated here lives in the
+        // slot for every later persist.
+        let key = Self::compose_key(metric_id, group_key);
+        let state = match self.store.get(&key)? {
+            Some(bytes) => {
+                self.kv_reads += 1;
+                let mut pos = 0;
+                AggState::decode(&bytes, &mut pos)?
+            }
+            None => match init {
+                Some(f) => f(),
+                None => return Ok(None),
+            },
+        };
+        Ok(Some(self.insert_slot(metric_id, group, key.into_boxed_slice(), state)?))
+    }
+
+    fn insert_slot(
+        &mut self,
+        metric_id: u32,
+        group: GroupId,
+        key: Box<[u8]>,
+        state: AggState,
+    ) -> Result<u32> {
+        let id = match self.free.pop() {
+            Some(id) => {
+                let s = &mut self.slots[id as usize];
+                s.state = state;
+                s.key = key;
+                s.metric_id = metric_id;
+                s.group_id = group.0;
+                s.dirty = false;
+                s.live = true;
+                id
+            }
+            None => {
+                let id = self.slots.len() as u32;
+                self.slots.push(Slot {
+                    state,
+                    key,
+                    metric_id,
+                    group_id: group.0,
+                    dirty: false,
+                    live: true,
+                    gen: 0,
+                });
+                id
+            }
+        };
+        let m = metric_id as usize;
+        if self.slot_of.len() <= m {
+            self.slot_of.resize_with(m + 1, Vec::new);
+        }
+        let row = &mut self.slot_of[m];
+        let g = group.0 as usize;
+        if row.len() <= g {
+            row.resize(g + 1, NO_SLOT);
+        }
+        row[g] = id;
+        let gen = self.slots[id as usize].gen;
+        self.order.push_back((id, gen));
+        self.live += 1;
+        self.evict_over_capacity()?;
+        Ok(id)
+    }
+
+    /// Spill + recycle the oldest-inserted slots until within capacity.
+    fn evict_over_capacity(&mut self) -> Result<()> {
+        while self.live > self.capacity {
+            let (id, gen) = match self.order.pop_front() {
+                Some(x) => x,
+                None => break,
+            };
+            let slot = &self.slots[id as usize];
+            if !slot.live || slot.gen != gen {
+                continue; // stale entry of a previously-freed slot
+            }
+            // deferred-dirty states must hit the kvstore before the
+            // in-memory copy goes away; everything else was persisted by
+            // write-through already
+            if slot.dirty {
+                self.persist_slot(id)?;
+            }
+            self.free_slot(id);
+        }
+        Ok(())
+    }
+
+    /// Write a slot's state through to the kvstore, clearing its dirty
+    /// flag on success.
+    fn persist_slot(&mut self, id: u32) -> Result<()> {
+        let slot = &mut self.slots[id as usize];
+        self.scratch.clear();
+        slot.state.encode(&mut self.scratch);
+        self.store.put(&slot.key, &self.scratch)?;
+        slot.dirty = false;
+        self.kv_writes += 1;
+        Ok(())
+    }
+
+    /// Release a slot to the free list (caller persists dirty state
+    /// first when needed).
+    fn free_slot(&mut self, id: u32) {
+        let slot = &mut self.slots[id as usize];
+        slot.live = false;
+        slot.dirty = false;
+        slot.gen = slot.gen.wrapping_add(1);
+        // drop the heavy payloads now, not at recycling time
+        slot.state = AggState::new(AggKind::Count);
+        slot.key = Box::default();
+        let (m, g) = (slot.metric_id as usize, slot.group_id as usize);
+        if let Some(e) = self.slot_of.get_mut(m).and_then(|row| row.get_mut(g)) {
+            *e = NO_SLOT;
+        }
+        self.free.push(id);
+        self.live -= 1;
+    }
+
+    /// Mutate the state for `(metric_id, group)`, creating it with `init`
+    /// when absent, then persist (write-through, or dirty-mark in
+    /// deferred mode). Returns the post-update aggregate value.
     ///
-    /// Hot path: the composed key lives in a reused scratch buffer and is
-    /// only heap-allocated when a new cache entry is inserted
-    /// (EXPERIMENTS.md §Perf).
+    /// Hot path: slot resolution is two `Vec` indexings; `group_key` is
+    /// only read on the cold path (slot creation / reload after spill).
     pub fn update(
         &mut self,
         metric_id: u32,
+        group: GroupId,
         group_key: &[u8],
-        init: impl FnOnce() -> AggState,
+        mut init: impl FnMut() -> AggState,
         f: impl FnOnce(&mut AggState),
     ) -> Result<Option<f64>> {
-        self.key_scratch.clear();
-        varint::write_u32(&mut self.key_scratch, metric_id);
-        self.key_scratch.extend_from_slice(group_key);
-        if !self.cache.contains_key(self.key_scratch.as_slice()) {
-            let loaded = match self.store.get(&self.key_scratch)? {
-                Some(bytes) => {
-                    self.kv_reads += 1;
-                    let mut pos = 0;
-                    AggState::decode(&bytes, &mut pos)?
-                }
-                None => init(),
-            };
-            let key = self.key_scratch.clone();
-            self.insert_cached(key, loaded)?;
-        }
-        let st = self
-            .cache
-            .get_mut(self.key_scratch.as_slice())
-            .expect("just inserted");
-        f(st);
-        let value = st.value();
+        let id = self
+            .load_slot(metric_id, group, group_key, Some(&mut init))?
+            .expect("load_slot with init always yields a slot");
+        let slot = &mut self.slots[id as usize];
+        f(&mut slot.state);
+        let value = slot.state.value();
         if self.deferred {
             // coalesced write-through: persist once at end_deferred
-            if !self.dirty.contains(self.key_scratch.as_slice()) {
-                self.dirty.insert(self.key_scratch.clone());
+            if !slot.dirty {
+                slot.dirty = true;
+                self.dirty.push(id);
             }
         } else {
-            // write-through
             self.scratch.clear();
-            st.encode(&mut self.scratch);
-            self.store.put(&self.key_scratch, &self.scratch)?;
+            slot.state.encode(&mut self.scratch);
+            self.store.put(&slot.key, &self.scratch)?;
             self.kv_writes += 1;
         }
         Ok(value)
     }
 
-    /// Read the current aggregate value (no mutation).
-    pub fn value(&mut self, metric_id: u32, group_key: &[u8]) -> Result<Option<f64>> {
-        let key = Self::compose_key(metric_id, group_key);
-        if let Some(st) = self.cache.get(&key) {
-            return Ok(st.value());
+    /// Read the current aggregate value for `(metric_id, group)` (no
+    /// mutation). Spilled states are reloaded into the slab.
+    pub fn value(
+        &mut self,
+        metric_id: u32,
+        group: GroupId,
+        group_key: &[u8],
+    ) -> Result<Option<f64>> {
+        match self.load_slot(metric_id, group, group_key, None)? {
+            Some(id) => Ok(self.slots[id as usize].state.value()),
+            None => Ok(None),
         }
+    }
+
+    /// Read a state straight from the kvstore by key bytes, without an
+    /// interned id (query paths over reopened stores; the slab never saw
+    /// these groups, so nothing can be dirty in memory).
+    pub fn value_by_key(&mut self, metric_id: u32, group_key: &[u8]) -> Result<Option<f64>> {
+        let key = Self::compose_key(metric_id, group_key);
         match self.store.get(&key)? {
             Some(bytes) => {
                 self.kv_reads += 1;
                 let mut pos = 0;
-                let st = AggState::decode(&bytes, &mut pos)?;
-                let v = st.value();
-                self.insert_cached(key, st)?;
-                Ok(v)
+                Ok(AggState::decode(&bytes, &mut pos)?.value())
             }
             None => Ok(None),
         }
@@ -174,13 +358,14 @@ impl StateStore {
 
     /// Drop every state of a metric (metric deletion / backfill reset).
     pub fn clear_metric(&mut self, metric_id: u32) -> Result<()> {
-        let prefix = {
-            let mut p = Vec::new();
-            varint::write_u32(&mut p, metric_id);
-            p
-        };
-        self.cache.retain(|k, _| !k.starts_with(&prefix));
-        self.dirty.retain(|k| !k.starts_with(&prefix));
+        if let Some(row) = self.slot_of.get(metric_id as usize) {
+            let ids: Vec<u32> = row.iter().copied().filter(|&s| s != NO_SLOT).collect();
+            for id in ids {
+                self.free_slot(id);
+            }
+        }
+        let mut prefix = Vec::new();
+        varint::write_u32(&mut prefix, metric_id);
         for (k, _) in self.store.scan_prefix(&prefix)? {
             self.store.delete(&k)?;
         }
@@ -194,33 +379,20 @@ impl StateStore {
 
     /// Number of states currently cached in memory.
     pub fn cached_states(&self) -> usize {
-        self.cache.len()
+        self.live
     }
 
-    fn insert_cached(&mut self, key: Vec<u8>, st: AggState) -> Result<()> {
-        self.cache.insert(key.clone(), st);
-        self.order.push_back(key);
-        while self.cache.len() > self.capacity {
-            if let Some(old) = self.order.pop_front() {
-                // deferred-dirty entries must hit the kvstore before the
-                // in-memory copy goes away; everything else was
-                // write-through persisted already
-                if self.dirty.remove(&old) {
-                    self.persist(&old)?;
-                }
-                self.cache.remove(&old);
-            } else {
-                break;
-            }
-        }
-        Ok(())
+    /// Capacity of the deferred dirty vec (regression observability: the
+    /// buffer must be reused across batches, never rebuilt from cloned
+    /// keys).
+    pub fn dirty_capacity(&self) -> usize {
+        self.dirty.capacity()
     }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::agg::AggKind;
     use crate::kvstore::StoreOptions;
     use crate::util::tmp::TempDir;
 
@@ -230,55 +402,52 @@ mod tests {
         (tmp, StateStore::new(store, capacity))
     }
 
+    fn add(
+        ss: &mut StateStore,
+        metric: u32,
+        group: u32,
+        key: &[u8],
+        seq: u64,
+        v: f64,
+    ) -> Option<f64> {
+        ss.update(metric, GroupId(group), key, || AggState::new(AggKind::Sum), |st| {
+            st.add(seq, v, 0)
+        })
+        .unwrap()
+    }
+
     #[test]
     fn update_creates_and_accumulates() {
         let (_tmp, mut ss) = setup(100);
-        let v = ss
-            .update(1, b"card_a", || AggState::new(AggKind::Sum), |st| {
-                st.add(0, 10.0, 0)
-            })
-            .unwrap();
-        assert_eq!(v, Some(10.0));
-        let v = ss
-            .update(1, b"card_a", || AggState::new(AggKind::Sum), |st| {
-                st.add(1, 5.0, 0)
-            })
-            .unwrap();
-        assert_eq!(v, Some(15.0));
+        assert_eq!(add(&mut ss, 1, 0, b"card_a", 0, 10.0), Some(10.0));
+        assert_eq!(add(&mut ss, 1, 0, b"card_a", 1, 5.0), Some(15.0));
     }
 
     #[test]
     fn metrics_are_namespaced() {
         let (_tmp, mut ss) = setup(100);
-        ss.update(1, b"k", || AggState::new(AggKind::Count), |st| {
-            st.add(0, 0.0, 0)
-        })
-        .unwrap();
-        ss.update(2, b"k", || AggState::new(AggKind::Count), |st| {
-            st.add(0, 0.0, 0)
-        })
-        .unwrap();
-        assert_eq!(ss.value(1, b"k").unwrap(), Some(1.0));
-        assert_eq!(ss.value(2, b"k").unwrap(), Some(1.0));
-        assert_eq!(ss.value(3, b"k").unwrap(), None);
+        for m in [1u32, 2] {
+            ss.update(m, GroupId(0), b"k", || AggState::new(AggKind::Count), |st| {
+                st.add(0, 0.0, 0)
+            })
+            .unwrap();
+        }
+        assert_eq!(ss.value(1, GroupId(0), b"k").unwrap(), Some(1.0));
+        assert_eq!(ss.value(2, GroupId(0), b"k").unwrap(), Some(1.0));
+        assert_eq!(ss.value(3, GroupId(0), b"k").unwrap(), None);
     }
 
     #[test]
     fn eviction_falls_back_to_kvstore() {
         let (_tmp, mut ss) = setup(16); // tiny cache (min)
-        for i in 0..200u32 {
-            ss.update(
-                1,
-                format!("card_{i}").as_bytes(),
-                || AggState::new(AggKind::Sum),
-                |st| st.add(0, i as f64, 0),
-            )
-            .unwrap();
+        let keys: Vec<String> = (0..200).map(|i| format!("card_{i}")).collect();
+        for (i, k) in keys.iter().enumerate() {
+            add(&mut ss, 1, i as u32, k.as_bytes(), 0, i as f64);
         }
         assert!(ss.cached_states() <= 16);
-        // every state still readable (from kvstore)
-        for i in 0..200u32 {
-            let v = ss.value(1, format!("card_{i}").as_bytes()).unwrap();
+        // every state still readable (reloaded from kvstore into the slab)
+        for (i, k) in keys.iter().enumerate() {
+            let v = ss.value(1, GroupId(i as u32), k.as_bytes()).unwrap();
             assert_eq!(v, Some(i as f64), "card_{i}");
         }
         assert!(ss.kv_reads > 0, "evicted states were re-read");
@@ -287,25 +456,12 @@ mod tests {
     #[test]
     fn update_after_eviction_resumes_from_persisted_state() {
         let (_tmp, mut ss) = setup(16);
-        ss.update(1, b"victim", || AggState::new(AggKind::Sum), |st| {
-            st.add(0, 7.0, 0)
-        })
-        .unwrap();
+        add(&mut ss, 1, 0, b"victim", 0, 7.0);
         // push it out of the cache
         for i in 0..50u32 {
-            ss.update(
-                1,
-                format!("filler_{i}").as_bytes(),
-                || AggState::new(AggKind::Sum),
-                |st| st.add(0, 1.0, 0),
-            )
-            .unwrap();
+            add(&mut ss, 1, i + 1, format!("filler_{i}").as_bytes(), 0, 1.0);
         }
-        let v = ss
-            .update(1, b"victim", || AggState::new(AggKind::Sum), |st| {
-                st.add(1, 3.0, 0)
-            })
-            .unwrap();
+        let v = add(&mut ss, 1, 0, b"victim", 1, 3.0);
         assert_eq!(v, Some(10.0), "accumulated across eviction");
     }
 
@@ -313,14 +469,14 @@ mod tests {
     fn clear_metric_removes_only_that_metric() {
         let (_tmp, mut ss) = setup(100);
         for m in [1u32, 2] {
-            ss.update(m, b"k", || AggState::new(AggKind::Count), |st| {
+            ss.update(m, GroupId(0), b"k", || AggState::new(AggKind::Count), |st| {
                 st.add(0, 0.0, 0)
             })
             .unwrap();
         }
         ss.clear_metric(1).unwrap();
-        assert_eq!(ss.value(1, b"k").unwrap(), None);
-        assert_eq!(ss.value(2, b"k").unwrap(), Some(1.0));
+        assert_eq!(ss.value(1, GroupId(0), b"k").unwrap(), None);
+        assert_eq!(ss.value(2, GroupId(0), b"k").unwrap(), Some(1.0));
     }
 
     #[test]
@@ -328,20 +484,14 @@ mod tests {
         let (_tmp, mut ss) = setup(100);
         ss.begin_deferred();
         for i in 0..50u64 {
-            ss.update(1, b"hot_key", || AggState::new(AggKind::Sum), |st| {
-                st.add(i, 1.0, 0)
-            })
-            .unwrap();
+            add(&mut ss, 1, 0, b"hot_key", i, 1.0);
         }
         assert_eq!(ss.kv_writes, 0, "writes deferred during the batch");
         ss.end_deferred().unwrap();
         assert_eq!(ss.kv_writes, 1, "one coalesced write for the hot key");
-        assert_eq!(ss.value(1, b"hot_key").unwrap(), Some(50.0));
+        assert_eq!(ss.value(1, GroupId(0), b"hot_key").unwrap(), Some(50.0));
         // back in write-through mode
-        ss.update(1, b"hot_key", || AggState::new(AggKind::Sum), |st| {
-            st.add(50, 1.0, 0)
-        })
-        .unwrap();
+        add(&mut ss, 1, 0, b"hot_key", 50, 1.0);
         assert_eq!(ss.kv_writes, 2);
     }
 
@@ -352,38 +502,79 @@ mod tests {
             let store = Arc::new(Store::open(tmp.path(), StoreOptions::default()).unwrap());
             let mut ss = StateStore::new(store, 100);
             ss.begin_deferred();
-            ss.update(3, b"k", || AggState::new(AggKind::Sum), |st| {
-                st.add(0, 5.0, 0)
-            })
-            .unwrap();
+            add(&mut ss, 3, 0, b"k", 0, 5.0);
             ss.end_deferred().unwrap();
             ss.flush().unwrap();
         }
         let store = Arc::new(Store::open(tmp.path(), StoreOptions::default()).unwrap());
         let mut ss = StateStore::new(store, 100);
-        assert_eq!(ss.value(3, b"k").unwrap(), Some(5.0));
+        // a fresh slab reloads the persisted state (the group id is
+        // irrelevant to the on-disk key)
+        assert_eq!(ss.value(3, GroupId(9), b"k").unwrap(), Some(5.0));
+        assert_eq!(ss.value_by_key(3, b"k").unwrap(), Some(5.0));
     }
 
     #[test]
     fn deferred_dirty_entry_evicted_is_persisted() {
         let (_tmp, mut ss) = setup(16); // min capacity
         ss.begin_deferred();
-        ss.update(1, b"victim", || AggState::new(AggKind::Sum), |st| {
-            st.add(0, 7.0, 0)
-        })
-        .unwrap();
+        add(&mut ss, 1, 0, b"victim", 0, 7.0);
         // push the victim out of the cache while still dirty
         for i in 0..50u32 {
-            ss.update(
-                1,
-                format!("filler_{i}").as_bytes(),
-                || AggState::new(AggKind::Sum),
-                |st| st.add(0, 1.0, 0),
-            )
-            .unwrap();
+            add(&mut ss, 1, i + 1, format!("filler_{i}").as_bytes(), 0, 1.0);
         }
         ss.end_deferred().unwrap();
-        assert_eq!(ss.value(1, b"victim").unwrap(), Some(7.0));
+        assert_eq!(ss.value(1, GroupId(0), b"victim").unwrap(), Some(7.0));
+    }
+
+    #[test]
+    fn end_deferred_drains_in_place_without_key_clones() {
+        // Regression for the pre-slab store, which cloned every dirty key
+        // into a Vec<Vec<u8>> per batch. The dirty set is now a dense
+        // Vec<u32> of slot ids: draining pops in place and the buffer's
+        // capacity is reused by the next batch — no per-batch growth, no
+        // key bytes moved, by construction.
+        let (_tmp, mut ss) = setup(1000);
+        let keys: Vec<String> = (0..100).map(|i| format!("g{i}")).collect();
+        let run_batch = |ss: &mut StateStore, seq: u64| {
+            ss.begin_deferred();
+            for (i, k) in keys.iter().enumerate() {
+                add(ss, 1, i as u32, k.as_bytes(), seq, 1.0);
+            }
+            ss.end_deferred().unwrap();
+        };
+        run_batch(&mut ss, 0);
+        let warm_capacity = ss.dirty_capacity();
+        assert!(warm_capacity >= keys.len());
+        let writes_after_warmup = ss.kv_writes;
+        for seq in 1..5u64 {
+            run_batch(&mut ss, seq);
+            assert_eq!(ss.dirty_capacity(), warm_capacity, "dirty buffer reused");
+        }
+        assert_eq!(
+            ss.kv_writes - writes_after_warmup,
+            4 * keys.len() as u64,
+            "one coalesced write per dirty state per batch"
+        );
+    }
+
+    #[test]
+    fn recycled_slots_keep_states_independent() {
+        // force heavy eviction so slot ids are recycled across groups,
+        // then verify no state bleeds between (metric, group) pairs
+        let (_tmp, mut ss) = setup(16);
+        for round in 0..3u64 {
+            for i in 0..40u32 {
+                add(&mut ss, 1, i, format!("g{i}").as_bytes(), round, (i + 1) as f64);
+            }
+        }
+        for i in 0..40u32 {
+            assert_eq!(
+                ss.value(1, GroupId(i), format!("g{i}").as_bytes()).unwrap(),
+                Some(3.0 * (i + 1) as f64),
+                "g{i}"
+            );
+        }
     }
 
     #[test]
@@ -392,14 +583,11 @@ mod tests {
         {
             let store = Arc::new(Store::open(tmp.path(), StoreOptions::default()).unwrap());
             let mut ss = StateStore::new(store, 100);
-            ss.update(7, b"card_z", || AggState::new(AggKind::Sum), |st| {
-                st.add(0, 42.0, 0)
-            })
-            .unwrap();
+            add(&mut ss, 7, 0, b"card_z", 0, 42.0);
             ss.flush().unwrap();
         }
         let store = Arc::new(Store::open(tmp.path(), StoreOptions::default()).unwrap());
         let mut ss = StateStore::new(store, 100);
-        assert_eq!(ss.value(7, b"card_z").unwrap(), Some(42.0));
+        assert_eq!(ss.value(7, GroupId(0), b"card_z").unwrap(), Some(42.0));
     }
 }

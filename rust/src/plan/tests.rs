@@ -57,7 +57,7 @@ fn rig(specs: &[MetricSpec]) -> Rig {
 
 impl Rig {
     /// Append + advance, the per-event cycle of a task processor.
-    fn feed(&mut self, e: Event) -> Vec<MetricReply> {
+    fn feed(&mut self, e: Event) -> Vec<ResolvedReply> {
         let t_eval = e.timestamp + 1;
         self.reservoir.append(e).unwrap();
         self.plan.advance(t_eval).unwrap()
@@ -570,9 +570,9 @@ fn advance_batch_equals_per_event_advance() {
             t_evals.push(last_t);
             batched.reservoir.append(e.clone()).unwrap();
         }
-        let mut out = Vec::new();
-        batched.plan.advance_batch(&t_evals, &mut out).unwrap();
-        for replies in out {
+        let mut sink = CollectingSink::default();
+        batched.plan.advance_batch(&t_evals, &mut sink).unwrap();
+        for replies in sink.events {
             batched_replies.extend(replies);
         }
     }
@@ -592,9 +592,13 @@ fn advance_batch_equals_per_event_advance() {
 fn advance_batch_rejects_time_regression_mid_batch() {
     let mut r = rig(&q1_specs());
     r.reservoir.append(ev(1000, "c1", "m1", 1.0)).unwrap();
-    let mut out = Vec::new();
-    assert!(r.plan.advance_batch(&[1001, 500], &mut out).is_err());
-    assert_eq!(out.len(), 1, "the evaluated prefix's replies survive the error");
+    let mut sink = CollectingSink::default();
+    assert!(r.plan.advance_batch(&[1001, 500], &mut sink).is_err());
+    assert_eq!(
+        sink.events.len(),
+        1,
+        "the evaluated prefix's replies survive the error"
+    );
     // the store is still usable after the failed batch
     r.reservoir.append(ev(2000, "c1", "m1", 1.0)).unwrap();
     assert!(r.plan.advance(2001).is_ok());

@@ -9,14 +9,15 @@ use railgun::backend::TaskProcessor;
 use railgun::config::{EngineConfig, StreamDef};
 use railgun::coordinator::Node;
 use railgun::event::{Event, Value};
-use railgun::frontend::Envelope;
-use railgun::mlog::{Broker, BrokerConfig, FsyncPolicy, Record};
+use railgun::frontend::{Envelope, ReplyMsg, REPLY_TOPIC};
+use railgun::mlog::{Broker, BrokerConfig, BrokerRef, FsyncPolicy, Record};
 use railgun::plan::MetricSpec;
 use railgun::util::clock::ms;
 use railgun::util::rng::Rng;
 use railgun::util::tmp::TempDir;
 use railgun::window::WindowSpec;
 use railgun::workload::payments_schema;
+use std::collections::BTreeMap;
 use std::sync::Arc;
 use std::time::Duration;
 
@@ -201,7 +202,7 @@ fn batched_processing_matches_per_event_for_all_window_kinds() {
         .map(|(i, event)| Record {
             offset: i as u64,
             timestamp: event.timestamp,
-            key: vec![],
+            key: vec![].into(),
             payload: Envelope {
                 ingest_id: i as u64,
                 event,
@@ -285,7 +286,7 @@ fn crash_mid_batch_recovers_to_identical_state() {
             Record {
                 offset: i as u64,
                 timestamp: event.timestamp,
-                key: vec![],
+                key: vec![].into(),
                 payload: Envelope {
                     ingest_id: i as u64,
                     event,
@@ -420,4 +421,176 @@ fn node_restart_mid_batched_stream_preserves_accuracy() {
         assert_eq!(count, 31.0, "card c{c}: 30 before the crash + 1 probe");
     }
     node.shutdown(true);
+}
+
+/// Drain every reply-topic record currently in a broker and split each
+/// record payload into per-message byte frames (decode positions
+/// delimit the messages — no re-encoding involved), keyed by ingest id.
+/// With one task processor per test, each ingest id maps to exactly one
+/// frame.
+fn reply_frames_by_ingest(broker: &BrokerRef) -> BTreeMap<u64, Vec<u8>> {
+    let mut consumer = broker.consumer("frames", &[REPLY_TOPIC]).unwrap();
+    let mut frames = BTreeMap::new();
+    loop {
+        let polled = consumer.poll(1000, Duration::from_millis(20)).unwrap();
+        if polled.records.is_empty() && polled.rebalanced.is_none() {
+            break;
+        }
+        for (_, rec) in polled.records {
+            // every record payload must also round-trip through the
+            // canonical (pre-refactor) ReplyMsg encoder byte-for-byte:
+            // the streamed per-shard encoding may never drift from it
+            let msgs = ReplyMsg::decode_batch(&rec.payload).unwrap();
+            assert_eq!(
+                ReplyMsg::encode_batch(&msgs),
+                &rec.payload[..],
+                "streamed record re-encodes identically via ReplyMsg"
+            );
+            let mut pos = 0;
+            while pos < rec.payload.len() {
+                let start = pos;
+                let msg = ReplyMsg::decode_from(&rec.payload, &mut pos).unwrap();
+                let dup = frames.insert(msg.ingest_id, rec.payload[start..pos].to_vec());
+                assert!(dup.is_none(), "one reply frame per ingest id");
+            }
+        }
+    }
+    frames
+}
+
+/// The streamed reply pipeline (group-key interner + POD replies encoded
+/// straight into per-shard buffers) must produce reply-topic records
+/// whose per-message bytes are identical to the per-record path's,
+/// across sliding/hopping/delayed windows and across a crash+recovery
+/// (the interner is rebuilt by reservoir replay, so group displays and
+/// values must come back byte-identical).
+#[test]
+fn streamed_reply_records_byte_identical_across_paths_and_recovery() {
+    let stream = Arc::new(StreamDef {
+        name: "payments".into(),
+        schema: payments_schema(),
+        entities: vec!["card".into()],
+        metrics: vec![
+            MetricSpec::new(
+                "sum_sliding",
+                AggKind::Sum,
+                Some("amount"),
+                WindowSpec::sliding(5 * ms::MINUTE),
+                &["card"],
+            ),
+            MetricSpec::new(
+                "count_hopping",
+                AggKind::Count,
+                None,
+                WindowSpec::hopping(5 * ms::MINUTE, ms::MINUTE),
+                &["card"],
+            ),
+            MetricSpec::new(
+                "sum_delayed",
+                AggKind::Sum,
+                Some("amount"),
+                WindowSpec::sliding_delayed(5 * ms::MINUTE, 30 * ms::SECOND),
+                &["card"],
+            ),
+            MetricSpec::new(
+                "distinct_merchants",
+                AggKind::CountDistinct,
+                Some("merchant"),
+                WindowSpec::sliding(5 * ms::MINUTE),
+                &["card"],
+            ),
+        ],
+    });
+    let schema = payments_schema();
+    // integer amounts: recovery replays only from the window horizon, so
+    // float op order differs from the uninterrupted run — integer sums
+    // stay bit-exact either way (the seed recovery tests' discipline)
+    let records: Vec<Record> = workload(200)
+        .into_iter()
+        .enumerate()
+        .map(|(i, mut event)| {
+            event.values[2] = Value::F64((i % 23) as f64);
+            Record {
+                offset: i as u64,
+                timestamp: event.timestamp,
+                key: vec![].into(),
+                payload: Envelope {
+                    ingest_id: i as u64 + 1,
+                    event,
+                }
+                .encode(&schema)
+                .into(),
+            }
+        })
+        .collect();
+
+    let open = |dir: std::path::PathBuf, broker: &BrokerRef| -> TaskProcessor {
+        let cfg = EngineConfig {
+            reply_flush_events: 8, // force mid-batch flushes
+            ..EngineConfig::for_testing(dir.clone())
+        };
+        TaskProcessor::open(dir, stream.clone(), "card", 0, &cfg, broker.producer(), true)
+            .unwrap()
+    };
+    let sharded_broker = || {
+        let broker = Broker::open(BrokerConfig::in_memory()).unwrap();
+        // 2 reply shards: the streamed encoder must route each event's
+        // frame by ingest id exactly like the materialized path did
+        broker.create_topic(REPLY_TOPIC, 2).unwrap();
+        broker
+    };
+
+    // run A: one record per process() call
+    let tmp_a = TempDir::new("sreq_per_record");
+    let broker_a = sharded_broker();
+    let mut tp_a = open(tmp_a.path().to_path_buf(), &broker_a);
+    for r in &records {
+        tp_a.process(r).unwrap();
+    }
+    let frames_a = reply_frames_by_ingest(&broker_a);
+    assert_eq!(frames_a.len(), records.len(), "one frame per event");
+
+    // run B: ragged batches
+    let tmp_b = TempDir::new("sreq_batched");
+    let broker_b = sharded_broker();
+    let mut tp_b = open(tmp_b.path().to_path_buf(), &broker_b);
+    for chunk in records.chunks(17) {
+        tp_b.process_batch(chunk).unwrap();
+    }
+    let frames_b = reply_frames_by_ingest(&broker_b);
+    assert_eq!(frames_a, frames_b, "batched reply frames byte-identical");
+
+    // run C: crash mid-stream without checkpoint, recover (reservoir
+    // replay rebuilds states AND the group interner), replay the tail
+    let tmp_c = TempDir::new("sreq_recovered");
+    {
+        let broker = sharded_broker();
+        let mut tp = open(tmp_c.path().to_path_buf(), &broker);
+        for chunk in records[..119].chunks(17) {
+            tp.process_batch(chunk).unwrap();
+        }
+        // dropped without checkpoint: models the crash
+    }
+    let broker_c = sharded_broker();
+    let mut tp_c = open(tmp_c.path().to_path_buf(), &broker_c);
+    let resume = tp_c.start_offset() as usize;
+    assert!(resume < 119, "open-chunk events were lost and must be replayed");
+    assert!(tp_c.recovered_events > 0, "recovery replayed the reservoir");
+    for chunk in records[resume..].chunks(17) {
+        tp_c.process_batch(chunk).unwrap();
+    }
+    let frames_c = reply_frames_by_ingest(&broker_c);
+    for (ingest_id, frame) in &frames_c {
+        assert_eq!(
+            Some(frame),
+            frames_a.get(ingest_id),
+            "ingest {ingest_id}: post-recovery reply frame diverges (interner \
+             state not rebuilt faithfully?)"
+        );
+    }
+    assert_eq!(
+        frames_c.len(),
+        records.len() - resume,
+        "every replayed event got a reply frame"
+    );
 }
