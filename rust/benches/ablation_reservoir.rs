@@ -53,7 +53,7 @@ fn run(cfg: &Config, n_events: u64, seed: u64) -> Series {
             ],
         );
         let t0 = std::time::Instant::now();
-        reservoir.append(e).unwrap();
+        reservoir.append(&e).unwrap();
         append_hist.record(t0.elapsed().as_nanos() as u64);
     }
     reservoir.sync().unwrap();
@@ -66,7 +66,7 @@ fn run(cfg: &Config, n_events: u64, seed: u64) -> Series {
     let mut n = 0u64;
     loop {
         let t0 = std::time::Instant::now();
-        if it.next(|_, e| std::hint::black_box(e.timestamp)).unwrap().is_none() {
+        if it.next(|_, e| std::hint::black_box(e.timestamp())).unwrap().is_none() {
             break;
         }
         scan_hist.record(t0.elapsed().as_nanos() as u64);

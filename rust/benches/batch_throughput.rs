@@ -32,15 +32,36 @@
 //! reports the ratio without a noise-sensitive hard gate), and the
 //! result is emitted as `BENCH_plan_hotpath.json`.
 //!
+//! **Part 3 — ingest hot path** (`--ingest-only` runs just this). The
+//! envelope→reservoir stage in isolation, pre-encoded record payloads
+//! driven through both decode paths:
+//!
+//! * **view/raw** — `Envelope::split_raw` + `Reservoir::append_raw`:
+//!   value bytes are validated as they are scanned into the open chunk's
+//!   offset table and copied once — no `Envelope`, no `Event`, no
+//!   per-event allocation (the production ingest path);
+//! * **owned-decode (emulated)** — op-for-op what the pre-refactor path
+//!   paid per event: `Envelope::decode` materializes `Vec<Value>` +
+//!   `String`s, then the owned event is appended (re-encoding the value
+//!   section, the work the old path deferred to seal time).
+//!
+//! Both series seal identical, byte-equal chunks
+//! (`rust/tests/view_equivalence.rs`); the gap is the decode-time
+//! allocation churn alone. Headline check: view/raw sustains **≥ 1.3×**
+//! the owned-decode baseline (enforced on full-size runs; `--quick`
+//! reports without a noise-sensitive hard gate), emitted as
+//! `BENCH_ingest_hotpath.json`.
+//!
 //! ```text
-//! cargo bench --bench batch_throughput [-- --quick] [-- --hotpath-only]
+//! cargo bench --bench batch_throughput
+//!     [-- --quick] [-- --hotpath-only] [-- --ingest-only]
 //! ```
 
 use railgun::agg::AggKind;
 use railgun::config::{EngineConfig, StreamDef};
 use railgun::coordinator::Node;
 use railgun::event::{Event, Value};
-use railgun::frontend::{ReplyCollector, ReplyMsg};
+use railgun::frontend::{Envelope, ReplyCollector, ReplyMsg};
 use railgun::kvstore::{Store, StoreOptions};
 use railgun::mlog::{Broker, BrokerConfig};
 use railgun::plan::{MetricReply, MetricSpec, Plan, ReplyCtx, ReplySink, StateStore};
@@ -372,7 +393,7 @@ fn hotpath_drive<S: ReplySink>(
                 Some(e) => {
                     last_t = (e.timestamp + 1).max(last_t);
                     t_evals.push(last_t);
-                    reservoir.append(e).unwrap();
+                    reservoir.append(&e).unwrap();
                 }
                 None => break,
             }
@@ -467,12 +488,108 @@ fn plan_hotpath(opts: &BenchOpts) -> (Series, Series) {
     (streamed, legacy)
 }
 
+// ---------------------------------------------------------------------------
+// Part 3: the ingest hot path (view/raw-append vs owned-decode emulation)
+// ---------------------------------------------------------------------------
+
+/// Pre-encoded envelope payloads for the ingest bench (built outside the
+/// timed section — both series consume identical bytes).
+fn ingest_payloads(n: u64, cards: u64) -> Vec<Vec<u8>> {
+    let schema = payments_schema();
+    hotpath_events(n, cards)
+        .into_iter()
+        .enumerate()
+        .map(|(i, event)| {
+            Envelope {
+                ingest_id: i as u64 + 1,
+                event,
+            }
+            .encode(&schema)
+        })
+        .collect()
+}
+
+fn ingest_reservoir(tmp: &TempDir, tag: &str) -> Reservoir {
+    let cfg = ReservoirConfig {
+        chunk_events: 4096,
+        cache_chunks: 8,
+        ..ReservoirConfig::new(tmp.join(tag))
+    };
+    Reservoir::open(cfg, payments_schema()).unwrap()
+}
+
+/// Returns `(view_raw, owned)` series and emits `BENCH_ingest_hotpath.json`.
+fn ingest_hotpath(opts: &BenchOpts) -> (Series, Series) {
+    let n = opts.scale(1_500_000);
+    let cards = (n / 20).max(1_000);
+    let payloads = ingest_payloads(n, cards);
+    let schema = payments_schema();
+    let tmp = TempDir::new("ingest_hotpath");
+
+    // production path: split the payload, validate + copy the value
+    // bytes once — zero allocations per event
+    let mut res_a = ingest_reservoir(&tmp, "view_raw");
+    let t0 = Instant::now();
+    for p in &payloads {
+        let (_ingest_id, ts, values) = Envelope::split_raw(p).unwrap();
+        res_a.append_raw(ts, values).unwrap();
+    }
+    let elapsed_a = t0.elapsed();
+    res_a.sync().unwrap();
+    let mut view_raw = Series::new("view/raw-append");
+    view_raw.throughput_eps = n as f64 / elapsed_a.as_secs_f64();
+    view_raw.note("events", n);
+
+    // op-for-op owned-decode emulation: the pre-refactor per-event costs
+    // (envelope decode → Vec<Value> + Strings, owned append re-encoding
+    // the value section — the work the old path paid at seal time)
+    let mut res_b = ingest_reservoir(&tmp, "owned");
+    let t0 = Instant::now();
+    for p in &payloads {
+        let env = Envelope::decode(p, &schema).unwrap();
+        res_b.append(&env.event).unwrap();
+    }
+    let elapsed_b = t0.elapsed();
+    res_b.sync().unwrap();
+    let mut owned = Series::new("owned-decode(emulated)");
+    owned.throughput_eps = n as f64 / elapsed_b.as_secs_f64();
+    owned.note("events", n);
+    assert_eq!(res_a.len(), res_b.len(), "both paths ingest every event");
+
+    let speedup = view_raw.throughput_eps / owned.throughput_eps;
+    let json = Json::obj([
+        ("bench", Json::Str("ingest_hotpath".into())),
+        ("events", Json::Int(n as i64)),
+        ("group_cardinality", Json::Int(cards as i64)),
+        (
+            "series",
+            Json::Arr(
+                [&view_raw, &owned]
+                    .iter()
+                    .map(|s| {
+                        Json::obj([
+                            ("label", Json::Str(s.label.clone())),
+                            ("throughput_eps", Json::Float(s.throughput_eps)),
+                        ])
+                    })
+                    .collect(),
+            ),
+        ),
+        ("speedup", Json::Float(speedup)),
+        ("target", Json::Float(1.3)),
+    ]);
+    std::fs::write("BENCH_ingest_hotpath.json", format!("{json}\n"))
+        .expect("write BENCH_ingest_hotpath.json");
+    (view_raw, owned)
+}
+
 fn main() {
     railgun::util::logging::init();
     let opts = BenchOpts::from_args();
     let hotpath_only = std::env::args().any(|a| a == "--hotpath-only");
+    let ingest_only = std::env::args().any(|a| a == "--ingest-only");
 
-    if !hotpath_only {
+    if !hotpath_only && !ingest_only {
         let n = opts.scale(30_000);
         let single = per_event_series(n, opts.seed);
         let mut series = vec![single.clone()];
@@ -503,29 +620,56 @@ fn main() {
         println!("shape check passed: batched ≥ 2x per-event");
     }
 
-    let (streamed, legacy) = plan_hotpath(&opts);
-    print_table(
-        "Plan evaluation hot path — all agg kinds, high group cardinality (60s window)",
-        &[streamed.clone(), legacy.clone()],
-    );
-    print_csv("plan_hotpath", &[streamed.clone(), legacy.clone()]);
-    let speedup = streamed.throughput_eps / legacy.throughput_eps;
-    println!(
-        "\nstreamed/interned vs legacy-alloc speedup: {speedup:.2}x (target ≥ 1.5x) — \
-         {:.0} ev/s vs {:.0} ev/s (BENCH_plan_hotpath.json written)",
-        streamed.throughput_eps, legacy.throughput_eps
-    );
-    // the ≥1.5x gate is enforced on full-size runs; --quick (the CI
-    // smoke, 10x-reduced workload on shared runners) reports the ratio
-    // and emits the artifact without a noise-sensitive hard failure
-    if opts.quick {
-        println!("quick mode: speedup gate reported, not enforced");
-    } else {
-        assert!(
-            speedup >= 1.5,
-            "the zero-allocation hot path must sustain ≥ 1.5x the legacy-allocation \
-             baseline (got {speedup:.2}x)"
+    if !ingest_only {
+        let (streamed, legacy) = plan_hotpath(&opts);
+        print_table(
+            "Plan evaluation hot path — all agg kinds, high group cardinality (60s window)",
+            &[streamed.clone(), legacy.clone()],
         );
-        println!("shape check passed: hot path ≥ 1.5x legacy baseline");
+        print_csv("plan_hotpath", &[streamed.clone(), legacy.clone()]);
+        let speedup = streamed.throughput_eps / legacy.throughput_eps;
+        println!(
+            "\nstreamed/interned vs legacy-alloc speedup: {speedup:.2}x (target ≥ 1.5x) — \
+             {:.0} ev/s vs {:.0} ev/s (BENCH_plan_hotpath.json written)",
+            streamed.throughput_eps, legacy.throughput_eps
+        );
+        // the ≥1.5x gate is enforced on full-size runs; --quick (the CI
+        // smoke, 10x-reduced workload on shared runners) reports the ratio
+        // and emits the artifact without a noise-sensitive hard failure
+        if opts.quick {
+            println!("quick mode: speedup gate reported, not enforced");
+        } else {
+            assert!(
+                speedup >= 1.5,
+                "the zero-allocation hot path must sustain ≥ 1.5x the legacy-allocation \
+                 baseline (got {speedup:.2}x)"
+            );
+            println!("shape check passed: hot path ≥ 1.5x legacy baseline");
+        }
+    }
+
+    if !hotpath_only {
+        let (view_raw, owned) = ingest_hotpath(&opts);
+        print_table(
+            "Ingest hot path — envelope decode → reservoir append (no plan in the loop)",
+            &[view_raw.clone(), owned.clone()],
+        );
+        print_csv("ingest_hotpath", &[view_raw.clone(), owned.clone()]);
+        let speedup = view_raw.throughput_eps / owned.throughput_eps;
+        println!(
+            "\nview/raw-append vs owned-decode speedup: {speedup:.2}x (target ≥ 1.3x) — \
+             {:.0} ev/s vs {:.0} ev/s (BENCH_ingest_hotpath.json written)",
+            view_raw.throughput_eps, owned.throughput_eps
+        );
+        if opts.quick {
+            println!("quick mode: speedup gate reported, not enforced");
+        } else {
+            assert!(
+                speedup >= 1.3,
+                "the zero-allocation ingest path must sustain ≥ 1.3x the owned-decode \
+                 baseline (got {speedup:.2}x)"
+            );
+            println!("shape check passed: ingest ≥ 1.3x owned-decode baseline");
+        }
     }
 }

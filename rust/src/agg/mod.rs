@@ -15,6 +15,8 @@ mod state;
 pub use state::AggState;
 
 use crate::error::{Error, Result};
+use crate::event::ValueRef;
+use crate::util::hash;
 
 /// Supported aggregation functions.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
@@ -85,6 +87,41 @@ impl AggKind {
     /// Fresh empty state for this function.
     pub fn new_state(self) -> AggState {
         AggState::new(self)
+    }
+}
+
+/// Resolve an aggregated field value into accumulator input:
+/// `(value, raw_hash, include)`.
+///
+/// SQL semantics — `NULL` (and, for numeric aggregates, non-numeric)
+/// values are excluded from field aggregates. `COUNT_DISTINCT` hashes
+/// the value's key bytes through the tail of the caller's scratch buffer
+/// (everything past `tail` is borrowed and truncated back), so no
+/// per-event allocation happens on the hot path. Takes a borrowed
+/// [`ValueRef`], so both owned events and reservoir views feed
+/// accumulators through the same path.
+#[inline]
+pub fn resolve_input(
+    kind: AggKind,
+    v: ValueRef<'_>,
+    scratch: &mut Vec<u8>,
+    tail: usize,
+) -> (f64, u64, bool) {
+    match v {
+        ValueRef::Null => (0.0, 0, false),
+        _ => {
+            if kind == AggKind::CountDistinct {
+                v.key_bytes(scratch);
+                let h = hash::hash64(&scratch[tail..]);
+                scratch.truncate(tail);
+                (0.0, h, true)
+            } else {
+                match v.as_f64() {
+                    Some(x) => (x, 0, true),
+                    None => (0.0, 0, false),
+                }
+            }
+        }
     }
 }
 

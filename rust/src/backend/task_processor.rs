@@ -1,13 +1,18 @@
 //! A task processor: reservoir + plan + state store for one
 //! (topic, partition), per paper §3.3.
 //!
-//! Records arrive in **batches** ([`TaskProcessor::process_batch`]): all
-//! envelopes are decoded and appended to the reservoir in one pass, the
-//! plan evaluates every window at every event timestamp via
-//! [`Plan::advance_batch`] (per-event accuracy is preserved — batching
-//! only amortizes overheads), and the replies of the whole batch are
-//! published as **one** reply-topic record per shard (bounded by the
-//! `reply_flush_events` config knob) in the varint binary codec.
+//! Records arrive in **batches** ([`TaskProcessor::process_batch`]).
+//! Ingestion is **allocation-free**: each record's payload is split into
+//! ingest id, timestamp and raw value bytes ([`Envelope::split_raw`] —
+//! no `Envelope`/`Event` materialization), and the value bytes are
+//! handed to the reservoir's raw-append path, which validates them as it
+//! builds its field-offset table and copies them once into the open
+//! chunk. The plan then evaluates every window at every event timestamp
+//! via [`Plan::advance_batch`] over borrowed `EventView`s (per-event
+//! accuracy is preserved — batching only amortizes overheads), and the
+//! replies of the whole batch are published as **one** reply-topic
+//! record per shard (bounded by the `reply_flush_events` config knob) in
+//! the varint binary codec.
 //!
 //! Replies are **streamed**: the plan pushes POD
 //! [`MetricReply`]s into this processor's [`ReplySink`], which encodes
@@ -224,7 +229,7 @@ impl TaskProcessor {
             loop {
                 t_evals.clear();
                 while t_evals.len() < 1024 {
-                    match replay.next(|_, e| e.timestamp)? {
+                    match replay.next(|_, e| e.timestamp())? {
                         Some(ts) => {
                             last_t = (ts + 1).max(last_t);
                             t_evals.push(last_t);
@@ -294,8 +299,10 @@ impl TaskProcessor {
         self.process_batch(std::slice::from_ref(record))
     }
 
-    /// Process a batch of records from this processor's partition:
-    /// decode every envelope, append them all to the reservoir, advance
+    /// Process a batch of records from this processor's partition in one
+    /// allocation-free pass: split each payload into ingest id, timestamp
+    /// and raw value bytes (no `Envelope`/`Event` materialization), feed
+    /// the value bytes to the reservoir's validating raw-append, advance
     /// the plan **per event timestamp** (accuracy requirement — batching
     /// never skips an evaluation), then publish the batch's replies as
     /// one reply record (flushed early every `reply_flush_events`
@@ -307,53 +314,56 @@ impl TaskProcessor {
     /// valid prefix before it is still fully processed — the same
     /// degraded-mode behavior as the old per-record loop.
     pub fn process_batch(&mut self, records: &[Record]) -> Result<()> {
-        let mut envelopes = Vec::with_capacity(records.len());
-        let mut expected = self.processed;
+        // one pass: split each payload into (ingest id, ts, raw value
+        // bytes) and feed the value bytes straight into the reservoir's
+        // raw-append path, which validates them as it scans — no
+        // Envelope, no owned Event, no per-record allocation. Event-time
+        // may jitter slightly across producers, so evaluation times are
+        // clamped monotonic. `processed` advances with every successful
+        // append so a mid-batch failure can never double-append on
+        // redelivery.
+        self.reply_meta.clear();
+        self.t_evals.clear();
         let mut failed: Option<Error> = None;
+        let mut last_t = self.plan.last_t_eval();
         for record in records {
-            if record.offset < expected {
+            // `processed` is the next expected offset: it advances with
+            // every successful append below
+            if record.offset < self.processed {
                 continue; // duplicate from a rewind/replay
             }
-            if record.offset > expected {
+            if record.offset > self.processed {
                 failed = Some(Error::internal(format!(
                     "{}/{}: offset gap (expected {}, got {})",
-                    self.topic, self.partition, expected, record.offset
+                    self.topic, self.partition, self.processed, record.offset
                 )));
                 break;
             }
-            match Envelope::decode(&record.payload, &self.stream.schema) {
-                Ok(env) => {
-                    envelopes.push(env);
-                    expected += 1;
-                }
+            let (ingest_id, ts, values) = match Envelope::split_raw(&record.payload) {
+                Ok(parts) => parts,
                 Err(e) => {
                     failed = Some(e);
                     break;
                 }
+            };
+            // a corrupt value section is rejected here, before any state
+            // changes — the reservoir scan performs exactly the owned
+            // decoder's validation
+            if let Err(e) = self.reservoir.append_raw(ts, values) {
+                failed = Some(e);
+                break;
             }
+            self.processed += 1;
+            self.events_since_checkpoint += 1;
+            self.reply_meta.push((ingest_id, ts));
+            last_t = (ts + 1).max(last_t);
+            self.t_evals.push(last_t);
         }
-        if envelopes.is_empty() {
+        if self.t_evals.is_empty() {
             return match failed {
                 Some(e) => Err(e),
                 None => Ok(()),
             };
-        }
-
-        // one reservoir pass; event-time may jitter slightly across
-        // producers, so evaluation times are clamped monotonic.
-        // `processed` advances with every successful append so a
-        // mid-batch failure can never double-append on redelivery.
-        self.reply_meta.clear();
-        self.t_evals.clear();
-        let mut last_t = self.plan.last_t_eval();
-        for env in envelopes {
-            let ts = env.event.timestamp;
-            self.reservoir.append(env.event)?;
-            self.processed += 1;
-            self.events_since_checkpoint += 1;
-            self.reply_meta.push((env.ingest_id, ts));
-            last_t = (ts + 1).max(last_t);
-            self.t_evals.push(last_t);
         }
 
         // evaluate per event, streaming each event's replies straight

@@ -156,13 +156,58 @@ pub struct Cluster {
     nodes: Vec<Node>,
 }
 
+/// Listen address for node `i` derived from a base address: a fixed port
+/// advances by the node index (`host:7000` → `host:7002` for node 2) so
+/// co-located nodes never collide; port 0 (ephemeral) is left untouched —
+/// the OS hands every node its own port. A base address that doesn't
+/// parse as `host:port`, or whose derived port would exceed 65535, is
+/// used verbatim (bind will report the error).
+pub fn node_listen_addr(base: &str, i: usize) -> String {
+    if i == 0 {
+        return base.to_string();
+    }
+    match base.rsplit_once(':') {
+        Some((host, port)) => match port.parse::<u16>() {
+            Ok(0) => base.to_string(),
+            Ok(p) => match u16::try_from(p as usize + i) {
+                Ok(derived) => format!("{host}:{derived}"),
+                Err(_) => base.to_string(),
+            },
+            Err(_) => base.to_string(),
+        },
+        None => base.to_string(),
+    }
+}
+
 impl Cluster {
-    /// Start `n` nodes, each with its own data dir under `base_cfg`'s.
+    /// Start `n` nodes, each with its own data dir under `base_cfg`'s and
+    /// its own listen address ([`node_listen_addr`]) — a fixed
+    /// `listen_addr` no longer collides across co-located nodes.
     pub fn start(n: usize, base_cfg: &EngineConfig, broker: BrokerRef) -> Result<Cluster> {
-        let mut nodes = Vec::with_capacity(n);
-        for i in 0..n {
+        let addrs: Vec<Option<String>> = (0..n)
+            .map(|i| {
+                base_cfg
+                    .listen_addr
+                    .as_deref()
+                    .map(|a| node_listen_addr(a, i))
+            })
+            .collect();
+        Self::start_with_listen_addrs(base_cfg, broker, addrs)
+    }
+
+    /// Start one node per entry of `listen_addrs` (None = no TCP server),
+    /// for deployments where each node's address is configured
+    /// explicitly.
+    pub fn start_with_listen_addrs(
+        base_cfg: &EngineConfig,
+        broker: BrokerRef,
+        listen_addrs: Vec<Option<String>>,
+    ) -> Result<Cluster> {
+        let mut nodes = Vec::with_capacity(listen_addrs.len());
+        for (i, listen_addr) in listen_addrs.into_iter().enumerate() {
             let cfg = EngineConfig {
                 data_dir: base_cfg.data_dir.join(format!("node{i}")),
+                listen_addr,
                 ..base_cfg.clone()
             };
             nodes.push(Node::start(&format!("node{i}"), cfg, broker.clone())?);
@@ -205,5 +250,40 @@ impl Cluster {
     pub fn kill_node(&mut self, i: usize, graceful: bool) {
         let node = self.nodes.remove(i);
         node.shutdown(graceful);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::mlog::{Broker, BrokerConfig};
+    use crate::util::tmp::TempDir;
+
+    #[test]
+    fn node_listen_addr_derivation() {
+        // fixed ports advance by node index; node 0 keeps the base
+        assert_eq!(node_listen_addr("127.0.0.1:7000", 0), "127.0.0.1:7000");
+        assert_eq!(node_listen_addr("127.0.0.1:7000", 2), "127.0.0.1:7002");
+        assert_eq!(node_listen_addr("[::1]:9000", 3), "[::1]:9003");
+        // ephemeral stays ephemeral — the OS separates the nodes
+        assert_eq!(node_listen_addr("127.0.0.1:0", 5), "127.0.0.1:0");
+        // unparseable ports pass through verbatim (bind reports the error)
+        assert_eq!(node_listen_addr("garbage", 1), "garbage");
+        // a derived port past 65535 is not wrapped or clamped
+        assert_eq!(node_listen_addr("127.0.0.1:65530", 10), "127.0.0.1:65530");
+    }
+
+    #[test]
+    fn cluster_nodes_bind_distinct_ports() {
+        let tmp = TempDir::new("cluster_listen");
+        let broker = Broker::open(BrokerConfig::in_memory()).unwrap();
+        let cfg = crate::config::EngineConfig {
+            listen_addr: Some("127.0.0.1:0".into()),
+            ..crate::config::EngineConfig::for_testing(tmp.path().to_path_buf())
+        };
+        let cluster = Cluster::start(2, &cfg, broker).unwrap();
+        let a = cluster.node(0).net_addr().expect("node0 listening");
+        let b = cluster.node(1).net_addr().expect("node1 listening");
+        assert_ne!(a.port(), b.port(), "per-node addresses must not collide");
     }
 }

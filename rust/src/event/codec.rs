@@ -17,10 +17,37 @@
 //! no field names or type tags — the paper's reservoir stresses compact
 //! serialization because events are replicated per top-level entity
 //! (§3.3.1).
+//!
+//! ## View format contract
+//!
+//! The encoding above doubles as the **in-memory view format**: a
+//! [`crate::event::EventView`] reads an encoded event in place, without
+//! materializing `Value`s. The contract the view relies on:
+//!
+//! * every value is prefixed by exactly one presence byte, so a single
+//!   validating walk ([`scan_values`]) can record one **payload offset
+//!   per field** (or [`NULL_OFFSET`] for nulls) and afterwards any field
+//!   is readable in O(1) without re-walking its predecessors;
+//! * payloads are self-contained given the schema type — `Str` carries
+//!   its own length varint, scalars are fixed/varint-sized — so a
+//!   recorded offset alone suffices to re-read the value;
+//! * [`scan_values`] rejects **exactly** the inputs [`decode_from`]
+//!   rejects (truncation, bad presence bytes, invalid UTF-8, varint
+//!   overflow); `rust/tests/view_equivalence.rs` property-checks this, so
+//!   switching a consumer from owned decode to a view can never change
+//!   which records are accepted;
+//! * only the leading timestamp varint depends on the container
+//!   (`base_ts` delta); value bytes are container-independent, which is
+//!   what lets the reservoir's raw-append path splice already-encoded
+//!   value bytes from an envelope into a chunk by rewriting the
+//!   timestamp varint alone.
 
 use crate::error::{Error, Result};
 use crate::event::{Event, FieldType, Schema, Value};
 use crate::util::varint;
+
+/// Field-offset sentinel for a null value (no payload bytes to point at).
+pub const NULL_OFFSET: u32 = u32::MAX;
 
 /// Append `event` to `out` using `schema` for the field layout.
 ///
@@ -28,6 +55,12 @@ use crate::util::varint;
 /// standalone encoding).
 pub fn encode_into(out: &mut Vec<u8>, event: &Event, schema: &Schema, base_ts: i64) {
     varint::write_i64(out, event.timestamp - base_ts);
+    encode_values_into(out, event, schema);
+}
+
+/// Append only the value section of `event` (everything after the
+/// timestamp varint) — the container-independent part of the encoding.
+pub fn encode_values_into(out: &mut Vec<u8>, event: &Event, schema: &Schema) {
     debug_assert_eq!(event.values.len(), schema.len());
     for (v, f) in event.values.iter().zip(schema.fields()) {
         match v {
@@ -97,6 +130,61 @@ pub fn decode_from(buf: &[u8], pos: &mut usize, schema: &Schema, base_ts: i64) -
         }
     }
     Ok(Event::new(ts, values))
+}
+
+/// Validating walk over one event's value section at `*pos`, pushing one
+/// payload offset per field into `offsets` ([`NULL_OFFSET`] for nulls)
+/// and advancing `*pos` past the event.
+///
+/// This is the borrowed-decode core: it performs **exactly** the checks
+/// [`decode_from`] performs on the value section (presence bytes, UTF-8,
+/// payload bounds, varint overflow) while allocating nothing beyond the
+/// caller's reusable `offsets` vec. A buffer the owned decoder would
+/// reject is rejected here with the same error class.
+pub fn scan_values(
+    buf: &[u8],
+    pos: &mut usize,
+    schema: &Schema,
+    offsets: &mut Vec<u32>,
+) -> Result<()> {
+    if buf.len() >= NULL_OFFSET as usize {
+        return Err(Error::invalid("event: buffer too large for view offsets"));
+    }
+    for f in schema.fields() {
+        let presence = *buf
+            .get(*pos)
+            .ok_or_else(|| Error::corrupt("event: truncated presence byte"))?;
+        *pos += 1;
+        match presence {
+            0 => offsets.push(NULL_OFFSET),
+            1 => {
+                offsets.push(*pos as u32);
+                match f.ftype {
+                    FieldType::Str => {
+                        varint::read_str(buf, pos)?;
+                    }
+                    FieldType::I64 => {
+                        varint::read_i64(buf, pos)?;
+                    }
+                    FieldType::F64 => {
+                        let end = *pos + 8;
+                        if end > buf.len() {
+                            return Err(Error::corrupt("event: truncated f64"));
+                        }
+                        *pos = end;
+                    }
+                    FieldType::Bool => {
+                        if *pos >= buf.len() {
+                            return Err(Error::corrupt("event: truncated bool"));
+                        }
+                        *pos += 1;
+                    }
+                }
+            }
+            p => return Err(Error::corrupt(format!("event: bad presence byte {p}"))),
+        }
+    }
+    Ok(())
 }
 
 /// Decode a standalone encoded event (must consume the whole buffer).

@@ -9,6 +9,9 @@
 
 pub mod codec;
 pub mod json;
+pub mod view;
+
+pub use view::{EventRead, EventView, ValueRef, ViewScratch};
 
 use crate::error::{Error, Result};
 use crate::util::clock::TimestampMs;
@@ -94,6 +97,19 @@ impl Value {
         match self {
             Value::Str(s) => Some(s),
             _ => None,
+        }
+    }
+
+    /// Borrowed view of this value ([`ValueRef`] is what generic
+    /// [`EventRead`] consumers operate on).
+    #[inline]
+    pub fn as_value_ref(&self) -> ValueRef<'_> {
+        match self {
+            Value::Null => ValueRef::Null,
+            Value::Str(s) => ValueRef::Str(s),
+            Value::I64(i) => ValueRef::I64(*i),
+            Value::F64(f) => ValueRef::F64(*f),
+            Value::Bool(b) => ValueRef::Bool(*b),
         }
     }
 

@@ -1,0 +1,422 @@
+//! Borrowed event access: [`EventView`] reads an encoded event in place.
+//!
+//! `Envelope::decode` → owned `Event { Vec<Value>, String }` was the last
+//! allocating stage of the ingest hot path. An [`EventView`] replaces it:
+//! one validating walk over the encoded bytes ([`codec::scan_values`])
+//! records a payload offset per field into a reusable [`ViewScratch`],
+//! after which [`EventRead::value_ref`] serves any field in O(1) as a
+//! [`ValueRef`] that **borrows** the payload (`ValueRef::Str(&str)` points
+//! into the encoded buffer). Steady-state decode therefore allocates
+//! nothing.
+//!
+//! [`EventRead`] is the small trait both [`Event`] (owned) and
+//! [`EventView`] (borrowed) implement; the plan DAG (`dispatch`, filter
+//! predicates, group-key building, display rendering) is generic over it,
+//! so tests, oracles and the workload generator keep working on owned
+//! events while the data plane runs on views.
+
+use crate::error::{Error, Result};
+use crate::event::{codec, Event, FieldType, Schema, Value};
+use crate::util::clock::TimestampMs;
+use crate::util::varint;
+use std::fmt;
+
+/// A borrowed field value. The `Str` variant points into the encoded
+/// event's payload bytes — no copy, no allocation.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum ValueRef<'a> {
+    /// Missing value.
+    Null,
+    /// String, borrowed from the payload (or from an owned `Value`).
+    Str(&'a str),
+    /// Integer.
+    I64(i64),
+    /// Float.
+    F64(f64),
+    /// Boolean.
+    Bool(bool),
+}
+
+impl<'a> ValueRef<'a> {
+    /// Numeric view (I64 widens to f64); `None` for non-numeric —
+    /// identical to [`Value::as_f64`].
+    #[inline]
+    pub fn as_f64(self) -> Option<f64> {
+        match self {
+            ValueRef::F64(f) => Some(f),
+            ValueRef::I64(i) => Some(i as f64),
+            _ => None,
+        }
+    }
+
+    /// String view.
+    #[inline]
+    pub fn as_str(self) -> Option<&'a str> {
+        match self {
+            ValueRef::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+
+    /// Stable bytes for group-by keys and routing hashes — byte-for-byte
+    /// identical to [`Value::key_bytes`] (group keys feed the on-disk
+    /// state-store key format, so the two must never drift).
+    pub fn key_bytes(self, out: &mut Vec<u8>) {
+        match self {
+            ValueRef::Null => out.push(0xff),
+            ValueRef::Str(s) => out.extend_from_slice(s.as_bytes()),
+            ValueRef::I64(i) => out.extend_from_slice(&i.to_le_bytes()),
+            ValueRef::F64(f) => out.extend_from_slice(&f.to_bits().to_le_bytes()),
+            ValueRef::Bool(b) => out.push(b as u8),
+        }
+    }
+
+    /// Materialize an owned [`Value`] (cold paths, tests).
+    pub fn to_value(self) -> Value {
+        match self {
+            ValueRef::Null => Value::Null,
+            ValueRef::Str(s) => Value::Str(s.to_string()),
+            ValueRef::I64(i) => Value::I64(i),
+            ValueRef::F64(f) => Value::F64(f),
+            ValueRef::Bool(b) => Value::Bool(b),
+        }
+    }
+
+    /// True if the value matches the declared type (or is null).
+    pub fn matches(self, ftype: FieldType) -> bool {
+        matches!(
+            (self, ftype),
+            (ValueRef::Null, _)
+                | (ValueRef::Str(_), FieldType::Str)
+                | (ValueRef::I64(_), FieldType::I64)
+                | (ValueRef::F64(_), FieldType::F64)
+                | (ValueRef::Bool(_), FieldType::Bool)
+        )
+    }
+}
+
+/// Renders exactly like [`Value`]'s `Display` — group display strings
+/// travel on the reply wire, so the two renderings must stay identical.
+impl fmt::Display for ValueRef<'_> {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            ValueRef::Null => write!(f, "null"),
+            ValueRef::Str(s) => write!(f, "{s}"),
+            ValueRef::I64(i) => write!(f, "{i}"),
+            ValueRef::F64(x) => write!(f, "{x}"),
+            ValueRef::Bool(b) => write!(f, "{b}"),
+        }
+    }
+}
+
+/// Read access to one event, owned or borrowed. The plan DAG evaluates
+/// against this trait, so the hot path runs on [`EventView`]s while tests
+/// and oracles keep using owned [`Event`]s.
+pub trait EventRead {
+    /// Event time, milliseconds since epoch.
+    fn timestamp(&self) -> TimestampMs;
+    /// Number of fields.
+    fn arity(&self) -> usize;
+    /// Borrowed value at field position `idx`.
+    fn value_ref(&self, idx: usize) -> ValueRef<'_>;
+
+    /// Materialize an owned [`Event`] (cold paths, tests).
+    fn to_event(&self) -> Event {
+        Event::new(
+            self.timestamp(),
+            (0..self.arity()).map(|i| self.value_ref(i).to_value()).collect(),
+        )
+    }
+}
+
+impl EventRead for Event {
+    #[inline]
+    fn timestamp(&self) -> TimestampMs {
+        self.timestamp
+    }
+
+    #[inline]
+    fn arity(&self) -> usize {
+        self.values.len()
+    }
+
+    #[inline]
+    fn value_ref(&self, idx: usize) -> ValueRef<'_> {
+        self.values[idx].as_value_ref()
+    }
+}
+
+/// Reusable field-offset table for parsing [`EventView`]s: steady-state
+/// decode writes into this buffer and allocates nothing.
+#[derive(Default)]
+pub struct ViewScratch {
+    offsets: Vec<u32>,
+}
+
+impl ViewScratch {
+    /// Empty scratch.
+    pub fn new() -> ViewScratch {
+        ViewScratch::default()
+    }
+
+    /// Parse one event from `buf` at `*pos` (timestamp varint + value
+    /// section), advancing `*pos` — the borrowed counterpart of
+    /// [`codec::decode_from`], validating identically.
+    pub fn view_from<'a>(
+        &'a mut self,
+        buf: &'a [u8],
+        pos: &mut usize,
+        schema: &'a Schema,
+        base_ts: i64,
+    ) -> Result<EventView<'a>> {
+        let timestamp = base_ts + varint::read_i64(buf, pos)?;
+        self.offsets.clear();
+        codec::scan_values(buf, pos, schema, &mut self.offsets)?;
+        Ok(EventView {
+            timestamp,
+            buf,
+            offsets: &self.offsets,
+            schema,
+        })
+    }
+
+    /// Parse a standalone encoded event (must consume the whole buffer) —
+    /// the borrowed counterpart of [`codec::decode`].
+    pub fn view<'a>(&'a mut self, buf: &'a [u8], schema: &'a Schema) -> Result<EventView<'a>> {
+        let mut pos = 0;
+        let v = self.view_from(buf, &mut pos, schema, 0)?;
+        if pos != buf.len() {
+            return Err(Error::corrupt(format!(
+                "event: {} trailing bytes",
+                buf.len() - pos
+            )));
+        }
+        Ok(v)
+    }
+}
+
+/// A validated, borrowed event: encoded bytes + per-field payload
+/// offsets. Field access is O(1) and allocation-free; string values
+/// borrow the underlying buffer.
+#[derive(Clone, Copy)]
+pub struct EventView<'a> {
+    timestamp: TimestampMs,
+    buf: &'a [u8],
+    offsets: &'a [u32],
+    schema: &'a Schema,
+}
+
+impl<'a> EventView<'a> {
+    /// Assemble a view from pre-validated parts (`offsets` as produced by
+    /// [`codec::scan_values`] over `buf`). Used by the reservoir, whose
+    /// chunks store exactly this representation.
+    pub fn from_parts(
+        timestamp: TimestampMs,
+        buf: &'a [u8],
+        offsets: &'a [u32],
+        schema: &'a Schema,
+    ) -> EventView<'a> {
+        debug_assert_eq!(offsets.len(), schema.len());
+        EventView {
+            timestamp,
+            buf,
+            offsets,
+            schema,
+        }
+    }
+
+    /// Event time, milliseconds since epoch (also via [`EventRead`]).
+    #[inline]
+    pub fn timestamp(&self) -> TimestampMs {
+        self.timestamp
+    }
+
+    /// Number of fields (also via [`EventRead`]).
+    #[inline]
+    pub fn arity(&self) -> usize {
+        self.offsets.len()
+    }
+
+    /// Borrowed value at field position `idx`, with the payload lifetime
+    /// (outlives `self`, unlike the trait method's `&self` borrow).
+    pub fn value_at(&self, idx: usize) -> ValueRef<'a> {
+        let off = self.offsets[idx];
+        if off == codec::NULL_OFFSET {
+            return ValueRef::Null;
+        }
+        let mut pos = off as usize;
+        // offsets only exist for buffers scan_values validated; re-reads
+        // along them cannot fail
+        match self.schema.fields()[idx].ftype {
+            FieldType::Str => ValueRef::Str(
+                varint::read_str(self.buf, &mut pos).expect("validated by scan_values"),
+            ),
+            FieldType::I64 => ValueRef::I64(
+                varint::read_i64(self.buf, &mut pos).expect("validated by scan_values"),
+            ),
+            FieldType::F64 => {
+                let bytes: [u8; 8] = self.buf[pos..pos + 8]
+                    .try_into()
+                    .expect("validated by scan_values");
+                ValueRef::F64(f64::from_bits(u64::from_le_bytes(bytes)))
+            }
+            FieldType::Bool => ValueRef::Bool(self.buf[pos] != 0),
+        }
+    }
+}
+
+impl EventRead for EventView<'_> {
+    #[inline]
+    fn timestamp(&self) -> TimestampMs {
+        self.timestamp
+    }
+
+    #[inline]
+    fn arity(&self) -> usize {
+        self.offsets.len()
+    }
+
+    #[inline]
+    fn value_ref(&self, idx: usize) -> ValueRef<'_> {
+        self.value_at(idx)
+    }
+}
+
+impl fmt::Debug for EventView<'_> {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        let mut d = f.debug_struct("EventView");
+        d.field("timestamp", &self.timestamp);
+        for (i, fd) in self.schema.fields().iter().enumerate() {
+            d.field(&fd.name, &self.value_at(i));
+        }
+        d.finish()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::event::SchemaRef;
+
+    fn schema() -> SchemaRef {
+        Schema::of(&[
+            ("card", FieldType::Str),
+            ("amount", FieldType::F64),
+            ("flag", FieldType::Bool),
+            ("seq", FieldType::I64),
+        ])
+        .unwrap()
+    }
+
+    fn event() -> Event {
+        Event::new(
+            1_600_000_000_123,
+            vec![
+                Value::Str("card_42".into()),
+                Value::F64(12.75),
+                Value::Bool(true),
+                Value::I64(-7),
+            ],
+        )
+    }
+
+    #[test]
+    fn view_reads_all_fields_without_materializing() {
+        let s = schema();
+        let e = event();
+        let buf = codec::encode(&e, &s);
+        let mut scratch = ViewScratch::new();
+        let v = scratch.view(&buf, &s).unwrap();
+        assert_eq!(v.timestamp(), e.timestamp);
+        assert_eq!(v.arity(), 4);
+        assert_eq!(v.value_ref(0), ValueRef::Str("card_42"));
+        assert_eq!(v.value_ref(1), ValueRef::F64(12.75));
+        assert_eq!(v.value_ref(2), ValueRef::Bool(true));
+        assert_eq!(v.value_ref(3), ValueRef::I64(-7));
+        assert_eq!(v.to_event(), e);
+    }
+
+    #[test]
+    fn view_handles_nulls_and_repeat_access() {
+        let s = schema();
+        let e = Event::new(5, vec![Value::Null, Value::F64(1.0), Value::Null, Value::Null]);
+        let buf = codec::encode(&e, &s);
+        let mut scratch = ViewScratch::new();
+        let v = scratch.view(&buf, &s).unwrap();
+        assert_eq!(v.value_ref(0), ValueRef::Null);
+        assert_eq!(v.value_ref(3), ValueRef::Null);
+        // random access is order-independent and repeatable
+        assert_eq!(v.value_ref(1), ValueRef::F64(1.0));
+        assert_eq!(v.value_ref(1), ValueRef::F64(1.0));
+        assert_eq!(v.to_event(), e);
+    }
+
+    #[test]
+    fn view_rejects_truncation_everywhere() {
+        let s = schema();
+        let buf = codec::encode(&event(), &s);
+        let mut scratch = ViewScratch::new();
+        for cut in 0..buf.len() {
+            assert!(scratch.view(&buf[..cut], &s).is_err(), "cut at {cut}");
+        }
+        let mut long = buf.clone();
+        long.push(0xAB);
+        assert!(scratch.view(&long, &s).is_err(), "trailing bytes");
+    }
+
+    #[test]
+    fn scratch_is_reusable_across_events() {
+        let s = schema();
+        let a = codec::encode(&event(), &s);
+        let e2 = Event::new(9, vec![Value::Null, Value::Null, Value::Null, Value::I64(3)]);
+        let b = codec::encode(&e2, &s);
+        let mut scratch = ViewScratch::new();
+        assert_eq!(scratch.view(&a, &s).unwrap().to_event(), event());
+        assert_eq!(scratch.view(&b, &s).unwrap().to_event(), e2);
+        assert_eq!(scratch.view(&a, &s).unwrap().to_event(), event());
+    }
+
+    #[test]
+    fn owned_event_implements_event_read_identically() {
+        let s = schema();
+        let e = event();
+        let buf = codec::encode(&e, &s);
+        let mut scratch = ViewScratch::new();
+        let v = scratch.view(&buf, &s).unwrap();
+        assert_eq!(e.timestamp, EventRead::timestamp(&e));
+        for i in 0..e.values.len() {
+            assert_eq!(e.value_ref(i), v.value_ref(i), "field {i}");
+        }
+    }
+
+    #[test]
+    fn value_ref_display_matches_value_display() {
+        for v in [
+            Value::Null,
+            Value::Str("a,b".into()),
+            Value::I64(-42),
+            Value::F64(2.5),
+            Value::F64(f64::INFINITY),
+            Value::Bool(false),
+        ] {
+            assert_eq!(format!("{v}"), format!("{}", v.as_value_ref()));
+        }
+    }
+
+    #[test]
+    fn value_ref_key_bytes_match_value_key_bytes() {
+        for v in [
+            Value::Null,
+            Value::Str("card_1".into()),
+            Value::I64(i64::MIN),
+            Value::F64(-0.0),
+            Value::Bool(true),
+        ] {
+            let mut a = Vec::new();
+            let mut b = Vec::new();
+            v.key_bytes(&mut a);
+            v.as_value_ref().key_bytes(&mut b);
+            assert_eq!(a, b, "{v:?}");
+        }
+    }
+}

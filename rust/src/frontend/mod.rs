@@ -25,7 +25,7 @@
 
 use crate::config::StreamDef;
 use crate::error::{Error, Result};
-use crate::event::{codec, Event};
+use crate::event::{codec, Event, EventView, ViewScratch};
 use crate::mlog::{BatchEntry, BrokerRef, Consumer, Payload, Producer};
 use crate::util::hash;
 use crate::util::hash::FxHashMap;
@@ -84,6 +84,39 @@ impl Envelope {
             return Err(Error::corrupt("envelope: trailing bytes"));
         }
         Ok(Envelope { ingest_id, event })
+    }
+
+    /// Borrowed decode: ingest id + an [`EventView`] over the payload —
+    /// validates exactly what [`Envelope::decode`] validates without
+    /// materializing an `Event`. This is the envelope framing contract
+    /// the back-end's zero-allocation ingest relies on: the bytes after
+    /// the ingest-id varint are one standalone-encoded event
+    /// (`timestamp varint ++ value section`), so the value section can be
+    /// spliced straight into a reservoir chunk.
+    pub fn view<'a>(
+        buf: &'a [u8],
+        schema: &'a crate::event::Schema,
+        scratch: &'a mut ViewScratch,
+    ) -> Result<(u64, EventView<'a>)> {
+        let mut pos = 0;
+        let ingest_id = varint::read_u64(buf, &mut pos)?;
+        let view = scratch.view_from(buf, &mut pos, schema, 0)?;
+        if pos != buf.len() {
+            return Err(Error::corrupt("envelope: trailing bytes"));
+        }
+        Ok((ingest_id, view))
+    }
+
+    /// Split an envelope payload into `(ingest_id, timestamp,
+    /// value_bytes)` without touching the value section — the back-end
+    /// hands `value_bytes` to the reservoir's raw-append path, which
+    /// validates it as it builds its field-offset table (one scan total).
+    #[inline]
+    pub fn split_raw(buf: &[u8]) -> Result<(u64, i64, &[u8])> {
+        let mut pos = 0;
+        let ingest_id = varint::read_u64(buf, &mut pos)?;
+        let ts = varint::read_i64(buf, &mut pos)?;
+        Ok((ingest_id, ts, &buf[pos..]))
     }
 }
 

@@ -6,7 +6,7 @@
 //! schema once at registration time so evaluation is index-based.
 
 use crate::error::{Error, Result};
-use crate::event::{Event, Schema, Value};
+use crate::event::{EventRead, Schema, Value, ValueRef};
 
 /// Comparison operator.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
@@ -110,11 +110,15 @@ pub enum CompiledExpr {
 }
 
 impl CompiledExpr {
-    /// Evaluate against an event. Null fields compare false (SQL-ish
+    /// Evaluate against an event (owned or borrowed view — predicates
+    /// read fields as [`ValueRef`]s, so the hot path evaluates straight
+    /// off the encoded bytes). Null fields compare false (SQL-ish
     /// three-valued logic collapsed to false).
-    pub fn eval(&self, event: &Event) -> bool {
+    pub fn eval<E: EventRead + ?Sized>(&self, event: &E) -> bool {
         match self {
-            CompiledExpr::Cmp { idx, op, value } => cmp_values(event.value(*idx), value, *op),
+            CompiledExpr::Cmp { idx, op, value } => {
+                cmp_values(event.value_ref(*idx), value.as_value_ref(), *op)
+            }
             CompiledExpr::And(a, b) => a.eval(event) && b.eval(event),
             CompiledExpr::Or(a, b) => a.eval(event) || b.eval(event),
             CompiledExpr::Not(a) => !a.eval(event),
@@ -122,12 +126,12 @@ impl CompiledExpr {
     }
 }
 
-fn cmp_values(lhs: &Value, rhs: &Value, op: CmpOp) -> bool {
+fn cmp_values(lhs: ValueRef<'_>, rhs: ValueRef<'_>, op: CmpOp) -> bool {
     use std::cmp::Ordering;
     let ord: Option<Ordering> = match (lhs, rhs) {
-        (Value::Null, _) | (_, Value::Null) => None,
-        (Value::Str(a), Value::Str(b)) => Some(a.cmp(b)),
-        (Value::Bool(a), Value::Bool(b)) => Some(a.cmp(b)),
+        (ValueRef::Null, _) | (_, ValueRef::Null) => None,
+        (ValueRef::Str(a), ValueRef::Str(b)) => Some(a.cmp(b)),
+        (ValueRef::Bool(a), ValueRef::Bool(b)) => Some(a.cmp(b)),
         // numerics compare cross-type (I64 vs F64)
         (a, b) => match (a.as_f64(), b.as_f64()) {
             (Some(x), Some(y)) => x.partial_cmp(&y),
@@ -150,7 +154,7 @@ fn cmp_values(lhs: &Value, rhs: &Value, op: CmpOp) -> bool {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::event::{FieldType, Schema, SchemaRef};
+    use crate::event::{Event, FieldType, Schema, SchemaRef};
 
     fn schema() -> SchemaRef {
         Schema::of(&[

@@ -26,7 +26,11 @@
 //! ## Zero allocations per event (steady state)
 //!
 //! The per-event evaluation path allocates nothing once every live group
-//! has been seen:
+//! has been seen. Evaluation is generic over [`crate::event::EventRead`]:
+//! the data plane dispatches borrowed `EventView`s straight off the
+//! reservoir's raw chunk bytes (ingestion itself is allocation-free too —
+//! see `rust/src/event/view.rs` and the reservoir's raw-append path),
+//! while tests and oracles dispatch owned `Event`s through the same code.
 //!
 //! * group keys are built in a reusable scratch buffer and resolved to a
 //!   dense [`GroupId`] by the plan's [`GroupInterner`] — one hash probe;
@@ -57,10 +61,9 @@ pub use statestore::StateStore;
 
 use crate::agg::{AggKind, AggState};
 use crate::error::{Error, Result};
-use crate::event::{Event, SchemaRef, Value};
+use crate::event::{EventRead, SchemaRef, Value};
 use crate::reservoir::{ResIterator, Reservoir};
 use crate::util::clock::TimestampMs;
-use crate::util::hash;
 use crate::window::WindowSpec;
 use std::fmt::Write as _;
 
@@ -717,20 +720,22 @@ impl Plan {
 /// Render a group's display string — runs once per interned group, not
 /// per event. Byte-for-byte identical to the per-reply rendering the
 /// pre-interning path produced (`values joined with ','`).
-fn render_group(gnode: &GroupNode, event: &Event) -> String {
+fn render_group<E: EventRead + ?Sized>(gnode: &GroupNode, event: &E) -> String {
     let mut s = String::new();
     for (i, &idx) in gnode.field_idxs.iter().enumerate() {
         if i > 0 {
             s.push(',');
         }
-        let _ = write!(s, "{}", event.value(idx));
+        let _ = write!(s, "{}", event.value_ref(idx));
     }
     s
 }
 
-/// Route one event through a window node's sub-DAG.
+/// Route one event through a window node's sub-DAG. Generic over
+/// [`EventRead`]: the data plane dispatches borrowed reservoir views
+/// (`EventView`), while tests and oracles dispatch owned `Event`s.
 #[allow(clippy::too_many_arguments)]
-fn dispatch<S: ReplySink + ?Sized>(
+fn dispatch<S: ReplySink + ?Sized, E: EventRead + ?Sized>(
     topo: &Topo,
     state: &mut StateStore,
     interner: &mut GroupInterner,
@@ -738,7 +743,7 @@ fn dispatch<S: ReplySink + ?Sized>(
     w_idx: usize,
     role: Role,
     seq: u64,
-    event: &Event,
+    event: &E,
     emit: bool,
     only_metric: Option<u32>,
     sink: &mut S,
@@ -757,7 +762,7 @@ fn dispatch<S: ReplySink + ?Sized>(
             // hashed once by the interner and resolved to a dense id
             scratch.clear();
             for &idx in &gnode.field_idxs {
-                event.value(idx).key_bytes(scratch);
+                event.value_ref(idx).key_bytes(scratch);
                 scratch.push(0x1f);
             }
             let group = interner.intern(&scratch[..], || render_group(gnode, event));
@@ -769,32 +774,16 @@ fn dispatch<S: ReplySink + ?Sized>(
                         continue;
                     }
                 }
-                // resolve the aggregated value; SQL semantics: NULL (and
-                // non-numeric) values are excluded from field aggregates.
+                // aggregate input per SQL null semantics; COUNT_DISTINCT
+                // hashes through the scratch tail (no per-event Vec)
                 let (val, raw_hash, include) = match anode.field_idx {
                     None => (0.0, 0u64, true),
-                    Some(fi) => {
-                        let v = event.value(fi);
-                        match v {
-                            Value::Null => (0.0, 0, false),
-                            _ => {
-                                if anode.kind == AggKind::CountDistinct {
-                                    // hash the value's key bytes through
-                                    // the tail of the group-key scratch —
-                                    // no per-event Vec
-                                    v.key_bytes(scratch);
-                                    let h = hash::hash64(&scratch[group_key_len..]);
-                                    scratch.truncate(group_key_len);
-                                    (0.0, h, true)
-                                } else {
-                                    match v.as_f64() {
-                                        Some(x) => (x, 0, true),
-                                        None => (0.0, 0, false),
-                                    }
-                                }
-                            }
-                        }
-                    }
+                    Some(fi) => crate::agg::resolve_input(
+                        anode.kind,
+                        event.value_ref(fi),
+                        scratch,
+                        group_key_len,
+                    ),
                 };
                 let kind = anode.kind;
                 let value = if include {
@@ -821,7 +810,7 @@ fn dispatch<S: ReplySink + ?Sized>(
                             metric_id: anode.metric_id,
                             group_id: group,
                             value,
-                            event_ts: event.timestamp,
+                            event_ts: event.timestamp(),
                         },
                     );
                 }

@@ -16,10 +16,16 @@
 //! unchanged** from the byte-keyed store, so persisted states survive
 //! this refactor and `value_by_key` can still read them without an id.
 //!
-//! Capacity is in slots; eviction (approximate LRU by insertion order)
-//! spills a dirty state to the kvstore and recycles the slot through a
-//! free list, which bounds the **state** memory (the heavy part —
-//! aggregation payloads) even with unbounded group-by cardinality.
+//! Capacity is in slots; eviction is a **clock / second-chance sweep**
+//! over the dense slot vec: every slot touch sets a referenced bit, and
+//! the sweep hand clears bits until it finds an untouched slot to spill
+//! — hot groups survive spills (regression-tested), the sweep state is
+//! one `usize` hand, and no per-touch queue maintenance happens on the
+//! hot path (the previous insertion-order queue ignored touches
+//! entirely). A spilled dirty state hits the kvstore first, then the
+//! slot recycles through a free list, which bounds the **state** memory
+//! (the heavy part — aggregation payloads) even with unbounded group-by
+//! cardinality.
 //! Evicted states reload from the kvstore on next touch. Two small
 //! per-group residues do grow with total distinct groups seen: the
 //! `slot_of` index rows (4 bytes per (metric, group)) and the plan's
@@ -44,7 +50,6 @@ use crate::error::Result;
 use crate::kvstore::Store;
 use crate::plan::GroupId;
 use crate::util::varint;
-use std::collections::VecDeque;
 use std::sync::Arc;
 
 /// `slot_of` sentinel: no slot for this (metric, group).
@@ -62,9 +67,9 @@ struct Slot {
     dirty: bool,
     /// Occupied; false ⇒ on the free list.
     live: bool,
-    /// Bumped when the slot is freed; stale LRU entries are skipped by
-    /// generation mismatch.
-    gen: u32,
+    /// Second-chance bit: set on every touch, cleared by the clock
+    /// sweep; an unreferenced slot is the next eviction victim.
+    referenced: bool,
 }
 
 /// Cached, persistent aggregation states keyed by `(metric_id, GroupId)`.
@@ -76,8 +81,8 @@ pub struct StateStore {
     free: Vec<u32>,
     /// `slot_of[metric_id][group_id]` → slot id (`NO_SLOT` when absent).
     slot_of: Vec<Vec<u32>>,
-    /// Insertion-order `(slot, gen)` queue for approximate-LRU eviction.
-    order: VecDeque<(u32, u32)>,
+    /// Clock hand: next slot index the eviction sweep examines.
+    hand: usize,
     /// Occupied slots.
     live: usize,
     capacity: usize,
@@ -100,7 +105,7 @@ impl StateStore {
             slots: Vec::new(),
             free: Vec::new(),
             slot_of: Vec::new(),
-            order: VecDeque::new(),
+            hand: 0,
             live: 0,
             capacity: capacity.max(16),
             kv_reads: 0,
@@ -171,6 +176,8 @@ impl StateStore {
         init: Option<&mut dyn FnMut() -> AggState>,
     ) -> Result<Option<u32>> {
         if let Some(s) = self.lookup_slot(metric_id, group) {
+            // second chance: a touched slot survives the next sweep pass
+            self.slots[s as usize].referenced = true;
             return Ok(Some(s));
         }
         // cold path: first touch of this (metric, group) — or reload of a
@@ -207,6 +214,7 @@ impl StateStore {
                 s.group_id = group.0;
                 s.dirty = false;
                 s.live = true;
+                s.referenced = true;
                 id
             }
             None => {
@@ -218,7 +226,7 @@ impl StateStore {
                     group_id: group.0,
                     dirty: false,
                     live: true,
-                    gen: 0,
+                    referenced: true,
                 });
                 id
             }
@@ -233,28 +241,49 @@ impl StateStore {
             row.resize(g + 1, NO_SLOT);
         }
         row[g] = id;
-        let gen = self.slots[id as usize].gen;
-        self.order.push_back((id, gen));
         self.live += 1;
-        self.evict_over_capacity()?;
+        self.evict_over_capacity(id)?;
         Ok(id)
     }
 
-    /// Spill + recycle the oldest-inserted slots until within capacity.
-    fn evict_over_capacity(&mut self) -> Result<()> {
+    /// Clock / second-chance sweep: spill + recycle unreferenced slots
+    /// until within capacity. Referenced slots get their bit cleared and
+    /// one more round in memory; `protect` (the slot being inserted or
+    /// reloaded) is never the victim — the caller holds its id.
+    fn evict_over_capacity(&mut self, protect: u32) -> Result<()> {
         while self.live > self.capacity {
-            let (id, gen) = match self.order.pop_front() {
-                Some(x) => x,
-                None => break,
-            };
-            let slot = &self.slots[id as usize];
-            if !slot.live || slot.gen != gen {
-                continue; // stale entry of a previously-freed slot
+            let n = self.slots.len();
+            let mut victim: Option<u32> = None;
+            // first full pass may clear every referenced bit; the second
+            // is then guaranteed to find a victim (bounded sweep)
+            let mut spins = 0usize;
+            while spins <= 2 * n {
+                if self.hand >= n {
+                    self.hand = 0;
+                }
+                let id = self.hand as u32;
+                self.hand += 1;
+                spins += 1;
+                if id == protect {
+                    continue;
+                }
+                let slot = &mut self.slots[id as usize];
+                if !slot.live {
+                    continue;
+                }
+                if slot.referenced {
+                    slot.referenced = false; // second chance
+                    continue;
+                }
+                victim = Some(id);
+                break;
             }
+            // only the protected slot is live ⇒ nothing evictable
+            let Some(id) = victim else { break };
             // deferred-dirty states must hit the kvstore before the
             // in-memory copy goes away; everything else was persisted by
             // write-through already
-            if slot.dirty {
+            if self.slots[id as usize].dirty {
                 self.persist_slot(id)?;
             }
             self.free_slot(id);
@@ -280,7 +309,7 @@ impl StateStore {
         let slot = &mut self.slots[id as usize];
         slot.live = false;
         slot.dirty = false;
-        slot.gen = slot.gen.wrapping_add(1);
+        slot.referenced = false;
         // drop the heavy payloads now, not at recycling time
         slot.state = AggState::new(AggKind::Count);
         slot.key = Box::default();
@@ -572,6 +601,53 @@ mod tests {
             assert_eq!(
                 ss.value(1, GroupId(i), format!("g{i}").as_bytes()).unwrap(),
                 Some(3.0 * (i + 1) as f64),
+                "g{i}"
+            );
+        }
+    }
+
+    #[test]
+    fn clock_eviction_keeps_hot_groups_resident() {
+        // Regression for the insertion-order approximate LRU, which
+        // evicted purely by slot age: a group touched on every batch
+        // still got spilled once enough younger groups arrived. The
+        // clock sweep gives touched slots a second chance, so the hot
+        // group must stay in the slab through heavy filler churn.
+        let (_tmp, mut ss) = setup(16);
+        add(&mut ss, 1, 0, b"hot", 0, 1.0);
+        let mut seq = 1u64;
+        for round in 0..10u32 {
+            for i in 0..12u32 {
+                let g = 1 + round * 12 + i;
+                add(&mut ss, 1, g, format!("filler_{g}").as_bytes(), seq, 1.0);
+                seq += 1;
+            }
+            // touch the hot group between filler waves (sets its
+            // referenced bit — under insertion-order LRU this was a
+            // no-op and the hot group aged out)
+            add(&mut ss, 1, 0, b"hot", seq, 1.0);
+            seq += 1;
+        }
+        let reads_before = ss.kv_reads;
+        assert_eq!(ss.value(1, GroupId(0), b"hot").unwrap(), Some(11.0));
+        assert_eq!(
+            ss.kv_reads, reads_before,
+            "hot group must still be resident (no kvstore reload)"
+        );
+    }
+
+    #[test]
+    fn clock_eviction_stays_within_capacity_under_churn() {
+        let (_tmp, mut ss) = setup(16);
+        for i in 0..500u32 {
+            add(&mut ss, 1, i, format!("g{i}").as_bytes(), 0, (i + 1) as f64);
+            assert!(ss.cached_states() <= 16);
+        }
+        // every spilled state is still correct when reloaded
+        for i in (0..500u32).step_by(97) {
+            assert_eq!(
+                ss.value(1, GroupId(i), format!("g{i}").as_bytes()).unwrap(),
+                Some((i + 1) as f64),
                 "g{i}"
             );
         }

@@ -59,7 +59,7 @@ impl Rig {
     /// Append + advance, the per-event cycle of a task processor.
     fn feed(&mut self, e: Event) -> Vec<ResolvedReply> {
         let t_eval = e.timestamp + 1;
-        self.reservoir.append(e).unwrap();
+        self.reservoir.append(&e).unwrap();
         self.plan.advance(t_eval).unwrap()
     }
 }
@@ -568,7 +568,7 @@ fn advance_batch_equals_per_event_advance() {
         for e in chunk {
             last_t = (e.timestamp + 1).max(last_t);
             t_evals.push(last_t);
-            batched.reservoir.append(e.clone()).unwrap();
+            batched.reservoir.append(e).unwrap();
         }
         let mut sink = CollectingSink::default();
         batched.plan.advance_batch(&t_evals, &mut sink).unwrap();
@@ -591,7 +591,7 @@ fn advance_batch_equals_per_event_advance() {
 #[test]
 fn advance_batch_rejects_time_regression_mid_batch() {
     let mut r = rig(&q1_specs());
-    r.reservoir.append(ev(1000, "c1", "m1", 1.0)).unwrap();
+    r.reservoir.append(&ev(1000, "c1", "m1", 1.0)).unwrap();
     let mut sink = CollectingSink::default();
     assert!(r.plan.advance_batch(&[1001, 500], &mut sink).is_err());
     assert_eq!(
@@ -600,7 +600,7 @@ fn advance_batch_rejects_time_regression_mid_batch() {
         "the evaluated prefix's replies survive the error"
     );
     // the store is still usable after the failed batch
-    r.reservoir.append(ev(2000, "c1", "m1", 1.0)).unwrap();
+    r.reservoir.append(&ev(2000, "c1", "m1", 1.0)).unwrap();
     assert!(r.plan.advance(2001).is_ok());
 }
 

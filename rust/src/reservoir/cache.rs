@@ -167,14 +167,12 @@ impl ChunkCache {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::event::Event;
+    use crate::event::{Event, Schema};
 
     fn chunk(id: u64) -> Arc<DecodedChunk> {
-        Arc::new(DecodedChunk {
-            chunk_id: id,
-            base_seq: id * 10,
-            events: vec![Event::new(id as i64, vec![])],
-        })
+        let schema = Schema::of(&[]).unwrap();
+        let events = vec![Event::new(id as i64, vec![])];
+        Arc::new(DecodedChunk::from_events(id, id * 10, &events, &schema).unwrap())
     }
 
     fn cache(cap: usize) -> (ChunkCache, Arc<CacheStats>) {

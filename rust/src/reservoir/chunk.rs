@@ -6,7 +6,7 @@
 //! ```text
 //! header  := magic:u32 chunk_id:u64 base_seq:u64 count:u32 codec:u8
 //!            first_ts:i64 raw_len:u32
-//! payload := codec(raw)          raw := event* (codec::encode_into,
+//! payload := codec(raw)          raw := event* (the event codec with
 //!                                               base_ts = first_ts)
 //! trailer := crc32(payload):u32
 //! ```
@@ -15,9 +15,20 @@
 //! event sequence numbers directly addressable:
 //! `seq ∈ chunk k ⇔ k = seq / chunk_events` — the property the reservoir
 //! iterators rely on for O(1) chunk location.
+//!
+//! A decoded chunk does **not** materialize `Event`s: it keeps the
+//! uncompressed `raw` bytes plus per-event timestamp and field-offset
+//! tables (one validating [`codec::scan_values`] walk at decode time),
+//! and serves reads as borrowed [`EventView`]s — O(1) per event, zero
+//! allocations on the read path. The raw-append ingest path builds `raw`
+//! by splicing already-encoded value bytes behind a re-delta'd timestamp
+//! varint ([`build_raw_event`]), so chunk files stay **byte-identical**
+//! to the old encode-from-`Event` path ([`encode_chunk`], kept as the
+//! reference encoder).
 
 use crate::error::{Error, Result};
-use crate::event::{codec, Event, SchemaRef};
+use crate::event::{codec, Event, EventView, SchemaRef};
+use crate::util::varint;
 use byteorder::{ByteOrder, LittleEndian};
 use std::path::Path;
 
@@ -43,32 +54,157 @@ impl Compression {
     }
 }
 
-/// An immutable, fully-decoded chunk of events.
-#[derive(Debug)]
+/// An immutable chunk of events in raw encoded form, readable as
+/// borrowed [`EventView`]s.
 pub struct DecodedChunk {
     /// Chunk index (sequential from 0).
     pub chunk_id: u64,
-    /// Sequence number of `events[0]`.
+    /// Sequence number of the first event.
     pub base_seq: u64,
-    /// The events, in arrival order.
-    pub events: Vec<Event>,
+    schema: SchemaRef,
+    /// Uncompressed event bytes (timestamps delta-encoded vs `first_ts`).
+    raw: Vec<u8>,
+    /// Absolute timestamp per event.
+    ts: Vec<i64>,
+    /// `count * arity` payload offsets into `raw` (see
+    /// [`codec::scan_values`]).
+    offsets: Vec<u32>,
+}
+
+impl std::fmt::Debug for DecodedChunk {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("DecodedChunk")
+            .field("chunk_id", &self.chunk_id)
+            .field("base_seq", &self.base_seq)
+            .field("events", &self.ts.len())
+            .finish()
+    }
 }
 
 impl DecodedChunk {
-    /// Event by global sequence number (must belong to this chunk).
+    /// Assemble from pre-validated parts (the reservoir's seal path,
+    /// which already holds the raw bytes and offset tables).
+    pub(crate) fn from_parts(
+        chunk_id: u64,
+        base_seq: u64,
+        schema: SchemaRef,
+        raw: Vec<u8>,
+        ts: Vec<i64>,
+        offsets: Vec<u32>,
+    ) -> DecodedChunk {
+        debug_assert_eq!(offsets.len(), ts.len() * schema.len());
+        DecodedChunk {
+            chunk_id,
+            base_seq,
+            schema,
+            raw,
+            ts,
+            offsets,
+        }
+    }
+
+    /// Build a chunk from owned events (tests, tools).
+    pub fn from_events(
+        chunk_id: u64,
+        base_seq: u64,
+        events: &[Event],
+        schema: &SchemaRef,
+    ) -> Result<DecodedChunk> {
+        let buf = encode_chunk(chunk_id, base_seq, events, schema, Compression::None)?;
+        decode_chunk(&buf, schema)
+    }
+
+    /// Number of events in the chunk.
+    pub fn len(&self) -> usize {
+        self.ts.len()
+    }
+
+    /// True when the chunk holds no events.
+    pub fn is_empty(&self) -> bool {
+        self.ts.is_empty()
+    }
+
+    /// Borrowed view of the event at global sequence number `seq` (must
+    /// belong to this chunk). O(1), allocation-free.
     #[inline]
-    pub fn event_at(&self, seq: u64) -> &Event {
-        &self.events[(seq - self.base_seq) as usize]
+    pub fn view_at(&self, seq: u64) -> EventView<'_> {
+        let i = (seq - self.base_seq) as usize;
+        let arity = self.schema.len();
+        EventView::from_parts(
+            self.ts[i],
+            &self.raw,
+            &self.offsets[i * arity..(i + 1) * arity],
+            &self.schema,
+        )
+    }
+
+    /// Timestamp of the event at `seq` without building a view.
+    #[inline]
+    pub fn ts_at(&self, seq: u64) -> i64 {
+        self.ts[(seq - self.base_seq) as usize]
     }
 
     /// True if `seq` falls inside this chunk.
     #[inline]
     pub fn contains(&self, seq: u64) -> bool {
-        seq >= self.base_seq && seq < self.base_seq + self.events.len() as u64
+        seq >= self.base_seq && seq < self.base_seq + self.ts.len() as u64
+    }
+
+    /// Materialize every event (tests, tools — allocates freely).
+    pub fn events(&self) -> Vec<Event> {
+        use crate::event::EventRead;
+        (0..self.ts.len() as u64)
+            .map(|i| self.view_at(self.base_seq + i).to_event())
+            .collect()
     }
 }
 
-/// Encode a sealed chunk to its on-disk representation.
+/// Append one event to a chunk's raw byte stream from its already-encoded
+/// value section: re-deltas only the timestamp varint and splices the
+/// value bytes verbatim — no `Event` round trip, byte-identical to
+/// [`codec::encode_into`] with `base_ts = first_ts`.
+pub fn build_raw_event(raw: &mut Vec<u8>, ts: i64, first_ts: i64, values: &[u8]) -> u32 {
+    varint::write_i64(raw, ts - first_ts);
+    let val_start = raw.len() as u32;
+    raw.extend_from_slice(values);
+    val_start
+}
+
+/// Frame an already-built raw event stream as a chunk file image
+/// (header + compressed payload + CRC trailer).
+pub fn encode_chunk_payload(
+    chunk_id: u64,
+    base_seq: u64,
+    count: usize,
+    first_ts: i64,
+    raw: &[u8],
+    compression: Compression,
+) -> Result<Vec<u8>> {
+    let payload = match compression {
+        Compression::None => raw.to_vec(),
+        Compression::Zstd(level) => zstd::bulk::compress(raw, level)
+            .map_err(|e| Error::internal(format!("zstd compress: {e}")))?,
+    };
+    let mut out = Vec::with_capacity(HEADER_LEN + payload.len() + 4);
+    let mut header = [0u8; HEADER_LEN];
+    LittleEndian::write_u32(&mut header[0..4], MAGIC);
+    LittleEndian::write_u64(&mut header[4..12], chunk_id);
+    LittleEndian::write_u64(&mut header[12..20], base_seq);
+    LittleEndian::write_u32(&mut header[20..24], count as u32);
+    header[24] = compression.tag();
+    LittleEndian::write_i64(&mut header[25..33], first_ts);
+    LittleEndian::write_u32(&mut header[33..37], raw.len() as u32);
+    out.extend_from_slice(&header);
+    out.extend_from_slice(&payload);
+    let mut crc = [0u8; 4];
+    LittleEndian::write_u32(&mut crc, crc32fast::hash(&payload));
+    out.extend_from_slice(&crc);
+    Ok(out)
+}
+
+/// Encode a sealed chunk from owned events — the reference encoder the
+/// raw-append path must stay byte-identical to (asserted by
+/// `rust/tests/view_equivalence.rs`).
 pub fn encode_chunk(
     chunk_id: u64,
     base_seq: u64,
@@ -81,29 +217,12 @@ pub fn encode_chunk(
     for e in events {
         codec::encode_into(&mut raw, e, schema, first_ts);
     }
-    let payload = match compression {
-        Compression::None => raw.clone(),
-        Compression::Zstd(level) => zstd::bulk::compress(&raw, level)
-            .map_err(|e| Error::internal(format!("zstd compress: {e}")))?,
-    };
-    let mut out = Vec::with_capacity(HEADER_LEN + payload.len() + 4);
-    let mut header = [0u8; HEADER_LEN];
-    LittleEndian::write_u32(&mut header[0..4], MAGIC);
-    LittleEndian::write_u64(&mut header[4..12], chunk_id);
-    LittleEndian::write_u64(&mut header[12..20], base_seq);
-    LittleEndian::write_u32(&mut header[20..24], events.len() as u32);
-    header[24] = compression.tag();
-    LittleEndian::write_i64(&mut header[25..33], first_ts);
-    LittleEndian::write_u32(&mut header[33..37], raw.len() as u32);
-    out.extend_from_slice(&header);
-    out.extend_from_slice(&payload);
-    let mut crc = [0u8; 4];
-    LittleEndian::write_u32(&mut crc, crc32fast::hash(&payload));
-    out.extend_from_slice(&crc);
-    Ok(out)
+    encode_chunk_payload(chunk_id, base_seq, events.len(), first_ts, &raw, compression)
 }
 
-/// Decode a chunk file image produced by [`encode_chunk`].
+/// Decode a chunk file image produced by [`encode_chunk`] /
+/// [`encode_chunk_payload`]. One validating walk builds the timestamp and
+/// field-offset tables; events themselves stay in raw form.
 pub fn decode_chunk(buf: &[u8], schema: &SchemaRef) -> Result<DecodedChunk> {
     if buf.len() < HEADER_LEN + 4 {
         return Err(Error::corrupt("chunk: too short"));
@@ -131,10 +250,12 @@ pub fn decode_chunk(buf: &[u8], schema: &SchemaRef) -> Result<DecodedChunk> {
     if raw.len() != raw_len {
         return Err(Error::corrupt("chunk: raw length mismatch"));
     }
-    let mut events = Vec::with_capacity(count);
+    let mut ts = Vec::with_capacity(count);
+    let mut offsets = Vec::with_capacity(count * schema.len());
     let mut pos = 0usize;
     for _ in 0..count {
-        events.push(codec::decode_from(&raw, &mut pos, schema, first_ts)?);
+        ts.push(first_ts + varint::read_i64(&raw, &mut pos)?);
+        codec::scan_values(&raw, &mut pos, schema, &mut offsets)?;
     }
     if pos != raw.len() {
         return Err(Error::corrupt("chunk: trailing bytes after events"));
@@ -142,7 +263,10 @@ pub fn decode_chunk(buf: &[u8], schema: &SchemaRef) -> Result<DecodedChunk> {
     Ok(DecodedChunk {
         chunk_id,
         base_seq,
-        events,
+        schema: schema.clone(),
+        raw,
+        ts,
+        offsets,
     })
 }
 
@@ -169,7 +293,7 @@ pub fn read_chunk_file(dir: &Path, chunk_id: u64, schema: &SchemaRef) -> Result<
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::event::{FieldType, Schema, Value};
+    use crate::event::{EventRead, FieldType, Schema, Value};
     use crate::util::rng::Rng;
 
     fn schema() -> SchemaRef {
@@ -199,7 +323,7 @@ mod tests {
         let c = decode_chunk(&buf, &s).unwrap();
         assert_eq!(c.chunk_id, 3);
         assert_eq!(c.base_seq, 768);
-        assert_eq!(c.events, evs);
+        assert_eq!(c.events(), evs);
     }
 
     #[test]
@@ -208,7 +332,7 @@ mod tests {
         let evs = events(64, 0);
         let buf = encode_chunk(0, 0, &evs, &s, Compression::None).unwrap();
         let c = decode_chunk(&buf, &s).unwrap();
-        assert_eq!(c.events, evs);
+        assert_eq!(c.events(), evs);
     }
 
     #[test]
@@ -246,14 +370,35 @@ mod tests {
     }
 
     #[test]
-    fn event_at_and_contains() {
+    fn view_at_and_contains() {
         let s = schema();
         let evs = events(10, 100);
         let buf = encode_chunk(2, 20, &evs, &s, Compression::None).unwrap();
         let c = decode_chunk(&buf, &s).unwrap();
         assert!(c.contains(20) && c.contains(29));
         assert!(!c.contains(19) && !c.contains(30));
-        assert_eq!(c.event_at(25), &evs[5]);
+        assert_eq!(c.view_at(25).to_event(), evs[5]);
+        assert_eq!(c.ts_at(25), evs[5].timestamp);
+    }
+
+    #[test]
+    fn raw_event_splice_matches_reference_encoder() {
+        // build_raw_event over pre-encoded value bytes must produce the
+        // same raw stream the reference encoder does
+        let s = schema();
+        let evs = events(32, 5_000);
+        let first_ts = evs[0].timestamp;
+        let mut reference = Vec::new();
+        for e in &evs {
+            codec::encode_into(&mut reference, e, &s, first_ts);
+        }
+        let mut spliced = Vec::new();
+        for e in &evs {
+            let mut values = Vec::new();
+            codec::encode_values_into(&mut values, e, &s);
+            build_raw_event(&mut spliced, e.timestamp, first_ts, &values);
+        }
+        assert_eq!(reference, spliced);
     }
 
     #[test]
@@ -264,7 +409,7 @@ mod tests {
         let buf = encode_chunk(7, 224, &evs, &s, Compression::Zstd(1)).unwrap();
         std::fs::write(tmp.path().join(chunk_file_name(7)), &buf).unwrap();
         let c = read_chunk_file(tmp.path(), 7, &s).unwrap();
-        assert_eq!(c.events, evs);
+        assert_eq!(c.events(), evs);
         assert!(read_chunk_file(tmp.path(), 8, &s).is_err(), "missing file");
     }
 
@@ -273,6 +418,6 @@ mod tests {
         let s = schema();
         let buf = encode_chunk(0, 0, &[], &s, Compression::Zstd(1)).unwrap();
         let c = decode_chunk(&buf, &s).unwrap();
-        assert!(c.events.is_empty());
+        assert!(c.is_empty());
     }
 }

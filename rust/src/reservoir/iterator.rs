@@ -9,10 +9,12 @@
 //! Events are exposed by callback (`next(|seq, event| ...)`) rather than
 //! by reference return: events in the open chunk live behind a lock, and
 //! the callback shape lets both sealed and open chunks be served
-//! zero-copy.
+//! zero-copy. The callback receives a borrowed [`EventView`] — chunks
+//! (sealed and open) store events in raw encoded form with precomputed
+//! field-offset tables, so serving a view is O(1) and allocation-free.
 
 use crate::error::Result;
-use crate::event::Event;
+use crate::event::EventView;
 use crate::reservoir::chunk::DecodedChunk;
 use crate::reservoir::{OpenChunk, Shared};
 use crate::util::clock::TimestampMs;
@@ -53,12 +55,12 @@ impl ResIterator {
 
     /// Timestamp of the next event, or `None` at the end of the stream.
     pub fn peek_ts(&mut self) -> Result<Option<TimestampMs>> {
-        self.with_next(|_, e| e.timestamp)
+        self.with_next(|_, e| e.timestamp())
     }
 
-    /// If an event is available, call `f(seq, &event)`, advance, and
+    /// If an event is available, call `f(seq, &view)`, advance, and
     /// return its result.
-    pub fn next<R>(&mut self, f: impl FnOnce(u64, &Event) -> R) -> Result<Option<R>> {
+    pub fn next<R>(&mut self, f: impl FnOnce(u64, &EventView<'_>) -> R) -> Result<Option<R>> {
         let r = self.with_next(f)?;
         if r.is_some() {
             self.seq += 1;
@@ -66,34 +68,37 @@ impl ResIterator {
         Ok(r)
     }
 
+    /// Ensure the sealed chunk containing `self.seq` is pinned.
+    fn pin_sealed(&mut self) -> Result<()> {
+        let chunk_id = self.seq / self.shared.chunk_events as u64;
+        let need_load = match &self.current {
+            Some(c) => !c.contains(self.seq),
+            None => true,
+        };
+        if need_load {
+            let c = self.shared.chunk(chunk_id)?;
+            // eager caching: warm the adjacent chunk as this one
+            // starts being iterated (paper §3.3.1)
+            self.shared.request_prefetch(chunk_id + 1);
+            self.current = Some(c);
+        }
+        Ok(())
+    }
+
     /// Call `f` on the next event without advancing.
-    fn with_next<R>(&mut self, f: impl FnOnce(u64, &Event) -> R) -> Result<Option<R>> {
+    fn with_next<R>(&mut self, f: impl FnOnce(u64, &EventView<'_>) -> R) -> Result<Option<R>> {
         let sealed_chunks = self.shared.sealed_chunks.load(Ordering::Acquire);
         let sealed_events = sealed_chunks * self.shared.chunk_events as u64;
         if self.seq < sealed_events {
-            let chunk_id = self.seq / self.shared.chunk_events as u64;
-            let need_load = match &self.current {
-                Some(c) => !c.contains(self.seq),
-                None => true,
-            };
-            if need_load {
-                let c = self.shared.chunk(chunk_id)?;
-                // eager caching: warm the adjacent chunk as this one
-                // starts being iterated (paper §3.3.1)
-                self.shared.request_prefetch(chunk_id + 1);
-                self.current = Some(c);
-            }
+            self.pin_sealed()?;
             let c = self.current.as_ref().expect("just loaded");
-            return Ok(Some(f(self.seq, c.event_at(self.seq))));
+            return Ok(Some(f(self.seq, &c.view_at(self.seq))));
         }
         // open chunk
         let open = self.open.read().unwrap();
-        let idx = self.seq.checked_sub(open.base_seq);
-        match idx {
-            Some(i) if (i as usize) < open.events.len() => {
-                Ok(Some(f(self.seq, &open.events[i as usize])))
-            }
-            _ => Ok(None),
+        match open.view_at(self.seq, &self.shared.schema) {
+            Some(v) => Ok(Some(f(self.seq, &v))),
+            None => Ok(None),
         }
     }
 
@@ -116,7 +121,7 @@ impl ResIterator {
 
 #[cfg(test)]
 mod tests {
-    use crate::event::{Event, FieldType, Schema, Value};
+    use crate::event::{Event, EventRead, FieldType, Schema, Value, ValueRef};
     use crate::reservoir::{Reservoir, ReservoirConfig};
     use crate::util::tmp::TempDir;
 
@@ -130,7 +135,7 @@ mod tests {
         };
         let mut r = Reservoir::open(cfg, schema).unwrap();
         for i in 0..n {
-            r.append(Event::new(i as i64 * 100, vec![Value::I64(i as i64)]))
+            r.append(&Event::new(i as i64 * 100, vec![Value::I64(i as i64)]))
                 .unwrap();
         }
         (tmp, r)
@@ -154,8 +159,8 @@ mod tests {
         for i in 0..40u64 {
             let (seq, v) = it
                 .next(|s, e| {
-                    let v = match &e.values[0] {
-                        Value::I64(v) => *v,
+                    let v = match e.value_ref(0) {
+                        ValueRef::I64(v) => v,
                         _ => panic!(),
                     };
                     (s, v)
@@ -194,7 +199,7 @@ mod tests {
         let mut it = r.iterator_at(0);
         let mut seen = 0u64;
         for i in 0..20u64 {
-            r.append(Event::new(i as i64, vec![Value::I64(i as i64)]))
+            r.append(&Event::new(i as i64, vec![Value::I64(i as i64)]))
                 .unwrap();
             // drain whatever is visible
             while it.next(|_, _| ()).unwrap().is_some() {

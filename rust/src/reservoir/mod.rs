@@ -1,11 +1,18 @@
 //! The **event reservoir** (paper §3.3.1) — Railgun's core storage
 //! component and the enabler of real sliding windows over long horizons.
 //!
-//! Events are appended to an in-memory *open chunk*; when it reaches a
-//! fixed event count it is *sealed*: handed (already encoded+compressed)
-//! to a background writer thread that persists it as an immutable,
-//! ordered chunk file. I/O is therefore never on the event-processing
-//! path. Windows read the reservoir through [`ResIterator`]s; when an
+//! Events are appended to an in-memory *open chunk* in **raw encoded
+//! form** ([`Reservoir::append_raw`] copies already-encoded value bytes
+//! once, validating as it scans — the zero-allocation ingest path; the
+//! owned-event [`Reservoir::append`] encodes into a reusable scratch and
+//! delegates). When the open chunk reaches a fixed event count it is
+//! *sealed*: the raw bytes are framed (timestamps re-delta'd in place,
+//! no `Event` round trip), compressed, and handed to a background writer
+//! thread that persists an immutable, ordered chunk file. I/O is
+//! therefore never on the event-processing path. Reads — open or sealed
+//! — serve borrowed [`EventView`]s over the raw bytes via precomputed
+//! field-offset tables. Windows read the reservoir through
+//! [`ResIterator`]s; when an
 //! iterator starts a new chunk, the *adjacent* chunk is eagerly loaded
 //! into the shared [`cache::ChunkCache`] by a background prefetch thread,
 //! so advancing windows find their next chunk already in memory (the
@@ -25,7 +32,7 @@ pub use chunk::{Compression, DecodedChunk};
 pub use iterator::ResIterator;
 
 use crate::error::{Error, Result};
-use crate::event::{Event, SchemaRef};
+use crate::event::{codec, Event, EventView, SchemaRef};
 use crate::util::hash::FxHashMap;
 use cache::ChunkCache;
 use std::path::PathBuf;
@@ -65,12 +72,52 @@ impl ReservoirConfig {
     }
 }
 
+/// Per-event bookkeeping inside the open chunk's raw buffer.
+#[derive(Debug, Clone, Copy)]
+pub(crate) struct OpenEventMeta {
+    /// Absolute event timestamp.
+    pub ts: i64,
+    /// Value-section range in [`OpenChunk::buf`].
+    pub start: u32,
+    pub end: u32,
+}
+
 /// Open (mutable) chunk state shared between the reservoir and tail
-/// iterators.
+/// iterators. Events are kept in **raw encoded form** (value sections
+/// concatenated in `buf`, field offsets precomputed), so appends copy
+/// bytes instead of materializing `Event`s, and reads serve borrowed
+/// [`EventView`]s.
 #[derive(Debug)]
 pub(crate) struct OpenChunk {
     pub base_seq: u64,
-    pub events: Vec<Event>,
+    /// Concatenated value sections (no timestamp varints — timestamps
+    /// live in `meta` and are re-delta'd at seal time).
+    pub buf: Vec<u8>,
+    pub meta: Vec<OpenEventMeta>,
+    /// `meta.len() * arity` payload offsets into `buf`.
+    pub offsets: Vec<u32>,
+}
+
+impl OpenChunk {
+    pub(crate) fn len(&self) -> usize {
+        self.meta.len()
+    }
+
+    /// Borrowed view of the event at absolute `seq`, if it lives in the
+    /// open chunk.
+    pub(crate) fn view_at<'a>(&'a self, seq: u64, schema: &'a SchemaRef) -> Option<EventView<'a>> {
+        let i = seq.checked_sub(self.base_seq)? as usize;
+        if i >= self.meta.len() {
+            return None;
+        }
+        let arity = schema.len();
+        Some(EventView::from_parts(
+            self.meta[i].ts,
+            &self.buf,
+            &self.offsets[i * arity..(i + 1) * arity],
+            schema,
+        ))
+    }
 }
 
 /// State shared with iterators and background threads.
@@ -137,6 +184,9 @@ pub struct Reservoir {
     writer: Option<std::thread::JoinHandle<()>>,
     prefetcher: Option<std::thread::JoinHandle<()>>,
     compression: Compression,
+    /// Reusable value-encode buffer for the owned-event [`Reservoir::append`]
+    /// compatibility path.
+    encode_scratch: Vec<u8>,
 }
 
 impl std::fmt::Debug for Reservoir {
@@ -225,24 +275,76 @@ impl Reservoir {
             shared: shared.clone(),
             open: Arc::new(RwLock::new(OpenChunk {
                 base_seq: next_seq,
-                events: Vec::with_capacity(config.chunk_events),
+                buf: Vec::with_capacity(config.chunk_events * 32),
+                meta: Vec::with_capacity(config.chunk_events),
+                offsets: Vec::new(),
             })),
             next_seq,
             writer_tx,
             writer: Some(writer),
             prefetcher: Some(prefetcher),
             compression: config.compression,
+            encode_scratch: Vec::with_capacity(64),
         })
     }
 
-    /// Append an event; returns its sequence number. Seals + hands off the
+    /// Append an owned event; returns its sequence number. Encodes the
+    /// value section into a reusable scratch and delegates to the raw
+    /// path — events land in the reservoir in raw form either way, so
+    /// both paths produce byte-identical chunks.
+    pub fn append(&mut self, event: &Event) -> Result<u64> {
+        let mut scratch = std::mem::take(&mut self.encode_scratch);
+        scratch.clear();
+        codec::encode_values_into(&mut scratch, event, &self.shared.schema);
+        let r = self.append_raw(event.timestamp, &scratch);
+        self.encode_scratch = scratch;
+        r
+    }
+
+    /// Append an event from its already-encoded value section (the bytes
+    /// after the timestamp varint of the standalone event codec) — the
+    /// **zero-allocation ingest path**: the bytes are validated as they
+    /// are scanned into the open chunk's offset table and copied once;
+    /// no `Event`, no `Vec<Value>`, no `String`s. Seals + hands off the
     /// chunk to the writer thread when full (no I/O on this path).
-    pub fn append(&mut self, event: Event) -> Result<u64> {
+    pub fn append_raw(&mut self, ts: i64, values: &[u8]) -> Result<u64> {
         let seq = self.next_seq;
         let seal = {
             let mut open = self.open.write().unwrap();
-            open.events.push(event);
-            open.events.len() >= self.shared.chunk_events
+            let start = open.buf.len();
+            if start + values.len() >= codec::NULL_OFFSET as usize {
+                return Err(Error::invalid("reservoir: open chunk exceeds 4 GiB"));
+            }
+            let offsets_len = open.offsets.len();
+            let OpenChunk {
+                buf, offsets: offs, ..
+            } = &mut *open;
+            buf.extend_from_slice(values);
+            let mut pos = start;
+            let scanned = codec::scan_values(buf, &mut pos, &self.shared.schema, offs)
+                .and_then(|()| {
+                    if pos != buf.len() {
+                        Err(Error::corrupt(format!(
+                            "event: {} trailing bytes",
+                            buf.len() - pos
+                        )))
+                    } else {
+                        Ok(())
+                    }
+                });
+            if let Err(e) = scanned {
+                // reject atomically: the open chunk is unchanged
+                buf.truncate(start);
+                offs.truncate(offsets_len);
+                return Err(e);
+            }
+            let end = open.buf.len() as u32;
+            open.meta.push(OpenEventMeta {
+                ts,
+                start: start as u32,
+                end,
+            });
+            open.meta.len() >= self.shared.chunk_events
         };
         self.next_seq += 1;
         if seal {
@@ -252,27 +354,57 @@ impl Reservoir {
     }
 
     fn seal(&mut self) -> Result<()> {
-        let (base_seq, events) = {
+        let (base_seq, count, first_ts, raw, ts_vec, offsets) = {
             let mut open = self.open.write().unwrap();
+            let count = open.len();
+            let first_ts = open.meta.first().map(|m| m.ts).unwrap_or(0);
+            let arity = self.shared.schema.len();
+            // splice the raw value bytes behind re-delta'd timestamp
+            // varints — no Event round trip, byte-identical to the
+            // reference encoder (chunk::encode_chunk)
+            let mut raw = Vec::with_capacity(open.buf.len() + count * 5);
+            let mut ts_vec = Vec::with_capacity(count);
+            let mut offsets = Vec::with_capacity(count * arity);
+            for (i, m) in open.meta.iter().enumerate() {
+                let val_start = chunk::build_raw_event(
+                    &mut raw,
+                    m.ts,
+                    first_ts,
+                    &open.buf[m.start as usize..m.end as usize],
+                );
+                for &o in &open.offsets[i * arity..(i + 1) * arity] {
+                    offsets.push(if o == codec::NULL_OFFSET {
+                        codec::NULL_OFFSET
+                    } else {
+                        o - m.start + val_start
+                    });
+                }
+                ts_vec.push(m.ts);
+            }
             let base = open.base_seq;
-            let events = std::mem::take(&mut open.events);
-            open.base_seq = base + events.len() as u64;
-            open.events.reserve(self.shared.chunk_events);
-            (base, events)
+            open.base_seq = base + count as u64;
+            open.buf.clear();
+            open.meta.clear();
+            open.offsets.clear();
+            (base, count, first_ts, raw, ts_vec, offsets)
         };
         let chunk_id = base_seq / self.shared.chunk_events as u64;
-        let bytes = chunk::encode_chunk(
+        let bytes = chunk::encode_chunk_payload(
             chunk_id,
             base_seq,
-            &events,
-            &self.shared.schema,
+            count,
+            first_ts,
+            &raw,
             self.compression,
         )?;
-        let decoded = Arc::new(DecodedChunk {
+        let decoded = Arc::new(DecodedChunk::from_parts(
             chunk_id,
             base_seq,
-            events,
-        });
+            self.shared.schema.clone(),
+            raw,
+            ts_vec,
+            offsets,
+        ));
         // newest chunk is hot: put it in both pending (until durable) and
         // the cache (tail-adjacent iterators will want it)
         self.shared
@@ -423,7 +555,7 @@ fn prefetch_loop(shared: Arc<Shared>, rx: Receiver<u64>) {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::event::{FieldType, Schema, Value};
+    use crate::event::{EventRead, FieldType, Schema, Value};
     use crate::util::tmp::TempDir;
 
     fn schema() -> SchemaRef {
@@ -453,7 +585,7 @@ mod tests {
         let tmp = TempDir::new("res_seq");
         let mut r = Reservoir::open(config(&tmp), schema()).unwrap();
         for i in 0..100 {
-            assert_eq!(r.append(ev(i)).unwrap(), i);
+            assert_eq!(r.append(&ev(i)).unwrap(), i);
         }
         assert_eq!(r.len(), 100);
         // 100 events / 16 per chunk = 6 sealed
@@ -467,11 +599,11 @@ mod tests {
         let mut r = Reservoir::open(config(&tmp), schema()).unwrap();
         let events: Vec<Event> = (0..100).map(ev).collect();
         for e in &events {
-            r.append(e.clone()).unwrap();
+            r.append(e).unwrap();
         }
         let mut it = r.iterator_at(0);
         let mut got = Vec::new();
-        while let Some(e) = it.next(|_, e| e.clone()).unwrap() {
+        while let Some(e) = it.next(|_, e| e.to_event()).unwrap() {
             got.push(e);
         }
         assert_eq!(got, events);
@@ -486,7 +618,7 @@ mod tests {
         let mut r = Reservoir::open(config(&tmp), schema()).unwrap();
         let mut it = r.iterator_at(0);
         assert_eq!(it.peek_ts().unwrap(), None);
-        r.append(ev(0)).unwrap();
+        r.append(&ev(0)).unwrap();
         assert_eq!(it.peek_ts().unwrap(), Some(1000));
     }
 
@@ -495,10 +627,10 @@ mod tests {
         let tmp = TempDir::new("res_mid");
         let mut r = Reservoir::open(config(&tmp), schema()).unwrap();
         for i in 0..64 {
-            r.append(ev(i)).unwrap();
+            r.append(&ev(i)).unwrap();
         }
         let mut it = r.iterator_at(40);
-        let first = it.next(|seq, e| (seq, e.timestamp)).unwrap().unwrap();
+        let first = it.next(|seq, e| (seq, e.timestamp())).unwrap().unwrap();
         assert_eq!(first, (40, 1040));
     }
 
@@ -508,7 +640,7 @@ mod tests {
         {
             let mut r = Reservoir::open(config(&tmp), schema()).unwrap();
             for i in 0..50 {
-                r.append(ev(i)).unwrap();
+                r.append(&ev(i)).unwrap();
             }
             r.sync().unwrap();
         } // 48 sealed (3 chunks), 2 open lost
@@ -529,12 +661,12 @@ mod tests {
         {
             let mut r = Reservoir::open(config(&tmp), schema()).unwrap();
             for i in 0..32 {
-                r.append(ev(i)).unwrap();
+                r.append(&ev(i)).unwrap();
             }
             r.sync().unwrap();
         }
         let mut r = Reservoir::open(config(&tmp), schema()).unwrap();
-        assert_eq!(r.append(ev(32)).unwrap(), 32);
+        assert_eq!(r.append(&ev(32)).unwrap(), 32);
         let mut it = r.iterator_at(30);
         let seqs: (u64, u64, u64) = {
             let a = it.next(|s, _| s).unwrap().unwrap();
@@ -556,7 +688,7 @@ mod tests {
         };
         let mut r = Reservoir::open(cfg, schema()).unwrap();
         for i in 0..160 {
-            r.append(ev(i)).unwrap();
+            r.append(&ev(i)).unwrap();
         }
         r.sync().unwrap();
         let stats = r.cache_stats();
@@ -584,7 +716,7 @@ mod tests {
         };
         let mut r = Reservoir::open(cfg, schema()).unwrap();
         for i in 0..(64 * 30) {
-            r.append(ev(i)).unwrap();
+            r.append(&ev(i)).unwrap();
         }
         r.sync().unwrap();
         let stats = r.cache_stats();
@@ -614,7 +746,7 @@ mod tests {
         };
         let mut r = Reservoir::open(cfg, schema()).unwrap();
         for i in 0..20 {
-            r.append(ev(i)).unwrap();
+            r.append(&ev(i)).unwrap();
         }
         r.sync().unwrap();
         let mut it = r.iterator_at(0);
@@ -630,7 +762,7 @@ mod tests {
         let tmp = TempDir::new("res_two_iters");
         let mut r = Reservoir::open(config(&tmp), schema()).unwrap();
         for i in 0..50 {
-            r.append(ev(i)).unwrap();
+            r.append(&ev(i)).unwrap();
         }
         let mut head = r.iterator_at(0);
         let mut tail = r.iterator_at(45);

@@ -152,7 +152,7 @@ fn property_sliding_window_containment() {
             for gap in gaps {
                 ts += *gap as i64;
                 history.push(ts);
-                res.append(Event::new(ts, vec![Value::Str("k1".into())]))
+                res.append(&Event::new(ts, vec![Value::Str("k1".into())]))
                     .map_err(|e| e.to_string())?;
                 let replies = plan.advance(ts + 1).map_err(|e| e.to_string())?;
                 let got = replies

@@ -1,0 +1,317 @@
+//! Borrowed-decode equivalence: `EventView` must read **exactly** what
+//! `Event::decode` reads and reject **exactly** what it rejects — across
+//! all field types, nulls, truncations and corrupt buffers — and the
+//! reservoir's raw-append path must write chunk files **byte-identical**
+//! to the owned re-encode path it replaced. These properties are what
+//! make the zero-allocation ingest refactor invisible to every consumer:
+//! no wire or disk byte changes, no acceptance-set changes.
+
+use railgun::event::{codec, Event, EventRead, FieldType, Schema, SchemaRef, Value, ViewScratch};
+use railgun::frontend::Envelope;
+use railgun::reservoir::{chunk, Compression, Reservoir, ReservoirConfig};
+use railgun::util::propcheck::check;
+use railgun::util::rng::Rng;
+use railgun::util::tmp::TempDir;
+
+/// A schema exercising every field type twice (so per-type offsets and
+/// multi-field interactions are both covered).
+fn rich_schema() -> SchemaRef {
+    Schema::of(&[
+        ("s1", FieldType::Str),
+        ("i1", FieldType::I64),
+        ("f1", FieldType::F64),
+        ("b1", FieldType::Bool),
+        ("s2", FieldType::Str),
+        ("i2", FieldType::I64),
+        ("f2", FieldType::F64),
+        ("b2", FieldType::Bool),
+    ])
+    .unwrap()
+}
+
+/// Deterministic event from a seed: every field independently nullable,
+/// strings of varying length (incl. empty and non-ASCII), full-range
+/// integers, special floats (no NaN — `Value` equality is `PartialEq`).
+fn event_from_seed(seed: u64) -> Event {
+    let mut rng = Rng::new(seed);
+    let mut val = |ftype: FieldType| -> Value {
+        if rng.chance(0.2) {
+            return Value::Null;
+        }
+        match ftype {
+            FieldType::Str => {
+                let n = rng.index(12);
+                let mut s = String::new();
+                for _ in 0..n {
+                    // mix ASCII and multi-byte UTF-8
+                    if rng.chance(0.2) {
+                        s.push('π');
+                    } else {
+                        s.push((b'a' + (rng.next_below(26) as u8)) as char);
+                    }
+                }
+                Value::Str(s)
+            }
+            FieldType::I64 => Value::I64(rng.range_i64(i64::MIN / 2, i64::MAX / 2)),
+            FieldType::F64 => Value::F64(match rng.next_below(5) {
+                0 => 0.0,
+                1 => -0.0,
+                2 => f64::INFINITY,
+                3 => f64::MIN_POSITIVE,
+                _ => rng.next_lognormal(3.0, 2.0),
+            }),
+            FieldType::Bool => Value::Bool(rng.chance(0.5)),
+        }
+    };
+    let schema = rich_schema();
+    let values = schema.fields().iter().map(|f| val(f.ftype)).collect();
+    Event::new(Rng::new(seed ^ 0xA5).range_i64(-1_000_000, i64::MAX / 4), values)
+}
+
+#[test]
+fn view_equals_owned_decode_on_valid_events() {
+    let schema = rich_schema();
+    check(
+        "view == owned decode (valid events)",
+        400,
+        |rng| rng.next_below(u64::MAX / 2),
+        |&seed| {
+            let event = event_from_seed(seed);
+            let buf = codec::encode(&event, &schema);
+            let owned = codec::decode(&buf, &schema).map_err(|e| e.to_string())?;
+            let mut scratch = ViewScratch::new();
+            let view = scratch.view(&buf, &schema).map_err(|e| e.to_string())?;
+            if view.timestamp() != owned.timestamp {
+                return Err(format!(
+                    "timestamp: view {} owned {}",
+                    view.timestamp(),
+                    owned.timestamp
+                ));
+            }
+            if view.arity() != owned.values.len() {
+                return Err("arity mismatch".into());
+            }
+            for i in 0..view.arity() {
+                if view.value_ref(i).to_value() != owned.values[i] {
+                    return Err(format!(
+                        "field {i}: view {:?} owned {:?}",
+                        view.value_ref(i),
+                        owned.values[i]
+                    ));
+                }
+            }
+            if view.to_event() != event {
+                return Err("to_event != original".into());
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn view_rejects_exactly_what_owned_decode_rejects_on_truncation() {
+    let schema = rich_schema();
+    check(
+        "view truncation rejection == owned",
+        150,
+        |rng| rng.next_below(u64::MAX / 2),
+        |&seed| {
+            let buf = codec::encode(&event_from_seed(seed), &schema);
+            let mut scratch = ViewScratch::new();
+            for cut in 0..=buf.len() {
+                let owned_ok = codec::decode(&buf[..cut], &schema).is_ok();
+                let view_ok = scratch.view(&buf[..cut], &schema).is_ok();
+                if owned_ok != view_ok {
+                    return Err(format!(
+                        "cut {cut}/{}: owned_ok={owned_ok} view_ok={view_ok}",
+                        buf.len()
+                    ));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn view_agrees_with_owned_decode_on_corrupt_buffers() {
+    // single-byte corruption may keep the buffer valid (e.g. flipped f64
+    // bits) or break it (bad presence byte, oversized str length, invalid
+    // UTF-8); in every case the borrowed and owned decoders must agree —
+    // on the verdict and, when both accept, on every decoded value
+    let schema = rich_schema();
+    check(
+        "view corruption verdict == owned",
+        400,
+        |rng| {
+            (
+                rng.next_below(u64::MAX / 2),
+                rng.next_below(u64::MAX / 2),
+                rng.next_below(256) as u8,
+            )
+        },
+        |&(seed, pos_sel, byte)| {
+            let mut buf = codec::encode(&event_from_seed(seed), &schema);
+            let pos = (pos_sel % buf.len() as u64) as usize;
+            buf[pos] = byte;
+            let mut scratch = ViewScratch::new();
+            let owned = codec::decode(&buf, &schema);
+            let view = scratch.view(&buf, &schema);
+            match (owned, view) {
+                (Err(_), Err(_)) => Ok(()),
+                (Ok(_), Err(e)) => Err(format!("owned accepted, view rejected: {e}")),
+                (Err(e), Ok(_)) => Err(format!("view accepted, owned rejected: {e}")),
+                (Ok(o), Ok(v)) => {
+                    if v.to_event() == o {
+                        Ok(())
+                    } else {
+                        Err(format!("values diverge: owned {o:?} view {:?}", v.to_event()))
+                    }
+                }
+            }
+        },
+    );
+}
+
+#[test]
+fn envelope_view_equals_envelope_decode() {
+    let schema = rich_schema();
+    check(
+        "envelope view == envelope decode",
+        200,
+        |rng| (rng.next_below(u64::MAX / 2), rng.next_below(u64::MAX / 2)),
+        |&(seed, ingest_id)| {
+            let env = Envelope {
+                ingest_id,
+                event: event_from_seed(seed),
+            };
+            let buf = env.encode(&schema);
+            let owned = Envelope::decode(&buf, &schema).map_err(|e| e.to_string())?;
+            let mut scratch = ViewScratch::new();
+            let (vid, view) =
+                Envelope::view(&buf, &schema, &mut scratch).map_err(|e| e.to_string())?;
+            if vid != owned.ingest_id || view.to_event() != owned.event {
+                return Err("envelope view != owned decode".into());
+            }
+            // split_raw exposes the same framing: id + ts + value bytes
+            let (sid, ts, values) = Envelope::split_raw(&buf).map_err(|e| e.to_string())?;
+            if sid != vid || ts != view.timestamp() {
+                return Err("split_raw framing mismatch".into());
+            }
+            let mut reencoded = Vec::new();
+            codec::encode_values_into(&mut reencoded, &owned.event, &schema);
+            if values != reencoded {
+                return Err("split_raw value bytes != canonical value encoding".into());
+            }
+            // truncations reject on both paths
+            for cut in 0..buf.len() {
+                if Envelope::decode(&buf[..cut], &schema).is_ok()
+                    != Envelope::view(&buf[..cut], &schema, &mut scratch).is_ok()
+                {
+                    return Err(format!("envelope cut {cut}: verdicts diverge"));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+/// Sealed chunk files must be byte-identical no matter how events entered
+/// the reservoir: owned `append`, raw-append of envelope value bytes, or
+/// the standalone reference encoder (the pre-refactor re-encode path).
+#[test]
+fn raw_append_chunk_files_byte_equal_reencode_path() {
+    for compression in [Compression::Zstd(1), Compression::None] {
+        let schema = rich_schema();
+        let chunk_events = 64usize;
+        let n = chunk_events * 3; // three sealed chunks
+        let events: Vec<Event> = (0..n as u64)
+            .map(|i| {
+                // monotone-ish timestamps like real ingest, so delta
+                // encoding is exercised with realistic small deltas
+                let mut e = event_from_seed(i * 31 + 7);
+                e.timestamp = 1_600_000_000_000 + i as i64 * 13;
+                e
+            })
+            .collect();
+
+        let tmp = TempDir::new("raw_append_equiv");
+        let config = |dir: &str| ReservoirConfig {
+            chunk_events,
+            cache_chunks: 4,
+            compression,
+            ..ReservoirConfig::new(tmp.path().join(dir))
+        };
+
+        // path A: owned append
+        let mut owned = Reservoir::open(config("owned"), schema.clone()).unwrap();
+        for e in &events {
+            owned.append(e).unwrap();
+        }
+        owned.sync().unwrap();
+
+        // path B: raw append of envelope-style value bytes
+        let mut raw = Reservoir::open(config("raw"), schema.clone()).unwrap();
+        let mut values = Vec::new();
+        for e in &events {
+            values.clear();
+            codec::encode_values_into(&mut values, e, &schema);
+            raw.append_raw(e.timestamp, &values).unwrap();
+        }
+        raw.sync().unwrap();
+
+        for chunk_id in 0..3u64 {
+            let name = chunk::chunk_file_name(chunk_id);
+            let a = std::fs::read(tmp.path().join("owned").join(&name)).unwrap();
+            let b = std::fs::read(tmp.path().join("raw").join(&name)).unwrap();
+            // path C: the reference re-encode path over owned events
+            let lo = chunk_id as usize * chunk_events;
+            let reference = chunk::encode_chunk(
+                chunk_id,
+                lo as u64,
+                &events[lo..lo + chunk_events],
+                &schema,
+                compression,
+            )
+            .unwrap();
+            assert_eq!(
+                a, reference,
+                "owned-append file != reference ({compression:?}, chunk {chunk_id})"
+            );
+            assert_eq!(
+                b, reference,
+                "raw-append file != reference ({compression:?}, chunk {chunk_id})"
+            );
+        }
+    }
+}
+
+/// The raw-append path rejects corrupt value sections atomically: the
+/// open chunk is untouched and subsequent valid appends proceed.
+#[test]
+fn raw_append_rejects_corrupt_values_atomically() {
+    let schema = rich_schema();
+    let tmp = TempDir::new("raw_append_reject");
+    let cfg = ReservoirConfig {
+        chunk_events: 8,
+        cache_chunks: 4,
+        ..ReservoirConfig::new(tmp.path().to_path_buf())
+    };
+    let mut res = Reservoir::open(cfg, schema.clone()).unwrap();
+    let good = event_from_seed(1);
+    let mut values = Vec::new();
+    codec::encode_values_into(&mut values, &good, &schema);
+
+    assert!(res.append_raw(5, &[0x02]).is_err(), "bad presence byte");
+    assert!(res.append_raw(5, &values[..values.len() - 1]).is_err(), "truncated");
+    let mut trailing = values.clone();
+    trailing.push(0xAB);
+    assert!(res.append_raw(5, &trailing).is_err(), "trailing bytes");
+    assert_eq!(res.len(), 0, "rejected events must not consume sequence numbers");
+
+    res.append_raw(good.timestamp, &values).unwrap();
+    assert_eq!(res.len(), 1);
+    let mut it = res.iterator_at(0);
+    let got = it.next(|_, v| v.to_event()).unwrap().unwrap();
+    assert_eq!(got, good);
+}
