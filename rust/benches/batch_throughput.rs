@@ -52,23 +52,46 @@
 //! reports without a noise-sensitive hard gate), emitted as
 //! `BENCH_ingest_hotpath.json`.
 //!
+//! **Part 4 — net ingest boundary** (`--net-ingest-only` runs just
+//! this). The server-side cost of one wire ingest batch, both framings
+//! of identical events, no broker in the loop:
+//!
+//! * **raw-forward** — the protocol-v2 path: `read_frame_raw` into a
+//!   reusable buffer, `decode_raw_batch` (scan-validated slices), then
+//!   the front-end boundary work per event — envelope splice
+//!   (`Envelope::encode_raw`), a second validating scan filling the
+//!   view offsets, entity keys through the borrowed `EventView` into a
+//!   batch-wide key buffer, partition hash;
+//! * **decode-reencode (emulated)** — op-for-op what the v1 path pays:
+//!   owned `read_frame` decode (`Vec<Event>` + `String`s per event),
+//!   schema re-validation, `Envelope::encode` re-encoding every event,
+//!   and a fresh 24-byte key `Vec` per replica (the pre-refactor
+//!   front-end; originals in git history).
+//!
+//! Byte-equal outputs are asserted as the series run. Headline check:
+//! raw-forward sustains **≥ 1.2×** the decode/re-encode baseline
+//! (enforced on full-size runs; `--quick` reports without the
+//! noise-sensitive hard gate), emitted as `BENCH_net_ingest.json`.
+//!
 //! ```text
 //! cargo bench --bench batch_throughput
 //!     [-- --quick] [-- --hotpath-only] [-- --ingest-only]
+//!     [-- --net-ingest-only]
 //! ```
 
 use railgun::agg::AggKind;
 use railgun::config::{EngineConfig, StreamDef};
 use railgun::coordinator::Node;
-use railgun::event::{Event, Value};
+use railgun::event::{codec, Event, EventView, Value, ViewScratch};
 use railgun::frontend::{Envelope, ReplyCollector, ReplyMsg};
 use railgun::kvstore::{Store, StoreOptions};
 use railgun::mlog::{Broker, BrokerConfig};
+use railgun::net::wire::{self, Frame};
 use railgun::plan::{MetricReply, MetricSpec, Plan, ReplyCtx, ReplySink, StateStore};
 use railgun::reservoir::{Reservoir, ReservoirConfig};
 use railgun::util::bench::{print_csv, print_table, BenchOpts, Series};
 use railgun::util::clock::ms;
-use railgun::util::hash::{hash64, FxHashMap, FxHashSet};
+use railgun::util::hash::{hash64, partition_for, FxHashMap, FxHashSet};
 use railgun::util::json::Json;
 use railgun::util::tmp::TempDir;
 use railgun::util::varint;
@@ -583,13 +606,179 @@ fn ingest_hotpath(opts: &BenchOpts) -> (Series, Series) {
     (view_raw, owned)
 }
 
+// ---------------------------------------------------------------------------
+// Part 4: the net ingest boundary (raw forward vs decode/re-encode emulation)
+// ---------------------------------------------------------------------------
+
+const NET_BATCH: usize = 256;
+const NET_PARTITIONS: u32 = 4;
+
+/// Identical events framed both ways (full frames, header + CRC), built
+/// outside the timed sections.
+fn net_ingest_frames(n: u64, cards: u64) -> (Vec<Vec<u8>>, Vec<Vec<u8>>) {
+    let schema = payments_schema();
+    let events = hotpath_events(n, cards);
+    let mut v1 = Vec::new();
+    let mut v2 = Vec::new();
+    for (b, chunk) in events.chunks(NET_BATCH).enumerate() {
+        let seq = b as u64;
+        v1.push(
+            Frame::IngestBatch {
+                seq,
+                events: chunk.to_vec(),
+            }
+            .encode(Some(&schema))
+            .unwrap(),
+        );
+        let raws: Vec<(i64, Vec<u8>)> = chunk
+            .iter()
+            .map(|e| {
+                let mut buf = Vec::new();
+                codec::encode_values_into(&mut buf, e, &schema);
+                (e.timestamp, buf)
+            })
+            .collect();
+        v2.push(
+            Frame::IngestBatchRaw { seq, events: raws }
+                .encode(None)
+                .unwrap(),
+        );
+    }
+    (v1, v2)
+}
+
+/// Returns `(raw_forward, decode_reencode)` series and emits
+/// `BENCH_net_ingest.json`. Both series do the complete server-side
+/// boundary work for every batch — frame read + CRC, decode, per-event
+/// envelope payload, entity keys, partition hash — and their outputs
+/// are asserted byte-equal; the measured gap is the decode/re-encode
+/// round trip the raw body eliminates.
+fn net_ingest(opts: &BenchOpts) -> (Series, Series) {
+    use std::io::Cursor;
+    let n = opts.scale(1_000_000);
+    let cards = (n / 20).max(1_000);
+    let schema = payments_schema();
+    let (v1_frames, v2_frames) = net_ingest_frames(n, cards);
+    let entity_idxs = [0usize, 1usize]; // card, merchant
+
+    // raw-forward: the production v2 server path, op for op
+    let mut fbuf = wire::FrameBuf::new();
+    let mut scratch = ViewScratch::new();
+    let mut offsets: Vec<u32> = Vec::new();
+    let mut key_buf: Vec<u8> = Vec::new();
+    let mut raw_digest = 0u64;
+    let mut ingest_id = 0u64;
+    let t0 = Instant::now();
+    for frame in &v2_frames {
+        let mut cursor = Cursor::new(frame.as_slice());
+        let kind = wire::read_frame_raw(&mut cursor, &mut fbuf, wire::DEFAULT_MAX_FRAME)
+            .unwrap()
+            .expect("frame present");
+        assert_eq!(kind, wire::KIND_INGEST_BATCH_RAW);
+        let (_seq, raws) = wire::decode_raw_batch(fbuf.body(), &schema, &mut scratch).unwrap();
+        offsets.clear();
+        key_buf.clear();
+        for re in &raws {
+            ingest_id += 1;
+            // both series assign the same id sequence, so whole payloads
+            // (id + ts + value bytes) must match byte for byte
+            let payload = Envelope::encode_raw(ingest_id, re.timestamp, re.values);
+            raw_digest = raw_digest.wrapping_add(hash64(&payload));
+            let start = offsets.len();
+            let mut pos = 0usize;
+            codec::scan_values(re.values, &mut pos, &schema, &mut offsets).unwrap();
+            let view =
+                EventView::from_parts(re.timestamp, re.values, &offsets[start..], &schema);
+            for &f in &entity_idxs {
+                let ks = key_buf.len();
+                view.value_at(f).key_bytes(&mut key_buf);
+                let p = partition_for(hash64(&key_buf[ks..]), NET_PARTITIONS);
+                raw_digest = raw_digest.wrapping_add(p as u64);
+            }
+        }
+    }
+    let elapsed_raw = t0.elapsed();
+    let mut raw_forward = Series::new("raw-forward");
+    raw_forward.throughput_eps = n as f64 / elapsed_raw.as_secs_f64();
+    raw_forward.note("events", n);
+
+    // decode/re-encode emulation: owned frame decode, schema validation,
+    // envelope re-encode, per-replica key Vec — the v1 server path
+    let mut owned_digest = 0u64;
+    let mut ingest_id = 0u64;
+    let t0 = Instant::now();
+    for frame in &v1_frames {
+        let mut cursor = Cursor::new(frame.as_slice());
+        let decoded = wire::read_frame(&mut cursor, Some(&schema), wire::DEFAULT_MAX_FRAME)
+            .unwrap()
+            .expect("frame present");
+        let events = match decoded {
+            Frame::IngestBatch { events, .. } => events,
+            other => panic!("expected IngestBatch, got {other:?}"),
+        };
+        for event in &events {
+            ingest_id += 1;
+            schema.validate(event).unwrap();
+            let env = Envelope {
+                ingest_id,
+                event: event.clone(),
+            };
+            let payload = env.encode(&schema);
+            owned_digest = owned_digest.wrapping_add(hash64(&payload));
+            for &f in &entity_idxs {
+                let mut key = Vec::with_capacity(24);
+                env.event.value(f).key_bytes(&mut key);
+                let p = partition_for(hash64(&key), NET_PARTITIONS);
+                owned_digest = owned_digest.wrapping_add(p as u64);
+            }
+        }
+    }
+    let elapsed_owned = t0.elapsed();
+    let mut decode_reencode = Series::new("decode-reencode(emulated)");
+    decode_reencode.throughput_eps = n as f64 / elapsed_owned.as_secs_f64();
+    decode_reencode.note("events", n);
+    assert_eq!(
+        raw_digest, owned_digest,
+        "both boundary paths must produce byte-identical payloads, keys and partitions"
+    );
+
+    let speedup = raw_forward.throughput_eps / decode_reencode.throughput_eps;
+    let json = Json::obj([
+        ("bench", Json::Str("net_ingest".into())),
+        ("events", Json::Int(n as i64)),
+        ("batch", Json::Int(NET_BATCH as i64)),
+        ("group_cardinality", Json::Int(cards as i64)),
+        (
+            "series",
+            Json::Arr(
+                [&raw_forward, &decode_reencode]
+                    .iter()
+                    .map(|s| {
+                        Json::obj([
+                            ("label", Json::Str(s.label.clone())),
+                            ("throughput_eps", Json::Float(s.throughput_eps)),
+                        ])
+                    })
+                    .collect(),
+            ),
+        ),
+        ("speedup", Json::Float(speedup)),
+        ("target", Json::Float(1.2)),
+    ]);
+    std::fs::write("BENCH_net_ingest.json", format!("{json}\n"))
+        .expect("write BENCH_net_ingest.json");
+    (raw_forward, decode_reencode)
+}
+
 fn main() {
     railgun::util::logging::init();
     let opts = BenchOpts::from_args();
     let hotpath_only = std::env::args().any(|a| a == "--hotpath-only");
     let ingest_only = std::env::args().any(|a| a == "--ingest-only");
+    let net_ingest_only = std::env::args().any(|a| a == "--net-ingest-only");
+    let none_only = !hotpath_only && !ingest_only && !net_ingest_only;
 
-    if !hotpath_only && !ingest_only {
+    if none_only {
         let n = opts.scale(30_000);
         let single = per_event_series(n, opts.seed);
         let mut series = vec![single.clone()];
@@ -620,7 +809,7 @@ fn main() {
         println!("shape check passed: batched ≥ 2x per-event");
     }
 
-    if !ingest_only {
+    if none_only || hotpath_only {
         let (streamed, legacy) = plan_hotpath(&opts);
         print_table(
             "Plan evaluation hot path — all agg kinds, high group cardinality (60s window)",
@@ -648,7 +837,7 @@ fn main() {
         }
     }
 
-    if !hotpath_only {
+    if none_only || ingest_only {
         let (view_raw, owned) = ingest_hotpath(&opts);
         print_table(
             "Ingest hot path — envelope decode → reservoir append (no plan in the loop)",
@@ -670,6 +859,31 @@ fn main() {
                  baseline (got {speedup:.2}x)"
             );
             println!("shape check passed: ingest ≥ 1.3x owned-decode baseline");
+        }
+    }
+
+    if none_only || net_ingest_only {
+        let (raw_forward, decode_reencode) = net_ingest(&opts);
+        print_table(
+            "Net ingest boundary — wire frame → validated envelope payloads (no broker in the loop)",
+            &[raw_forward.clone(), decode_reencode.clone()],
+        );
+        print_csv("net_ingest", &[raw_forward.clone(), decode_reencode.clone()]);
+        let speedup = raw_forward.throughput_eps / decode_reencode.throughput_eps;
+        println!(
+            "\nraw-forward vs decode/re-encode speedup: {speedup:.2}x (target ≥ 1.2x) — \
+             {:.0} ev/s vs {:.0} ev/s (BENCH_net_ingest.json written)",
+            raw_forward.throughput_eps, decode_reencode.throughput_eps
+        );
+        if opts.quick {
+            println!("quick mode: speedup gate reported, not enforced");
+        } else {
+            assert!(
+                speedup >= 1.2,
+                "the raw wire ingest path must sustain ≥ 1.2x the decode/re-encode \
+                 baseline (got {speedup:.2}x)"
+            );
+            println!("shape check passed: net ingest ≥ 1.2x decode/re-encode baseline");
         }
     }
 }

@@ -11,7 +11,7 @@ pub mod codec;
 pub mod json;
 pub mod view;
 
-pub use view::{EventRead, EventView, ValueRef, ViewScratch};
+pub use view::{EventRead, EventView, RawBatchBuf, RawEvent, ValueRef, ViewScratch};
 
 use crate::error::{Error, Result};
 use crate::util::clock::TimestampMs;

@@ -146,6 +146,67 @@ impl EventRead for Event {
     }
 }
 
+/// An event in encoded form: timestamp + borrowed value-section bytes
+/// (everything after the timestamp varint of the standalone event
+/// codec). This is the unit of the **raw ingest boundary**: produced by
+/// the net wire's v2 INGEST_BATCH decode and by callers that already
+/// hold encoded bytes, consumed by
+/// [`crate::frontend::FrontEnd::ingest_batch_raw`], whose envelope
+/// splicing hands the same bytes — untouched — to the reservoir's
+/// raw-append path.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct RawEvent<'a> {
+    /// Event time, milliseconds since epoch.
+    pub timestamp: TimestampMs,
+    /// Encoded value section (schema-directed layout; see
+    /// [`crate::event::codec`]).
+    pub values: &'a [u8],
+}
+
+/// Reusable builder for a batch of [`RawEvent`]s: encodes owned events'
+/// value sections into one contiguous buffer and hands out borrowed
+/// spans. This is the one home of the encode-once span bookkeeping —
+/// shared by the net client's send path and the front-end's owned-ingest
+/// shim, so the raw-event framing can never drift between them.
+#[derive(Default)]
+pub struct RawBatchBuf {
+    buf: Vec<u8>,
+    spans: Vec<(TimestampMs, usize, usize)>,
+}
+
+impl RawBatchBuf {
+    /// Empty builder.
+    pub fn new() -> RawBatchBuf {
+        RawBatchBuf::default()
+    }
+
+    /// Drop all pushed events, keeping the buffer capacity.
+    pub fn clear(&mut self) {
+        self.buf.clear();
+        self.spans.clear();
+    }
+
+    /// Encode one event's value section (schema-directed) at the end of
+    /// the buffer.
+    pub fn push(&mut self, event: &Event, schema: &Schema) {
+        let start = self.buf.len();
+        codec::encode_values_into(&mut self.buf, event, schema);
+        self.spans.push((event.timestamp, start, self.buf.len()));
+    }
+
+    /// Borrowed [`RawEvent`]s over everything pushed since the last
+    /// clear, in push order.
+    pub fn raws(&self) -> Vec<RawEvent<'_>> {
+        self.spans
+            .iter()
+            .map(|&(ts, s, e)| RawEvent {
+                timestamp: ts,
+                values: &self.buf[s..e],
+            })
+            .collect()
+    }
+}
+
 /// Reusable field-offset table for parsing [`EventView`]s: steady-state
 /// decode writes into this buffer and allocates nothing.
 #[derive(Default)]
@@ -178,6 +239,17 @@ impl ViewScratch {
             offsets: &self.offsets,
             schema,
         })
+    }
+
+    /// Validate one value section in place, without constructing a view:
+    /// clears the scratch and runs [`codec::scan_values`] into it,
+    /// advancing `*pos` past the event's value bytes. Rejects exactly
+    /// what the owned decoder rejects. This is the net wire's v2
+    /// INGEST_BATCH validation primitive — one reusable scratch per
+    /// connection, zero allocation per event.
+    pub fn scan_values(&mut self, buf: &[u8], pos: &mut usize, schema: &Schema) -> Result<()> {
+        self.offsets.clear();
+        codec::scan_values(buf, pos, schema, &mut self.offsets)
     }
 
     /// Parse a standalone encoded event (must consume the whole buffer) —

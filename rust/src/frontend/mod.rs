@@ -9,14 +9,21 @@
 //! there, and [`ReplyCollector`] reassembles the per-event answer for the
 //! client (steps 5–6 of Figure 2).
 //!
-//! The ingest path is **batch-first**: [`FrontEnd::ingest_batch`] encodes
-//! each envelope once, shares the payload bytes across entity topics
-//! (`Arc<[u8]>`-backed records), groups the replicas by
-//! (topic, partition) and issues **one producer append per partition**.
-//! [`FrontEnd::ingest`] is the single-event special case of the same
-//! path. Batching is purely a transport/amortization concern — the
-//! back-end still evaluates every window at every event timestamp, so
-//! per-event accuracy is untouched.
+//! The ingest path is **batch-first and raw-first**:
+//! [`FrontEnd::ingest_batch_raw`] takes pre-encoded value bytes
+//! ([`RawEvent`]s — what the net server's v2 wire decode hands over),
+//! validates each with one [`codec::scan_values`] walk, splices the
+//! ingest id + timestamp varints in front of them to form the envelope
+//! payload (shared `Arc<[u8]>`-backed across that event's entity-topic
+//! replicas), reads entity keys through a borrowed [`EventView`] into
+//! one batch-wide key buffer, groups the replicas by (topic, partition)
+//! and issues **one producer append per partition**. The owned-event
+//! [`FrontEnd::ingest_batch`] encodes into a scratch buffer and
+//! delegates — one routing implementation, byte-identical output — and
+//! [`FrontEnd::ingest`] is its single-event special case. Batching is
+//! purely a transport/amortization concern — the back-end still
+//! evaluates every window at every event timestamp, so per-event
+//! accuracy is untouched.
 //!
 //! Replies travel in the varint binary codec (same family as the event
 //! codec), one record per (task-processor, batch) with multiple
@@ -25,7 +32,7 @@
 
 use crate::config::StreamDef;
 use crate::error::{Error, Result};
-use crate::event::{codec, Event, EventView, ViewScratch};
+use crate::event::{codec, Event, EventView, RawBatchBuf, RawEvent, ViewScratch};
 use crate::mlog::{BatchEntry, BrokerRef, Consumer, Payload, Producer};
 use crate::util::hash;
 use crate::util::hash::FxHashMap;
@@ -72,6 +79,19 @@ impl Envelope {
         let mut out = Vec::with_capacity(24);
         varint::write_u64(&mut out, self.ingest_id);
         codec::encode_into(&mut out, &self.event, schema, 0);
+        out
+    }
+
+    /// Encode an envelope payload directly from raw parts — the ingest
+    /// id and timestamp varints spliced in front of already-encoded
+    /// value bytes. Byte-identical to [`Envelope::encode`] for the same
+    /// event, with no `Event` in sight: this is how the raw ingest path
+    /// carries a client's encoded bytes to the reservoir untouched.
+    pub fn encode_raw(ingest_id: u64, timestamp: i64, values: &[u8]) -> Vec<u8> {
+        let mut out = Vec::with_capacity(16 + values.len());
+        varint::write_u64(&mut out, ingest_id);
+        varint::write_i64(&mut out, timestamp);
+        out.extend_from_slice(values);
         out
     }
 
@@ -287,6 +307,17 @@ impl ReplyMsg {
     }
 }
 
+/// One (entity, partition) replica of a raw-ingested event, pointing at
+/// the batch's shared payload vec and batch-wide key buffer — replicas
+/// carry no owned bytes of their own.
+struct Replica {
+    /// Index into the batch's events/payloads.
+    event: u32,
+    /// Key slice in the batch-wide key buffer.
+    key_start: u32,
+    key_len: u32,
+}
+
 /// Receipt for an ingested event.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub struct IngestReceipt {
@@ -445,7 +476,11 @@ impl FrontEnd {
     }
 
     /// [`FrontEnd::ingest_batch`] with a caller-reserved id range (from
-    /// [`FrontEnd::reserve_ingest_ids`] with `events.len()`).
+    /// [`FrontEnd::reserve_ingest_ids`] with `events.len()`). Owned
+    /// events are validated, their value sections encoded **once** into
+    /// a scratch buffer, and the batch delegated to the raw path — one
+    /// routing implementation, so the owned, raw and per-event paths can
+    /// never drift.
     pub fn ingest_batch_reserved(
         &self,
         stream: &str,
@@ -458,6 +493,66 @@ impl FrontEnd {
         }
         for event in &events {
             def.schema.validate(event)?;
+        }
+        let mut batch = RawBatchBuf::new();
+        for event in &events {
+            batch.push(event, &def.schema);
+        }
+        self.ingest_batch_raw_reserved(stream, &batch.raws(), first_id)
+    }
+
+    /// Ingest a batch of **pre-encoded** events ([`RawEvent`]s) in one
+    /// pass — the raw counterpart of [`FrontEnd::ingest_batch`] and the
+    /// terminus of the wire's raw ingest path: each event's value bytes
+    /// are validated with one [`codec::scan_values`] walk (reject set
+    /// identical to the owned decoder's), the ingest id and timestamp
+    /// varints are spliced in front of them to form the envelope
+    /// payload, and entity keys are read through a borrowed
+    /// [`EventView`] into one batch-wide key buffer — no owned `Event`,
+    /// `Vec<Value>` or `String` is materialized anywhere.
+    ///
+    /// Output is byte-for-byte identical to the owned path for the same
+    /// events: envelope payloads, record keys, partition assignment and
+    /// per-partition order all match (`ingest_batch_raw_matches_owned_
+    /// batch_bytes` asserts it).
+    pub fn ingest_batch_raw(
+        &self,
+        stream: &str,
+        events: &[RawEvent<'_>],
+    ) -> Result<Vec<IngestReceipt>> {
+        let first_id = self.reserve_ingest_ids(events.len() as u64);
+        self.ingest_batch_raw_reserved(stream, events, first_id)
+    }
+
+    /// [`FrontEnd::ingest_batch_raw`] with a caller-reserved id range —
+    /// what the net server calls after registering its reply routes.
+    /// The whole batch is validated before anything publishes (same
+    /// contract as the owned path); failure semantics are those of
+    /// [`FrontEnd::ingest_batch`].
+    pub fn ingest_batch_raw_reserved(
+        &self,
+        stream: &str,
+        events: &[RawEvent<'_>],
+        first_id: u64,
+    ) -> Result<Vec<IngestReceipt>> {
+        let def = self.stream(stream)?;
+        if events.is_empty() {
+            return Ok(Vec::new());
+        }
+        let arity = def.schema.len();
+        // one validating walk per event, all before anything publishes;
+        // the recorded offsets double as the views' field tables below
+        let mut offsets: Vec<u32> = Vec::with_capacity(events.len() * arity);
+        for (i, re) in events.iter().enumerate() {
+            let mut pos = 0usize;
+            codec::scan_values(re.values, &mut pos, &def.schema, &mut offsets)
+                .map_err(|e| Error::invalid(format!("event {i}: {e}")))?;
+            if pos != re.values.len() {
+                return Err(Error::invalid(format!(
+                    "event {i}: {} trailing value bytes",
+                    re.values.len() - pos
+                )));
+            }
         }
         let fanout = def.entities.len() as u32;
         let entity_idxs: Vec<usize> = def
@@ -476,24 +571,38 @@ impl FrontEnd {
             .collect::<Result<_>>()?;
         // build every replica into one flat vec, then group by
         // (entity, partition) with a stable sort — no per-batch hash map,
-        // no per-group vec: runs are drained straight into the producer
-        let mut replicas: Vec<((usize, u32), BatchEntry)> =
+        // no per-group vec; through build and sort, keys live as
+        // (start, len) slices of one batch-wide buffer (an exact-size
+        // owned key is materialized only at producer handoff, where the
+        // mlog record requires it), and payloads are spliced once per
+        // event and shared across its replicas
+        let mut key_buf: Vec<u8> = Vec::with_capacity(events.len() * entity_idxs.len() * 12);
+        let mut payloads: Vec<Payload> = Vec::with_capacity(events.len());
+        let mut replicas: Vec<((usize, u32), Replica)> =
             Vec::with_capacity(events.len() * entity_idxs.len());
         let mut receipts = Vec::with_capacity(events.len());
-        for (i, event) in events.into_iter().enumerate() {
+        for (i, re) in events.iter().enumerate() {
             let ingest_id = first_id + i as u64;
-            let env = Envelope { ingest_id, event };
-            let payload: Payload = env.encode(&def.schema).into();
+            payloads.push(Envelope::encode_raw(ingest_id, re.timestamp, re.values).into());
+            let view = EventView::from_parts(
+                re.timestamp,
+                re.values,
+                &offsets[i * arity..(i + 1) * arity],
+                &def.schema,
+            );
             for (e_idx, &field_idx) in entity_idxs.iter().enumerate() {
-                let mut key = Vec::with_capacity(24);
-                env.event.value(field_idx).key_bytes(&mut key);
-                let partition = hash::partition_for(hash::hash64(&key), partition_counts[e_idx]);
+                let key_start = key_buf.len();
+                view.value_at(field_idx).key_bytes(&mut key_buf);
+                let partition = hash::partition_for(
+                    hash::hash64(&key_buf[key_start..]),
+                    partition_counts[e_idx],
+                );
                 replicas.push((
                     (e_idx, partition),
-                    BatchEntry {
-                        timestamp: env.event.timestamp,
-                        key,
-                        payload: payload.clone(),
+                    Replica {
+                        event: i as u32,
+                        key_start: key_start as u32,
+                        key_len: (key_buf.len() - key_start) as u32,
                     },
                 ));
             }
@@ -505,6 +614,11 @@ impl FrontEnd {
         // group order is deterministic (descending (entity, partition)) —
         // a mid-batch failure leaves a prefix of that ordering durable.
         replicas.sort_by_key(|(k, _)| *k);
+        let entry_of = |r: &Replica| BatchEntry {
+            timestamp: events[r.event as usize].timestamp,
+            key: key_buf[r.key_start as usize..(r.key_start + r.key_len) as usize].to_vec(),
+            payload: payloads[r.event as usize].clone(),
+        };
         while let Some(key) = replicas.last().map(|(k, _)| *k) {
             let (e_idx, partition) = key;
             let topic = &topics[e_idx];
@@ -516,13 +630,15 @@ impl FrontEnd {
                 self.producer.send_batch(
                     topic,
                     partition,
-                    replicas.drain(run_start..chunk_end).map(|(_, e)| e),
+                    replicas
+                        .drain(run_start..chunk_end)
+                        .map(|(_, r)| entry_of(&r)),
                 )?;
             }
             self.producer.send_batch(
                 topic,
                 partition,
-                replicas.drain(run_start..).map(|(_, e)| e),
+                replicas.drain(run_start..).map(|(_, r)| entry_of(&r)),
             )?;
         }
         Ok(receipts)
@@ -871,6 +987,127 @@ mod tests {
 
         assert_eq!(drain(&broker_a), drain(&broker_b));
         assert!(fe_b.ingest_batch("payments", Vec::new()).unwrap().is_empty());
+    }
+
+    /// Encode owned events into one scratch buffer + [`RawEvent`] spans
+    /// (what a raw-path caller holds).
+    fn encode_raws(events: &[Event]) -> (Vec<u8>, Vec<(i64, usize, usize)>) {
+        let schema = payments_schema();
+        let mut buf = Vec::new();
+        let mut spans = Vec::new();
+        for e in events {
+            let start = buf.len();
+            codec::encode_values_into(&mut buf, e, &schema);
+            spans.push((e.timestamp, start, buf.len()));
+        }
+        (buf, spans)
+    }
+
+    #[test]
+    fn ingest_batch_raw_matches_owned_batch_bytes() {
+        // the same events through the owned and raw batch paths must
+        // produce identical records: topic, partition, key bytes and
+        // payload bytes (ingest ids normalized away)
+        let events: Vec<Event> = (0..40)
+            .map(|i| ev(i, &format!("c{}", i % 5), &format!("m{}", i % 3), i as f64))
+            .collect();
+        let drain = |broker: &crate::mlog::BrokerRef| {
+            let mut out: Vec<(String, u32, Vec<u8>, Vec<u8>)> = Vec::new();
+            for topic in ["payments.card", "payments.merchant"] {
+                let mut c = broker.consumer(&format!("drain-{topic}"), &[topic]).unwrap();
+                loop {
+                    let p = c.poll(1000, Duration::from_millis(10)).unwrap();
+                    if p.records.is_empty() && p.rebalanced.is_none() {
+                        break;
+                    }
+                    for (tp, rec) in p.records {
+                        // strip the ingest-id prefix: ids differ per front-end
+                        let mut pos = 0;
+                        varint::read_u64(&rec.payload, &mut pos).unwrap();
+                        out.push((
+                            tp.topic,
+                            tp.partition,
+                            rec.key.to_vec(),
+                            rec.payload[pos..].to_vec(),
+                        ));
+                    }
+                }
+            }
+            out
+        };
+
+        let broker_a = Broker::open(BrokerConfig::in_memory()).unwrap();
+        let fe_a = FrontEnd::new(broker_a.clone(), registry(), 4).with_ingest_batch(7);
+        fe_a.register_stream(def()).unwrap();
+        fe_a.ingest_batch("payments", events.clone()).unwrap();
+
+        let broker_b = Broker::open(BrokerConfig::in_memory()).unwrap();
+        let fe_b = FrontEnd::new(broker_b.clone(), registry(), 4).with_ingest_batch(7);
+        fe_b.register_stream(def()).unwrap();
+        let schema = payments_schema();
+        let mut batch = RawBatchBuf::new();
+        for e in &events {
+            batch.push(e, &schema);
+        }
+        let receipts = fe_b.ingest_batch_raw("payments", &batch.raws()).unwrap();
+        assert_eq!(receipts.len(), events.len());
+        for w in receipts.windows(2) {
+            assert_eq!(w[1].ingest_id, w[0].ingest_id + 1);
+        }
+        assert!(receipts.iter().all(|r| r.fanout == 2));
+
+        assert_eq!(drain(&broker_a), drain(&broker_b));
+        assert!(fe_b.ingest_batch_raw("payments", &[]).unwrap().is_empty());
+    }
+
+    #[test]
+    fn ingest_batch_raw_validates_all_events_upfront() {
+        let broker = Broker::open(BrokerConfig::in_memory()).unwrap();
+        let fe = FrontEnd::new(broker.clone(), registry(), 2);
+        fe.register_stream(def()).unwrap();
+        let good = ev(1, "c1", "m1", 5.0);
+        let (buf, spans) = encode_raws(std::slice::from_ref(&good));
+        let (ts, s, e) = spans[0];
+        // garbage value bytes: rejected
+        let garbage = [0x07u8, 0xff, 0xff];
+        let batch = [
+            RawEvent {
+                timestamp: ts,
+                values: &buf[s..e],
+            },
+            RawEvent {
+                timestamp: 2,
+                values: &garbage,
+            },
+        ];
+        assert!(fe.ingest_batch_raw("payments", &batch).is_err());
+        // a truncated value section is rejected too
+        let truncated = [RawEvent {
+            timestamp: ts,
+            values: &buf[s..e - 1],
+        }];
+        assert!(fe.ingest_batch_raw("payments", &truncated).is_err());
+        // trailing bytes after a valid section are rejected
+        let mut padded = buf[s..e].to_vec();
+        padded.push(0);
+        let trailing = [RawEvent {
+            timestamp: ts,
+            values: &padded,
+        }];
+        assert!(fe.ingest_batch_raw("payments", &trailing).is_err());
+        // nothing was published: the batch is validated before routing
+        let mut c = broker.consumer("g", &["payments.card"]).unwrap();
+        let p = c.poll(10, Duration::from_millis(10)).unwrap();
+        assert!(p.records.is_empty());
+        // envelope splice is byte-identical to the owned encoder
+        let env = Envelope {
+            ingest_id: 42,
+            event: good.clone(),
+        };
+        assert_eq!(
+            env.encode(&payments_schema()),
+            Envelope::encode_raw(42, ts, &buf[s..e])
+        );
     }
 
     #[test]

@@ -35,16 +35,22 @@
 //! [`net`] turns the node into an actually-distributed server: a
 //! length-prefixed, CRC-checked binary TCP protocol (versioned frames
 //! over the same varint event/reply codecs the engine uses internally),
-//! a multi-threaded `std::net` server fronting
-//! [`frontend::FrontEnd::ingest_batch`], and a blocking, pipelining
-//! client. Replies flow back per connection: the reply topic is
-//! **sharded** ([`config::EngineConfig::reply_partitions`]), task
-//! processors route each reply record by ingest id
-//! ([`frontend::reply_partition_for`]), and the server's reply pump
-//! subscribes every shard and routes each message to the connection that
-//! ingested it. The paper-central numbers — end-to-end ingest→reply
-//! latency percentiles under load — are measured from outside the engine
-//! by the closed-loop [`net::bench`] harness (`railgun bench-client`).
+//! a multi-threaded `std::net` server, and a blocking, pipelining
+//! client. Protocol v2 carries ingest batches as **pre-encoded value
+//! bytes**: the client encodes each event once, the server validates
+//! the slices in place and forwards them to
+//! [`frontend::FrontEnd::ingest_batch_raw`] — the bytes a client
+//! encodes are the bytes the reservoir stores, with no owned event
+//! anywhere in between. Replies flow back per connection: the reply
+//! topic is **sharded** ([`config::EngineConfig::reply_partitions`]),
+//! task processors route each reply record by ingest id
+//! ([`frontend::reply_partition_for`]), and the server runs one reply
+//! pump per shard, each routing its messages to the connection that
+//! ingested them. The paper-central numbers — end-to-end ingest→reply
+//! latency percentiles under load — are measured from outside the
+//! engine by the [`net::bench`] harness (`railgun bench-client`),
+//! closed-loop by default or open-loop at a fixed arrival rate with
+//! coordinated-omission-corrected latencies (`--rate`).
 //!
 //! ## Quickstart
 //!

@@ -9,8 +9,11 @@
 //!     runs until stdin reaches EOF, then shuts down cleanly.
 //! railgun bench-client --addr <addr> --stream <name> [--events N]
 //!     [--batch N] [--pipeline N] [--cardinality N] [--timeout-secs N]
-//!     Drive a remote node closed-loop; reports throughput and
-//!     p50/p99/p999 ingest→reply latency.
+//!     [--rate EPS]
+//!     Drive a remote node; reports throughput and p50/p99/p999
+//!     ingest→reply latency. Closed-loop by default; --rate switches to
+//!     the open-loop arrival schedule (EPS events/second) with
+//!     coordinated-omission-corrected latencies.
 //! railgun check-artifacts
 //!     Load + execute the AOT artifacts, verify the runtime wiring.
 //! railgun version
@@ -44,6 +47,7 @@ fn main() {
                  \n  serve --config <engine.json> --stream <stream.json> [--listen <addr>]\n\
                  \n  bench-client --addr <host:port> --stream <name> [--events N]\n\
                  \n      [--batch N] [--pipeline N] [--cardinality N] [--timeout-secs N]\n\
+                 \n      [--rate EPS]   open-loop at EPS ev/s (CO-corrected latencies)\n\
                  \n  check-artifacts   verify the AOT runtime path"
             );
             std::process::exit(2);
@@ -67,6 +71,16 @@ fn flag_u64(args: &[String], name: &str, default: u64) -> Result<u64> {
         None => Ok(default),
         Some(v) => v
             .parse()
+            .map_err(|_| railgun::Error::invalid(format!("{name}: bad number '{v}'"))),
+    }
+}
+
+fn flag_f64(args: &[String], name: &str) -> Result<Option<f64>> {
+    match flag_value(args, name) {
+        None => Ok(None),
+        Some(v) => v
+            .parse()
+            .map(Some)
             .map_err(|_| railgun::Error::invalid(format!("{name}: bad number '{v}'"))),
     }
 }
@@ -148,13 +162,20 @@ fn cmd_bench_client(args: &[String]) -> Result<()> {
             defaults.timeout.as_secs(),
         )?),
     };
+    let rate = flag_f64(args, "--rate")?;
     log::info!(
-        "bench-client: {} events to {addr}/{stream} (batch={}, pipeline={})",
+        "bench-client: {} events to {addr}/{stream} (batch={}, {})",
         opts.events,
         opts.batch,
-        opts.pipeline
+        match rate {
+            Some(r) => format!("open-loop rate={r} ev/s"),
+            None => format!("closed-loop pipeline={}", opts.pipeline),
+        }
     );
-    let report = railgun::net::run_closed_loop(addr, stream, &opts)?;
+    let report = match rate {
+        Some(r) => railgun::net::run_open_loop(addr, stream, r, &opts)?,
+        None => railgun::net::run_closed_loop(addr, stream, &opts)?,
+    };
     println!("{}", report.render());
     if report.events_completed == 0 {
         return Err(railgun::Error::internal(

@@ -1,14 +1,24 @@
-//! Closed-loop latency/throughput harness for a remote Railgun node.
+//! Closed- and open-loop latency/throughput harnesses for a remote
+//! Railgun node.
 //!
-//! Drives a `railgun serve --listen` process over the binary protocol:
-//! keeps a fixed number of ingest batches in flight (closed loop — the
-//! next batch is sent only when a slot frees up, so the harness measures
-//! the system at a sustainable load instead of overrunning it), stamps
-//! each batch at send time, and records one end-to-end sample per event
-//! when its **last** reply arrives (ingest → all fanout replies). The
-//! external-driver design follows the benchmarking literature: latency
-//! measured inside the engine hides queueing, so the clock starts at the
-//! client.
+//! Both drive a `railgun serve --listen` process over the binary
+//! protocol and record one end-to-end sample per event when its **last**
+//! reply arrives (ingest → all fanout replies). The external-driver
+//! design follows the benchmarking literature: latency measured inside
+//! the engine hides queueing, so the clock starts at the client.
+//!
+//! * **closed loop** ([`run_closed_loop`]) keeps a fixed number of
+//!   ingest batches in flight — the next batch is sent only when a slot
+//!   frees up, so the harness measures the system at a sustainable load
+//!   instead of overrunning it;
+//! * **open loop** ([`run_open_loop`], `bench-client --rate`) offers
+//!   load on a fixed arrival schedule ([`ArrivalSchedule`], the same
+//!   machinery as the in-process injector) regardless of how the server
+//!   keeps up, and measures each event against its **intended** arrival
+//!   instant — never the possibly delayed actual send. That is the
+//!   coordinated-omission correction of the paper's §4.1 methodology:
+//!   an overloaded server shows its queueing delay in the corrected
+//!   tail instead of silently stretching the load.
 //!
 //! Latencies land in the crate's HDR-style [`Histogram`]; the report
 //! prints throughput plus p50/p99/p999 (and a machine-greppable RESULT
@@ -19,6 +29,7 @@ use crate::event::{Event, FieldType, Schema, Value};
 use crate::net::client::NetClient;
 use crate::util::hash::FxHashMap;
 use crate::util::hist::Histogram;
+use crate::workload::ArrivalSchedule;
 use std::time::{Duration, Instant};
 
 /// Harness parameters.
@@ -59,6 +70,10 @@ pub struct BenchReport {
     pub replies: u64,
     /// Wall time from first send to last completion.
     pub elapsed: Duration,
+    /// Open-loop offered rate (ev/s); `None` for a closed-loop run.
+    /// When set, the histogram holds **CO-corrected** latencies
+    /// (last reply − intended arrival).
+    pub offered_eps: Option<f64>,
     /// Ingest → last-reply latency per completed event, in nanoseconds.
     pub hist: Histogram,
 }
@@ -77,11 +92,19 @@ impl BenchReport {
     /// Human summary + machine-greppable RESULT line.
     pub fn render(&self) -> String {
         let ms = |q: f64| self.hist.quantile(q) as f64 / 1e6;
+        let label = match self.offered_eps {
+            Some(_) => "CO-corrected ingest→reply latency",
+            None => "ingest→reply latency",
+        };
+        let mode = match self.offered_eps {
+            Some(r) => format!(" mode=open offered_eps={r:.0}"),
+            None => String::new(),
+        };
         format!(
-            "ingest→reply latency: p50={:.3}ms p99={:.3}ms p999={:.3}ms max={:.3}ms\n\
+            "{label}: p50={:.3}ms p99={:.3}ms p999={:.3}ms max={:.3}ms\n\
              throughput: {:.0} events/s ({} events, {} replies, {:.2}s)\n\
              RESULT events={} completed={} replies={} events_per_sec={:.0} \
-             p50_ms={:.3} p99_ms={:.3} p999_ms={:.3}",
+             p50_ms={:.3} p99_ms={:.3} p999_ms={:.3}{mode}",
             ms(0.50),
             ms(0.99),
             ms(0.999),
@@ -215,6 +238,126 @@ pub fn run_closed_loop(addr: &str, stream: &str, opts: &BenchOptions) -> Result<
         events_completed: completed,
         replies,
         elapsed: last_done.duration_since(start).max(Duration::from_nanos(1)),
+        offered_eps: None,
+        hist,
+    })
+}
+
+/// Run the open-loop driver against `addr` at `rate_eps` events/second.
+///
+/// Batches are offered on the fixed [`ArrivalSchedule`] — batch `b`
+/// (events `b·B .. b·B+B`) arrives, as one burst, at the intended
+/// instant of its first event — and sending never waits for the server:
+/// if the engine falls behind, batches queue in the socket and their
+/// replies drift past their intended arrivals. Each completed event
+/// records `last_reply − intended_arrival`, so that drift lands in the
+/// tail exactly as coordinated-omission correction prescribes
+/// (`opts.pipeline` is ignored: an open loop has no in-flight window).
+pub fn run_open_loop(
+    addr: &str,
+    stream: &str,
+    rate_eps: f64,
+    opts: &BenchOptions,
+) -> Result<BenchReport> {
+    if opts.events == 0 || opts.batch == 0 {
+        return Err(Error::invalid("bench: events and batch must be > 0"));
+    }
+    if !(rate_eps > 0.0 && rate_eps.is_finite()) {
+        return Err(Error::invalid("bench: rate must be a positive number"));
+    }
+    let mut client = NetClient::connect(addr, stream)?;
+    let schema = client.schema().clone();
+    let schedule = ArrivalSchedule::new(rate_eps);
+
+    let start = Instant::now();
+    let mut last_done = start;
+    let mut sent = 0u64;
+    // batch seq → index of its first event (the batch's arrival anchor)
+    let mut seq_first: FxHashMap<u64, u64> = FxHashMap::default();
+    // ingest id → (first-event index, replies still expected)
+    let mut open: FxHashMap<u64, (u64, u32)> = FxHashMap::default();
+    // replies that arrived before their batch's ack was processed
+    let mut early: FxHashMap<u64, u32> = FxHashMap::default();
+    let mut hist = Histogram::new();
+    let mut completed = 0u64;
+    let mut replies = 0u64;
+    let mut sink: Vec<crate::frontend::ReplyMsg> = Vec::new();
+
+    while (sent < opts.events || !open.is_empty() || !seq_first.is_empty())
+        && start.elapsed() < opts.timeout
+    {
+        // offer every batch whose intended arrival has passed — the
+        // schedule, not the server, decides when load goes out
+        while sent < opts.events {
+            let due_ns = schedule.intended_ns(sent);
+            if (start.elapsed().as_nanos() as u64) < due_ns {
+                break;
+            }
+            let n = opts.batch.min((opts.events - sent) as usize);
+            let events = synth_events(&schema, sent, n, opts.cardinality);
+            let seq = client.send_batch(events)?;
+            seq_first.insert(seq, sent);
+            sent += n as u64;
+        }
+
+        // absorb acks/replies, but only until the next batch is due
+        let wait = if sent < opts.events {
+            let due_ns = schedule.intended_ns(sent);
+            let now_ns = start.elapsed().as_nanos() as u64;
+            Duration::from_nanos(due_ns.saturating_sub(now_ns).clamp(1, 1_000_000))
+        } else {
+            Duration::from_millis(1)
+        };
+        client.pump(wait)?;
+
+        while let Some(ack) = client.try_ack() {
+            let first_idx = seq_first.remove(&ack.seq).unwrap_or(0);
+            for k in 0..ack.count as u64 {
+                let id = ack.first_ingest_id + k;
+                let pre = early.remove(&id).unwrap_or(0).min(ack.fanout);
+                if pre == ack.fanout {
+                    let done_ns = start.elapsed().as_nanos() as u64;
+                    hist.record(done_ns.saturating_sub(schedule.intended_ns(first_idx)));
+                    completed += 1;
+                    last_done = Instant::now();
+                } else {
+                    open.insert(id, (first_idx, ack.fanout - pre));
+                }
+            }
+        }
+
+        sink.clear();
+        client.drain_replies(&mut sink);
+        for msg in &sink {
+            replies += 1;
+            let done = match open.get_mut(&msg.ingest_id) {
+                Some(entry) => {
+                    entry.1 -= 1;
+                    entry.1 == 0
+                }
+                None => {
+                    // ack not processed yet: count it for later
+                    *early.entry(msg.ingest_id).or_insert(0) += 1;
+                    false
+                }
+            };
+            if done {
+                if let Some((first_idx, _)) = open.remove(&msg.ingest_id) {
+                    let done_ns = start.elapsed().as_nanos() as u64;
+                    hist.record(done_ns.saturating_sub(schedule.intended_ns(first_idx)));
+                    completed += 1;
+                    last_done = Instant::now();
+                }
+            }
+        }
+    }
+
+    Ok(BenchReport {
+        events_sent: sent,
+        events_completed: completed,
+        replies,
+        elapsed: last_done.duration_since(start).max(Duration::from_nanos(1)),
+        offered_eps: Some(schedule.offered_eps()),
         hist,
     })
 }
@@ -257,11 +400,30 @@ mod tests {
             events_completed: 100,
             replies: 200,
             elapsed: Duration::from_secs(2),
+            offered_eps: None,
             hist,
         };
         assert!((report.events_per_sec() - 50.0).abs() < 1e-9);
         let text = report.render();
         assert!(text.contains("RESULT events=100"), "{text}");
         assert!(text.contains("p999_ms="), "{text}");
+        assert!(!text.contains("mode=open"), "{text}");
+    }
+
+    #[test]
+    fn open_loop_report_renders_mode_and_rate() {
+        let mut hist = Histogram::new();
+        hist.record(1_000_000);
+        let report = BenchReport {
+            events_sent: 10,
+            events_completed: 10,
+            replies: 20,
+            elapsed: Duration::from_secs(1),
+            offered_eps: Some(500.0),
+            hist,
+        };
+        let text = report.render();
+        assert!(text.contains("mode=open offered_eps=500"), "{text}");
+        assert!(text.contains("CO-corrected"), "{text}");
     }
 }

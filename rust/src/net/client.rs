@@ -13,11 +13,19 @@
 //! Socket reads go through an internal reassembly buffer: a read timeout
 //! can never split a frame, because frames are only parsed once fully
 //! buffered.
+//!
+//! On a protocol-v2 connection, [`NetClient::send_batch`] encodes each
+//! event **once** into a reusable batch buffer and ships the raw ingest
+//! body — the exact value bytes the server forwards to the reservoir.
+//! Callers that already hold encoded bytes skip even that encode via
+//! [`NetClient::send_batch_raw`] / [`NetClient::ingest_batch_raw`]. A v1
+//! server (which rejects HELLO v2 outright) is handled by one automatic
+//! downgrade reconnect; the owned-event body is used from then on.
 
 use crate::error::{Error, Result};
-use crate::event::{Event, SchemaRef};
+use crate::event::{Event, RawBatchBuf, RawEvent, SchemaRef};
 use crate::frontend::ReplyMsg;
-use crate::net::wire::{self, Frame, HEADER_LEN, PROTOCOL_VERSION};
+use crate::net::wire::{self, Frame, HEADER_LEN, MIN_PROTOCOL_VERSION, PROTOCOL_VERSION};
 use crate::util::hash::FxHashMap;
 use byteorder::{ByteOrder, LittleEndian};
 use std::collections::VecDeque;
@@ -44,9 +52,15 @@ pub struct NetClient {
     schema: SchemaRef,
     fanout: u32,
     max_frame: usize,
+    /// Negotiated protocol version (≤ [`PROTOCOL_VERSION`]).
+    version: u32,
     next_seq: u64,
     /// Reassembly buffer for inbound bytes.
     rbuf: Vec<u8>,
+    /// Reusable outbound frame build buffer (v2 raw batches).
+    send_buf: Vec<u8>,
+    /// Reusable per-batch value-section encode builder.
+    raw_batch: RawBatchBuf,
     /// Acks received but not yet handed to the caller, in arrival order.
     acks: VecDeque<BatchAck>,
     /// Replies buffered by ingest id.
@@ -66,12 +80,31 @@ impl NetClient {
         stream_name: &str,
         max_frame: usize,
     ) -> Result<NetClient> {
-        let mut stream = TcpStream::connect(addr)?;
+        Self::connect_with_version(addr, stream_name, max_frame, PROTOCOL_VERSION)
+    }
+
+    /// Connect requesting a specific protocol version (tests and
+    /// compatibility tooling; [`NetClient::connect`] requests the
+    /// highest supported). The server answers with
+    /// `min(requested, server)` — the connection then speaks that.
+    pub fn connect_with_version(
+        addr: impl ToSocketAddrs,
+        stream_name: &str,
+        max_frame: usize,
+        version: u32,
+    ) -> Result<NetClient> {
+        if !(MIN_PROTOCOL_VERSION..=PROTOCOL_VERSION).contains(&version) {
+            return Err(Error::invalid(format!(
+                "requested protocol version {version} outside supported range \
+                 {MIN_PROTOCOL_VERSION}..={PROTOCOL_VERSION}"
+            )));
+        }
+        let mut stream = TcpStream::connect(&addr)?;
         let _ = stream.set_nodelay(true);
         wire::write_frame(
             &mut stream,
             &Frame::Hello {
-                version: PROTOCOL_VERSION,
+                version,
                 stream: stream_name.to_string(),
             },
             None,
@@ -84,13 +117,14 @@ impl NetClient {
         stream.set_read_timeout(None)?;
         match frame {
             Frame::HelloOk {
-                version,
+                version: negotiated,
                 fanout,
                 fields,
             } => {
-                if version != PROTOCOL_VERSION {
+                if !(MIN_PROTOCOL_VERSION..=version).contains(&negotiated) {
                     return Err(Error::invalid(format!(
-                        "server speaks protocol {version}, client speaks {PROTOCOL_VERSION}"
+                        "server negotiated protocol {negotiated}, \
+                         client requested {version}"
                     )));
                 }
                 let schema = wire::schema_from_fields(&fields)?;
@@ -99,14 +133,31 @@ impl NetClient {
                     schema,
                     fanout,
                     max_frame,
+                    version: negotiated,
                     next_seq: 0,
                     rbuf: Vec::with_capacity(64 * 1024),
+                    send_buf: Vec::with_capacity(16 * 1024),
+                    raw_batch: RawBatchBuf::new(),
                     acks: VecDeque::new(),
                     replies: FxHashMap::default(),
                     reply_count: 0,
                 })
             }
             Frame::Err { message, .. } => {
+                // an older server rejects a HELLO above its max outright
+                // instead of negotiating down; step down one version and
+                // retry, so both peers land on the highest version they
+                // share (bounded: at most PROTOCOL_VERSION - 1 retries)
+                if version > MIN_PROTOCOL_VERSION
+                    && message.contains("unsupported protocol version")
+                {
+                    return Self::connect_with_version(
+                        addr,
+                        stream_name,
+                        max_frame,
+                        version - 1,
+                    );
+                }
                 Err(Error::invalid(format!("handshake rejected: {message}")))
             }
             other => Err(Error::corrupt(format!(
@@ -125,14 +176,73 @@ impl NetClient {
         self.fanout
     }
 
+    /// Negotiated protocol version of this connection.
+    pub fn version(&self) -> u32 {
+        self.version
+    }
+
     /// Send one ingest batch without waiting for its ack; returns the
     /// batch's sequence number. Pair with [`NetClient::recv_ack`].
+    ///
+    /// On a v2 connection every event is encoded **once** into a
+    /// reusable batch buffer and travels as a raw ingest body — the
+    /// exact bytes the server forwards to the reservoir. On a v1
+    /// connection the owned-event body is used. Events are validated
+    /// against the stream schema before anything is written, so an
+    /// invalid batch is rejected without disturbing the connection.
     pub fn send_batch(&mut self, events: Vec<Event>) -> Result<u64> {
+        for e in &events {
+            self.schema
+                .validate(e)
+                .map_err(|err| Error::invalid(format!("ingest rejected before send: {err}")))?;
+        }
+        if self.version < 2 {
+            let seq = self.next_seq;
+            self.next_seq += 1;
+            let frame = Frame::IngestBatch { seq, events };
+            let bytes = frame.encode(Some(&self.schema))?;
+            self.stream.write_all(&bytes)?;
+            return Ok(seq);
+        }
+        // encode each event's value section once into the reusable
+        // builder, then frame the raw batch in one pass
+        let mut batch = std::mem::take(&mut self.raw_batch);
+        batch.clear();
+        for e in &events {
+            batch.push(e, &self.schema);
+        }
+        let r = {
+            let raws = batch.raws();
+            self.send_raw_frame(&raws)
+        };
+        self.raw_batch = batch;
+        r
+    }
+
+    /// Send pre-encoded events (for callers that already hold
+    /// value-section bytes — relays, replayers, the bench's pre-encoded
+    /// workloads) as one raw ingest batch. No client-side validation or
+    /// re-encode: the server validates on decode and rejects a bad batch
+    /// non-fatally. Requires a v2 connection.
+    pub fn send_batch_raw(&mut self, events: &[RawEvent<'_>]) -> Result<u64> {
+        if self.version < 2 {
+            return Err(Error::invalid(format!(
+                "raw ingest needs protocol v2 (connection speaks v{})",
+                self.version
+            )));
+        }
+        self.send_raw_frame(events)
+    }
+
+    /// Frame + write a raw batch out of the reusable send buffer.
+    fn send_raw_frame(&mut self, events: &[RawEvent<'_>]) -> Result<u64> {
         let seq = self.next_seq;
         self.next_seq += 1;
-        let frame = Frame::IngestBatch { seq, events };
-        let bytes = frame.encode(Some(&self.schema))?;
-        self.stream.write_all(&bytes)?;
+        let mut buf = std::mem::take(&mut self.send_buf);
+        wire::encode_raw_batch_frame(&mut buf, seq, events);
+        let r = self.stream.write_all(&buf);
+        self.send_buf = buf;
+        r?;
         Ok(seq)
     }
 
@@ -140,6 +250,17 @@ impl NetClient {
     /// path). Replies arriving meanwhile are buffered.
     pub fn ingest_batch(&mut self, events: Vec<Event>, timeout: Duration) -> Result<BatchAck> {
         self.send_batch(events)?;
+        self.recv_ack(timeout)
+    }
+
+    /// Send a raw batch and block for its ack (the blocking counterpart
+    /// of [`NetClient::send_batch_raw`]).
+    pub fn ingest_batch_raw(
+        &mut self,
+        events: &[RawEvent<'_>],
+        timeout: Duration,
+    ) -> Result<BatchAck> {
+        self.send_batch_raw(events)?;
         self.recv_ack(timeout)
     }
 

@@ -6,14 +6,22 @@
 //! real process boundary — this module provides it:
 //!
 //! * [`wire`] — the frame codec (HELLO / HELLO_OK / INGEST_BATCH /
-//!   INGEST_ACK / REPLY_BATCH / ERR), versioned, CRC'd, size-capped;
-//! * [`server`] — a multi-threaded `std::net` TCP server fronting
-//!   [`crate::frontend::FrontEnd::ingest_batch`], streaming each
-//!   connection's replies back by subscribing the (sharded) reply topic
-//!   and routing on ingest id;
-//! * [`client`] — a blocking client with batched pipelining;
+//!   INGEST_BATCH_RAW / INGEST_ACK / REPLY_BATCH / ERR), versioned,
+//!   CRC'd, size-capped. Protocol v2's raw ingest body carries
+//!   pre-encoded `(timestamp, value_bytes)` pairs, so the bytes a
+//!   client encodes are the bytes the reservoir stores;
+//! * [`server`] — a multi-threaded `std::net` TCP server forwarding raw
+//!   batches to [`crate::frontend::FrontEnd::ingest_batch_raw`] (owned
+//!   v1 batches to [`crate::frontend::FrontEnd::ingest_batch`]) and
+//!   streaming each connection's replies back with one pump thread per
+//!   reply-topic shard, routing on ingest id;
+//! * [`client`] — a blocking client with batched pipelining that
+//!   encodes each event once ([`client::NetClient::send_batch_raw`] for
+//!   callers already holding encoded bytes);
 //! * [`bench`] — the closed-loop harness behind `railgun bench-client`
-//!   (throughput + p50/p99/p999 ingest→reply latency).
+//!   (throughput + p50/p99/p999 ingest→reply latency) plus the
+//!   open-loop `--rate` mode with coordinated-omission-corrected
+//!   latencies.
 //!
 //! Start a server with `railgun serve --listen 127.0.0.1:7171 …` (or
 //! `EngineConfig::listen_addr`), point [`client::NetClient::connect`] or
@@ -24,7 +32,7 @@ pub mod client;
 pub mod server;
 pub mod wire;
 
-pub use bench::{run_closed_loop, BenchOptions, BenchReport};
+pub use bench::{run_closed_loop, run_open_loop, BenchOptions, BenchReport};
 pub use client::{BatchAck, NetClient};
 pub use server::{NetOptions, NetServer};
-pub use wire::{Frame, PROTOCOL_VERSION};
+pub use wire::{Frame, MIN_PROTOCOL_VERSION, PROTOCOL_VERSION};

@@ -4,21 +4,29 @@
 //!
 //! * **accept loop** — non-blocking accept + per-connection setup (and
 //!   reaping of finished connection threads);
-//! * **per-connection reader** — decodes frames; for each ingest batch
-//!   it **reserves** the ingest-id range
-//!   ([`FrontEnd::reserve_ingest_ids`]), registers it in the reply route
-//!   table, and only then publishes via
-//!   [`FrontEnd::ingest_batch_reserved`] — so a reply can never race its
+//! * **per-connection reader** — reads frames into a reusable
+//!   [`wire::FrameBuf`] and dispatches on kind. A v2 raw ingest batch is
+//!   decoded **borrowed** ([`wire::decode_raw_batch`]): the validated
+//!   value slices go straight to
+//!   [`FrontEnd::ingest_batch_raw_reserved`] — no owned `Event` is ever
+//!   materialized on the connection thread — while the v1 owned-event
+//!   body keeps working through [`FrontEnd::ingest_batch_reserved`].
+//!   Either way the reader **reserves** the ingest-id range
+//!   ([`FrontEnd::reserve_ingest_ids`]) and registers it in the reply
+//!   route tables *before* publishing — so a reply can never race its
 //!   route registration — then acks;
 //! * **per-connection writer** — single owner of the socket's write half;
 //!   acks, errors and reply batches all funnel through its channel, so
 //!   frame writes never interleave;
-//! * **reply pump** — one consumer (own group, starts at the live end)
-//!   over every shard of the reply topic; decodes reply records and routes
-//!   each [`ReplyMsg`] to the connection that ingested its `ingest_id`.
+//! * **reply pumps** — **one thread per reply-topic shard**, each owning
+//!   its partition directly (fixed assignment, starting at the live
+//!   end) and routing through **per-shard route tables** keyed by the
+//!   same `ingest_id % shards` the task processors publish with — so
+//!   pump threads never contend on each other's tables, and a
+//!   connection reader registering a batch takes each shard lock once.
 //!
 //! Routing is exact, not broadcast: the reply topic is shared by every
-//! collector in the cluster, so the pump stashes replies for ingest ids
+//! collector in the cluster, so a pump stashes replies for ingest ids
 //! it has no route for (other nodes' collectors, rejected batches) and
 //! prunes the stash on a short time horizon — foreign replies never
 //! accumulate, and thanks to reserve-before-publish the pruning can
@@ -26,14 +34,18 @@
 //!
 //! A malformed frame (bad magic/CRC, oversized, truncated, undecodable
 //! body) poisons only its own connection: the reader answers with a fatal
-//! ERR frame where possible and closes; the listener, the pump and every
-//! other connection keep running.
+//! ERR frame where possible and closes; the listener, the pumps and every
+//! other connection keep running. One exception is deliberate: a v2 raw
+//! ingest frame that passed its CRC but fails content validation is the
+//! client's data problem, not a protocol break — the server rejects
+//! **only that batch** (non-fatal ERR) and the connection keeps serving.
 
 use crate::config::EngineConfig;
 use crate::error::Result;
-use crate::frontend::{FrontEnd, ReplyMsg, REPLY_TOPIC};
+use crate::event::ViewScratch;
+use crate::frontend::{reply_partition_for, FrontEnd, IngestReceipt, ReplyMsg, REPLY_TOPIC};
 use crate::mlog::BrokerRef;
-use crate::net::wire::{self, Frame, PROTOCOL_VERSION};
+use crate::net::wire::{self, Frame, MIN_PROTOCOL_VERSION, PROTOCOL_VERSION};
 use crate::util::hash::FxHashMap;
 use std::io::Write;
 use std::net::{Shutdown, SocketAddr, TcpListener, TcpStream};
@@ -47,8 +59,8 @@ use std::time::{Duration, Instant};
 /// range to be registered (a reply races the reader's registration by
 /// milliseconds at most; the slack is generous).
 const STASH_KEEP: Duration = Duration::from_secs(2);
-/// Hard cap on stashed reply messages (protects the server from reply
-/// traffic that belongs to other collectors entirely).
+/// Hard cap on stashed reply messages **per shard table** (protects the
+/// server from reply traffic that belongs to other collectors entirely).
 const STASH_MAX_MSGS: usize = 100_000;
 /// Bound on each connection's writer queue. The reader's acks use a
 /// blocking send (per-connection backpressure: a client that stops
@@ -108,30 +120,105 @@ struct RouteTable {
     stash_msgs: usize,
 }
 
+impl RouteTable {
+    /// Route one decoded reply through this table: decrement its route's
+    /// remaining count and queue it for delivery, or stash it when no
+    /// route is registered (yet).
+    fn route_msg(
+        &mut self,
+        msg: ReplyMsg,
+        now: Instant,
+        deliveries: &mut FxHashMap<u64, Vec<ReplyMsg>>,
+    ) {
+        let id = msg.ingest_id;
+        match self.routes.get_mut(&id) {
+            Some(route) => {
+                route.remaining -= 1;
+                let conn_id = route.conn_id;
+                if route.remaining == 0 {
+                    self.routes.remove(&id);
+                }
+                deliveries.entry(conn_id).or_default().push(msg);
+            }
+            None => {
+                // not registered (not ours, or a rejected batch's
+                // partial prefix): stash
+                self.stash_msgs += 1;
+                self.stash
+                    .entry(id)
+                    .or_insert_with(|| (now, Vec::new()))
+                    .1
+                    .push(msg);
+            }
+        }
+    }
+
+    /// Prune stash entries nobody claimed within the race window
+    /// (replies that belong to other collectors on the shared reply
+    /// topic — never this server's clients).
+    fn prune_stash(&mut self, now: Instant) {
+        if self.stash_msgs == 0 {
+            return;
+        }
+        let mut removed = 0usize;
+        self.stash.retain(|_, v| {
+            if now.duration_since(v.0) < STASH_KEEP {
+                true
+            } else {
+                removed += v.1.len();
+                false
+            }
+        });
+        self.stash_msgs -= removed;
+        if self.stash_msgs > STASH_MAX_MSGS {
+            log::warn!(
+                "net pump: dropping {} stashed replies (no owner registered)",
+                self.stash_msgs
+            );
+            self.stash.clear();
+            self.stash_msgs = 0;
+        }
+    }
+}
+
 struct Shared {
     frontend: Arc<FrontEnd>,
     opts: NetOptions,
     next_conn_id: AtomicU64,
-    /// conn id → writer channel (the pump's reply destination).
+    /// conn id → writer channel (the pumps' reply destination).
     conns: Mutex<FxHashMap<u64, SyncSender<ConnMsg>>>,
     /// Accepted sockets by conn id, kept so shutdown can unblock their
     /// readers; entries are removed when the connection's reader exits.
     socks: Mutex<FxHashMap<u64, TcpStream>>,
     conn_joins: Mutex<Vec<JoinHandle<()>>>,
-    routes: Mutex<RouteTable>,
+    /// Reply-topic shard count (= `routes.len()`).
+    nshards: u32,
+    /// One route table per reply shard, indexed by
+    /// [`reply_partition_for`]`(ingest_id, nshards)` — each pump thread
+    /// works its own table; readers registering a batch take each lock
+    /// once.
+    routes: Vec<Mutex<RouteTable>>,
 }
 
 impl Shared {
     /// Route the ingest-id range of a freshly accepted batch to `conn_id`,
-    /// delivering (and uncounting) anything the pump stashed first.
+    /// delivering (and uncounting) anything the pumps stashed first.
+    /// Contiguous ids spread round-robin over the shard tables, so each
+    /// shard's subset is visited under one lock acquisition.
     fn register_replies(&self, conn_id: u64, first: u64, count: u32, fanout: u32) {
         if count == 0 || fanout == 0 {
             return;
         }
+        let n = self.nshards.max(1) as u64;
         let mut early: Vec<ReplyMsg> = Vec::new();
-        {
-            let mut table = self.routes.lock().unwrap();
-            for id in first..first + count as u64 {
+        for shard in 0..n {
+            let offset = (shard + n - first % n) % n;
+            if offset >= count as u64 {
+                continue;
+            }
+            let mut table = self.routes[shard as usize].lock().unwrap();
+            let mut id = first + offset;
+            while id < first + count as u64 {
                 let mut remaining = fanout;
                 if let Some((_, msgs)) = table.stash.remove(&id) {
                     table.stash_msgs -= msgs.len();
@@ -141,6 +228,7 @@ impl Shared {
                 if remaining > 0 {
                     table.routes.insert(id, Route { conn_id, remaining });
                 }
+                id += n;
             }
         }
         if !early.is_empty() {
@@ -153,9 +241,18 @@ impl Shared {
 
     /// Drop the routes of a reserved range whose ingest was rejected.
     fn unregister_replies(&self, first: u64, count: u32) {
-        let mut table = self.routes.lock().unwrap();
-        for id in first..first + count as u64 {
-            table.routes.remove(&id);
+        let n = self.nshards.max(1) as u64;
+        for shard in 0..n {
+            let offset = (shard + n - first % n) % n;
+            if offset >= count as u64 {
+                continue;
+            }
+            let mut table = self.routes[shard as usize].lock().unwrap();
+            let mut id = first + offset;
+            while id < first + count as u64 {
+                table.routes.remove(&id);
+                id += n;
+            }
         }
     }
 }
@@ -167,12 +264,13 @@ pub struct NetServer {
     running: Arc<AtomicBool>,
     shared: Arc<Shared>,
     accept_join: Option<JoinHandle<()>>,
-    pump_join: Option<JoinHandle<()>>,
+    pump_joins: Vec<JoinHandle<()>>,
 }
 
 impl NetServer {
     /// Bind `addr` (e.g. `"127.0.0.1:0"` for an ephemeral port) and start
-    /// the accept loop + reply pump over `frontend`'s broker.
+    /// the accept loop + one reply pump per reply-topic shard over
+    /// `frontend`'s broker.
     pub fn start(
         frontend: Arc<FrontEnd>,
         broker: BrokerRef,
@@ -183,6 +281,10 @@ impl NetServer {
         let local_addr = listener.local_addr()?;
         listener.set_nonblocking(true)?;
         let running = Arc::new(AtomicBool::new(true));
+        // the reply topic may predate this server with a different shard
+        // count: ensure it exists, then adopt the actual count
+        broker.ensure_topic(REPLY_TOPIC, frontend.reply_partitions())?;
+        let nshards = broker.partition_count(REPLY_TOPIC).unwrap_or(1).max(1);
         let shared = Arc::new(Shared {
             frontend,
             opts,
@@ -190,21 +292,24 @@ impl NetServer {
             conns: Mutex::new(FxHashMap::default()),
             socks: Mutex::new(FxHashMap::default()),
             conn_joins: Mutex::new(Vec::new()),
-            routes: Mutex::new(RouteTable::default()),
+            nshards,
+            routes: (0..nshards).map(|_| Mutex::new(RouteTable::default())).collect(),
         });
 
         static NEXT_SERVER: AtomicU64 = AtomicU64::new(0);
         let server_id = NEXT_SERVER.fetch_add(1, Ordering::Relaxed);
-        let group = format!("railgun-net-{}-{server_id}", std::process::id());
 
-        let pump_join = {
+        let mut pump_joins = Vec::with_capacity(nshards as usize);
+        for shard in 0..nshards {
             let shared = shared.clone();
             let running = running.clone();
-            std::thread::Builder::new()
-                .name(format!("net-pump-{server_id}"))
-                .spawn(move || reply_pump(broker, shared, running, group))
-                .map_err(|e| crate::error::Error::internal(format!("spawn pump: {e}")))?
-        };
+            let broker = broker.clone();
+            let join = std::thread::Builder::new()
+                .name(format!("net-pump-{server_id}-{shard}"))
+                .spawn(move || reply_pump_shard(broker, shared, running, shard))
+                .map_err(|e| crate::error::Error::internal(format!("spawn pump: {e}")))?;
+            pump_joins.push(join);
+        }
         let accept_join = {
             let shared = shared.clone();
             let running = running.clone();
@@ -213,13 +318,13 @@ impl NetServer {
                 .spawn(move || accept_loop(listener, shared, running))
                 .map_err(|e| crate::error::Error::internal(format!("spawn accept: {e}")))?
         };
-        log::info!("net server listening on {local_addr}");
+        log::info!("net server listening on {local_addr} ({nshards} reply pumps)");
         Ok(NetServer {
             local_addr,
             running,
             shared,
             accept_join: Some(accept_join),
-            pump_join: Some(pump_join),
+            pump_joins,
         })
     }
 
@@ -251,7 +356,9 @@ impl NetServer {
         for (_, s) in self.shared.socks.lock().unwrap().drain() {
             let _ = s.shutdown(Shutdown::Both);
         }
-        if let Some(j) = self.pump_join.take() {
+        // pumps park on the broker's data condvar with a bounded timeout,
+        // so they observe the stop flag within one wait period
+        for j in std::mem::take(&mut self.pump_joins) {
             let _ = j.join();
         }
         let joins: Vec<JoinHandle<()>> =
@@ -336,14 +443,16 @@ fn session(stream: TcpStream, shared: &Arc<Shared>, conn_id: u64, tx: &SyncSende
         }));
     };
 
-    // handshake: exactly one HELLO
+    // handshake: exactly one HELLO. The server speaks every version in
+    // MIN..=PROTOCOL_VERSION and answers with min(client, server).
     let (stream_name, schema, fanout) = match wire::read_frame(&mut reader, None, max_frame) {
         Ok(Some(Frame::Hello { version, stream })) => {
-            if version != PROTOCOL_VERSION {
+            if !(MIN_PROTOCOL_VERSION..=PROTOCOL_VERSION).contains(&version) {
                 fatal(
                     tx,
                     format!(
-                        "unsupported protocol version {version} (server speaks {PROTOCOL_VERSION})"
+                        "unsupported protocol version {version} (server speaks \
+                         {MIN_PROTOCOL_VERSION}..={PROTOCOL_VERSION})"
                     ),
                 );
                 return;
@@ -352,7 +461,7 @@ fn session(stream: TcpStream, shared: &Arc<Shared>, conn_id: u64, tx: &SyncSende
                 Ok(def) => {
                     let fanout = def.entities.len() as u32;
                     let ok = Frame::HelloOk {
-                        version: PROTOCOL_VERSION,
+                        version: version.min(PROTOCOL_VERSION),
                         fanout,
                         fields: wire::schema_fields(&def.schema),
                     };
@@ -378,56 +487,11 @@ fn session(stream: TcpStream, shared: &Arc<Shared>, conn_id: u64, tx: &SyncSende
         }
     };
 
+    let mut fbuf = wire::FrameBuf::new();
+    let mut scratch = ViewScratch::new();
     loop {
-        match wire::read_frame(&mut reader, Some(&schema), max_frame) {
-            Ok(Some(Frame::IngestBatch { seq, events })) => {
-                // reserve the id range and route it to this connection
-                // BEFORE publishing: the back-end can start replying the
-                // moment records land, and a reply must never race its
-                // route registration
-                let count = events.len() as u32;
-                let first = shared.frontend.reserve_ingest_ids(count as u64);
-                shared.register_replies(conn_id, first, count, fanout);
-                match shared
-                    .frontend
-                    .ingest_batch_reserved(&stream_name, events, first)
-                {
-                    Ok(receipts) => {
-                        debug_assert_eq!(receipts.len() as u32, count);
-                        let ack = Frame::IngestAck {
-                            seq,
-                            first_ingest_id: first,
-                            count,
-                            fanout,
-                        };
-                        if tx.send(ConnMsg::Frame(ack)).is_err() {
-                            return;
-                        }
-                    }
-                    Err(e) => {
-                        // a rejected batch is the client's problem, not a
-                        // protocol violation: answer and keep serving.
-                        // Drop the routes; replies for any partially
-                        // published prefix fall back to the stash and age
-                        // out.
-                        shared.unregister_replies(first, count);
-                        let err = Frame::Err {
-                            fatal: false,
-                            message: format!("ingest rejected (seq {seq}): {e}"),
-                        };
-                        if tx.send(ConnMsg::Frame(err)).is_err() {
-                            return;
-                        }
-                    }
-                }
-            }
-            Ok(Some(other)) => {
-                fatal(
-                    tx,
-                    format!("unexpected frame {other:?} (only INGEST_BATCH after HELLO)"),
-                );
-                return;
-            }
+        let kind = match wire::read_frame_raw(&mut reader, &mut fbuf, max_frame) {
+            Ok(Some(k)) => k,
             Ok(None) => return, // clean client close
             Err(e) => {
                 // corrupt/oversized/truncated frame: this connection can
@@ -435,6 +499,125 @@ fn session(stream: TcpStream, shared: &Arc<Shared>, conn_id: u64, tx: &SyncSende
                 fatal(tx, format!("protocol error: {e}"));
                 return;
             }
+        };
+        if kind == wire::KIND_INGEST_BATCH_RAW {
+            // the borrowed fast path: validated value slices go straight
+            // to the front-end — no owned Event on this thread
+            match wire::decode_raw_batch(fbuf.body(), &schema, &mut scratch) {
+                Ok((seq, raws)) => {
+                    let keep = handle_ingest(
+                        shared,
+                        conn_id,
+                        tx,
+                        fanout,
+                        seq,
+                        raws.len() as u32,
+                        |first| {
+                            shared
+                                .frontend
+                                .ingest_batch_raw_reserved(&stream_name, &raws, first)
+                        },
+                    );
+                    if !keep {
+                        return;
+                    }
+                }
+                Err(e) => {
+                    // the frame passed its CRC, so these bytes are what
+                    // the client sent: a malformed raw batch poisons only
+                    // itself — answer non-fatally and keep this
+                    // connection's other batches flowing
+                    match wire::raw_batch_seq(fbuf.body()) {
+                        Ok(seq) => {
+                            let err = Frame::Err {
+                                fatal: false,
+                                message: format!("ingest rejected (seq {seq}): {e}"),
+                            };
+                            if tx.send(ConnMsg::Frame(err)).is_err() {
+                                return;
+                            }
+                        }
+                        Err(_) => {
+                            fatal(tx, format!("protocol error: {e}"));
+                            return;
+                        }
+                    }
+                }
+            }
+            continue;
+        }
+        match Frame::decode_body(kind, fbuf.body(), Some(&schema)) {
+            Ok(Frame::IngestBatch { seq, events }) => {
+                let keep = handle_ingest(
+                    shared,
+                    conn_id,
+                    tx,
+                    fanout,
+                    seq,
+                    events.len() as u32,
+                    |first| {
+                        shared
+                            .frontend
+                            .ingest_batch_reserved(&stream_name, events, first)
+                    },
+                );
+                if !keep {
+                    return;
+                }
+            }
+            Ok(other) => {
+                fatal(
+                    tx,
+                    format!("unexpected frame {other:?} (only ingest batches after HELLO)"),
+                );
+                return;
+            }
+            Err(e) => {
+                fatal(tx, format!("protocol error: {e}"));
+                return;
+            }
+        }
+    }
+}
+
+/// One ingest batch, owned or raw: reserve the id range and route it to
+/// this connection **before** publishing — the back-end can start
+/// replying the moment records land, and a reply must never race its
+/// route registration — then ack, or reject non-fatally. Returns false
+/// when the writer channel is gone and the session should end.
+fn handle_ingest(
+    shared: &Arc<Shared>,
+    conn_id: u64,
+    tx: &SyncSender<ConnMsg>,
+    fanout: u32,
+    seq: u64,
+    count: u32,
+    publish: impl FnOnce(u64) -> Result<Vec<IngestReceipt>>,
+) -> bool {
+    let first = shared.frontend.reserve_ingest_ids(count as u64);
+    shared.register_replies(conn_id, first, count, fanout);
+    match publish(first) {
+        Ok(receipts) => {
+            debug_assert_eq!(receipts.len() as u32, count);
+            let ack = Frame::IngestAck {
+                seq,
+                first_ingest_id: first,
+                count,
+                fanout,
+            };
+            tx.send(ConnMsg::Frame(ack)).is_ok()
+        }
+        Err(e) => {
+            // a rejected batch is the client's problem, not a protocol
+            // violation: answer and keep serving. Drop the routes;
+            // replies for any partially published prefix fall back to
+            // the stash and age out.
+            shared.unregister_replies(first, count);
+            let err = Frame::Err {
+                fatal: false,
+                message: format!("ingest rejected (seq {seq}): {e}"),
+            };
+            tx.send(ConnMsg::Frame(err)).is_ok()
         }
     }
 }
@@ -469,108 +652,81 @@ fn conn_writer(stream: TcpStream, rx: Receiver<ConnMsg>) {
     let _ = w.flush();
 }
 
-/// The reply pump: one consumer over every reply-topic shard, routing
-/// each message to the connection that owns its ingest id.
-fn reply_pump(broker: BrokerRef, shared: Arc<Shared>, running: Arc<AtomicBool>, group: String) {
-    let reply_partitions = shared.frontend.reply_partitions();
-    if let Err(e) = broker.ensure_topic(REPLY_TOPIC, reply_partitions) {
-        log::error!("net pump: cannot ensure reply topic: {e}");
-        return;
-    }
-    let mut consumer = match broker.consumer(&group, &[REPLY_TOPIC]) {
-        Ok(c) => c,
+/// One reply pump per reply-topic shard: the thread owns its partition
+/// outright (fixed assignment — no consumer-group rebalancing to race),
+/// starts at the live end, and routes each decoded [`ReplyMsg`] through
+/// the **per-shard route tables** to the connection that owns its
+/// ingest id. Task processors publish a reply to shard
+/// `ingest_id % nshards` ([`reply_partition_for`]), which is exactly how
+/// the tables are indexed — so in steady state a pump only ever takes
+/// its own table's lock.
+fn reply_pump_shard(broker: BrokerRef, shared: Arc<Shared>, running: Arc<AtomicBool>, shard: u32) {
+    let part = match broker.partition(REPLY_TOPIC, shard) {
+        Ok(p) => p,
         Err(e) => {
-            log::error!("net pump: cannot subscribe reply topic: {e}");
+            log::error!("net pump[{shard}]: cannot open reply partition: {e}");
             return;
         }
     };
-    // force the initial assignment, then start at the live end: replies
-    // to events ingested before this server existed belong to others
-    let _ = consumer.poll(0, Duration::from_millis(0));
-    for tp in consumer.assignment().to_vec() {
-        if let Ok(end) = broker.end_offset(&tp) {
-            consumer.seek(tp, end);
-        }
-    }
-
+    // start at the live end: replies to events ingested before this
+    // server existed belong to other collectors
+    let mut pos = part.end_offset();
+    let mut decoded: Vec<ReplyMsg> = Vec::new();
     let mut deliveries: FxHashMap<u64, Vec<ReplyMsg>> = FxHashMap::default();
     while running.load(Ordering::Relaxed) {
-        let polled = match consumer.poll(4096, Duration::from_millis(50)) {
-            Ok(p) => p,
+        let records = match part.fetch(pos, 4096) {
+            Ok(r) => r,
             Err(e) => {
-                log::warn!("net pump: poll failed: {e}");
+                log::warn!("net pump[{shard}]: fetch failed: {e}");
                 std::thread::sleep(Duration::from_millis(20));
                 continue;
             }
         };
-        if polled.records.is_empty() {
+        if records.is_empty() {
+            // idle: age out stashed foreign replies, then park until the
+            // broker signals data (bounded, so shutdown is observed)
+            shared.routes[shard as usize]
+                .lock()
+                .unwrap()
+                .prune_stash(Instant::now());
+            broker.wait_any_data(Duration::from_millis(50));
             continue;
         }
+        pos = records.last().expect("non-empty fetch").offset + 1;
         // decode outside the routes lock: connection readers contend on
         // it for every ingest registration, and bulk decoding under the
         // lock would add avoidable ack latency
-        let mut decoded: Vec<ReplyMsg> = Vec::new();
-        for (_, rec) in polled.records {
+        decoded.clear();
+        for rec in &records {
             match ReplyMsg::decode_batch(&rec.payload) {
                 Ok(mut m) => decoded.append(&mut m),
-                Err(e) => log::warn!("net pump: undecodable reply record: {e}"),
+                Err(e) => log::warn!("net pump[{shard}]: undecodable reply record: {e}"),
             }
         }
+        // fast path: everything published to this shard homes to this
+        // shard's table — one lock for the whole batch
+        let mut foreign: Vec<ReplyMsg> = Vec::new();
         {
-            let mut table = shared.routes.lock().unwrap();
             let now = Instant::now();
-            for msg in decoded {
-                let id = msg.ingest_id;
-                let routed = match table.routes.get_mut(&id) {
-                    Some(route) => {
-                        route.remaining -= 1;
-                        Some((route.conn_id, route.remaining == 0))
-                    }
-                    None => None,
-                };
-                match routed {
-                    Some((conn_id, done)) => {
-                        if done {
-                            table.routes.remove(&id);
-                        }
-                        deliveries.entry(conn_id).or_default().push(msg);
-                    }
-                    None => {
-                        // not registered (not ours, or a rejected batch's
-                        // partial prefix): stash
-                        table.stash_msgs += 1;
-                        table
-                            .stash
-                            .entry(id)
-                            .or_insert_with(|| (now, Vec::new()))
-                            .1
-                            .push(msg);
-                    }
+            let mut table = shared.routes[shard as usize].lock().unwrap();
+            for msg in decoded.drain(..) {
+                if reply_partition_for(msg.ingest_id, shared.nshards) != shard {
+                    foreign.push(msg);
+                    continue;
                 }
+                table.route_msg(msg, now, &mut deliveries);
             }
-            // prune stash entries nobody claimed within the race window
-            // (replies that belong to other collectors on the shared
-            // reply topic — never this server's clients)
-            if table.stash_msgs > 0 {
-                let mut removed = 0usize;
-                table.stash.retain(|_, v| {
-                    if now.duration_since(v.0) < STASH_KEEP {
-                        true
-                    } else {
-                        removed += v.1.len();
-                        false
-                    }
-                });
-                table.stash_msgs -= removed;
-                if table.stash_msgs > STASH_MAX_MSGS {
-                    log::warn!(
-                        "net pump: dropping {} stashed replies (no owner registered)",
-                        table.stash_msgs
-                    );
-                    table.stash.clear();
-                    table.stash_msgs = 0;
-                }
-            }
+            table.prune_stash(now);
+        }
+        // defensive: a reply record published to the wrong shard still
+        // routes through its id's home table
+        for msg in foreign {
+            let home = reply_partition_for(msg.ingest_id, shared.nshards) as usize;
+            let now = Instant::now();
+            shared.routes[home]
+                .lock()
+                .unwrap()
+                .route_msg(msg, now, &mut deliveries);
         }
         for (conn_id, msgs) in deliveries.drain() {
             let tx = shared.conns.lock().unwrap().get(&conn_id).cloned();
@@ -582,7 +738,7 @@ fn reply_pump(broker: BrokerRef, shared: Arc<Shared>, running: Arc<AtomicBool>, 
                         // letting one stalled client grow server memory;
                         // the client sees a reply timeout
                         log::warn!(
-                            "net pump: conn {conn_id} writer queue full; dropping replies"
+                            "net pump[{shard}]: conn {conn_id} writer queue full; dropping replies"
                         );
                     }
                     Err(TrySendError::Disconnected(_)) => {

@@ -19,26 +19,67 @@
 //! client                          server
 //!   HELLO {version, stream}  →
 //!                             ←  HELLO_OK {version, fanout, schema} | ERR
-//!   INGEST_BATCH {seq, events} →                    (pipelined freely)
+//!   INGEST_BATCH[_RAW] {seq, …} →                   (pipelined freely)
 //!                             ←  INGEST_ACK {seq, first_id, n, fanout}
 //!                             ←  REPLY_BATCH {msgs}  (async, interleaved)
 //! ```
+//!
+//! ## Protocol v2: the raw ingest body
+//!
+//! Protocol version 2 adds `INGEST_BATCH_RAW`, an ingest body that
+//! carries each event as **pre-encoded value bytes** instead of a
+//! schema-decoded `Event`:
+//!
+//! ```text
+//! body  := seq:varint n:varint event*
+//! event := ts:zigzag-varint vlen:varint value_bytes   (vlen bytes)
+//! ```
+//!
+//! `value_bytes` is the event codec's value section — the exact bytes an
+//! envelope payload carries after its ingest-id and timestamp varints.
+//! Decode validates each event with [`codec::scan_values`] into a
+//! reusable [`ViewScratch`] (rejecting exactly what the owned event
+//! decoder rejects, and checking that the scan consumes exactly `vlen`
+//! bytes), so a v2 body is accepted iff the v1 framing of the same
+//! events is. The payoff: the server forwards the validated slices
+//! straight to the front-end — which splices an ingest id in front of
+//! them to form the envelope payload — and the client's encoded bytes
+//! survive untouched into the reservoir's raw append. No owned `Event`
+//! exists anywhere between the two processes.
+//!
+//! **Version negotiation:** HELLO carries the client's highest supported
+//! version; the server accepts any version in
+//! [`MIN_PROTOCOL_VERSION`]`..=`[`PROTOCOL_VERSION`] and answers
+//! HELLO_OK with `min(client, server)` — the connection then speaks that
+//! version. A v1 client keeps sending owned-event `INGEST_BATCH` bodies,
+//! which every server continues to accept; a v2 client talking to a v1
+//! server (which rejects unknown versions outright) downgrades by
+//! re-connecting with version 1.
 //!
 //! Robustness: a reader rejects frames with a bad magic, a bad CRC, a
 //! truncated body or a body larger than its `max_frame` cap *before*
 //! trusting any of the content; the connection is then unusable (byte
 //! streams cannot resync) but the server process and its other
-//! connections are unaffected.
+//! connections are unaffected. A CRC-valid `INGEST_BATCH_RAW` frame
+//! whose *content* fails validation is different: the frame boundary is
+//! intact, so the server rejects only that batch (non-fatal ERR) and
+//! the connection keeps serving its other batches.
 
 use crate::error::{Error, Result};
-use crate::event::{codec, Event, FieldType, Schema, SchemaRef};
+use crate::event::{codec, Event, FieldType, RawEvent, Schema, SchemaRef, ViewScratch};
 use crate::frontend::ReplyMsg;
 use crate::util::varint;
 use byteorder::{ByteOrder, LittleEndian};
 use std::io::{Read, Write};
 
-/// Protocol version carried in HELLO / HELLO_OK.
-pub const PROTOCOL_VERSION: u32 = 1;
+/// Highest protocol version this build speaks (carried in HELLO /
+/// HELLO_OK). Version 2 adds the raw ingest body
+/// ([`Frame::IngestBatchRaw`]).
+pub const PROTOCOL_VERSION: u32 = 2;
+
+/// Oldest protocol version still accepted (v1: owned-event ingest
+/// bodies only).
+pub const MIN_PROTOCOL_VERSION: u32 = 1;
 
 /// Frame magic ("RG", little-endian u16).
 pub const MAGIC: u16 = 0x4752;
@@ -55,6 +96,9 @@ const KIND_INGEST_BATCH: u8 = 3;
 const KIND_INGEST_ACK: u8 = 4;
 const KIND_REPLY_BATCH: u8 = 5;
 const KIND_ERR: u8 = 6;
+/// Raw ingest body (protocol v2). Public so the server's borrowed
+/// dispatch can match it without an owned [`Frame`] decode.
+pub const KIND_INGEST_BATCH_RAW: u8 = 7;
 
 /// One protocol frame.
 #[derive(Debug, Clone, PartialEq)]
@@ -84,6 +128,17 @@ pub enum Frame {
         seq: u64,
         /// Events, schema-encoded.
         events: Vec<Event>,
+    },
+    /// A batch of **pre-encoded** events to ingest (protocol v2): one
+    /// `(timestamp, value-section bytes)` pair per event. This owned form
+    /// exists for symmetric encode/decode (tests, tooling); the server's
+    /// hot path decodes the same body borrowed via [`decode_raw_batch`]
+    /// and never materializes it.
+    IngestBatchRaw {
+        /// Client batch sequence number.
+        seq: u64,
+        /// Events as (timestamp, encoded value section).
+        events: Vec<(i64, Vec<u8>)>,
     },
     /// Receipt for one ingest batch: ingest ids are contiguous from
     /// `first_ingest_id`.
@@ -119,6 +174,7 @@ impl Frame {
             Frame::Hello { .. } => KIND_HELLO,
             Frame::HelloOk { .. } => KIND_HELLO_OK,
             Frame::IngestBatch { .. } => KIND_INGEST_BATCH,
+            Frame::IngestBatchRaw { .. } => KIND_INGEST_BATCH_RAW,
             Frame::IngestAck { .. } => KIND_INGEST_ACK,
             Frame::ReplyBatch { .. } => KIND_REPLY_BATCH,
             Frame::Err { .. } => KIND_ERR,
@@ -156,6 +212,16 @@ impl Frame {
                 for event in events {
                     codec::encode_into(&mut out, event, schema, 0);
                 }
+            }
+            Frame::IngestBatchRaw { seq, events } => {
+                write_raw_batch_body(
+                    &mut out,
+                    *seq,
+                    events.iter().map(|(ts, v)| RawEvent {
+                        timestamp: *ts,
+                        values: v.as_slice(),
+                    }),
+                );
             }
             Frame::IngestAck {
                 seq,
@@ -236,6 +302,21 @@ impl Frame {
                 }
                 Frame::IngestBatch { seq, events }
             }
+            KIND_INGEST_BATCH_RAW => {
+                let schema = schema.ok_or_else(|| {
+                    Error::invalid("INGEST_BATCH_RAW before HELLO established a stream")
+                })?;
+                let mut scratch = ViewScratch::new();
+                let (seq, raws) = decode_raw_batch(body, schema, &mut scratch)?;
+                pos = body.len(); // decode_raw_batch consumed the whole body
+                Frame::IngestBatchRaw {
+                    seq,
+                    events: raws
+                        .iter()
+                        .map(|r| (r.timestamp, r.values.to_vec()))
+                        .collect(),
+                }
+            }
             KIND_INGEST_ACK => {
                 let seq = varint::read_u64(body, &mut pos)?;
                 let first_ingest_id = varint::read_u64(body, &mut pos)?;
@@ -310,16 +391,38 @@ pub fn write_frame<W: Write>(w: &mut W, frame: &Frame, schema: Option<&Schema>) 
     Ok(())
 }
 
-/// Read one frame from `r`.
+/// Reusable buffer for [`read_frame_raw`]: holds the body of the last
+/// frame read, so a long-lived reader (the server's per-connection
+/// session) pays no per-frame body allocation in steady state.
+#[derive(Default)]
+pub struct FrameBuf {
+    body: Vec<u8>,
+}
+
+impl FrameBuf {
+    /// Empty buffer.
+    pub fn new() -> FrameBuf {
+        FrameBuf::default()
+    }
+
+    /// Body bytes of the last frame read into this buffer.
+    pub fn body(&self) -> &[u8] {
+        &self.body
+    }
+}
+
+/// Read one frame's header + body into `buf` (reusing its allocation)
+/// and return the frame kind, without decoding the body.
 ///
-/// Returns `Ok(None)` on a clean EOF at a frame boundary. Frames with a
-/// bad magic, an oversized body (`> max_frame`), a CRC mismatch or a
-/// malformed body return `Err` — the stream can no longer be trusted.
-pub fn read_frame<R: Read>(
+/// Performs the full framing validation of [`read_frame`] — magic, size
+/// cap, CRC, clean-EOF detection — so callers can trust `buf.body()`
+/// arrived intact and dispatch on the kind with a borrowed decoder
+/// (the server's zero-copy raw-ingest path).
+pub fn read_frame_raw<R: Read>(
     r: &mut R,
-    schema: Option<&Schema>,
+    buf: &mut FrameBuf,
     max_frame: usize,
-) -> Result<Option<Frame>> {
+) -> Result<Option<u8>> {
     let mut header = [0u8; HEADER_LEN];
     // distinguish clean EOF (no bytes) from a truncated header
     let mut filled = 0usize;
@@ -348,13 +451,129 @@ pub fn read_frame<R: Read>(
             "frame: body of {len} bytes exceeds max frame size {max_frame}"
         )));
     }
-    let mut body = vec![0u8; len];
-    r.read_exact(&mut body)
+    buf.body.clear();
+    buf.body.resize(len, 0);
+    r.read_exact(&mut buf.body)
         .map_err(|e| Error::corrupt(format!("frame: truncated body: {e}")))?;
-    if crc32fast::hash(&body) != crc {
+    if crc32fast::hash(&buf.body) != crc {
         return Err(Error::corrupt("frame: CRC mismatch"));
     }
-    Frame::decode_body(kind, &body, schema).map(Some)
+    Ok(Some(kind))
+}
+
+/// Read one frame from `r`.
+///
+/// Returns `Ok(None)` on a clean EOF at a frame boundary. Frames with a
+/// bad magic, an oversized body (`> max_frame`), a CRC mismatch or a
+/// malformed body return `Err` — the stream can no longer be trusted.
+pub fn read_frame<R: Read>(
+    r: &mut R,
+    schema: Option<&Schema>,
+    max_frame: usize,
+) -> Result<Option<Frame>> {
+    let mut buf = FrameBuf::new();
+    match read_frame_raw(r, &mut buf, max_frame)? {
+        None => Ok(None),
+        Some(kind) => Frame::decode_body(kind, buf.body(), schema).map(Some),
+    }
+}
+
+/// Append the raw ingest-batch body: `seq n (ts vlen value_bytes)*`.
+fn write_raw_batch_body<'a>(
+    out: &mut Vec<u8>,
+    seq: u64,
+    events: impl ExactSizeIterator<Item = RawEvent<'a>>,
+) {
+    varint::write_u64(out, seq);
+    varint::write_u64(out, events.len() as u64);
+    for e in events {
+        varint::write_i64(out, e.timestamp);
+        varint::write_u64(out, e.values.len() as u64);
+        out.extend_from_slice(e.values);
+    }
+}
+
+/// Build a complete `INGEST_BATCH_RAW` frame (header + body) into a
+/// reusable buffer — byte-identical to
+/// `Frame::IngestBatchRaw { .. }.encode(None)`, without the owned
+/// `Vec<(i64, Vec<u8>)>` materialization. This is the client's
+/// encode-once hot path: value bytes go from the caller's buffer to the
+/// socket with one copy.
+pub fn encode_raw_batch_frame(out: &mut Vec<u8>, seq: u64, events: &[RawEvent<'_>]) {
+    out.clear();
+    out.resize(HEADER_LEN, 0);
+    write_raw_batch_body(out, seq, events.iter().copied());
+    let crc = crc32fast::hash(&out[HEADER_LEN..]);
+    let len = (out.len() - HEADER_LEN) as u32;
+    out[0..2].copy_from_slice(&MAGIC.to_le_bytes());
+    out[2] = KIND_INGEST_BATCH_RAW;
+    LittleEndian::write_u32(&mut out[3..7], len);
+    LittleEndian::write_u32(&mut out[7..11], crc);
+}
+
+/// Borrowed decode of an `INGEST_BATCH_RAW` body: parses the
+/// `seq n (ts vlen value_bytes)*` structure and validates every event's
+/// value bytes with [`codec::scan_values`] through the caller's reusable
+/// [`ViewScratch`] — rejecting exactly what the owned event decoder
+/// rejects, and requiring each scan to consume exactly `vlen` bytes.
+/// The returned [`RawEvent`]s borrow `body`; nothing is copied.
+pub fn decode_raw_batch<'a>(
+    body: &'a [u8],
+    schema: &Schema,
+    scratch: &mut ViewScratch,
+) -> Result<(u64, Vec<RawEvent<'a>>)> {
+    let mut pos = 0usize;
+    let seq = varint::read_u64(body, &mut pos)?;
+    let n = varint::read_u64(body, &mut pos)? as usize;
+    if n > body.len() {
+        // every event takes ≥2 bytes; reject absurd counts before
+        // reserving memory for them
+        return Err(Error::corrupt(format!(
+            "INGEST_BATCH_RAW: count {n} exceeds body size {}",
+            body.len()
+        )));
+    }
+    let mut events = Vec::with_capacity(n.min(4096));
+    for i in 0..n {
+        let timestamp = varint::read_i64(body, &mut pos)?;
+        let vlen = varint::read_u64(body, &mut pos)? as usize;
+        let end = pos
+            .checked_add(vlen)
+            .filter(|&e| e <= body.len())
+            .ok_or_else(|| {
+                Error::corrupt(format!(
+                    "INGEST_BATCH_RAW: event {i}: value bytes overrun the body"
+                ))
+            })?;
+        let values = &body[pos..end];
+        let mut vpos = 0usize;
+        scratch
+            .scan_values(values, &mut vpos, schema)
+            .map_err(|e| Error::corrupt(format!("INGEST_BATCH_RAW: event {i}: {e}")))?;
+        if vpos != vlen {
+            return Err(Error::corrupt(format!(
+                "INGEST_BATCH_RAW: event {i}: {} trailing value bytes",
+                vlen - vpos
+            )));
+        }
+        events.push(RawEvent { timestamp, values });
+        pos = end;
+    }
+    if pos != body.len() {
+        return Err(Error::corrupt(format!(
+            "INGEST_BATCH_RAW: {} trailing bytes",
+            body.len() - pos
+        )));
+    }
+    Ok((seq, events))
+}
+
+/// Peek the batch sequence number of a raw ingest body (its leading
+/// varint) without decoding the rest — lets the server attribute a
+/// malformed raw batch to its `seq` in the non-fatal rejection reply.
+pub fn raw_batch_seq(body: &[u8]) -> Result<u64> {
+    let mut pos = 0usize;
+    varint::read_u64(body, &mut pos)
 }
 
 /// Schema fields as the (name, type) pairs HELLO_OK carries.
@@ -396,7 +615,16 @@ mod tests {
         )
     }
 
+    /// `(timestamp, value-section bytes)` of an owned event — the unit
+    /// the raw ingest body carries.
+    fn raw_of(e: &Event, schema: &Schema) -> (i64, Vec<u8>) {
+        let mut v = Vec::new();
+        codec::encode_values_into(&mut v, e, schema);
+        (e.timestamp, v)
+    }
+
     fn sample_frames() -> Vec<Frame> {
+        let schema = payments_schema();
         vec![
             Frame::Hello {
                 version: PROTOCOL_VERSION,
@@ -410,6 +638,13 @@ mod tests {
             Frame::IngestBatch {
                 seq: 7,
                 events: vec![ev(1000, "c1", 5.0), ev(2000, "c2", -1.5)],
+            },
+            Frame::IngestBatchRaw {
+                seq: 8,
+                events: vec![
+                    raw_of(&ev(3000, "c3", 2.5), &schema),
+                    raw_of(&ev(4000, "c4", 0.0), &schema),
+                ],
             },
             Frame::IngestAck {
                 seq: 7,
@@ -538,6 +773,96 @@ mod tests {
     }
 
     #[test]
+    fn raw_batch_frame_encoder_matches_owned_encode() {
+        let schema = payments_schema();
+        let events = vec![
+            raw_of(&ev(10, "c1", 1.0), &schema),
+            raw_of(&ev(20, "c2", -2.0), &schema),
+        ];
+        let owned = Frame::IngestBatchRaw {
+            seq: 99,
+            events: events.clone(),
+        }
+        .encode(None)
+        .unwrap();
+        let raws: Vec<RawEvent> = events
+            .iter()
+            .map(|(ts, v)| RawEvent {
+                timestamp: *ts,
+                values: v.as_slice(),
+            })
+            .collect();
+        let mut streamed = Vec::new();
+        encode_raw_batch_frame(&mut streamed, 99, &raws);
+        assert_eq!(streamed, owned, "the two raw-batch encoders must never drift");
+        // and the buffer is reusable: a second batch fully replaces it
+        encode_raw_batch_frame(&mut streamed, 100, &raws[..1]);
+        let back = read_frame(
+            &mut Cursor::new(streamed),
+            Some(&schema),
+            DEFAULT_MAX_FRAME,
+        )
+        .unwrap()
+        .unwrap();
+        match back {
+            Frame::IngestBatchRaw { seq, events: evs } => {
+                assert_eq!(seq, 100);
+                assert_eq!(evs, events[..1].to_vec());
+            }
+            other => panic!("expected IngestBatchRaw, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn raw_batch_decode_rejects_malformed_content() {
+        let schema = payments_schema();
+        let good = raw_of(&ev(10, "c1", 1.0), &schema);
+        let body = |events: &[(i64, Vec<u8>)]| {
+            Frame::IngestBatchRaw {
+                seq: 5,
+                events: events.to_vec(),
+            }
+            .encode_body(None)
+            .unwrap()
+        };
+        let mut scratch = ViewScratch::new();
+
+        // well-formed body decodes and borrows
+        let (seq, raws) = decode_raw_batch(&body(&[good.clone()]), &schema, &mut scratch).unwrap();
+        assert_eq!(seq, 5);
+        assert_eq!(raws.len(), 1);
+        assert_eq!(raws[0].timestamp, 10);
+        assert_eq!(raws[0].values, good.1.as_slice());
+
+        // value bytes that fail the schema scan (bad presence byte)
+        let mut bad = good.clone();
+        bad.1[0] = 7;
+        assert!(decode_raw_batch(&body(&[bad]), &schema, &mut scratch).is_err());
+
+        // vlen pointing past the end of the body
+        let mut b = body(&[good.clone()]);
+        let last = b.len() - 1;
+        b.truncate(last);
+        assert!(decode_raw_batch(&b, &schema, &mut scratch).is_err());
+
+        // trailing bytes after the last event
+        let mut b = body(&[good.clone()]);
+        b.push(0xAB);
+        assert!(decode_raw_batch(&b, &schema, &mut scratch).is_err());
+
+        // vlen longer than the scan consumes (value bytes + padding)
+        let mut padded = good.clone();
+        padded.1.push(0x00);
+        assert!(decode_raw_batch(&body(&[padded]), &schema, &mut scratch).is_err());
+
+        // the seq peek works even on bodies whose events are garbage
+        let mut b = body(&[good]);
+        let blen = b.len();
+        b[blen - 1] ^= 0x10;
+        assert_eq!(raw_batch_seq(&b).unwrap(), 5);
+    }
+
+    #[test]
     fn schema_fields_roundtrip() {
         let schema = payments_schema();
         let fields = schema_fields(&schema);
@@ -573,7 +898,7 @@ mod tests {
     }
 
     fn frame_of(spec: &FrameSpec) -> Frame {
-        match spec.kind % 6 {
+        match spec.kind % 7 {
             0 => Frame::Hello {
                 version: spec.a as u32,
                 stream: spec.s.clone(),
@@ -610,6 +935,17 @@ mod tests {
                     })
                     .collect(),
             },
+            5 => Frame::IngestBatchRaw {
+                seq: spec.a,
+                events: (0..spec.n)
+                    .map(|i| {
+                        raw_of(
+                            &ev(spec.b as i64 + i as i64, &spec.s, i as f64 / 3.0),
+                            &payments_schema(),
+                        )
+                    })
+                    .collect(),
+            },
             _ => Frame::Err {
                 fatal: spec.flag,
                 message: spec.s.clone(),
@@ -624,7 +960,7 @@ mod tests {
             "wire frame roundtrip",
             200,
             |rng| FrameSpec {
-                kind: rng.next_below(6) as u8,
+                kind: rng.next_below(7) as u8,
                 a: rng.next_u64(),
                 b: rng.next_u64(),
                 n: rng.index(20),
@@ -657,7 +993,7 @@ mod tests {
             |rng| {
                 (
                     FrameSpec {
-                        kind: rng.next_below(6) as u8,
+                        kind: rng.next_below(7) as u8,
                         a: rng.next_u64(),
                         b: rng.next_u64(),
                         n: rng.index(8),
@@ -680,6 +1016,110 @@ mod tests {
                 ) {
                     Err(_) => Ok(()),
                     Ok(f) => Err(format!("truncated frame decoded as {f:?}")),
+                }
+            },
+        );
+    }
+
+    /// Propcheck input for the v1/v2 framing-equivalence property: one
+    /// event's value section, optionally corrupted.
+    #[derive(Debug, Clone)]
+    struct RawCase {
+        ts: i64,
+        card: String,
+        amount: f64,
+        /// 0 = pristine, 1 = truncate, 2 = flip a bit, 3 = append a byte
+        mutation: u8,
+        at: usize,
+    }
+
+    impl Shrink for RawCase {
+        fn shrinks(&self) -> Vec<Self> {
+            let mut out = Vec::new();
+            if self.mutation != 0 {
+                out.push(RawCase {
+                    mutation: 0,
+                    ..self.clone()
+                });
+            }
+            for at in self.at.shrinks().into_iter().take(3) {
+                out.push(RawCase { at, ..self.clone() });
+            }
+            out
+        }
+    }
+
+    /// The back-compat contract of the v2 body: the v1 (owned) and v2
+    /// (raw) framings of the same value bytes are accepted or rejected
+    /// identically, and accepted bytes decode to the same event.
+    #[test]
+    fn prop_v1_and_v2_framings_accept_and_reject_identically() {
+        let schema = payments_schema();
+        check(
+            "v1/v2 ingest framing equivalence",
+            300,
+            |rng| RawCase {
+                ts: rng.range_i64(0, 1 << 40),
+                card: format!("c{}", rng.next_below(50)),
+                amount: rng.next_below(1000) as f64 / 4.0,
+                mutation: rng.next_below(4) as u8,
+                at: rng.index(32),
+            },
+            |case| {
+                let event = ev(case.ts, &case.card, case.amount);
+                let (_, mut values) = raw_of(&event, &schema);
+                match case.mutation {
+                    1 => {
+                        let keep = case.at % values.len().max(1);
+                        values.truncate(keep);
+                    }
+                    2 => {
+                        let at = case.at % values.len();
+                        values[at] ^= 1u8 << (case.at % 8);
+                    }
+                    3 => values.push(case.at as u8),
+                    _ => {}
+                }
+                // v1 body: seq n (ts ++ values); v2: seq n (ts vlen values)
+                let mut v1 = Vec::new();
+                varint::write_u64(&mut v1, 9);
+                varint::write_u64(&mut v1, 1);
+                varint::write_i64(&mut v1, case.ts);
+                v1.extend_from_slice(&values);
+                let mut v2 = Vec::new();
+                varint::write_u64(&mut v2, 9);
+                varint::write_u64(&mut v2, 1);
+                varint::write_i64(&mut v2, case.ts);
+                varint::write_u64(&mut v2, values.len() as u64);
+                v2.extend_from_slice(&values);
+                let d1 = Frame::decode_body(KIND_INGEST_BATCH, &v1, Some(&schema));
+                let d2 = Frame::decode_body(KIND_INGEST_BATCH_RAW, &v2, Some(&schema));
+                match (d1, d2) {
+                    (
+                        Ok(Frame::IngestBatch { events: e1, .. }),
+                        Ok(Frame::IngestBatchRaw { events: e2, .. }),
+                    ) => {
+                        // semantic agreement: the raw bytes decode to the
+                        // same owned event
+                        let (ts2, bytes) = &e2[0];
+                        let mut standalone = Vec::new();
+                        varint::write_i64(&mut standalone, *ts2);
+                        standalone.extend_from_slice(bytes);
+                        let back = codec::decode(&standalone, &schema).map_err(|e| {
+                            format!("v2 accepted bytes the owned decoder rejects: {e}")
+                        })?;
+                        if back == e1[0] && *ts2 == case.ts {
+                            Ok(())
+                        } else {
+                            Err(format!("decoded events differ: {back:?} != {:?}", e1[0]))
+                        }
+                    }
+                    (Err(_), Err(_)) => Ok(()),
+                    (a, b) => Err(format!(
+                        "framings disagree: v1 {:?} vs v2 {:?}",
+                        a.map(|_| "accepted").map_err(|e| e.to_string()),
+                        b.map(|_| "accepted").map_err(|e| e.to_string())
+                    )),
                 }
             },
         );

@@ -23,10 +23,47 @@
 use crate::util::hist::Histogram;
 use std::time::Instant;
 
+/// Fixed-cadence arrival schedule (one event every `1/rate` seconds) —
+/// the open-loop arrival model shared by the in-process CO-corrected
+/// injector and the net bench's open-loop driver
+/// (`railgun bench-client --rate`): both measure latency against the
+/// *intended* arrival instant `i / rate`, never against the possibly
+/// delayed actual send, which is exactly the coordinated-omission
+/// correction.
+#[derive(Debug, Clone, Copy)]
+pub struct ArrivalSchedule {
+    interarrival_ns: u64,
+}
+
+impl ArrivalSchedule {
+    /// Schedule at `rate_eps` events/second.
+    pub fn new(rate_eps: f64) -> ArrivalSchedule {
+        assert!(rate_eps > 0.0);
+        ArrivalSchedule {
+            interarrival_ns: (1e9 / rate_eps) as u64,
+        }
+    }
+
+    /// Nanoseconds between intended arrivals.
+    pub fn interarrival_ns(&self) -> u64 {
+        self.interarrival_ns
+    }
+
+    /// Intended arrival of the `i`-th event, in ns since schedule start.
+    pub fn intended_ns(&self, i: u64) -> u64 {
+        i.saturating_mul(self.interarrival_ns)
+    }
+
+    /// Offered load in events/second.
+    pub fn offered_eps(&self) -> f64 {
+        1e9 / self.interarrival_ns as f64
+    }
+}
+
 /// Coordinated-omission-corrected latency recorder.
 pub struct CoInjector {
-    /// Nanoseconds between intended arrivals.
-    interarrival_ns: u64,
+    /// The intended arrival cadence.
+    schedule: ArrivalSchedule,
     /// Intended start of the next event (ns since measurement start).
     next_intended_ns: u64,
     /// Completion time of the previous event.
@@ -56,9 +93,8 @@ pub struct InjectorReport {
 impl CoInjector {
     /// Injector at `rate_eps` events/second.
     pub fn new(rate_eps: f64) -> CoInjector {
-        assert!(rate_eps > 0.0);
         CoInjector {
-            interarrival_ns: (1e9 / rate_eps) as u64,
+            schedule: ArrivalSchedule::new(rate_eps),
             next_intended_ns: 0,
             prev_done_ns: 0,
             hist: Histogram::new(),
@@ -80,7 +116,7 @@ impl CoInjector {
     /// Record a pre-measured service time.
     pub fn record_service(&mut self, service_ns: u64) {
         let intended = self.next_intended_ns;
-        self.next_intended_ns += self.interarrival_ns;
+        self.next_intended_ns += self.schedule.interarrival_ns();
         let start = intended.max(self.prev_done_ns);
         let done = start + service_ns;
         self.prev_done_ns = done;
@@ -92,13 +128,15 @@ impl CoInjector {
 
     /// Current backlog (how far completion trails the arrival clock), ns.
     pub fn backlog_ns(&self) -> u64 {
-        self.prev_done_ns
-            .saturating_sub(self.next_intended_ns.saturating_sub(self.interarrival_ns))
+        self.prev_done_ns.saturating_sub(
+            self.next_intended_ns
+                .saturating_sub(self.schedule.interarrival_ns()),
+        )
     }
 
     /// Finish and summarize.
     pub fn report(&self) -> InjectorReport {
-        let offered_eps = 1e9 / self.interarrival_ns as f64;
+        let offered_eps = self.schedule.offered_eps();
         let capacity_eps = if self.service_total_ns == 0 {
             f64::INFINITY
         } else {
@@ -162,6 +200,18 @@ mod tests {
         assert!(p90 > 1_000_000, "stall visible in corrected p90: {p90}");
         let r = inj.report();
         assert!(r.kept_up, "backlog drains after the stall");
+    }
+
+    #[test]
+    fn arrival_schedule_cadence() {
+        let s = ArrivalSchedule::new(1000.0); // 1ms interarrival
+        assert_eq!(s.interarrival_ns(), 1_000_000);
+        assert_eq!(s.intended_ns(0), 0);
+        assert_eq!(s.intended_ns(7), 7_000_000);
+        assert!((s.offered_eps() - 1000.0).abs() < 1e-6);
+        // the intended clock saturates instead of overflowing
+        let slow = ArrivalSchedule::new(1.0);
+        assert_eq!(slow.intended_ns(u64::MAX), u64::MAX);
     }
 
     #[test]

@@ -12,4 +12,4 @@ mod generator;
 mod injector;
 
 pub use generator::{payments_schema, FraudGenerator, WorkloadConfig};
-pub use injector::{CoInjector, InjectorReport};
+pub use injector::{ArrivalSchedule, CoInjector, InjectorReport};

@@ -1,13 +1,15 @@
 //! Loopback tests for the net subsystem: client/server roundtrips,
-//! poison-frame isolation, the closed-loop bench harness, and the
-//! equivalence of remote replies with the in-process ingest path — both
-//! in-process (fast) and across a real process boundary (spawning the
-//! `railgun` binary).
+//! poison-frame isolation, the closed- and open-loop bench harnesses,
+//! and the equivalence of the three ingest paths — in-process,
+//! owned-wire (protocol v1) and raw-wire (protocol v2): reply bytes
+//! *and* reservoir chunk files must be byte-identical. Both in-process
+//! (fast) and across a real process boundary (spawning the `railgun`
+//! binary).
 
 use railgun::agg::AggKind;
 use railgun::config::{EngineConfig, StreamDef};
 use railgun::coordinator::Node;
-use railgun::event::{Event, Value};
+use railgun::event::{codec, Event, RawEvent, Value};
 use railgun::frontend::ReplyMsg;
 use railgun::mlog::{Broker, BrokerConfig};
 use railgun::net::{wire, BenchOptions, NetClient};
@@ -16,7 +18,9 @@ use railgun::plan::MetricSpec;
 use railgun::util::tmp::TempDir;
 use railgun::window::WindowSpec;
 use railgun::workload::payments_schema;
+use std::collections::BTreeMap;
 use std::io::{Read, Write};
+use std::path::Path;
 use std::time::Duration;
 
 const LONG: Duration = Duration::from_secs(20);
@@ -83,9 +87,13 @@ fn listening_node(tmp: &TempDir) -> (Node, String) {
     (node, addr)
 }
 
-/// Ingest through the wire and collect each event's full reply set.
-fn ingest_remote(addr: &str, events: &[Event]) -> Vec<Vec<ReplyMsg>> {
-    let mut client = NetClient::connect(addr, "payments").unwrap();
+/// Ingest through the wire at a specific protocol version and collect
+/// each event's full reply set.
+fn ingest_remote_v(addr: &str, events: &[Event], version: u32) -> Vec<Vec<ReplyMsg>> {
+    let mut client =
+        NetClient::connect_with_version(addr, "payments", wire::DEFAULT_MAX_FRAME, version)
+            .unwrap();
+    assert_eq!(client.version(), version, "server honors the requested version");
     assert_eq!(client.fanout(), 2);
     let ack = client.ingest_batch(events.to_vec(), LONG).unwrap();
     assert_eq!(ack.count as usize, events.len());
@@ -97,6 +105,12 @@ fn ingest_remote(addr: &str, events: &[Event]) -> Vec<Vec<ReplyMsg>> {
                 .unwrap()
         })
         .collect()
+}
+
+/// Ingest through the wire (current protocol) and collect each event's
+/// full reply set.
+fn ingest_remote(addr: &str, events: &[Event]) -> Vec<Vec<ReplyMsg>> {
+    ingest_remote_v(addr, events, wire::PROTOCOL_VERSION)
 }
 
 /// Ingest in-process and collect each event's full reply set.
@@ -129,6 +143,33 @@ fn normalize(per_event: Vec<Vec<ReplyMsg>>) -> Vec<Vec<u8>> {
             buf
         })
         .collect()
+}
+
+/// Relative path → bytes of every sealed reservoir chunk file under a
+/// node's data dir (the on-disk face of the ingest path).
+fn chunk_files(data_dir: &Path) -> BTreeMap<String, Vec<u8>> {
+    fn walk(dir: &Path, root: &Path, out: &mut BTreeMap<String, Vec<u8>>) {
+        let entries = match std::fs::read_dir(dir) {
+            Ok(e) => e,
+            Err(_) => return,
+        };
+        for e in entries.flatten() {
+            let p = e.path();
+            if p.is_dir() {
+                walk(&p, root, out);
+            } else if p.extension().map(|x| x == "chk").unwrap_or(false) {
+                let rel = p
+                    .strip_prefix(root)
+                    .unwrap()
+                    .to_string_lossy()
+                    .replace('\\', "/");
+                out.insert(rel, std::fs::read(&p).unwrap());
+            }
+        }
+    }
+    let mut out = BTreeMap::new();
+    walk(data_dir, data_dir, &mut out);
+    out
 }
 
 #[test]
@@ -303,6 +344,250 @@ fn remote_replies_equal_in_process_replies() {
     }
 }
 
+/// The tentpole contract: the same events through the in-process path,
+/// the owned-wire (v1) path and the raw-wire (v2) path must leave
+/// byte-identical traces — per-event reply bytes *and* the sealed
+/// reservoir chunk files on disk.
+#[test]
+fn raw_wire_owned_wire_and_in_process_are_byte_identical() {
+    // enough events that every task partition seals chunks
+    // (for_testing: chunk_events=32, 2 partitions per topic)
+    let events = sample_events(200);
+
+    let tmp_v2 = TempDir::new("net_eq3_raw");
+    let (node_v2, addr_v2) = listening_node(&tmp_v2);
+    let v2 = normalize(ingest_remote_v(&addr_v2, &events, 2));
+    node_v2.shutdown(true);
+
+    let tmp_v1 = TempDir::new("net_eq3_owned");
+    let (node_v1, addr_v1) = listening_node(&tmp_v1);
+    let v1 = normalize(ingest_remote_v(&addr_v1, &events, 1));
+    node_v1.shutdown(true);
+
+    let tmp_ip = TempDir::new("net_eq3_local");
+    let broker = Broker::open(BrokerConfig::in_memory()).unwrap();
+    let node_ip = Node::start(
+        "local-node",
+        EngineConfig {
+            listen_addr: None,
+            ..EngineConfig::for_testing(tmp_ip.path().to_path_buf())
+        },
+        broker,
+    )
+    .unwrap();
+    node_ip.register_stream(payments_def()).unwrap();
+    let ip = normalize(ingest_local(&node_ip, &events));
+    node_ip.shutdown(true);
+
+    assert_eq!(v2.len(), events.len());
+    assert_eq!(v1.len(), events.len());
+    assert_eq!(ip.len(), events.len());
+    for i in 0..events.len() {
+        assert_eq!(v2[i], v1[i], "event {i}: raw-wire replies differ from owned-wire");
+        assert_eq!(v2[i], ip[i], "event {i}: raw-wire replies differ from in-process");
+    }
+
+    // shutdown flushed the reservoir writers: sealed chunk files must
+    // match file-for-file, byte-for-byte across all three paths
+    let chunks_v2 = chunk_files(tmp_v2.path());
+    let chunks_v1 = chunk_files(tmp_v1.path());
+    let chunks_ip = chunk_files(tmp_ip.path());
+    assert!(
+        !chunks_v2.is_empty(),
+        "expected sealed chunk files under {:?}",
+        tmp_v2.path()
+    );
+    assert_eq!(
+        chunks_v2.keys().collect::<Vec<_>>(),
+        chunks_v1.keys().collect::<Vec<_>>(),
+        "chunk file sets differ between raw- and owned-wire"
+    );
+    assert_eq!(
+        chunks_v2.keys().collect::<Vec<_>>(),
+        chunks_ip.keys().collect::<Vec<_>>(),
+        "chunk file sets differ between raw-wire and in-process"
+    );
+    for (path, bytes) in &chunks_v2 {
+        assert_eq!(bytes, &chunks_v1[path], "chunk {path}: raw vs owned wire");
+        assert_eq!(bytes, &chunks_ip[path], "chunk {path}: raw wire vs in-process");
+    }
+}
+
+/// A raw batch whose value bytes are garbage (the frame itself is CRC-
+/// valid) must be rejected **non-fatally**: the connection's other
+/// batches keep flowing. Structural damage inside the body (vlen
+/// overrunning the frame) is likewise scoped to the batch.
+#[test]
+fn corrupt_raw_payloads_poison_only_their_batch() {
+    let tmp = TempDir::new("net_raw_poison");
+    let (node, addr) = listening_node(&tmp);
+    let mut client = NetClient::connect(&addr, "payments").unwrap();
+    assert_eq!(client.version(), wire::PROTOCOL_VERSION);
+
+    // garbage value bytes: fails the schema scan server-side
+    let garbage = [0x07u8, 0xde, 0xad];
+    let err = client
+        .ingest_batch_raw(
+            &[RawEvent {
+                timestamp: 5,
+                values: &garbage,
+            }],
+            LONG,
+        )
+        .unwrap_err();
+    assert!(err.to_string().contains("ingest rejected"), "{err}");
+
+    // the same connection keeps working afterwards
+    let ack = client.ingest_batch(sample_events(4), LONG).unwrap();
+    assert_eq!(ack.count, 4);
+    let replies = client
+        .await_event(ack.first_ingest_id, ack.fanout, LONG)
+        .unwrap();
+    assert_eq!(replies.len(), 2);
+
+    // structurally damaged raw body: valid frame, vlen overruns the body
+    let schema = payments_schema();
+    let mut values = Vec::new();
+    codec::encode_values_into(&mut values, &sample_events(1)[0], &schema);
+    let body_frame = {
+        let mut frame = Frame::IngestBatchRaw {
+            seq: 77,
+            events: vec![(5, values)],
+        }
+        .encode(None)
+        .unwrap();
+        // chop value bytes off the end and fix up the header so the CRC
+        // still matches: vlen now points past the body
+        frame.truncate(frame.len() - 2);
+        let body_len = frame.len() - wire::HEADER_LEN;
+        frame[3..7].copy_from_slice(&(body_len as u32).to_le_bytes());
+        let crc = crc32_of(&frame[wire::HEADER_LEN..]);
+        frame[7..11].copy_from_slice(&crc.to_le_bytes());
+        frame
+    };
+    let mut raw = std::net::TcpStream::connect(&addr).unwrap();
+    wire::write_frame(
+        &mut raw,
+        &Frame::Hello {
+            version: wire::PROTOCOL_VERSION,
+            stream: "payments".into(),
+        },
+        None,
+    )
+    .unwrap();
+    raw.set_read_timeout(Some(LONG)).unwrap();
+    match wire::read_frame(&mut raw, None, wire::DEFAULT_MAX_FRAME).unwrap() {
+        Some(Frame::HelloOk { .. }) => {}
+        other => panic!("expected HELLO_OK, got {other:?}"),
+    }
+    raw.write_all(&body_frame).unwrap();
+    match wire::read_frame(&mut raw, None, wire::DEFAULT_MAX_FRAME).unwrap() {
+        Some(Frame::Err { fatal, message }) => {
+            assert!(!fatal, "structural batch damage must not kill the connection");
+            assert!(message.contains("ingest rejected (seq 77)"), "{message}");
+        }
+        other => panic!("expected non-fatal ERR, got {other:?}"),
+    }
+    // and that raw socket can still ingest a well-formed raw batch
+    let mut good_values = Vec::new();
+    codec::encode_values_into(&mut good_values, &sample_events(1)[0], &schema);
+    let mut good_frame = Vec::new();
+    wire::encode_raw_batch_frame(
+        &mut good_frame,
+        78,
+        &[RawEvent {
+            timestamp: 5,
+            values: &good_values,
+        }],
+    );
+    raw.write_all(&good_frame).unwrap();
+    loop {
+        match wire::read_frame(&mut raw, None, wire::DEFAULT_MAX_FRAME).unwrap() {
+            Some(Frame::IngestAck { seq, count, .. }) => {
+                assert_eq!(seq, 78);
+                assert_eq!(count, 1);
+                break;
+            }
+            // a reply can legally overtake the ack in the writer queue
+            Some(Frame::ReplyBatch { .. }) => continue,
+            other => panic!("expected INGEST_ACK, got {other:?}"),
+        }
+    }
+    node.shutdown(true);
+}
+
+/// CRC32 of a frame body (mirrors the wire's checksum).
+fn crc32_of(body: &[u8]) -> u32 {
+    crc32fast::hash(body)
+}
+
+/// Replies keep reaching the right connection when several clients
+/// interleave batches across a multi-shard reply topic (one pump thread
+/// per shard server-side).
+#[test]
+fn multi_shard_reply_fanout_routes_to_right_connections() {
+    let tmp = TempDir::new("net_multi_shard");
+    let cfg = EngineConfig {
+        listen_addr: Some("127.0.0.1:0".to_string()),
+        reply_partitions: 4,
+        ..EngineConfig::for_testing(tmp.path().to_path_buf())
+    };
+    let broker = Broker::open(BrokerConfig::in_memory()).unwrap();
+    let node = Node::start("shard-node", cfg, broker).unwrap();
+    node.register_stream(payments_def()).unwrap();
+    let addr = node.net_addr().expect("listening").to_string();
+
+    let mut clients: Vec<NetClient> = (0..3)
+        .map(|_| NetClient::connect(&addr, "payments").unwrap())
+        .collect();
+    // interleave sends so contiguous id ranges from different
+    // connections stripe across all 4 reply shards concurrently
+    let mut acks: Vec<Vec<railgun::net::BatchAck>> = vec![Vec::new(); clients.len()];
+    for round in 0..4usize {
+        for (c, client) in clients.iter_mut().enumerate() {
+            let events: Vec<Event> = (0..10usize)
+                .map(|i| {
+                    ev(
+                        (round * 10 + i) as i64 * 500,
+                        &format!("c{c}_{i}"),
+                        &format!("m{}", i % 3),
+                        (c * 100 + i) as f64,
+                    )
+                })
+                .collect();
+            client.send_batch(events).unwrap();
+        }
+    }
+    for (c, client) in clients.iter_mut().enumerate() {
+        for _ in 0..4 {
+            acks[c].push(client.recv_ack(LONG).unwrap());
+        }
+    }
+    // every client gets the full fanout for every one of its events, and
+    // the replies are *its own* (card group values embed the client id)
+    for (c, client) in clients.iter_mut().enumerate() {
+        for ack in &acks[c] {
+            for k in 0..ack.count as u64 {
+                let id = ack.first_ingest_id + k;
+                let msgs = client.await_event(id, ack.fanout, LONG).unwrap();
+                assert_eq!(msgs.len(), 2, "client {c}, ingest {id}");
+                for m in &msgs {
+                    assert_eq!(m.ingest_id, id);
+                    if m.topic == "payments.card" {
+                        let own = m
+                            .metrics
+                            .iter()
+                            .all(|metric| metric.group.starts_with(&format!("c{c}_")));
+                        assert!(own, "client {c} got a foreign card reply: {m:?}");
+                    }
+                }
+            }
+        }
+        assert_eq!(client.pending_replies(), 0, "client {c} has stray replies");
+    }
+    node.shutdown(true);
+}
+
 #[test]
 fn closed_loop_bench_completes_every_event() {
     let tmp = TempDir::new("net_bench");
@@ -321,6 +606,30 @@ fn closed_loop_bench_completes_every_event() {
     assert!(report.hist.count() == 2_000);
     let text = report.render();
     assert!(text.contains("RESULT events=2000"), "{text}");
+    node.shutdown(true);
+}
+
+#[test]
+fn open_loop_bench_completes_at_offered_rate() {
+    let tmp = TempDir::new("net_bench_open");
+    let (node, addr) = listening_node(&tmp);
+    let opts = BenchOptions {
+        events: 1_000,
+        batch: 100,
+        pipeline: 1, // ignored by the open loop
+        cardinality: 50,
+        timeout: Duration::from_secs(60),
+    };
+    // a rate the loopback engine trivially sustains: corrected latency
+    // then reflects service time, and every event completes
+    let report = railgun::net::run_open_loop(&addr, "payments", 50_000.0, &opts).unwrap();
+    assert_eq!(report.events_sent, 1_000);
+    assert_eq!(report.events_completed, 1_000);
+    assert_eq!(report.replies, 2 * 1_000, "fanout 2 replies per event");
+    assert_eq!(report.hist.count(), 1_000);
+    assert_eq!(report.offered_eps, Some(50_000.0));
+    let text = report.render();
+    assert!(text.contains("mode=open offered_eps=50000"), "{text}");
     node.shutdown(true);
 }
 
@@ -397,9 +706,11 @@ fn two_process_loopback_equivalence_and_clean_shutdown() {
         addr
     };
 
-    // drive the remote process and an equivalent in-process node
+    // drive the remote process over both wire framings, plus an
+    // equivalent in-process node
     let events = sample_events(30);
     let remote = normalize(ingest_remote(&addr, &events));
+    let remote_v1 = normalize(ingest_remote_v(&addr, &events, 1));
 
     let tmp_local = TempDir::new("net_two_proc_local");
     let broker = Broker::open(BrokerConfig::in_memory()).unwrap();
@@ -416,6 +727,10 @@ fn two_process_loopback_equivalence_and_clean_shutdown() {
     assert_eq!(remote.len(), local.len());
     for (i, (r, l)) in remote.iter().zip(local.iter()).enumerate() {
         assert_eq!(r, l, "event {i}: cross-process reply bytes differ");
+    }
+    assert_eq!(remote_v1.len(), local.len());
+    for (i, (r, l)) in remote_v1.iter().zip(local.iter()).enumerate() {
+        assert_eq!(r, l, "event {i}: cross-process v1 reply bytes differ");
     }
 
     // closing stdin must shut the server down cleanly
