@@ -73,31 +73,48 @@
 //! (enforced on full-size runs; `--quick` reports without the
 //! noise-sensitive hard gate), emitted as `BENCH_net_ingest.json`.
 //!
+//! **Part 5 — connection scale** (`--conn-scale-only` runs just this).
+//! The event-loop server against a blocking thread-per-connection
+//! baseline (the pre-refactor server topology, emulated in-bench on the
+//! same front-end entry points): fleets of pipelined clients measure
+//! ingest→ack round trips. The event loop runs at connection counts the
+//! baseline's 2-threads-per-connection design cannot reach (the
+//! baseline's large series runs at its own viable max). Headline check:
+//! at 16 connections the event loop holds **≥ 0.9×** the baseline's
+//! throughput (enforced on full-size runs; `--quick` reports without
+//! the gate), emitted as `BENCH_conn_scale.json`.
+//!
 //! ```text
 //! cargo bench --bench batch_throughput
 //!     [-- --quick] [-- --hotpath-only] [-- --ingest-only]
-//!     [-- --net-ingest-only]
+//!     [-- --net-ingest-only] [-- --conn-scale-only]
 //! ```
 
 use railgun::agg::AggKind;
 use railgun::config::{EngineConfig, StreamDef};
 use railgun::coordinator::Node;
 use railgun::event::{codec, Event, EventView, Value, ViewScratch};
-use railgun::frontend::{Envelope, ReplyCollector, ReplyMsg};
+use railgun::frontend::{Envelope, FrontEnd, ReplyCollector, ReplyMsg};
 use railgun::kvstore::{Store, StoreOptions};
 use railgun::mlog::{Broker, BrokerConfig};
 use railgun::net::wire::{self, Frame};
+use railgun::net::NetClient;
 use railgun::plan::{MetricReply, MetricSpec, Plan, ReplyCtx, ReplySink, StateStore};
 use railgun::reservoir::{Reservoir, ReservoirConfig};
 use railgun::util::bench::{print_csv, print_table, BenchOpts, Series};
 use railgun::util::clock::ms;
 use railgun::util::hash::{hash64, partition_for, FxHashMap, FxHashSet};
+use railgun::util::hist::Histogram;
 use railgun::util::json::Json;
 use railgun::util::tmp::TempDir;
 use railgun::util::varint;
 use railgun::window::WindowSpec;
 use railgun::workload::{payments_schema, FraudGenerator, WorkloadConfig};
-use std::sync::Arc;
+use std::collections::VecDeque;
+use std::io::{BufReader, Write};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Barrier, Mutex};
+use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
 const WINDOW: i64 = 60 * ms::MINUTE;
@@ -770,13 +787,348 @@ fn net_ingest(opts: &BenchOpts) -> (Series, Series) {
     (raw_forward, decode_reencode)
 }
 
+// ---------------------------------------------------------------------------
+// Part 5: connection scale (event-loop server vs thread-per-connection)
+// ---------------------------------------------------------------------------
+
+const CONN_BATCH: usize = 32;
+const CONN_PIPELINE: usize = 4;
+
+/// Raise the process fd soft limit toward its hard limit; returns the
+/// effective soft limit. The 1k-connection series holds ~2 fds per
+/// client (the client socket *and* its accepted peer both live in this
+/// process); common default soft limits (1024) would otherwise cap it.
+fn raise_nofile_limit() -> u64 {
+    #[repr(C)]
+    struct RLimit {
+        cur: u64,
+        max: u64,
+    }
+    const RLIMIT_NOFILE: i32 = 7;
+    extern "C" {
+        fn getrlimit(resource: i32, rlim: *mut RLimit) -> i32;
+        fn setrlimit(resource: i32, rlim: *const RLimit) -> i32;
+    }
+    unsafe {
+        let mut lim = RLimit { cur: 0, max: 0 };
+        if getrlimit(RLIMIT_NOFILE, &mut lim) != 0 {
+            return 1024;
+        }
+        if lim.cur < lim.max {
+            let want = RLimit {
+                cur: lim.max,
+                max: lim.max,
+            };
+            if setrlimit(RLIMIT_NOFILE, &want) == 0 {
+                return lim.max;
+            }
+        }
+        lim.cur
+    }
+}
+
+/// The pre-refactor server shape in miniature: a blocking
+/// thread-per-connection front door — one reader thread per accepted
+/// socket plus a writer thread behind a bounded queue, the two threads
+/// every connection cost before the event-loop rewrite — decoding raw
+/// ingest batches and acking through the same front-end entry points
+/// the real server uses. No reply delivery: the measured round trip is
+/// ingest→ack on both series, so the baseline pays strictly *less* per
+/// batch than the event-loop server it is compared against.
+struct ThreadPerConnServer {
+    addr: String,
+    stop: Arc<AtomicBool>,
+    accept_join: Option<JoinHandle<()>>,
+    conn_joins: Arc<Mutex<Vec<JoinHandle<()>>>>,
+}
+
+impl ThreadPerConnServer {
+    fn start(frontend: Arc<FrontEnd>) -> ThreadPerConnServer {
+        let listener = std::net::TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap().to_string();
+        listener.set_nonblocking(true).unwrap();
+        let stop = Arc::new(AtomicBool::new(false));
+        let conn_joins: Arc<Mutex<Vec<JoinHandle<()>>>> = Arc::new(Mutex::new(Vec::new()));
+        let accept_join = {
+            let stop = stop.clone();
+            let joins = conn_joins.clone();
+            std::thread::spawn(move || {
+                while !stop.load(Ordering::Relaxed) {
+                    match listener.accept() {
+                        Ok((sock, _)) => {
+                            sock.set_nodelay(true).ok();
+                            let frontend = frontend.clone();
+                            joins
+                                .lock()
+                                .unwrap()
+                                .push(std::thread::spawn(move || baseline_conn(sock, frontend)));
+                        }
+                        Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                            std::thread::sleep(Duration::from_millis(2));
+                        }
+                        Err(_) => break,
+                    }
+                }
+            })
+        };
+        ThreadPerConnServer {
+            addr,
+            stop,
+            accept_join: Some(accept_join),
+            conn_joins,
+        }
+    }
+
+    /// Stop accepting and join every per-connection thread (clients must
+    /// have closed their sockets first — readers exit on EOF).
+    fn stop(mut self) {
+        self.stop.store(true, Ordering::Relaxed);
+        if let Some(j) = self.accept_join.take() {
+            j.join().unwrap();
+        }
+        for j in self.conn_joins.lock().unwrap().drain(..) {
+            j.join().unwrap();
+        }
+    }
+}
+
+/// One baseline connection: blocking handshake, then a read→publish→ack
+/// loop, acks written by the dedicated writer thread.
+fn baseline_conn(sock: std::net::TcpStream, frontend: Arc<FrontEnd>) {
+    let mut reader = BufReader::with_capacity(64 * 1024, sock.try_clone().unwrap());
+    let stream_name = match wire::read_frame(&mut reader, None, wire::DEFAULT_MAX_FRAME) {
+        Ok(Some(Frame::Hello { stream, .. })) => stream,
+        _ => return,
+    };
+    let def = frontend.stream(&stream_name).unwrap();
+    let fanout = def.entities.len() as u32;
+    let hello_ok = Frame::HelloOk {
+        version: wire::PROTOCOL_VERSION,
+        fanout,
+        fields: wire::schema_fields(&def.schema),
+    }
+    .encode(None)
+    .unwrap();
+    let (tx, rx) = std::sync::mpsc::sync_channel::<Vec<u8>>(1024);
+    let mut wsock = sock;
+    let writer = std::thread::spawn(move || {
+        for frame in rx {
+            if wsock.write_all(&frame).is_err() {
+                break;
+            }
+        }
+    });
+    tx.send(hello_ok).unwrap();
+    let mut fbuf = wire::FrameBuf::new();
+    let mut scratch = ViewScratch::new();
+    loop {
+        let kind = match wire::read_frame_raw(&mut reader, &mut fbuf, wire::DEFAULT_MAX_FRAME) {
+            Ok(Some(k)) => k,
+            Ok(None) | Err(_) => break, // clean EOF or torn-down socket
+        };
+        assert_eq!(kind, wire::KIND_INGEST_BATCH_RAW, "bench clients speak v2");
+        let (seq, raws) = wire::decode_raw_batch(fbuf.body(), &def.schema, &mut scratch).unwrap();
+        let first = frontend.reserve_ingest_ids(raws.len() as u64);
+        let receipts = frontend
+            .ingest_batch_raw_reserved(&def.name, &raws, first)
+            .unwrap();
+        let ack = Frame::IngestAck {
+            seq,
+            first_ingest_id: first,
+            count: receipts.len() as u32,
+            fanout,
+        }
+        .encode(None)
+        .unwrap();
+        if tx.send(ack).is_err() {
+            break;
+        }
+    }
+    drop(tx);
+    writer.join().unwrap();
+}
+
+/// Drive `conns` pipelined clients against `addr`, each sending
+/// `batches` batches of `CONN_BATCH` events with `CONN_PIPELINE`
+/// batches in flight; returns a series with the merged ingest→ack RTT
+/// histogram and aggregate events/sec (total events over the slowest
+/// client's wall time, all clients released by one barrier).
+fn conn_scale_series(label: &str, addr: &str, conns: usize, batches: usize) -> Series {
+    let barrier = Arc::new(Barrier::new(conns));
+    let joins: Vec<JoinHandle<(Duration, Histogram)>> = (0..conns)
+        .map(|c| {
+            let addr = addr.to_string();
+            let barrier = barrier.clone();
+            std::thread::spawn(move || {
+                // connect with retry: with a thousand peers racing one
+                // accept loop, a connect can be refused transiently
+                let deadline = Instant::now() + Duration::from_secs(30);
+                let mut client = loop {
+                    match NetClient::connect(&addr, "payments") {
+                        Ok(c) => break c,
+                        Err(e) => {
+                            if Instant::now() > deadline {
+                                panic!("connect {addr}: {e}");
+                            }
+                            std::thread::sleep(Duration::from_millis(10));
+                        }
+                    }
+                };
+                let evs: Vec<Event> = (0..CONN_BATCH)
+                    .map(|i| {
+                        let k = c * CONN_BATCH + i;
+                        Event::new(
+                            1_600_000_000_000i64 + k as i64,
+                            vec![
+                                Value::Str(format!("c{}", k % 1000)),
+                                Value::Str(format!("m{}", k % 97)),
+                                Value::F64(k as f64 / 7.0),
+                                Value::Bool(false),
+                            ],
+                        )
+                    })
+                    .collect();
+                let mut hist = Histogram::new();
+                let mut sink: Vec<ReplyMsg> = Vec::new();
+                let mut inflight: VecDeque<Instant> = VecDeque::new();
+                barrier.wait();
+                let t0 = Instant::now();
+                for b in 0..batches {
+                    if b >= CONN_PIPELINE {
+                        client.recv_ack(Duration::from_secs(120)).unwrap();
+                        hist.record(inflight.pop_front().unwrap().elapsed().as_nanos() as u64);
+                    }
+                    inflight.push_back(Instant::now());
+                    client.send_batch(evs.clone()).unwrap();
+                    // replies ride the same socket; keep the buffers small
+                    client.drain_replies(&mut sink);
+                    sink.clear();
+                }
+                while let Some(sent) = inflight.pop_front() {
+                    client.recv_ack(Duration::from_secs(120)).unwrap();
+                    hist.record(sent.elapsed().as_nanos() as u64);
+                }
+                client.drain_replies(&mut sink);
+                (t0.elapsed(), hist)
+            })
+        })
+        .collect();
+    let mut hist = Histogram::new();
+    let mut slowest = Duration::ZERO;
+    for j in joins {
+        let (elapsed, h) = j.join().unwrap();
+        slowest = slowest.max(elapsed);
+        hist.merge(&h);
+    }
+    let total_events = (conns * batches * CONN_BATCH) as u64;
+    let mut s = Series::new(label);
+    s.hist = hist;
+    s.throughput_eps = total_events as f64 / slowest.as_secs_f64();
+    s.note("conns", conns);
+    s.note("events", total_events);
+    s
+}
+
+/// Returns the four series plus the 16-connection throughput ratio and
+/// emits `BENCH_conn_scale.json`. Both servers sit on identical engines
+/// (in-memory broker, same stream); only the front door differs.
+fn conn_scale(opts: &BenchOpts) -> (Vec<Series>, f64) {
+    let fd_limit = raise_nofile_limit();
+    // big-fleet sizes: the event loop is exercised at connection counts
+    // the baseline cannot reach (2 threads per connection), so the
+    // baseline's large series runs at its own viable max
+    let (mut el_big, mut bl_big, batches16, batches_big) = if opts.quick {
+        (128usize, 64usize, 32usize, 8usize)
+    } else {
+        (1024usize, 256usize, 400usize, 16usize)
+    };
+    // both socket ends of every connection live in this process
+    let fd_cap = ((fd_limit.saturating_sub(128)) / 2).max(16) as usize;
+    if el_big > fd_cap || bl_big > fd_cap {
+        el_big = el_big.min(fd_cap);
+        bl_big = bl_big.min(fd_cap);
+        println!(
+            "conn_scale: fd soft limit {fd_limit} caps the big series at \
+             {el_big} connections"
+        );
+    }
+
+    // event-loop server: a real listening node
+    let tmp_el = TempDir::new("conn_scale_el");
+    let broker = Broker::open(BrokerConfig::in_memory()).unwrap();
+    let cfg = EngineConfig {
+        processor_units: 1,
+        partitions_per_topic: 2,
+        ingest_batch: 256,
+        listen_addr: Some("127.0.0.1:0".to_string()),
+        ..EngineConfig::new(tmp_el.path().to_path_buf())
+    };
+    let el_node = Node::start("conn-el", cfg, broker).unwrap();
+    el_node.register_stream(stream_def()).unwrap();
+    let el_addr = el_node.net_addr().expect("listening").to_string();
+    let el16 = conn_scale_series("eventloop(conns=16)", &el_addr, 16, batches16);
+    let el_many = conn_scale_series(
+        &format!("eventloop(conns={el_big})"),
+        &el_addr,
+        el_big,
+        batches_big,
+    );
+    el_node.shutdown(true);
+
+    // baseline: the same engine behind a blocking thread-per-conn front
+    // door (the node itself does not listen)
+    let tmp_bl = TempDir::new("conn_scale_bl");
+    let bl_node = start_node(&tmp_bl, 256);
+    let baseline = ThreadPerConnServer::start(bl_node.frontend().clone());
+    let bl16 = conn_scale_series("thread-per-conn(conns=16)", &baseline.addr, 16, batches16);
+    let bl_many = conn_scale_series(
+        &format!("thread-per-conn(conns={bl_big})"),
+        &baseline.addr,
+        bl_big,
+        batches_big,
+    );
+    baseline.stop();
+    bl_node.shutdown(true);
+
+    let ratio16 = el16.throughput_eps / bl16.throughput_eps;
+    let series = vec![el16, el_many, bl16, bl_many];
+    let json = Json::obj([
+        ("bench", Json::Str("conn_scale".into())),
+        ("batch", Json::Int(CONN_BATCH as i64)),
+        ("pipeline", Json::Int(CONN_PIPELINE as i64)),
+        ("fd_limit", Json::Int(fd_limit as i64)),
+        (
+            "series",
+            Json::Arr(
+                series
+                    .iter()
+                    .map(|s| {
+                        Json::obj([
+                            ("label", Json::Str(s.label.clone())),
+                            ("throughput_eps", Json::Float(s.throughput_eps)),
+                            ("p50_ms", Json::Float(s.hist.quantile(0.50) as f64 / 1e6)),
+                            ("p99_ms", Json::Float(s.hist.quantile(0.99) as f64 / 1e6)),
+                        ])
+                    })
+                    .collect(),
+            ),
+        ),
+        ("ratio_conns16", Json::Float(ratio16)),
+        ("target", Json::Float(0.9)),
+    ]);
+    std::fs::write("BENCH_conn_scale.json", format!("{json}\n"))
+        .expect("write BENCH_conn_scale.json");
+    (series, ratio16)
+}
+
 fn main() {
     railgun::util::logging::init();
     let opts = BenchOpts::from_args();
     let hotpath_only = std::env::args().any(|a| a == "--hotpath-only");
     let ingest_only = std::env::args().any(|a| a == "--ingest-only");
     let net_ingest_only = std::env::args().any(|a| a == "--net-ingest-only");
-    let none_only = !hotpath_only && !ingest_only && !net_ingest_only;
+    let conn_scale_only = std::env::args().any(|a| a == "--conn-scale-only");
+    let none_only = !hotpath_only && !ingest_only && !net_ingest_only && !conn_scale_only;
 
     if none_only {
         let n = opts.scale(30_000);
@@ -884,6 +1236,29 @@ fn main() {
                  baseline (got {speedup:.2}x)"
             );
             println!("shape check passed: net ingest ≥ 1.2x decode/re-encode baseline");
+        }
+    }
+
+    if none_only || conn_scale_only {
+        let (series, ratio16) = conn_scale(&opts);
+        print_table(
+            "Connection scale — event-loop server vs thread-per-connection baseline (ingest→ack RTT)",
+            &series,
+        );
+        print_csv("conn_scale", &series);
+        println!(
+            "\nevent-loop vs thread-per-conn at 16 connections: {ratio16:.2}x \
+             (target ≥ 0.9x) — BENCH_conn_scale.json written"
+        );
+        if opts.quick {
+            println!("quick mode: parity gate reported, not enforced");
+        } else {
+            assert!(
+                ratio16 >= 0.9,
+                "the event-loop server must hold ≥ 0.9x the thread-per-connection \
+                 throughput at 16 connections (got {ratio16:.2}x)"
+            );
+            println!("shape check passed: event loop ≥ 0.9x thread-per-conn at 16 connections");
         }
     }
 }

@@ -62,6 +62,10 @@ pub struct EngineConfig {
     /// Set TCP_NODELAY on accepted connections (latency over batching;
     /// the protocol batches explicitly, so the default is on).
     pub net_nodelay: bool,
+    /// Event-loop worker threads for the net server (each owns an epoll
+    /// instance and a slice of the connections). `0` ⇒ one per
+    /// available core.
+    pub net_event_workers: usize,
 }
 
 impl EngineConfig {
@@ -85,6 +89,7 @@ impl EngineConfig {
             listen_addr: None,
             net_max_frame_bytes: 8 << 20,
             net_nodelay: true,
+            net_event_workers: 0,
         }
     }
 
@@ -98,6 +103,7 @@ impl EngineConfig {
             checkpoint_every: 100,
             poll_timeout_ms: 5,
             reply_partitions: 2,
+            net_event_workers: 2,
             ..EngineConfig::new(data_dir)
         }
     }
@@ -142,6 +148,17 @@ impl EngineConfig {
         cfg.reply_flush_events = get_usize("reply_flush_events", cfg.reply_flush_events)?;
         cfg.reply_partitions = get_usize("reply_partitions", cfg.reply_partitions as usize)? as u32;
         cfg.net_max_frame_bytes = get_usize("net_max_frame_bytes", cfg.net_max_frame_bytes)?;
+        // 0 is meaningful here (= one worker per core), so this knob
+        // can't ride the positive-only helper
+        if let Some(j) = obj.get("net_event_workers") {
+            cfg.net_event_workers = j
+                .as_i64()
+                .filter(|v| *v >= 0)
+                .map(|v| v as usize)
+                .ok_or_else(|| {
+                    Error::invalid("config: 'net_event_workers' must be a non-negative integer")
+                })?;
+        }
         if let Some(j) = obj.get("listen_addr") {
             cfg.listen_addr = match j {
                 Json::Null => None,
@@ -492,6 +509,21 @@ mod tests {
         assert_eq!(cfg.reply_partitions, 8);
         assert_eq!(cfg.net_max_frame_bytes, 1 << 20);
         assert!(!cfg.net_nodelay);
+        assert_eq!(cfg.net_event_workers, 0, "default: one worker per core");
+        let cfg = EngineConfig::from_json(
+            &Json::parse(r#"{"data_dir": "/tmp/x", "net_event_workers": 0}"#).unwrap(),
+        )
+        .unwrap();
+        assert_eq!(cfg.net_event_workers, 0, "explicit 0 (auto) accepted");
+        let cfg = EngineConfig::from_json(
+            &Json::parse(r#"{"data_dir": "/tmp/x", "net_event_workers": 3}"#).unwrap(),
+        )
+        .unwrap();
+        assert_eq!(cfg.net_event_workers, 3);
+        assert!(EngineConfig::from_json(
+            &Json::parse(r#"{"data_dir": "/tmp/x", "net_event_workers": -1}"#).unwrap()
+        )
+        .is_err());
         let cfg = EngineConfig::from_json(
             &Json::parse(r#"{"data_dir": "/tmp/x", "listen_addr": null}"#).unwrap(),
         )

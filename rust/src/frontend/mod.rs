@@ -308,14 +308,13 @@ impl ReplyMsg {
 }
 
 /// One (entity, partition) replica of a raw-ingested event, pointing at
-/// the batch's shared payload vec and batch-wide key buffer — replicas
+/// the batch's shared payload vec and interned-key table — replicas
 /// carry no owned bytes of their own.
 struct Replica {
     /// Index into the batch's events/payloads.
     event: u32,
-    /// Key slice in the batch-wide key buffer.
-    key_start: u32,
-    key_len: u32,
+    /// Index into the batch's interned key table (`key_arcs`).
+    key: u32,
 }
 
 /// Receipt for an ingested event.
@@ -508,8 +507,9 @@ impl FrontEnd {
     /// identical to the owned decoder's), the ingest id and timestamp
     /// varints are spliced in front of them to form the envelope
     /// payload, and entity keys are read through a borrowed
-    /// [`EventView`] into one batch-wide key buffer — no owned `Event`,
-    /// `Vec<Value>` or `String` is materialized anywhere.
+    /// [`EventView`] and interned into per-batch shared `Arc<[u8]>`s —
+    /// no owned `Event`, `Vec<Value>` or `String` is materialized
+    /// anywhere, and a repeated key allocates once per batch.
     ///
     /// Output is byte-for-byte identical to the owned path for the same
     /// events: envelope payloads, record keys, partition assignment and
@@ -554,6 +554,52 @@ impl FrontEnd {
                 )));
             }
         }
+        self.route_raw_batch(&def, events, first_id, &offsets)
+    }
+
+    /// [`FrontEnd::ingest_batch_raw_reserved`] for a caller that has
+    /// **already validated** the batch and holds the scan's offset table
+    /// — the net server's v2 path, where the wire decode's
+    /// `decode_raw_batch_offsets` walk is the validation. The caller's
+    /// contract: `offsets` is one schema-arity run per event, each
+    /// relative to that event's value slice, produced by a successful
+    /// [`codec::scan_values`] over exactly those bytes. This closes the
+    /// v2 double-scan: each payload is walked once between socket and
+    /// mlog.
+    pub(crate) fn ingest_batch_raw_prevalidated(
+        &self,
+        stream: &str,
+        events: &[RawEvent<'_>],
+        first_id: u64,
+        offsets: &[u32],
+    ) -> Result<Vec<IngestReceipt>> {
+        let def = self.stream(stream)?;
+        if events.is_empty() {
+            return Ok(Vec::new());
+        }
+        if offsets.len() != events.len() * def.schema.len() {
+            return Err(Error::internal(format!(
+                "prevalidated ingest: offset table holds {} entries, expected {}",
+                offsets.len(),
+                events.len() * def.schema.len()
+            )));
+        }
+        self.route_raw_batch(&def, events, first_id, offsets)
+    }
+
+    /// The shared routing tail of every ingest path: splice envelope
+    /// payloads, read entity keys through borrowed views (the caller's
+    /// validated offset table), intern the keys, group replicas by
+    /// (entity, partition) and publish. Callers guarantee `offsets` is a
+    /// valid scan of `events` against `def.schema`.
+    fn route_raw_batch(
+        &self,
+        def: &StreamDef,
+        events: &[RawEvent<'_>],
+        first_id: u64,
+        offsets: &[u32],
+    ) -> Result<Vec<IngestReceipt>> {
+        let arity = def.schema.len();
         let fanout = def.entities.len() as u32;
         let entity_idxs: Vec<usize> = def
             .entities
@@ -571,12 +617,16 @@ impl FrontEnd {
             .collect::<Result<_>>()?;
         // build every replica into one flat vec, then group by
         // (entity, partition) with a stable sort — no per-batch hash map,
-        // no per-group vec; through build and sort, keys live as
-        // (start, len) slices of one batch-wide buffer (an exact-size
-        // owned key is materialized only at producer handoff, where the
-        // mlog record requires it), and payloads are spliced once per
-        // event and shared across its replicas
-        let mut key_buf: Vec<u8> = Vec::with_capacity(events.len() * entity_idxs.len() * 12);
+        // no per-group vec. Keys are **interned per batch**: each
+        // distinct key's bytes become one shared `Arc<[u8]>` (dedup'd by
+        // the routing hash we compute anyway, byte-compared on
+        // collision), so a hot key appearing thousands of times in a
+        // batch allocates once and the producer handoff is an Arc clone
+        // — no per-replica key allocation anywhere. Payloads are spliced
+        // once per event and shared across its replicas the same way.
+        let mut key_buf: Vec<u8> = Vec::with_capacity(32);
+        let mut key_arcs: Vec<Payload> = Vec::new();
+        let mut interner: FxHashMap<u64, Vec<u32>> = FxHashMap::default();
         let mut payloads: Vec<Payload> = Vec::with_capacity(events.len());
         let mut replicas: Vec<((usize, u32), Replica)> =
             Vec::with_capacity(events.len() * entity_idxs.len());
@@ -591,18 +641,29 @@ impl FrontEnd {
                 &def.schema,
             );
             for (e_idx, &field_idx) in entity_idxs.iter().enumerate() {
-                let key_start = key_buf.len();
+                key_buf.clear();
                 view.value_at(field_idx).key_bytes(&mut key_buf);
-                let partition = hash::partition_for(
-                    hash::hash64(&key_buf[key_start..]),
-                    partition_counts[e_idx],
-                );
+                let h = hash::hash64(&key_buf);
+                let partition = hash::partition_for(h, partition_counts[e_idx]);
+                let candidates = interner.entry(h).or_default();
+                let key = match candidates
+                    .iter()
+                    .copied()
+                    .find(|&c| key_arcs[c as usize][..] == key_buf[..])
+                {
+                    Some(c) => c,
+                    None => {
+                        let idx = key_arcs.len() as u32;
+                        key_arcs.push(key_buf.as_slice().into());
+                        candidates.push(idx);
+                        idx
+                    }
+                };
                 replicas.push((
                     (e_idx, partition),
                     Replica {
                         event: i as u32,
-                        key_start: key_start as u32,
-                        key_len: (key_buf.len() - key_start) as u32,
+                        key,
                     },
                 ));
             }
@@ -616,7 +677,7 @@ impl FrontEnd {
         replicas.sort_by_key(|(k, _)| *k);
         let entry_of = |r: &Replica| BatchEntry {
             timestamp: events[r.event as usize].timestamp,
-            key: key_buf[r.key_start as usize..(r.key_start + r.key_len) as usize].to_vec(),
+            key: key_arcs[r.key as usize].clone(),
             payload: payloads[r.event as usize].clone(),
         };
         while let Some(key) = replicas.last().map(|(k, _)| *k) {

@@ -35,18 +35,26 @@
 //! [`net`] turns the node into an actually-distributed server: a
 //! length-prefixed, CRC-checked binary TCP protocol (versioned frames
 //! over the same varint event/reply codecs the engine uses internally),
-//! a multi-threaded `std::net` server, and a blocking, pipelining
-//! client. Protocol v2 carries ingest batches as **pre-encoded value
-//! bytes**: the client encodes each event once, the server validates
-//! the slices in place and forwards them to
-//! [`frontend::FrontEnd::ingest_batch_raw`] — the bytes a client
-//! encodes are the bytes the reservoir stores, with no owned event
-//! anywhere in between. Replies flow back per connection: the reply
-//! topic is **sharded** ([`config::EngineConfig::reply_partitions`]),
-//! task processors route each reply record by ingest id
-//! ([`frontend::reply_partition_for`]), and the server runs one reply
-//! pump per shard, each routing its messages to the connection that
-//! ingested them. The paper-central numbers — end-to-end ingest→reply
+//! an **event-loop** server, and a blocking, pipelining client. The
+//! server runs N event-loop workers (default one per core, see
+//! [`config::EngineConfig::net_event_workers`]), each driving an epoll
+//! instance ([`net::poll`], raw syscall FFI — no async runtime) over a
+//! disjoint slice of nonblocking connections, so connection count is
+//! decoupled from thread count. Protocol v2 carries ingest batches as
+//! **pre-encoded value bytes**: the client encodes each event once, the
+//! server's wire decode validates the slices in place — keeping the
+//! scan's offset table — and forwards both to the front-end's
+//! prevalidated ingest entry, so each payload is walked exactly once
+//! between socket and mlog; the bytes a client encodes are the bytes
+//! the reservoir stores, with no owned event anywhere in between.
+//! Replies flow back per connection: the reply topic is **sharded**
+//! ([`config::EngineConfig::reply_partitions`]), task processors route
+//! each reply record by ingest id ([`frontend::reply_partition_for`]),
+//! and the server runs one reply pump per shard, each appending encoded
+//! reply frames to the owning connection's bounded outbound queue and
+//! waking its worker — pumps never touch sockets, workers flush with
+//! vectored writes under a per-connection write budget, and a slow
+//! client backpressures only itself. The paper-central numbers — end-to-end ingest→reply
 //! latency percentiles under load — are measured from outside the
 //! engine by the [`net::bench`] harness (`railgun bench-client`),
 //! closed-loop by default or open-loop at a fixed arrival rate with

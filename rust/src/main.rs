@@ -2,11 +2,14 @@
 //!
 //! ```text
 //! railgun serve --config <engine.json> --stream <stream.json> [--listen <addr>]
+//!     [--net-workers N]
 //!     Start a node. Without --listen (or config listen_addr): read events
 //!     as JSON lines on stdin, write replies as JSON lines on stdout.
 //!     With --listen: serve the binary TCP ingest/reply protocol; prints
 //!     "LISTEN <addr>" (the resolved port for --listen 127.0.0.1:0) and
 //!     runs until stdin reaches EOF, then shuts down cleanly.
+//!     --net-workers overrides the event-loop worker count (0 = one per
+//!     core).
 //! railgun bench-client --addr <addr> --stream <name> [--events N]
 //!     [--batch N] [--pipeline N] [--cardinality N] [--timeout-secs N]
 //!     [--rate EPS]
@@ -45,6 +48,7 @@ fn main() {
             eprintln!(
                 "usage: railgun <serve|bench-client|check-artifacts|version>\n\
                  \n  serve --config <engine.json> --stream <stream.json> [--listen <addr>]\n\
+                 \n      [--net-workers N]   event-loop workers (0 = one per core)\n\
                  \n  bench-client --addr <host:port> --stream <name> [--events N]\n\
                  \n      [--batch N] [--pipeline N] [--cardinality N] [--timeout-secs N]\n\
                  \n      [--rate EPS]   open-loop at EPS ev/s (CO-corrected latencies)\n\
@@ -94,6 +98,8 @@ fn cmd_serve(args: &[String]) -> Result<()> {
     if let Some(addr) = flag_value(args, "--listen") {
         cfg.listen_addr = Some(addr.to_string());
     }
+    cfg.net_event_workers =
+        flag_u64(args, "--net-workers", cfg.net_event_workers as u64)? as usize;
     let stream_text = std::fs::read_to_string(stream_path)?;
     let def = StreamDef::from_json(&Json::parse(&stream_text)?)?;
     let stream_name = def.name.clone();

@@ -12,15 +12,16 @@ use std::time::Duration;
 pub type PartitionId = u32;
 
 /// One record-to-be, pre-assembled by a producer for a batched append.
-/// Offsets are assigned by the partition at append time. The key moves
-/// into the record's shared `Arc<[u8]>` backing, so consumers cloning
-/// the record out of the tail never copy it.
+/// Offsets are assigned by the partition at append time. The key is
+/// already the record's shared `Arc<[u8]>` backing — a producer holding
+/// interned keys hands them over without copying, and consumers cloning
+/// the record out of the tail never copy either.
 #[derive(Debug, Clone)]
 pub struct BatchEntry {
     /// Producer-supplied timestamp (epoch ms).
     pub timestamp: i64,
-    /// Routing key bytes (may be empty).
-    pub key: Vec<u8>,
+    /// Routing key bytes (may be empty), shareable across entries.
+    pub key: Payload,
     /// Payload bytes (shareable across entity-topic replicas).
     pub payload: Payload,
 }
@@ -154,7 +155,7 @@ impl Partition {
     ) -> Result<u64> {
         self.append_batch(std::iter::once(BatchEntry {
             timestamp,
-            key,
+            key: key.into(),
             payload: payload.into(),
         }))
     }
@@ -195,12 +196,12 @@ impl Partition {
                 offset: base + total,
                 timestamp: entry.timestamp,
                 // key-less records (every reply record) share one static
-                // empty Arc; keyed records pay one Vec→Arc move per
-                // append, repaid by allocation-free clones on every poll
+                // empty Arc; keyed entries carry their Arc straight into
+                // the record — allocation-free here and on every poll
                 key: if entry.key.is_empty() {
                     segment::empty_bytes()
                 } else {
-                    entry.key.into()
+                    entry.key
                 },
                 payload: entry.payload,
             };
@@ -423,7 +424,7 @@ mod tests {
         let entries: Vec<BatchEntry> = (0..10u64)
             .map(|i| BatchEntry {
                 timestamp: i as i64,
-                key: vec![],
+                key: vec![].into(),
                 payload: vec![i as u8].into(),
             })
             .collect();
@@ -444,7 +445,7 @@ mod tests {
         let entries: Vec<BatchEntry> = (0..100u64)
             .map(|i| BatchEntry {
                 timestamp: i as i64,
-                key: vec![],
+                key: vec![].into(),
                 payload: Payload::from(&[][..]),
             })
             .collect();
@@ -463,7 +464,7 @@ mod tests {
             let entries: Vec<BatchEntry> = (0..30u64)
                 .map(|i| BatchEntry {
                     timestamp: i as i64,
-                    key: vec![],
+                    key: vec![].into(),
                     payload: vec![i as u8].into(),
                 })
                 .collect();

@@ -10,11 +10,18 @@
 //!   CRC'd, size-capped. Protocol v2's raw ingest body carries
 //!   pre-encoded `(timestamp, value_bytes)` pairs, so the bytes a
 //!   client encodes are the bytes the reservoir stores;
-//! * [`server`] — a multi-threaded `std::net` TCP server forwarding raw
-//!   batches to [`crate::frontend::FrontEnd::ingest_batch_raw`] (owned
-//!   v1 batches to [`crate::frontend::FrontEnd::ingest_batch`]) and
-//!   streaming each connection's replies back with one pump thread per
-//!   reply-topic shard, routing on ingest id;
+//! * [`poll`] — a minimal epoll/eventfd wrapper (raw syscall FFI, no
+//!   external crates): readiness polling + cross-thread wakeups for the
+//!   server's event loops;
+//! * [`server`] — an event-loop TCP server: N worker threads (default
+//!   one per core) each drive an epoll instance over a disjoint slice
+//!   of nonblocking connections, parsing frames in place and forwarding
+//!   raw v2 batches — value slices *and* scan offsets — to the
+//!   front-end's prevalidated ingest entry (owned v1 batches to
+//!   [`crate::frontend::FrontEnd::ingest_batch`]'s reserved variant).
+//!   One pump thread per reply-topic shard routes replies on ingest id
+//!   into per-connection outbound queues flushed by the owning worker
+//!   with vectored writes — a slow client backpressures only itself;
 //! * [`client`] — a blocking client with batched pipelining that
 //!   encodes each event once ([`client::NetClient::send_batch_raw`] for
 //!   callers already holding encoded bytes);
@@ -29,6 +36,7 @@
 
 pub mod bench;
 pub mod client;
+pub mod poll;
 pub mod server;
 pub mod wire;
 

@@ -1,0 +1,370 @@
+//! Tiny epoll + eventfd wrapper for the net server's readiness event loop.
+//!
+//! The crate is dependency-light by design (no tokio/mio/libc), so the two
+//! syscall families the event loop needs — `epoll_*` and `eventfd` — are
+//! declared here as a minimal FFI shim. Linux-only, like the CI matrix.
+//!
+//! Two types:
+//!
+//! - [`Poller`]: an `epoll` instance. Register file descriptors with a
+//!   caller-chosen `u64` token and an [`Interest`] (read/write), then
+//!   [`Poller::wait`] for readiness events. Level-triggered: an event
+//!   repeats every wait until the fd is drained (read) or the interest is
+//!   dropped (write), which keeps the consumer logic simple — no starved
+//!   wakeup can be "lost".
+//! - [`WakeFd`]: an `eventfd` used to interrupt a blocked `wait` from
+//!   another thread (reply pumps and the acceptor wake workers through
+//!   these). [`WakeFd::wake`] is async-signal-safe cheap (one 8-byte
+//!   write); [`WakeFd::drain`] resets it from the owning loop.
+
+use crate::error::Result;
+use std::io;
+use std::time::Duration;
+
+/// Raw syscall surface. Kept private to the module; everything public goes
+/// through the safe wrappers below.
+mod sys {
+    pub const EPOLL_CLOEXEC: i32 = 0o2000000;
+
+    pub const EPOLL_CTL_ADD: i32 = 1;
+    pub const EPOLL_CTL_DEL: i32 = 2;
+    pub const EPOLL_CTL_MOD: i32 = 3;
+
+    pub const EPOLLIN: u32 = 0x1;
+    pub const EPOLLOUT: u32 = 0x4;
+    pub const EPOLLERR: u32 = 0x8;
+    pub const EPOLLHUP: u32 = 0x10;
+    pub const EPOLLRDHUP: u32 = 0x2000;
+
+    pub const EFD_CLOEXEC: i32 = 0o2000000;
+    pub const EFD_NONBLOCK: i32 = 0o4000;
+
+    /// `struct epoll_event` is packed on x86-64 (the kernel ABI predates
+    /// alignment-aware layouts); other architectures use natural layout.
+    #[repr(C)]
+    #[cfg_attr(target_arch = "x86_64", repr(packed))]
+    #[derive(Clone, Copy)]
+    pub struct EpollEvent {
+        pub events: u32,
+        pub data: u64,
+    }
+
+    extern "C" {
+        pub fn epoll_create1(flags: i32) -> i32;
+        pub fn epoll_ctl(epfd: i32, op: i32, fd: i32, event: *mut EpollEvent) -> i32;
+        pub fn epoll_wait(epfd: i32, events: *mut EpollEvent, maxevents: i32, timeout: i32) -> i32;
+        pub fn eventfd(initval: u32, flags: i32) -> i32;
+        pub fn close(fd: i32) -> i32;
+        pub fn read(fd: i32, buf: *mut u8, count: usize) -> isize;
+        pub fn write(fd: i32, buf: *const u8, count: usize) -> isize;
+    }
+}
+
+fn last_err() -> io::Error {
+    io::Error::last_os_error()
+}
+
+/// Which readiness conditions a registration subscribes to.
+///
+/// Error/hangup conditions (`EPOLLERR`/`EPOLLHUP`) are always reported by
+/// the kernel regardless of interest; they surface as
+/// [`PollEvent::readable`] + [`PollEvent::closed`] so consumers notice on
+/// their next read attempt.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Interest {
+    /// Subscribe to read readiness (`EPOLLIN` + `EPOLLRDHUP`).
+    pub read: bool,
+    /// Subscribe to write readiness (`EPOLLOUT`).
+    pub write: bool,
+}
+
+impl Interest {
+    /// Read readiness only.
+    pub const READ: Interest = Interest { read: true, write: false };
+    /// Write readiness only.
+    pub const WRITE: Interest = Interest { read: false, write: true };
+    /// Both read and write readiness.
+    pub const BOTH: Interest = Interest { read: true, write: true };
+    /// Neither (registration kept, no wakeups except errors/hangup).
+    pub const NONE: Interest = Interest { read: false, write: false };
+
+    fn mask(self) -> u32 {
+        let mut m = 0;
+        if self.read {
+            m |= sys::EPOLLIN | sys::EPOLLRDHUP;
+        }
+        if self.write {
+            m |= sys::EPOLLOUT;
+        }
+        m
+    }
+}
+
+/// One readiness event returned by [`Poller::wait`].
+#[derive(Debug, Clone, Copy)]
+pub struct PollEvent {
+    /// The token the fd was registered with.
+    pub token: u64,
+    /// The fd is readable (or has an error/hangup pending — reading
+    /// surfaces it).
+    pub readable: bool,
+    /// The fd is writable.
+    pub writable: bool,
+    /// The peer closed or the fd errored (`EPOLLERR`/`EPOLLHUP`/
+    /// `EPOLLRDHUP`). Still read until EOF to drain buffered bytes.
+    pub closed: bool,
+}
+
+/// A level-triggered `epoll` instance.
+///
+/// Not `Clone`: exactly one thread owns a `Poller` and calls `wait` on it.
+/// Registration/deregistration from the owning thread only (the server
+/// routes cross-thread requests through a [`WakeFd`] + command queue).
+#[derive(Debug)]
+pub struct Poller {
+    epfd: i32,
+    buf: Vec<sys::EpollEvent>,
+}
+
+impl Poller {
+    /// Create a new epoll instance (close-on-exec).
+    pub fn new() -> Result<Poller> {
+        let epfd = unsafe { sys::epoll_create1(sys::EPOLL_CLOEXEC) };
+        if epfd < 0 {
+            return Err(last_err().into());
+        }
+        Ok(Poller { epfd, buf: vec![sys::EpollEvent { events: 0, data: 0 }; 256] })
+    }
+
+    fn ctl(&self, op: i32, fd: i32, token: u64, interest: Interest) -> Result<()> {
+        let mut ev = sys::EpollEvent { events: interest.mask(), data: token };
+        let rc = unsafe { sys::epoll_ctl(self.epfd, op, fd, &mut ev) };
+        if rc < 0 {
+            return Err(last_err().into());
+        }
+        Ok(())
+    }
+
+    /// Register `fd` under `token` with the given interest.
+    pub fn register(&self, fd: i32, token: u64, interest: Interest) -> Result<()> {
+        self.ctl(sys::EPOLL_CTL_ADD, fd, token, interest)
+    }
+
+    /// Change the interest (and/or token) of an already-registered fd.
+    pub fn modify(&self, fd: i32, token: u64, interest: Interest) -> Result<()> {
+        self.ctl(sys::EPOLL_CTL_MOD, fd, token, interest)
+    }
+
+    /// Remove `fd` from the interest set. Harmless if the fd was already
+    /// closed (the kernel auto-deregisters closed fds).
+    pub fn deregister(&self, fd: i32) -> Result<()> {
+        let mut ev = sys::EpollEvent { events: 0, data: 0 };
+        let rc = unsafe { sys::epoll_ctl(self.epfd, sys::EPOLL_CTL_DEL, fd, &mut ev) };
+        if rc < 0 {
+            let e = last_err();
+            // ENOENT/EBADF after a racing close is not an error worth
+            // surfacing to the loop.
+            if e.raw_os_error() != Some(2) && e.raw_os_error() != Some(9) {
+                return Err(e.into());
+            }
+        }
+        Ok(())
+    }
+
+    /// Block until at least one registered fd is ready or `timeout`
+    /// elapses (`None` blocks indefinitely). Ready events are appended to
+    /// `out` (which is cleared first).
+    pub fn wait(&mut self, out: &mut Vec<PollEvent>, timeout: Option<Duration>) -> Result<()> {
+        out.clear();
+        let timeout_ms: i32 = match timeout {
+            None => -1,
+            Some(d) => d.as_millis().min(i32::MAX as u128) as i32,
+        };
+        let n = loop {
+            let n = unsafe {
+                sys::epoll_wait(self.epfd, self.buf.as_mut_ptr(), self.buf.len() as i32, timeout_ms)
+            };
+            if n >= 0 {
+                break n as usize;
+            }
+            let e = last_err();
+            if e.kind() == io::ErrorKind::Interrupted {
+                continue;
+            }
+            return Err(e.into());
+        };
+        for ev in &self.buf[..n] {
+            // Packed struct: copy fields by value, never by reference.
+            let events = ev.events;
+            let token = ev.data;
+            out.push(PollEvent {
+                token,
+                readable: events & (sys::EPOLLIN | sys::EPOLLERR | sys::EPOLLHUP | sys::EPOLLRDHUP)
+                    != 0,
+                writable: events & (sys::EPOLLOUT | sys::EPOLLERR | sys::EPOLLHUP) != 0,
+                closed: events & (sys::EPOLLERR | sys::EPOLLHUP | sys::EPOLLRDHUP) != 0,
+            });
+        }
+        if n == self.buf.len() {
+            // Saturated the event buffer: grow so a large connection count
+            // doesn't force extra wait() round-trips.
+            self.buf.resize(self.buf.len() * 2, sys::EpollEvent { events: 0, data: 0 });
+        }
+        Ok(())
+    }
+}
+
+impl Drop for Poller {
+    fn drop(&mut self) {
+        unsafe { sys::close(self.epfd) };
+    }
+}
+
+// The epoll fd is just an int; registration/wait safety is the owning
+// thread's concern (enforced by &mut on wait).
+unsafe impl Send for Poller {}
+
+/// An `eventfd`-backed wakeup handle.
+///
+/// Cloneable-by-reference across threads (`&WakeFd: Send + Sync`): any
+/// thread may [`wake`](WakeFd::wake); the loop that registered
+/// [`raw`](WakeFd::raw) in its poller calls [`drain`](WakeFd::drain) when
+/// the token fires.
+#[derive(Debug)]
+pub struct WakeFd {
+    fd: i32,
+}
+
+impl WakeFd {
+    /// Create a nonblocking close-on-exec eventfd.
+    pub fn new() -> Result<WakeFd> {
+        let fd = unsafe { sys::eventfd(0, sys::EFD_CLOEXEC | sys::EFD_NONBLOCK) };
+        if fd < 0 {
+            return Err(last_err().into());
+        }
+        Ok(WakeFd { fd })
+    }
+
+    /// The raw fd, for registering with a [`Poller`] (read interest).
+    pub fn raw(&self) -> i32 {
+        self.fd
+    }
+
+    /// Make the fd readable, waking any poller watching it. Idempotent
+    /// while pending: if the counter is already saturated (`WouldBlock`),
+    /// the wakeup is already queued and the call is a no-op.
+    pub fn wake(&self) {
+        let one: u64 = 1;
+        let buf = one.to_ne_bytes();
+        unsafe { sys::write(self.fd, buf.as_ptr(), buf.len()) };
+    }
+
+    /// Reset the counter so the next [`wake`](WakeFd::wake) triggers a
+    /// fresh readiness event. Returns `true` if at least one wake was
+    /// pending.
+    pub fn drain(&self) -> bool {
+        let mut buf = [0u8; 8];
+        let n = unsafe { sys::read(self.fd, buf.as_mut_ptr(), buf.len()) };
+        n == 8
+    }
+}
+
+impl Drop for WakeFd {
+    fn drop(&mut self) {
+        unsafe { sys::close(self.fd) };
+    }
+}
+
+unsafe impl Send for WakeFd {}
+unsafe impl Sync for WakeFd {}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::{Read, Write};
+    use std::net::{TcpListener, TcpStream};
+    use std::os::unix::io::AsRawFd;
+    use std::time::Instant;
+
+    #[test]
+    fn wakefd_wakes_and_drains() {
+        let mut poller = Poller::new().unwrap();
+        let wake = WakeFd::new().unwrap();
+        poller.register(wake.raw(), 7, Interest::READ).unwrap();
+
+        let mut events = Vec::new();
+        // Nothing pending: a short wait times out empty.
+        poller.wait(&mut events, Some(Duration::from_millis(10))).unwrap();
+        assert!(events.is_empty());
+
+        wake.wake();
+        wake.wake(); // coalesces with the first
+        poller.wait(&mut events, Some(Duration::from_secs(5))).unwrap();
+        assert_eq!(events.len(), 1);
+        assert_eq!(events[0].token, 7);
+        assert!(events[0].readable);
+
+        assert!(wake.drain());
+        assert!(!wake.drain()); // already reset
+        poller.wait(&mut events, Some(Duration::from_millis(10))).unwrap();
+        assert!(events.is_empty());
+    }
+
+    #[test]
+    fn wake_from_other_thread_interrupts_wait() {
+        let mut poller = Poller::new().unwrap();
+        let wake = std::sync::Arc::new(WakeFd::new().unwrap());
+        poller.register(wake.raw(), 1, Interest::READ).unwrap();
+
+        let w = wake.clone();
+        let t0 = Instant::now();
+        let j = std::thread::spawn(move || {
+            std::thread::sleep(Duration::from_millis(50));
+            w.wake();
+        });
+        let mut events = Vec::new();
+        poller.wait(&mut events, Some(Duration::from_secs(10))).unwrap();
+        j.join().unwrap();
+        assert_eq!(events.len(), 1);
+        assert!(t0.elapsed() < Duration::from_secs(5));
+    }
+
+    #[test]
+    fn tcp_read_and_write_readiness() {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let mut client = TcpStream::connect(addr).unwrap();
+        let (server, _) = listener.accept().unwrap();
+        server.set_nonblocking(true).unwrap();
+
+        let mut poller = Poller::new().unwrap();
+        poller.register(server.as_raw_fd(), 42, Interest::READ).unwrap();
+
+        let mut events = Vec::new();
+        poller.wait(&mut events, Some(Duration::from_millis(10))).unwrap();
+        assert!(events.is_empty(), "no data yet");
+
+        client.write_all(b"ping").unwrap();
+        poller.wait(&mut events, Some(Duration::from_secs(5))).unwrap();
+        assert_eq!(events.len(), 1);
+        assert_eq!(events[0].token, 42);
+        assert!(events[0].readable);
+        let mut buf = [0u8; 8];
+        let n = (&server).read(&mut buf).unwrap();
+        assert_eq!(&buf[..n], b"ping");
+
+        // Toggling in write interest reports writable immediately (socket
+        // buffer is empty).
+        poller.modify(server.as_raw_fd(), 42, Interest::BOTH).unwrap();
+        poller.wait(&mut events, Some(Duration::from_secs(5))).unwrap();
+        assert!(events.iter().any(|e| e.token == 42 && e.writable));
+
+        // Peer close surfaces as a readable/closed event.
+        poller.modify(server.as_raw_fd(), 42, Interest::READ).unwrap();
+        drop(client);
+        poller.wait(&mut events, Some(Duration::from_secs(5))).unwrap();
+        assert!(events.iter().any(|e| e.token == 42 && e.closed));
+
+        poller.deregister(server.as_raw_fd()).unwrap();
+    }
+}

@@ -1,29 +1,45 @@
-//! Multi-threaded TCP server fronting a node's [`FrontEnd`].
+//! Event-loop TCP server fronting a node's [`FrontEnd`].
 //!
+//! Connection I/O runs on a **readiness event loop** (epoll via
+//! [`crate::net::poll`]) instead of a pair of OS threads per connection —
+//! connection count is bounded by file descriptors, not by thread stacks.
 //! Threads:
 //!
-//! * **accept loop** — non-blocking accept + per-connection setup (and
-//!   reaping of finished connection threads);
-//! * **per-connection reader** — reads frames into a reusable
-//!   [`wire::FrameBuf`] and dispatches on kind. A v2 raw ingest batch is
-//!   decoded **borrowed** ([`wire::decode_raw_batch`]): the validated
-//!   value slices go straight to
-//!   [`FrontEnd::ingest_batch_raw_reserved`] — no owned `Event` is ever
-//!   materialized on the connection thread — while the v1 owned-event
-//!   body keeps working through [`FrontEnd::ingest_batch_reserved`].
-//!   Either way the reader **reserves** the ingest-id range
+//! * **accept loop** — one thread parked on its own poller (listener +
+//!   wakeup eventfd). Accepted sockets are made nonblocking and handed
+//!   round-robin to an event-loop worker;
+//! * **event-loop workers** — N threads (`EngineConfig::net_event_workers`,
+//!   `0` = one per core), each owning an epoll instance and a disjoint
+//!   slice of the connections. A worker does nonblocking budgeted reads
+//!   into a per-connection buffer, parses frames in place (the same
+//!   framing validation as [`wire::read_frame_raw`]), and dispatches
+//!   frame-at-a-time through the unchanged decode paths: a v2 raw ingest
+//!   batch is decoded **borrowed** ([`wire::decode_raw_batch_offsets`])
+//!   and its validated slices — *and* the scan's field offsets — go
+//!   straight to `FrontEnd::ingest_batch_raw_prevalidated`, so each
+//!   event's payload is walked **once** end to end; v1 owned-event bodies
+//!   keep working through [`FrontEnd::ingest_batch_reserved`]. Either way
+//!   the worker **reserves** the ingest-id range
 //!   ([`FrontEnd::reserve_ingest_ids`]) and registers it in the reply
-//!   route tables *before* publishing — so a reply can never race its
-//!   route registration — then acks;
-//! * **per-connection writer** — single owner of the socket's write half;
-//!   acks, errors and reply batches all funnel through its channel, so
-//!   frame writes never interleave;
+//!   route tables *before* publishing — a reply can never race its route
+//!   registration — then acks;
 //! * **reply pumps** — **one thread per reply-topic shard**, each owning
-//!   its partition directly (fixed assignment, starting at the live
-//!   end) and routing through **per-shard route tables** keyed by the
-//!   same `ingest_id % shards` the task processors publish with — so
-//!   pump threads never contend on each other's tables, and a
-//!   connection reader registering a batch takes each shard lock once.
+//!   its partition directly and routing through **per-shard route
+//!   tables** keyed by `ingest_id % shards`. Pumps never touch sockets:
+//!   a delivery is an encoded REPLY_BATCH frame appended to the owning
+//!   connection's outbound queue, followed by an eventfd wakeup of that
+//!   connection's worker (one wakeup per worker per routed batch).
+//!
+//! **Write path / backpressure.** Every outbound frame (HELLO_OK, acks,
+//! errors, reply batches) goes through the connection's outbound queue,
+//! flushed by its worker with bounded **vectored writes** — frame writes
+//! never interleave and one flush call drains many frames. A slow client
+//! backpressures **only itself**: when its queue passes a high-water
+//! mark the worker stops reading from it (resuming below a low-water
+//! mark), so its acks stop and a well-behaved pipelining client stalls;
+//! reply batches beyond a hard queue bound are dropped with a warning
+//! (the client sees a reply timeout), so a stalled client can never
+//! block a reply pump or starve sibling connections.
 //!
 //! Routing is exact, not broadcast: the reply topic is shared by every
 //! collector in the cluster, so a pump stashes replies for ingest ids
@@ -33,41 +49,61 @@
 //! never touch a live client's replies.
 //!
 //! A malformed frame (bad magic/CRC, oversized, truncated, undecodable
-//! body) poisons only its own connection: the reader answers with a fatal
+//! body) poisons only its own connection: the worker answers with a fatal
 //! ERR frame where possible and closes; the listener, the pumps and every
 //! other connection keep running. One exception is deliberate: a v2 raw
 //! ingest frame that passed its CRC but fails content validation is the
 //! client's data problem, not a protocol break — the server rejects
 //! **only that batch** (non-fatal ERR) and the connection keeps serving.
 
-use crate::config::EngineConfig;
+use crate::config::{EngineConfig, StreamDef};
 use crate::error::Result;
-use crate::event::ViewScratch;
 use crate::frontend::{reply_partition_for, FrontEnd, IngestReceipt, ReplyMsg, REPLY_TOPIC};
 use crate::mlog::BrokerRef;
+use crate::net::poll::{Interest, PollEvent, Poller, WakeFd};
 use crate::net::wire::{self, Frame, MIN_PROTOCOL_VERSION, PROTOCOL_VERSION};
 use crate::util::hash::FxHashMap;
-use std::io::Write;
-use std::net::{Shutdown, SocketAddr, TcpListener, TcpStream};
-use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
-use std::sync::mpsc::{Receiver, SyncSender, TryRecvError, TrySendError};
-use std::sync::{mpsc, Arc, Mutex};
+use byteorder::{ByteOrder, LittleEndian};
+use std::collections::VecDeque;
+use std::io::{IoSlice, Read, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::os::unix::io::AsRawFd;
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
 /// Stash entries survive this long while waiting for their ingest-id
-/// range to be registered (a reply races the reader's registration by
+/// range to be registered (a reply races the worker's registration by
 /// milliseconds at most; the slack is generous).
 const STASH_KEEP: Duration = Duration::from_secs(2);
 /// Hard cap on stashed reply messages **per shard table** (protects the
 /// server from reply traffic that belongs to other collectors entirely).
 const STASH_MAX_MSGS: usize = 100_000;
-/// Bound on each connection's writer queue. The reader's acks use a
-/// blocking send (per-connection backpressure: a client that stops
-/// reading stops being read from), while the reply pump uses try_send
-/// and drops the batch for that connection when the queue is full — a
-/// stalled client times out instead of growing server memory.
-const CONN_QUEUE_FRAMES: usize = 1024;
+
+/// Per-read-event budget: how many bytes a worker reads from one
+/// connection before giving its siblings a turn (epoll is
+/// level-triggered, so leftover data re-arms immediately).
+const READ_BUDGET: usize = 256 * 1024;
+/// Socket read chunk size.
+const READ_CHUNK: usize = 64 * 1024;
+/// Per-flush write budget: bytes one flush call may push to a socket
+/// before yielding (leftover queue keeps EPOLLOUT interest armed).
+const WRITE_BUDGET: usize = 256 * 1024;
+/// Max iovec entries per vectored write.
+const MAX_WRITE_SLICES: usize = 64;
+/// Outbound-queue high-water mark: above this the worker stops reading
+/// from the connection (its acks stall, so a pipelining client stops
+/// sending). Reading resumes below [`OUT_LOW_WATER`].
+const OUT_HIGH_WATER: usize = 1 << 20;
+/// Outbound-queue low-water mark for resuming reads.
+const OUT_LOW_WATER: usize = 256 * 1024;
+/// Hard bound on an outbound queue: reply batches pushed past this are
+/// dropped (with a warning) instead of growing server memory — a client
+/// that stopped reading sees a reply timeout, and only that client.
+const OUT_REPLY_MAX: usize = 4 << 20;
+/// Poller token reserved for the worker's wakeup eventfd.
+const WAKE_TOKEN: u64 = u64::MAX;
 
 /// Tuning for the TCP server (subset of [`EngineConfig`]).
 #[derive(Debug, Clone)]
@@ -76,6 +112,8 @@ pub struct NetOptions {
     pub max_frame_bytes: usize,
     /// Set TCP_NODELAY on accepted connections.
     pub nodelay: bool,
+    /// Event-loop worker threads (`0` = one per available core).
+    pub event_workers: usize,
 }
 
 impl Default for NetOptions {
@@ -83,6 +121,7 @@ impl Default for NetOptions {
         NetOptions {
             max_frame_bytes: wire::DEFAULT_MAX_FRAME,
             nodelay: true,
+            event_workers: 0,
         }
     }
 }
@@ -93,16 +132,21 @@ impl NetOptions {
         NetOptions {
             max_frame_bytes: cfg.net_max_frame_bytes,
             nodelay: cfg.net_nodelay,
+            event_workers: cfg.net_event_workers,
         }
     }
-}
 
-/// Messages funneled into a connection's writer thread.
-enum ConnMsg {
-    /// Write this frame.
-    Frame(Frame),
-    /// The reader is done: flush and exit.
-    Close,
+    /// Resolved worker count (`event_workers`, defaulting to the core
+    /// count when 0).
+    fn resolved_workers(&self) -> usize {
+        if self.event_workers > 0 {
+            self.event_workers
+        } else {
+            std::thread::available_parallelism()
+                .map(|n| n.get())
+                .unwrap_or(1)
+        }
+    }
 }
 
 struct Route {
@@ -181,36 +225,142 @@ impl RouteTable {
     }
 }
 
+/// Why an outbound push was refused.
+enum PushErr {
+    /// The queue is past its hard reply bound.
+    Full,
+    /// The connection is closed.
+    Closed,
+}
+
+#[derive(Default)]
+struct OutBuf {
+    /// Encoded frames awaiting the socket, oldest first.
+    queue: VecDeque<Vec<u8>>,
+    /// Total unsent bytes across the queue (minus `front_pos`).
+    bytes: usize,
+    /// Bytes of `queue[0]` already written (partial vectored write).
+    front_pos: usize,
+    /// Set when the connection is closed: pushes are refused.
+    closed: bool,
+}
+
+/// A connection's outbound frame queue — the only thing reply pumps (and
+/// the route tables' early-stash delivery) ever touch. The owning worker
+/// drains it with vectored writes.
+#[derive(Default)]
+struct OutQueue {
+    buf: Mutex<OutBuf>,
+}
+
+impl OutQueue {
+    /// Append a frame unconditionally (worker-originated frames: HELLO_OK,
+    /// acks, errors — bounded indirectly by the read pause). Returns false
+    /// if the connection is already closed.
+    fn push(&self, frame: Vec<u8>) -> bool {
+        let mut b = self.buf.lock().unwrap();
+        if b.closed {
+            return false;
+        }
+        b.bytes += frame.len();
+        b.queue.push_back(frame);
+        true
+    }
+
+    /// Append a reply frame, refusing past the hard bound — a pump must
+    /// never let one stalled client grow server memory.
+    fn push_reply(&self, frame: Vec<u8>) -> std::result::Result<(), PushErr> {
+        let mut b = self.buf.lock().unwrap();
+        if b.closed {
+            return Err(PushErr::Closed);
+        }
+        if b.bytes + frame.len() > OUT_REPLY_MAX {
+            return Err(PushErr::Full);
+        }
+        b.bytes += frame.len();
+        b.queue.push_back(frame);
+        Ok(())
+    }
+
+    /// Mark closed and drop queued frames.
+    fn close(&self) {
+        let mut b = self.buf.lock().unwrap();
+        b.closed = true;
+        b.queue.clear();
+        b.bytes = 0;
+        b.front_pos = 0;
+    }
+}
+
+/// What the accept loop / pumps know about a connection.
+#[derive(Clone)]
+struct ConnHandle {
+    out: Arc<OutQueue>,
+    /// Index of the event-loop worker that owns the connection.
+    worker: usize,
+}
+
+/// Commands routed to an event-loop worker through its inbox + wakeup.
+enum WorkerCmd {
+    /// Adopt a freshly accepted connection.
+    Conn {
+        id: u64,
+        stream: TcpStream,
+        out: Arc<OutQueue>,
+    },
+    /// A pump appended replies to this connection's queue: flush it.
+    Flush(u64),
+    /// Drop every connection and exit.
+    Shutdown,
+}
+
+/// A worker's cross-thread mailbox: command queue + eventfd wakeup.
+struct WorkerHandle {
+    wake: WakeFd,
+    inbox: Mutex<Vec<WorkerCmd>>,
+}
+
+impl WorkerHandle {
+    fn push_cmd(&self, cmd: WorkerCmd) {
+        self.inbox.lock().unwrap().push(cmd);
+        self.wake.wake();
+    }
+}
+
 struct Shared {
     frontend: Arc<FrontEnd>,
     opts: NetOptions,
     next_conn_id: AtomicU64,
-    /// conn id → writer channel (the pumps' reply destination).
-    conns: Mutex<FxHashMap<u64, SyncSender<ConnMsg>>>,
-    /// Accepted sockets by conn id, kept so shutdown can unblock their
-    /// readers; entries are removed when the connection's reader exits.
-    socks: Mutex<FxHashMap<u64, TcpStream>>,
-    conn_joins: Mutex<Vec<JoinHandle<()>>>,
+    /// Round-robin worker assignment for accepted connections.
+    next_worker: AtomicUsize,
+    /// conn id → outbound queue + owning worker (the pumps' reply
+    /// destination).
+    conns: Mutex<FxHashMap<u64, ConnHandle>>,
+    /// One mailbox per event-loop worker.
+    workers: Vec<WorkerHandle>,
+    /// Wakes the accept loop out of its poller (shutdown).
+    accept_wake: WakeFd,
     /// Reply-topic shard count (= `routes.len()`).
     nshards: u32,
     /// One route table per reply shard, indexed by
     /// [`reply_partition_for`]`(ingest_id, nshards)` — each pump thread
-    /// works its own table; readers registering a batch take each lock
+    /// works its own table; workers registering a batch take each lock
     /// once.
     routes: Vec<Mutex<RouteTable>>,
 }
 
 impl Shared {
     /// Route the ingest-id range of a freshly accepted batch to `conn_id`,
-    /// delivering (and uncounting) anything the pumps stashed first.
-    /// Contiguous ids spread round-robin over the shard tables, so each
-    /// shard's subset is visited under one lock acquisition.
-    fn register_replies(&self, conn_id: u64, first: u64, count: u32, fanout: u32) {
+    /// uncounting anything the pumps stashed first. Contiguous ids spread
+    /// round-robin over the shard tables, so each shard's subset is
+    /// visited under one lock acquisition. Returns the early-stashed
+    /// replies for the caller (the owning worker) to enqueue.
+    fn register_replies(&self, conn_id: u64, first: u64, count: u32, fanout: u32) -> Vec<ReplyMsg> {
+        let mut early: Vec<ReplyMsg> = Vec::new();
         if count == 0 || fanout == 0 {
-            return;
+            return early;
         }
         let n = self.nshards.max(1) as u64;
-        let mut early: Vec<ReplyMsg> = Vec::new();
         for shard in 0..n {
             let offset = (shard + n - first % n) % n;
             if offset >= count as u64 {
@@ -231,12 +381,7 @@ impl Shared {
                 id += n;
             }
         }
-        if !early.is_empty() {
-            let tx = self.conns.lock().unwrap().get(&conn_id).cloned();
-            if let Some(tx) = tx {
-                let _ = tx.try_send(ConnMsg::Frame(Frame::ReplyBatch { msgs: early }));
-            }
-        }
+        early
     }
 
     /// Drop the routes of a reserved range whose ingest was rejected.
@@ -264,13 +409,14 @@ pub struct NetServer {
     running: Arc<AtomicBool>,
     shared: Arc<Shared>,
     accept_join: Option<JoinHandle<()>>,
+    worker_joins: Vec<JoinHandle<()>>,
     pump_joins: Vec<JoinHandle<()>>,
 }
 
 impl NetServer {
     /// Bind `addr` (e.g. `"127.0.0.1:0"` for an ephemeral port) and start
-    /// the accept loop + one reply pump per reply-topic shard over
-    /// `frontend`'s broker.
+    /// the accept loop, the event-loop workers and one reply pump per
+    /// reply-topic shard over `frontend`'s broker.
     pub fn start(
         frontend: Arc<FrontEnd>,
         broker: BrokerRef,
@@ -285,13 +431,22 @@ impl NetServer {
         // count: ensure it exists, then adopt the actual count
         broker.ensure_topic(REPLY_TOPIC, frontend.reply_partitions())?;
         let nshards = broker.partition_count(REPLY_TOPIC).unwrap_or(1).max(1);
+        let nworkers = opts.resolved_workers().max(1);
+        let mut workers = Vec::with_capacity(nworkers);
+        for _ in 0..nworkers {
+            workers.push(WorkerHandle {
+                wake: WakeFd::new()?,
+                inbox: Mutex::new(Vec::new()),
+            });
+        }
         let shared = Arc::new(Shared {
             frontend,
             opts,
             next_conn_id: AtomicU64::new(0),
+            next_worker: AtomicUsize::new(0),
             conns: Mutex::new(FxHashMap::default()),
-            socks: Mutex::new(FxHashMap::default()),
-            conn_joins: Mutex::new(Vec::new()),
+            workers,
+            accept_wake: WakeFd::new()?,
             nshards,
             routes: (0..nshards).map(|_| Mutex::new(RouteTable::default())).collect(),
         });
@@ -299,6 +454,23 @@ impl NetServer {
         static NEXT_SERVER: AtomicU64 = AtomicU64::new(0);
         let server_id = NEXT_SERVER.fetch_add(1, Ordering::Relaxed);
 
+        let spawn_err = |e: std::io::Error, what: &str| {
+            crate::error::Error::internal(format!("spawn {what}: {e}"))
+        };
+        let mut worker_joins = Vec::with_capacity(nworkers);
+        for widx in 0..nworkers {
+            // create + arm the poller here so fd exhaustion fails start()
+            // instead of silently crippling a worker thread
+            let poller = Poller::new()?;
+            poller.register(shared.workers[widx].wake.raw(), WAKE_TOKEN, Interest::READ)?;
+            let shared = shared.clone();
+            let running = running.clone();
+            let join = std::thread::Builder::new()
+                .name(format!("net-worker-{server_id}-{widx}"))
+                .spawn(move || worker_loop(shared, running, widx, poller))
+                .map_err(|e| spawn_err(e, "worker"))?;
+            worker_joins.push(join);
+        }
         let mut pump_joins = Vec::with_capacity(nshards as usize);
         for shard in 0..nshards {
             let shared = shared.clone();
@@ -307,23 +479,29 @@ impl NetServer {
             let join = std::thread::Builder::new()
                 .name(format!("net-pump-{server_id}-{shard}"))
                 .spawn(move || reply_pump_shard(broker, shared, running, shard))
-                .map_err(|e| crate::error::Error::internal(format!("spawn pump: {e}")))?;
+                .map_err(|e| spawn_err(e, "pump"))?;
             pump_joins.push(join);
         }
         let accept_join = {
+            let poller = Poller::new()?;
+            poller.register(listener.as_raw_fd(), 0, Interest::READ)?;
+            poller.register(shared.accept_wake.raw(), 1, Interest::READ)?;
             let shared = shared.clone();
             let running = running.clone();
             std::thread::Builder::new()
                 .name(format!("net-accept-{server_id}"))
-                .spawn(move || accept_loop(listener, shared, running))
-                .map_err(|e| crate::error::Error::internal(format!("spawn accept: {e}")))?
+                .spawn(move || accept_loop(listener, shared, running, poller))
+                .map_err(|e| spawn_err(e, "accept"))?
         };
-        log::info!("net server listening on {local_addr} ({nshards} reply pumps)");
+        log::info!(
+            "net server listening on {local_addr} ({nworkers} event workers, {nshards} reply pumps)"
+        );
         Ok(NetServer {
             local_addr,
             running,
             shared,
             accept_join: Some(accept_join),
+            worker_joins,
             pump_joins,
         })
     }
@@ -348,22 +526,21 @@ impl NetServer {
             return;
         }
         // join the accept loop first: once it is gone, no connection is
-        // mid-setup, so the socket sweep below is complete and every
-        // blocked reader gets unblocked
+        // mid-handoff, so every connection is owned by exactly one worker
+        self.shared.accept_wake.wake();
         if let Some(j) = self.accept_join.take() {
             let _ = j.join();
         }
-        for (_, s) in self.shared.socks.lock().unwrap().drain() {
-            let _ = s.shutdown(Shutdown::Both);
+        // workers drop their connections on the way out (clients see EOF)
+        for w in &self.shared.workers {
+            w.push_cmd(WorkerCmd::Shutdown);
+        }
+        for j in std::mem::take(&mut self.worker_joins) {
+            let _ = j.join();
         }
         // pumps park on the broker's data condvar with a bounded timeout,
         // so they observe the stop flag within one wait period
         for j in std::mem::take(&mut self.pump_joins) {
-            let _ = j.join();
-        }
-        let joins: Vec<JoinHandle<()>> =
-            std::mem::take(&mut *self.shared.conn_joins.lock().unwrap());
-        for j in joins {
             let _ = j.join();
         }
     }
@@ -375,206 +552,399 @@ impl Drop for NetServer {
     }
 }
 
-fn accept_loop(listener: TcpListener, shared: Arc<Shared>, running: Arc<AtomicBool>) {
+fn accept_loop(
+    listener: TcpListener,
+    shared: Arc<Shared>,
+    running: Arc<AtomicBool>,
+    mut poller: Poller,
+) {
+    let mut events: Vec<PollEvent> = Vec::new();
     while running.load(Ordering::Relaxed) {
-        match listener.accept() {
-            Ok((stream, peer)) => {
-                if let Err(e) = setup_conn(stream, &shared) {
-                    log::warn!("net: failed to set up connection from {peer}: {e}");
+        if let Err(e) = poller.wait(&mut events, Some(Duration::from_millis(500))) {
+            log::warn!("net: accept poll error: {e}");
+            std::thread::sleep(Duration::from_millis(20));
+            continue;
+        }
+        shared.accept_wake.drain();
+        loop {
+            match listener.accept() {
+                Ok((stream, peer)) => {
+                    if let Err(e) = setup_conn(stream, &shared) {
+                        log::warn!("net: failed to set up connection from {peer}: {e}");
+                    }
                 }
-            }
-            Err(ref e) if e.kind() == std::io::ErrorKind::WouldBlock => {
-                // reap handles of connections that already finished, so a
-                // long-lived server doesn't accumulate them
-                shared
-                    .conn_joins
-                    .lock()
-                    .unwrap()
-                    .retain(|j| !j.is_finished());
-                std::thread::sleep(Duration::from_millis(5));
-            }
-            Err(e) => {
-                log::warn!("net: accept error: {e}");
-                std::thread::sleep(Duration::from_millis(20));
+                Err(ref e) if e.kind() == std::io::ErrorKind::WouldBlock => break,
+                Err(e) => {
+                    log::warn!("net: accept error: {e}");
+                    std::thread::sleep(Duration::from_millis(20));
+                    break;
+                }
             }
         }
     }
 }
 
+/// Hand an accepted socket to a worker: nonblocking, round-robin
+/// assignment, registered in the shared connection map before the worker
+/// ever sees it (so pumps can route to it immediately).
 fn setup_conn(stream: TcpStream, shared: &Arc<Shared>) -> Result<()> {
     let conn_id = shared.next_conn_id.fetch_add(1, Ordering::Relaxed);
-    // the listener is non-blocking; on BSD-derived platforms the accepted
-    // socket inherits that flag, which would turn every read into an
-    // instant WouldBlock "protocol error"
-    stream.set_nonblocking(false)?;
+    stream.set_nonblocking(true)?;
     let _ = stream.set_nodelay(shared.opts.nodelay);
-    let wstream = stream.try_clone()?;
-    shared.socks.lock().unwrap().insert(conn_id, stream.try_clone()?);
-    let (tx, rx) = mpsc::sync_channel::<ConnMsg>(CONN_QUEUE_FRAMES);
-    shared.conns.lock().unwrap().insert(conn_id, tx.clone());
-    let writer = std::thread::Builder::new()
-        .name(format!("net-conn{conn_id}-w"))
-        .spawn(move || conn_writer(wstream, rx))?;
-    let reader = {
-        let shared = shared.clone();
-        std::thread::Builder::new()
-            .name(format!("net-conn{conn_id}-r"))
-            .spawn(move || {
-                session(stream, &shared, conn_id, &tx);
-                shared.conns.lock().unwrap().remove(&conn_id);
-                shared.socks.lock().unwrap().remove(&conn_id);
-                let _ = tx.send(ConnMsg::Close);
-            })?
-    };
-    shared.conn_joins.lock().unwrap().extend([writer, reader]);
+    let out = Arc::new(OutQueue::default());
+    let widx = shared.next_worker.fetch_add(1, Ordering::Relaxed) % shared.workers.len();
+    shared.conns.lock().unwrap().insert(
+        conn_id,
+        ConnHandle {
+            out: out.clone(),
+            worker: widx,
+        },
+    );
+    shared.workers[widx].push_cmd(WorkerCmd::Conn {
+        id: conn_id,
+        stream,
+        out,
+    });
     Ok(())
 }
 
-/// The per-connection protocol state machine (reader side). Every
-/// outbound frame goes through `tx` so writes never interleave with the
-/// pump's reply batches.
-fn session(stream: TcpStream, shared: &Arc<Shared>, conn_id: u64, tx: &SyncSender<ConnMsg>) {
-    let max_frame = shared.opts.max_frame_bytes;
-    let mut reader = std::io::BufReader::with_capacity(64 * 1024, stream);
-    let fatal = |tx: &SyncSender<ConnMsg>, message: String| {
-        let _ = tx.send(ConnMsg::Frame(Frame::Err {
-            fatal: true,
-            message,
-        }));
-    };
+/// Protocol state of one connection.
+enum ConnState {
+    /// Waiting for the HELLO frame.
+    Handshake,
+    /// Streaming ingest batches for this stream definition.
+    Streaming(Arc<StreamDef>),
+}
 
-    // handshake: exactly one HELLO. The server speaks every version in
-    // MIN..=PROTOCOL_VERSION and answers with min(client, server).
-    let (stream_name, schema, fanout) = match wire::read_frame(&mut reader, None, max_frame) {
-        Ok(Some(Frame::Hello { version, stream })) => {
-            if !(MIN_PROTOCOL_VERSION..=PROTOCOL_VERSION).contains(&version) {
-                fatal(
-                    tx,
-                    format!(
-                        "unsupported protocol version {version} (server speaks \
-                         {MIN_PROTOCOL_VERSION}..={PROTOCOL_VERSION})"
-                    ),
-                );
-                return;
-            }
-            match shared.frontend.stream(&stream) {
-                Ok(def) => {
-                    let fanout = def.entities.len() as u32;
-                    let ok = Frame::HelloOk {
-                        version: version.min(PROTOCOL_VERSION),
-                        fanout,
-                        fields: wire::schema_fields(&def.schema),
-                    };
-                    if tx.send(ConnMsg::Frame(ok)).is_err() {
-                        return;
-                    }
-                    (stream, def.schema.clone(), fanout)
-                }
-                Err(e) => {
-                    fatal(tx, format!("handshake rejected: {e}"));
-                    return;
-                }
-            }
-        }
-        Ok(Some(_)) => {
-            fatal(tx, "expected HELLO as the first frame".to_string());
-            return;
-        }
-        Ok(None) => return, // closed before the handshake
-        Err(e) => {
-            fatal(tx, format!("protocol error: {e}"));
-            return;
-        }
-    };
+/// One connection, owned by exactly one event-loop worker.
+struct Conn {
+    id: u64,
+    stream: TcpStream,
+    out: Arc<OutQueue>,
+    /// Read buffer; `rbuf[rstart..]` is unparsed.
+    rbuf: Vec<u8>,
+    rstart: usize,
+    state: ConnState,
+    /// Stop reading: the outbound queue is past its high-water mark.
+    read_paused: bool,
+    /// Stop reading permanently; close once the queue drains.
+    closing: bool,
+    /// Interest currently registered with the poller.
+    interest: Interest,
+}
 
-    let mut fbuf = wire::FrameBuf::new();
-    let mut scratch = ViewScratch::new();
-    loop {
-        let kind = match wire::read_frame_raw(&mut reader, &mut fbuf, max_frame) {
-            Ok(Some(k)) => k,
-            Ok(None) => return, // clean client close
-            Err(e) => {
-                // corrupt/oversized/truncated frame: this connection can
-                // no longer be trusted, but only this connection
-                fatal(tx, format!("protocol error: {e}"));
-                return;
-            }
-        };
-        if kind == wire::KIND_INGEST_BATCH_RAW {
-            // the borrowed fast path: validated value slices go straight
-            // to the front-end — no owned Event on this thread
-            match wire::decode_raw_batch(fbuf.body(), &schema, &mut scratch) {
-                Ok((seq, raws)) => {
-                    let keep = handle_ingest(
-                        shared,
-                        conn_id,
-                        tx,
-                        fanout,
-                        seq,
-                        raws.len() as u32,
-                        |first| {
-                            shared
-                                .frontend
-                                .ingest_batch_raw_reserved(&stream_name, &raws, first)
-                        },
-                    );
-                    if !keep {
-                        return;
-                    }
-                }
-                Err(e) => {
-                    // the frame passed its CRC, so these bytes are what
-                    // the client sent: a malformed raw batch poisons only
-                    // itself — answer non-fatally and keep this
-                    // connection's other batches flowing
-                    match wire::raw_batch_seq(fbuf.body()) {
-                        Ok(seq) => {
-                            let err = Frame::Err {
-                                fatal: false,
-                                message: format!("ingest rejected (seq {seq}): {e}"),
-                            };
-                            if tx.send(ConnMsg::Frame(err)).is_err() {
-                                return;
-                            }
-                        }
-                        Err(_) => {
-                            fatal(tx, format!("protocol error: {e}"));
-                            return;
-                        }
-                    }
-                }
-            }
+/// Verdict of a read/flush pass over one connection.
+#[derive(PartialEq)]
+enum Verdict {
+    Alive,
+    /// Remove and drop the connection now.
+    Dead,
+}
+
+fn worker_loop(shared: Arc<Shared>, running: Arc<AtomicBool>, widx: usize, mut poller: Poller) {
+    let mut conns: FxHashMap<u64, Conn> = FxHashMap::default();
+    let mut events: Vec<PollEvent> = Vec::new();
+    // reusable per-worker scratch: the raw decode's field-offset table
+    let mut offsets: Vec<u32> = Vec::new();
+    let mut shutdown = false;
+    while !shutdown && running.load(Ordering::Relaxed) {
+        if let Err(e) = poller.wait(&mut events, Some(Duration::from_millis(250))) {
+            log::warn!("net worker[{widx}]: poll error: {e}");
+            std::thread::sleep(Duration::from_millis(20));
             continue;
         }
-        match Frame::decode_body(kind, fbuf.body(), Some(&schema)) {
-            Ok(Frame::IngestBatch { seq, events }) => {
-                let keep = handle_ingest(
-                    shared,
-                    conn_id,
-                    tx,
-                    fanout,
-                    seq,
-                    events.len() as u32,
-                    |first| {
+        for &ev in &events {
+            if ev.token == WAKE_TOKEN {
+                shared.workers[widx].wake.drain();
+                let cmds = std::mem::take(&mut *shared.workers[widx].inbox.lock().unwrap());
+                for cmd in cmds {
+                    match cmd {
+                        WorkerCmd::Conn { id, stream, out } => {
+                            if let Err(e) = poller.register(stream.as_raw_fd(), id, Interest::READ)
+                            {
+                                log::warn!("net worker[{widx}]: cannot register conn {id}: {e}");
+                                out.close();
+                                shared.conns.lock().unwrap().remove(&id);
+                                continue;
+                            }
+                            conns.insert(
+                                id,
+                                Conn {
+                                    id,
+                                    stream,
+                                    out,
+                                    rbuf: Vec::new(),
+                                    rstart: 0,
+                                    state: ConnState::Handshake,
+                                    read_paused: false,
+                                    closing: false,
+                                    interest: Interest::READ,
+                                },
+                            );
+                        }
+                        WorkerCmd::Flush(id) => {
+                            if let Some(conn) = conns.get_mut(&id) {
+                                if flush_conn(&poller, conn) == Verdict::Dead {
+                                    close_conn(&shared, &poller, conns.remove(&id));
+                                }
+                            }
+                        }
+                        WorkerCmd::Shutdown => shutdown = true,
+                    }
+                }
+                continue;
+            }
+            let id = ev.token;
+            let Some(conn) = conns.get_mut(&id) else {
+                continue; // closed earlier this round; stale event
+            };
+            let mut verdict = Verdict::Alive;
+            if ev.readable && verdict == Verdict::Alive {
+                verdict = handle_readable(&shared, conn, &mut offsets);
+            }
+            if verdict == Verdict::Alive {
+                verdict = flush_conn(&poller, conn);
+            }
+            if verdict == Verdict::Dead {
+                close_conn(&shared, &poller, conns.remove(&id));
+            }
+        }
+    }
+    for (_, conn) in conns.drain() {
+        close_conn(&shared, &poller, Some(conn));
+    }
+}
+
+/// Drop a closed connection: deregister, mark its queue closed (pumps
+/// stop routing to it) and remove it from the shared map.
+fn close_conn(shared: &Shared, poller: &Poller, conn: Option<Conn>) {
+    let Some(conn) = conn else { return };
+    let _ = poller.deregister(conn.stream.as_raw_fd());
+    shared.conns.lock().unwrap().remove(&conn.id);
+    conn.out.close();
+    // conn.stream drops here, closing the fd
+}
+
+/// Encode `frame` onto the connection's outbound queue.
+fn send_frame(conn: &mut Conn, frame: &Frame) {
+    match frame.encode(None) {
+        Ok(bytes) => {
+            conn.out.push(bytes);
+        }
+        Err(e) => {
+            log::warn!("net: conn {}: cannot encode frame: {e}", conn.id);
+            conn.closing = true;
+        }
+    }
+}
+
+/// Answer with a fatal ERR and begin closing (the frame is flushed before
+/// the socket drops).
+fn fatal(conn: &mut Conn, message: String) {
+    send_frame(
+        conn,
+        &Frame::Err {
+            fatal: true,
+            message,
+        },
+    );
+    conn.closing = true;
+}
+
+/// Budgeted nonblocking read + in-place frame parse for one connection.
+fn handle_readable(shared: &Shared, conn: &mut Conn, offsets: &mut Vec<u32>) -> Verdict {
+    let mut budget = READ_BUDGET;
+    let mut eof = false;
+    while budget > 0 && !conn.closing && !conn.read_paused {
+        let len = conn.rbuf.len();
+        conn.rbuf.resize(len + READ_CHUNK, 0);
+        match (&conn.stream).read(&mut conn.rbuf[len..]) {
+            Ok(0) => {
+                conn.rbuf.truncate(len);
+                eof = true;
+                break;
+            }
+            Ok(n) => {
+                conn.rbuf.truncate(len + n);
+                budget = budget.saturating_sub(n);
+            }
+            Err(ref e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                conn.rbuf.truncate(len);
+                break;
+            }
+            Err(ref e) if e.kind() == std::io::ErrorKind::Interrupted => {
+                conn.rbuf.truncate(len);
+            }
+            Err(_) => {
+                conn.rbuf.truncate(len);
+                return Verdict::Dead;
+            }
+        }
+    }
+    parse_frames(shared, conn, offsets);
+    if eof && !conn.closing {
+        let leftover = conn.rbuf.len() - conn.rstart;
+        if leftover > 0 {
+            // mid-frame EOF: mirror the blocking reader's truncation
+            // errors (ERR frame is best-effort; the peer is gone)
+            let e = if leftover < wire::HEADER_LEN {
+                crate::error::Error::corrupt("frame: truncated header at EOF")
+            } else {
+                crate::error::Error::corrupt("frame: truncated body at EOF")
+            };
+            fatal(conn, format!("protocol error: {e}"));
+        } else {
+            // clean close: flush whatever is queued, then drop
+            conn.closing = true;
+        }
+    }
+    Verdict::Alive
+}
+
+/// Parse and dispatch every complete frame in `rbuf[rstart..]`,
+/// performing the exact framing validation of [`wire::read_frame_raw`]
+/// (magic, size cap, CRC) against the same error strings.
+fn parse_frames(shared: &Shared, conn: &mut Conn, offsets: &mut Vec<u32>) {
+    let max_frame = shared.opts.max_frame_bytes;
+    // detach the buffer so frame slices can borrow it while dispatch
+    // mutates the connection (outbound queue, state)
+    let rbuf = std::mem::take(&mut conn.rbuf);
+    let mut pos = conn.rstart;
+    while !conn.closing {
+        let avail = rbuf.len() - pos;
+        if avail < wire::HEADER_LEN {
+            break;
+        }
+        let header = &rbuf[pos..pos + wire::HEADER_LEN];
+        let magic = LittleEndian::read_u16(&header[0..2]);
+        if magic != wire::MAGIC {
+            let e = crate::error::Error::corrupt(format!("frame: bad magic {magic:#06x}"));
+            fatal(conn, format!("protocol error: {e}"));
+            break;
+        }
+        let kind = header[2];
+        let len = LittleEndian::read_u32(&header[3..7]) as usize;
+        let crc = LittleEndian::read_u32(&header[7..11]);
+        if len > max_frame {
+            let e = crate::error::Error::corrupt(format!(
+                "frame: body of {len} bytes exceeds max frame size {max_frame}"
+            ));
+            fatal(conn, format!("protocol error: {e}"));
+            break;
+        }
+        if avail < wire::HEADER_LEN + len {
+            break; // incomplete body: wait for more bytes
+        }
+        let body = &rbuf[pos + wire::HEADER_LEN..pos + wire::HEADER_LEN + len];
+        if crc32fast::hash(body) != crc {
+            let e = crate::error::Error::corrupt("frame: CRC mismatch");
+            fatal(conn, format!("protocol error: {e}"));
+            break;
+        }
+        pos += wire::HEADER_LEN + len;
+        dispatch_frame(shared, conn, kind, body, offsets);
+    }
+    conn.rbuf = rbuf;
+    conn.rstart = pos;
+    if conn.rstart == conn.rbuf.len() {
+        conn.rbuf.clear();
+        conn.rstart = 0;
+    } else if conn.rstart >= 32 * 1024 {
+        // keep the buffer from creeping: slide the unparsed suffix down
+        let len = conn.rbuf.len();
+        conn.rbuf.copy_within(conn.rstart..len, 0);
+        conn.rbuf.truncate(len - conn.rstart);
+        conn.rstart = 0;
+    }
+}
+
+/// The per-connection protocol state machine, one CRC-verified frame at
+/// a time.
+fn dispatch_frame(shared: &Shared, conn: &mut Conn, kind: u8, body: &[u8], offsets: &mut Vec<u32>) {
+    match &conn.state {
+        ConnState::Handshake => {
+            // handshake: exactly one HELLO. The server speaks every
+            // version in MIN..=PROTOCOL_VERSION and answers with
+            // min(client, server).
+            match Frame::decode_body(kind, body, None) {
+                Ok(Frame::Hello { version, stream }) => {
+                    if !(MIN_PROTOCOL_VERSION..=PROTOCOL_VERSION).contains(&version) {
+                        fatal(
+                            conn,
+                            format!(
+                                "unsupported protocol version {version} (server speaks \
+                                 {MIN_PROTOCOL_VERSION}..={PROTOCOL_VERSION})"
+                            ),
+                        );
+                        return;
+                    }
+                    match shared.frontend.stream(&stream) {
+                        Ok(def) => {
+                            let ok = Frame::HelloOk {
+                                version: version.min(PROTOCOL_VERSION),
+                                fanout: def.entities.len() as u32,
+                                fields: wire::schema_fields(&def.schema),
+                            };
+                            send_frame(conn, &ok);
+                            conn.state = ConnState::Streaming(def);
+                        }
+                        Err(e) => fatal(conn, format!("handshake rejected: {e}")),
+                    }
+                }
+                Ok(_) => fatal(conn, "expected HELLO as the first frame".to_string()),
+                Err(e) => fatal(conn, format!("protocol error: {e}")),
+            }
+        }
+        ConnState::Streaming(def) => {
+            let def = def.clone();
+            let fanout = def.entities.len() as u32;
+            if kind == wire::KIND_INGEST_BATCH_RAW {
+                // the borrowed fast path: one validating scan fills the
+                // worker's offset table, and both the value slices and
+                // the offsets go straight to the front-end — each
+                // payload is walked once between socket and mlog
+                match wire::decode_raw_batch_offsets(body, &def.schema, offsets) {
+                    Ok((seq, raws)) => {
+                        handle_ingest(shared, conn, fanout, seq, raws.len() as u32, |first| {
+                            shared.frontend.ingest_batch_raw_prevalidated(
+                                &def.name, &raws, first, offsets,
+                            )
+                        });
+                    }
+                    Err(e) => {
+                        // the frame passed its CRC, so these bytes are
+                        // what the client sent: a malformed raw batch
+                        // poisons only itself — answer non-fatally and
+                        // keep this connection's other batches flowing
+                        match wire::raw_batch_seq(body) {
+                            Ok(seq) => {
+                                send_frame(
+                                    conn,
+                                    &Frame::Err {
+                                        fatal: false,
+                                        message: format!("ingest rejected (seq {seq}): {e}"),
+                                    },
+                                );
+                            }
+                            Err(_) => fatal(conn, format!("protocol error: {e}")),
+                        }
+                    }
+                }
+                return;
+            }
+            match Frame::decode_body(kind, body, Some(&def.schema)) {
+                Ok(Frame::IngestBatch { seq, events }) => {
+                    handle_ingest(shared, conn, fanout, seq, events.len() as u32, |first| {
                         shared
                             .frontend
-                            .ingest_batch_reserved(&stream_name, events, first)
-                    },
-                );
-                if !keep {
-                    return;
+                            .ingest_batch_reserved(&def.name, events, first)
+                    });
                 }
-            }
-            Ok(other) => {
-                fatal(
-                    tx,
+                Ok(other) => fatal(
+                    conn,
                     format!("unexpected frame {other:?} (only ingest batches after HELLO)"),
-                );
-                return;
-            }
-            Err(e) => {
-                fatal(tx, format!("protocol error: {e}"));
-                return;
+                ),
+                Err(e) => fatal(conn, format!("protocol error: {e}")),
             }
         }
     }
@@ -583,29 +953,32 @@ fn session(stream: TcpStream, shared: &Arc<Shared>, conn_id: u64, tx: &SyncSende
 /// One ingest batch, owned or raw: reserve the id range and route it to
 /// this connection **before** publishing — the back-end can start
 /// replying the moment records land, and a reply must never race its
-/// route registration — then ack, or reject non-fatally. Returns false
-/// when the writer channel is gone and the session should end.
+/// route registration — then ack, or reject non-fatally.
 fn handle_ingest(
-    shared: &Arc<Shared>,
-    conn_id: u64,
-    tx: &SyncSender<ConnMsg>,
+    shared: &Shared,
+    conn: &mut Conn,
     fanout: u32,
     seq: u64,
     count: u32,
     publish: impl FnOnce(u64) -> Result<Vec<IngestReceipt>>,
-) -> bool {
+) {
     let first = shared.frontend.reserve_ingest_ids(count as u64);
-    shared.register_replies(conn_id, first, count, fanout);
+    let early = shared.register_replies(conn.id, first, count, fanout);
+    if !early.is_empty() {
+        send_frame(conn, &Frame::ReplyBatch { msgs: early });
+    }
     match publish(first) {
         Ok(receipts) => {
             debug_assert_eq!(receipts.len() as u32, count);
-            let ack = Frame::IngestAck {
-                seq,
-                first_ingest_id: first,
-                count,
-                fanout,
-            };
-            tx.send(ConnMsg::Frame(ack)).is_ok()
+            send_frame(
+                conn,
+                &Frame::IngestAck {
+                    seq,
+                    first_ingest_id: first,
+                    count,
+                    fanout,
+                },
+            );
         }
         Err(e) => {
             // a rejected batch is the client's problem, not a protocol
@@ -613,43 +986,87 @@ fn handle_ingest(
             // replies for any partially published prefix fall back to
             // the stash and age out.
             shared.unregister_replies(first, count);
-            let err = Frame::Err {
-                fatal: false,
-                message: format!("ingest rejected (seq {seq}): {e}"),
-            };
-            tx.send(ConnMsg::Frame(err)).is_ok()
+            send_frame(
+                conn,
+                &Frame::Err {
+                    fatal: false,
+                    message: format!("ingest rejected (seq {seq}): {e}"),
+                },
+            );
         }
     }
 }
 
-/// Writer side of one connection: drains the channel, batching writes and
-/// flushing once per drained burst.
-fn conn_writer(stream: TcpStream, rx: Receiver<ConnMsg>) {
-    let mut w = std::io::BufWriter::with_capacity(256 * 1024, stream);
-    'outer: loop {
-        let mut msg = match rx.recv() {
-            Ok(m) => m,
-            Err(_) => break,
-        };
-        loop {
-            match msg {
-                ConnMsg::Frame(f) => {
-                    if wire::write_frame(&mut w, &f, None).is_err() {
-                        break 'outer;
+/// Drain the connection's outbound queue with bounded vectored writes,
+/// then reconcile poller interest and the read-pause hysteresis.
+fn flush_conn(poller: &Poller, conn: &mut Conn) -> Verdict {
+    let pending = {
+        let mut out = conn.out.buf.lock().unwrap();
+        let mut budget = WRITE_BUDGET;
+        'write: while !out.queue.is_empty() && budget > 0 {
+            let mut slices: Vec<IoSlice<'_>> = Vec::with_capacity(MAX_WRITE_SLICES);
+            let mut sliced = 0usize;
+            for (i, frame) in out.queue.iter().enumerate() {
+                if slices.len() == MAX_WRITE_SLICES || sliced >= budget {
+                    break;
+                }
+                let start = if i == 0 { out.front_pos } else { 0 };
+                slices.push(IoSlice::new(&frame[start..]));
+                sliced += frame.len() - start;
+            }
+            match (&conn.stream).write_vectored(&slices) {
+                Ok(0) => return Verdict::Dead,
+                Ok(n) => {
+                    budget = budget.saturating_sub(n);
+                    // retire written bytes: whole frames pop, a partial
+                    // front advances `front_pos`
+                    let mut left = n;
+                    out.bytes -= n;
+                    while left > 0 {
+                        let front_rem = out.queue.front().expect("bytes imply frames").len()
+                            - out.front_pos;
+                        if left >= front_rem {
+                            left -= front_rem;
+                            out.front_pos = 0;
+                            out.queue.pop_front();
+                        } else {
+                            out.front_pos += left;
+                            left = 0;
+                        }
                     }
                 }
-                ConnMsg::Close => break 'outer,
-            }
-            match rx.try_recv() {
-                Ok(m) => msg = m,
-                Err(TryRecvError::Empty) | Err(TryRecvError::Disconnected) => break,
+                Err(ref e) if e.kind() == std::io::ErrorKind::WouldBlock => break 'write,
+                Err(ref e) if e.kind() == std::io::ErrorKind::Interrupted => {}
+                Err(_) => return Verdict::Dead,
             }
         }
-        if w.flush().is_err() {
-            break;
-        }
+        out.bytes
+    };
+    // read-pause hysteresis: a queue past high water stops reads (the
+    // client's acks stall → a pipelining client stops sending); reads
+    // resume once the queue drains below low water
+    if pending > OUT_HIGH_WATER {
+        conn.read_paused = true;
+    } else if conn.read_paused && pending < OUT_LOW_WATER {
+        conn.read_paused = false;
     }
-    let _ = w.flush();
+    if conn.closing && pending == 0 {
+        return Verdict::Dead; // flushed everything; drop the socket
+    }
+    let desired = Interest {
+        read: !conn.read_paused && !conn.closing,
+        write: pending > 0,
+    };
+    if desired != conn.interest {
+        if poller
+            .modify(conn.stream.as_raw_fd(), conn.id, desired)
+            .is_err()
+        {
+            return Verdict::Dead;
+        }
+        conn.interest = desired;
+    }
+    Verdict::Alive
 }
 
 /// One reply pump per reply-topic shard: the thread owns its partition
@@ -659,7 +1076,9 @@ fn conn_writer(stream: TcpStream, rx: Receiver<ConnMsg>) {
 /// ingest id. Task processors publish a reply to shard
 /// `ingest_id % nshards` ([`reply_partition_for`]), which is exactly how
 /// the tables are indexed — so in steady state a pump only ever takes
-/// its own table's lock.
+/// its own table's lock. Delivery never touches a socket: the encoded
+/// REPLY_BATCH frame lands on the connection's outbound queue and the
+/// owning worker is woken once per routed batch.
 fn reply_pump_shard(broker: BrokerRef, shared: Arc<Shared>, running: Arc<AtomicBool>, shard: u32) {
     let part = match broker.partition(REPLY_TOPIC, shard) {
         Ok(p) => p,
@@ -673,6 +1092,7 @@ fn reply_pump_shard(broker: BrokerRef, shared: Arc<Shared>, running: Arc<AtomicB
     let mut pos = part.end_offset();
     let mut decoded: Vec<ReplyMsg> = Vec::new();
     let mut deliveries: FxHashMap<u64, Vec<ReplyMsg>> = FxHashMap::default();
+    let mut wake_workers: Vec<usize> = Vec::new();
     while running.load(Ordering::Relaxed) {
         let records = match part.fetch(pos, 4096) {
             Ok(r) => r,
@@ -693,9 +1113,9 @@ fn reply_pump_shard(broker: BrokerRef, shared: Arc<Shared>, running: Arc<AtomicB
             continue;
         }
         pos = records.last().expect("non-empty fetch").offset + 1;
-        // decode outside the routes lock: connection readers contend on
-        // it for every ingest registration, and bulk decoding under the
-        // lock would add avoidable ack latency
+        // decode outside the routes lock: workers contend on it for
+        // every ingest registration, and bulk decoding under the lock
+        // would add avoidable ack latency
         decoded.clear();
         for rec in &records {
             match ReplyMsg::decode_batch(&rec.payload) {
@@ -728,25 +1148,45 @@ fn reply_pump_shard(broker: BrokerRef, shared: Arc<Shared>, running: Arc<AtomicB
                 .unwrap()
                 .route_msg(msg, now, &mut deliveries);
         }
+        wake_workers.clear();
         for (conn_id, msgs) in deliveries.drain() {
-            let tx = shared.conns.lock().unwrap().get(&conn_id).cloned();
-            if let Some(tx) = tx {
-                match tx.try_send(ConnMsg::Frame(Frame::ReplyBatch { msgs })) {
-                    Ok(()) => {}
-                    Err(TrySendError::Full(_)) => {
-                        // slow consumer: drop this delivery rather than
-                        // letting one stalled client grow server memory;
-                        // the client sees a reply timeout
-                        log::warn!(
-                            "net pump[{shard}]: conn {conn_id} writer queue full; dropping replies"
-                        );
-                    }
-                    Err(TrySendError::Disconnected(_)) => {
-                        // writer is gone; drop the stale channel entry
-                        shared.conns.lock().unwrap().remove(&conn_id);
+            let handle = shared.conns.lock().unwrap().get(&conn_id).cloned();
+            let Some(handle) = handle else { continue };
+            let frame = Frame::ReplyBatch { msgs };
+            let bytes = match frame.encode(None) {
+                Ok(b) => b,
+                Err(e) => {
+                    log::warn!("net pump[{shard}]: cannot encode reply batch: {e}");
+                    continue;
+                }
+            };
+            match handle.out.push_reply(bytes) {
+                Ok(()) => {
+                    shared.workers[handle.worker]
+                        .inbox
+                        .lock()
+                        .unwrap()
+                        .push(WorkerCmd::Flush(conn_id));
+                    if !wake_workers.contains(&handle.worker) {
+                        wake_workers.push(handle.worker);
                     }
                 }
+                Err(PushErr::Full) => {
+                    // slow consumer: drop this delivery rather than
+                    // letting one stalled client grow server memory;
+                    // the client sees a reply timeout
+                    log::warn!(
+                        "net pump[{shard}]: conn {conn_id} outbound queue full; dropping replies"
+                    );
+                }
+                Err(PushErr::Closed) => {
+                    // connection is gone; drop the stale map entry
+                    shared.conns.lock().unwrap().remove(&conn_id);
+                }
             }
+        }
+        for &w in &wake_workers {
+            shared.workers[w].wake.wake();
         }
     }
 }

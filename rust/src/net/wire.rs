@@ -511,16 +511,13 @@ pub fn encode_raw_batch_frame(out: &mut Vec<u8>, seq: u64, events: &[RawEvent<'_
     LittleEndian::write_u32(&mut out[7..11], crc);
 }
 
-/// Borrowed decode of an `INGEST_BATCH_RAW` body: parses the
-/// `seq n (ts vlen value_bytes)*` structure and validates every event's
-/// value bytes with [`codec::scan_values`] through the caller's reusable
-/// [`ViewScratch`] — rejecting exactly what the owned event decoder
-/// rejects, and requiring each scan to consume exactly `vlen` bytes.
-/// The returned [`RawEvent`]s borrow `body`; nothing is copied.
-pub fn decode_raw_batch<'a>(
+/// Shared framing core of the raw-batch decoders: parse the
+/// `seq n (ts vlen value_bytes)*` structure, bounds-check every event's
+/// value slice and hand it to `scan` for content validation. The
+/// returned [`RawEvent`]s borrow `body`; nothing is copied.
+fn decode_raw_batch_with<'a>(
     body: &'a [u8],
-    schema: &Schema,
-    scratch: &mut ViewScratch,
+    scan: &mut dyn FnMut(usize, &'a [u8]) -> Result<()>,
 ) -> Result<(u64, Vec<RawEvent<'a>>)> {
     let mut pos = 0usize;
     let seq = varint::read_u64(body, &mut pos)?;
@@ -546,16 +543,7 @@ pub fn decode_raw_batch<'a>(
                 ))
             })?;
         let values = &body[pos..end];
-        let mut vpos = 0usize;
-        scratch
-            .scan_values(values, &mut vpos, schema)
-            .map_err(|e| Error::corrupt(format!("INGEST_BATCH_RAW: event {i}: {e}")))?;
-        if vpos != vlen {
-            return Err(Error::corrupt(format!(
-                "INGEST_BATCH_RAW: event {i}: {} trailing value bytes",
-                vlen - vpos
-            )));
-        }
+        scan(i, values)?;
         events.push(RawEvent { timestamp, values });
         pos = end;
     }
@@ -566,6 +554,61 @@ pub fn decode_raw_batch<'a>(
         )));
     }
     Ok((seq, events))
+}
+
+/// Run one event's content scan and require it to consume the whole
+/// value slice, mapping failures to the raw-batch error shape.
+fn scan_raw_event(
+    i: usize,
+    values: &[u8],
+    scan: impl FnOnce(&[u8], &mut usize) -> Result<()>,
+) -> Result<()> {
+    let mut vpos = 0usize;
+    scan(values, &mut vpos)
+        .map_err(|e| Error::corrupt(format!("INGEST_BATCH_RAW: event {i}: {e}")))?;
+    if vpos != values.len() {
+        return Err(Error::corrupt(format!(
+            "INGEST_BATCH_RAW: event {i}: {} trailing value bytes",
+            values.len() - vpos
+        )));
+    }
+    Ok(())
+}
+
+/// Borrowed decode of an `INGEST_BATCH_RAW` body: parses the
+/// `seq n (ts vlen value_bytes)*` structure and validates every event's
+/// value bytes with [`codec::scan_values`] through the caller's reusable
+/// [`ViewScratch`] — rejecting exactly what the owned event decoder
+/// rejects, and requiring each scan to consume exactly `vlen` bytes.
+/// The returned [`RawEvent`]s borrow `body`; nothing is copied.
+pub fn decode_raw_batch<'a>(
+    body: &'a [u8],
+    schema: &Schema,
+    scratch: &mut ViewScratch,
+) -> Result<(u64, Vec<RawEvent<'a>>)> {
+    decode_raw_batch_with(body, &mut |i, values| {
+        scan_raw_event(i, values, |v, p| scratch.scan_values(v, p, schema))
+    })
+}
+
+/// [`decode_raw_batch`], but the validating scan **keeps its work**: the
+/// per-field value offsets land in `offsets` (cleared first; one
+/// schema-arity run per event, each relative to that event's value
+/// slice) — exactly the table
+/// [`crate::event::EventView::from_parts`] consumes. The server's v2
+/// path feeds both the slices and these offsets to
+/// `FrontEnd::ingest_batch_raw_prevalidated`, so each event payload is
+/// scanned once instead of twice (wire validation + front-end
+/// re-validation).
+pub fn decode_raw_batch_offsets<'a>(
+    body: &'a [u8],
+    schema: &Schema,
+    offsets: &mut Vec<u32>,
+) -> Result<(u64, Vec<RawEvent<'a>>)> {
+    offsets.clear();
+    decode_raw_batch_with(body, &mut |i, values| {
+        scan_raw_event(i, values, |v, p| codec::scan_values(v, p, schema, offsets))
+    })
 }
 
 /// Peek the batch sequence number of a raw ingest body (its leading
@@ -860,6 +903,71 @@ mod tests {
         let blen = b.len();
         b[blen - 1] ^= 0x10;
         assert_eq!(raw_batch_seq(&b).unwrap(), 5);
+    }
+
+    /// The offsets-keeping decoder must accept/reject exactly what the
+    /// scratch-based decoder does, and its offset table must match a
+    /// standalone [`codec::scan_values`] pass over each accepted event.
+    #[test]
+    fn raw_batch_offsets_decoder_matches_scratch_decoder() {
+        let schema = payments_schema();
+        let goods = vec![
+            raw_of(&ev(10, "c1", 1.0), &schema),
+            raw_of(&ev(20, "c2longercard", -2.25), &schema),
+            raw_of(&ev(30, "c3", 0.0), &schema),
+        ];
+        let body = Frame::IngestBatchRaw {
+            seq: 11,
+            events: goods.clone(),
+        }
+        .encode_body(None)
+        .unwrap();
+        let mut offsets = Vec::new();
+        offsets.push(0xDEAD); // must be cleared, not appended to
+        let (seq, raws) = decode_raw_batch_offsets(&body, &schema, &mut offsets).unwrap();
+        assert_eq!(seq, 11);
+        assert_eq!(raws.len(), goods.len());
+        assert_eq!(offsets.len(), goods.len() * schema.len());
+        for (i, (_, values)) in goods.iter().enumerate() {
+            let mut expect = Vec::new();
+            let mut pos = 0usize;
+            codec::scan_values(values, &mut pos, &schema, &mut expect).unwrap();
+            assert_eq!(pos, values.len());
+            assert_eq!(
+                &offsets[i * schema.len()..(i + 1) * schema.len()],
+                expect.as_slice(),
+                "event {i}: offsets must match a standalone scan"
+            );
+        }
+
+        // rejection parity with the scratch-based decoder on every
+        // malformed shape the other test exercises
+        let mut scratch = ViewScratch::new();
+        let corrupt = |f: &dyn Fn(&mut Vec<u8>)| {
+            let mut b = Frame::IngestBatchRaw {
+                seq: 11,
+                events: goods.clone(),
+            }
+            .encode_body(None)
+            .unwrap();
+            f(&mut b);
+            b
+        };
+        for bad in [
+            corrupt(&|b| b.truncate(b.len() - 1)),
+            corrupt(&|b| b.push(0xAB)),
+            corrupt(&|b| {
+                let at = b.len() - goods.last().unwrap().1.len();
+                b[at] = 7;
+            }),
+        ] {
+            assert_eq!(
+                decode_raw_batch(&bad, &schema, &mut scratch).is_err(),
+                decode_raw_batch_offsets(&bad, &schema, &mut offsets).is_err(),
+                "both raw decoders must agree on rejection"
+            );
+            assert!(decode_raw_batch_offsets(&bad, &schema, &mut offsets).is_err());
+        }
     }
 
     #[test]

@@ -750,3 +750,80 @@ fn two_process_loopback_equivalence_and_clean_shutdown() {
     };
     assert!(status.success(), "serve exited with {status}");
 }
+
+/// A stalled client — pipelining batches but never reading a byte of
+/// its acks or replies — must not stall a healthy client sharing the
+/// same reply shards: the server parks the slow connection's output in
+/// its own bounded queue (pausing reads once it passes the high-water
+/// mark) while the healthy connection's acks and replies keep flowing.
+#[test]
+fn slow_reader_backpressures_only_itself() {
+    let tmp = TempDir::new("net_slow_reader");
+    let (node, addr) = listening_node(&tmp);
+
+    let slow_addr = addr.clone();
+    let slow = std::thread::spawn(move || {
+        let mut sock = std::net::TcpStream::connect(&slow_addr).unwrap();
+        wire::write_frame(
+            &mut sock,
+            &Frame::Hello {
+                version: wire::PROTOCOL_VERSION,
+                stream: "payments".into(),
+            },
+            None,
+        )
+        .unwrap();
+        sock.set_read_timeout(Some(LONG)).unwrap();
+        match wire::read_frame(&mut sock, None, wire::DEFAULT_MAX_FRAME).unwrap() {
+            Some(Frame::HelloOk { .. }) => {}
+            other => panic!("expected HELLO_OK, got {other:?}"),
+        }
+        // Write only from here on, never read. A bounded write timeout
+        // ends the flood once the pipe fills instead of hanging the
+        // test; a partially written frame is fine — the server just
+        // keeps waiting for the rest, which never comes.
+        sock.set_write_timeout(Some(Duration::from_millis(200)))
+            .unwrap();
+        let schema = payments_schema();
+        let pad = "x".repeat(512);
+        let mut sent = 0usize;
+        for seq in 0..200u64 {
+            let events: Vec<Event> = (0..16i64)
+                .map(|i| ev(seq as i64 * 16 + i, &format!("slow{pad}{i}"), "mslow", 1.0))
+                .collect();
+            let frame = Frame::IngestBatch { seq, events }
+                .encode(Some(&schema))
+                .unwrap();
+            match sock.write_all(&frame) {
+                Ok(()) => sent += 1,
+                Err(_) => break, // pipe full: the server read-paused us
+            }
+        }
+        // hold the connection open, still not reading, while the
+        // healthy client does its work
+        (sock, sent)
+    });
+
+    // meanwhile: a healthy client on the same reply shards keeps
+    // getting acks AND full reply fanouts within a bounded wait
+    let mut healthy = NetClient::connect(&addr, "payments").unwrap();
+    for round in 0..15 {
+        let ack = healthy.ingest_batch(sample_events(8), LONG).unwrap();
+        assert_eq!(ack.count, 8, "round {round}");
+        for k in 0..ack.count as u64 {
+            let msgs = healthy
+                .await_event(ack.first_ingest_id + k, ack.fanout, LONG)
+                .unwrap();
+            assert_eq!(
+                msgs.len(),
+                2,
+                "round {round}: full fanout despite the stalled peer"
+            );
+        }
+    }
+
+    let (sock, sent) = slow.join().unwrap();
+    assert!(sent > 0, "the flood must have sent at least one batch");
+    drop(sock);
+    node.shutdown(true);
+}
