@@ -19,4 +19,4 @@ mod task_processor;
 mod unit;
 
 pub use task_processor::TaskProcessor;
-pub use unit::{Backend, OpTask};
+pub use unit::{Backend, OpTask, BACKEND_GROUP};

@@ -29,9 +29,11 @@ use crate::kvstore::{Store, StoreOptions};
 use crate::mlog::{Producer, Record};
 use crate::plan::{MetricReply, MetricSpec, Plan, ReplyCtx, ReplySink, StateStore};
 use crate::reservoir::{Reservoir, ReservoirConfig};
+use crate::telemetry::Telemetry;
 use crate::util::clock::TimestampMs;
 use std::path::PathBuf;
 use std::sync::Arc;
+use std::time::Instant;
 
 /// Owns the full processing pipeline of one (topic, partition).
 pub struct TaskProcessor {
@@ -63,6 +65,28 @@ pub struct TaskProcessor {
     reply_current: Vec<MetricReply>,
     /// Reusable per-shard reply-record encode buffers.
     reply_shards: Vec<Vec<u8>>,
+    /// Engine-wide telemetry sink. A fresh private registry until the
+    /// backend attaches the node's shared one
+    /// ([`TaskProcessor::set_telemetry`]), so tests/benches that open a
+    /// processor directly record into a throwaway.
+    telemetry: Arc<Telemetry>,
+    /// Cumulative reservoir/state readings at the last per-batch
+    /// telemetry flush; each batch pushes only the delta since these.
+    tel_base: TelBaseline,
+}
+
+/// Last-seen cumulative readings of the pull-style stats sources
+/// (reservoir, state store). Telemetry counters are engine-wide sums, so
+/// each processor pushes per-batch deltas against this baseline.
+#[derive(Default)]
+struct TelBaseline {
+    sealed_chunks: u64,
+    open_chunk_bytes: u64,
+    kv_reads: u64,
+    kv_writes: u64,
+    evictions: u64,
+    spills: u64,
+    live_slots: u64,
 }
 
 /// The task processor's [`ReplySink`]: encodes each event's replies
@@ -252,6 +276,17 @@ impl TaskProcessor {
         // task processor exists; fall back to a single shard if a test
         // wires a processor without it
         let reply_partitions = producer.partition_count(REPLY_TOPIC).unwrap_or(1);
+        // baseline the pull-style stats sources here so recovery replay
+        // is not attributed to the live counters
+        let tel_base = TelBaseline {
+            sealed_chunks: reservoir.sealed_chunks(),
+            open_chunk_bytes: reservoir.open_chunk_bytes(),
+            kv_reads: plan.state().kv_reads,
+            kv_writes: plan.state().kv_writes,
+            evictions: plan.state().evictions,
+            spills: plan.state().spills,
+            live_slots: plan.state().cached_states() as u64,
+        };
         Ok(TaskProcessor {
             topic,
             partition,
@@ -270,7 +305,15 @@ impl TaskProcessor {
             reply_meta: Vec::new(),
             reply_current: Vec::new(),
             reply_shards: vec![Vec::new(); reply_partitions.max(1) as usize],
+            telemetry: Arc::new(Telemetry::new()),
+            tel_base,
         })
+    }
+
+    /// Attach the node's shared telemetry registry. Until this is
+    /// called, per-batch flushes land in a private throwaway registry.
+    pub fn set_telemetry(&mut self, telemetry: Arc<Telemetry>) {
+        self.telemetry = telemetry;
     }
 
     /// First record offset this processor needs from the messaging layer.
@@ -322,6 +365,7 @@ impl TaskProcessor {
         // clamped monotonic. `processed` advances with every successful
         // append so a mid-batch failure can never double-append on
         // redelivery.
+        let started = Instant::now();
         self.reply_meta.clear();
         self.t_evals.clear();
         let mut failed: Option<Error> = None;
@@ -374,7 +418,8 @@ impl TaskProcessor {
         // still published (the plan's iterators resume from their
         // positions on the next batch — appended events are evaluated
         // then, at later eval times, as in the per-record loop).
-        let plan_result = if self.replies_enabled {
+        let mut send_err: Option<Error> = None;
+        let (plan_result, replies_emitted) = if self.replies_enabled {
             self.reply_current.clear();
             let mut sink = ShardEncodeSink {
                 meta: &self.reply_meta,
@@ -392,13 +437,18 @@ impl TaskProcessor {
             };
             let r = self.plan.advance_batch(&self.t_evals, &mut sink);
             sink.flush();
-            if let Some(e) = sink.send_err {
-                return Err(e);
-            }
-            r
+            let emitted = sink.next as u64;
+            send_err = sink.send_err;
+            (r, emitted)
         } else {
-            self.plan.advance_batch(&self.t_evals, &mut ())
+            (self.plan.advance_batch(&self.t_evals, &mut ()), 0)
         };
+        // the evaluated prefix counts even when the batch ends in an
+        // error — its events really were appended and evaluated
+        self.flush_batch_telemetry(started, replies_emitted);
+        if let Some(e) = send_err {
+            return Err(e);
+        }
         if let Some(e) = failed {
             return Err(e);
         }
@@ -408,6 +458,52 @@ impl TaskProcessor {
             self.checkpoint()?;
         }
         Ok(())
+    }
+
+    /// Push this batch's counters and the reservoir/state deltas since
+    /// the previous batch into the telemetry registry. Called once per
+    /// processed batch — never per event — so the per-event hot path
+    /// stays free of shared-memory traffic.
+    fn flush_batch_telemetry(&mut self, started: Instant, replies: u64) {
+        let b = &self.telemetry.backend;
+        b.batches.incr();
+        b.events.add(self.t_evals.len() as u64);
+        b.replies.add(replies);
+        b.batch_ns
+            .record(started.elapsed().as_nanos().min(u64::MAX as u128) as u64);
+
+        let sealed = self.reservoir.sealed_chunks();
+        let open_bytes = self.reservoir.open_chunk_bytes();
+        let r = &self.telemetry.reservoir;
+        r.chunks_sealed
+            .add(sealed.saturating_sub(self.tel_base.sealed_chunks));
+        r.open_chunk_bytes
+            .add_signed(open_bytes as i64 - self.tel_base.open_chunk_bytes as i64);
+        self.tel_base.sealed_chunks = sealed;
+        self.tel_base.open_chunk_bytes = open_bytes;
+
+        let state = self.plan.state();
+        let (kv_reads, kv_writes, evictions, spills, live) = (
+            state.kv_reads,
+            state.kv_writes,
+            state.evictions,
+            state.spills,
+            state.cached_states() as u64,
+        );
+        let s = &self.telemetry.state;
+        s.kv_reads.add(kv_reads.saturating_sub(self.tel_base.kv_reads));
+        s.kv_writes
+            .add(kv_writes.saturating_sub(self.tel_base.kv_writes));
+        s.evictions
+            .add(evictions.saturating_sub(self.tel_base.evictions));
+        s.spills.add(spills.saturating_sub(self.tel_base.spills));
+        s.live_slots
+            .add_signed(live as i64 - self.tel_base.live_slots as i64);
+        self.tel_base.kv_reads = kv_reads;
+        self.tel_base.kv_writes = kv_writes;
+        self.tel_base.evictions = evictions;
+        self.tel_base.spills = spills;
+        self.tel_base.live_slots = live;
     }
 
     /// Durability barrier: seal-pending chunks to disk + flush states.

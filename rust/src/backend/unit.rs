@@ -12,9 +12,11 @@ use crate::config::EngineConfig;
 use crate::error::Result;
 use crate::frontend::Registry;
 use crate::mlog::{BrokerRef, Consumer, Record, TopicPartition};
+use crate::telemetry::Telemetry;
 use std::collections::HashMap;
 use std::path::PathBuf;
 use std::sync::mpsc::{Receiver, Sender, TryRecvError};
+use std::sync::Arc;
 use std::time::Duration;
 
 /// Operational tasks delivered to a processor unit (Algorithm 1, line 2).
@@ -49,6 +51,7 @@ impl Backend {
         registry: Registry,
         cfg: EngineConfig,
         node_id: &str,
+        telemetry: Arc<Telemetry>,
     ) -> Result<Backend> {
         let mut units = Vec::with_capacity(cfg.processor_units);
         for unit_id in 0..cfg.processor_units {
@@ -56,10 +59,11 @@ impl Backend {
             let broker = broker.clone();
             let registry = registry.clone();
             let cfg = cfg.clone();
+            let tel = telemetry.clone();
             let name = format!("{node_id}-unit{unit_id}");
             let join = std::thread::Builder::new()
                 .name(name.clone())
-                .spawn(move || unit_loop(broker, registry, cfg, name, ops_rx))
+                .spawn(move || unit_loop(broker, registry, cfg, name, ops_rx, tel))
                 .map_err(|e| crate::error::Error::internal(format!("spawn unit: {e}")))?;
             units.push(UnitHandle {
                 ops_tx,
@@ -124,6 +128,7 @@ fn unit_loop(
     cfg: EngineConfig,
     unit_name: String,
     ops_rx: Receiver<OpTask>,
+    telemetry: Arc<Telemetry>,
 ) {
     let producer = broker.producer();
     let mut consumer: Option<Consumer> = None;
@@ -210,6 +215,7 @@ fn unit_loop(
                 &producer,
                 c,
                 &unit_name,
+                &telemetry,
             ) {
                 log::error!("{unit_name}: reconcile failed: {e}");
             }
@@ -245,13 +251,20 @@ fn unit_loop(
                     );
                 }
             }
-            // advisory commit for observability
+            // advisory commit for observability: recovery replays from the
+            // task processor's own checkpointed offset, but the committed
+            // group offset lets scrape-time lag probes see how far each
+            // partition's consumption has progressed
+            if let Some(last) = records.last() {
+                c.commit(tp_key, last.offset + 1);
+            }
         }
     }
 }
 
 /// Create/destroy task processors to match the new assignment, seeking
 /// each new partition to the processor's recovery offset.
+#[allow(clippy::too_many_arguments)]
 fn reconcile(
     tasks: &mut HashMap<TopicPartition, TaskProcessor>,
     assignment: &[TopicPartition],
@@ -260,6 +273,7 @@ fn reconcile(
     producer: &crate::mlog::Producer,
     consumer: &mut Consumer,
     unit_name: &str,
+    telemetry: &Arc<Telemetry>,
 ) -> Result<()> {
     // drop task processors we no longer own (their state flushes on Drop
     // via reservoir/kvstore Drop impls)
@@ -285,7 +299,7 @@ fn reconcile(
             .join("tasks")
             .join(&tp_key.topic)
             .join(format!("p{}", tp_key.partition));
-        let tp = TaskProcessor::open(
+        let mut tp = TaskProcessor::open(
             dir,
             def,
             entity,
@@ -294,6 +308,7 @@ fn reconcile(
             producer.clone(),
             true,
         )?;
+        tp.set_telemetry(telemetry.clone());
         log::info!(
             "{unit_name}: took over {tp_key} (recovered {} events, resuming at offset {})",
             tp.recovered_events,

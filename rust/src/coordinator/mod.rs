@@ -8,12 +8,13 @@
 //! multi-node behaviour, including fail-over, is fully exercised by
 //! multiple Node instances over a shared messaging substrate.
 
-use crate::backend::Backend;
+use crate::backend::{Backend, BACKEND_GROUP};
 use crate::config::{EngineConfig, StreamDef};
 use crate::error::Result;
 use crate::frontend::{FrontEnd, Registry, ReplyCollector};
-use crate::mlog::BrokerRef;
+use crate::mlog::{BrokerRef, TopicPartition};
 use crate::net::{NetOptions, NetServer};
+use crate::telemetry::Telemetry;
 use crate::util::hash::FxHashMap;
 use std::sync::{Arc, RwLock};
 
@@ -28,6 +29,7 @@ pub struct Node {
     frontend: Arc<FrontEnd>,
     backend: Option<Backend>,
     net: Option<NetServer>,
+    telemetry: Arc<Telemetry>,
 }
 
 impl Node {
@@ -35,12 +37,51 @@ impl Node {
     pub fn start(name: &str, cfg: EngineConfig, broker: BrokerRef) -> Result<Node> {
         std::fs::create_dir_all(&cfg.data_dir)?;
         let registry: Registry = Arc::new(RwLock::new(FxHashMap::default()));
+        let telemetry = Arc::new(Telemetry::new());
+        // scrape-time probes for the stages that keep their own internal
+        // counters: mlog append/fsync totals and per-partition backend
+        // consumer lag (end offset − committed offset). Only run on
+        // snapshot, so a broker read-lock here costs the hot path nothing.
+        {
+            let broker = broker.clone();
+            telemetry.register_probe(move |out| {
+                let (appends, fsyncs) = broker.io_stats();
+                out.push(("mlog.appends".to_string(), appends));
+                out.push(("mlog.fsyncs".to_string(), fsyncs));
+                for topic in broker.topic_names() {
+                    let partitions = broker.partition_count(&topic).unwrap_or(0);
+                    for p in 0..partitions {
+                        let tp = TopicPartition {
+                            topic: topic.clone(),
+                            partition: p,
+                        };
+                        // only partitions the backend group actually
+                        // consumes (reply topics et al. have no commit)
+                        if let Some(committed) = broker.committed_offset(BACKEND_GROUP, &tp) {
+                            if let Ok(end) = broker.end_offset(&tp) {
+                                out.push((
+                                    format!("mlog.lag.{topic}/{p}"),
+                                    end.saturating_sub(committed),
+                                ));
+                            }
+                        }
+                    }
+                }
+            });
+        }
         let frontend = Arc::new(
             FrontEnd::new(broker.clone(), registry.clone(), cfg.partitions_per_topic)
                 .with_ingest_batch(cfg.ingest_batch)
-                .with_reply_partitions(cfg.reply_partitions),
+                .with_reply_partitions(cfg.reply_partitions)
+                .with_telemetry(telemetry.clone()),
         );
-        let backend = Backend::start(broker.clone(), registry.clone(), cfg.clone(), name)?;
+        let backend = Backend::start(
+            broker.clone(),
+            registry.clone(),
+            cfg.clone(),
+            name,
+            telemetry.clone(),
+        )?;
         let net = match &cfg.listen_addr {
             Some(addr) => Some(NetServer::start(
                 frontend.clone(),
@@ -58,7 +99,14 @@ impl Node {
             frontend,
             backend: Some(backend),
             net,
+            telemetry,
         })
+    }
+
+    /// The node's telemetry registry (scrape with
+    /// [`Telemetry::snapshot`]).
+    pub fn telemetry(&self) -> &Arc<Telemetry> {
+        &self.telemetry
     }
 
     /// Bound address of the node's TCP server (None when not listening).

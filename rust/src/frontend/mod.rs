@@ -34,6 +34,7 @@ use crate::config::StreamDef;
 use crate::error::{Error, Result};
 use crate::event::{codec, Event, EventView, RawBatchBuf, RawEvent, ViewScratch};
 use crate::mlog::{BatchEntry, BrokerRef, Consumer, Payload, Producer};
+use crate::telemetry::Telemetry;
 use crate::util::hash;
 use crate::util::hash::FxHashMap;
 use crate::util::json::Json;
@@ -337,6 +338,10 @@ pub struct FrontEnd {
     /// Max records per producer append batch (config `ingest_batch`).
     ingest_batch: usize,
     next_ingest_id: AtomicU64,
+    /// Engine telemetry registry; routing records batch/event/interner
+    /// counters into it (relaxed adds on per-batch accumulators — the
+    /// per-event path stays allocation- and barrier-free).
+    telemetry: Arc<Telemetry>,
 }
 
 impl FrontEnd {
@@ -359,6 +364,7 @@ impl FrontEnd {
             reply_partitions: 1,
             ingest_batch: 256,
             next_ingest_id: AtomicU64::new(seed),
+            telemetry: Arc::new(Telemetry::new()),
         }
     }
 
@@ -376,6 +382,19 @@ impl FrontEnd {
     pub fn with_reply_partitions(mut self, reply_partitions: u32) -> FrontEnd {
         self.reply_partitions = reply_partitions.max(1);
         self
+    }
+
+    /// Share an engine-wide telemetry registry (the coordinator wires
+    /// the node's registry in; a default front-end carries its own).
+    pub fn with_telemetry(mut self, telemetry: Arc<Telemetry>) -> FrontEnd {
+        self.telemetry = telemetry;
+        self
+    }
+
+    /// The telemetry registry this front-end records into (shared with
+    /// the net server and, through the coordinator, every stage).
+    pub fn telemetry(&self) -> Arc<Telemetry> {
+        self.telemetry.clone()
     }
 
     /// Configured reply-topic shard count.
@@ -490,6 +509,7 @@ impl FrontEnd {
         if events.is_empty() {
             return Ok(Vec::new());
         }
+        self.telemetry.frontend.owned_batches.incr();
         for event in &events {
             def.schema.validate(event)?;
         }
@@ -520,6 +540,9 @@ impl FrontEnd {
         stream: &str,
         events: &[RawEvent<'_>],
     ) -> Result<Vec<IngestReceipt>> {
+        if !events.is_empty() {
+            self.telemetry.frontend.raw_batches.incr();
+        }
         let first_id = self.reserve_ingest_ids(events.len() as u64);
         self.ingest_batch_raw_reserved(stream, events, first_id)
     }
@@ -577,6 +600,7 @@ impl FrontEnd {
         if events.is_empty() {
             return Ok(Vec::new());
         }
+        self.telemetry.frontend.raw_batches.incr();
         if offsets.len() != events.len() * def.schema.len() {
             return Err(Error::internal(format!(
                 "prevalidated ingest: offset table holds {} entries, expected {}",
@@ -631,6 +655,10 @@ impl FrontEnd {
         let mut replicas: Vec<((usize, u32), Replica)> =
             Vec::with_capacity(events.len() * entity_idxs.len());
         let mut receipts = Vec::with_capacity(events.len());
+        // telemetry: accumulate locally, flush once per batch (the
+        // per-event loop stays free of atomics)
+        let mut interner_hits = 0u64;
+        let mut interner_misses = 0u64;
         for (i, re) in events.iter().enumerate() {
             let ingest_id = first_id + i as u64;
             payloads.push(Envelope::encode_raw(ingest_id, re.timestamp, re.values).into());
@@ -651,8 +679,12 @@ impl FrontEnd {
                     .copied()
                     .find(|&c| key_arcs[c as usize][..] == key_buf[..])
                 {
-                    Some(c) => c,
+                    Some(c) => {
+                        interner_hits += 1;
+                        c
+                    }
                     None => {
+                        interner_misses += 1;
                         let idx = key_arcs.len() as u32;
                         key_arcs.push(key_buf.as_slice().into());
                         candidates.push(idx);
@@ -669,6 +701,11 @@ impl FrontEnd {
             }
             receipts.push(IngestReceipt { ingest_id, fanout });
         }
+        let fstats = &self.telemetry.frontend;
+        fstats.batches.incr();
+        fstats.events.add(events.len() as u64);
+        fstats.interner_hits.add(interner_hits);
+        fstats.interner_misses.add(interner_misses);
         // stable sort keeps input order within each (entity, partition)
         // run; one producer append per run, capped at `ingest_batch`
         // records per call. Runs are consumed from the vec's tail, so the

@@ -60,6 +60,20 @@
 //! closed-loop by default or open-loop at a fixed arrival rate with
 //! coordinated-omission-corrected latencies (`--rate`).
 //!
+//! ## Telemetry
+//!
+//! Every node carries a [`telemetry::Telemetry`] registry: sharded,
+//! cache-line-padded atomic counters and log-linear latency histograms
+//! covering each stage (net workers, front-end routing, mlog io,
+//! backend plan evaluation, reservoir, state store). Hot-path recording
+//! is a single relaxed atomic add — never a lock or allocation — and
+//! per-worker cells are folded only at **scrape time**. Scrapes are
+//! exposed three ways: the `STATS` wire frame (poll any serving node:
+//! `railgun stats <addr>`), the `serve --stats-interval <secs>`
+//! periodic one-line dump, and `bench-client --stats`, which prints the
+//! server-side stage breakdown next to the external latency
+//! percentiles so inside and outside views line up in one run.
+//!
 //! ## Quickstart
 //!
 //! See `examples/quickstart.rs`. In short: build a [`config::EngineConfig`],
@@ -91,6 +105,7 @@ pub mod net;
 pub mod plan;
 pub mod reservoir;
 pub mod runtime;
+pub mod telemetry;
 pub mod util;
 pub mod window;
 pub mod workload;

@@ -2,21 +2,27 @@
 //!
 //! ```text
 //! railgun serve --config <engine.json> --stream <stream.json> [--listen <addr>]
-//!     [--net-workers N]
+//!     [--net-workers N] [--stats-interval SECS]
 //!     Start a node. Without --listen (or config listen_addr): read events
 //!     as JSON lines on stdin, write replies as JSON lines on stdout.
 //!     With --listen: serve the binary TCP ingest/reply protocol; prints
 //!     "LISTEN <addr>" (the resolved port for --listen 127.0.0.1:0) and
 //!     runs until stdin reaches EOF, then shuts down cleanly.
 //!     --net-workers overrides the event-loop worker count (0 = one per
-//!     core).
+//!     core). --stats-interval dumps a one-line telemetry snapshot to
+//!     stderr every SECS seconds; on shutdown a final summary is printed
+//!     either way.
+//! railgun stats <addr>
+//!     Scrape a serving node's telemetry over the admin-plane STATS
+//!     frame and print the per-stage breakdown.
 //! railgun bench-client --addr <addr> --stream <name> [--events N]
 //!     [--batch N] [--pipeline N] [--cardinality N] [--timeout-secs N]
-//!     [--rate EPS]
+//!     [--rate EPS] [--stats]
 //!     Drive a remote node; reports throughput and p50/p99/p999
 //!     ingest→reply latency. Closed-loop by default; --rate switches to
 //!     the open-loop arrival schedule (EPS events/second) with
-//!     coordinated-omission-corrected latencies.
+//!     coordinated-omission-corrected latencies. --stats also scrapes
+//!     and prints the server's telemetry after the run.
 //! railgun check-artifacts
 //!     Load + execute the AOT artifacts, verify the runtime wiring.
 //! railgun version
@@ -38,6 +44,7 @@ fn main() {
     let args: Vec<String> = std::env::args().skip(1).collect();
     let code = match args.first().map(|s| s.as_str()) {
         Some("serve") => cmd_serve(&args[1..]),
+        Some("stats") => cmd_stats(&args[1..]),
         Some("bench-client") => cmd_bench_client(&args[1..]),
         Some("check-artifacts") => cmd_check_artifacts(),
         Some("version") => {
@@ -46,12 +53,15 @@ fn main() {
         }
         _ => {
             eprintln!(
-                "usage: railgun <serve|bench-client|check-artifacts|version>\n\
+                "usage: railgun <serve|stats|bench-client|check-artifacts|version>\n\
                  \n  serve --config <engine.json> --stream <stream.json> [--listen <addr>]\n\
                  \n      [--net-workers N]   event-loop workers (0 = one per core)\n\
+                 \n      [--stats-interval SECS]   periodic telemetry dump to stderr\n\
+                 \n  stats <host:port>   scrape and print a serving node's telemetry\n\
                  \n  bench-client --addr <host:port> --stream <name> [--events N]\n\
                  \n      [--batch N] [--pipeline N] [--cardinality N] [--timeout-secs N]\n\
                  \n      [--rate EPS]   open-loop at EPS ev/s (CO-corrected latencies)\n\
+                 \n      [--stats]      also scrape server telemetry after the run\n\
                  \n  check-artifacts   verify the AOT runtime path"
             );
             std::process::exit(2);
@@ -68,6 +78,10 @@ fn flag_value<'a>(args: &'a [String], name: &str) -> Option<&'a str> {
         .position(|a| a == name)
         .and_then(|i| args.get(i + 1))
         .map(|s| s.as_str())
+}
+
+fn flag_present(args: &[String], name: &str) -> bool {
+    args.iter().any(|a| a == name)
 }
 
 fn flag_u64(args: &[String], name: &str, default: u64) -> Result<u64> {
@@ -104,9 +118,48 @@ fn cmd_serve(args: &[String]) -> Result<()> {
     let def = StreamDef::from_json(&Json::parse(&stream_text)?)?;
     let stream_name = def.name.clone();
 
+    let stats_interval = flag_u64(args, "--stats-interval", 0)?;
+
     let broker = Broker::open(BrokerConfig::durable(cfg.data_dir.join("mlog")))?;
     let node = Node::start("node0", cfg, broker)?;
     node.register_stream(def)?;
+    let telemetry = node.telemetry().clone();
+
+    // periodic one-line telemetry dump to stderr (scrape-only: costs the
+    // hot path nothing between dumps)
+    let stats_stop = std::sync::Arc::new(std::sync::atomic::AtomicBool::new(false));
+    let stats_thread = if stats_interval > 0 {
+        let tel = telemetry.clone();
+        let stop = stats_stop.clone();
+        Some(std::thread::spawn(move || {
+            let interval = Duration::from_secs(stats_interval);
+            let slice = Duration::from_millis(200);
+            let mut elapsed = Duration::ZERO;
+            loop {
+                std::thread::sleep(slice);
+                if stop.load(std::sync::atomic::Ordering::Relaxed) {
+                    return;
+                }
+                elapsed += slice;
+                if elapsed >= interval {
+                    elapsed = Duration::ZERO;
+                    eprintln!("{}", tel.snapshot().render_compact());
+                }
+            }
+        }))
+    } else {
+        None
+    };
+    let finish = |node: Node| {
+        stats_stop.store(true, std::sync::atomic::Ordering::Relaxed);
+        if let Some(t) = stats_thread {
+            let _ = t.join();
+        }
+        // final accounting even on a bare stdin EOF: what the node did
+        // over its lifetime, one line, after the engine has quiesced
+        node.shutdown(true);
+        eprintln!("shutdown {}", telemetry.snapshot().render_compact());
+    };
 
     if let Some(addr) = node.net_addr() {
         // binary TCP protocol mode: announce the resolved address (the
@@ -119,7 +172,7 @@ fn cmd_serve(args: &[String]) -> Result<()> {
         for line in stdin.lock().lines() {
             let _ = line?; // control channel: content is ignored
         }
-        node.shutdown(true);
+        finish(node);
         return Ok(());
     }
 
@@ -147,7 +200,22 @@ fn cmd_serve(args: &[String]) -> Result<()> {
             writeln!(out, "{}", r.to_json().to_string())?;
         }
     }
-    node.shutdown(true);
+    finish(node);
+    Ok(())
+}
+
+/// `railgun stats <addr>` — scrape a serving node over the admin-plane
+/// STATS frame and print the per-stage breakdown.
+fn cmd_stats(args: &[String]) -> Result<()> {
+    let addr = args
+        .iter()
+        .map(|s| s.as_str())
+        .find(|a| !a.starts_with("--"))
+        .or_else(|| flag_value(args, "--addr"))
+        .ok_or_else(|| railgun::Error::invalid("stats: missing <addr>"))?;
+    let timeout = Duration::from_secs(flag_u64(args, "--timeout-secs", 10)?);
+    let snap = railgun::net::fetch_stats(addr, timeout)?;
+    println!("{}", snap.render());
     Ok(())
 }
 
@@ -183,6 +251,11 @@ fn cmd_bench_client(args: &[String]) -> Result<()> {
         None => railgun::net::run_closed_loop(addr, stream, &opts)?,
     };
     println!("{}", report.render());
+    if flag_present(args, "--stats") {
+        let snap = railgun::net::fetch_stats(addr, opts.timeout)?;
+        println!("SERVER STATS");
+        println!("{}", snap.render());
+    }
     if report.events_completed == 0 {
         return Err(railgun::Error::internal(
             "bench-client: no event completed its reply fanout",

@@ -289,6 +289,24 @@ impl Broker {
         self.data_cond.notify_all();
     }
 
+    /// Cumulative `(records appended, fsyncs issued)` across every
+    /// partition of every topic — the telemetry scrape probe's pull
+    /// point (the partitions' counters are relaxed atomics; this takes
+    /// no partition lock).
+    pub fn io_stats(&self) -> (u64, u64) {
+        let topics = self.topics.read().unwrap();
+        let mut appends = 0u64;
+        let mut fsyncs = 0u64;
+        for t in topics.values() {
+            for p in &t.partitions {
+                let (a, f) = p.io_counts();
+                appends += a;
+                fsyncs += f;
+            }
+        }
+        (appends, fsyncs)
+    }
+
     /// Fsync all partitions (checkpoint barrier).
     pub fn sync_all(&self) -> Result<()> {
         let topics = self.topics.read().unwrap();

@@ -5,6 +5,7 @@ use crate::error::Result;
 use crate::mlog::segment::{self, Payload, Record, SegmentWriter};
 use std::collections::VecDeque;
 use std::path::PathBuf;
+use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Condvar, Mutex};
 use std::time::Duration;
 
@@ -64,6 +65,11 @@ pub struct Partition {
     fsync: FsyncPolicy,
     inner: Mutex<PartitionInner>,
     appended: Condvar,
+    /// Records committed by appends (telemetry; read via
+    /// [`Partition::io_counts`] at scrape time).
+    appends: AtomicU64,
+    /// Fsyncs actually issued to the active segment.
+    fsyncs: AtomicU64,
 }
 
 impl Partition {
@@ -94,6 +100,8 @@ impl Partition {
                 batch_buf: Vec::new(),
             }),
             appended: Condvar::new(),
+            appends: AtomicU64::new(0),
+            fsyncs: AtomicU64::new(0),
         })
     }
 
@@ -138,6 +146,8 @@ impl Partition {
                 batch_buf: Vec::new(),
             }),
             appended: Condvar::new(),
+            appends: AtomicU64::new(0),
+            fsyncs: AtomicU64::new(0),
         })
     }
 
@@ -226,6 +236,7 @@ impl Partition {
                     }
                     match flush_res {
                         Ok(()) => {
+                            self.fsyncs.fetch_add(1, Ordering::Relaxed);
                             committed += buffered;
                             buffered = 0;
                             buf.clear();
@@ -288,6 +299,7 @@ impl Partition {
         inner.batch_buf = buf;
         drop(guard);
         if keep > 0 {
+            self.appends.fetch_add(keep, Ordering::Relaxed);
             self.appended.notify_all();
         }
         match failed {
@@ -300,13 +312,17 @@ impl Partition {
     fn sync_batch(&self, inner: &mut PartitionInner, total: u64) -> Result<()> {
         match self.fsync {
             FsyncPolicy::Never => {}
-            FsyncPolicy::Always => inner.writer.as_mut().expect("durable").sync()?,
+            FsyncPolicy::Always => {
+                inner.writer.as_mut().expect("durable").sync()?;
+                self.fsyncs.fetch_add(1, Ordering::Relaxed);
+            }
             FsyncPolicy::EveryN(n) => {
                 inner.appends_since_sync = inner
                     .appends_since_sync
                     .saturating_add(total.min(u32::MAX as u64) as u32);
                 if inner.appends_since_sync >= n {
                     inner.writer.as_mut().expect("durable").sync()?;
+                    self.fsyncs.fetch_add(1, Ordering::Relaxed);
                     inner.appends_since_sync = 0;
                 } else {
                     inner.writer.as_mut().expect("durable").flush()?;
@@ -394,8 +410,17 @@ impl Partition {
         let mut inner = self.inner.lock().unwrap();
         if let Some(w) = inner.writer.as_mut() {
             w.sync()?;
+            self.fsyncs.fetch_add(1, Ordering::Relaxed);
         }
         Ok(())
+    }
+
+    /// Cumulative `(records appended, fsyncs issued)` — telemetry pull.
+    pub fn io_counts(&self) -> (u64, u64) {
+        (
+            self.appends.load(Ordering::Relaxed),
+            self.fsyncs.load(Ordering::Relaxed),
+        )
     }
 }
 

@@ -436,3 +436,29 @@ impl NetClient {
         }
     }
 }
+
+/// Fetch a point-in-time telemetry snapshot from a node's TCP server.
+///
+/// STATS is an admin-plane exchange ([`crate::net::wire`]): it needs no
+/// HELLO handshake and no stream binding, so this opens a raw
+/// connection, sends one `STATS_REQ` and reads back the `STATS` reply —
+/// usable against a server that is busy serving ingest on every other
+/// connection.
+pub fn fetch_stats(
+    addr: impl ToSocketAddrs,
+    timeout: Duration,
+) -> Result<crate::telemetry::StatsSnapshot> {
+    let mut stream = TcpStream::connect(addr)?;
+    let _ = stream.set_nodelay(true);
+    stream.set_read_timeout(Some(timeout))?;
+    wire::write_frame(&mut stream, &Frame::StatsReq, None)?;
+    let frame = wire::read_frame(&mut stream, None, wire::DEFAULT_MAX_FRAME)?
+        .ok_or_else(|| Error::closed("server closed before STATS reply"))?;
+    match frame {
+        Frame::Stats { snapshot } => Ok(snapshot),
+        Frame::Err { message, .. } => Err(Error::invalid(format!("server error: {message}"))),
+        other => Err(Error::corrupt(format!(
+            "expected STATS reply, got {other:?}"
+        ))),
+    }
+}

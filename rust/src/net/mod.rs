@@ -6,7 +6,8 @@
 //! real process boundary — this module provides it:
 //!
 //! * [`wire`] — the frame codec (HELLO / HELLO_OK / INGEST_BATCH /
-//!   INGEST_BATCH_RAW / INGEST_ACK / REPLY_BATCH / ERR), versioned,
+//!   INGEST_BATCH_RAW / INGEST_ACK / REPLY_BATCH / ERR, plus the
+//!   admin-plane STATS_REQ / STATS telemetry scrape), versioned,
 //!   CRC'd, size-capped. Protocol v2's raw ingest body carries
 //!   pre-encoded `(timestamp, value_bytes)` pairs, so the bytes a
 //!   client encodes are the bytes the reservoir stores;
@@ -41,6 +42,6 @@ pub mod server;
 pub mod wire;
 
 pub use bench::{run_closed_loop, run_open_loop, BenchOptions, BenchReport};
-pub use client::{BatchAck, NetClient};
+pub use client::{fetch_stats, BatchAck, NetClient};
 pub use server::{NetOptions, NetServer};
 pub use wire::{Frame, MIN_PROTOCOL_VERSION, PROTOCOL_VERSION};

@@ -37,9 +37,10 @@
 //! backpressures **only itself**: when its queue passes a high-water
 //! mark the worker stops reading from it (resuming below a low-water
 //! mark), so its acks stop and a well-behaved pipelining client stalls;
-//! reply batches beyond a hard queue bound are dropped with a warning
-//! (the client sees a reply timeout), so a stalled client can never
-//! block a reply pump or starve sibling connections.
+//! reply batches beyond a hard queue bound are dropped — counted in
+//! telemetry (`net.reply_drops`) with a rate-limited log line — so the
+//! client sees a reply timeout and a stalled client can never block a
+//! reply pump, starve sibling connections, or spam the server's stderr.
 //!
 //! Routing is exact, not broadcast: the reply topic is shared by every
 //! collector in the cluster, so a pump stashes replies for ingest ids
@@ -62,6 +63,7 @@ use crate::frontend::{reply_partition_for, FrontEnd, IngestReceipt, ReplyMsg, RE
 use crate::mlog::BrokerRef;
 use crate::net::poll::{Interest, PollEvent, Poller, WakeFd};
 use crate::net::wire::{self, Frame, MIN_PROTOCOL_VERSION, PROTOCOL_VERSION};
+use crate::telemetry::Telemetry;
 use crate::util::hash::FxHashMap;
 use byteorder::{ByteOrder, LittleEndian};
 use std::collections::VecDeque;
@@ -329,6 +331,9 @@ impl WorkerHandle {
 
 struct Shared {
     frontend: Arc<FrontEnd>,
+    /// The engine's telemetry registry (shared with the front-end);
+    /// workers and pumps record net-stage counters into it.
+    tel: Arc<Telemetry>,
     opts: NetOptions,
     next_conn_id: AtomicU64,
     /// Round-robin worker assignment for accepted connections.
@@ -439,8 +444,10 @@ impl NetServer {
                 inbox: Mutex::new(Vec::new()),
             });
         }
+        let tel = frontend.telemetry();
         let shared = Arc::new(Shared {
             frontend,
+            tel,
             opts,
             next_conn_id: AtomicU64::new(0),
             next_worker: AtomicUsize::new(0),
@@ -605,6 +612,7 @@ fn setup_conn(stream: TcpStream, shared: &Arc<Shared>) -> Result<()> {
         stream,
         out,
     });
+    shared.tel.net.conns_opened.incr();
     Ok(())
 }
 
@@ -684,7 +692,7 @@ fn worker_loop(shared: Arc<Shared>, running: Arc<AtomicBool>, widx: usize, mut p
                         }
                         WorkerCmd::Flush(id) => {
                             if let Some(conn) = conns.get_mut(&id) {
-                                if flush_conn(&poller, conn) == Verdict::Dead {
+                                if flush_conn(&shared, &poller, conn) == Verdict::Dead {
                                     close_conn(&shared, &poller, conns.remove(&id));
                                 }
                             }
@@ -703,7 +711,7 @@ fn worker_loop(shared: Arc<Shared>, running: Arc<AtomicBool>, widx: usize, mut p
                 verdict = handle_readable(&shared, conn, &mut offsets);
             }
             if verdict == Verdict::Alive {
-                verdict = flush_conn(&poller, conn);
+                verdict = flush_conn(&shared, &poller, conn);
             }
             if verdict == Verdict::Dead {
                 close_conn(&shared, &poller, conns.remove(&id));
@@ -722,6 +730,7 @@ fn close_conn(shared: &Shared, poller: &Poller, conn: Option<Conn>) {
     let _ = poller.deregister(conn.stream.as_raw_fd());
     shared.conns.lock().unwrap().remove(&conn.id);
     conn.out.close();
+    shared.tel.net.conns_closed.incr();
     // conn.stream drops here, closing the fd
 }
 
@@ -739,8 +748,9 @@ fn send_frame(conn: &mut Conn, frame: &Frame) {
 }
 
 /// Answer with a fatal ERR and begin closing (the frame is flushed before
-/// the socket drops).
-fn fatal(conn: &mut Conn, message: String) {
+/// the socket drops). Every fatal protocol error counts as a parse error.
+fn fatal(shared: &Shared, conn: &mut Conn, message: String) {
+    shared.tel.net.parse_errors.incr();
     send_frame(
         conn,
         &Frame::Err {
@@ -754,6 +764,7 @@ fn fatal(conn: &mut Conn, message: String) {
 /// Budgeted nonblocking read + in-place frame parse for one connection.
 fn handle_readable(shared: &Shared, conn: &mut Conn, offsets: &mut Vec<u32>) -> Verdict {
     let mut budget = READ_BUDGET;
+    let mut nread = 0u64;
     let mut eof = false;
     while budget > 0 && !conn.closing && !conn.read_paused {
         let len = conn.rbuf.len();
@@ -767,6 +778,7 @@ fn handle_readable(shared: &Shared, conn: &mut Conn, offsets: &mut Vec<u32>) -> 
             Ok(n) => {
                 conn.rbuf.truncate(len + n);
                 budget = budget.saturating_sub(n);
+                nread += n as u64;
             }
             Err(ref e) if e.kind() == std::io::ErrorKind::WouldBlock => {
                 conn.rbuf.truncate(len);
@@ -781,6 +793,9 @@ fn handle_readable(shared: &Shared, conn: &mut Conn, offsets: &mut Vec<u32>) -> 
             }
         }
     }
+    if nread > 0 {
+        shared.tel.net.bytes_in.add(nread);
+    }
     parse_frames(shared, conn, offsets);
     if eof && !conn.closing {
         let leftover = conn.rbuf.len() - conn.rstart;
@@ -792,7 +807,7 @@ fn handle_readable(shared: &Shared, conn: &mut Conn, offsets: &mut Vec<u32>) -> 
             } else {
                 crate::error::Error::corrupt("frame: truncated body at EOF")
             };
-            fatal(conn, format!("protocol error: {e}"));
+            fatal(shared, conn, format!("protocol error: {e}"));
         } else {
             // clean close: flush whatever is queued, then drop
             conn.closing = true;
@@ -810,6 +825,7 @@ fn parse_frames(shared: &Shared, conn: &mut Conn, offsets: &mut Vec<u32>) {
     // mutates the connection (outbound queue, state)
     let rbuf = std::mem::take(&mut conn.rbuf);
     let mut pos = conn.rstart;
+    let mut nframes = 0u64;
     while !conn.closing {
         let avail = rbuf.len() - pos;
         if avail < wire::HEADER_LEN {
@@ -819,7 +835,7 @@ fn parse_frames(shared: &Shared, conn: &mut Conn, offsets: &mut Vec<u32>) {
         let magic = LittleEndian::read_u16(&header[0..2]);
         if magic != wire::MAGIC {
             let e = crate::error::Error::corrupt(format!("frame: bad magic {magic:#06x}"));
-            fatal(conn, format!("protocol error: {e}"));
+            fatal(shared, conn, format!("protocol error: {e}"));
             break;
         }
         let kind = header[2];
@@ -829,7 +845,7 @@ fn parse_frames(shared: &Shared, conn: &mut Conn, offsets: &mut Vec<u32>) {
             let e = crate::error::Error::corrupt(format!(
                 "frame: body of {len} bytes exceeds max frame size {max_frame}"
             ));
-            fatal(conn, format!("protocol error: {e}"));
+            fatal(shared, conn, format!("protocol error: {e}"));
             break;
         }
         if avail < wire::HEADER_LEN + len {
@@ -838,11 +854,15 @@ fn parse_frames(shared: &Shared, conn: &mut Conn, offsets: &mut Vec<u32>) {
         let body = &rbuf[pos + wire::HEADER_LEN..pos + wire::HEADER_LEN + len];
         if crc32fast::hash(body) != crc {
             let e = crate::error::Error::corrupt("frame: CRC mismatch");
-            fatal(conn, format!("protocol error: {e}"));
+            fatal(shared, conn, format!("protocol error: {e}"));
             break;
         }
         pos += wire::HEADER_LEN + len;
+        nframes += 1;
         dispatch_frame(shared, conn, kind, body, offsets);
+    }
+    if nframes > 0 {
+        shared.tel.net.frames_in.add(nframes);
     }
     conn.rbuf = rbuf;
     conn.rstart = pos;
@@ -861,6 +881,22 @@ fn parse_frames(shared: &Shared, conn: &mut Conn, offsets: &mut Vec<u32>) {
 /// The per-connection protocol state machine, one CRC-verified frame at
 /// a time.
 fn dispatch_frame(shared: &Shared, conn: &mut Conn, kind: u8, body: &[u8], offsets: &mut Vec<u32>) {
+    // admin plane: a STATS_REQ is answered in any connection state
+    // (monitoring pollers need no stream handshake) and never advances
+    // the protocol state machine
+    if kind == wire::KIND_STATS_REQ {
+        if !body.is_empty() {
+            fatal(
+                shared,
+                conn,
+                format!("protocol error: STATS_REQ: {} trailing bytes", body.len()),
+            );
+            return;
+        }
+        let snapshot = shared.tel.snapshot();
+        send_frame(conn, &Frame::Stats { snapshot });
+        return;
+    }
     match &conn.state {
         ConnState::Handshake => {
             // handshake: exactly one HELLO. The server speaks every
@@ -870,6 +906,7 @@ fn dispatch_frame(shared: &Shared, conn: &mut Conn, kind: u8, body: &[u8], offse
                 Ok(Frame::Hello { version, stream }) => {
                     if !(MIN_PROTOCOL_VERSION..=PROTOCOL_VERSION).contains(&version) {
                         fatal(
+                            shared,
                             conn,
                             format!(
                                 "unsupported protocol version {version} (server speaks \
@@ -888,11 +925,11 @@ fn dispatch_frame(shared: &Shared, conn: &mut Conn, kind: u8, body: &[u8], offse
                             send_frame(conn, &ok);
                             conn.state = ConnState::Streaming(def);
                         }
-                        Err(e) => fatal(conn, format!("handshake rejected: {e}")),
+                        Err(e) => fatal(shared, conn, format!("handshake rejected: {e}")),
                     }
                 }
-                Ok(_) => fatal(conn, "expected HELLO as the first frame".to_string()),
-                Err(e) => fatal(conn, format!("protocol error: {e}")),
+                Ok(_) => fatal(shared, conn, "expected HELLO as the first frame".to_string()),
+                Err(e) => fatal(shared, conn, format!("protocol error: {e}")),
             }
         }
         ConnState::Streaming(def) => {
@@ -926,7 +963,7 @@ fn dispatch_frame(shared: &Shared, conn: &mut Conn, kind: u8, body: &[u8], offse
                                     },
                                 );
                             }
-                            Err(_) => fatal(conn, format!("protocol error: {e}")),
+                            Err(_) => fatal(shared, conn, format!("protocol error: {e}")),
                         }
                     }
                 }
@@ -941,10 +978,11 @@ fn dispatch_frame(shared: &Shared, conn: &mut Conn, kind: u8, body: &[u8], offse
                     });
                 }
                 Ok(other) => fatal(
+                    shared,
                     conn,
                     format!("unexpected frame {other:?} (only ingest batches after HELLO)"),
                 ),
-                Err(e) => fatal(conn, format!("protocol error: {e}")),
+                Err(e) => fatal(shared, conn, format!("protocol error: {e}")),
             }
         }
     }
@@ -999,7 +1037,9 @@ fn handle_ingest(
 
 /// Drain the connection's outbound queue with bounded vectored writes,
 /// then reconcile poller interest and the read-pause hysteresis.
-fn flush_conn(poller: &Poller, conn: &mut Conn) -> Verdict {
+fn flush_conn(shared: &Shared, poller: &Poller, conn: &mut Conn) -> Verdict {
+    let mut nwritten = 0u64;
+    let mut nframes = 0u64;
     let pending = {
         let mut out = conn.out.buf.lock().unwrap();
         let mut budget = WRITE_BUDGET;
@@ -1018,6 +1058,7 @@ fn flush_conn(poller: &Poller, conn: &mut Conn) -> Verdict {
                 Ok(0) => return Verdict::Dead,
                 Ok(n) => {
                     budget = budget.saturating_sub(n);
+                    nwritten += n as u64;
                     // retire written bytes: whole frames pop, a partial
                     // front advances `front_pos`
                     let mut left = n;
@@ -1029,6 +1070,7 @@ fn flush_conn(poller: &Poller, conn: &mut Conn) -> Verdict {
                             left -= front_rem;
                             out.front_pos = 0;
                             out.queue.pop_front();
+                            nframes += 1;
                         } else {
                             out.front_pos += left;
                             left = 0;
@@ -1042,10 +1084,18 @@ fn flush_conn(poller: &Poller, conn: &mut Conn) -> Verdict {
         }
         out.bytes
     };
+    if nwritten > 0 {
+        shared.tel.net.bytes_out.add(nwritten);
+        shared.tel.net.frames_out.add(nframes);
+    }
+    shared.tel.net.out_queue_hwm.record_max(pending as u64);
     // read-pause hysteresis: a queue past high water stops reads (the
     // client's acks stall → a pipelining client stops sending); reads
     // resume once the queue drains below low water
     if pending > OUT_HIGH_WATER {
+        if !conn.read_paused {
+            shared.tel.net.read_pauses.incr();
+        }
         conn.read_paused = true;
     } else if conn.read_paused && pending < OUT_LOW_WATER {
         conn.read_paused = false;
@@ -1093,6 +1143,12 @@ fn reply_pump_shard(broker: BrokerRef, shared: Arc<Shared>, running: Arc<AtomicB
     let mut decoded: Vec<ReplyMsg> = Vec::new();
     let mut deliveries: FxHashMap<u64, Vec<ReplyMsg>> = FxHashMap::default();
     let mut wake_workers: Vec<usize> = Vec::new();
+    // drops this pump has seen, for rate-limited logging (the telemetry
+    // counter keeps the exact total; stderr gets the first drop and
+    // every DROP_LOG_EVERY-th after, so a pathological client cannot
+    // spam the log)
+    const DROP_LOG_EVERY: u64 = 1024;
+    let mut drops = 0u64;
     while running.load(Ordering::Relaxed) {
         let records = match part.fetch(pos, 4096) {
             Ok(r) => r,
@@ -1175,9 +1231,14 @@ fn reply_pump_shard(broker: BrokerRef, shared: Arc<Shared>, running: Arc<AtomicB
                     // slow consumer: drop this delivery rather than
                     // letting one stalled client grow server memory;
                     // the client sees a reply timeout
-                    log::warn!(
-                        "net pump[{shard}]: conn {conn_id} outbound queue full; dropping replies"
-                    );
+                    shared.tel.net.reply_drops.incr();
+                    drops += 1;
+                    if drops == 1 || drops % DROP_LOG_EVERY == 0 {
+                        log::warn!(
+                            "net pump[{shard}]: conn {conn_id} outbound queue full; \
+                             dropping replies ({drops} batches dropped by this pump so far)"
+                        );
+                    }
                 }
                 Err(PushErr::Closed) => {
                     // connection is gone; drop the stale map entry

@@ -56,6 +56,25 @@
 //! server (which rejects unknown versions outright) downgrades by
 //! re-connecting with version 1.
 //!
+//! ## The STATS admin frames
+//!
+//! `STATS_REQ` (empty body) asks the server for a telemetry snapshot;
+//! the server answers with a `STATS` frame whose body is the varint
+//! encoding of [`crate::telemetry::StatsSnapshot`]:
+//!
+//! ```text
+//! body     := version:varint n_counters:varint counter* n_hists:varint hist*
+//! counter  := name:str value:varint
+//! hist     := name:str count min max mean p50 p90 p99 p999   (varints, ns)
+//! ```
+//!
+//! The pair is **admin-plane**: it is accepted both before and after
+//! HELLO (so a monitoring poll like `railgun stats <addr>` needs no
+//! stream handshake), it never changes connection state, and the body
+//! carries its own version tag so snapshot fields can evolve without a
+//! protocol version bump. Like every frame it is length-prefixed and
+//! CRC-checked.
+//!
 //! Robustness: a reader rejects frames with a bad magic, a bad CRC, a
 //! truncated body or a body larger than its `max_frame` cap *before*
 //! trusting any of the content; the connection is then unusable (byte
@@ -68,6 +87,7 @@
 use crate::error::{Error, Result};
 use crate::event::{codec, Event, FieldType, RawEvent, Schema, SchemaRef, ViewScratch};
 use crate::frontend::ReplyMsg;
+use crate::telemetry::StatsSnapshot;
 use crate::util::varint;
 use byteorder::{ByteOrder, LittleEndian};
 use std::io::{Read, Write};
@@ -99,6 +119,11 @@ const KIND_ERR: u8 = 6;
 /// Raw ingest body (protocol v2). Public so the server's borrowed
 /// dispatch can match it without an owned [`Frame`] decode.
 pub const KIND_INGEST_BATCH_RAW: u8 = 7;
+/// Telemetry snapshot request (admin plane; empty body). Public so the
+/// server's dispatch can match it in any connection state.
+pub const KIND_STATS_REQ: u8 = 8;
+/// Telemetry snapshot reply (admin plane).
+pub const KIND_STATS: u8 = 9;
 
 /// One protocol frame.
 #[derive(Debug, Clone, PartialEq)]
@@ -166,6 +191,13 @@ pub enum Frame {
         /// Human-readable cause.
         message: String,
     },
+    /// Telemetry snapshot request (admin plane, any connection state).
+    StatsReq,
+    /// Telemetry snapshot reply.
+    Stats {
+        /// The scraped snapshot (see [`crate::telemetry`]).
+        snapshot: StatsSnapshot,
+    },
 }
 
 impl Frame {
@@ -178,6 +210,8 @@ impl Frame {
             Frame::IngestAck { .. } => KIND_INGEST_ACK,
             Frame::ReplyBatch { .. } => KIND_REPLY_BATCH,
             Frame::Err { .. } => KIND_ERR,
+            Frame::StatsReq => KIND_STATS_REQ,
+            Frame::Stats { .. } => KIND_STATS,
         }
     }
 
@@ -243,6 +277,10 @@ impl Frame {
             Frame::Err { fatal, message } => {
                 out.push(*fatal as u8);
                 varint::write_str(&mut out, message);
+            }
+            Frame::StatsReq => {}
+            Frame::Stats { snapshot } => {
+                snapshot.encode_into(&mut out);
             }
         }
         Ok(out)
@@ -356,6 +394,10 @@ impl Frame {
                 let message = varint::read_str(body, &mut pos)?.to_string();
                 Frame::Err { fatal, message }
             }
+            KIND_STATS_REQ => Frame::StatsReq,
+            KIND_STATS => Frame::Stats {
+                snapshot: StatsSnapshot::decode_from(body, &mut pos)?,
+            },
             k => return Err(Error::corrupt(format!("unknown frame kind {k}"))),
         };
         if pos != body.len() {
@@ -718,6 +760,29 @@ mod tests {
             Frame::Err {
                 fatal: true,
                 message: "boom".into(),
+            },
+            Frame::StatsReq,
+            Frame::Stats {
+                snapshot: crate::telemetry::StatsSnapshot {
+                    version: crate::telemetry::STATS_VERSION,
+                    counters: vec![
+                        ("net.bytes_in".into(), 1024),
+                        ("frontend.events".into(), 42),
+                    ],
+                    hists: vec![(
+                        "backend.batch_ns".into(),
+                        crate::telemetry::HistSummary {
+                            count: 10,
+                            min: 1_000,
+                            max: 9_000_000,
+                            mean: 450_000,
+                            p50: 300_000,
+                            p90: 800_000,
+                            p99: 4_000_000,
+                            p999: 9_000_000,
+                        },
+                    )],
+                },
             },
         ]
     }

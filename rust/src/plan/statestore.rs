@@ -90,6 +90,11 @@ pub struct StateStore {
     pub kv_reads: u64,
     /// Write-throughs to the kvstore.
     pub kv_writes: u64,
+    /// Clock-sweep evictions (observability).
+    pub evictions: u64,
+    /// Dirty slots spilled to the kvstore at eviction time
+    /// (observability; subset of `kv_writes`).
+    pub spills: u64,
     /// When set, updates mark slots dirty instead of writing through.
     deferred: bool,
     /// Dirty slot ids — dense, drained in place, no key bytes cloned.
@@ -110,6 +115,8 @@ impl StateStore {
             capacity: capacity.max(16),
             kv_reads: 0,
             kv_writes: 0,
+            evictions: 0,
+            spills: 0,
             deferred: false,
             dirty: Vec::new(),
             scratch: Vec::with_capacity(64),
@@ -285,7 +292,9 @@ impl StateStore {
             // write-through already
             if self.slots[id as usize].dirty {
                 self.persist_slot(id)?;
+                self.spills += 1;
             }
+            self.evictions += 1;
             self.free_slot(id);
         }
         Ok(())

@@ -437,6 +437,16 @@ impl Reservoir {
         self.shared.sealed_chunks.load(Ordering::Acquire) * self.shared.chunk_events as u64
     }
 
+    /// Chunks sealed so far (telemetry pull; monotonic).
+    pub fn sealed_chunks(&self) -> u64 {
+        self.shared.sealed_chunks.load(Ordering::Acquire)
+    }
+
+    /// Bytes buffered in the open (unsealed) chunk (telemetry pull).
+    pub fn open_chunk_bytes(&self) -> u64 {
+        self.open.read().unwrap().buf.len() as u64
+    }
+
     /// Create an iterator positioned at `seq`.
     pub fn iterator_at(&self, seq: u64) -> ResIterator {
         ResIterator::new(self.shared.clone(), self.open.clone(), seq)

@@ -1,0 +1,697 @@
+//! Engine-wide telemetry: counters, gauges and latency histograms.
+//!
+//! The paper's pitch is millisecond-level tail latency under
+//! mission-critical load; defending that claim requires measuring
+//! *inside* the engine, not only at the bench client (cf.
+//! arXiv:1802.08496). This module is the substrate: a per-engine
+//! [`Telemetry`] registry holding per-stage counter groups, aggregated
+//! **only at scrape time**.
+//!
+//! ## Hot-path cost contract
+//!
+//! Recording must never take a lock, allocate, or issue a
+//! sequentially-consistent barrier:
+//!
+//! * [`Counter`] is eight cache-line-padded `AtomicU64` cells; a record
+//!   is one `fetch_add(Relaxed)` on the calling thread's cell (threads
+//!   are round-robined onto cells once, via a thread-local), so
+//!   unrelated threads never contend on one line. Sums wrap, which
+//!   makes *signed* deltas free: `add_signed(-3)` adds `-3i64 as u64`
+//!   and the wrapping total comes out right.
+//! * [`Gauge`] is a single padded cell recorded with `store`/`fetch_max`.
+//! * [`LatencyHist`] is the atomic twin of [`crate::util::hist::Histogram`]
+//!   (same log-linear bucketing, lower precision): a record is one
+//!   relaxed `fetch_add` on a bucket plus relaxed min/max updates.
+//!
+//! Stages that keep their own cheap internal counters (mlog partitions,
+//! the reservoir, the state store) are not instrumented inline at all;
+//! the registry pulls them through **probes** — closures registered at
+//! node startup and run only when [`Telemetry::snapshot`] is called —
+//! or through per-batch delta pushes from the task processor. Either
+//! way the per-event cost is zero.
+//!
+//! ## Scrape model
+//!
+//! [`Telemetry::snapshot`] folds every cell into a [`StatsSnapshot`]:
+//! a flat, name-ordered list of `(name, value)` counters plus
+//! histogram summaries. The snapshot has a varint wire codec (used by
+//! the `STATS` net frame, see [`crate::net::wire`]) and renderers for
+//! the `railgun stats` CLI and the `serve --stats-interval` one-line
+//! dump. Counter values are cumulative since process start; pollers
+//! diff consecutive snapshots for rates.
+
+use crate::error::{Error, Result};
+use crate::util::hist::Histogram;
+use crate::util::varint;
+use std::cell::Cell;
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::sync::Mutex;
+
+/// Version tag carried inside every encoded [`StatsSnapshot`].
+pub const STATS_VERSION: u32 = 1;
+
+/// Number of padded cells per [`Counter`]. Eight covers the worker
+/// counts we run (net workers + pumps + backend units) without false
+/// sharing mattering past it; more shards only cost scrape time.
+const COUNTER_SHARDS: usize = 8;
+
+/// Sub-bucket precision bits of [`LatencyHist`] (≈3% relative error,
+/// 1920 buckets = 15 KiB per histogram — coarser than the bench-side
+/// `Histogram::new()` because these live per engine, always-on).
+const HIST_PRECISION: u32 = 5;
+
+#[repr(align(64))]
+struct CacheLine(AtomicU64);
+
+thread_local! {
+    /// This thread's counter shard; assigned round-robin on first use.
+    static SHARD: Cell<usize> = const { Cell::new(usize::MAX) };
+}
+
+static NEXT_SHARD: AtomicUsize = AtomicUsize::new(0);
+
+#[inline]
+fn shard_id() -> usize {
+    SHARD.with(|s| {
+        let v = s.get();
+        if v != usize::MAX {
+            return v;
+        }
+        let v = NEXT_SHARD.fetch_add(1, Ordering::Relaxed) % COUNTER_SHARDS;
+        s.set(v);
+        v
+    })
+}
+
+/// Sharded monotonic counter. See the module docs for the cost model.
+pub struct Counter {
+    cells: [CacheLine; COUNTER_SHARDS],
+}
+
+impl Default for Counter {
+    fn default() -> Self {
+        Counter {
+            cells: std::array::from_fn(|_| CacheLine(AtomicU64::new(0))),
+        }
+    }
+}
+
+impl Counter {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Add `n` to this thread's cell: one relaxed `fetch_add`.
+    #[inline]
+    pub fn add(&self, n: u64) {
+        self.cells[shard_id()].0.fetch_add(n, Ordering::Relaxed);
+    }
+
+    /// Increment by one.
+    #[inline]
+    pub fn incr(&self) {
+        self.add(1);
+    }
+
+    /// Add a signed delta; cells wrap, so the folded total is exact as
+    /// long as the *logical* value stays non-negative.
+    #[inline]
+    pub fn add_signed(&self, d: i64) {
+        self.add(d as u64);
+    }
+
+    /// Fold all cells (wrapping) into the logical total.
+    pub fn get(&self) -> u64 {
+        self.cells
+            .iter()
+            .fold(0u64, |acc, c| acc.wrapping_add(c.0.load(Ordering::Relaxed)))
+    }
+}
+
+/// Single-cell gauge for level/high-water readings (line-aligned so an
+/// embedded gauge never false-shares with its neighbours).
+#[derive(Default)]
+#[repr(align(64))]
+pub struct Gauge {
+    cell: AtomicU64,
+}
+
+impl Gauge {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    #[inline]
+    pub fn set(&self, v: u64) {
+        self.cell.store(v, Ordering::Relaxed);
+    }
+
+    /// Ratchet upward: keeps the largest value ever observed.
+    #[inline]
+    pub fn record_max(&self, v: u64) {
+        self.cell.fetch_max(v, Ordering::Relaxed);
+    }
+
+    pub fn get(&self) -> u64 {
+        self.cell.load(Ordering::Relaxed)
+    }
+}
+
+/// Atomic log-linear latency histogram (nanosecond samples).
+///
+/// Same bucketing scheme as [`Histogram`] at [`HIST_PRECISION`] bits;
+/// recording is four relaxed atomic RMWs and no branch beyond min/max.
+/// [`LatencyHist::snapshot`] materializes a plain [`Histogram`] for
+/// quantile queries and cross-worker merging.
+pub struct LatencyHist {
+    counts: Vec<AtomicU64>,
+    sum: AtomicU64,
+    min: AtomicU64,
+    max: AtomicU64,
+}
+
+impl Default for LatencyHist {
+    fn default() -> Self {
+        let magnitudes = 64 - HIST_PRECISION;
+        let buckets = (magnitudes as usize + 1) << HIST_PRECISION;
+        LatencyHist {
+            counts: (0..buckets).map(|_| AtomicU64::new(0)).collect(),
+            sum: AtomicU64::new(0),
+            min: AtomicU64::new(u64::MAX),
+            max: AtomicU64::new(0),
+        }
+    }
+}
+
+impl LatencyHist {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    #[inline]
+    fn bucket_of(value: u64) -> usize {
+        let p = HIST_PRECISION;
+        let mag = (64 - value.leading_zeros()).saturating_sub(p);
+        let sub = (value >> mag) as usize & ((1usize << p) - 1);
+        ((mag as usize) << p) | sub
+    }
+
+    /// Record one sample (nanoseconds).
+    #[inline]
+    pub fn record(&self, value: u64) {
+        self.counts[Self::bucket_of(value)].fetch_add(1, Ordering::Relaxed);
+        self.sum.fetch_add(value, Ordering::Relaxed);
+        self.min.fetch_min(value, Ordering::Relaxed);
+        self.max.fetch_max(value, Ordering::Relaxed);
+    }
+
+    /// Materialize a point-in-time [`Histogram`] copy. Total is derived
+    /// from the bucket counts so the snapshot is internally consistent
+    /// even while writers race it.
+    pub fn snapshot(&self) -> Histogram {
+        let counts: Vec<u64> = self
+            .counts
+            .iter()
+            .map(|c| c.load(Ordering::Relaxed))
+            .collect();
+        let total: u64 = counts.iter().fold(0u64, |a, &c| a.saturating_add(c));
+        Histogram::from_raw_parts(
+            HIST_PRECISION,
+            counts,
+            total,
+            self.min.load(Ordering::Relaxed),
+            self.max.load(Ordering::Relaxed),
+            self.sum.load(Ordering::Relaxed) as u128,
+        )
+    }
+
+    /// Summarize into the fixed percentile row carried by snapshots.
+    pub fn summary(&self) -> HistSummary {
+        HistSummary::of(&self.snapshot())
+    }
+}
+
+/// Net event-loop stage counters (recorded by workers and reply pumps).
+#[derive(Default)]
+pub struct NetStats {
+    pub bytes_in: Counter,
+    pub bytes_out: Counter,
+    pub frames_in: Counter,
+    pub frames_out: Counter,
+    pub parse_errors: Counter,
+    pub reply_drops: Counter,
+    pub read_pauses: Counter,
+    pub conns_opened: Counter,
+    pub conns_closed: Counter,
+    /// Largest outbound queue depth (bytes) ever seen on any connection.
+    pub out_queue_hwm: Gauge,
+}
+
+impl NetStats {
+    fn fill(&self, out: &mut Vec<(String, u64)>) {
+        out.push(("net.bytes_in".into(), self.bytes_in.get()));
+        out.push(("net.bytes_out".into(), self.bytes_out.get()));
+        out.push(("net.frames_in".into(), self.frames_in.get()));
+        out.push(("net.frames_out".into(), self.frames_out.get()));
+        out.push(("net.parse_errors".into(), self.parse_errors.get()));
+        out.push(("net.reply_drops".into(), self.reply_drops.get()));
+        out.push(("net.read_pauses".into(), self.read_pauses.get()));
+        out.push(("net.conns_opened".into(), self.conns_opened.get()));
+        out.push(("net.conns_closed".into(), self.conns_closed.get()));
+        out.push(("net.out_queue_hwm".into(), self.out_queue_hwm.get()));
+    }
+}
+
+/// Front-end routing stage counters.
+#[derive(Default)]
+pub struct FrontendStats {
+    pub batches: Counter,
+    pub events: Counter,
+    /// Batches arriving as pre-encoded raw bytes (net fast path).
+    pub raw_batches: Counter,
+    /// Batches arriving as owned `Event`s (in-process path).
+    pub owned_batches: Counter,
+    pub interner_hits: Counter,
+    pub interner_misses: Counter,
+}
+
+impl FrontendStats {
+    fn fill(&self, out: &mut Vec<(String, u64)>) {
+        out.push(("frontend.batches".into(), self.batches.get()));
+        out.push(("frontend.events".into(), self.events.get()));
+        out.push(("frontend.raw_batches".into(), self.raw_batches.get()));
+        out.push(("frontend.owned_batches".into(), self.owned_batches.get()));
+        out.push(("frontend.interner_hits".into(), self.interner_hits.get()));
+        out.push((
+            "frontend.interner_misses".into(),
+            self.interner_misses.get(),
+        ));
+    }
+}
+
+/// Backend / plan-evaluation stage counters.
+#[derive(Default)]
+pub struct BackendStats {
+    pub batches: Counter,
+    /// Events evaluated through operator plans.
+    pub events: Counter,
+    /// Reply records emitted toward the reply topic.
+    pub replies: Counter,
+    /// Wall time per processed batch (ns).
+    pub batch_ns: LatencyHist,
+}
+
+impl BackendStats {
+    fn fill(&self, out: &mut Vec<(String, u64)>) {
+        out.push(("backend.batches".into(), self.batches.get()));
+        out.push(("backend.events".into(), self.events.get()));
+        out.push(("backend.replies".into(), self.replies.get()));
+    }
+}
+
+/// Event-reservoir stage counters (delta-pushed per batch by the task
+/// processor — the reservoir itself is not instrumented inline).
+#[derive(Default)]
+pub struct ReservoirStats {
+    pub chunks_sealed: Counter,
+    /// Aggregate open-chunk buffer bytes across task processors
+    /// (signed deltas keep this a level despite being a `Counter`).
+    pub open_chunk_bytes: Counter,
+}
+
+impl ReservoirStats {
+    fn fill(&self, out: &mut Vec<(String, u64)>) {
+        out.push(("reservoir.chunks_sealed".into(), self.chunks_sealed.get()));
+        out.push((
+            "reservoir.open_chunk_bytes".into(),
+            self.open_chunk_bytes.get(),
+        ));
+    }
+}
+
+/// StateStore stage counters (delta-pushed per batch).
+#[derive(Default)]
+pub struct StateStats {
+    /// Live (cached) state-slab slots across task processors.
+    pub live_slots: Counter,
+    /// Clock-sweep evictions.
+    pub evictions: Counter,
+    /// Dirty-slot spills to the kvstore on eviction.
+    pub spills: Counter,
+    pub kv_reads: Counter,
+    pub kv_writes: Counter,
+}
+
+impl StateStats {
+    fn fill(&self, out: &mut Vec<(String, u64)>) {
+        out.push(("state.live_slots".into(), self.live_slots.get()));
+        out.push(("state.evictions".into(), self.evictions.get()));
+        out.push(("state.spills".into(), self.spills.get()));
+        out.push(("state.kv_reads".into(), self.kv_reads.get()));
+        out.push(("state.kv_writes".into(), self.kv_writes.get()));
+    }
+}
+
+type Probe = Box<dyn Fn(&mut Vec<(String, u64)>) + Send + Sync>;
+
+/// Per-engine telemetry registry. One per [`crate::coordinator::Node`];
+/// shared as `Arc<Telemetry>` by every stage that records into it.
+#[derive(Default)]
+pub struct Telemetry {
+    pub net: NetStats,
+    pub frontend: FrontendStats,
+    pub backend: BackendStats,
+    pub reservoir: ReservoirStats,
+    pub state: StateStats,
+    /// Scrape-time pull hooks for stages that keep their own counters
+    /// (mlog io totals, per-partition consumer lag). Locked only during
+    /// registration and scrape — never on a hot path.
+    probes: Mutex<Vec<Probe>>,
+}
+
+impl Telemetry {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Register a scrape-time probe appending `(name, value)` rows.
+    pub fn register_probe<F>(&self, f: F)
+    where
+        F: Fn(&mut Vec<(String, u64)>) + Send + Sync + 'static,
+    {
+        self.probes.lock().unwrap().push(Box::new(f));
+    }
+
+    /// Fold every stage into a point-in-time snapshot.
+    pub fn snapshot(&self) -> StatsSnapshot {
+        let mut counters = Vec::with_capacity(32);
+        self.net.fill(&mut counters);
+        self.frontend.fill(&mut counters);
+        self.backend.fill(&mut counters);
+        self.reservoir.fill(&mut counters);
+        self.state.fill(&mut counters);
+        for probe in self.probes.lock().unwrap().iter() {
+            probe(&mut counters);
+        }
+        let hists = vec![("backend.batch_ns".to_string(), self.backend.batch_ns.summary())];
+        StatsSnapshot {
+            version: STATS_VERSION,
+            counters,
+            hists,
+        }
+    }
+}
+
+/// Fixed percentile row summarizing one histogram (nanosecond units).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub struct HistSummary {
+    pub count: u64,
+    pub min: u64,
+    pub max: u64,
+    pub mean: u64,
+    pub p50: u64,
+    pub p90: u64,
+    pub p99: u64,
+    pub p999: u64,
+}
+
+impl HistSummary {
+    pub fn of(h: &Histogram) -> HistSummary {
+        HistSummary {
+            count: h.count(),
+            min: h.min(),
+            max: h.max(),
+            mean: h.mean() as u64,
+            p50: h.quantile(0.50),
+            p90: h.quantile(0.90),
+            p99: h.quantile(0.99),
+            p999: h.quantile(0.999),
+        }
+    }
+
+    fn encode_into(&self, out: &mut Vec<u8>) {
+        for v in [
+            self.count, self.min, self.max, self.mean, self.p50, self.p90, self.p99, self.p999,
+        ] {
+            varint::write_u64(out, v);
+        }
+    }
+
+    fn decode_from(buf: &[u8], pos: &mut usize) -> Result<HistSummary> {
+        let mut vals = [0u64; 8];
+        for v in &mut vals {
+            *v = varint::read_u64(buf, pos)?;
+        }
+        let [count, min, max, mean, p50, p90, p99, p999] = vals;
+        Ok(HistSummary {
+            count,
+            min,
+            max,
+            mean,
+            p50,
+            p90,
+            p99,
+            p999,
+        })
+    }
+
+    /// `n=… p50=…ms p99=…ms …` row (ns → ms).
+    pub fn render_ms(&self) -> String {
+        let ms = |v: u64| v as f64 / 1e6;
+        format!(
+            "n={} mean={:.3}ms p50={:.3}ms p90={:.3}ms p99={:.3}ms p99.9={:.3}ms max={:.3}ms",
+            self.count,
+            ms(self.mean),
+            ms(self.p50),
+            ms(self.p90),
+            ms(self.p99),
+            ms(self.p999),
+            ms(self.max),
+        )
+    }
+}
+
+/// Point-in-time, wire-encodable telemetry snapshot.
+///
+/// Body layout (all varint, strings length-prefixed):
+/// `version:u32  n_counters:u64  (name value)*  n_hists:u64
+///  (name count min max mean p50 p90 p99 p999)*`.
+#[derive(Debug, Clone, PartialEq, Default)]
+pub struct StatsSnapshot {
+    pub version: u32,
+    pub counters: Vec<(String, u64)>,
+    pub hists: Vec<(String, HistSummary)>,
+}
+
+impl StatsSnapshot {
+    /// Value of a counter by exact name.
+    pub fn counter(&self, name: &str) -> Option<u64> {
+        self.counters
+            .iter()
+            .find(|(n, _)| n == name)
+            .map(|(_, v)| *v)
+    }
+
+    /// Histogram summary by exact name.
+    pub fn hist(&self, name: &str) -> Option<&HistSummary> {
+        self.hists.iter().find(|(n, _)| n == name).map(|(_, h)| h)
+    }
+
+    pub fn encode_into(&self, out: &mut Vec<u8>) {
+        varint::write_u32(out, self.version);
+        varint::write_u64(out, self.counters.len() as u64);
+        for (name, v) in &self.counters {
+            varint::write_str(out, name);
+            varint::write_u64(out, *v);
+        }
+        varint::write_u64(out, self.hists.len() as u64);
+        for (name, h) in &self.hists {
+            varint::write_str(out, name);
+            h.encode_into(out);
+        }
+    }
+
+    pub fn decode_from(buf: &[u8], pos: &mut usize) -> Result<StatsSnapshot> {
+        let version = varint::read_u32(buf, pos)?;
+        let nc = varint::read_u64(buf, pos)? as usize;
+        if nc > 65_536 {
+            return Err(Error::corrupt(format!("STATS: absurd counter count {nc}")));
+        }
+        let mut counters = Vec::with_capacity(nc.min(4096));
+        for _ in 0..nc {
+            let name = varint::read_str(buf, pos)?.to_string();
+            let v = varint::read_u64(buf, pos)?;
+            counters.push((name, v));
+        }
+        let nh = varint::read_u64(buf, pos)? as usize;
+        if nh > 4096 {
+            return Err(Error::corrupt(format!("STATS: absurd hist count {nh}")));
+        }
+        let mut hists = Vec::with_capacity(nh.min(256));
+        for _ in 0..nh {
+            let name = varint::read_str(buf, pos)?.to_string();
+            hists.push((name, HistSummary::decode_from(buf, pos)?));
+        }
+        Ok(StatsSnapshot {
+            version,
+            counters,
+            hists,
+        })
+    }
+
+    /// Multi-line human rendering (the `railgun stats` output).
+    pub fn render(&self) -> String {
+        let mut out = format!("stats v{}\n", self.version);
+        let width = self
+            .counters
+            .iter()
+            .map(|(n, _)| n.len())
+            .chain(self.hists.iter().map(|(n, _)| n.len()))
+            .max()
+            .unwrap_or(0);
+        for (name, v) in &self.counters {
+            out.push_str(&format!("  {name:<width$}  {v}\n"));
+        }
+        for (name, h) in &self.hists {
+            out.push_str(&format!("  {name:<width$}  {}\n", h.render_ms()));
+        }
+        out
+    }
+
+    /// Single-line rendering for the periodic `--stats-interval` dump.
+    pub fn render_compact(&self) -> String {
+        let mut parts: Vec<String> = self
+            .counters
+            .iter()
+            .map(|(n, v)| format!("{n}={v}"))
+            .collect();
+        for (name, h) in &self.hists {
+            parts.push(format!(
+                "{name}.n={} {name}.p50={} {name}.p99={}",
+                h.count, h.p50, h.p99
+            ));
+        }
+        format!("STATS {}", parts.join(" "))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::Arc;
+
+    #[test]
+    fn counter_sums_across_threads() {
+        let c = Arc::new(Counter::new());
+        let mut handles = Vec::new();
+        for _ in 0..8 {
+            let c = c.clone();
+            handles.push(std::thread::spawn(move || {
+                for _ in 0..10_000 {
+                    c.incr();
+                }
+            }));
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+        assert_eq!(c.get(), 80_000);
+    }
+
+    #[test]
+    fn counter_signed_deltas_track_a_level() {
+        let c = Counter::new();
+        c.add_signed(100);
+        c.add_signed(-40);
+        c.add_signed(7);
+        assert_eq!(c.get(), 67);
+    }
+
+    #[test]
+    fn gauge_ratchets() {
+        let g = Gauge::new();
+        g.record_max(5);
+        g.record_max(3);
+        assert_eq!(g.get(), 5);
+        g.set(1);
+        assert_eq!(g.get(), 1);
+    }
+
+    #[test]
+    fn latency_hist_matches_plain_histogram() {
+        let lh = LatencyHist::new();
+        let mut h = Histogram::with_precision(HIST_PRECISION);
+        for v in [100u64, 1_000, 10_000, 100_000, 1_000_000, 1_000_000_000] {
+            lh.record(v);
+            h.record(v);
+        }
+        let snap = lh.snapshot();
+        assert_eq!(snap.count(), h.count());
+        assert_eq!(snap.min(), h.min());
+        assert_eq!(snap.max(), h.max());
+        for q in [0.5, 0.9, 0.99] {
+            assert_eq!(snap.quantile(q), h.quantile(q));
+        }
+    }
+
+    #[test]
+    fn empty_latency_hist_snapshot_is_sane() {
+        let lh = LatencyHist::new();
+        let s = lh.summary();
+        assert_eq!(s.count, 0);
+        assert_eq!(s.min, 0);
+        assert_eq!(s.max, 0);
+        assert_eq!(s.p99, 0);
+    }
+
+    #[test]
+    fn snapshot_codec_roundtrip() {
+        let tel = Telemetry::new();
+        tel.net.bytes_in.add(123);
+        tel.frontend.events.add(456);
+        tel.backend.batch_ns.record(1_500_000);
+        tel.register_probe(|out| out.push(("mlog.appends".into(), 99)));
+        let snap = tel.snapshot();
+        assert_eq!(snap.counter("net.bytes_in"), Some(123));
+        assert_eq!(snap.counter("frontend.events"), Some(456));
+        assert_eq!(snap.counter("mlog.appends"), Some(99));
+        assert_eq!(snap.hist("backend.batch_ns").unwrap().count, 1);
+
+        let mut buf = Vec::new();
+        snap.encode_into(&mut buf);
+        let mut pos = 0;
+        let back = StatsSnapshot::decode_from(&buf, &mut pos).unwrap();
+        assert_eq!(pos, buf.len());
+        assert_eq!(back, snap);
+    }
+
+    #[test]
+    fn snapshot_decode_rejects_truncation() {
+        let tel = Telemetry::new();
+        tel.net.frames_in.add(7);
+        let snap = tel.snapshot();
+        let mut buf = Vec::new();
+        snap.encode_into(&mut buf);
+        for cut in 0..buf.len() {
+            let mut pos = 0;
+            // decoding a strict prefix must either error or stop short
+            // of consuming the full original body — never misread
+            if let Ok(s) = StatsSnapshot::decode_from(&buf[..cut], &mut pos) {
+                assert_ne!(s, snap, "cut at {cut} reproduced the full snapshot");
+            }
+        }
+    }
+
+    #[test]
+    fn renderers_are_non_empty() {
+        let tel = Telemetry::new();
+        tel.net.bytes_in.add(1);
+        let snap = tel.snapshot();
+        let full = snap.render();
+        assert!(full.contains("net.bytes_in"), "{full}");
+        assert!(full.contains("backend.batch_ns"), "{full}");
+        let compact = snap.render_compact();
+        assert!(compact.starts_with("STATS "), "{compact}");
+        assert!(compact.contains("net.bytes_in=1"), "{compact}");
+    }
+}

@@ -49,6 +49,32 @@ impl Histogram {
         }
     }
 
+    /// Rehydrate a histogram from externally-maintained raw parts — the
+    /// bridge from `telemetry::LatencyHist`'s atomic cells to quantile
+    /// queries. `counts` must have the exact bucket count for
+    /// `precision`, and `min` follows the internal convention
+    /// (`u64::MAX` when empty).
+    pub fn from_raw_parts(
+        precision: u32,
+        counts: Vec<u64>,
+        total: u64,
+        min: u64,
+        max: u64,
+        sum: u128,
+    ) -> Self {
+        assert!((1..=12).contains(&precision));
+        let buckets = ((64 - precision) as usize + 1) << precision;
+        assert_eq!(counts.len(), buckets, "bucket count mismatch");
+        Histogram {
+            precision,
+            counts,
+            total,
+            min,
+            max,
+            sum,
+        }
+    }
+
     #[inline]
     fn bucket_of(&self, value: u64) -> usize {
         let p = self.precision;
@@ -71,13 +97,16 @@ impl Histogram {
         sub << mag
     }
 
-    /// Record one sample.
+    /// Record one sample. Bucket and total counts saturate at
+    /// `u64::MAX` rather than wrapping (and panicking in debug), so a
+    /// long-lived histogram degrades to a pinned count, never a bogus
+    /// quantile.
     #[inline]
     pub fn record(&mut self, value: u64) {
         let b = self.bucket_of(value);
-        self.counts[b] += 1;
-        self.total += 1;
-        self.sum += value as u128;
+        self.counts[b] = self.counts[b].saturating_add(1);
+        self.total = self.total.saturating_add(1);
+        self.sum = self.sum.saturating_add(value as u128);
         if value < self.min {
             self.min = value;
         }
@@ -93,9 +122,9 @@ impl Histogram {
             return;
         }
         let b = self.bucket_of(value);
-        self.counts[b] += n;
-        self.total += n;
-        self.sum += value as u128 * n as u128;
+        self.counts[b] = self.counts[b].saturating_add(n);
+        self.total = self.total.saturating_add(n);
+        self.sum = self.sum.saturating_add(value as u128 * n as u128);
         if value < self.min {
             self.min = value;
         }
@@ -156,14 +185,16 @@ impl Histogram {
         self.max
     }
 
-    /// Merge another histogram (must have equal precision).
+    /// Merge another histogram (must have equal precision). Saturating,
+    /// like [`Self::record`]; merging an empty histogram is a no-op
+    /// (the `u64::MAX` empty-min sentinel cannot leak through `min()`).
     pub fn merge(&mut self, other: &Histogram) {
         assert_eq!(self.precision, other.precision);
         for (a, b) in self.counts.iter_mut().zip(other.counts.iter()) {
-            *a += b;
+            *a = a.saturating_add(*b);
         }
-        self.total += other.total;
-        self.sum += other.sum;
+        self.total = self.total.saturating_add(other.total);
+        self.sum = self.sum.saturating_add(other.sum);
         self.min = self.min.min(other.min);
         self.max = self.max.max(other.max);
     }
@@ -293,6 +324,80 @@ mod tests {
         h.record(u64::MAX / 2);
         assert_eq!(h.max(), u64::MAX);
         assert!(h.quantile(1.0) >= u64::MAX / 2);
+    }
+
+    #[test]
+    fn merge_with_empty_is_identity_both_ways() {
+        let mut a = Histogram::new();
+        a.record(100);
+        a.record(9999);
+        let before = (a.count(), a.min(), a.max(), a.quantile(0.5));
+        a.merge(&Histogram::new());
+        assert_eq!((a.count(), a.min(), a.max(), a.quantile(0.5)), before);
+
+        let mut empty = Histogram::new();
+        empty.merge(&a);
+        assert_eq!(empty.count(), a.count());
+        assert_eq!(empty.min(), a.min());
+        assert_eq!(empty.max(), a.max());
+        assert_eq!(empty.quantile(0.5), a.quantile(0.5));
+    }
+
+    #[test]
+    fn merge_of_two_empties_stays_empty() {
+        let mut a = Histogram::new();
+        a.merge(&Histogram::new());
+        assert_eq!(a.count(), 0);
+        assert_eq!(a.min(), 0); // empty-min sentinel must not leak
+        assert_eq!(a.quantile(0.999), 0);
+    }
+
+    #[test]
+    fn counts_saturate_instead_of_wrapping() {
+        // drive one bucket to the brink via record_n, then push past it
+        let mut h = Histogram::new();
+        h.record_n(500, u64::MAX - 1);
+        h.record(500);
+        h.record(500); // would wrap without saturation
+        assert_eq!(h.count(), u64::MAX);
+        assert_eq!(h.quantile(0.5), 500);
+        // merging two saturated histograms must also pin, not wrap
+        let other = h.clone();
+        h.merge(&other);
+        assert_eq!(h.count(), u64::MAX);
+        assert_eq!(h.max(), 500);
+    }
+
+    #[test]
+    fn from_raw_parts_roundtrips_a_recorded_histogram() {
+        let mut h = Histogram::with_precision(5);
+        for v in [3u64, 70, 4096, 1 << 40] {
+            h.record(v);
+        }
+        let rebuilt = Histogram::from_raw_parts(
+            5,
+            h.counts.clone(),
+            h.total,
+            h.min,
+            h.max,
+            h.sum,
+        );
+        assert_eq!(rebuilt.count(), h.count());
+        assert_eq!(rebuilt.min(), h.min());
+        assert_eq!(rebuilt.max(), h.max());
+        for q in [0.0, 0.5, 0.99, 1.0] {
+            assert_eq!(rebuilt.quantile(q), h.quantile(q));
+        }
+    }
+
+    #[test]
+    fn from_raw_parts_empty_is_sane() {
+        let buckets = ((64 - 5) as usize + 1) << 5;
+        let h = Histogram::from_raw_parts(5, vec![0; buckets], 0, u64::MAX, 0, 0);
+        assert_eq!(h.count(), 0);
+        assert_eq!(h.min(), 0);
+        assert_eq!(h.quantile(0.5), 0);
+        assert_eq!(h.mean(), 0.0);
     }
 
     #[test]

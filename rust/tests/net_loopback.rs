@@ -827,3 +827,65 @@ fn slow_reader_backpressures_only_itself() {
     drop(sock);
     node.shutdown(true);
 }
+
+/// A counter name whose value is a level (can legitimately shrink), not
+/// a cumulative total.
+fn is_level_stat(name: &str) -> bool {
+    name == "reservoir.open_chunk_bytes"
+        || name == "state.live_slots"
+        || name.starts_with("mlog.lag.")
+}
+
+#[test]
+fn stats_scrape_roundtrips_and_counts_ingested_events() {
+    let tmp = TempDir::new("net_stats");
+    let (node, addr) = listening_node(&tmp);
+
+    // the STATS exchange is admin-plane: no HELLO, fresh connection,
+    // idle server — and the snapshot survives its wire codec roundtrip
+    let s0 = railgun::net::fetch_stats(addr.as_str(), LONG).unwrap();
+    assert!(!s0.counters.is_empty(), "snapshot has a breakdown when idle");
+    assert_eq!(s0.counter("frontend.events"), Some(0));
+
+    // quiesced batch: ingest_remote awaits every event's full reply
+    // fanout, so by the time it returns the whole pipeline has drained
+    let events = sample_events(64);
+    let replies = ingest_remote(&addr, &events);
+    assert_eq!(replies.len(), events.len());
+
+    let s1 = railgun::net::fetch_stats(addr.as_str(), LONG).unwrap();
+    let s2 = railgun::net::fetch_stats(addr.as_str(), LONG).unwrap();
+
+    // ingested == sent, counted once at the frontend regardless of the
+    // per-entity fanout downstream
+    assert_eq!(s1.counter("frontend.events"), Some(events.len() as u64));
+    // each event routes to both entity topics, so the backend evaluates
+    // at least one batch per topic and replies once per evaluation
+    assert!(s1.counter("backend.events").unwrap() >= events.len() as u64);
+    assert_eq!(
+        s1.counter("backend.replies"),
+        Some(2 * events.len() as u64),
+        "fanout-2 stream: two reply messages per ingested event"
+    );
+    assert!(s1.counter("net.bytes_in").unwrap() > 0);
+    assert!(s1.counter("net.frames_out").unwrap() > 0);
+    assert!(s1.hist("backend.batch_ns").unwrap().count > 0);
+
+    // every cumulative counter is monotonic across scrapes
+    for (earlier, later) in [(&s0, &s1), (&s1, &s2)] {
+        for (name, v) in &earlier.counters {
+            if is_level_stat(name) {
+                continue;
+            }
+            let after = later
+                .counter(name)
+                .unwrap_or_else(|| panic!("{name} vanished between scrapes"));
+            assert!(
+                after >= *v,
+                "{name} went backwards: {v} -> {after}"
+            );
+        }
+    }
+
+    node.shutdown(true);
+}
