@@ -906,6 +906,8 @@ fn baseline_conn(sock: std::net::TcpStream, frontend: Arc<FrontEnd>) {
         version: wire::PROTOCOL_VERSION,
         fanout,
         fields: wire::schema_fields(&def.schema),
+        producer_id: 1,
+        epoch: 1,
     }
     .encode(None)
     .unwrap();
@@ -937,6 +939,7 @@ fn baseline_conn(sock: std::net::TcpStream, frontend: Arc<FrontEnd>) {
             first_ingest_id: first,
             count: receipts.len() as u32,
             fanout,
+            duplicate: false,
         }
         .encode(None)
         .unwrap();

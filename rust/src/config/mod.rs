@@ -66,6 +66,20 @@ pub struct EngineConfig {
     /// instance and a slice of the connections). `0` ⇒ one per
     /// available core.
     pub net_event_workers: usize,
+    /// Client-side bound on the blocking HELLO → HELLO_OK exchange in
+    /// milliseconds ([`crate::net::ConnectOptions::hello_timeout`]), so
+    /// a dead or wedged server cannot hang `connect` forever.
+    pub net_hello_timeout_ms: u64,
+    /// Client-side transport-fault retry attempts before surfacing the
+    /// error ([`crate::net::RetryPolicy::max_attempts`]). `0` disables
+    /// retry — no resend buffer is kept.
+    pub net_retry_attempts: u32,
+    /// First retry backoff in milliseconds; doubles per consecutive
+    /// attempt ([`crate::net::RetryPolicy::base_backoff_ms`]).
+    pub net_retry_base_ms: u64,
+    /// Retry backoff ceiling in milliseconds
+    /// ([`crate::net::RetryPolicy::max_backoff_ms`]).
+    pub net_retry_max_ms: u64,
 }
 
 impl EngineConfig {
@@ -90,6 +104,10 @@ impl EngineConfig {
             net_max_frame_bytes: 8 << 20,
             net_nodelay: true,
             net_event_workers: 0,
+            net_hello_timeout_ms: 10_000,
+            net_retry_attempts: 0,
+            net_retry_base_ms: 50,
+            net_retry_max_ms: 2_000,
         }
     }
 
@@ -104,6 +122,9 @@ impl EngineConfig {
             poll_timeout_ms: 5,
             reply_partitions: 2,
             net_event_workers: 2,
+            net_hello_timeout_ms: 2_000,
+            net_retry_base_ms: 10,
+            net_retry_max_ms: 100,
             ..EngineConfig::new(data_dir)
         }
     }
@@ -148,6 +169,11 @@ impl EngineConfig {
         cfg.reply_flush_events = get_usize("reply_flush_events", cfg.reply_flush_events)?;
         cfg.reply_partitions = get_usize("reply_partitions", cfg.reply_partitions as usize)? as u32;
         cfg.net_max_frame_bytes = get_usize("net_max_frame_bytes", cfg.net_max_frame_bytes)?;
+        cfg.net_hello_timeout_ms =
+            get_usize("net_hello_timeout_ms", cfg.net_hello_timeout_ms as usize)? as u64;
+        cfg.net_retry_base_ms =
+            get_usize("net_retry_base_ms", cfg.net_retry_base_ms as usize)? as u64;
+        cfg.net_retry_max_ms = get_usize("net_retry_max_ms", cfg.net_retry_max_ms as usize)? as u64;
         // 0 is meaningful here (= one worker per core), so this knob
         // can't ride the positive-only helper
         if let Some(j) = obj.get("net_event_workers") {
@@ -157,6 +183,16 @@ impl EngineConfig {
                 .map(|v| v as usize)
                 .ok_or_else(|| {
                     Error::invalid("config: 'net_event_workers' must be a non-negative integer")
+                })?;
+        }
+        // 0 is meaningful here too (= retry disabled)
+        if let Some(j) = obj.get("net_retry_attempts") {
+            cfg.net_retry_attempts = j
+                .as_i64()
+                .filter(|v| (0..=i64::from(u32::MAX)).contains(v))
+                .map(|v| v as u32)
+                .ok_or_else(|| {
+                    Error::invalid("config: 'net_retry_attempts' must be a non-negative integer")
                 })?;
         }
         if let Some(j) = obj.get("listen_addr") {
@@ -531,6 +567,42 @@ mod tests {
         assert_eq!(cfg.listen_addr, None);
         assert!(EngineConfig::from_json(
             &Json::parse(r#"{"data_dir": "/tmp/x", "listen_addr": 5}"#).unwrap()
+        )
+        .is_err());
+    }
+
+    #[test]
+    fn retry_config_from_json() {
+        let cfg =
+            EngineConfig::from_json(&Json::parse(r#"{"data_dir": "/tmp/x"}"#).unwrap()).unwrap();
+        assert_eq!(cfg.net_hello_timeout_ms, 10_000, "default handshake bound");
+        assert_eq!(cfg.net_retry_attempts, 0, "retry off by default");
+        assert_eq!(cfg.net_retry_base_ms, 50);
+        assert_eq!(cfg.net_retry_max_ms, 2_000);
+        let cfg = EngineConfig::from_json(
+            &Json::parse(
+                r#"{"data_dir": "/tmp/x", "net_hello_timeout_ms": 500,
+                    "net_retry_attempts": 6, "net_retry_base_ms": 25,
+                    "net_retry_max_ms": 400}"#,
+            )
+            .unwrap(),
+        )
+        .unwrap();
+        assert_eq!(cfg.net_hello_timeout_ms, 500);
+        assert_eq!(cfg.net_retry_attempts, 6);
+        assert_eq!(cfg.net_retry_base_ms, 25);
+        assert_eq!(cfg.net_retry_max_ms, 400);
+        let cfg = EngineConfig::from_json(
+            &Json::parse(r#"{"data_dir": "/tmp/x", "net_retry_attempts": 0}"#).unwrap(),
+        )
+        .unwrap();
+        assert_eq!(cfg.net_retry_attempts, 0, "explicit 0 (disabled) accepted");
+        assert!(EngineConfig::from_json(
+            &Json::parse(r#"{"data_dir": "/tmp/x", "net_retry_attempts": -2}"#).unwrap()
+        )
+        .is_err());
+        assert!(EngineConfig::from_json(
+            &Json::parse(r#"{"data_dir": "/tmp/x", "net_hello_timeout_ms": 0}"#).unwrap()
         )
         .is_err());
     }

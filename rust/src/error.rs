@@ -67,6 +67,19 @@ impl Error {
     pub fn internal(msg: impl fmt::Display) -> Self {
         Error::Internal(msg.to_string())
     }
+
+    /// Whether a retry of the failed operation can plausibly succeed.
+    ///
+    /// Transport and availability faults ([`Error::Io`],
+    /// [`Error::Closed`]) are transient: the bytes were fine, the world
+    /// wasn't. Everything else — corruption, validation, missing
+    /// entities, internal invariants — is deterministic: the same input
+    /// fails the same way, so retrying is wasted work. The net client's
+    /// retry loop and the server's ingest error replies both classify
+    /// through this one predicate.
+    pub fn is_retryable(&self) -> bool {
+        matches!(self, Error::Io(_) | Error::Closed(_))
+    }
 }
 
 #[cfg(test)]
@@ -79,6 +92,17 @@ mod tests {
         assert_eq!(e.to_string(), "corrupt data: bad magic 0xdead");
         let e = Error::invalid("hop > window");
         assert_eq!(e.to_string(), "invalid: hop > window");
+    }
+
+    #[test]
+    fn retryable_is_transport_only() {
+        let io = std::io::Error::new(std::io::ErrorKind::BrokenPipe, "pipe");
+        assert!(Error::from(io).is_retryable());
+        assert!(Error::closed("server shutting down").is_retryable());
+        assert!(!Error::invalid("bad seq").is_retryable());
+        assert!(!Error::corrupt("crc").is_retryable());
+        assert!(!Error::not_found("stream").is_retryable());
+        assert!(!Error::internal("invariant").is_retryable());
     }
 
     #[test]

@@ -29,6 +29,25 @@
 //! codec), one record per (task-processor, batch) with multiple
 //! [`ReplyMsg`]s per record; [`ReplyMsg::to_json`] remains for
 //! client-facing rendering only.
+//!
+//! ## Exactly-once ingest: the idempotent-producer dedup table
+//!
+//! The net server publishes through [`FrontEnd::ingest_batch_raw_tagged`],
+//! which keys every batch by `(producer_id, batch_seq)` — the identity
+//! HELLO negotiates (see [`crate::net::wire`]) plus the per-producer
+//! sequence number on the ingest frame. The pair is packed into the
+//! [`crate::mlog::Record::seq`] tag of every record the batch publishes,
+//! so the dedup state is persisted *inside the data itself*: recovery
+//! replays the log anyway, and [`crate::mlog::Broker::recovered_producers`]
+//! hands back each producer's durable high-water for free. A retried
+//! batch is classified **before** publication — fresh seqs publish
+//! normally; exact duplicates are acked (`duplicate = true`) with the
+//! original id range and never touch the mlog; a batch whose first
+//! attempt died between partitions is *completed*, appending only the
+//! records missing from durable storage under the original ingest ids,
+//! byte-identical to what the first attempt would have written. The
+//! fast path adds one per-producer mutex and zero allocations to a
+//! fresh batch; the reconstruction paths are retry-only.
 
 use crate::config::StreamDef;
 use crate::error::{Error, Result};
@@ -39,8 +58,9 @@ use crate::util::hash;
 use crate::util::hash::FxHashMap;
 use crate::util::json::Json;
 use crate::util::varint;
-use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::{Arc, RwLock};
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicU32, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex, RwLock};
 use std::time::{Duration, Instant};
 
 /// Name of the shared reply topic.
@@ -327,6 +347,106 @@ pub struct IngestReceipt {
     pub fanout: u32,
 }
 
+/// Outcome of a tagged (idempotent-producer) ingest: everything an
+/// INGEST_ACK needs, whether the batch published fresh, completed a
+/// partial earlier attempt, or deduplicated entirely.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct IngestOutcome {
+    /// First ingest id of the batch — the *original* assignment on
+    /// every retry path, so acks are authoritative across resends.
+    pub first_ingest_id: u64,
+    /// Events in the batch.
+    pub count: u32,
+    /// Replies to expect per event.
+    pub fanout: u32,
+    /// The batch was already fully published; nothing was appended now.
+    pub duplicate: bool,
+}
+
+/// How many completed batches each producer remembers exactly as
+/// `(seq, first_id, count)` triples. A duplicate older than the ring
+/// falls back to the durable-tag slow path, which reconstructs the same
+/// answer from the mlog records.
+const DONE_RECENT: usize = 1024;
+
+/// In-memory dedup state for one idempotent producer. The durable
+/// source of truth is the seq tag on the mlog records themselves
+/// ([`crate::mlog::Record::seq`]); this is the fast path over it.
+struct ProducerState {
+    /// Authoritative session epoch (echoed to the client on HELLO_OK).
+    epoch: u32,
+    /// Highest batch seq ever attempted — the fresh/duplicate boundary.
+    max_seen: u32,
+    /// Batches whose publish failed after ids were assigned, as
+    /// `(seq, first_id, count)`: a retry completes the missing suffix
+    /// under the same ids.
+    gaps: Vec<(u32, u64, u32)>,
+    /// Recently completed batches, newest at the back. Bounded ring —
+    /// full capacity up front, so completing a batch never reallocates.
+    done_recent: VecDeque<(u32, u64, u32)>,
+}
+
+impl ProducerState {
+    fn new(epoch: u32, max_seen: u32) -> ProducerState {
+        ProducerState {
+            epoch,
+            max_seen,
+            gaps: Vec::new(),
+            done_recent: VecDeque::with_capacity(DONE_RECENT),
+        }
+    }
+
+    fn record_done(&mut self, seq: u32, first_id: u64, count: u32) {
+        if self.done_recent.len() == DONE_RECENT {
+            self.done_recent.pop_front();
+        }
+        self.done_recent.push_back((seq, first_id, count));
+    }
+
+    fn done(&self, seq: u32) -> Option<(u64, u32)> {
+        self.done_recent
+            .iter()
+            .rev()
+            .find(|d| d.0 == seq)
+            .map(|d| (d.1, d.2))
+    }
+}
+
+/// One (entity-topic, partition) group of a tagged batch's replicas,
+/// with how much of it is already durable under the batch tag.
+struct TaggedGroup {
+    /// Entity index (= index into `def.topics()`).
+    topic: usize,
+    partition: u32,
+    /// Event indices in publication order (input order).
+    entries: Vec<u32>,
+    /// Records already durable under the tag — always a *prefix* of
+    /// `entries`, because groups publish in order.
+    durable: u64,
+    /// Payload of the earliest durable record, for id recovery.
+    earliest: Option<Payload>,
+}
+
+/// Recover a batch's original first ingest id from the earliest durable
+/// record of any group: that record is the group's first entry, so its
+/// envelope id minus the entry's event index is the batch's first id.
+/// `None` when no group has any durable record.
+fn original_first_id(groups: &[TaggedGroup]) -> Result<Option<u64>> {
+    for g in groups {
+        if let Some(p) = &g.earliest {
+            let (env_id, _, _) = Envelope::split_raw(p)?;
+            let event0 = g.entries[0] as u64;
+            let first = env_id.checked_sub(event0).ok_or_else(|| {
+                Error::internal(format!(
+                    "tagged record carries ingest id {env_id} below its event index {event0}"
+                ))
+            })?;
+            return Ok(Some(first));
+        }
+    }
+    Ok(None)
+}
+
 /// The front-end: stream registration + event routing.
 pub struct FrontEnd {
     broker: BrokerRef,
@@ -338,6 +458,15 @@ pub struct FrontEnd {
     /// Max records per producer append batch (config `ingest_batch`).
     ingest_batch: usize,
     next_ingest_id: AtomicU64,
+    /// Idempotent-producer dedup table: producer id → state. The outer
+    /// lock is held only to fetch the per-producer `Arc`; the
+    /// per-producer lock is held across classify+publish, serializing
+    /// batches of one producer while distinct producers publish in
+    /// parallel.
+    producers: Mutex<FxHashMap<u32, Arc<Mutex<ProducerState>>>>,
+    /// Next fresh producer id — seeded past every id recovered from the
+    /// mlog so a restart never re-issues a live identity.
+    next_producer_id: AtomicU32,
     /// Engine telemetry registry; routing records batch/event/interner
     /// counters into it (relaxed adds on per-batch accumulators — the
     /// per-event path stays allocation- and barrier-free).
@@ -356,6 +485,15 @@ impl FrontEnd {
             .map(|d| d.as_micros() as u64)
             .unwrap_or(1)
             << 16;
+        // rebuild the dedup table from the record tags the broker
+        // replayed: a producer resuming after our restart keeps its
+        // durable high-water, so resent batches classify as duplicates
+        let mut producers = FxHashMap::default();
+        let mut max_pid = 0u32;
+        for (pid, max_seq) in broker.recovered_producers() {
+            max_pid = max_pid.max(pid);
+            producers.insert(pid, Arc::new(Mutex::new(ProducerState::new(1, max_seq))));
+        }
         FrontEnd {
             broker,
             producer,
@@ -364,6 +502,8 @@ impl FrontEnd {
             reply_partitions: 1,
             ingest_batch: 256,
             next_ingest_id: AtomicU64::new(seed),
+            producers: Mutex::new(producers),
+            next_producer_id: AtomicU32::new(max_pid + 1),
             telemetry: Arc::new(Telemetry::new()),
         }
     }
@@ -472,11 +612,12 @@ impl FrontEnd {
     /// Failure semantics: publication is not atomic across partitions
     /// (exactly like the messaging layer it sits on). Groups are
     /// appended in deterministic (entity, partition) order; if an append
-    /// errors, the whole batch must be treated as indeterminate — a
-    /// prefix of the groups may already be durable, and retrying
-    /// re-publishes those events under fresh ingest ids. The per-event
-    /// path bounds the same non-atomicity to one event's entity fanout.
-    /// (An idempotent-producer dedup layer is a ROADMAP follow-up.)
+    /// errors, a prefix of the groups may already be durable. Callers on
+    /// this **untagged** path that retry re-publish those events under
+    /// fresh ingest ids; the net server's tagged path
+    /// ([`FrontEnd::ingest_batch_raw_tagged`]) closes exactly that hole —
+    /// a retried `(producer_id, batch_seq)` re-publishes only the
+    /// missing suffix under the original ids.
     pub fn ingest_batch(&self, stream: &str, events: Vec<Event>) -> Result<Vec<IngestReceipt>> {
         let first_id = self.reserve_ingest_ids(events.len() as u64);
         self.ingest_batch_reserved(stream, events, first_id)
@@ -577,51 +718,387 @@ impl FrontEnd {
                 )));
             }
         }
-        self.route_raw_batch(&def, events, first_id, &offsets)
+        self.route_raw_batch(&def, events, first_id, &offsets, 0)
     }
 
-    /// [`FrontEnd::ingest_batch_raw_reserved`] for a caller that has
-    /// **already validated** the batch and holds the scan's offset table
-    /// — the net server's v2 path, where the wire decode's
-    /// `decode_raw_batch_offsets` walk is the validation. The caller's
-    /// contract: `offsets` is one schema-arity run per event, each
-    /// relative to that event's value slice, produced by a successful
-    /// [`codec::scan_values`] over exactly those bytes. This closes the
-    /// v2 double-scan: each payload is walked once between socket and
-    /// mlog.
-    pub(crate) fn ingest_batch_raw_prevalidated(
+    /// Register (or resume) an idempotent-producer session. `(0, 0)`
+    /// mints a fresh identity; a non-zero id resumes the state recorded
+    /// for it — in memory if the producer is known, otherwise a fresh
+    /// entry whose history the durable record tags reconstruct on
+    /// demand. Returns the authoritative `(producer_id, epoch)` that
+    /// HELLO_OK carries.
+    pub fn register_producer(&self, producer_id: u32, epoch: u32) -> (u32, u32) {
+        let mut table = self.producers.lock().unwrap();
+        if producer_id == 0 {
+            let pid = self.next_producer_id.fetch_add(1, Ordering::Relaxed);
+            table.insert(pid, Arc::new(Mutex::new(ProducerState::new(1, 0))));
+            (pid, 1)
+        } else {
+            // never hand a fresh session this resumed id later
+            self.next_producer_id
+                .fetch_max(producer_id.saturating_add(1), Ordering::Relaxed);
+            let state = table
+                .entry(producer_id)
+                .or_insert_with(|| Arc::new(Mutex::new(ProducerState::new(epoch.max(1), 0))));
+            (producer_id, state.lock().unwrap().epoch)
+        }
+    }
+
+    /// Ingest a raw batch under an idempotent-producer tag — the net
+    /// server's publish path for both wire versions. Exactly-once per
+    /// `(producer_id, batch_seq)`: a fresh seq publishes and records
+    /// its id range; a retried seq re-publishes **only the records
+    /// missing from durable storage** (same ids, byte-identical
+    /// payloads) or nothing at all; the outcome always reports the
+    /// original `first_ingest_id`.
+    ///
+    /// `before_publish(first_id, count, fanout)` runs once the id range
+    /// is known and before anything is appended — the server registers
+    /// its reply routes there, so replies (including stashed replies
+    /// from a failed first attempt) can never race the registration.
+    ///
+    /// `offsets` is the prevalidated scan table of `events` (one
+    /// schema-arity run per event, each relative to that event's value
+    /// slice, produced by a successful [`codec::scan_values`] over
+    /// exactly those bytes — the wire decode's
+    /// [`crate::net::wire::decode_raw_batch_offsets`] walk qualifies,
+    /// closing the v2 double-scan). Pass `None` to validate here.
+    pub fn ingest_batch_raw_tagged(
         &self,
         stream: &str,
+        producer_id: u32,
+        batch_seq: u64,
         events: &[RawEvent<'_>],
-        first_id: u64,
-        offsets: &[u32],
-    ) -> Result<Vec<IngestReceipt>> {
+        offsets: Option<&[u32]>,
+        before_publish: &mut dyn FnMut(u64, u32, u32),
+    ) -> Result<IngestOutcome> {
         let def = self.stream(stream)?;
-        if events.is_empty() {
-            return Ok(Vec::new());
+        if producer_id == 0 {
+            return Err(Error::invalid("tagged ingest without a registered producer"));
         }
-        self.telemetry.frontend.raw_batches.incr();
-        if offsets.len() != events.len() * def.schema.len() {
-            return Err(Error::internal(format!(
-                "prevalidated ingest: offset table holds {} entries, expected {}",
-                offsets.len(),
-                events.len() * def.schema.len()
+        if batch_seq == 0 || batch_seq > u32::MAX as u64 {
+            return Err(Error::invalid(format!(
+                "batch seq {batch_seq} outside 1..={}",
+                u32::MAX
             )));
         }
-        self.route_raw_batch(&def, events, first_id, offsets)
+        let arity = def.schema.len();
+        let validated: Option<Vec<u32>> = match offsets {
+            Some(o) => {
+                if o.len() != events.len() * arity {
+                    return Err(Error::internal(format!(
+                        "tagged ingest: offset table holds {} entries, expected {}",
+                        o.len(),
+                        events.len() * arity
+                    )));
+                }
+                None
+            }
+            None => {
+                let mut scanned: Vec<u32> = Vec::with_capacity(events.len() * arity);
+                for (i, re) in events.iter().enumerate() {
+                    let mut pos = 0usize;
+                    codec::scan_values(re.values, &mut pos, &def.schema, &mut scanned)
+                        .map_err(|e| Error::invalid(format!("event {i}: {e}")))?;
+                    if pos != re.values.len() {
+                        return Err(Error::invalid(format!(
+                            "event {i}: {} trailing value bytes",
+                            re.values.len() - pos
+                        )));
+                    }
+                }
+                Some(scanned)
+            }
+        };
+        let offs: &[u32] = offsets.unwrap_or_else(|| validated.as_deref().expect("scanned above"));
+        let count = events.len() as u32;
+        let fanout = def.entities.len() as u32;
+        let seq32 = batch_seq as u32;
+        let tag = (producer_id as u64) << 32 | seq32 as u64;
+
+        let state = {
+            let mut table = self.producers.lock().unwrap();
+            table
+                .entry(producer_id)
+                .or_insert_with(|| Arc::new(Mutex::new(ProducerState::new(1, 0))))
+                .clone()
+        };
+        // held across classify + publish: one producer's batches are
+        // serialized, so a retry can never race its original attempt
+        let mut ps = state.lock().unwrap();
+
+        if events.is_empty() {
+            // nothing to publish or dedup; ack an empty id range and
+            // leave the seq state untouched
+            let first_id = self.reserve_ingest_ids(0);
+            before_publish(first_id, 0, fanout);
+            return Ok(IngestOutcome {
+                first_ingest_id: first_id,
+                count: 0,
+                fanout,
+                duplicate: false,
+            });
+        }
+
+        if seq32 > ps.max_seen {
+            // fresh — the fast path (no allocation beyond the publish)
+            ps.max_seen = seq32;
+            self.telemetry.frontend.raw_batches.incr();
+            let first_id = self.reserve_ingest_ids(events.len() as u64);
+            before_publish(first_id, count, fanout);
+            return match self.route_raw_batch(&def, events, first_id, offs, tag) {
+                Ok(_) => {
+                    ps.record_done(seq32, first_id, count);
+                    Ok(IngestOutcome {
+                        first_ingest_id: first_id,
+                        count,
+                        fanout,
+                        duplicate: false,
+                    })
+                }
+                Err(e) => {
+                    // a prefix of the groups may be durable; remember
+                    // the id range so the retry completes, not re-issues
+                    ps.gaps.push((seq32, first_id, count));
+                    Err(e)
+                }
+            };
+        }
+
+        if let Some(i) = ps.gaps.iter().position(|g| g.0 == seq32) {
+            // known-failed: complete the missing suffix under the
+            // original ids
+            let (_, first_id, orig_count) = ps.gaps[i];
+            if orig_count != count {
+                return Err(Error::invalid(format!(
+                    "retry of batch seq {seq32} with {count} events, originally {orig_count}"
+                )));
+            }
+            before_publish(first_id, count, fanout);
+            let groups = self.tagged_groups(&def, events, offs, tag)?;
+            let published = self.complete_groups(&def, events, offs, first_id, tag, &groups)?;
+            ps.gaps.swap_remove(i);
+            ps.record_done(seq32, first_id, count);
+            return Ok(IngestOutcome {
+                first_ingest_id: first_id,
+                count,
+                fanout,
+                duplicate: published == 0,
+            });
+        }
+
+        if let Some((first_id, orig_count)) = ps.done(seq32) {
+            // exact duplicate of a completed batch: never touches the mlog
+            if orig_count != count {
+                return Err(Error::invalid(format!(
+                    "duplicate of batch seq {seq32} with {count} events, originally {orig_count}"
+                )));
+            }
+            self.telemetry.frontend.dedup_hits.incr();
+            before_publish(first_id, count, fanout);
+            return Ok(IngestOutcome {
+                first_ingest_id: first_id,
+                count,
+                fanout,
+                duplicate: true,
+            });
+        }
+
+        // below the high water with no in-memory record — a duplicate
+        // from before a restart, or older than the done ring: rebuild
+        // the truth from the durable record tags
+        let groups = self.tagged_groups(&def, events, offs, tag)?;
+        match original_first_id(&groups)? {
+            None => {
+                // no durable trace: the original attempt published
+                // nothing — publish as if fresh
+                self.telemetry.frontend.raw_batches.incr();
+                let first_id = self.reserve_ingest_ids(events.len() as u64);
+                before_publish(first_id, count, fanout);
+                match self.route_raw_batch(&def, events, first_id, offs, tag) {
+                    Ok(_) => {
+                        ps.record_done(seq32, first_id, count);
+                        Ok(IngestOutcome {
+                            first_ingest_id: first_id,
+                            count,
+                            fanout,
+                            duplicate: false,
+                        })
+                    }
+                    Err(e) => {
+                        ps.gaps.push((seq32, first_id, count));
+                        Err(e)
+                    }
+                }
+            }
+            Some(first_id) => {
+                before_publish(first_id, count, fanout);
+                let published =
+                    self.complete_groups(&def, events, offs, first_id, tag, &groups)?;
+                if published == 0 {
+                    self.telemetry.frontend.dedup_hits.incr();
+                }
+                ps.record_done(seq32, first_id, count);
+                Ok(IngestOutcome {
+                    first_ingest_id: first_id,
+                    count,
+                    fanout,
+                    duplicate: published == 0,
+                })
+            }
+        }
+    }
+
+    /// Recompute a tagged batch's deterministic routing — the same
+    /// (entity, partition) groups, in the same in-group order, that
+    /// [`FrontEnd::route_raw_batch`] publishes — and scan each group's
+    /// partition for records already carrying `tag`. Retry-path only:
+    /// the scans are O(partition).
+    fn tagged_groups(
+        &self,
+        def: &StreamDef,
+        events: &[RawEvent<'_>],
+        offsets: &[u32],
+        tag: u64,
+    ) -> Result<Vec<TaggedGroup>> {
+        let arity = def.schema.len();
+        let topics = def.topics();
+        let entity_idxs: Vec<usize> = def
+            .entities
+            .iter()
+            .map(|e| def.schema.index_of(e).expect("validated"))
+            .collect();
+        let partition_counts: Vec<u32> = topics
+            .iter()
+            .map(|t| {
+                self.broker
+                    .partition_count(t)
+                    .ok_or_else(|| Error::not_found(format!("topic '{t}'")))
+            })
+            .collect::<Result<_>>()?;
+        let mut keyed: Vec<((usize, u32), u32)> =
+            Vec::with_capacity(events.len() * entity_idxs.len());
+        let mut key_buf: Vec<u8> = Vec::with_capacity(32);
+        for (i, re) in events.iter().enumerate() {
+            let view = EventView::from_parts(
+                re.timestamp,
+                re.values,
+                &offsets[i * arity..(i + 1) * arity],
+                &def.schema,
+            );
+            for (e_idx, &field_idx) in entity_idxs.iter().enumerate() {
+                key_buf.clear();
+                view.value_at(field_idx).key_bytes(&mut key_buf);
+                let h = hash::hash64(&key_buf);
+                let partition = hash::partition_for(h, partition_counts[e_idx]);
+                keyed.push(((e_idx, partition), i as u32));
+            }
+        }
+        // stable sort: in-group order = input order, exactly like the
+        // publish path's replica sort
+        keyed.sort_by_key(|(k, _)| *k);
+        let mut groups: Vec<TaggedGroup> = Vec::new();
+        for ((e_idx, partition), event) in keyed {
+            match groups.last_mut() {
+                Some(g) if g.topic == e_idx && g.partition == partition => g.entries.push(event),
+                _ => groups.push(TaggedGroup {
+                    topic: e_idx,
+                    partition,
+                    entries: vec![event],
+                    durable: 0,
+                    earliest: None,
+                }),
+            }
+        }
+        for g in &mut groups {
+            let (n, earliest) = self.producer.tagged(&topics[g.topic], g.partition, tag)?;
+            if n as usize > g.entries.len() {
+                return Err(Error::internal(format!(
+                    "tag {tag:#x}: partition {}/{} holds {n} records for a {}-entry group",
+                    topics[g.topic],
+                    g.partition,
+                    g.entries.len()
+                )));
+            }
+            g.durable = n;
+            g.earliest = earliest;
+        }
+        Ok(groups)
+    }
+
+    /// Publish every group's missing suffix in descending
+    /// (entity, partition) order — the same order a fresh publish uses —
+    /// re-encoding payloads under the batch's original id range, so the
+    /// appended records are byte-identical to what the first attempt
+    /// would have written. Returns the number of records appended.
+    fn complete_groups(
+        &self,
+        def: &StreamDef,
+        events: &[RawEvent<'_>],
+        offsets: &[u32],
+        first_id: u64,
+        tag: u64,
+        groups: &[TaggedGroup],
+    ) -> Result<u64> {
+        let arity = def.schema.len();
+        let topics = def.topics();
+        let entity_idxs: Vec<usize> = def
+            .entities
+            .iter()
+            .map(|e| def.schema.index_of(e).expect("validated"))
+            .collect();
+        let mut published = 0u64;
+        let mut key_buf: Vec<u8> = Vec::with_capacity(32);
+        for g in groups.iter().rev() {
+            crate::failpoint::trigger("frontend.publish_partition")?;
+            if g.durable as usize == g.entries.len() {
+                continue;
+            }
+            let missing = &g.entries[g.durable as usize..];
+            let field_idx = entity_idxs[g.topic];
+            let mut entries: Vec<BatchEntry> = Vec::with_capacity(missing.len());
+            for &i in missing {
+                let re = &events[i as usize];
+                let view = EventView::from_parts(
+                    re.timestamp,
+                    re.values,
+                    &offsets[i as usize * arity..(i as usize + 1) * arity],
+                    &def.schema,
+                );
+                key_buf.clear();
+                view.value_at(field_idx).key_bytes(&mut key_buf);
+                entries.push(BatchEntry {
+                    timestamp: re.timestamp,
+                    key: key_buf.as_slice().into(),
+                    payload: Envelope::encode_raw(first_id + i as u64, re.timestamp, re.values)
+                        .into(),
+                    seq: tag,
+                });
+            }
+            self.producer
+                .send_batch(&topics[g.topic], g.partition, entries)?;
+            published += missing.len() as u64;
+        }
+        if published > 0 {
+            self.telemetry.frontend.dup_suffix_published.add(published);
+        }
+        Ok(published)
     }
 
     /// The shared routing tail of every ingest path: splice envelope
     /// payloads, read entity keys through borrowed views (the caller's
     /// validated offset table), intern the keys, group replicas by
     /// (entity, partition) and publish. Callers guarantee `offsets` is a
-    /// valid scan of `events` against `def.schema`.
+    /// valid scan of `events` against `def.schema`. `tag` is the
+    /// idempotent-producer tag stamped on every record (`0` = untagged —
+    /// the in-process paths, whose retries are the caller's problem).
     fn route_raw_batch(
         &self,
         def: &StreamDef,
         events: &[RawEvent<'_>],
         first_id: u64,
         offsets: &[u32],
+        tag: u64,
     ) -> Result<Vec<IngestReceipt>> {
         let arity = def.schema.len();
         let fanout = def.entities.len() as u32;
@@ -716,8 +1193,10 @@ impl FrontEnd {
             timestamp: events[r.event as usize].timestamp,
             key: key_arcs[r.key as usize].clone(),
             payload: payloads[r.event as usize].clone(),
+            seq: tag,
         };
         while let Some(key) = replicas.last().map(|(k, _)| *k) {
+            crate::failpoint::trigger("frontend.publish_partition")?;
             let (e_idx, partition) = key;
             let topic = &topics[e_idx];
             let run_start = replicas.partition_point(|(k, _)| *k < key);
@@ -1267,5 +1746,209 @@ mod tests {
         assert_eq!(rc.pending_events(), 0);
         // timeout on missing event
         assert!(rc.await_event(99, 1, Duration::from_millis(30)).is_err());
+    }
+
+    /// Drain every record of the stream's entity topics:
+    /// (topic, partition, seq tag, key bytes, payload with the ingest-id
+    /// varint stripped — ids differ per front-end instance).
+    fn drain_tagged(broker: &crate::mlog::BrokerRef) -> Vec<(String, u32, u64, Vec<u8>, Vec<u8>)> {
+        let mut out = Vec::new();
+        for topic in ["payments.card", "payments.merchant"] {
+            let mut c = broker.consumer(&format!("drain-{topic}"), &[topic]).unwrap();
+            loop {
+                let p = c.poll(1000, Duration::from_millis(10)).unwrap();
+                if p.records.is_empty() && p.rebalanced.is_none() {
+                    break;
+                }
+                for (tp, rec) in p.records {
+                    let mut pos = 0;
+                    varint::read_u64(&rec.payload, &mut pos).unwrap();
+                    out.push((
+                        tp.topic,
+                        tp.partition,
+                        rec.seq,
+                        rec.key.to_vec(),
+                        rec.payload[pos..].to_vec(),
+                    ));
+                }
+            }
+        }
+        out
+    }
+
+    #[test]
+    fn tagged_ingest_dedups_exact_duplicate() {
+        let broker = Broker::open(BrokerConfig::in_memory()).unwrap();
+        let fe = FrontEnd::new(broker.clone(), registry(), 4);
+        fe.register_stream(def()).unwrap();
+        let (pid, epoch) = fe.register_producer(0, 0);
+        assert_eq!(epoch, 1);
+        let events: Vec<Event> = (0..20)
+            .map(|i| ev(i, &format!("c{}", i % 5), &format!("m{}", i % 3), i as f64))
+            .collect();
+        let schema = payments_schema();
+        let mut batch = RawBatchBuf::new();
+        for e in &events {
+            batch.push(e, &schema);
+        }
+        let mut callbacks: Vec<(u64, u32, u32)> = Vec::new();
+        let out1 = fe
+            .ingest_batch_raw_tagged("payments", pid, 1, &batch.raws(), None, &mut |f, c, fo| {
+                callbacks.push((f, c, fo))
+            })
+            .unwrap();
+        assert!(!out1.duplicate);
+        assert_eq!(out1.count, 20);
+        assert_eq!(out1.fanout, 2);
+        // exact resend: acked as duplicate with the original id range,
+        // before_publish still runs (the server re-registers replies)
+        let out2 = fe
+            .ingest_batch_raw_tagged("payments", pid, 1, &batch.raws(), None, &mut |f, c, fo| {
+                callbacks.push((f, c, fo))
+            })
+            .unwrap();
+        assert!(out2.duplicate);
+        assert_eq!(out2.first_ingest_id, out1.first_ingest_id);
+        assert_eq!((out2.count, out2.fanout), (out1.count, out1.fanout));
+        assert_eq!(callbacks.len(), 2);
+        assert_eq!(callbacks[0], callbacks[1]);
+        assert_eq!(fe.telemetry().frontend.dedup_hits.get(), 1);
+        // nothing was re-appended, and every record carries the tag
+        let records = drain_tagged(&broker);
+        assert_eq!(records.len(), events.len() * 2);
+        let tag = (pid as u64) << 32 | 1;
+        assert!(records.iter().all(|r| r.2 == tag));
+        // the next seq is fresh again and ids advance
+        let out3 = fe
+            .ingest_batch_raw_tagged("payments", pid, 2, &batch.raws(), None, &mut |_, _, _| {})
+            .unwrap();
+        assert!(!out3.duplicate);
+        assert!(out3.first_ingest_id > out1.first_ingest_id);
+        // a "duplicate" with a different event count is rejected
+        let short = &batch.raws()[..10];
+        assert!(fe
+            .ingest_batch_raw_tagged("payments", pid, 1, short, None, &mut |_, _, _| {})
+            .is_err());
+        // unregistered identities and seq 0 are rejected
+        assert!(fe
+            .ingest_batch_raw_tagged("payments", 0, 1, &batch.raws(), None, &mut |_, _, _| {})
+            .is_err());
+        assert!(fe
+            .ingest_batch_raw_tagged("payments", pid, 0, &batch.raws(), None, &mut |_, _, _| {})
+            .is_err());
+    }
+
+    #[test]
+    fn tagged_resume_after_restart_dedups_from_record_tags() {
+        let tmp = crate::util::tmp::TempDir::new("fe_tagged_restart");
+        let events: Vec<Event> = (0..20)
+            .map(|i| ev(i, &format!("c{}", i % 5), &format!("m{}", i % 3), i as f64))
+            .collect();
+        let schema = payments_schema();
+        let mut batch = RawBatchBuf::new();
+        for e in &events {
+            batch.push(e, &schema);
+        }
+        let (pid, out1) = {
+            let broker =
+                Broker::open(BrokerConfig::durable(tmp.path().to_path_buf())).unwrap();
+            let fe = FrontEnd::new(broker.clone(), registry(), 2);
+            fe.register_stream(def()).unwrap();
+            let (pid, _) = fe.register_producer(0, 0);
+            let out = fe
+                .ingest_batch_raw_tagged("payments", pid, 1, &batch.raws(), None, &mut |_, _, _| {})
+                .unwrap();
+            broker.sync_all().unwrap();
+            (pid, out)
+        };
+        // restart: a fresh broker + front-end over the same directory
+        let broker = Broker::open(BrokerConfig::durable(tmp.path().to_path_buf())).unwrap();
+        let fe = FrontEnd::new(broker.clone(), registry(), 2);
+        fe.register_stream(def()).unwrap();
+        // the client resumes its identity; the server must not re-issue it
+        let (rpid, _) = fe.register_producer(pid, 1);
+        assert_eq!(rpid, pid);
+        // the resent batch is below the recovered high water with no
+        // in-memory completion record: the durable tags answer, and the
+        // ack carries the original id range
+        let out2 = fe
+            .ingest_batch_raw_tagged("payments", pid, 1, &batch.raws(), None, &mut |_, _, _| {})
+            .unwrap();
+        assert!(out2.duplicate);
+        assert_eq!(out2.first_ingest_id, out1.first_ingest_id);
+        assert_eq!(fe.telemetry().frontend.dedup_hits.get(), 1);
+        // no extra records were appended by the resend
+        let records = drain_tagged(&broker);
+        assert_eq!(records.len(), events.len() * 2);
+        // a fresh registration never collides with the recovered identity
+        let (fresh, _) = fe.register_producer(0, 0);
+        assert!(fresh > pid);
+    }
+
+    #[cfg(feature = "failpoints")]
+    #[test]
+    fn tagged_retry_completes_missing_suffix_byte_identically() {
+        // control: the same batch published with no fault
+        let control_broker = Broker::open(BrokerConfig::in_memory()).unwrap();
+        let control_fe = FrontEnd::new(control_broker.clone(), registry(), 4);
+        control_fe.register_stream(def()).unwrap();
+        let (cpid, _) = control_fe.register_producer(0, 0);
+        let events: Vec<Event> = (0..40)
+            .map(|i| ev(i, &format!("c{}", i % 5), &format!("m{}", i % 3), i as f64))
+            .collect();
+        let schema = payments_schema();
+        let mut batch = RawBatchBuf::new();
+        for e in &events {
+            batch.push(e, &schema);
+        }
+        control_fe
+            .ingest_batch_raw_tagged("payments", cpid, 1, &batch.raws(), None, &mut |_, _, _| {})
+            .unwrap();
+
+        let broker = Broker::open(BrokerConfig::in_memory()).unwrap();
+        let fe = FrontEnd::new(broker.clone(), registry(), 4);
+        fe.register_stream(def()).unwrap();
+        let (pid, _) = fe.register_producer(0, 0);
+        assert_eq!(pid, cpid, "both front-ends mint the same first id");
+        // fail the second partition-group append: the first group lands,
+        // the rest of the batch never publishes
+        crate::failpoint::arm("frontend.publish_partition", crate::failpoint::Action::Fail {
+            at: 2,
+        });
+        let mut first_ids: Vec<u64> = Vec::new();
+        let err = fe
+            .ingest_batch_raw_tagged("payments", pid, 1, &batch.raws(), None, &mut |f, _, _| {
+                first_ids.push(f)
+            })
+            .unwrap_err();
+        assert!(err.to_string().contains("failpoint"), "{err}");
+        let partial = drain_tagged(&broker).len();
+        assert!(partial > 0, "first group must be durable");
+        assert!(partial < events.len() * 2, "the fault left a gap");
+        // the retry (failpoint disarmed itself) completes the suffix
+        // under the original ids
+        let out = fe
+            .ingest_batch_raw_tagged("payments", pid, 1, &batch.raws(), None, &mut |f, _, _| {
+                first_ids.push(f)
+            })
+            .unwrap();
+        assert!(!out.duplicate, "records were appended on the retry");
+        assert_eq!(first_ids.len(), 2);
+        assert_eq!(first_ids[0], first_ids[1], "retry keeps the id range");
+        assert_eq!(out.first_ingest_id, first_ids[0]);
+        assert!(fe.telemetry().frontend.dup_suffix_published.get() > 0);
+        // …and the final log is byte-identical to the un-faulted control
+        // (drain_tagged strips ingest ids, which differ per front-end;
+        // both brokers were drained from offset 0 so order is total)
+        let mut faulted = drain_tagged(&broker);
+        let mut control = drain_tagged(&control_broker);
+        faulted.sort();
+        control.sort();
+        assert_eq!(faulted, control);
+        // a third send is a pure duplicate
+        let out3 = fe
+            .ingest_batch_raw_tagged("payments", pid, 1, &batch.raws(), None, &mut |_, _, _| {})
+            .unwrap();
+        assert!(out3.duplicate);
     }
 }

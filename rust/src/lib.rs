@@ -43,10 +43,14 @@
 //! decoupled from thread count. Protocol v2 carries ingest batches as
 //! **pre-encoded value bytes**: the client encodes each event once, the
 //! server's wire decode validates the slices in place — keeping the
-//! scan's offset table — and forwards both to the front-end's
-//! prevalidated ingest entry, so each payload is walked exactly once
-//! between socket and mlog; the bytes a client encodes are the bytes
-//! the reservoir stores, with no owned event anywhere in between.
+//! scan's offset table — and forwards both to the front-end's tagged
+//! ingest entry, so each payload is walked exactly once between socket
+//! and mlog; the bytes a client encodes are the bytes the reservoir
+//! stores, with no owned event anywhere in between. Ingest is
+//! **exactly-once under retry**: HELLO negotiates a producer identity,
+//! batches carry per-producer sequence numbers persisted as record
+//! tags, and a resend after any failure republishes only what never
+//! became durable (see [`frontend::FrontEnd::ingest_batch_raw_tagged`]).
 //! Replies flow back per connection: the reply topic is **sharded**
 //! ([`config::EngineConfig::reply_partitions`]), task processors route
 //! each reply record by ingest id ([`frontend::reply_partition_for`]),
@@ -98,6 +102,7 @@ pub mod config;
 pub mod coordinator;
 pub mod error;
 pub mod event;
+pub mod failpoint;
 pub mod frontend;
 pub mod kvstore;
 pub mod mlog;

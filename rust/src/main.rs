@@ -17,12 +17,18 @@
 //!     frame and print the per-stage breakdown.
 //! railgun bench-client --addr <addr> --stream <name> [--events N]
 //!     [--batch N] [--pipeline N] [--cardinality N] [--timeout-secs N]
-//!     [--rate EPS] [--stats]
+//!     [--rate EPS] [--stats] [--retry N] [--retry-base-ms MS]
+//!     [--retry-max-ms MS] [--hello-timeout-ms MS] [--fault SPEC]
 //!     Drive a remote node; reports throughput and p50/p99/p999
 //!     ingest→reply latency. Closed-loop by default; --rate switches to
 //!     the open-loop arrival schedule (EPS events/second) with
 //!     coordinated-omission-corrected latencies. --stats also scrapes
-//!     and prints the server's telemetry after the run.
+//!     and prints the server's telemetry after the run. --retry N
+//!     enables transparent reconnect + resend (capped exponential
+//!     backoff, --retry-base-ms/--retry-max-ms). --fault arms local
+//!     failpoints (site=fail@N, e.g. bench.drop_conn@3 to tear the
+//!     harness's own connection down mid-run); needs a binary built
+//!     with --features failpoints.
 //! railgun check-artifacts
 //!     Load + execute the AOT artifacts, verify the runtime wiring.
 //! railgun version
@@ -62,6 +68,11 @@ fn main() {
                  \n      [--batch N] [--pipeline N] [--cardinality N] [--timeout-secs N]\n\
                  \n      [--rate EPS]   open-loop at EPS ev/s (CO-corrected latencies)\n\
                  \n      [--stats]      also scrape server telemetry after the run\n\
+                 \n      [--retry N]    reconnect + resend up to N times per fault\n\
+                 \n      [--retry-base-ms MS] [--retry-max-ms MS]   backoff bounds\n\
+                 \n      [--hello-timeout-ms MS]   handshake read bound\n\
+                 \n      [--fault SPEC] arm failpoints, e.g. bench.drop_conn@3\n\
+                 \n                     (needs a --features failpoints build)\n\
                  \n  check-artifacts   verify the AOT runtime path"
             );
             std::process::exit(2);
@@ -104,6 +115,9 @@ fn flag_f64(args: &[String], name: &str) -> Result<Option<f64>> {
 }
 
 fn cmd_serve(args: &[String]) -> Result<()> {
+    // no-op unless built with --features failpoints: lets the crash
+    // harness arm faults in a child serve via RAILGUN_FAILPOINTS
+    railgun::failpoint::init_from_env();
     let cfg_path = flag_value(args, "--config")
         .ok_or_else(|| railgun::Error::invalid("serve: missing --config"))?;
     let stream_path = flag_value(args, "--stream")
@@ -224,7 +238,25 @@ fn cmd_bench_client(args: &[String]) -> Result<()> {
         .ok_or_else(|| railgun::Error::invalid("bench-client: missing --addr"))?;
     let stream = flag_value(args, "--stream")
         .ok_or_else(|| railgun::Error::invalid("bench-client: missing --stream"))?;
+    if let Some(spec) = flag_value(args, "--fault") {
+        // errors outright on a failpoint-free build: a fault drill that
+        // silently arms nothing would report a meaningless pass
+        railgun::failpoint::arm_spec(spec)?;
+    }
     let defaults = BenchOptions::default();
+    let connect = railgun::net::ConnectOptions {
+        hello_timeout: Duration::from_millis(flag_u64(
+            args,
+            "--hello-timeout-ms",
+            defaults.connect.hello_timeout.as_millis() as u64,
+        )?),
+        retry: railgun::net::RetryPolicy {
+            max_attempts: flag_u64(args, "--retry", 0)? as u32,
+            base_backoff_ms: flag_u64(args, "--retry-base-ms", 50)?,
+            max_backoff_ms: flag_u64(args, "--retry-max-ms", 2_000)?,
+        },
+        ..defaults.connect.clone()
+    };
     let opts = BenchOptions {
         events: flag_u64(args, "--events", defaults.events)?,
         batch: flag_u64(args, "--batch", defaults.batch as u64)? as usize,
@@ -235,6 +267,7 @@ fn cmd_bench_client(args: &[String]) -> Result<()> {
             "--timeout-secs",
             defaults.timeout.as_secs(),
         )?),
+        connect,
     };
     let rate = flag_f64(args, "--rate")?;
     log::info!(

@@ -307,6 +307,27 @@ impl Broker {
         (appends, fsyncs)
     }
 
+    /// Per-producer `(producer_id, max batch_seq)` pairs replayed from
+    /// disk when this broker recovered its topics — the max is taken
+    /// across every partition of every topic, since one producer batch
+    /// fans out across partitions. The front-end seeds its
+    /// idempotent-producer dedup table from this at construction, so a
+    /// restarted node keeps rejecting duplicates of batches it already
+    /// published.
+    pub fn recovered_producers(&self) -> Vec<(u32, u32)> {
+        let topics = self.topics.read().unwrap();
+        let mut max: BTreeMap<u32, u32> = BTreeMap::new();
+        for t in topics.values() {
+            for p in &t.partitions {
+                for &(pid, bseq) in p.recovered_producers() {
+                    let e = max.entry(pid).or_insert(0);
+                    *e = (*e).max(bseq);
+                }
+            }
+        }
+        max.into_iter().collect()
+    }
+
     /// Fsync all partitions (checkpoint barrier).
     pub fn sync_all(&self) -> Result<()> {
         let topics = self.topics.read().unwrap();

@@ -70,6 +70,13 @@ impl Producer {
         self.broker.partition_count(topic)
     }
 
+    /// Count the records in one partition carrying idempotent-producer
+    /// tag `tag`, plus the payload of the earliest one — the front-end's
+    /// retry slow path (see [`crate::mlog::Partition::tagged`]).
+    pub fn tagged(&self, topic: &str, partition: u32, tag: u64) -> Result<(u64, Option<Payload>)> {
+        self.broker.partition(topic, partition)?.tagged(tag)
+    }
+
     /// Partition a key routes to (the producer-side hash used by
     /// [`Self::send_keyed`], exposed so batching callers can group
     /// entries per partition before one [`Self::send_batch`] each).

@@ -21,6 +21,10 @@ pub type PartitionId = u32;
 pub struct BatchEntry {
     /// Producer-supplied timestamp (epoch ms).
     pub timestamp: i64,
+    /// Idempotent-producer tag (`producer_id << 32 | batch_seq`; 0 =
+    /// untagged) persisted on the record — see
+    /// [`crate::mlog::Record::seq`].
+    pub seq: u64,
     /// Routing key bytes (may be empty), shareable across entries.
     pub key: Payload,
     /// Payload bytes (shareable across entity-topic replicas).
@@ -70,6 +74,10 @@ pub struct Partition {
     appends: AtomicU64,
     /// Fsyncs actually issued to the active segment.
     fsyncs: AtomicU64,
+    /// Per-producer max batch_seq observed while replaying segments in
+    /// [`Partition::recover`] — the durable half of the front-end's
+    /// idempotent-producer dedup table. Empty for created partitions.
+    recovered_producers: Vec<(u32, u32)>,
 }
 
 impl Partition {
@@ -102,6 +110,7 @@ impl Partition {
             appended: Condvar::new(),
             appends: AtomicU64::new(0),
             fsyncs: AtomicU64::new(0),
+            recovered_producers: Vec::new(),
         })
     }
 
@@ -115,9 +124,16 @@ impl Partition {
     ) -> Result<Self> {
         let mut tail = VecDeque::new();
         let mut next_offset = 0u64;
+        let mut producers: std::collections::HashMap<u32, u32> = std::collections::HashMap::new();
         for (_, path) in segment::list_segments(&dir)? {
             for r in segment::read_segment(&path)? {
                 next_offset = r.offset + 1;
+                if r.seq != 0 {
+                    let pid = (r.seq >> 32) as u32;
+                    let bseq = r.seq as u32;
+                    let max = producers.entry(pid).or_insert(0);
+                    *max = (*max).max(bseq);
+                }
                 tail.push_back(r);
             }
         }
@@ -148,12 +164,71 @@ impl Partition {
             appended: Condvar::new(),
             appends: AtomicU64::new(0),
             fsyncs: AtomicU64::new(0),
+            recovered_producers: producers.into_iter().collect(),
         })
     }
 
     /// Partition id.
     pub fn id(&self) -> PartitionId {
         self.id
+    }
+
+    /// Per-producer `(producer_id, max batch_seq)` pairs replayed from
+    /// disk at [`Partition::recover`] time (empty for created
+    /// partitions): the durable seed of the front-end's dedup table.
+    pub fn recovered_producers(&self) -> &[(u32, u32)] {
+        &self.recovered_producers
+    }
+
+    /// Count the records carrying idempotent-producer tag `seq == tag`,
+    /// and return the payload of the earliest one (lowest offset), if
+    /// any.
+    ///
+    /// This is the **retry slow path** primitive: after a failed
+    /// cross-partition publish, the front-end re-derives how many
+    /// records of the retried batch already landed here (so only the
+    /// missing suffix is re-appended) and recovers the batch's original
+    /// first ingest id from the earliest record's envelope. Scans the
+    /// in-memory tail and, when the tail no longer starts at offset 0,
+    /// the on-disk segments below it — O(partition), which is fine on a
+    /// path only taken after a fault.
+    pub fn tagged(&self, tag: u64) -> Result<(u64, Option<Payload>)> {
+        let inner = self.inner.lock().unwrap();
+        let mut count = 0u64;
+        let mut first: Option<Payload> = None;
+        for r in &inner.tail {
+            if r.seq == tag {
+                if first.is_none() {
+                    first = Some(r.payload.clone());
+                }
+                count += 1;
+            }
+        }
+        let tail_base = inner.tail_base;
+        let dir = if tail_base > 0 { self.dir.clone() } else { None };
+        drop(inner); // don't hold the lock during disk I/O
+        if let Some(dir) = dir {
+            let mut cold_count = 0u64;
+            let mut cold_first: Option<Payload> = None;
+            'segments: for (_, path) in segment::list_segments(&dir)? {
+                for r in segment::read_segment(&path)? {
+                    if r.offset >= tail_base {
+                        break 'segments; // the tail covers the rest
+                    }
+                    if r.seq == tag {
+                        if cold_first.is_none() {
+                            cold_first = Some(r.payload.clone());
+                        }
+                        cold_count += 1;
+                    }
+                }
+            }
+            count += cold_count;
+            if cold_first.is_some() {
+                first = cold_first;
+            }
+        }
+        Ok((count, first))
     }
 
     /// Append a record; returns its assigned offset.
@@ -165,6 +240,7 @@ impl Partition {
     ) -> Result<u64> {
         self.append_batch(std::iter::once(BatchEntry {
             timestamp,
+            seq: 0,
             key: key.into(),
             payload: payload.into(),
         }))
@@ -205,6 +281,7 @@ impl Partition {
             let record = Record {
                 offset: base + total,
                 timestamp: entry.timestamp,
+                seq: entry.seq,
                 // key-less records (every reply record) share one static
                 // empty Arc; keyed entries carry their Arc straight into
                 // the record — allocation-free here and on every poll
@@ -449,6 +526,7 @@ mod tests {
         let entries: Vec<BatchEntry> = (0..10u64)
             .map(|i| BatchEntry {
                 timestamp: i as i64,
+                seq: 0,
                 key: vec![].into(),
                 payload: vec![i as u8].into(),
             })
@@ -470,6 +548,7 @@ mod tests {
         let entries: Vec<BatchEntry> = (0..100u64)
             .map(|i| BatchEntry {
                 timestamp: i as i64,
+                seq: 0,
                 key: vec![].into(),
                 payload: Payload::from(&[][..]),
             })
@@ -489,6 +568,7 @@ mod tests {
             let entries: Vec<BatchEntry> = (0..30u64)
                 .map(|i| BatchEntry {
                     timestamp: i as i64,
+                    seq: 0,
                     key: vec![].into(),
                     payload: vec![i as u8].into(),
                 })
@@ -582,6 +662,102 @@ mod tests {
         });
         assert!(p.wait_for_data(0, Duration::from_secs(5)));
         t.join().unwrap();
+    }
+
+    /// One tagged batch-entry per call; tag packs (pid, batch_seq).
+    fn tagged_entries(pid: u32, bseq: u32, n: usize) -> Vec<BatchEntry> {
+        let tag = (pid as u64) << 32 | bseq as u64;
+        (0..n)
+            .map(|i| BatchEntry {
+                timestamp: i as i64,
+                seq: tag,
+                key: vec![].into(),
+                payload: vec![pid as u8, bseq as u8, i as u8].into(),
+            })
+            .collect()
+    }
+
+    #[test]
+    fn recover_rebuilds_producer_high_water_from_record_tags() {
+        let tmp = TempDir::new("part_recover_producers");
+        let dir = tmp.path().to_path_buf();
+        {
+            let p = Partition::create(0, Some(dir.clone()), 1 << 12, 1000, FsyncPolicy::Always)
+                .unwrap();
+            p.append_batch(tagged_entries(1, 1, 3)).unwrap();
+            p.append_batch(tagged_entries(1, 2, 2)).unwrap();
+            p.append_batch(tagged_entries(7, 5, 1)).unwrap();
+            p.append(0, vec![], vec![0u8]).unwrap(); // untagged: ignored
+        }
+        let p = Partition::recover(0, dir, 1 << 12, 1000, FsyncPolicy::Never).unwrap();
+        let mut got: Vec<(u32, u32)> = p.recovered_producers().to_vec();
+        got.sort();
+        assert_eq!(got, vec![(1, 2), (7, 5)]);
+    }
+
+    #[test]
+    fn tagged_counts_across_tail_and_segments() {
+        let tmp = TempDir::new("part_tagged");
+        // tiny retention: most records fall out of the in-memory tail,
+        // forcing the cold segment scan
+        let p = Partition::create(
+            0,
+            Some(tmp.path().to_path_buf()),
+            1 << 12,
+            4,
+            FsyncPolicy::Always,
+        )
+        .unwrap();
+        p.append_batch(tagged_entries(3, 9, 5)).unwrap();
+        p.append_batch(tagged_entries(3, 10, 4)).unwrap();
+        let tag9 = (3u64) << 32 | 9;
+        let tag10 = (3u64) << 32 | 10;
+        let (n9, first9) = p.tagged(tag9).unwrap();
+        assert_eq!(n9, 5);
+        assert_eq!(&first9.unwrap()[..], &[3u8, 9, 0], "earliest record's payload");
+        let (n10, first10) = p.tagged(tag10).unwrap();
+        assert_eq!(n10, 4);
+        assert_eq!(&first10.unwrap()[..], &[3u8, 10, 0]);
+        let (n_none, first_none) = p.tagged((3u64) << 32 | 11).unwrap();
+        assert_eq!((n_none, first_none), (0, None));
+    }
+
+    /// Satellite of the torn-tail property: recovery over a segment file
+    /// cut at **every** byte offset always yields an intact record
+    /// prefix and a matching `next_offset` — never an error.
+    #[test]
+    fn recover_after_cut_at_any_offset_yields_intact_prefix() {
+        let tmp = TempDir::new("part_recover_cut");
+        let dir = tmp.path().to_path_buf();
+        {
+            let p = Partition::create(0, Some(dir.clone()), 1 << 20, 1000, FsyncPolicy::Always)
+                .unwrap();
+            for i in 0..8u64 {
+                p.append(i as i64, vec![], format!("payload_{i}").into_bytes())
+                    .unwrap();
+            }
+        }
+        let seg_path = segment::list_segments(&dir).unwrap()[0].1.clone();
+        let data = std::fs::read(&seg_path).unwrap();
+        for cut in (0..=data.len()).step_by(3) {
+            std::fs::write(&seg_path, &data[..cut]).unwrap();
+            let p = Partition::recover(0, dir.clone(), 1 << 20, 1000, FsyncPolicy::Never)
+                .unwrap_or_else(|e| panic!("cut at {cut}: recover failed: {e}"));
+            let recs = p.fetch(0, 100).unwrap();
+            assert_eq!(p.end_offset(), recs.len() as u64, "cut at {cut}");
+            for (i, r) in recs.iter().enumerate() {
+                assert_eq!(r.offset, i as u64, "cut at {cut}");
+                assert_eq!(&r.payload[..], format!("payload_{i}").as_bytes(), "cut at {cut}");
+            }
+            // recover created a fresh writer segment at next_offset;
+            // remove it so the next iteration sees only the cut file
+            for (base, path) in segment::list_segments(&dir).unwrap() {
+                if path != seg_path {
+                    assert_eq!(base, p.end_offset());
+                    std::fs::remove_file(path).unwrap();
+                }
+            }
+        }
     }
 
     #[test]

@@ -4,12 +4,18 @@
 //!
 //! ```text
 //! frame  := crc32:u32 len:u32 body
-//! body   := offset:varint ts:zigzag-varint keylen:varint key payload
+//! body   := offset:varint ts:zigzag-varint seq:varint keylen:varint key payload
 //! ```
 //!
 //! `crc32` covers `body`; `len` is the body length. A torn tail frame
 //! (partial write at crash) is detected by CRC/length and truncated on
 //! recovery — records behind it were acked durable only if fsync'd.
+//!
+//! `seq` is the record's **producer tag** (`producer_id << 32 |
+//! batch_seq`, 0 = untagged): persisting it inside every record is what
+//! lets [`crate::mlog::Partition::recover`] rebuild the front-end's
+//! idempotent-producer dedup table from the log itself, with no separate
+//! dedup journal to keep in sync.
 
 use crate::error::{Error, Result};
 use crate::util::varint;
@@ -48,6 +54,10 @@ pub struct Record {
     pub offset: u64,
     /// Producer-supplied timestamp (epoch ms).
     pub timestamp: i64,
+    /// Idempotent-producer tag (`producer_id << 32 | batch_seq`; 0 =
+    /// untagged). Persisted in the segment frame so recovery rebuilds
+    /// the dedup table from the log itself.
+    pub seq: u64,
     /// Routing key bytes (shared, immutable; may be empty).
     pub key: Payload,
     /// Opaque payload (shared, immutable).
@@ -58,6 +68,7 @@ impl Record {
     fn encode_body(&self, out: &mut Vec<u8>) {
         varint::write_u64(out, self.offset);
         varint::write_i64(out, self.timestamp);
+        varint::write_u64(out, self.seq);
         varint::write_bytes(out, &self.key);
         out.extend_from_slice(&self.payload);
     }
@@ -66,11 +77,13 @@ impl Record {
         let mut pos = 0;
         let offset = varint::read_u64(body, &mut pos)?;
         let timestamp = varint::read_i64(body, &mut pos)?;
+        let seq = varint::read_u64(body, &mut pos)?;
         let key = Payload::from(varint::read_bytes(body, &mut pos)?);
         let payload = Payload::from(&body[pos..]);
         Ok(Record {
             offset,
             timestamp,
+            seq,
             key,
             payload,
         })
@@ -142,6 +155,19 @@ impl SegmentWriter {
     /// Append pre-framed bytes (one or more [`SegmentWriter::encode_frame`]
     /// outputs) with a single buffered write.
     pub fn append_encoded(&mut self, frames: &[u8]) -> Result<()> {
+        if crate::failpoint::hit("mlog.append_torn") {
+            // model a crash mid-write: half the bytes reach the file
+            // (flushed so they are really on disk), then the append
+            // fails — reopening the partition must truncate the torn
+            // tail frame
+            let half = frames.len() / 2;
+            self.file.write_all(&frames[..half])?;
+            self.file.flush()?;
+            return Err(Error::Io(std::io::Error::new(
+                std::io::ErrorKind::Other,
+                "failpoint 'mlog.append_torn' injected torn write",
+            )));
+        }
         self.file.write_all(frames)?;
         self.bytes += frames.len() as u64;
         Ok(())
@@ -166,6 +192,7 @@ impl SegmentWriter {
 
     /// Flush and fsync to stable storage.
     pub fn sync(&mut self) -> Result<()> {
+        crate::failpoint::trigger("mlog.sync")?;
         self.file.flush()?;
         self.file.get_ref().sync_data()?;
         Ok(())
@@ -237,6 +264,7 @@ mod tests {
         Record {
             offset,
             timestamp: 1000 + offset as i64,
+            seq: offset.wrapping_mul(7) << 32 | offset, // exercise the tag field
             key: format!("k{offset}").into_bytes().into(),
             payload: payload.into(),
         }
@@ -330,6 +358,7 @@ mod tests {
         let r = Record {
             offset: 0,
             timestamp: -5,
+            seq: 0,
             key: Payload::from(&[][..]),
             payload: Payload::from(&[][..]),
         };
@@ -338,4 +367,44 @@ mod tests {
         assert_eq!(read_segment(w.path()).unwrap(), vec![r]);
     }
 
+    /// Generalizes `torn_tail_is_truncated_not_error`: kill the file at
+    /// **every** byte offset (record shapes randomized by propcheck) and
+    /// require `read_segment` to yield an element-wise intact prefix of
+    /// the originals — never an error, never a mangled record.
+    #[test]
+    fn prop_cut_at_any_offset_yields_intact_prefix() {
+        use crate::util::propcheck::check;
+        let tmp = tempdir("seg_prop_cut");
+        let dir = tmp.path().to_path_buf();
+        check(
+            "segment cut prefix",
+            30,
+            |rng| (1 + rng.index(12), rng.index(40), rng.next_u64()),
+            |&(n, plen, salt)| {
+                let mut w = SegmentWriter::create(&dir, 0).map_err(|e| e.to_string())?;
+                let payload = vec![salt as u8; plen];
+                let records: Vec<Record> = (0..n as u64).map(|i| rec(i, &payload)).collect();
+                for r in &records {
+                    w.append(r).map_err(|e| e.to_string())?;
+                }
+                w.sync().map_err(|e| e.to_string())?;
+                let path = w.path().to_path_buf();
+                drop(w);
+                let data = std::fs::read(&path).map_err(|e| e.to_string())?;
+                for cut in 0..=data.len() {
+                    std::fs::write(&path, &data[..cut]).map_err(|e| e.to_string())?;
+                    let back = read_segment(&path)
+                        .map_err(|e| format!("cut at {cut}/{}: {e}", data.len()))?;
+                    if back.len() > records.len() || back[..] != records[..back.len()] {
+                        return Err(format!(
+                            "cut at {cut}/{}: got {} records, not a prefix of {n}",
+                            data.len(),
+                            back.len()
+                        ));
+                    }
+                }
+                Ok(())
+            },
+        );
+    }
 }

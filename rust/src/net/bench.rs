@@ -26,7 +26,7 @@
 
 use crate::error::{Error, Result};
 use crate::event::{Event, FieldType, Schema, Value};
-use crate::net::client::NetClient;
+use crate::net::client::{ConnectOptions, NetClient};
 use crate::util::hash::FxHashMap;
 use crate::util::hist::Histogram;
 use crate::workload::ArrivalSchedule;
@@ -45,6 +45,11 @@ pub struct BenchOptions {
     pub cardinality: u64,
     /// Give up (reporting what completed) after this long.
     pub timeout: Duration,
+    /// Connection options: handshake timeout + retry policy
+    /// (`bench-client --retry*` / `--hello-timeout-ms` flags). With a
+    /// retry policy the harness survives transport faults — the
+    /// `--fault` drill relies on it.
+    pub connect: ConnectOptions,
 }
 
 impl Default for BenchOptions {
@@ -55,9 +60,17 @@ impl Default for BenchOptions {
             pipeline: 8,
             cardinality: 10_000,
             timeout: Duration::from_secs(60),
+            connect: ConnectOptions::default(),
         }
     }
 }
+
+/// Fault-drill site checked after every closed-loop batch send: when
+/// armed (`bench-client --fault bench.drop_conn@N`, needs a
+/// `--features failpoints` build), the harness tears its own TCP
+/// connection down under the engine, proving the retry + idempotent
+/// producer path end to end from outside the process.
+pub const FAULT_DROP_CONN: &str = "bench.drop_conn";
 
 /// Harness outcome.
 #[derive(Debug)]
@@ -162,7 +175,7 @@ pub fn run_closed_loop(addr: &str, stream: &str, opts: &BenchOptions) -> Result<
     if opts.events == 0 || opts.batch == 0 || opts.pipeline == 0 {
         return Err(Error::invalid("bench: events, batch and pipeline must be > 0"));
     }
-    let mut client = NetClient::connect(addr, stream)?;
+    let mut client = NetClient::connect_opts(addr, stream, opts.connect.clone())?;
     let schema = client.schema().clone();
 
     let start = Instant::now();
@@ -189,6 +202,10 @@ pub fn run_closed_loop(addr: &str, stream: &str, opts: &BenchOptions) -> Result<
             seq_times.insert(seq, Instant::now());
             sent += n as u64;
             inflight_batches += 1;
+            if crate::failpoint::hit(FAULT_DROP_CONN) {
+                log::warn!("bench: dropping own connection after batch seq {seq} (--fault)");
+                client.inject_transport_fault();
+            }
         }
 
         client.pump(Duration::from_millis(1))?;
@@ -265,7 +282,7 @@ pub fn run_open_loop(
     if !(rate_eps > 0.0 && rate_eps.is_finite()) {
         return Err(Error::invalid("bench: rate must be a positive number"));
     }
-    let mut client = NetClient::connect(addr, stream)?;
+    let mut client = NetClient::connect_opts(addr, stream, opts.connect.clone())?;
     let schema = client.schema().clone();
     let schedule = ArrivalSchedule::new(rate_eps);
 

@@ -21,6 +21,22 @@
 //! [`NetClient::send_batch_raw`] / [`NetClient::ingest_batch_raw`]. A v1
 //! server (which rejects HELLO v2 outright) is handled by one automatic
 //! downgrade reconnect; the owned-event body is used from then on.
+//!
+//! ## Retry: exactly-once resends
+//!
+//! With a [`RetryPolicy`] (see [`ConnectOptions`]; default **off** — no
+//! resend buffer, no per-batch copy), the client survives transport
+//! faults transparently: every sent-but-unacked batch frame is retained,
+//! and when the socket dies ([`Error::is_retryable`]) the client
+//! reconnects with capped exponential backoff + jitter, re-HELLOs
+//! presenting its `(producer_id, epoch)` identity, and resends the
+//! retained frames in order — same producer, same batch seqs, so the
+//! server's idempotent-producer dedup publishes each batch **exactly
+//! once** no matter how many times the wire ate the ack
+//! ([`BatchAck::duplicate`] reports a resend of a batch that had
+//! already landed). A non-fatal server `ingest failed … retryable:`
+//! error resends just that batch on the live connection. Deterministic
+//! rejections (validation, protocol errors) are never retried.
 
 use crate::error::{Error, Result};
 use crate::event::{Event, RawBatchBuf, RawEvent, SchemaRef};
@@ -30,7 +46,7 @@ use crate::util::hash::FxHashMap;
 use byteorder::{ByteOrder, LittleEndian};
 use std::collections::VecDeque;
 use std::io::{Cursor, Read, Write};
-use std::net::{TcpStream, ToSocketAddrs};
+use std::net::{SocketAddr, TcpStream, ToSocketAddrs};
 use std::time::{Duration, Instant};
 
 /// Receipt for one pipelined ingest batch.
@@ -38,23 +54,152 @@ use std::time::{Duration, Instant};
 pub struct BatchAck {
     /// Client-assigned batch sequence number (from [`NetClient::send_batch`]).
     pub seq: u64,
-    /// First ingest id of the batch (ids are contiguous).
+    /// First ingest id of the batch (ids are contiguous). Authoritative
+    /// across resends: a retried batch is acked with its **original**
+    /// ids.
     pub first_ingest_id: u64,
     /// Events accepted.
     pub count: u32,
     /// Replies to expect per event.
     pub fanout: u32,
+    /// The server had already fully published this batch (a resend of
+    /// an acked batch); nothing was appended for this send.
+    pub duplicate: bool,
+}
+
+/// How hard the client fights a transport fault before surfacing it.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct RetryPolicy {
+    /// Consecutive recovery attempts before giving up. `0` disables
+    /// retry entirely — the client keeps no resend buffer and sends
+    /// carry zero extra cost.
+    pub max_attempts: u32,
+    /// Backoff before the first retry, in milliseconds; doubles per
+    /// consecutive attempt.
+    pub base_backoff_ms: u64,
+    /// Backoff ceiling in milliseconds.
+    pub max_backoff_ms: u64,
+}
+
+impl RetryPolicy {
+    /// No retry: faults surface immediately (the default).
+    pub fn none() -> RetryPolicy {
+        RetryPolicy {
+            max_attempts: 0,
+            base_backoff_ms: 0,
+            max_backoff_ms: 0,
+        }
+    }
+
+    /// Whether this policy retries at all.
+    pub fn enabled(&self) -> bool {
+        self.max_attempts > 0
+    }
+
+    /// Backoff before attempt `n` (1-based): capped exponential with
+    /// half-interval jitter, so a fleet of clients reconnecting after
+    /// one server restart doesn't stampede in lockstep.
+    fn backoff(&self, attempt: u32, rng: &mut u64) -> Duration {
+        let shift = attempt.saturating_sub(1).min(16);
+        let cap = self.max_backoff_ms.max(self.base_backoff_ms);
+        let exp = self.base_backoff_ms.saturating_mul(1u64 << shift).min(cap);
+        if exp == 0 {
+            return Duration::ZERO;
+        }
+        let half = exp / 2;
+        Duration::from_millis(half + xorshift64(rng) % (half + 1))
+    }
+}
+
+/// Everything [`NetClient::connect_opts`] can tune.
+#[derive(Debug, Clone)]
+pub struct ConnectOptions {
+    /// Max accepted inbound frame body size.
+    pub max_frame: usize,
+    /// Protocol version to request (the server answers with
+    /// `min(requested, server)`).
+    pub version: u32,
+    /// Bound on the blocking HELLO → HELLO_OK exchange, so a dead or
+    /// wedged server cannot hang `connect` forever
+    /// (`EngineConfig::net_hello_timeout_ms`).
+    pub hello_timeout: Duration,
+    /// Transport-fault retry policy (`EngineConfig::net_retry_*`).
+    pub retry: RetryPolicy,
+}
+
+impl Default for ConnectOptions {
+    fn default() -> ConnectOptions {
+        ConnectOptions {
+            max_frame: wire::DEFAULT_MAX_FRAME,
+            version: PROTOCOL_VERSION,
+            hello_timeout: Duration::from_secs(10),
+            retry: RetryPolicy::none(),
+        }
+    }
+}
+
+impl ConnectOptions {
+    /// Extract the client knobs from an engine config.
+    pub fn from_config(cfg: &crate::config::EngineConfig) -> ConnectOptions {
+        ConnectOptions {
+            max_frame: cfg.net_max_frame_bytes,
+            version: PROTOCOL_VERSION,
+            hello_timeout: Duration::from_millis(cfg.net_hello_timeout_ms),
+            retry: RetryPolicy {
+                max_attempts: cfg.net_retry_attempts,
+                base_backoff_ms: cfg.net_retry_base_ms,
+                max_backoff_ms: cfg.net_retry_max_ms,
+            },
+        }
+    }
+}
+
+/// One step of the xorshift64 PRNG (backoff jitter needs speed and
+/// statelessness, not quality).
+fn xorshift64(s: &mut u64) -> u64 {
+    let mut x = *s;
+    x ^= x << 13;
+    x ^= x >> 7;
+    x ^= x << 17;
+    *s = x;
+    x
+}
+
+/// What a successful HELLO exchange yields.
+struct Handshake {
+    version: u32,
+    fanout: u32,
+    schema: SchemaRef,
+    producer_id: u32,
+    epoch: u32,
 }
 
 /// A blocking protocol client bound to one stream.
 pub struct NetClient {
     stream: TcpStream,
+    /// Resolved server address, kept for retry reconnects.
+    peer: SocketAddr,
+    stream_name: String,
+    opts: ConnectOptions,
     schema: SchemaRef,
     fanout: u32,
     max_frame: usize,
     /// Negotiated protocol version (≤ [`PROTOCOL_VERSION`]).
     version: u32,
+    /// Server-assigned producer identity (presented on reconnect so
+    /// resends hit the same dedup state).
+    producer_id: u32,
+    epoch: u32,
+    /// Next batch seq; starts at 1 (the server rejects seq 0 on the
+    /// tagged ingest path — 0 is the untagged sentinel in record tags).
     next_seq: u64,
+    /// Sent-but-unacked batch frames `(seq, encoded bytes)`, oldest
+    /// first. Empty unless retry is enabled.
+    unacked: VecDeque<(u64, Vec<u8>)>,
+    /// Consecutive recovery attempts since the last absorbed frame.
+    attempts: u32,
+    /// Jitter PRNG state.
+    rng: u64,
     /// Reassembly buffer for inbound bytes.
     rbuf: Vec<u8>,
     /// Reusable outbound frame build buffer (v2 raw batches).
@@ -71,7 +216,7 @@ pub struct NetClient {
 impl NetClient {
     /// Connect and handshake for `stream_name` with default limits.
     pub fn connect(addr: impl ToSocketAddrs, stream_name: &str) -> Result<NetClient> {
-        Self::connect_with(addr, stream_name, wire::DEFAULT_MAX_FRAME)
+        Self::connect_opts(addr, stream_name, ConnectOptions::default())
     }
 
     /// Connect with an explicit max inbound frame size.
@@ -80,7 +225,14 @@ impl NetClient {
         stream_name: &str,
         max_frame: usize,
     ) -> Result<NetClient> {
-        Self::connect_with_version(addr, stream_name, max_frame, PROTOCOL_VERSION)
+        Self::connect_opts(
+            addr,
+            stream_name,
+            ConnectOptions {
+                max_frame,
+                ..ConnectOptions::default()
+            },
+        )
     }
 
     /// Connect requesting a specific protocol version (tests and
@@ -93,26 +245,104 @@ impl NetClient {
         max_frame: usize,
         version: u32,
     ) -> Result<NetClient> {
+        Self::connect_opts(
+            addr,
+            stream_name,
+            ConnectOptions {
+                max_frame,
+                version,
+                ..ConnectOptions::default()
+            },
+        )
+    }
+
+    /// Connect with full control over limits, handshake timeout and the
+    /// retry policy ([`ConnectOptions`]).
+    pub fn connect_opts(
+        addr: impl ToSocketAddrs,
+        stream_name: &str,
+        opts: ConnectOptions,
+    ) -> Result<NetClient> {
+        let mut version = opts.version;
         if !(MIN_PROTOCOL_VERSION..=PROTOCOL_VERSION).contains(&version) {
             return Err(Error::invalid(format!(
                 "requested protocol version {version} outside supported range \
                  {MIN_PROTOCOL_VERSION}..={PROTOCOL_VERSION}"
             )));
         }
-        let mut stream = TcpStream::connect(&addr)?;
-        let _ = stream.set_nodelay(true);
+        loop {
+            let mut stream = TcpStream::connect(&addr)?;
+            let _ = stream.set_nodelay(true);
+            // a fresh connection presents (0, 0): "mint me an identity"
+            match Self::handshake(&mut stream, stream_name, version, &opts, (0, 0)) {
+                Ok(hs) => {
+                    let peer = stream.peer_addr()?;
+                    // seed the jitter PRNG from the identity the server
+                    // minted — distinct per producer, no clock needed,
+                    // and xorshift requires a non-zero state
+                    let rng = 0x9e37_79b9_7f4a_7c15u64 ^ ((hs.producer_id as u64) << 32 | 1);
+                    return Ok(NetClient {
+                        stream,
+                        peer,
+                        stream_name: stream_name.to_string(),
+                        max_frame: opts.max_frame,
+                        opts,
+                        schema: hs.schema,
+                        fanout: hs.fanout,
+                        version: hs.version,
+                        producer_id: hs.producer_id,
+                        epoch: hs.epoch,
+                        next_seq: 1,
+                        unacked: VecDeque::new(),
+                        attempts: 0,
+                        rng,
+                        rbuf: Vec::with_capacity(64 * 1024),
+                        send_buf: Vec::with_capacity(16 * 1024),
+                        raw_batch: RawBatchBuf::new(),
+                        acks: VecDeque::new(),
+                        replies: FxHashMap::default(),
+                        reply_count: 0,
+                    });
+                }
+                // an older server rejects a HELLO above its max outright
+                // instead of negotiating down; step down one version and
+                // retry, so both peers land on the highest version they
+                // share (bounded: at most PROTOCOL_VERSION - 1 retries)
+                Err(Error::Invalid(msg))
+                    if version > MIN_PROTOCOL_VERSION
+                        && msg.contains("unsupported protocol version") =>
+                {
+                    version -= 1;
+                }
+                Err(e) => return Err(e),
+            }
+        }
+    }
+
+    /// Run the HELLO → HELLO_OK exchange on a fresh socket, presenting
+    /// `producer` as `(producer_id, epoch)` — `(0, 0)` mints a fresh
+    /// identity, anything else resumes one (retry reconnects).
+    fn handshake(
+        stream: &mut TcpStream,
+        stream_name: &str,
+        version: u32,
+        opts: &ConnectOptions,
+        producer: (u32, u32),
+    ) -> Result<Handshake> {
         wire::write_frame(
-            &mut stream,
+            stream,
             &Frame::Hello {
                 version,
                 stream: stream_name.to_string(),
+                producer_id: producer.0,
+                epoch: producer.1,
             },
             None,
         )?;
         // the handshake is strictly request/response: a plain blocking
         // read (bounded so a dead server cannot hang us forever) is safe
-        stream.set_read_timeout(Some(Duration::from_secs(10)))?;
-        let frame = wire::read_frame(&mut stream, None, max_frame)?
+        stream.set_read_timeout(Some(opts.hello_timeout.max(Duration::from_millis(1))))?;
+        let frame = wire::read_frame(stream, None, opts.max_frame)?
             .ok_or_else(|| Error::closed("server closed during handshake"))?;
         stream.set_read_timeout(None)?;
         match frame {
@@ -120,6 +350,8 @@ impl NetClient {
                 version: negotiated,
                 fanout,
                 fields,
+                producer_id,
+                epoch,
             } => {
                 if !(MIN_PROTOCOL_VERSION..=version).contains(&negotiated) {
                     return Err(Error::invalid(format!(
@@ -128,42 +360,35 @@ impl NetClient {
                     )));
                 }
                 let schema = wire::schema_from_fields(&fields)?;
-                Ok(NetClient {
-                    stream,
-                    schema,
-                    fanout,
-                    max_frame,
+                Ok(Handshake {
                     version: negotiated,
-                    next_seq: 0,
-                    rbuf: Vec::with_capacity(64 * 1024),
-                    send_buf: Vec::with_capacity(16 * 1024),
-                    raw_batch: RawBatchBuf::new(),
-                    acks: VecDeque::new(),
-                    replies: FxHashMap::default(),
-                    reply_count: 0,
+                    fanout,
+                    schema,
+                    producer_id,
+                    epoch,
                 })
             }
             Frame::Err { message, .. } => {
-                // an older server rejects a HELLO above its max outright
-                // instead of negotiating down; step down one version and
-                // retry, so both peers land on the highest version they
-                // share (bounded: at most PROTOCOL_VERSION - 1 retries)
-                if version > MIN_PROTOCOL_VERSION
-                    && message.contains("unsupported protocol version")
-                {
-                    return Self::connect_with_version(
-                        addr,
-                        stream_name,
-                        max_frame,
-                        version - 1,
-                    );
-                }
                 Err(Error::invalid(format!("handshake rejected: {message}")))
             }
             other => Err(Error::corrupt(format!(
                 "expected HELLO_OK, got {other:?}"
             ))),
         }
+    }
+
+    /// This connection's server-assigned producer identity
+    /// `(producer_id, epoch)`.
+    pub fn producer(&self) -> (u32, u32) {
+        (self.producer_id, self.epoch)
+    }
+
+    /// Tear the TCP stream down under the client (fault drills: the
+    /// bench harness's `--fault bench.drop_conn@N`). The next read or
+    /// write surfaces a retryable transport error, exercising the
+    /// reconnect + resend path exactly as a real network fault would.
+    pub fn inject_transport_fault(&self) {
+        let _ = self.stream.shutdown(std::net::Shutdown::Both);
     }
 
     /// The stream schema, as served by the server.
@@ -201,7 +426,15 @@ impl NetClient {
             self.next_seq += 1;
             let frame = Frame::IngestBatch { seq, events };
             let bytes = frame.encode(Some(&self.schema))?;
-            self.stream.write_all(&bytes)?;
+            let sent = self.stream.write_all(&bytes).map_err(Error::from);
+            if self.opts.retry.enabled() {
+                // retain before checking the write: a failed write is
+                // exactly the case the resend buffer exists for
+                self.unacked.push_back((seq, bytes));
+            }
+            if let Err(e) = sent {
+                self.recover(e)?;
+            }
             return Ok(seq);
         }
         // encode each event's value section once into the reusable
@@ -240,10 +473,91 @@ impl NetClient {
         self.next_seq += 1;
         let mut buf = std::mem::take(&mut self.send_buf);
         wire::encode_raw_batch_frame(&mut buf, seq, events);
-        let r = self.stream.write_all(&buf);
+        let sent = self.stream.write_all(&buf).map_err(Error::from);
+        if self.opts.retry.enabled() {
+            // the send buffer is reused for the next batch, so the
+            // resend copy must be owned (retry-enabled clients only)
+            self.unacked.push_back((seq, buf.clone()));
+        }
         self.send_buf = buf;
-        r?;
+        if let Err(e) = sent {
+            self.recover(e)?;
+        }
         Ok(seq)
+    }
+
+    /// Recover from a transport fault: reconnect with capped
+    /// exponential backoff + jitter, re-HELLO as the same producer and
+    /// resend every unacked batch in order. Surfaces `err` unchanged
+    /// when it isn't retryable, retry is disabled, or the attempt
+    /// budget is exhausted.
+    fn recover(&mut self, err: Error) -> Result<()> {
+        if !self.opts.retry.enabled() || !err.is_retryable() {
+            return Err(err);
+        }
+        let mut last = err;
+        loop {
+            self.attempts += 1;
+            if self.attempts > self.opts.retry.max_attempts {
+                return Err(last);
+            }
+            let pause = self.opts.retry.backoff(self.attempts, &mut self.rng);
+            if !pause.is_zero() {
+                std::thread::sleep(pause);
+            }
+            log::debug!(
+                "net client: reconnect attempt {}/{} to {} (producer {}): {last}",
+                self.attempts,
+                self.opts.retry.max_attempts,
+                self.peer,
+                self.producer_id,
+            );
+            match self.try_reconnect() {
+                Ok(()) => return Ok(()),
+                Err(e) if e.is_retryable() => last = e,
+                Err(e) => return Err(e),
+            }
+        }
+    }
+
+    /// One reconnect attempt: dial, re-HELLO presenting this client's
+    /// `(producer_id, epoch)`, then resend the unacked tail on the new
+    /// socket. Only on full success does the new stream replace the
+    /// dead one.
+    fn try_reconnect(&mut self) -> Result<()> {
+        let mut stream = TcpStream::connect(self.peer)?;
+        let _ = stream.set_nodelay(true);
+        let hs = Self::handshake(
+            &mut stream,
+            &self.stream_name,
+            self.version,
+            &self.opts,
+            (self.producer_id, self.epoch),
+        )?;
+        if hs.producer_id != self.producer_id {
+            return Err(Error::invalid(format!(
+                "server re-issued producer id {} on reconnect (this client is {})",
+                hs.producer_id, self.producer_id
+            )));
+        }
+        if hs.version != self.version {
+            // the retained resend frames are encoded for self.version;
+            // a server that renegotiated across a restart can't replay them
+            return Err(Error::invalid(format!(
+                "server renegotiated protocol v{} on reconnect (connection spoke v{})",
+                hs.version, self.version
+            )));
+        }
+        self.epoch = hs.epoch;
+        self.fanout = hs.fanout;
+        self.schema = hs.schema;
+        // the dead socket may have left a half-read frame behind
+        self.rbuf.clear();
+        for (_, bytes) in &self.unacked {
+            stream.write_all(bytes)?;
+        }
+        self.stream = stream;
+        Ok(())
     }
 
     /// Send a batch and block for its ack (the non-pipelined convenience
@@ -273,8 +587,10 @@ impl NetClient {
             if let Some(ack) = self.acks.pop_front() {
                 return Ok(ack);
             }
-            if !self.pump_once(deadline)? {
-                return Err(Error::closed("timed out waiting for ingest ack"));
+            match self.pump_once(deadline) {
+                Ok(true) => {}
+                Ok(false) => return Err(Error::closed("timed out waiting for ingest ack")),
+                Err(e) => self.recover(e)?,
             }
         }
     }
@@ -292,13 +608,26 @@ impl NetClient {
         let mut n = 0usize;
         // absorb the first frame with the full timeout, then drain
         // whatever is already buffered/readable without further waiting
-        if self.pump_once(deadline)? {
+        if self.pump_recovering(deadline)? {
             n += 1;
-            while self.pump_once(Instant::now())? {
+            while self.pump_recovering(Instant::now())? {
                 n += 1;
             }
         }
         Ok(n)
+    }
+
+    /// [`NetClient::pump_once`] with transport-fault recovery: a
+    /// retryable error reconnects + resends, then reports "no frame" so
+    /// callers re-enter their wait loop.
+    fn pump_recovering(&mut self, deadline: Instant) -> Result<bool> {
+        match self.pump_once(deadline) {
+            Ok(got) => Ok(got),
+            Err(e) => {
+                self.recover(e)?;
+                Ok(false)
+            }
+        }
     }
 
     /// Move every buffered reply into `sink` (arrival order within an
@@ -341,10 +670,15 @@ impl NetClient {
             if have >= expected as usize {
                 return Ok(self.take_event(ingest_id));
             }
-            if !self.pump_once(deadline)? {
-                return Err(Error::closed(format!(
-                    "timed out waiting for {expected} replies to ingest {ingest_id} (have {have})"
-                )));
+            match self.pump_once(deadline) {
+                Ok(true) => {}
+                Ok(false) => {
+                    return Err(Error::closed(format!(
+                        "timed out waiting for {expected} replies to ingest {ingest_id} \
+                         (have {have})"
+                    )))
+                }
+                Err(e) => self.recover(e)?,
             }
         }
     }
@@ -409,27 +743,60 @@ impl NetClient {
                 first_ingest_id,
                 count,
                 fanout,
+                duplicate,
             } => {
+                // acks arrive in send order; everything at or before
+                // this seq is settled and no longer needs a resend copy
+                while self.unacked.front().map(|f| f.0 <= seq).unwrap_or(false) {
+                    self.unacked.pop_front();
+                }
+                self.attempts = 0;
                 self.acks.push_back(BatchAck {
                     seq,
                     first_ingest_id,
                     count,
                     fanout,
+                    duplicate,
                 });
                 Ok(())
             }
             Frame::ReplyBatch { msgs } => {
+                self.attempts = 0;
                 for m in msgs {
                     self.reply_count += 1;
                     self.replies.entry(m.ingest_id).or_default().push(m);
                 }
                 Ok(())
             }
-            Frame::Err { fatal, message } => Err(if fatal {
-                Error::closed(format!("server error (fatal): {message}"))
-            } else {
-                Error::invalid(format!("server error: {message}"))
-            }),
+            Frame::Err { fatal, message } => {
+                // a non-fatal "ingest failed … retryable:" reply means
+                // the oldest unacked batch hit a transient server-side
+                // fault (earlier acks were absorbed before this frame,
+                // so the queue front IS the failed batch): resend it on
+                // the live connection under the same attempt budget
+                if !fatal && message.contains("retryable:") && self.opts.retry.enabled() {
+                    if let Some((seq, bytes)) = self.unacked.front().cloned() {
+                        self.attempts += 1;
+                        if self.attempts <= self.opts.retry.max_attempts {
+                            let pause = self.opts.retry.backoff(self.attempts, &mut self.rng);
+                            if !pause.is_zero() {
+                                std::thread::sleep(pause);
+                            }
+                            log::debug!(
+                                "net client: resending batch seq {seq} after \
+                                 retryable server error: {message}"
+                            );
+                            self.stream.write_all(&bytes)?;
+                            return Ok(());
+                        }
+                    }
+                }
+                Err(if fatal {
+                    Error::closed(format!("server error (fatal): {message}"))
+                } else {
+                    Error::invalid(format!("server error: {message}"))
+                })
+            }
             other => Err(Error::corrupt(format!(
                 "unexpected frame from server: {other:?}"
             ))),

@@ -17,15 +17,19 @@
 //! * [`server`] — an event-loop TCP server: N worker threads (default
 //!   one per core) each drive an epoll instance over a disjoint slice
 //!   of nonblocking connections, parsing frames in place and forwarding
-//!   raw v2 batches — value slices *and* scan offsets — to the
-//!   front-end's prevalidated ingest entry (owned v1 batches to
-//!   [`crate::frontend::FrontEnd::ingest_batch`]'s reserved variant).
-//!   One pump thread per reply-topic shard routes replies on ingest id
-//!   into per-connection outbound queues flushed by the owning worker
-//!   with vectored writes — a slow client backpressures only itself;
+//!   batches (raw v2 value slices *and* scan offsets; re-encoded owned
+//!   v1 events) to the front-end's idempotent tagged ingest entry
+//!   ([`crate::frontend::FrontEnd::ingest_batch_raw_tagged`]), which
+//!   dedups on the batch's `(producer_id, batch_seq)` before anything
+//!   is published. One pump thread per reply-topic shard routes replies
+//!   on ingest id into per-connection outbound queues flushed by the
+//!   owning worker with vectored writes — a slow client backpressures
+//!   only itself;
 //! * [`client`] — a blocking client with batched pipelining that
 //!   encodes each event once ([`client::NetClient::send_batch_raw`] for
-//!   callers already holding encoded bytes);
+//!   callers already holding encoded bytes); with a [`RetryPolicy`] it
+//!   reconnects + resends across transport faults, exactly-once thanks
+//!   to the server-side dedup;
 //! * [`bench`] — the closed-loop harness behind `railgun bench-client`
 //!   (throughput + p50/p99/p999 ingest→reply latency) plus the
 //!   open-loop `--rate` mode with coordinated-omission-corrected
@@ -42,6 +46,6 @@ pub mod server;
 pub mod wire;
 
 pub use bench::{run_closed_loop, run_open_loop, BenchOptions, BenchReport};
-pub use client::{fetch_stats, BatchAck, NetClient};
+pub use client::{fetch_stats, BatchAck, ConnectOptions, NetClient, RetryPolicy};
 pub use server::{NetOptions, NetServer};
 pub use wire::{Frame, MIN_PROTOCOL_VERSION, PROTOCOL_VERSION};

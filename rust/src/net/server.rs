@@ -16,13 +16,13 @@
 //!   frame-at-a-time through the unchanged decode paths: a v2 raw ingest
 //!   batch is decoded **borrowed** ([`wire::decode_raw_batch_offsets`])
 //!   and its validated slices — *and* the scan's field offsets — go
-//!   straight to `FrontEnd::ingest_batch_raw_prevalidated`, so each
-//!   event's payload is walked **once** end to end; v1 owned-event bodies
-//!   keep working through [`FrontEnd::ingest_batch_reserved`]. Either way
-//!   the worker **reserves** the ingest-id range
-//!   ([`FrontEnd::reserve_ingest_ids`]) and registers it in the reply
-//!   route tables *before* publishing — a reply can never race its route
-//!   registration — then acks;
+//!   straight to [`FrontEnd::ingest_batch_raw_tagged`], so each
+//!   event's payload is walked **once** end to end; v1 owned-event
+//!   bodies are validated, re-encoded and fed through the same tagged
+//!   entry. The front-end assigns (or recovers) the batch's ingest-id
+//!   range and calls back into the worker *before* publishing, which
+//!   registers the range in the reply route tables — a reply can never
+//!   race its route registration — then the worker acks;
 //! * **reply pumps** — **one thread per reply-topic shard**, each owning
 //!   its partition directly and routing through **per-shard route
 //!   tables** keyed by `ingest_id % shards`. Pumps never touch sockets:
@@ -49,17 +49,53 @@
 //! accumulate, and thanks to reserve-before-publish the pruning can
 //! never touch a live client's replies.
 //!
+//! **Reply-drop contract.** A reply delivery is dropped in exactly one
+//! place: [`OutQueue::push_reply`] refusing a frame that would grow a
+//! connection's outbound queue past its hard bound (`OUT_REPLY_MAX`).
+//! Acks and errors are never dropped — they go through the unconditional
+//! push, bounded indirectly by the read pause. Every dropped reply batch
+//! counts in `net.reply_drops`; the **first** drop on a given connection
+//! additionally counts in `net.reply_drop_conns`, so operators can tell
+//! "one pathological client" from "everyone is slow" at a glance, and
+//! the connection's total is logged once when it closes. A dropped reply
+//! is gone — the client sees a reply timeout for those events, exactly
+//! as if the network had dropped it; ingest acks (and therefore the
+//! exactly-once dedup state) are unaffected. A reply whose connection
+//! *died* before delivery is not a drop: the pump re-routes it through
+//! the tables, so a retrying producer's re-registration claims it (or
+//! it parks in the stash until that retry arrives); only when the
+//! replacement connection is dead too is it silently discarded.
+//!
+//! **Exactly-once ingest.** HELLO carries a `(producer_id, epoch)` claim
+//! — `(0, 0)` asks for a fresh identity, anything else resumes one after
+//! a reconnect (counted in `net.retries`) — and HELLO_OK answers with
+//! the authoritative pair ([`FrontEnd::register_producer`]). Every
+//! ingest batch's `seq` is then a per-producer sequence number, and
+//! publication goes through [`FrontEnd::ingest_batch_raw_tagged`]: a
+//! resend of an acked batch re-acks with `duplicate = true` and the
+//! original ingest ids, and a resend of a batch that died mid-publish
+//! appends only the missing records. Registering the id range on every
+//! attempt (including duplicates) lets replies stashed during a failed
+//! first attempt drain to the retrying connection; routes whose replies
+//! already flowed to a dead connection age out with it.
+//!
 //! A malformed frame (bad magic/CRC, oversized, truncated, undecodable
 //! body) poisons only its own connection: the worker answers with a fatal
 //! ERR frame where possible and closes; the listener, the pumps and every
-//! other connection keep running. One exception is deliberate: a v2 raw
-//! ingest frame that passed its CRC but fails content validation is the
-//! client's data problem, not a protocol break — the server rejects
-//! **only that batch** (non-fatal ERR) and the connection keeps serving.
+//! other connection keep running. Two rejections are deliberately
+//! **non-fatal**: an ingest batch that passed its CRC but fails content
+//! validation is the client's data problem (`ingest rejected (seq N)`),
+//! and a batch whose publication hit a transient fault answers
+//! `ingest failed (seq N), retryable:` — the client may resend the same
+//! `(producer_id, seq)` on the same connection and the tagged path
+//! guarantees no duplication. Fault-injection sites
+//! (`server.kill_conn_after_ack`, `server.abort_after_ingest` — see
+//! [`crate::failpoint`]) are compiled out of default builds.
 
 use crate::config::{EngineConfig, StreamDef};
 use crate::error::Result;
-use crate::frontend::{reply_partition_for, FrontEnd, IngestReceipt, ReplyMsg, REPLY_TOPIC};
+use crate::event::RawBatchBuf;
+use crate::frontend::{reply_partition_for, FrontEnd, IngestOutcome, ReplyMsg, REPLY_TOPIC};
 use crate::mlog::BrokerRef;
 use crate::net::poll::{Interest, PollEvent, Poller, WakeFd};
 use crate::net::wire::{self, Frame, MIN_PROTOCOL_VERSION, PROTOCOL_VERSION};
@@ -253,6 +289,10 @@ struct OutBuf {
 #[derive(Default)]
 struct OutQueue {
     buf: Mutex<OutBuf>,
+    /// Reply batches dropped on this connection (hard bound exceeded) —
+    /// see the module-level reply-drop contract. Written by pumps,
+    /// logged by the owning worker at close.
+    reply_drops: AtomicU64,
 }
 
 impl OutQueue {
@@ -620,8 +660,12 @@ fn setup_conn(stream: TcpStream, shared: &Arc<Shared>) -> Result<()> {
 enum ConnState {
     /// Waiting for the HELLO frame.
     Handshake,
-    /// Streaming ingest batches for this stream definition.
-    Streaming(Arc<StreamDef>),
+    /// Streaming ingest batches for this stream definition, publishing
+    /// under the connection's negotiated idempotent-producer identity.
+    Streaming {
+        def: Arc<StreamDef>,
+        producer_id: u32,
+    },
 }
 
 /// One connection, owned by exactly one event-loop worker.
@@ -731,6 +775,13 @@ fn close_conn(shared: &Shared, poller: &Poller, conn: Option<Conn>) {
     shared.conns.lock().unwrap().remove(&conn.id);
     conn.out.close();
     shared.tel.net.conns_closed.incr();
+    let dropped = conn.out.reply_drops.load(Ordering::Relaxed);
+    if dropped > 0 {
+        log::warn!(
+            "net: conn {} closed with {dropped} reply batches dropped (outbound queue full)",
+            conn.id
+        );
+    }
     // conn.stream drops here, closing the fd
 }
 
@@ -903,7 +954,12 @@ fn dispatch_frame(shared: &Shared, conn: &mut Conn, kind: u8, body: &[u8], offse
             // version in MIN..=PROTOCOL_VERSION and answers with
             // min(client, server).
             match Frame::decode_body(kind, body, None) {
-                Ok(Frame::Hello { version, stream }) => {
+                Ok(Frame::Hello {
+                    version,
+                    stream,
+                    producer_id,
+                    epoch,
+                }) => {
                     if !(MIN_PROTOCOL_VERSION..=PROTOCOL_VERSION).contains(&version) {
                         fatal(
                             shared,
@@ -917,13 +973,25 @@ fn dispatch_frame(shared: &Shared, conn: &mut Conn, kind: u8, body: &[u8], offse
                     }
                     match shared.frontend.stream(&stream) {
                         Ok(def) => {
+                            // a non-zero claim is a client resuming after
+                            // a reconnect — the retry signal
+                            if producer_id != 0 {
+                                shared.tel.net.retries.incr();
+                            }
+                            let (pid, epoch) =
+                                shared.frontend.register_producer(producer_id, epoch);
                             let ok = Frame::HelloOk {
                                 version: version.min(PROTOCOL_VERSION),
                                 fanout: def.entities.len() as u32,
                                 fields: wire::schema_fields(&def.schema),
+                                producer_id: pid,
+                                epoch,
                             };
                             send_frame(conn, &ok);
-                            conn.state = ConnState::Streaming(def);
+                            conn.state = ConnState::Streaming {
+                                def,
+                                producer_id: pid,
+                            };
                         }
                         Err(e) => fatal(shared, conn, format!("handshake rejected: {e}")),
                     }
@@ -932,9 +1000,9 @@ fn dispatch_frame(shared: &Shared, conn: &mut Conn, kind: u8, body: &[u8], offse
                 Err(e) => fatal(shared, conn, format!("protocol error: {e}")),
             }
         }
-        ConnState::Streaming(def) => {
+        ConnState::Streaming { def, producer_id } => {
             let def = def.clone();
-            let fanout = def.entities.len() as u32;
+            let producer_id = *producer_id;
             if kind == wire::KIND_INGEST_BATCH_RAW {
                 // the borrowed fast path: one validating scan fills the
                 // worker's offset table, and both the value slices and
@@ -942,9 +1010,14 @@ fn dispatch_frame(shared: &Shared, conn: &mut Conn, kind: u8, body: &[u8], offse
                 // payload is walked once between socket and mlog
                 match wire::decode_raw_batch_offsets(body, &def.schema, offsets) {
                     Ok((seq, raws)) => {
-                        handle_ingest(shared, conn, fanout, seq, raws.len() as u32, |first| {
-                            shared.frontend.ingest_batch_raw_prevalidated(
-                                &def.name, &raws, first, offsets,
+                        handle_ingest(shared, conn, seq, |register| {
+                            shared.frontend.ingest_batch_raw_tagged(
+                                &def.name,
+                                producer_id,
+                                seq,
+                                &raws,
+                                Some(offsets.as_slice()),
+                                register,
                             )
                         });
                     }
@@ -971,10 +1044,35 @@ fn dispatch_frame(shared: &Shared, conn: &mut Conn, kind: u8, body: &[u8], offse
             }
             match Frame::decode_body(kind, body, Some(&def.schema)) {
                 Ok(Frame::IngestBatch { seq, events }) => {
-                    handle_ingest(shared, conn, fanout, seq, events.len() as u32, |first| {
-                        shared
-                            .frontend
-                            .ingest_batch_reserved(&def.name, events, first)
+                    // the owned v1 path: validate, encode once into a
+                    // scratch buffer, and publish through the same
+                    // tagged entry as v2
+                    if let Some(e) = events
+                        .iter()
+                        .find_map(|ev| def.schema.validate(ev).err())
+                    {
+                        send_frame(
+                            conn,
+                            &Frame::Err {
+                                fatal: false,
+                                message: format!("ingest rejected (seq {seq}): {e}"),
+                            },
+                        );
+                        return;
+                    }
+                    let mut batch = RawBatchBuf::new();
+                    for ev in &events {
+                        batch.push(ev, &def.schema);
+                    }
+                    handle_ingest(shared, conn, seq, |register| {
+                        shared.frontend.ingest_batch_raw_tagged(
+                            &def.name,
+                            producer_id,
+                            seq,
+                            &batch.raws(),
+                            None,
+                            register,
+                        )
                     });
                 }
                 Ok(other) => fatal(
@@ -988,47 +1086,72 @@ fn dispatch_frame(shared: &Shared, conn: &mut Conn, kind: u8, body: &[u8], offse
     }
 }
 
-/// One ingest batch, owned or raw: reserve the id range and route it to
-/// this connection **before** publishing — the back-end can start
-/// replying the moment records land, and a reply must never race its
-/// route registration — then ack, or reject non-fatally.
+/// One ingest batch, owned or raw, through the front-end's tagged
+/// (idempotent-producer) entry. The front-end resolves the batch's id
+/// range — fresh or recovered — and calls `register` back *before*
+/// anything publishes; the registration routes the range to this
+/// connection and returns any replies stashed by a failed earlier
+/// attempt. Then ack (`duplicate` reports dedup) or answer non-fatally:
+/// `retryable:` for transient faults the client should resend, plain
+/// rejection for deterministic ones it must not.
 fn handle_ingest(
     shared: &Shared,
     conn: &mut Conn,
-    fanout: u32,
     seq: u64,
-    count: u32,
-    publish: impl FnOnce(u64) -> Result<Vec<IngestReceipt>>,
+    publish: impl FnOnce(&mut dyn FnMut(u64, u32, u32)) -> Result<IngestOutcome>,
 ) {
-    let first = shared.frontend.reserve_ingest_ids(count as u64);
-    let early = shared.register_replies(conn.id, first, count, fanout);
+    let conn_id = conn.id;
+    let mut early: Vec<ReplyMsg> = Vec::new();
+    let mut registered: Option<(u64, u32)> = None;
+    let result = publish(&mut |first, count, fanout| {
+        registered = Some((first, count));
+        early = shared.register_replies(conn_id, first, count, fanout);
+    });
     if !early.is_empty() {
         send_frame(conn, &Frame::ReplyBatch { msgs: early });
     }
-    match publish(first) {
-        Ok(receipts) => {
-            debug_assert_eq!(receipts.len() as u32, count);
+    match result {
+        Ok(out) => {
             send_frame(
                 conn,
                 &Frame::IngestAck {
                     seq,
-                    first_ingest_id: first,
-                    count,
-                    fanout,
+                    first_ingest_id: out.first_ingest_id,
+                    count: out.count,
+                    fanout: out.fanout,
+                    duplicate: out.duplicate,
                 },
             );
+            if crate::failpoint::hit("server.kill_conn_after_ack") {
+                // crash model: the ack was enqueued but never flushed —
+                // drop the queue and the connection, forcing the client
+                // to reconnect and resend
+                conn.out.close();
+                conn.closing = true;
+            }
+            // abort model (armed via RAILGUN_FAILPOINTS): the process
+            // dies right after the batch became durable
+            crate::failpoint::hit("server.abort_after_ingest");
         }
         Err(e) => {
-            // a rejected batch is the client's problem, not a protocol
+            // a failed batch is the client's problem, not a protocol
             // violation: answer and keep serving. Drop the routes;
             // replies for any partially published prefix fall back to
-            // the stash and age out.
-            shared.unregister_replies(first, count);
+            // the stash, where a timely retry reclaims them (and the
+            // tagged path completes the gap without duplication).
+            if let Some((first, count)) = registered {
+                shared.unregister_replies(first, count);
+            }
+            let message = if e.is_retryable() {
+                format!("ingest failed (seq {seq}), retryable: {e}")
+            } else {
+                format!("ingest rejected (seq {seq}): {e}")
+            };
             send_frame(
                 conn,
                 &Frame::Err {
                     fatal: false,
-                    message: format!("ingest rejected (seq {seq}): {e}"),
+                    message,
                 },
             );
         }
@@ -1205,45 +1328,81 @@ fn reply_pump_shard(broker: BrokerRef, shared: Arc<Shared>, running: Arc<AtomicB
                 .route_msg(msg, now, &mut deliveries);
         }
         wake_workers.clear();
-        for (conn_id, msgs) in deliveries.drain() {
-            let handle = shared.conns.lock().unwrap().get(&conn_id).cloned();
-            let Some(handle) = handle else { continue };
-            let frame = Frame::ReplyBatch { msgs };
-            let bytes = match frame.encode(None) {
-                Ok(b) => b,
-                Err(e) => {
-                    log::warn!("net pump[{shard}]: cannot encode reply batch: {e}");
+        // Replies whose owning connection died between routing and
+        // delivery are not dropped: they go back through the route
+        // tables, where a retrying producer's re-registration (same
+        // ingest ids, new connection) claims them — or they park in
+        // the stash until that retry arrives within the prune window.
+        let mut orphaned: Vec<ReplyMsg> = Vec::new();
+        let mut passes = 0;
+        loop {
+            passes += 1;
+            for (conn_id, msgs) in deliveries.drain() {
+                let handle = shared.conns.lock().unwrap().get(&conn_id).cloned();
+                let Some(handle) = handle else {
+                    // already reaped from the conn map
+                    orphaned.extend(msgs);
                     continue;
-                }
-            };
-            match handle.out.push_reply(bytes) {
-                Ok(()) => {
-                    shared.workers[handle.worker]
-                        .inbox
-                        .lock()
-                        .unwrap()
-                        .push(WorkerCmd::Flush(conn_id));
-                    if !wake_workers.contains(&handle.worker) {
-                        wake_workers.push(handle.worker);
+                };
+                let frame = Frame::ReplyBatch { msgs };
+                let bytes = match frame.encode(None) {
+                    Ok(b) => b,
+                    Err(e) => {
+                        log::warn!("net pump[{shard}]: cannot encode reply batch: {e}");
+                        continue;
+                    }
+                };
+                match handle.out.push_reply(bytes) {
+                    Ok(()) => {
+                        shared.workers[handle.worker]
+                            .inbox
+                            .lock()
+                            .unwrap()
+                            .push(WorkerCmd::Flush(conn_id));
+                        if !wake_workers.contains(&handle.worker) {
+                            wake_workers.push(handle.worker);
+                        }
+                    }
+                    Err(PushErr::Full) => {
+                        // slow consumer: drop this delivery rather than
+                        // letting one stalled client grow server memory;
+                        // the client sees a reply timeout
+                        shared.tel.net.reply_drops.incr();
+                        if handle.out.reply_drops.fetch_add(1, Ordering::Relaxed) == 0 {
+                            // first drop on this connection: count the conn
+                            shared.tel.net.reply_drop_conns.incr();
+                        }
+                        drops += 1;
+                        if drops == 1 || drops % DROP_LOG_EVERY == 0 {
+                            log::warn!(
+                                "net pump[{shard}]: conn {conn_id} outbound queue full; \
+                                 dropping replies ({drops} batches dropped by this pump so far)"
+                            );
+                        }
+                    }
+                    Err(PushErr::Closed) => {
+                        // queue closed under us; drop the stale map entry
+                        shared.conns.lock().unwrap().remove(&conn_id);
+                        if let Frame::ReplyBatch { msgs } = frame {
+                            orphaned.extend(msgs);
+                        }
                     }
                 }
-                Err(PushErr::Full) => {
-                    // slow consumer: drop this delivery rather than
-                    // letting one stalled client grow server memory;
-                    // the client sees a reply timeout
-                    shared.tel.net.reply_drops.incr();
-                    drops += 1;
-                    if drops == 1 || drops % DROP_LOG_EVERY == 0 {
-                        log::warn!(
-                            "net pump[{shard}]: conn {conn_id} outbound queue full; \
-                             dropping replies ({drops} batches dropped by this pump so far)"
-                        );
-                    }
-                }
-                Err(PushErr::Closed) => {
-                    // connection is gone; drop the stale map entry
-                    shared.conns.lock().unwrap().remove(&conn_id);
-                }
+            }
+            // One re-route pass: orphans reach the producer's
+            // replacement connection if its retry already registered,
+            // or land in the stash for that retry to reclaim. A second
+            // failure means the replacement died too — give up.
+            if orphaned.is_empty() || passes == 2 {
+                break;
+            }
+            let now = Instant::now();
+            for msg in orphaned.drain(..) {
+                let home = reply_partition_for(msg.ingest_id, shared.nshards) as usize;
+                shared.routes[home]
+                    .lock()
+                    .unwrap()
+                    .route_msg(msg, now, &mut deliveries);
             }
         }
         for &w in &wake_workers {

@@ -17,12 +17,48 @@
 //!
 //! ```text
 //! client                          server
-//!   HELLO {version, stream}  →
-//!                             ←  HELLO_OK {version, fanout, schema} | ERR
+//!   HELLO {version, stream,
+//!          producer_id, epoch} →
+//!                             ←  HELLO_OK {version, fanout, schema,
+//!                                          producer_id, epoch} | ERR
 //!   INGEST_BATCH[_RAW] {seq, …} →                   (pipelined freely)
-//!                             ←  INGEST_ACK {seq, first_id, n, fanout}
+//!                             ←  INGEST_ACK {seq, first_id, n, fanout,
+//!                                            duplicate}
 //!                             ←  REPLY_BATCH {msgs}  (async, interleaved)
 //! ```
+//!
+//! ## Exactly-once ingest: producer identity and retry
+//!
+//! Every session carries an **idempotent-producer identity**. HELLO
+//! presents `(producer_id, epoch)`: `(0, 0)` asks the server to mint a
+//! fresh identity; a reconnecting client presents the pair it was
+//! assigned before, resuming its dedup state. HELLO_OK echoes the
+//! authoritative pair either way. The `seq` field of
+//! `INGEST_BATCH[_RAW]` is that producer's **batch sequence number**,
+//! which the client starts at 1 and increments by exactly 1 per batch —
+//! it is no longer a free-form correlation number. The front-end keeps a
+//! per-producer high-water mark (persisted inside the mlog records
+//! themselves, so it survives a server restart) and classifies every
+//! batch before publication:
+//!
+//! * a **fresh** seq is published and acked with `duplicate = 0`;
+//! * an already-published seq is **not** re-published — the ack comes
+//!   back with `duplicate = 1` and the *original* `first_ingest_id`;
+//! * a seq whose first attempt only partially published (a crash
+//!   between partitions) is completed: only the missing records are
+//!   appended, reusing the original ingest ids, and the ack reports
+//!   those original ids.
+//!
+//! In every case `first_ingest_id`/`count`/`fanout` are authoritative,
+//! so a client may blindly resend any unacknowledged batch after a
+//! transport error — same `(producer_id, epoch, seq)`, byte-identical
+//! body — and treat whichever ack arrives as the truth. Retry rules:
+//! transport faults (connection reset, timeout) and **non-fatal** ERR
+//! replies that report a transient publish failure are retryable;
+//! fatal ERR frames (protocol violations) and non-fatal validation
+//! rejections are not. `epoch` exists for fencing: a producer that
+//! loses its identity re-handshakes with `(0, 0)` and gets a fresh
+//! `producer_id`, so stale duplicates can never be misattributed.
 //!
 //! ## Protocol v2: the raw ingest body
 //!
@@ -128,16 +164,23 @@ pub const KIND_STATS: u8 = 9;
 /// One protocol frame.
 #[derive(Debug, Clone, PartialEq)]
 pub enum Frame {
-    /// Client handshake: protocol version + stream to ingest into.
+    /// Client handshake: protocol version, stream to ingest into, and
+    /// the idempotent-producer identity this session resumes —
+    /// `(0, 0)` asks the server to mint a fresh one.
     Hello {
         /// Client protocol version.
         version: u32,
         /// Target stream name.
         stream: String,
+        /// Producer id presented for resumption (0 = assign fresh).
+        producer_id: u32,
+        /// Producer epoch presented for resumption (0 with a zero id).
+        epoch: u32,
     },
-    /// Server handshake answer: version, per-event reply fanout, and the
+    /// Server handshake answer: version, per-event reply fanout, the
     /// stream schema (so the client can encode events / decode replies
-    /// without out-of-band knowledge).
+    /// without out-of-band knowledge), and the authoritative
+    /// idempotent-producer identity for this session.
     HelloOk {
         /// Server protocol version.
         version: u32,
@@ -145,11 +188,17 @@ pub enum Frame {
         fanout: u32,
         /// Stream schema fields as (name, type-tag) pairs.
         fields: Vec<(String, FieldType)>,
+        /// Assigned (or resumed) producer id; never 0.
+        producer_id: u32,
+        /// Assigned (or resumed) producer epoch.
+        epoch: u32,
     },
-    /// A batch of events to ingest. `seq` is a client-chosen correlation
-    /// number echoed in the matching [`Frame::IngestAck`].
+    /// A batch of events to ingest. `seq` is the producer's batch
+    /// sequence number (starts at 1, +1 per batch), echoed in the
+    /// matching [`Frame::IngestAck`] and consulted by the server's
+    /// dedup table.
     IngestBatch {
-        /// Client batch sequence number.
+        /// Per-producer batch sequence number.
         seq: u64,
         /// Events, schema-encoded.
         events: Vec<Event>,
@@ -166,9 +215,11 @@ pub enum Frame {
         events: Vec<(i64, Vec<u8>)>,
     },
     /// Receipt for one ingest batch: ingest ids are contiguous from
-    /// `first_ingest_id`.
+    /// `first_ingest_id`. `duplicate` reports that the batch had
+    /// already been published (the ids are the *original* assignment
+    /// either way, so retried sends resolve to the truth).
     IngestAck {
-        /// Echoed client sequence number.
+        /// Echoed batch sequence number.
         seq: u64,
         /// First assigned ingest id.
         first_ingest_id: u64,
@@ -176,6 +227,8 @@ pub enum Frame {
         count: u32,
         /// Replies to expect per event.
         fanout: u32,
+        /// Whether the batch was a dedup hit rather than a fresh publish.
+        duplicate: bool,
     },
     /// A batch of reply messages routed to this connection by ingest id.
     ReplyBatch {
@@ -220,14 +273,23 @@ impl Frame {
     pub fn encode_body(&self, schema: Option<&Schema>) -> Result<Vec<u8>> {
         let mut out = Vec::with_capacity(64);
         match self {
-            Frame::Hello { version, stream } => {
+            Frame::Hello {
+                version,
+                stream,
+                producer_id,
+                epoch,
+            } => {
                 varint::write_u32(&mut out, *version);
                 varint::write_str(&mut out, stream);
+                varint::write_u32(&mut out, *producer_id);
+                varint::write_u32(&mut out, *epoch);
             }
             Frame::HelloOk {
                 version,
                 fanout,
                 fields,
+                producer_id,
+                epoch,
             } => {
                 varint::write_u32(&mut out, *version);
                 varint::write_u32(&mut out, *fanout);
@@ -236,6 +298,8 @@ impl Frame {
                     varint::write_str(&mut out, name);
                     out.push(ftype.tag());
                 }
+                varint::write_u32(&mut out, *producer_id);
+                varint::write_u32(&mut out, *epoch);
             }
             Frame::IngestBatch { seq, events } => {
                 let schema = schema.ok_or_else(|| {
@@ -262,11 +326,13 @@ impl Frame {
                 first_ingest_id,
                 count,
                 fanout,
+                duplicate,
             } => {
                 varint::write_u64(&mut out, *seq);
                 varint::write_u64(&mut out, *first_ingest_id);
                 varint::write_u32(&mut out, *count);
                 varint::write_u32(&mut out, *fanout);
+                out.push(*duplicate as u8);
             }
             Frame::ReplyBatch { msgs } => {
                 varint::write_u64(&mut out, msgs.len() as u64);
@@ -294,7 +360,14 @@ impl Frame {
             KIND_HELLO => {
                 let version = varint::read_u32(body, &mut pos)?;
                 let stream = varint::read_str(body, &mut pos)?.to_string();
-                Frame::Hello { version, stream }
+                let producer_id = varint::read_u32(body, &mut pos)?;
+                let epoch = varint::read_u32(body, &mut pos)?;
+                Frame::Hello {
+                    version,
+                    stream,
+                    producer_id,
+                    epoch,
+                }
             }
             KIND_HELLO_OK => {
                 let version = varint::read_u32(body, &mut pos)?;
@@ -312,10 +385,14 @@ impl Frame {
                     pos += 1;
                     fields.push((name, FieldType::from_tag(tag)?));
                 }
+                let producer_id = varint::read_u32(body, &mut pos)?;
+                let epoch = varint::read_u32(body, &mut pos)?;
                 Frame::HelloOk {
                     version,
                     fanout,
                     fields,
+                    producer_id,
+                    epoch,
                 }
             }
             KIND_INGEST_BATCH => {
@@ -360,11 +437,23 @@ impl Frame {
                 let first_ingest_id = varint::read_u64(body, &mut pos)?;
                 let count = varint::read_u32(body, &mut pos)?;
                 let fanout = varint::read_u32(body, &mut pos)?;
+                let duplicate = match body
+                    .get(pos)
+                    .ok_or_else(|| Error::corrupt("INGEST_ACK: truncated duplicate flag"))?
+                {
+                    0 => false,
+                    1 => true,
+                    t => {
+                        return Err(Error::corrupt(format!("INGEST_ACK: bad duplicate flag {t}")))
+                    }
+                };
+                pos += 1;
                 Frame::IngestAck {
                     seq,
                     first_ingest_id,
                     count,
                     fanout,
+                    duplicate,
                 }
             }
             KIND_REPLY_BATCH => {
@@ -639,7 +728,7 @@ pub fn decode_raw_batch<'a>(
 /// slice) — exactly the table
 /// [`crate::event::EventView::from_parts`] consumes. The server's v2
 /// path feeds both the slices and these offsets to
-/// `FrontEnd::ingest_batch_raw_prevalidated`, so each event payload is
+/// `FrontEnd::ingest_batch_raw_tagged`, so each event payload is
 /// scanned once instead of twice (wire validation + front-end
 /// re-validation).
 pub fn decode_raw_batch_offsets<'a>(
@@ -714,11 +803,15 @@ mod tests {
             Frame::Hello {
                 version: PROTOCOL_VERSION,
                 stream: "payments".into(),
+                producer_id: 3,
+                epoch: 1,
             },
             Frame::HelloOk {
                 version: PROTOCOL_VERSION,
                 fanout: 2,
                 fields: schema_fields(&payments_schema()),
+                producer_id: 3,
+                epoch: 1,
             },
             Frame::IngestBatch {
                 seq: 7,
@@ -736,6 +829,7 @@ mod tests {
                 first_ingest_id: u64::MAX - 3,
                 count: 2,
                 fanout: 2,
+                duplicate: true,
             },
             Frame::ReplyBatch {
                 msgs: vec![ReplyMsg {
@@ -1075,11 +1169,15 @@ mod tests {
             0 => Frame::Hello {
                 version: spec.a as u32,
                 stream: spec.s.clone(),
+                producer_id: spec.b as u32,
+                epoch: spec.n as u32,
             },
             1 => Frame::HelloOk {
                 version: spec.a as u32,
                 fanout: spec.b as u32,
                 fields: schema_fields(&payments_schema()),
+                producer_id: spec.a as u32,
+                epoch: spec.n as u32,
             },
             2 => Frame::IngestBatch {
                 seq: spec.a,
@@ -1092,6 +1190,7 @@ mod tests {
                 first_ingest_id: spec.b,
                 count: spec.n as u32,
                 fanout: 2,
+                duplicate: spec.flag,
             },
             4 => Frame::ReplyBatch {
                 msgs: (0..spec.n)

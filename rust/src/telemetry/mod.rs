@@ -240,6 +240,12 @@ pub struct NetStats {
     pub frames_out: Counter,
     pub parse_errors: Counter,
     pub reply_drops: Counter,
+    /// Connections that dropped at least one reply (vs `reply_drops`,
+    /// which counts the dropped frames themselves).
+    pub reply_drop_conns: Counter,
+    /// Producer session resumptions: HELLOs presenting a non-zero
+    /// `(producer_id, epoch)` — each one is a client-side reconnect.
+    pub retries: Counter,
     pub read_pauses: Counter,
     pub conns_opened: Counter,
     pub conns_closed: Counter,
@@ -255,6 +261,11 @@ impl NetStats {
         out.push(("net.frames_out".into(), self.frames_out.get()));
         out.push(("net.parse_errors".into(), self.parse_errors.get()));
         out.push(("net.reply_drops".into(), self.reply_drops.get()));
+        out.push((
+            "net.reply_drop_conns".into(),
+            self.reply_drop_conns.get(),
+        ));
+        out.push(("net.retries".into(), self.retries.get()));
         out.push(("net.read_pauses".into(), self.read_pauses.get()));
         out.push(("net.conns_opened".into(), self.conns_opened.get()));
         out.push(("net.conns_closed".into(), self.conns_closed.get()));
@@ -273,6 +284,12 @@ pub struct FrontendStats {
     pub owned_batches: Counter,
     pub interner_hits: Counter,
     pub interner_misses: Counter,
+    /// Tagged batches answered from the idempotent-producer dedup table
+    /// without touching the mlog (exact duplicates of published batches).
+    pub dedup_hits: Counter,
+    /// Records published by the retry slow path to complete a partially
+    /// published batch (the missing suffix of one or more partitions).
+    pub dup_suffix_published: Counter,
 }
 
 impl FrontendStats {
@@ -285,6 +302,11 @@ impl FrontendStats {
         out.push((
             "frontend.interner_misses".into(),
             self.interner_misses.get(),
+        ));
+        out.push(("frontend.dedup_hits".into(), self.dedup_hits.get()));
+        out.push((
+            "frontend.dup_suffix_published".into(),
+            self.dup_suffix_published.get(),
         ));
     }
 }
@@ -390,6 +412,12 @@ impl Telemetry {
         self.backend.fill(&mut counters);
         self.reservoir.fill(&mut counters);
         self.state.fill(&mut counters);
+        // process-wide: fault-injection sites fired so far (always
+        // rendered; 0 whenever the `failpoints` feature is off)
+        counters.push((
+            "failpoints.triggered".into(),
+            crate::failpoint::triggered_count(),
+        ));
         for probe in self.probes.lock().unwrap().iter() {
             probe(&mut counters);
         }

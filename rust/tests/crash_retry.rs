@@ -1,0 +1,650 @@
+//! Crash-retry harness (`cargo test --features failpoints --test
+//! crash_retry`): with failpoints injecting (a) a connection drop after
+//! a partial ack, (b) an mlog append failure between partitions and
+//! (c) a hard server kill + restart mid-stream, a retrying client must
+//! produce reply bytes and sealed reservoir chunk files **byte-
+//! identical** to an un-faulted control run — no double-counted
+//! aggregates, no lost batches.
+//!
+//! The failpoint registry is process-global, and the in-process nodes'
+//! server threads consult the same registry as the test body — so the
+//! scenarios serialize on [`FAULT_LOCK`] and each one starts and ends
+//! with a clean registry (the guard resets it even on panic).
+
+use railgun::config::{EngineConfig, StreamDef};
+use railgun::coordinator::Node;
+use railgun::event::{codec, Event, RawEvent, Value};
+use railgun::failpoint::{self, Action};
+use railgun::frontend::ReplyMsg;
+use railgun::mlog::{Broker, BrokerConfig};
+use railgun::net::{wire, ConnectOptions, NetClient, RetryPolicy};
+use railgun::net::wire::Frame;
+use railgun::plan::MetricSpec;
+use railgun::util::tmp::TempDir;
+use railgun::window::WindowSpec;
+use railgun::workload::payments_schema;
+use railgun::agg::AggKind;
+use std::collections::BTreeMap;
+use std::io::{Read, Write};
+use std::path::Path;
+use std::sync::Mutex;
+use std::time::{Duration, Instant};
+
+const LONG: Duration = Duration::from_secs(20);
+
+/// Serializes the scenarios: armed sites are visible to every thread of
+/// this process, so two scenarios running concurrently would fire each
+/// other's faults.
+static FAULT_LOCK: Mutex<()> = Mutex::new(());
+
+struct FaultGuard<'a>(#[allow(dead_code)] std::sync::MutexGuard<'a, ()>);
+
+impl Drop for FaultGuard<'_> {
+    fn drop(&mut self) {
+        failpoint::reset();
+    }
+}
+
+fn fault_serial() -> FaultGuard<'static> {
+    // a sibling scenario's panic must not poison the whole suite
+    let g = FAULT_LOCK.lock().unwrap_or_else(|p| p.into_inner());
+    failpoint::reset();
+    FaultGuard(g)
+}
+
+fn payments_def() -> StreamDef {
+    StreamDef {
+        name: "payments".into(),
+        schema: payments_schema(),
+        entities: vec!["card".into(), "merchant".into()],
+        metrics: vec![
+            MetricSpec::new(
+                "sum_by_card",
+                AggKind::Sum,
+                Some("amount"),
+                WindowSpec::sliding(300_000),
+                &["card"],
+            ),
+            MetricSpec::new(
+                "cnt_by_merchant",
+                AggKind::Count,
+                None,
+                WindowSpec::sliding(300_000),
+                &["merchant"],
+            ),
+        ],
+    }
+}
+
+fn ev(ts: i64, card: &str, merchant: &str, amount: f64) -> Event {
+    Event::new(
+        ts,
+        vec![
+            Value::Str(card.into()),
+            Value::Str(merchant.into()),
+            Value::F64(amount),
+            Value::Bool(false),
+        ],
+    )
+}
+
+/// Integer amounts: the restart scenario replays the mlog through the
+/// recovered reservoir, and integer sums stay bit-exact regardless of
+/// re-summation order (the discipline the seed recovery tests use).
+fn sample_events(n: usize) -> Vec<Event> {
+    (0..n)
+        .map(|i| {
+            ev(
+                1_000 * i as i64,
+                &format!("c{}", i % 5),
+                &format!("m{}", i % 3),
+                (i % 7) as f64,
+            )
+        })
+        .collect()
+}
+
+/// Start a listening in-process node on an ephemeral loopback port.
+fn listening_node(tmp: &TempDir) -> (Node, String) {
+    let cfg = EngineConfig {
+        listen_addr: Some("127.0.0.1:0".to_string()),
+        ..EngineConfig::for_testing(tmp.path().to_path_buf())
+    };
+    let broker = Broker::open(BrokerConfig::in_memory()).unwrap();
+    let node = Node::start("crash-node", cfg, broker).unwrap();
+    node.register_stream(payments_def()).unwrap();
+    let addr = node.net_addr().expect("listening").to_string();
+    (node, addr)
+}
+
+/// Canonical bytes of one event's reply set, with the (front-end-chosen)
+/// ingest id normalized away so two independent runs compare equal.
+fn normalize(per_event: Vec<Vec<ReplyMsg>>) -> Vec<Vec<u8>> {
+    per_event
+        .into_iter()
+        .map(|mut msgs| {
+            for m in &mut msgs {
+                m.ingest_id = 0;
+            }
+            msgs.sort_by(|a, b| a.topic.cmp(&b.topic).then(a.partition.cmp(&b.partition)));
+            let mut buf = Vec::new();
+            for m in &msgs {
+                m.encode_into(&mut buf);
+            }
+            buf
+        })
+        .collect()
+}
+
+/// Relative path → bytes of every sealed reservoir chunk file under a
+/// node's data dir (the on-disk face of the ingest path).
+fn chunk_files(data_dir: &Path) -> BTreeMap<String, Vec<u8>> {
+    fn walk(dir: &Path, root: &Path, out: &mut BTreeMap<String, Vec<u8>>) {
+        let entries = match std::fs::read_dir(dir) {
+            Ok(e) => e,
+            Err(_) => return,
+        };
+        for e in entries.flatten() {
+            let p = e.path();
+            if p.is_dir() {
+                walk(&p, root, out);
+            } else if p.extension().map(|x| x == "chk").unwrap_or(false) {
+                let rel = p
+                    .strip_prefix(root)
+                    .unwrap()
+                    .to_string_lossy()
+                    .replace('\\', "/");
+                out.insert(rel, std::fs::read(&p).unwrap());
+            }
+        }
+    }
+    let mut out = BTreeMap::new();
+    walk(data_dir, data_dir, &mut out);
+    out
+}
+
+/// Drive `batches` through a retrying client against `addr`, awaiting
+/// every event's full reply set, and return (per-event replies, acks as
+/// `(first_ingest_id, duplicate)` per batch).
+fn drive_batches(
+    addr: &str,
+    batches: &[Vec<Event>],
+    retry: RetryPolicy,
+) -> (Vec<Vec<ReplyMsg>>, Vec<(u64, bool)>) {
+    let mut client = NetClient::connect_opts(
+        addr,
+        "payments",
+        ConnectOptions {
+            retry,
+            ..ConnectOptions::default()
+        },
+    )
+    .unwrap();
+    let pid = client.producer().0;
+    let mut per_event = Vec::new();
+    let mut acks = Vec::new();
+    for batch in batches {
+        let ack = client.ingest_batch(batch.clone(), LONG).unwrap();
+        assert_eq!(ack.count as usize, batch.len());
+        acks.push((ack.first_ingest_id, ack.duplicate));
+        for i in 0..ack.count as u64 {
+            per_event.push(
+                client
+                    .await_event(ack.first_ingest_id + i, ack.fanout, LONG)
+                    .unwrap(),
+            );
+        }
+    }
+    assert_eq!(
+        client.producer().0,
+        pid,
+        "any reconnect must resume the producer identity, not mint a new one"
+    );
+    (per_event, acks)
+}
+
+/// Un-faulted control: same batches, fresh node, no retry needed.
+/// Returns (normalized replies, sealed chunk files).
+fn control_run(label: &str, batches: &[Vec<Event>]) -> (Vec<Vec<u8>>, BTreeMap<String, Vec<u8>>) {
+    let tmp = TempDir::new(label);
+    let (node, addr) = listening_node(&tmp);
+    let (per_event, acks) = drive_batches(&addr, batches, RetryPolicy::none());
+    assert!(acks.iter().all(|(_, dup)| !dup), "control run saw a duplicate");
+    node.shutdown(true);
+    (normalize(per_event), chunk_files(tmp.path()))
+}
+
+/// Scenario (a): the server drops the connection right after enqueueing
+/// (but never flushing) the ack of the second batch. The client's next
+/// read surfaces a transport fault; it reconnects with its `(producer,
+/// epoch)`, resends, and the server re-acks the already-published batch
+/// as a duplicate with the original ids — while the batch's replies,
+/// routed at a dead connection, are re-routed into the stash and
+/// reclaimed by the retry's re-registration.
+#[test]
+fn conn_drop_after_partial_ack_is_invisible_in_the_bytes() {
+    let _guard = fault_serial();
+    // enough events that partitions pass the seal threshold
+    // (for_testing: chunk_events=32) — the chunk-file comparison below
+    // must compare something
+    let batches: Vec<Vec<Event>> = sample_events(96).chunks(8).map(|c| c.to_vec()).collect();
+    let (control_replies, control_chunks) = control_run("crash_kill_ctl", &batches);
+
+    let tmp = TempDir::new("crash_kill_conn");
+    let (node, addr) = listening_node(&tmp);
+    failpoint::arm("server.kill_conn_after_ack", Action::Fail { at: 2 });
+    let retry = RetryPolicy {
+        max_attempts: 8,
+        base_backoff_ms: 10,
+        // the whole recovery must fit inside the server's reply-stash
+        // window, or the reclaimed replies would age out
+        max_backoff_ms: 80,
+    };
+    let (per_event, acks) = drive_batches(&addr, &batches, retry);
+    assert_eq!(
+        acks.iter().filter(|(_, dup)| *dup).count(),
+        1,
+        "exactly the killed batch re-acks as a duplicate: {acks:?}"
+    );
+    assert!(acks[1].1, "the second batch's ack was the one dropped");
+
+    let snap = railgun::net::fetch_stats(addr.as_str(), LONG).unwrap();
+    assert!(snap.counter("net.retries").unwrap() >= 1, "resumed HELLO counted");
+    assert!(snap.counter("frontend.dedup_hits").unwrap() >= 1, "dedup hit counted");
+    assert!(snap.counter("failpoints.triggered").unwrap() >= 1);
+    assert_eq!(
+        snap.counter("frontend.events"),
+        Some(96),
+        "every event ingested exactly once"
+    );
+
+    node.shutdown(true);
+    assert_eq!(normalize(per_event), control_replies, "reply bytes diverge");
+    let chunks = chunk_files(tmp.path());
+    assert!(!chunks.is_empty(), "expected sealed chunk files");
+    assert_eq!(chunks, control_chunks, "sealed chunk files diverge");
+}
+
+/// Scenario (b): the mlog append fails between two (entity, partition)
+/// groups of one batch — a prefix is durable, the rest is not. The
+/// server answers a retryable ERR; the client resends the same
+/// `(producer, seq)` on the live connection, and the tagged retry path
+/// appends only the missing suffix under the original ids. Replies for
+/// the orphaned prefix wait in the stash and drain to the retry.
+#[test]
+fn publish_failure_between_partitions_completes_without_duplication() {
+    let _guard = fault_serial();
+    let batches: Vec<Vec<Event>> = sample_events(96).chunks(12).map(|c| c.to_vec()).collect();
+    let (control_replies, control_chunks) = control_run("crash_torn_ctl", &batches);
+
+    let tmp = TempDir::new("crash_torn_publish");
+    let (node, addr) = listening_node(&tmp);
+    // two entity topics ⇒ every batch spans at least two groups; the
+    // second group's append errors once, then the one-shot site disarms
+    // so the resend completes clean
+    failpoint::arm("frontend.publish_partition", Action::Fail { at: 2 });
+    let retry = RetryPolicy {
+        max_attempts: 8,
+        base_backoff_ms: 10,
+        max_backoff_ms: 80,
+    };
+    let (per_event, acks) = drive_batches(&addr, &batches, retry);
+    // the resend *appended* records, so it is not an exact duplicate
+    assert!(
+        acks.iter().all(|(_, dup)| !dup),
+        "suffix completion must not report a full duplicate: {acks:?}"
+    );
+
+    let snap = railgun::net::fetch_stats(addr.as_str(), LONG).unwrap();
+    assert!(
+        snap.counter("frontend.dup_suffix_published").unwrap() >= 1,
+        "the retry published the missing suffix"
+    );
+    assert!(snap.counter("failpoints.triggered").unwrap() >= 1);
+    assert_eq!(
+        snap.counter("frontend.events"),
+        Some(96),
+        "every event ingested exactly once"
+    );
+
+    node.shutdown(true);
+    assert_eq!(normalize(per_event), control_replies, "reply bytes diverge");
+    let chunks = chunk_files(tmp.path());
+    assert!(!chunks.is_empty(), "expected sealed chunk files");
+    assert_eq!(chunks, control_chunks, "sealed chunk files diverge");
+}
+
+// ---------------------------------------------------------------------
+// Scenario (c): a real `railgun serve` process aborts mid-stream and is
+// restarted over the same data dir. Driven at the wire level so the
+// "client" can re-handshake against the restarted process's new port
+// with the producer identity the dead process issued.
+// ---------------------------------------------------------------------
+
+// chunk_events=8 so 40 events seal chunks mid-run: the restart must
+// recover sealed prefixes and refill the lost open chunk from the mlog
+const ENGINE_JSON: &str = r#"{"data_dir": "DATA_DIR", "processor_units": 1,
+    "partitions_per_topic": 2, "reply_partitions": 2, "chunk_events": 8}"#;
+
+const STREAM_JSON: &str = r#"{
+    "name": "payments",
+    "schema": [
+        {"name": "card", "type": "str"},
+        {"name": "merchant", "type": "str"},
+        {"name": "amount", "type": "f64"},
+        {"name": "cnp", "type": "bool"}
+    ],
+    "entities": ["card", "merchant"],
+    "metrics": [
+        {"name": "sum_by_card", "agg": "sum", "field": "amount",
+         "window_ms": 300000, "group_by": ["card"]},
+        {"name": "cnt_by_merchant", "agg": "count",
+         "window_ms": 300000, "group_by": ["merchant"]}
+    ]
+}"#;
+
+/// Spawn `railgun serve` on an ephemeral port, optionally arming
+/// failpoints in the child via `RAILGUN_FAILPOINTS`, and parse the
+/// announced address.
+fn spawn_serve(
+    engine_path: &Path,
+    stream_path: &Path,
+    failpoints: Option<&str>,
+) -> (std::process::Child, String) {
+    let mut cmd = std::process::Command::new(env!("CARGO_BIN_EXE_railgun"));
+    cmd.arg("serve")
+        .arg("--config")
+        .arg(engine_path)
+        .arg("--stream")
+        .arg(stream_path)
+        .arg("--listen")
+        .arg("127.0.0.1:0")
+        .stdin(std::process::Stdio::piped())
+        .stdout(std::process::Stdio::piped())
+        .stderr(std::process::Stdio::null());
+    match failpoints {
+        Some(spec) => {
+            cmd.env("RAILGUN_FAILPOINTS", spec);
+        }
+        None => {
+            cmd.env_remove("RAILGUN_FAILPOINTS");
+        }
+    }
+    let mut child = cmd.spawn().expect("spawn railgun serve");
+    let mut stdout = child.stdout.take().expect("piped stdout");
+    let mut buf = Vec::new();
+    let mut byte = [0u8; 1];
+    loop {
+        match stdout.read(&mut byte) {
+            Ok(0) => panic!("serve exited before announcing its address"),
+            Ok(_) => {
+                if byte[0] == b'\n' {
+                    break;
+                }
+                buf.push(byte[0]);
+            }
+            Err(e) => panic!("reading serve stdout: {e}"),
+        }
+    }
+    let line = String::from_utf8(buf).unwrap();
+    let addr = line
+        .strip_prefix("LISTEN ")
+        .unwrap_or_else(|| panic!("unexpected announcement: {line}"))
+        .trim()
+        .to_string();
+    (child, addr)
+}
+
+/// Close the child's stdin and wait for a clean exit (flushes and seals
+/// the reservoir chunks).
+fn shutdown_child(mut child: std::process::Child) {
+    drop(child.stdin.take());
+    let deadline = Instant::now() + Duration::from_secs(30);
+    loop {
+        match child.try_wait().expect("try_wait") {
+            Some(status) => {
+                assert!(status.success(), "serve exited with {status}");
+                return;
+            }
+            None if Instant::now() > deadline => {
+                let _ = child.kill();
+                panic!("serve did not exit within 30s of stdin EOF");
+            }
+            None => std::thread::sleep(Duration::from_millis(50)),
+        }
+    }
+}
+
+/// HELLO at the wire level, presenting a producer claim; returns the
+/// socket and the authoritative `(producer_id, epoch)`.
+fn hello(addr: &str, producer_id: u32, epoch: u32) -> (std::net::TcpStream, u32, u32) {
+    let mut sock = std::net::TcpStream::connect(addr).unwrap();
+    sock.set_nodelay(true).unwrap();
+    wire::write_frame(
+        &mut sock,
+        &Frame::Hello {
+            version: wire::PROTOCOL_VERSION,
+            stream: "payments".into(),
+            producer_id,
+            epoch,
+        },
+        None,
+    )
+    .unwrap();
+    sock.set_read_timeout(Some(LONG)).unwrap();
+    match wire::read_frame(&mut sock, None, wire::DEFAULT_MAX_FRAME).unwrap() {
+        Some(Frame::HelloOk {
+            producer_id, epoch, ..
+        }) => (sock, producer_id, epoch),
+        other => panic!("expected HELLO_OK, got {other:?}"),
+    }
+}
+
+/// Encode one raw v2 ingest frame carrying `events` under `seq` — the
+/// exact bytes a resend must repeat.
+fn encode_batch_frame(seq: u64, events: &[Event]) -> Vec<u8> {
+    let schema = payments_schema();
+    let encoded: Vec<Vec<u8>> = events
+        .iter()
+        .map(|e| {
+            let mut v = Vec::new();
+            codec::encode_values_into(&mut v, e, &schema);
+            v
+        })
+        .collect();
+    let raws: Vec<RawEvent<'_>> = events
+        .iter()
+        .zip(&encoded)
+        .map(|(e, v)| RawEvent {
+            timestamp: e.timestamp,
+            values: v,
+        })
+        .collect();
+    let mut frame = Vec::new();
+    wire::encode_raw_batch_frame(&mut frame, seq, &raws);
+    frame
+}
+
+/// Read frames until the in-flight batch's ack *and* all `count × fanout`
+/// replies for its id range have arrived. Errors surface (that is the
+/// crash the caller is waiting to observe).
+fn collect_batch(
+    sock: &mut std::net::TcpStream,
+    count: u64,
+    fanout: usize,
+) -> railgun::Result<(u64, bool, Vec<Vec<ReplyMsg>>)> {
+    let mut ack: Option<(u64, bool)> = None;
+    let mut by_id: BTreeMap<u64, Vec<ReplyMsg>> = BTreeMap::new();
+    loop {
+        let frame = wire::read_frame(sock, None, wire::DEFAULT_MAX_FRAME)?
+            .ok_or_else(|| railgun::Error::invalid("connection closed mid-batch"))?;
+        match frame {
+            Frame::IngestAck {
+                first_ingest_id,
+                duplicate,
+                ..
+            } => ack = Some((first_ingest_id, duplicate)),
+            Frame::ReplyBatch { msgs } => {
+                for m in msgs {
+                    by_id.entry(m.ingest_id).or_default().push(m);
+                }
+            }
+            other => {
+                return Err(railgun::Error::invalid(format!(
+                    "unexpected frame mid-batch: {other:?}"
+                )))
+            }
+        }
+        if let Some((first, dup)) = ack {
+            let complete = (first..first + count)
+                .all(|id| by_id.get(&id).map(|v| v.len()).unwrap_or(0) >= fanout);
+            if complete {
+                let per_event = (first..first + count)
+                    .map(|id| by_id.remove(&id).unwrap())
+                    .collect();
+                return Ok((first, dup, per_event));
+            }
+        }
+    }
+}
+
+/// Scenario (c): `server.abort_after_ingest=abort@3` kills the serve
+/// process the instant the third batch is durable — before its ack can
+/// flush. A restart over the same data dir rebuilds the dedup table
+/// from the record tags; the client re-handshakes with its old identity
+/// on the new port and resends, getting the *original* pre-crash ids
+/// back as a duplicate ack, plus the replies the recovered processors
+/// re-published. Final bytes match a never-crashed control run.
+#[test]
+fn server_kill_and_restart_mid_stream_is_invisible_in_the_bytes() {
+    let _guard = fault_serial();
+    let tmp = TempDir::new("crash_restart");
+    let stream_path = tmp.join("stream.json");
+    std::fs::write(&stream_path, STREAM_JSON).unwrap();
+    // The first three batches (through the crash) are tiny on purpose:
+    // pre-crash appends must stay under the chunk seal threshold
+    // (chunk_events=8 per partition), because a chunk sealed before the
+    // abort is *not* re-evaluated on restart — its replies would never
+    // be re-published for the resend to reclaim. The big tail batches
+    // then push every partition past the threshold so the final
+    // chunk-file comparison compares real bytes.
+    let events = sample_events(40);
+    let mut batches: Vec<Vec<Event>> = Vec::new();
+    let mut off = 0;
+    for size in [2usize, 2, 2, 17, 17] {
+        batches.push(events[off..off + size].to_vec());
+        off += size;
+    }
+    let frames: Vec<Vec<u8>> = batches
+        .iter()
+        .enumerate()
+        .map(|(i, b)| encode_batch_frame(i as u64 + 1, b))
+        .collect();
+    let engine_json = |data_dir: &Path| {
+        ENGINE_JSON.replace("DATA_DIR", &data_dir.display().to_string())
+    };
+
+    // un-faulted control process over the same wire schedule
+    let ctl_data = tmp.join("control-data");
+    let ctl_engine = tmp.join("engine-control.json");
+    std::fs::write(&ctl_engine, engine_json(&ctl_data)).unwrap();
+    let (ctl_child, ctl_addr) = spawn_serve(&ctl_engine, &stream_path, None);
+    let mut control_replies = Vec::new();
+    {
+        let (mut sock, _, _) = hello(&ctl_addr, 0, 0);
+        for (frame, batch) in frames.iter().zip(&batches) {
+            sock.write_all(frame).unwrap();
+            let (_, dup, per_event) =
+                collect_batch(&mut sock, batch.len() as u64, 2).unwrap();
+            assert!(!dup);
+            control_replies.extend(per_event);
+        }
+    }
+    shutdown_child(ctl_child);
+    let control_chunks = chunk_files(&ctl_data);
+    assert!(!control_chunks.is_empty(), "expected sealed chunk files");
+
+    // faulted process: aborts right after the third batch is durable
+    let data = tmp.join("faulted-data");
+    let engine = tmp.join("engine-faulted.json");
+    std::fs::write(&engine, engine_json(&data)).unwrap();
+    let (mut child, addr) =
+        spawn_serve(&engine, &stream_path, Some("server.abort_after_ingest=abort@3"));
+    let (mut sock, pid, epoch) = hello(&addr, 0, 0);
+    assert_ne!(pid, 0);
+    let mut replies = Vec::new();
+    let mut acked: Vec<u64> = Vec::new();
+    let mut crashed_at = None;
+    for (i, (frame, batch)) in frames.iter().zip(&batches).enumerate() {
+        if sock.write_all(frame).is_err() {
+            crashed_at = Some(i);
+            break;
+        }
+        match collect_batch(&mut sock, batch.len() as u64, 2) {
+            Ok((first, dup, per_event)) => {
+                assert!(!dup);
+                acked.push(first);
+                replies.extend(per_event);
+            }
+            Err(_) => {
+                crashed_at = Some(i);
+                break;
+            }
+        }
+    }
+    drop(sock);
+    assert_eq!(
+        crashed_at,
+        Some(2),
+        "the armed abort must swallow the third batch's ack"
+    );
+    let status = child.wait().expect("wait on aborted serve");
+    assert!(!status.success(), "server aborted as armed, got {status}");
+
+    // restart over the same data dir, no faults armed; resume the
+    // identity the dead process issued and resend from the lost batch
+    let (child2, addr2) = spawn_serve(&engine, &stream_path, None);
+    let (mut sock, pid2, _) = hello(&addr2, pid, epoch);
+    assert_eq!(pid2, pid, "restarted server resumes the presented identity");
+    for (i, (frame, batch)) in frames.iter().zip(&batches).enumerate().skip(2) {
+        sock.write_all(frame).unwrap();
+        let (first, dup, per_event) = collect_batch(&mut sock, batch.len() as u64, 2).unwrap();
+        if i == 2 {
+            // the crashed batch was fully durable: the rebuilt dedup
+            // table answers with the original (pre-crash) id range
+            assert!(dup, "resent batch must classify as a duplicate");
+            assert_eq!(
+                first,
+                acked[1] + batches[1].len() as u64,
+                "duplicate ack reports the original ids"
+            );
+        } else {
+            assert!(!dup, "batch {i} was never sent before the crash");
+        }
+        replies.extend(per_event);
+    }
+    let snap = railgun::net::fetch_stats(addr2.as_str(), LONG).unwrap();
+    assert!(
+        snap.counter("frontend.dedup_hits").unwrap() >= 1,
+        "durable-tag dedup counted on the restarted server"
+    );
+    assert!(
+        snap.counter("net.retries").unwrap() >= 1,
+        "resumed HELLO counted as a retry"
+    );
+    drop(sock);
+    shutdown_child(child2);
+
+    assert_eq!(replies.len(), control_replies.len());
+    assert_eq!(
+        normalize(replies),
+        normalize(control_replies),
+        "reply bytes diverge across the crash"
+    );
+    let chunks = chunk_files(&data);
+    assert!(!chunks.is_empty(), "expected sealed chunk files");
+    assert_eq!(
+        chunks, control_chunks,
+        "sealed chunk files diverge across the crash"
+    );
+}

@@ -226,6 +226,8 @@ fn unknown_stream_and_bad_version_are_rejected() {
     let hello = Frame::Hello {
         version: 999,
         stream: "payments".into(),
+        producer_id: 0,
+        epoch: 0,
     };
     raw.write_all(&hello.encode(None).unwrap()).unwrap();
     raw.set_read_timeout(Some(LONG)).unwrap();
@@ -279,6 +281,8 @@ fn corrupt_and_oversized_frames_poison_only_their_connection() {
     let mut bytes = Frame::Hello {
         version: wire::PROTOCOL_VERSION,
         stream: "payments".into(),
+        producer_id: 0,
+        epoch: 0,
     }
     .encode(None)
     .unwrap();
@@ -471,6 +475,8 @@ fn corrupt_raw_payloads_poison_only_their_batch() {
         &Frame::Hello {
             version: wire::PROTOCOL_VERSION,
             stream: "payments".into(),
+            producer_id: 0,
+            epoch: 0,
         },
         None,
     )
@@ -598,6 +604,7 @@ fn closed_loop_bench_completes_every_event() {
         pipeline: 4,
         cardinality: 50,
         timeout: Duration::from_secs(60),
+        ..BenchOptions::default()
     };
     let report = railgun::net::run_closed_loop(&addr, "payments", &opts).unwrap();
     assert_eq!(report.events_sent, 2_000);
@@ -619,6 +626,7 @@ fn open_loop_bench_completes_at_offered_rate() {
         pipeline: 1, // ignored by the open loop
         cardinality: 50,
         timeout: Duration::from_secs(60),
+        ..BenchOptions::default()
     };
     // a rate the loopback engine trivially sustains: corrected latency
     // then reflects service time, and every event completes
@@ -769,6 +777,8 @@ fn slow_reader_backpressures_only_itself() {
             &Frame::Hello {
                 version: wire::PROTOCOL_VERSION,
                 stream: "payments".into(),
+                producer_id: 0,
+                epoch: 0,
             },
             None,
         )
@@ -787,7 +797,9 @@ fn slow_reader_backpressures_only_itself() {
         let schema = payments_schema();
         let pad = "x".repeat(512);
         let mut sent = 0usize;
-        for seq in 0..200u64 {
+        // batch seqs are 1-based on the tagged ingest path (0 is the
+        // untagged sentinel and gets rejected)
+        for seq in 1..=200u64 {
             let events: Vec<Event> = (0..16i64)
                 .map(|i| ev(seq as i64 * 16 + i, &format!("slow{pad}{i}"), "mslow", 1.0))
                 .collect();
@@ -825,6 +837,103 @@ fn slow_reader_backpressures_only_itself() {
     let (sock, sent) = slow.join().unwrap();
     assert!(sent > 0, "the flood must have sent at least one batch");
     drop(sock);
+    node.shutdown(true);
+}
+
+/// Resending a batch under the same `(producer_id, batch_seq)` — a
+/// fresh connection presenting the same identity, same seq: the wire
+/// shape of a client retry after a transport fault — must be acked as a
+/// duplicate carrying the **original** ingest ids, publish nothing new,
+/// and show up in the dedup/retry telemetry.
+#[test]
+fn duplicate_resend_acks_original_ids_and_counts_in_stats() {
+    let tmp = TempDir::new("net_dup_resend");
+    let (node, addr) = listening_node(&tmp);
+
+    let hello = |producer_id: u32, epoch: u32| -> (std::net::TcpStream, u32, u32) {
+        let mut sock = std::net::TcpStream::connect(&addr).unwrap();
+        wire::write_frame(
+            &mut sock,
+            &Frame::Hello {
+                version: wire::PROTOCOL_VERSION,
+                stream: "payments".into(),
+                producer_id,
+                epoch,
+            },
+            None,
+        )
+        .unwrap();
+        sock.set_read_timeout(Some(LONG)).unwrap();
+        match wire::read_frame(&mut sock, None, wire::DEFAULT_MAX_FRAME).unwrap() {
+            Some(Frame::HelloOk {
+                producer_id, epoch, ..
+            }) => (sock, producer_id, epoch),
+            other => panic!("expected HELLO_OK, got {other:?}"),
+        }
+    };
+    let read_ack = |sock: &mut std::net::TcpStream| -> (u64, u64, u32, bool) {
+        loop {
+            match wire::read_frame(sock, None, wire::DEFAULT_MAX_FRAME).unwrap() {
+                Some(Frame::IngestAck {
+                    seq,
+                    first_ingest_id,
+                    count,
+                    duplicate,
+                    ..
+                }) => return (seq, first_ingest_id, count, duplicate),
+                // replies can legally overtake the ack in the writer queue
+                Some(Frame::ReplyBatch { .. }) => continue,
+                other => panic!("expected INGEST_ACK, got {other:?}"),
+            }
+        }
+    };
+
+    // first connection mints a producer and lands batch seq 1
+    let (mut sock, pid, epoch) = hello(0, 0);
+    assert_ne!(pid, 0, "server mints a non-zero producer id");
+    let schema = payments_schema();
+    let mut values = Vec::new();
+    codec::encode_values_into(&mut values, &sample_events(1)[0], &schema);
+    let mut frame = Vec::new();
+    wire::encode_raw_batch_frame(
+        &mut frame,
+        1,
+        &[RawEvent {
+            timestamp: 5,
+            values: &values,
+        }],
+    );
+    sock.write_all(&frame).unwrap();
+    let (seq, first_id, count, duplicate) = read_ack(&mut sock);
+    assert_eq!((seq, count, duplicate), (1, 1, false));
+    drop(sock);
+
+    // a second connection resumes the identity and resends the exact
+    // same frame bytes
+    let (mut sock2, pid2, _) = hello(pid, epoch);
+    assert_eq!(pid2, pid, "server resumes the presented producer id");
+    sock2.write_all(&frame).unwrap();
+    let (seq2, first_id2, count2, duplicate2) = read_ack(&mut sock2);
+    assert_eq!(seq2, 1);
+    assert_eq!(first_id2, first_id, "duplicate ack reports the original ids");
+    assert_eq!(count2, 1);
+    assert!(duplicate2, "resend of a fully published batch is a duplicate");
+    drop(sock2);
+
+    let snap = railgun::net::fetch_stats(addr.as_str(), LONG).unwrap();
+    assert!(
+        snap.counter("frontend.dedup_hits").unwrap() >= 1,
+        "dedup hit counted"
+    );
+    assert!(
+        snap.counter("net.retries").unwrap() >= 1,
+        "resumed HELLO counted as a retry"
+    );
+    assert_eq!(
+        snap.counter("frontend.events"),
+        Some(1),
+        "the event was ingested exactly once"
+    );
     node.shutdown(true);
 }
 
@@ -870,6 +979,21 @@ fn stats_scrape_roundtrips_and_counts_ingested_events() {
     assert!(s1.counter("net.bytes_in").unwrap() > 0);
     assert!(s1.counter("net.frames_out").unwrap() > 0);
     assert!(s1.hist("backend.batch_ns").unwrap().count > 0);
+
+    // the reliable-ingest counters are always rendered (zero on a
+    // fault-free run) and ride the monotonicity check below
+    for name in [
+        "net.retries",
+        "net.reply_drop_conns",
+        "frontend.dedup_hits",
+        "frontend.dup_suffix_published",
+        "failpoints.triggered",
+    ] {
+        assert!(
+            s1.counter(name).is_some(),
+            "{name} missing from the snapshot"
+        );
+    }
 
     // every cumulative counter is monotonic across scrapes
     for (earlier, later) in [(&s0, &s1), (&s1, &s2)] {
