@@ -22,6 +22,7 @@
 //! `Vec<MetricReply>`, no owned name/group `String`s — the wire format
 //! is byte-identical to the materialized `ReplyMsg` path it replaced.
 
+use crate::checkpoint::{CheckpointStore, Snapshot};
 use crate::config::{EngineConfig, StreamDef};
 use crate::error::{Error, Result};
 use crate::frontend::{reply_partition_for, Envelope, ReplyMsg, REPLY_TOPIC};
@@ -31,6 +32,7 @@ use crate::plan::{MetricReply, MetricSpec, Plan, ReplyCtx, ReplySink, StateStore
 use crate::reservoir::{Reservoir, ReservoirConfig};
 use crate::telemetry::Telemetry;
 use crate::util::clock::TimestampMs;
+use crate::util::hash::FxHashMap;
 use std::path::PathBuf;
 use std::sync::Arc;
 use std::time::Instant;
@@ -55,8 +57,19 @@ pub struct TaskProcessor {
     reply_partitions: u32,
     events_since_checkpoint: u64,
     checkpoint_every: u64,
+    /// Snapshot store ([`crate::checkpoint`]); `None` when
+    /// `checkpoint_interval == 0` — snapshots are then neither written
+    /// nor consulted and recovery is the exact full replay it always
+    /// was.
+    checkpoints: Option<CheckpointStore>,
+    /// Per-producer dedup high-water `(producer id → max batch seq)`
+    /// observed in record seq tags, captured into snapshots. Tracked
+    /// only when snapshots are enabled.
+    producer_high: FxHashMap<u32, u32>,
     /// Number of events replayed during recovery (observability).
     pub recovered_events: u64,
+    /// Wall time the recovery replay took (observability).
+    pub recovery_ms: u64,
     /// Reusable per-batch evaluation times (no per-batch allocation).
     t_evals: Vec<TimestampMs>,
     /// Reusable per-batch (ingest_id, event_ts) metadata.
@@ -87,6 +100,28 @@ struct TelBaseline {
     evictions: u64,
     spills: u64,
     live_slots: u64,
+}
+
+/// Whether a decoded snapshot can be restored into this processor:
+/// right (topic, partition); covers no more events than the recovered
+/// reservoir actually holds (a snapshot taken past the durable horizon
+/// — e.g. mid-open-chunk before the crash — must not be trusted);
+/// internally consistent positions; and a position for every window
+/// offset the current plan runs (config drift invalidates).
+fn snapshot_applies(
+    snap: &Snapshot,
+    topic: &str,
+    partition: u32,
+    durable: u64,
+    bundle_offsets: &[i64],
+) -> bool {
+    snap.topic == topic
+        && snap.partition == partition
+        && snap.processed <= durable
+        && snap.positions.iter().all(|&(_, seq)| seq <= snap.processed)
+        && bundle_offsets
+            .iter()
+            .all(|o| snap.positions.iter().any(|(po, _)| po == o))
 }
 
 /// The task processor's [`ReplySink`]: encodes each event's replies
@@ -217,10 +252,74 @@ impl TaskProcessor {
         let state = StateStore::new(store, cfg.state_cache_entries);
         let mut plan = Plan::build(stream.schema.clone(), &metrics, &reservoir, state)?;
 
-        // bounded replay: rebuild states from the window horizon
+        let checkpoints = if cfg.checkpoint_interval > 0 {
+            Some(CheckpointStore::open(dir.join("checkpoints"))?)
+        } else {
+            None
+        };
+
+        // snapshot + tail replay: restore the newest applicable snapshot
+        // and silently replay only `[snap.processed, reservoir end)` —
+        // bypassing the bounded full replay below entirely
+        let recovery_started = Instant::now();
         let mut recovered_events = 0u64;
+        let mut producer_high = FxHashMap::default();
+        let mut recovered_from_snapshot = false;
         let durable = reservoir.len();
-        if durable > 0 {
+        if let Some(store) = &checkpoints {
+            for path in store.list()? {
+                let snap = match store.load(&path) {
+                    Ok(s) => s,
+                    Err(e) => {
+                        // torn write, bit flip, config drift: fall back
+                        // to the next-older snapshot, then full replay
+                        log::warn!("checkpoint: rejecting {path:?}: {e}");
+                        continue;
+                    }
+                };
+                if !snapshot_applies(&snap, &topic, partition, durable, &plan.bundle_offsets()) {
+                    log::warn!("checkpoint: {path:?} does not apply, skipping");
+                    continue;
+                }
+                // the file's CRC already vouched for its bytes; a restore
+                // error here would mean a construction bug, not disk
+                // corruption — surface it rather than replaying over a
+                // half-restored plan
+                plan.restore_interner(&snap.interner)?;
+                plan.state().restore_states(&snap.states)?;
+                plan.restore_positions(&snap.positions, snap.last_t_eval);
+                let mut replay = reservoir.iterator_at(snap.processed);
+                let mut t_evals: Vec<i64> = Vec::with_capacity(1024);
+                let mut last_t = snap.last_t_eval;
+                loop {
+                    t_evals.clear();
+                    while t_evals.len() < 1024 {
+                        match replay.next(|_, e| e.timestamp())? {
+                            Some(ts) => {
+                                last_t = (ts + 1).max(last_t);
+                                t_evals.push(last_t);
+                            }
+                            None => break,
+                        }
+                    }
+                    if t_evals.is_empty() {
+                        break;
+                    }
+                    plan.advance_batch(&t_evals, &mut ())?;
+                    recovered_events += t_evals.len() as u64;
+                }
+                // seed the next snapshot's coverage note. Tags of the
+                // replayed tail are not in the reservoir, so marks may
+                // trail reality until those producers send again — the
+                // broker's own dedup rebuild is the authority
+                producer_high = snap.producers.iter().copied().collect();
+                recovered_from_snapshot = true;
+                break;
+            }
+        }
+
+        // bounded replay: rebuild states from the window horizon
+        if !recovered_from_snapshot && durable > 0 {
             let max_head = metrics
                 .iter()
                 .map(|m| m.window.head_offset())
@@ -300,7 +399,10 @@ impl TaskProcessor {
             reply_partitions,
             events_since_checkpoint: 0,
             checkpoint_every: cfg.checkpoint_every,
+            checkpoints,
+            producer_high,
             recovered_events,
+            recovery_ms: recovery_started.elapsed().as_millis().min(u64::MAX as u128) as u64,
             t_evals: Vec::new(),
             reply_meta: Vec::new(),
             reply_current: Vec::new(),
@@ -312,8 +414,13 @@ impl TaskProcessor {
 
     /// Attach the node's shared telemetry registry. Until this is
     /// called, per-batch flushes land in a private throwaway registry.
+    /// Recovery happened inside [`TaskProcessor::open`], before any
+    /// registry could be attached, so its counters are pushed here.
     pub fn set_telemetry(&mut self, telemetry: Arc<Telemetry>) {
         self.telemetry = telemetry;
+        let r = &self.telemetry.recovery;
+        r.replayed_records.add(self.recovered_events);
+        r.ms.add(self.recovery_ms);
     }
 
     /// First record offset this processor needs from the messaging layer.
@@ -399,6 +506,11 @@ impl TaskProcessor {
             }
             self.processed += 1;
             self.events_since_checkpoint += 1;
+            if self.checkpoints.is_some() && record.seq != 0 {
+                // record tags are `producer_id << 32 | batch_seq`
+                let high = self.producer_high.entry((record.seq >> 32) as u32).or_insert(0);
+                *high = (*high).max(record.seq as u32);
+            }
             self.reply_meta.push((ingest_id, ts));
             last_t = (ts + 1).max(last_t);
             self.t_evals.push(last_t);
@@ -514,6 +626,45 @@ impl TaskProcessor {
         Ok(())
     }
 
+    /// Take a durable snapshot: run the [`TaskProcessor::checkpoint`]
+    /// barrier (the snapshot asserts its `processed` events are
+    /// recoverable), then persist the plan image atomically through the
+    /// [`CheckpointStore`]. Never touches the ingest path — no seal is
+    /// forced, no reply is emitted, chunk files are byte-identical with
+    /// snapshots on or off. Returns the encoded byte count, or
+    /// `Ok(None)` when snapshots are disabled
+    /// (`checkpoint_interval == 0`).
+    pub fn write_snapshot(&mut self) -> Result<Option<u64>> {
+        let started = Instant::now();
+        // the barrier runs regardless: an explicit checkpoint request
+        // (`OpTask::Checkpoint`) keeps its durability contract even with
+        // snapshots disabled
+        self.checkpoint()?;
+        if self.checkpoints.is_none() {
+            return Ok(None);
+        }
+        let mut producers: Vec<(u32, u32)> =
+            self.producer_high.iter().map(|(&p, &s)| (p, s)).collect();
+        producers.sort_unstable();
+        let snap = Snapshot {
+            topic: self.topic.clone(),
+            partition: self.partition,
+            processed: self.processed,
+            last_t_eval: self.plan.last_t_eval(),
+            positions: self.plan.positions(),
+            interner: self.plan.export_interner(),
+            states: self.plan.state().export_states()?,
+            producers,
+        };
+        let bytes = self.checkpoints.as_ref().unwrap().write(&snap)?;
+        let c = &self.telemetry.checkpoint;
+        c.written.incr();
+        c.bytes.add(bytes);
+        c.write_ms
+            .add(started.elapsed().as_millis().min(u64::MAX as u128) as u64);
+        Ok(Some(bytes))
+    }
+
     /// Read a metric value directly (tests, demos).
     pub fn query(&mut self, metric: &str, group: &[crate::event::Value]) -> Result<Option<f64>> {
         self.plan.value_for(metric, group)
@@ -592,9 +743,14 @@ mod tests {
     }
 
     fn open_tp(dir: PathBuf, replies: bool) -> TaskProcessor {
+        open_tp_ckpt(dir, replies, 0)
+    }
+
+    fn open_tp_ckpt(dir: PathBuf, replies: bool, checkpoint_interval: u64) -> TaskProcessor {
         let broker = Broker::open(BrokerConfig::in_memory()).unwrap();
         broker.create_topic(REPLY_TOPIC, 1).unwrap();
-        let cfg = EngineConfig::for_testing(dir.clone());
+        let mut cfg = EngineConfig::for_testing(dir.clone());
+        cfg.checkpoint_interval = checkpoint_interval;
         TaskProcessor::open(dir, stream(), "card", 0, &cfg, broker.producer(), replies).unwrap()
     }
 
@@ -697,6 +853,92 @@ mod tests {
                 assert_eq!(a, b, "{metric}/{card}");
             }
         }
+    }
+
+    #[test]
+    fn snapshot_recovery_replays_only_the_tail() {
+        // chunk_events=32: snapshot at 100, then 60 more events so the
+        // durable horizon (160, all chunks full) covers the snapshot
+        let recs = |range: std::ops::Range<u64>| -> Vec<Record> {
+            range
+                .map(|i| {
+                    record(
+                        i,
+                        i as i64 * 1000,
+                        if i % 3 == 0 { "c1" } else { "c2" },
+                        (i % 7) as f64,
+                    )
+                })
+                .collect()
+        };
+        let tmp = TempDir::new("tp_snap_tail");
+        let dir = tmp.path().to_path_buf();
+        {
+            let mut tp = open_tp_ckpt(dir.clone(), false, 1);
+            for r in recs(0..100) {
+                tp.process(&r).unwrap();
+            }
+            assert!(tp.write_snapshot().unwrap().is_some());
+            for r in recs(100..160) {
+                tp.process(&r).unwrap();
+            }
+            tp.checkpoint().unwrap();
+        }
+        let mut tp = open_tp_ckpt(dir, false, 1);
+        assert_eq!(tp.start_offset(), 160, "all sealed chunks recovered");
+        assert_eq!(tp.recovered_events, 60, "only the post-snapshot tail");
+        // control: the same stream processed uninterrupted, no snapshots
+        let tmp_c = TempDir::new("tp_snap_control");
+        let mut control = open_tp(tmp_c.path().to_path_buf(), false);
+        for r in recs(0..160) {
+            control.process(&r).unwrap();
+        }
+        for card in ["c1", "c2"] {
+            for metric in ["sum5m", "cnt5m"] {
+                let a = tp.query(metric, &[Value::Str(card.into())]).unwrap();
+                let b = control.query(metric, &[Value::Str(card.into())]).unwrap();
+                assert_eq!(a, b, "{metric}/{card}");
+            }
+        }
+    }
+
+    #[test]
+    fn snapshot_past_durable_horizon_falls_back_to_full_replay() {
+        // snapshot at 100 with only 96 events sealed (chunk_events=32):
+        // the snapshot claims more history than the recovered reservoir
+        // holds, so recovery must reject it and replay in full
+        let tmp = TempDir::new("tp_snap_stale");
+        let dir = tmp.path().to_path_buf();
+        {
+            let mut tp = open_tp_ckpt(dir.clone(), false, 1);
+            for i in 0..100u64 {
+                tp.process(&record(i, i as i64 * 1000, "c1", 1.0)).unwrap();
+            }
+            assert!(tp.write_snapshot().unwrap().is_some());
+        }
+        let mut tp = open_tp_ckpt(dir, false, 1);
+        assert_eq!(tp.start_offset(), 96, "sealed horizon, not snapshot");
+        assert!(tp.recovered_events > 0, "full replay ran");
+        // the lost tail comes back from the messaging layer as usual
+        for i in 96..100u64 {
+            tp.process(&record(i, i as i64 * 1000, "c1", 1.0)).unwrap();
+        }
+        assert_eq!(
+            tp.query("cnt5m", &[Value::Str("c1".into())]).unwrap(),
+            Some(100.0)
+        );
+    }
+
+    #[test]
+    fn write_snapshot_is_a_noop_when_disabled() {
+        let tmp = TempDir::new("tp_snap_off");
+        let mut tp = open_tp(tmp.path().to_path_buf(), false);
+        tp.process(&record(0, 1000, "c1", 1.0)).unwrap();
+        assert_eq!(tp.write_snapshot().unwrap(), None);
+        assert!(
+            !tmp.path().join("checkpoints").exists(),
+            "no snapshot directory when checkpoint_interval == 0"
+        );
     }
 
     #[test]

@@ -17,7 +17,7 @@ use std::collections::HashMap;
 use std::path::PathBuf;
 use std::sync::mpsc::{Receiver, Sender, TryRecvError};
 use std::sync::Arc;
-use std::time::Duration;
+use std::time::{Duration, Instant};
 
 /// Operational tasks delivered to a processor unit (Algorithm 1, line 2).
 pub enum OpTask {
@@ -134,6 +134,10 @@ fn unit_loop(
     let mut consumer: Option<Consumer> = None;
     let mut tasks: HashMap<TopicPartition, TaskProcessor> = HashMap::new();
     let poll_timeout = Duration::from_millis(cfg.poll_timeout_ms);
+    // periodic snapshot cadence (checkpoint_interval == 0 ⇒ never; the
+    // per-task write is then a no-op anyway)
+    let snapshot_every = Duration::from_secs(cfg.checkpoint_interval);
+    let mut last_snapshot = Instant::now();
 
     'main: loop {
         // 1. operational tasks
@@ -144,14 +148,17 @@ fn unit_loop(
                     consumer = None;
                 }
                 Ok(OpTask::Checkpoint(ack)) => {
+                    // write_snapshot = durability barrier + (when
+                    // enabled) a durable plan snapshot
                     let mut result = Ok(());
                     for tp in tasks.values_mut() {
-                        if let Err(e) = tp.checkpoint() {
+                        if let Err(e) = tp.write_snapshot() {
                             result = Err(e);
                             break;
                         }
                     }
                     let _ = ack.send(result);
+                    last_snapshot = Instant::now();
                 }
                 Ok(OpTask::Shutdown) => {
                     for tp in tasks.values_mut() {
@@ -258,6 +265,17 @@ fn unit_loop(
             if let Some(last) = records.last() {
                 c.commit(tp_key, last.offset + 1);
             }
+        }
+
+        // 6. periodic snapshots — never on the per-batch path, and
+        // compiled down to a cheap Instant compare when disabled
+        if !snapshot_every.is_zero() && last_snapshot.elapsed() >= snapshot_every {
+            for (tp_key, tp) in tasks.iter_mut() {
+                if let Err(e) = tp.write_snapshot() {
+                    log::warn!("{unit_name}: {tp_key}: snapshot failed: {e}");
+                }
+            }
+            last_snapshot = Instant::now();
         }
     }
 }

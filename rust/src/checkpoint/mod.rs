@@ -1,0 +1,502 @@
+//! Task-processor state snapshots for bounded-replay recovery.
+//!
+//! A [`Snapshot`] captures everything a task processor's recovery would
+//! otherwise rebuild by replaying the mlog tail: the group interner
+//! (canonical key bytes + display strings, in dense id order), the
+//! state-store aggregate states (raw kvstore pairs), the plan's window
+//! bookkeeping (per-bundle reservoir positions + the evaluation clock),
+//! the count of mlog records the snapshot covers, and the per-producer
+//! dedup high-water marks observed up to that point.
+//!
+//! [`CheckpointStore`] persists snapshots under
+//! `<task dir>/checkpoints/` with the atomicity discipline the rest of
+//! the engine uses: encode, write to a `.tmp` sibling, fsync, rename
+//! into place, fsync the directory. Files are CRC'd and versioned; the
+//! newest [`RETAIN`] snapshots are kept. A torn, corrupt, or
+//! mid-write-crashed snapshot is detected at load time and recovery
+//! falls back to the next-older snapshot or a full replay — never wrong
+//! state.
+//!
+//! Failpoint sites (see [`crate::failpoint`]; compiled out by default):
+//!
+//! * `checkpoint.write_torn` — the snapshot file is truncated half-way
+//!   but still renamed into place (a torn write on a non-atomic
+//!   filesystem); the CRC catches it at recovery.
+//! * `checkpoint.abort_mid_write` — fires between the temp write and
+//!   the rename; armed as `abort@N` the process dies leaving only a
+//!   `.tmp` (never consulted by recovery), armed as `fail@N` the write
+//!   errors and the temp file is removed.
+//! * `checkpoint.fsync` — an injected fsync error; the write fails
+//!   cleanly and the engine continues without a new snapshot.
+
+use crate::error::{Error, Result};
+use crate::failpoint;
+use crate::util::varint;
+use std::io::Write;
+use std::path::{Path, PathBuf};
+
+/// `RGCK` little-endian: checkpoint file magic.
+pub const MAGIC: u32 = 0x4b43_4752;
+/// On-disk snapshot format version.
+pub const VERSION: u32 = 1;
+/// Snapshots kept per task (newest first; older ones are deleted).
+pub const RETAIN: usize = 3;
+
+const HEADER_LEN: usize = 4 + 4 + 4 + 8;
+
+/// One task processor's recovery state at a known mlog position.
+#[derive(Debug, Clone, PartialEq, Eq, Default)]
+pub struct Snapshot {
+    /// Entity topic the task consumes.
+    pub topic: String,
+    /// Partition within the topic.
+    pub partition: u32,
+    /// Mlog records processed (== reservoir events appended) when the
+    /// snapshot was taken; recovery seeks the consumer here and replays
+    /// only `[processed, log end)`.
+    pub processed: u64,
+    /// The plan's evaluation clock (`Plan::last_t_eval`) at snapshot
+    /// time.
+    pub last_t_eval: i64,
+    /// Per-bundle reservoir positions: `(window offset_ms, iterator
+    /// seq)` as returned by `Plan::positions`.
+    pub positions: Vec<(i64, u64)>,
+    /// Interner entries `(canonical key bytes, display string)` in
+    /// dense `GroupId` order — restoring them in order reproduces the
+    /// exact id assignment.
+    pub interner: Vec<(Vec<u8>, String)>,
+    /// Raw state-store pairs (composed key → encoded `AggState`), the
+    /// same bytes an eviction spill writes.
+    pub states: Vec<(Vec<u8>, Vec<u8>)>,
+    /// Per-producer dedup high-water `(producer_id, max batch_seq)`
+    /// observed in record seq tags up to `processed`. The broker
+    /// rebuilds dedup state from the tags themselves; this documents
+    /// the coverage the snapshot asserts.
+    pub producers: Vec<(u32, u32)>,
+}
+
+impl Snapshot {
+    /// Serialize: `[magic][version][crc][body_len][body]`, all header
+    /// fields little-endian u32/u64, the body varint-encoded.
+    pub fn encode(&self) -> Vec<u8> {
+        let mut body = Vec::with_capacity(256 + self.states.len() * 32);
+        varint::write_str(&mut body, &self.topic);
+        varint::write_u32(&mut body, self.partition);
+        varint::write_u64(&mut body, self.processed);
+        varint::write_i64(&mut body, self.last_t_eval);
+        varint::write_u64(&mut body, self.positions.len() as u64);
+        for &(offset_ms, seq) in &self.positions {
+            varint::write_i64(&mut body, offset_ms);
+            varint::write_u64(&mut body, seq);
+        }
+        varint::write_u64(&mut body, self.interner.len() as u64);
+        for (key, display) in &self.interner {
+            varint::write_bytes(&mut body, key);
+            varint::write_str(&mut body, display);
+        }
+        varint::write_u64(&mut body, self.states.len() as u64);
+        for (key, value) in &self.states {
+            varint::write_bytes(&mut body, key);
+            varint::write_bytes(&mut body, value);
+        }
+        varint::write_u64(&mut body, self.producers.len() as u64);
+        for &(pid, max_seq) in &self.producers {
+            varint::write_u32(&mut body, pid);
+            varint::write_u32(&mut body, max_seq);
+        }
+        let mut out = Vec::with_capacity(HEADER_LEN + body.len());
+        out.extend_from_slice(&MAGIC.to_le_bytes());
+        out.extend_from_slice(&VERSION.to_le_bytes());
+        out.extend_from_slice(&crc32fast::hash(&body).to_le_bytes());
+        out.extend_from_slice(&(body.len() as u64).to_le_bytes());
+        out.extend_from_slice(&body);
+        out
+    }
+
+    /// Decode and verify a snapshot file image. Any torn, truncated,
+    /// bit-flipped or trailing-garbage buffer is rejected.
+    pub fn decode(buf: &[u8]) -> Result<Snapshot> {
+        if buf.len() < HEADER_LEN {
+            return Err(Error::corrupt("snapshot: shorter than header"));
+        }
+        let magic = u32::from_le_bytes(buf[0..4].try_into().unwrap());
+        if magic != MAGIC {
+            return Err(Error::corrupt("snapshot: bad magic"));
+        }
+        let version = u32::from_le_bytes(buf[4..8].try_into().unwrap());
+        if version != VERSION {
+            return Err(Error::corrupt(format!(
+                "snapshot: unsupported version {version}"
+            )));
+        }
+        let crc = u32::from_le_bytes(buf[8..12].try_into().unwrap());
+        let body_len = u64::from_le_bytes(buf[12..20].try_into().unwrap()) as usize;
+        let body = buf
+            .get(HEADER_LEN..)
+            .filter(|b| b.len() == body_len)
+            .ok_or_else(|| Error::corrupt("snapshot: body length mismatch"))?;
+        if crc32fast::hash(body) != crc {
+            return Err(Error::corrupt("snapshot: crc mismatch"));
+        }
+        let mut pos = 0usize;
+        let topic = varint::read_str(body, &mut pos)?.to_string();
+        let partition = varint::read_u32(body, &mut pos)?;
+        let processed = varint::read_u64(body, &mut pos)?;
+        let last_t_eval = varint::read_i64(body, &mut pos)?;
+        let n = varint::read_u64(body, &mut pos)? as usize;
+        let mut positions = Vec::with_capacity(n.min(1 << 16));
+        for _ in 0..n {
+            let offset_ms = varint::read_i64(body, &mut pos)?;
+            let seq = varint::read_u64(body, &mut pos)?;
+            positions.push((offset_ms, seq));
+        }
+        let n = varint::read_u64(body, &mut pos)? as usize;
+        let mut interner = Vec::with_capacity(n.min(1 << 16));
+        for _ in 0..n {
+            let key = varint::read_bytes(body, &mut pos)?.to_vec();
+            let display = varint::read_str(body, &mut pos)?.to_string();
+            interner.push((key, display));
+        }
+        let n = varint::read_u64(body, &mut pos)? as usize;
+        let mut states = Vec::with_capacity(n.min(1 << 16));
+        for _ in 0..n {
+            let key = varint::read_bytes(body, &mut pos)?.to_vec();
+            let value = varint::read_bytes(body, &mut pos)?.to_vec();
+            states.push((key, value));
+        }
+        let n = varint::read_u64(body, &mut pos)? as usize;
+        let mut producers = Vec::with_capacity(n.min(1 << 16));
+        for _ in 0..n {
+            let pid = varint::read_u32(body, &mut pos)?;
+            let max_seq = varint::read_u32(body, &mut pos)?;
+            producers.push((pid, max_seq));
+        }
+        if pos != body.len() {
+            return Err(Error::corrupt("snapshot: trailing bytes in body"));
+        }
+        Ok(Snapshot {
+            topic,
+            partition,
+            processed,
+            last_t_eval,
+            positions,
+            interner,
+            states,
+            producers,
+        })
+    }
+}
+
+/// Directory of durable snapshots for one task processor.
+pub struct CheckpointStore {
+    dir: PathBuf,
+}
+
+impl CheckpointStore {
+    /// Open (creating) the snapshot directory and sweep crash debris:
+    /// a `.tmp` left by a process that died mid-write is deleted — it
+    /// was never renamed into place, so it is never recovery-relevant.
+    pub fn open(dir: PathBuf) -> Result<CheckpointStore> {
+        std::fs::create_dir_all(&dir)?;
+        for entry in std::fs::read_dir(&dir)? {
+            let path = entry?.path();
+            if path.extension().map(|e| e == "tmp").unwrap_or(false) {
+                log::warn!("checkpoint: removing stray temp file {path:?}");
+                let _ = std::fs::remove_file(&path);
+            }
+        }
+        Ok(CheckpointStore { dir })
+    }
+
+    /// The snapshot directory.
+    pub fn dir(&self) -> &Path {
+        &self.dir
+    }
+
+    fn file_name(processed: u64) -> String {
+        // zero-padded so lexical order == numeric order
+        format!("snap-{processed:020}.rgc")
+    }
+
+    /// Atomically persist a snapshot (temp + fsync + rename + dir
+    /// fsync), then prune to the newest [`RETAIN`] files. Returns the
+    /// encoded byte count.
+    pub fn write(&self, snap: &Snapshot) -> Result<u64> {
+        let bytes = snap.encode();
+        // torn-write model: the file is truncated but still renamed
+        // into place, as a non-atomic filesystem could leave it
+        let torn = failpoint::hit("checkpoint.write_torn");
+        let write_len = if torn { bytes.len() / 2 } else { bytes.len() };
+        let final_path = self.dir.join(Self::file_name(snap.processed));
+        let tmp_path = self.dir.join(format!("{}.tmp", Self::file_name(snap.processed)));
+        let result = (|| -> Result<()> {
+            let mut f = std::fs::File::create(&tmp_path)?;
+            f.write_all(&bytes[..write_len])?;
+            // an Abort arming dies here, leaving only the .tmp behind
+            failpoint::trigger("checkpoint.abort_mid_write")?;
+            failpoint::trigger("checkpoint.fsync")?;
+            f.sync_all()?;
+            Ok(())
+        })();
+        if let Err(e) = result {
+            let _ = std::fs::remove_file(&tmp_path);
+            return Err(e);
+        }
+        std::fs::rename(&tmp_path, &final_path)?;
+        std::fs::File::open(&self.dir)?.sync_all()?;
+        self.prune()?;
+        Ok(bytes.len() as u64)
+    }
+
+    /// Snapshot files, newest (highest `processed`) first.
+    pub fn list(&self) -> Result<Vec<PathBuf>> {
+        let mut files: Vec<PathBuf> = std::fs::read_dir(&self.dir)?
+            .filter_map(|e| e.ok())
+            .map(|e| e.path())
+            .filter(|p| p.extension().map(|e| e == "rgc").unwrap_or(false))
+            .collect();
+        files.sort();
+        files.reverse();
+        Ok(files)
+    }
+
+    /// Load and verify one snapshot file.
+    pub fn load(&self, path: &Path) -> Result<Snapshot> {
+        Snapshot::decode(&std::fs::read(path)?)
+    }
+
+    fn prune(&self) -> Result<()> {
+        for stale in self.list()?.into_iter().skip(RETAIN) {
+            let _ = std::fs::remove_file(&stale);
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::propcheck::check;
+    use crate::util::rng::Rng;
+    use crate::util::tmp::TempDir;
+
+    /// Deterministic snapshot from a seed, covering empty and populated
+    /// sections, multi-byte UTF-8 displays and full-range clocks.
+    fn snapshot_from_seed(seed: u64) -> Snapshot {
+        let mut rng = Rng::new(seed);
+        let n_pos = rng.index(4);
+        let n_groups = rng.index(20);
+        let n_states = rng.index(20);
+        let n_prod = rng.index(5);
+        Snapshot {
+            topic: format!("payments.card{}", rng.index(3)),
+            partition: rng.next_below(8) as u32,
+            processed: rng.next_below(u64::MAX / 2),
+            last_t_eval: rng.range_i64(i64::MIN / 2, i64::MAX / 2),
+            positions: (0..n_pos)
+                .map(|_| {
+                    (
+                        rng.range_i64(-1_000_000, 1_000_000),
+                        rng.next_below(1 << 40),
+                    )
+                })
+                .collect(),
+            interner: (0..n_groups)
+                .map(|i| {
+                    let klen = rng.index(12);
+                    let key: Vec<u8> = (0..klen).map(|_| rng.next_below(256) as u8).collect();
+                    let display = if rng.chance(0.2) {
+                        format!("cπrd{i}")
+                    } else {
+                        format!("card{i}")
+                    };
+                    (key, display)
+                })
+                .collect(),
+            states: (0..n_states)
+                .map(|_| {
+                    let k: Vec<u8> = (0..rng.index(16)).map(|_| rng.next_below(256) as u8).collect();
+                    let v: Vec<u8> = (0..rng.index(24)).map(|_| rng.next_below(256) as u8).collect();
+                    (k, v)
+                })
+                .collect(),
+            producers: (0..n_prod)
+                .map(|_| (rng.next_below(1 << 20) as u32, rng.next_below(1 << 30) as u32))
+                .collect(),
+        }
+    }
+
+    #[test]
+    fn snapshot_roundtrip_property() {
+        check(
+            "snapshot encode/decode roundtrip",
+            300,
+            |rng| rng.next_below(u64::MAX / 2),
+            |&seed| {
+                let snap = snapshot_from_seed(seed);
+                let bytes = snap.encode();
+                let back = Snapshot::decode(&bytes).map_err(|e| e.to_string())?;
+                if back != snap {
+                    return Err("decoded snapshot != original".into());
+                }
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn every_truncation_is_rejected() {
+        check(
+            "snapshot truncation rejection",
+            60,
+            |rng| rng.next_below(u64::MAX / 2),
+            |&seed| {
+                let bytes = snapshot_from_seed(seed).encode();
+                for cut in 0..bytes.len() {
+                    if Snapshot::decode(&bytes[..cut]).is_ok() {
+                        return Err(format!("cut {cut}/{} accepted", bytes.len()));
+                    }
+                }
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn every_bit_flip_is_rejected() {
+        // a flip in the body breaks the CRC; a flip in the header breaks
+        // magic/version/crc/length — no single-byte corruption may load
+        check(
+            "snapshot bit-flip rejection",
+            150,
+            |rng| {
+                (
+                    rng.next_below(u64::MAX / 2),
+                    rng.next_below(u64::MAX / 2),
+                    (1 + rng.next_below(255)) as u8,
+                )
+            },
+            |&(seed, pos_sel, xor)| {
+                let mut bytes = snapshot_from_seed(seed).encode();
+                let pos = (pos_sel % bytes.len() as u64) as usize;
+                bytes[pos] ^= xor;
+                match Snapshot::decode(&bytes) {
+                    Err(_) => Ok(()),
+                    Ok(_) => Err(format!("flip at {pos} accepted")),
+                }
+            },
+        );
+    }
+
+    fn small(processed: u64) -> Snapshot {
+        Snapshot {
+            topic: "payments.card".into(),
+            partition: 0,
+            processed,
+            last_t_eval: 42,
+            positions: vec![(0, processed)],
+            interner: vec![(b"k".to_vec(), "k".into())],
+            states: vec![(b"sk".to_vec(), b"sv".to_vec())],
+            producers: vec![(1, 7)],
+        }
+    }
+
+    #[test]
+    fn store_writes_atomically_and_retains_newest() {
+        let tmp = TempDir::new("ckpt_store");
+        let store = CheckpointStore::open(tmp.join("checkpoints")).unwrap();
+        for processed in [10u64, 20, 30, 40, 50] {
+            let bytes = store.write(&small(processed)).unwrap();
+            assert!(bytes > HEADER_LEN as u64);
+        }
+        let files = store.list().unwrap();
+        assert_eq!(files.len(), RETAIN, "older snapshots pruned");
+        let newest = store.load(&files[0]).unwrap();
+        assert_eq!(newest.processed, 50);
+        let oldest_kept = store.load(&files[RETAIN - 1]).unwrap();
+        assert_eq!(oldest_kept.processed, 30);
+        // no temp debris after clean writes
+        assert!(std::fs::read_dir(store.dir())
+            .unwrap()
+            .all(|e| e.unwrap().path().extension().unwrap() == "rgc"));
+    }
+
+    #[test]
+    fn open_sweeps_stale_temp_files() {
+        let tmp = TempDir::new("ckpt_tmp_sweep");
+        let dir = tmp.join("checkpoints");
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(dir.join("snap-00000000000000000010.rgc.tmp"), b"junk").unwrap();
+        let store = CheckpointStore::open(dir).unwrap();
+        assert!(store.list().unwrap().is_empty());
+        assert!(std::fs::read_dir(store.dir()).unwrap().next().is_none());
+    }
+
+    #[test]
+    fn corrupt_file_fails_load_but_older_remains() {
+        let tmp = TempDir::new("ckpt_corrupt");
+        let store = CheckpointStore::open(tmp.join("checkpoints")).unwrap();
+        store.write(&small(10)).unwrap();
+        store.write(&small(20)).unwrap();
+        let files = store.list().unwrap();
+        // corrupt the newest in place
+        let mut bytes = std::fs::read(&files[0]).unwrap();
+        let mid = bytes.len() / 2;
+        bytes[mid] ^= 0xff;
+        std::fs::write(&files[0], &bytes).unwrap();
+        assert!(store.load(&files[0]).is_err());
+        assert_eq!(store.load(&files[1]).unwrap().processed, 10);
+    }
+
+    #[cfg(feature = "failpoints")]
+    mod failpoint_sites {
+        use super::*;
+        use crate::failpoint::{self, Action};
+
+        #[test]
+        fn failpoint_torn_write_is_detected_at_load() {
+            failpoint::reset();
+            let tmp = TempDir::new("ckpt_torn");
+            let store = CheckpointStore::open(tmp.join("checkpoints")).unwrap();
+            store.write(&small(10)).unwrap();
+            failpoint::arm("checkpoint.write_torn", Action::Fail { at: 1 });
+            store.write(&small(20)).unwrap();
+            failpoint::reset();
+            let files = store.list().unwrap();
+            assert_eq!(files.len(), 2, "the torn file was renamed into place");
+            assert!(store.load(&files[0]).is_err(), "torn newest rejected");
+            assert_eq!(store.load(&files[1]).unwrap().processed, 10);
+        }
+
+        #[test]
+        fn failpoint_mid_write_failure_leaves_no_file() {
+            failpoint::reset();
+            let tmp = TempDir::new("ckpt_abort");
+            let store = CheckpointStore::open(tmp.join("checkpoints")).unwrap();
+            failpoint::arm("checkpoint.abort_mid_write", Action::Fail { at: 1 });
+            assert!(store.write(&small(10)).is_err());
+            failpoint::reset();
+            assert!(store.list().unwrap().is_empty());
+            assert!(
+                std::fs::read_dir(store.dir()).unwrap().next().is_none(),
+                "failed write cleans up its temp file"
+            );
+            // the site is one-shot: the next write goes through
+            store.write(&small(20)).unwrap();
+            assert_eq!(store.list().unwrap().len(), 1);
+        }
+
+        #[test]
+        fn failpoint_fsync_failure_is_clean() {
+            failpoint::reset();
+            let tmp = TempDir::new("ckpt_fsync");
+            let store = CheckpointStore::open(tmp.join("checkpoints")).unwrap();
+            failpoint::arm("checkpoint.fsync", Action::Fail { at: 1 });
+            assert!(store.write(&small(10)).is_err());
+            failpoint::reset();
+            assert!(store.list().unwrap().is_empty());
+            store.write(&small(10)).unwrap();
+            assert_eq!(store.load(&store.list().unwrap()[0]).unwrap().processed, 10);
+        }
+    }
+}

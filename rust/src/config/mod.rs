@@ -80,6 +80,20 @@ pub struct EngineConfig {
     /// Retry backoff ceiling in milliseconds
     /// ([`crate::net::RetryPolicy::max_backoff_ms`]).
     pub net_retry_max_ms: u64,
+    /// Seconds between periodic task-processor snapshots
+    /// ([`crate::checkpoint`]). `0` (the default) disables snapshots
+    /// entirely: none are written, none are consulted at recovery, and
+    /// restart performs the exact full replay it always did.
+    pub checkpoint_interval: u64,
+    /// How long the net server parks an undeliverable reply for its
+    /// producer to reconnect (milliseconds). Replies stashed longer than
+    /// this are dropped on the next stash sweep.
+    pub reply_stash_ttl_ms: u64,
+    /// Max producers tracked in the front-end dedup table. Past the cap
+    /// the longest-idle producer is evicted (`frontend.dedup_evicted`);
+    /// a returning evicted producer is re-seeded from the mlog's
+    /// persisted seq tags, so dedup stays exact. `0` ⇒ unbounded.
+    pub dedup_producer_cap: usize,
 }
 
 impl EngineConfig {
@@ -108,6 +122,9 @@ impl EngineConfig {
             net_retry_attempts: 0,
             net_retry_base_ms: 50,
             net_retry_max_ms: 2_000,
+            checkpoint_interval: 0,
+            reply_stash_ttl_ms: 2_000,
+            dedup_producer_cap: 65_536,
         }
     }
 
@@ -174,6 +191,8 @@ impl EngineConfig {
         cfg.net_retry_base_ms =
             get_usize("net_retry_base_ms", cfg.net_retry_base_ms as usize)? as u64;
         cfg.net_retry_max_ms = get_usize("net_retry_max_ms", cfg.net_retry_max_ms as usize)? as u64;
+        cfg.reply_stash_ttl_ms =
+            get_usize("reply_stash_ttl_ms", cfg.reply_stash_ttl_ms as usize)? as u64;
         // 0 is meaningful here (= one worker per core), so this knob
         // can't ride the positive-only helper
         if let Some(j) = obj.get("net_event_workers") {
@@ -193,6 +212,26 @@ impl EngineConfig {
                 .map(|v| v as u32)
                 .ok_or_else(|| {
                     Error::invalid("config: 'net_retry_attempts' must be a non-negative integer")
+                })?;
+        }
+        // 0 is meaningful (= snapshots off, exact full replay)
+        if let Some(j) = obj.get("checkpoint_interval") {
+            cfg.checkpoint_interval = j
+                .as_i64()
+                .filter(|v| *v >= 0)
+                .map(|v| v as u64)
+                .ok_or_else(|| {
+                    Error::invalid("config: 'checkpoint_interval' must be a non-negative integer")
+                })?;
+        }
+        // 0 is meaningful (= dedup table unbounded)
+        if let Some(j) = obj.get("dedup_producer_cap") {
+            cfg.dedup_producer_cap = j
+                .as_i64()
+                .filter(|v| *v >= 0)
+                .map(|v| v as usize)
+                .ok_or_else(|| {
+                    Error::invalid("config: 'dedup_producer_cap' must be a non-negative integer")
                 })?;
         }
         if let Some(j) = obj.get("listen_addr") {
@@ -603,6 +642,43 @@ mod tests {
         .is_err());
         assert!(EngineConfig::from_json(
             &Json::parse(r#"{"data_dir": "/tmp/x", "net_hello_timeout_ms": 0}"#).unwrap()
+        )
+        .is_err());
+    }
+
+    #[test]
+    fn recovery_config_from_json() {
+        let cfg =
+            EngineConfig::from_json(&Json::parse(r#"{"data_dir": "/tmp/x"}"#).unwrap()).unwrap();
+        assert_eq!(cfg.checkpoint_interval, 0, "snapshots off by default");
+        assert_eq!(cfg.reply_stash_ttl_ms, 2_000);
+        assert_eq!(cfg.dedup_producer_cap, 65_536);
+        let cfg = EngineConfig::from_json(
+            &Json::parse(
+                r#"{"data_dir": "/tmp/x", "checkpoint_interval": 30,
+                    "reply_stash_ttl_ms": 500, "dedup_producer_cap": 0}"#,
+            )
+            .unwrap(),
+        )
+        .unwrap();
+        assert_eq!(cfg.checkpoint_interval, 30);
+        assert_eq!(cfg.reply_stash_ttl_ms, 500);
+        assert_eq!(cfg.dedup_producer_cap, 0, "explicit 0 (unbounded) accepted");
+        let cfg = EngineConfig::from_json(
+            &Json::parse(r#"{"data_dir": "/tmp/x", "checkpoint_interval": 0}"#).unwrap(),
+        )
+        .unwrap();
+        assert_eq!(cfg.checkpoint_interval, 0, "explicit 0 (off) accepted");
+        assert!(EngineConfig::from_json(
+            &Json::parse(r#"{"data_dir": "/tmp/x", "checkpoint_interval": -1}"#).unwrap()
+        )
+        .is_err());
+        assert!(EngineConfig::from_json(
+            &Json::parse(r#"{"data_dir": "/tmp/x", "dedup_producer_cap": -5}"#).unwrap()
+        )
+        .is_err());
+        assert!(EngineConfig::from_json(
+            &Json::parse(r#"{"data_dir": "/tmp/x", "reply_stash_ttl_ms": 0}"#).unwrap()
         )
         .is_err());
     }

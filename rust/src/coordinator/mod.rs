@@ -73,6 +73,7 @@ impl Node {
             FrontEnd::new(broker.clone(), registry.clone(), cfg.partitions_per_topic)
                 .with_ingest_batch(cfg.ingest_batch)
                 .with_reply_partitions(cfg.reply_partitions)
+                .with_dedup_producer_cap(cfg.dedup_producer_cap)
                 .with_telemetry(telemetry.clone()),
         );
         let backend = Backend::start(

@@ -377,6 +377,14 @@ struct ProducerState {
     epoch: u32,
     /// Highest batch seq ever attempted — the fresh/duplicate boundary.
     max_seen: u32,
+    /// Whether `max_seen` reflects this producer's durable history. An
+    /// entry recreated after a cap eviction (or a cold resume) starts
+    /// unseeded and is re-seeded from the record tags
+    /// ([`crate::mlog::Broker::producer_high_water`]) before its first
+    /// batch classifies — so eviction never weakens exactly-once.
+    seeded: bool,
+    /// Last batch/registration touch; the eviction clock.
+    last_used: Instant,
     /// Batches whose publish failed after ids were assigned, as
     /// `(seq, first_id, count)`: a retry completes the missing suffix
     /// under the same ids.
@@ -391,8 +399,18 @@ impl ProducerState {
         ProducerState {
             epoch,
             max_seen,
+            seeded: true,
+            last_used: Instant::now(),
             gaps: Vec::new(),
             done_recent: VecDeque::with_capacity(DONE_RECENT),
+        }
+    }
+
+    /// A recreated entry whose durable history is not yet known.
+    fn unseeded(epoch: u32) -> ProducerState {
+        ProducerState {
+            seeded: false,
+            ..ProducerState::new(epoch, 0)
         }
     }
 
@@ -467,6 +485,10 @@ pub struct FrontEnd {
     /// Next fresh producer id — seeded past every id recovered from the
     /// mlog so a restart never re-issues a live identity.
     next_producer_id: AtomicU32,
+    /// Max producers kept in the dedup table (config
+    /// `dedup_producer_cap`; 0 = unbounded). Past it, the longest-idle
+    /// entry is evicted and counted in `frontend.dedup_evicted`.
+    dedup_producer_cap: usize,
     /// Engine telemetry registry; routing records batch/event/interner
     /// counters into it (relaxed adds on per-batch accumulators — the
     /// per-event path stays allocation- and barrier-free).
@@ -504,8 +526,16 @@ impl FrontEnd {
             next_ingest_id: AtomicU64::new(seed),
             producers: Mutex::new(producers),
             next_producer_id: AtomicU32::new(max_pid + 1),
+            dedup_producer_cap: 65_536,
             telemetry: Arc::new(Telemetry::new()),
         }
+    }
+
+    /// Bound the dedup table (the engine config's `dedup_producer_cap`
+    /// knob; 0 = unbounded).
+    pub fn with_dedup_producer_cap(mut self, cap: usize) -> FrontEnd {
+        self.dedup_producer_cap = cap;
+        self
     }
 
     /// Cap the number of records per producer append batch (the engine
@@ -729,8 +759,9 @@ impl FrontEnd {
     /// HELLO_OK carries.
     pub fn register_producer(&self, producer_id: u32, epoch: u32) -> (u32, u32) {
         let mut table = self.producers.lock().unwrap();
-        if producer_id == 0 {
+        let out = if producer_id == 0 {
             let pid = self.next_producer_id.fetch_add(1, Ordering::Relaxed);
+            // a freshly minted id has no durable history: born seeded
             table.insert(pid, Arc::new(Mutex::new(ProducerState::new(1, 0))));
             (pid, 1)
         } else {
@@ -739,8 +770,49 @@ impl FrontEnd {
                 .fetch_max(producer_id.saturating_add(1), Ordering::Relaxed);
             let state = table
                 .entry(producer_id)
-                .or_insert_with(|| Arc::new(Mutex::new(ProducerState::new(epoch.max(1), 0))));
-            (producer_id, state.lock().unwrap().epoch)
+                .or_insert_with(|| Arc::new(Mutex::new(ProducerState::unseeded(epoch.max(1)))));
+            let mut ps = state.lock().unwrap();
+            ps.last_used = Instant::now();
+            (producer_id, ps.epoch)
+        };
+        self.evict_idle_producers(&mut table, out.0);
+        out
+    }
+
+    /// Evict longest-idle producers while the dedup table exceeds
+    /// `dedup_producer_cap` (0 = unbounded). `keep` — the entry just
+    /// touched — and any entry whose lock is held (a batch in flight)
+    /// are never evicted. Dedup stays exact across eviction: the
+    /// durable record tags remain the source of truth, and a returning
+    /// evicted producer re-seeds from them before classifying.
+    fn evict_idle_producers(
+        &self,
+        table: &mut FxHashMap<u32, Arc<Mutex<ProducerState>>>,
+        keep: u32,
+    ) {
+        let cap = self.dedup_producer_cap;
+        if cap == 0 {
+            return;
+        }
+        while table.len() > cap {
+            let mut oldest: Option<(u32, Instant)> = None;
+            for (&pid, state) in table.iter() {
+                if pid == keep {
+                    continue;
+                }
+                if let Ok(ps) = state.try_lock() {
+                    if oldest.map(|(_, t)| ps.last_used < t).unwrap_or(true) {
+                        oldest = Some((pid, ps.last_used));
+                    }
+                }
+            }
+            match oldest {
+                Some((pid, _)) => {
+                    table.remove(&pid);
+                    self.telemetry.frontend.dedup_evicted.incr();
+                }
+                None => break, // everything busy; retry on a later insert
+            }
         }
     }
 
@@ -818,14 +890,24 @@ impl FrontEnd {
 
         let state = {
             let mut table = self.producers.lock().unwrap();
-            table
+            let state = table
                 .entry(producer_id)
-                .or_insert_with(|| Arc::new(Mutex::new(ProducerState::new(1, 0))))
-                .clone()
+                .or_insert_with(|| Arc::new(Mutex::new(ProducerState::unseeded(1))))
+                .clone();
+            self.evict_idle_producers(&mut table, producer_id);
+            state
         };
         // held across classify + publish: one producer's batches are
         // serialized, so a retry can never race its original attempt
         let mut ps = state.lock().unwrap();
+        ps.last_used = Instant::now();
+        if !ps.seeded {
+            // recreated after a cap eviction (or a cold resume): recover
+            // the durable high-water from the record tags before
+            // classifying, so a replayed duplicate can never publish
+            ps.max_seen = ps.max_seen.max(self.broker.producer_high_water(producer_id)?);
+            ps.seeded = true;
+        }
 
         if events.is_empty() {
             // nothing to publish or dedup; ack an empty id range and
@@ -1883,6 +1965,48 @@ mod tests {
         // a fresh registration never collides with the recovered identity
         let (fresh, _) = fe.register_producer(0, 0);
         assert!(fresh > pid);
+    }
+
+    #[test]
+    fn dedup_cap_evicts_idle_and_reseeds_from_tags() {
+        let broker = Broker::open(BrokerConfig::in_memory()).unwrap();
+        let fe = FrontEnd::new(broker.clone(), registry(), 2).with_dedup_producer_cap(2);
+        fe.register_stream(def()).unwrap();
+        let events: Vec<Event> = (0..4).map(|i| ev(i, "c1", "m1", i as f64)).collect();
+        let schema = payments_schema();
+        let mut batch = RawBatchBuf::new();
+        for e in &events {
+            batch.push(e, &schema);
+        }
+        let (p1, _) = fe.register_producer(0, 0);
+        let out1 = fe
+            .ingest_batch_raw_tagged("payments", p1, 1, &batch.raws(), None, &mut |_, _, _| {})
+            .unwrap();
+        // later registrations push the table past the cap; the idle p1
+        // is the eviction victim
+        std::thread::sleep(Duration::from_millis(2));
+        let (p2, _) = fe.register_producer(0, 0);
+        std::thread::sleep(Duration::from_millis(2));
+        let (p3, _) = fe.register_producer(0, 0);
+        assert_ne!((p2, p3), (p1, p1));
+        assert_eq!(fe.telemetry().frontend.dedup_evicted.get(), 1);
+        // p1 returns and resends its batch: the recreated entry re-seeds
+        // from the durable record tags, so the resend still classifies
+        // as a duplicate and acks the original id range
+        let out2 = fe
+            .ingest_batch_raw_tagged("payments", p1, 1, &batch.raws(), None, &mut |_, _, _| {})
+            .unwrap();
+        assert!(out2.duplicate, "eviction must not weaken exactly-once");
+        assert_eq!(out2.first_ingest_id, out1.first_ingest_id);
+        // nothing was re-appended across the eviction + resend
+        let records = drain_tagged(&broker);
+        assert_eq!(records.len(), events.len() * 2, "fanout 2, no rewrites");
+        // cap 0 = unbounded: no eviction however many producers register
+        let fe2 = FrontEnd::new(broker.clone(), registry(), 2).with_dedup_producer_cap(0);
+        for _ in 0..10 {
+            fe2.register_producer(0, 0);
+        }
+        assert_eq!(fe2.telemetry().frontend.dedup_evicted.get(), 0);
     }
 
     #[cfg(feature = "failpoints")]

@@ -78,6 +78,41 @@
 //! server-side stage breakdown next to the external latency
 //! percentiles so inside and outside views line up in one run.
 //!
+//! ## Recovery contract
+//!
+//! A restarted task processor must converge on the same state, and
+//! re-publish the same replies, as a process that never died. Two paths
+//! get it there:
+//!
+//! * **Full replay (the default, `checkpoint_interval = 0`)**: the
+//!   reservoir recovers its sealed chunks, then the processor replays
+//!   the mlog tail from the last durable record — bounded by the widest
+//!   window (only events a window can still contain are re-evaluated).
+//! * **Snapshot + tail replay (`EngineConfig::checkpoint_interval` /
+//!   `serve --checkpoint-secs`)**: each backend unit periodically
+//!   writes a [`checkpoint::Snapshot`] — group interner, aggregate
+//!   states, window positions, evaluation clock, processed-record
+//!   count, producer dedup high-water — via [`checkpoint::CheckpointStore`]
+//!   (temp + fsync + rename, CRC'd, versioned, newest
+//!   [`checkpoint::RETAIN`] kept). Recovery loads the newest snapshot
+//!   that is *valid*: magic/version/CRC pass, topic and partition
+//!   match, its `processed` does not exceed the recovered reservoir
+//!   length, and its positions cover every current window offset. State
+//!   is restored, the tail `[processed, reservoir end)` is replayed
+//!   silently, and the mlog consumer seeks to the reservoir end exactly
+//!   as full replay would. An invalid snapshot (torn write, bit flip,
+//!   crash mid-checkpoint, config drift) falls back to the next-older
+//!   snapshot, then to full replay — never wrong state.
+//!
+//! **Not checkpointed**: mlog contents, reservoir chunks (both have
+//! their own durability), reply routing, and the broker-side producer
+//! dedup table (rebuilt from record seq tags; the snapshot's high-water
+//! list documents coverage). Snapshots never touch the ingest path —
+//! chunk files and reply bytes are byte-identical with checkpointing on
+//! or off (`rust/tests/checkpoint_recovery.rs` proves it across clean
+//! restarts, an abort mid-checkpoint-write, and a corrupted-latest
+//! snapshot).
+//!
 //! ## Quickstart
 //!
 //! See `examples/quickstart.rs`. In short: build a [`config::EngineConfig`],
@@ -98,6 +133,7 @@
 pub mod agg;
 pub mod backend;
 pub mod baseline;
+pub mod checkpoint;
 pub mod config;
 pub mod coordinator;
 pub mod error;

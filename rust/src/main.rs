@@ -63,6 +63,8 @@ fn main() {
                  \n  serve --config <engine.json> --stream <stream.json> [--listen <addr>]\n\
                  \n      [--net-workers N]   event-loop workers (0 = one per core)\n\
                  \n      [--stats-interval SECS]   periodic telemetry dump to stderr\n\
+                 \n      [--checkpoint-secs N]   periodic plan snapshots (0 = off;\n\
+                 \n                     a 'checkpoint' line on stdin forces one)\n\
                  \n  stats <host:port>   scrape and print a serving node's telemetry\n\
                  \n  bench-client --addr <host:port> --stream <name> [--events N]\n\
                  \n      [--batch N] [--pipeline N] [--cardinality N] [--timeout-secs N]\n\
@@ -128,6 +130,7 @@ fn cmd_serve(args: &[String]) -> Result<()> {
     }
     cfg.net_event_workers =
         flag_u64(args, "--net-workers", cfg.net_event_workers as u64)? as usize;
+    cfg.checkpoint_interval = flag_u64(args, "--checkpoint-secs", cfg.checkpoint_interval)?;
     let stream_text = std::fs::read_to_string(stream_path)?;
     let def = StreamDef::from_json(&Json::parse(&stream_text)?)?;
     let stream_name = def.name.clone();
@@ -184,7 +187,21 @@ fn cmd_serve(args: &[String]) -> Result<()> {
         log::info!("serving stream '{stream_name}' on {addr}; EOF on stdin stops the node");
         let stdin = std::io::stdin();
         for line in stdin.lock().lines() {
-            let _ = line?; // control channel: content is ignored
+            // control channel: "checkpoint" forces a synchronous snapshot
+            // of every task processor (the crash harness uses this for a
+            // deterministic snapshot point); other content is ignored
+            if line?.trim() == "checkpoint" {
+                match node.checkpoint() {
+                    Ok(()) => {
+                        println!("CHECKPOINT ok");
+                        std::io::stdout().flush()?;
+                    }
+                    Err(e) => {
+                        println!("CHECKPOINT err {e}");
+                        std::io::stdout().flush()?;
+                    }
+                }
+            }
         }
         finish(node);
         return Ok(());

@@ -328,6 +328,22 @@ impl Broker {
         max.into_iter().collect()
     }
 
+    /// Highest batch seq durable anywhere for producer `pid` — the max
+    /// across every partition of every topic, since one producer batch
+    /// fans out across partitions. The front-end re-seeds a dedup-table
+    /// entry evicted under `dedup_producer_cap` from this, so eviction
+    /// never weakens exactly-once.
+    pub fn producer_high_water(&self, pid: u32) -> Result<u32> {
+        let topics = self.topics.read().unwrap();
+        let mut high = 0u32;
+        for t in topics.values() {
+            for p in &t.partitions {
+                high = high.max(p.producer_high_water(pid)?);
+            }
+        }
+        Ok(high)
+    }
+
     /// Fsync all partitions (checkpoint barrier).
     pub fn sync_all(&self) -> Result<()> {
         let topics = self.topics.read().unwrap();

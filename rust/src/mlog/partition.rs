@@ -231,6 +231,37 @@ impl Partition {
         Ok((count, first))
     }
 
+    /// Highest batch seq durable here for producer `pid` (0 when none).
+    /// Same scan shape as [`Partition::tagged`]: the in-memory tail
+    /// under the lock, then the on-disk segments below it. This is the
+    /// re-seed primitive for a dedup-table entry the front-end evicted
+    /// under its producer cap — cold-path only.
+    pub fn producer_high_water(&self, pid: u32) -> Result<u32> {
+        let inner = self.inner.lock().unwrap();
+        let mut high = 0u32;
+        for r in &inner.tail {
+            if r.seq != 0 && (r.seq >> 32) as u32 == pid {
+                high = high.max(r.seq as u32);
+            }
+        }
+        let tail_base = inner.tail_base;
+        let dir = if tail_base > 0 { self.dir.clone() } else { None };
+        drop(inner); // don't hold the lock during disk I/O
+        if let Some(dir) = dir {
+            'segments: for (_, path) in segment::list_segments(&dir)? {
+                for r in segment::read_segment(&path)? {
+                    if r.offset >= tail_base {
+                        break 'segments; // the tail covers the rest
+                    }
+                    if r.seq != 0 && (r.seq >> 32) as u32 == pid {
+                        high = high.max(r.seq as u32);
+                    }
+                }
+            }
+        }
+        Ok(high)
+    }
+
     /// Append a record; returns its assigned offset.
     pub fn append(
         &self,
@@ -675,6 +706,27 @@ mod tests {
                 payload: vec![pid as u8, bseq as u8, i as u8].into(),
             })
             .collect()
+    }
+
+    #[test]
+    fn producer_high_water_scans_tail_and_segments() {
+        let tmp = TempDir::new("part_highwater");
+        // tiny retention: early records fall out of the in-memory tail,
+        // forcing the cold segment scan
+        let p = Partition::create(
+            0,
+            Some(tmp.path().to_path_buf()),
+            1 << 12,
+            4,
+            FsyncPolicy::Always,
+        )
+        .unwrap();
+        p.append_batch(tagged_entries(3, 9, 5)).unwrap();
+        p.append_batch(tagged_entries(3, 10, 4)).unwrap();
+        p.append_batch(tagged_entries(8, 2, 2)).unwrap();
+        assert_eq!(p.producer_high_water(3).unwrap(), 10);
+        assert_eq!(p.producer_high_water(8).unwrap(), 2);
+        assert_eq!(p.producer_high_water(99).unwrap(), 0, "unknown producer");
     }
 
     #[test]

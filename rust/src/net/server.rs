@@ -111,10 +111,6 @@ use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
-/// Stash entries survive this long while waiting for their ingest-id
-/// range to be registered (a reply races the worker's registration by
-/// milliseconds at most; the slack is generous).
-const STASH_KEEP: Duration = Duration::from_secs(2);
 /// Hard cap on stashed reply messages **per shard table** (protects the
 /// server from reply traffic that belongs to other collectors entirely).
 const STASH_MAX_MSGS: usize = 100_000;
@@ -152,6 +148,11 @@ pub struct NetOptions {
     pub nodelay: bool,
     /// Event-loop worker threads (`0` = one per available core).
     pub event_workers: usize,
+    /// Stash entries survive this long while waiting for their ingest-id
+    /// range to be registered (a reply races the worker's registration by
+    /// milliseconds at most; the slack is generous). Configured via
+    /// `EngineConfig::reply_stash_ttl_ms`.
+    pub reply_stash_ttl: Duration,
 }
 
 impl Default for NetOptions {
@@ -160,6 +161,7 @@ impl Default for NetOptions {
             max_frame_bytes: wire::DEFAULT_MAX_FRAME,
             nodelay: true,
             event_workers: 0,
+            reply_stash_ttl: Duration::from_millis(2_000),
         }
     }
 }
@@ -171,6 +173,7 @@ impl NetOptions {
             max_frame_bytes: cfg.net_max_frame_bytes,
             nodelay: cfg.net_nodelay,
             event_workers: cfg.net_event_workers,
+            reply_stash_ttl: Duration::from_millis(cfg.reply_stash_ttl_ms),
         }
     }
 
@@ -237,14 +240,15 @@ impl RouteTable {
 
     /// Prune stash entries nobody claimed within the race window
     /// (replies that belong to other collectors on the shared reply
-    /// topic — never this server's clients).
-    fn prune_stash(&mut self, now: Instant) {
+    /// topic — never this server's clients). The window is
+    /// [`NetOptions::reply_stash_ttl`].
+    fn prune_stash(&mut self, now: Instant, ttl: Duration) {
         if self.stash_msgs == 0 {
             return;
         }
         let mut removed = 0usize;
         self.stash.retain(|_, v| {
-            if now.duration_since(v.0) < STASH_KEEP {
+            if now.duration_since(v.0) < ttl {
                 true
             } else {
                 removed += v.1.len();
@@ -1287,7 +1291,7 @@ fn reply_pump_shard(broker: BrokerRef, shared: Arc<Shared>, running: Arc<AtomicB
             shared.routes[shard as usize]
                 .lock()
                 .unwrap()
-                .prune_stash(Instant::now());
+                .prune_stash(Instant::now(), shared.opts.reply_stash_ttl);
             broker.wait_any_data(Duration::from_millis(50));
             continue;
         }
@@ -1315,7 +1319,7 @@ fn reply_pump_shard(broker: BrokerRef, shared: Arc<Shared>, running: Arc<AtomicB
                 }
                 table.route_msg(msg, now, &mut deliveries);
             }
-            table.prune_stash(now);
+            table.prune_stash(now, shared.opts.reply_stash_ttl);
         }
         // defensive: a reply record published to the wrong shard still
         // routes through its id's home table
@@ -1408,5 +1412,64 @@ fn reply_pump_shard(broker: BrokerRef, shared: Arc<Shared>, running: Arc<AtomicB
         for &w in &wake_workers {
             shared.workers[w].wake.wake();
         }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::frontend::ReplyMsg;
+
+    fn stash_one(table: &mut RouteTable, ingest_id: u64, at: Instant) {
+        let mut deliveries = FxHashMap::default();
+        let msg = ReplyMsg {
+            ingest_id,
+            topic: "t.e".into(),
+            partition: 0,
+            event_ts: 0,
+            metrics: Vec::new(),
+        };
+        // no route registered for the id ⇒ the message parks in the stash
+        table.route_msg(msg, at, &mut deliveries);
+        assert!(deliveries.is_empty());
+    }
+
+    #[test]
+    fn stash_expiry_follows_the_configured_ttl() {
+        let t0 = Instant::now();
+        let short = Duration::from_millis(10);
+        let long = Duration::from_secs(60);
+
+        let mut table = RouteTable::default();
+        stash_one(&mut table, 7, t0);
+        assert_eq!(table.stash_msgs, 1);
+
+        // within the window: kept under both TTLs
+        let t1 = t0 + Duration::from_millis(5);
+        table.prune_stash(t1, short);
+        assert_eq!(table.stash_msgs, 1, "entry younger than the TTL survives");
+
+        // past the short window: a long TTL still keeps it…
+        let t2 = t0 + Duration::from_millis(50);
+        table.prune_stash(t2, long);
+        assert_eq!(table.stash_msgs, 1, "long TTL keeps the same entry");
+        // …and the short TTL expires it
+        table.prune_stash(t2, short);
+        assert_eq!(table.stash_msgs, 0, "entry older than the TTL is dropped");
+        assert!(table.stash.is_empty());
+    }
+
+    #[test]
+    fn net_options_take_the_stash_ttl_from_the_engine_config() {
+        assert_eq!(
+            NetOptions::default().reply_stash_ttl,
+            Duration::from_millis(2_000)
+        );
+        let cfg = EngineConfig {
+            reply_stash_ttl_ms: 250,
+            ..EngineConfig::new(std::path::PathBuf::from("/tmp/unused"))
+        };
+        let opts = NetOptions::from_config(&cfg);
+        assert_eq!(opts.reply_stash_ttl, Duration::from_millis(250));
     }
 }

@@ -12,11 +12,15 @@
 //! rendered **once** when a group is first seen, so the steady-state
 //! per-event loop allocates nothing.
 //!
-//! Ids are assigned densely in first-seen order and are **not** persisted:
-//! recovery replays the reservoir through the same dispatch path, which
-//! re-interns every live group deterministically (and re-renders its
-//! display from the replayed events), so interner state survives restarts
-//! without a checkpoint format of its own.
+//! Ids are assigned densely in first-seen order. By default they are not
+//! persisted: recovery replays the reservoir through the same dispatch
+//! path, which re-interns every live group deterministically (and
+//! re-renders its display from the replayed events). With checkpointing
+//! enabled ([`crate::checkpoint`]), [`GroupInterner::export`] captures
+//! the `(key, display)` entries in id order and
+//! [`GroupInterner::restore`] re-interns them in that order — restoring
+//! the exact id assignment, so slab indices and reply display strings
+//! come back bit-identical without a replay.
 
 use crate::util::hash::FxHashMap;
 
@@ -80,6 +84,37 @@ impl GroupInterner {
     pub fn is_empty(&self) -> bool {
         self.displays.is_empty()
     }
+
+    /// Every interned entry as `(canonical key bytes, display string)`
+    /// in dense id order — the checkpoint image of the interner.
+    pub fn export(&self) -> Vec<(Vec<u8>, String)> {
+        let mut out: Vec<(Vec<u8>, String)> = vec![Default::default(); self.displays.len()];
+        for (key, &id) in &self.ids {
+            out[id as usize] = (key.to_vec(), self.displays[id as usize].clone());
+        }
+        out
+    }
+
+    /// Rebuild from an [`export`](Self::export) image: entries are
+    /// interned in order, reproducing the original id assignment.
+    /// Errors if the interner is not empty (restore is a recovery-time
+    /// operation, before any event is dispatched).
+    pub fn restore(&mut self, entries: &[(Vec<u8>, String)]) -> crate::error::Result<()> {
+        if !self.is_empty() {
+            return Err(crate::error::Error::invalid(
+                "interner restore requires an empty interner",
+            ));
+        }
+        for (i, (key, display)) in entries.iter().enumerate() {
+            let id = self.intern(key, || display.clone());
+            if id.0 as usize != i {
+                return Err(crate::error::Error::corrupt(
+                    "interner restore: duplicate key in snapshot",
+                ));
+            }
+        }
+        Ok(())
+    }
 }
 
 impl Default for GroupInterner {
@@ -121,6 +156,31 @@ mod tests {
         let id = i.intern(b"x", || "x".to_string());
         assert_eq!(i.lookup(b"x"), Some(id));
         assert_eq!(i.len(), 1);
+    }
+
+    #[test]
+    fn export_restore_reproduces_ids_and_displays() {
+        let mut i = GroupInterner::new();
+        i.intern(b"c1\x1f", || "c1".to_string());
+        i.intern(b"c2\x1f", || "c2".to_string());
+        i.intern(b"", || String::new());
+        let image = i.export();
+        assert_eq!(image.len(), 3);
+        assert_eq!(image[1], (b"c2\x1f".to_vec(), "c2".to_string()));
+
+        let mut j = GroupInterner::new();
+        j.restore(&image).unwrap();
+        assert_eq!(j.len(), 3);
+        assert_eq!(j.lookup(b"c2\x1f"), Some(GroupId(1)));
+        assert_eq!(j.display(GroupId(0)), "c1");
+        assert_eq!(j.display(GroupId(2)), "");
+        // restore refuses a non-empty interner
+        assert!(j.restore(&image).is_err());
+        // a duplicate key in a (corrupt) image is rejected
+        let mut dup = image.clone();
+        dup.push(image[0].clone());
+        let mut k = GroupInterner::new();
+        assert!(k.restore(&dup).is_err());
     }
 
     #[test]

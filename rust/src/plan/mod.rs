@@ -700,8 +700,10 @@ impl Plan {
     }
 
     /// Restore iterator positions + evaluation time from a checkpoint.
-    /// The group interner needs no restoring: states are rebuilt by
-    /// replaying the reservoir, which re-interns every live group.
+    /// Under full replay the group interner needs no restoring — states
+    /// are rebuilt by replaying the reservoir, which re-interns every
+    /// live group; a snapshot recovery restores it explicitly via
+    /// [`Plan::restore_interner`] first.
     pub fn restore_positions(&mut self, positions: &[(i64, u64)], t_eval: TimestampMs) {
         for (offset, seq) in positions {
             if let Some(b) = self.bundles.iter_mut().find(|b| b.offset_ms == *offset) {
@@ -709,6 +711,25 @@ impl Plan {
             }
         }
         self.last_t_eval = t_eval;
+    }
+
+    /// Window offsets of every bundle, sorted (snapshot validity: a
+    /// snapshot must carry a position for each of these).
+    pub fn bundle_offsets(&self) -> Vec<i64> {
+        let mut v: Vec<i64> = self.bundles.iter().map(|b| b.offset_ms).collect();
+        v.sort_unstable();
+        v
+    }
+
+    /// The interner's checkpoint image (entries in dense id order).
+    pub fn export_interner(&self) -> Vec<(Vec<u8>, String)> {
+        self.interner.export()
+    }
+
+    /// Restore the interner from a snapshot image, reproducing the
+    /// original `GroupId` assignment. Must run before any dispatch.
+    pub fn restore_interner(&mut self, entries: &[(Vec<u8>, String)]) -> Result<()> {
+        self.interner.restore(entries)
     }
 
     /// Access the state store (checkpoint flush, stats).

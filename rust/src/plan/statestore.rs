@@ -415,6 +415,42 @@ impl StateStore {
         self.store.flush()
     }
 
+    /// Every persisted state as raw `(composed key, encoded AggState)`
+    /// pairs — the checkpoint image. Dirty in-memory slots are persisted
+    /// first so the scan sees the current value of every state; the
+    /// bytes are exactly what an eviction spill would write, so a
+    /// restore is a plain `Store::put` per pair and the slab reloads
+    /// lazily through the normal cold path.
+    pub fn export_states(&mut self) -> Result<Vec<(Vec<u8>, Vec<u8>)>> {
+        let dirty_ids: Vec<u32> = self
+            .slots
+            .iter()
+            .enumerate()
+            .filter(|(_, s)| s.live && s.dirty)
+            .map(|(i, _)| i as u32)
+            .collect();
+        for id in dirty_ids {
+            self.persist_slot(id)?;
+        }
+        self.store.scan_prefix(&[])
+    }
+
+    /// Restore an [`export_states`](Self::export_states) image into the
+    /// underlying kvstore. Recovery-time only: the slab must be empty
+    /// (no event has been dispatched); restored states are loaded
+    /// lazily through the normal cold path on first touch.
+    pub fn restore_states(&mut self, pairs: &[(Vec<u8>, Vec<u8>)]) -> Result<()> {
+        if self.live != 0 {
+            return Err(crate::error::Error::invalid(
+                "state restore requires an empty state cache",
+            ));
+        }
+        for (key, value) in pairs {
+            self.store.put(key, value)?;
+        }
+        self.store.flush()
+    }
+
     /// Number of states currently cached in memory.
     pub fn cached_states(&self) -> usize {
         self.live

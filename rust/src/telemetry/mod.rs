@@ -290,6 +290,10 @@ pub struct FrontendStats {
     /// Records published by the retry slow path to complete a partially
     /// published batch (the missing suffix of one or more partitions).
     pub dup_suffix_published: Counter,
+    /// Idle producer entries evicted from the dedup table past
+    /// [`crate::config::EngineConfig::dedup_producer_cap`]; a returning
+    /// evicted producer is re-seeded from the durable record tags.
+    pub dedup_evicted: Counter,
 }
 
 impl FrontendStats {
@@ -308,6 +312,49 @@ impl FrontendStats {
             "frontend.dup_suffix_published".into(),
             self.dup_suffix_published.get(),
         ));
+        out.push(("frontend.dedup_evicted".into(), self.dedup_evicted.get()));
+    }
+}
+
+/// Checkpoint-subsystem counters (recorded by
+/// [`crate::backend::TaskProcessor::write_snapshot`]).
+#[derive(Default)]
+pub struct CheckpointStats {
+    /// Snapshots successfully written (rename completed).
+    pub written: Counter,
+    /// Total encoded snapshot bytes written.
+    pub bytes: Counter,
+    /// Cumulative wall time spent writing snapshots (ms), durability
+    /// barrier included.
+    pub write_ms: Counter,
+}
+
+impl CheckpointStats {
+    fn fill(&self, out: &mut Vec<(String, u64)>) {
+        out.push(("checkpoint.written".into(), self.written.get()));
+        out.push(("checkpoint.bytes".into(), self.bytes.get()));
+        out.push(("checkpoint.write_ms".into(), self.write_ms.get()));
+    }
+}
+
+/// Recovery counters, pushed once per task processor when the backend
+/// attaches the shared registry after open.
+#[derive(Default)]
+pub struct RecoveryStats {
+    /// Reservoir events replayed at recovery (tail-only when a snapshot
+    /// applied, window-bounded full replay otherwise).
+    pub replayed_records: Counter,
+    /// Cumulative recovery wall time (ms) across task processors.
+    pub ms: Counter,
+}
+
+impl RecoveryStats {
+    fn fill(&self, out: &mut Vec<(String, u64)>) {
+        out.push((
+            "recovery.replayed_records".into(),
+            self.replayed_records.get(),
+        ));
+        out.push(("recovery.ms".into(), self.ms.get()));
     }
 }
 
@@ -385,6 +432,8 @@ pub struct Telemetry {
     pub backend: BackendStats,
     pub reservoir: ReservoirStats,
     pub state: StateStats,
+    pub checkpoint: CheckpointStats,
+    pub recovery: RecoveryStats,
     /// Scrape-time pull hooks for stages that keep their own counters
     /// (mlog io totals, per-partition consumer lag). Locked only during
     /// registration and scrape — never on a hot path.
@@ -412,6 +461,8 @@ impl Telemetry {
         self.backend.fill(&mut counters);
         self.reservoir.fill(&mut counters);
         self.state.fill(&mut counters);
+        self.checkpoint.fill(&mut counters);
+        self.recovery.fill(&mut counters);
         // process-wide: fault-injection sites fired so far (always
         // rendered; 0 whenever the `failpoints` feature is off)
         counters.push((
@@ -679,10 +730,19 @@ mod tests {
         tel.frontend.events.add(456);
         tel.backend.batch_ns.record(1_500_000);
         tel.register_probe(|out| out.push(("mlog.appends".into(), 99)));
+        tel.checkpoint.written.incr();
+        tel.checkpoint.bytes.add(2048);
+        tel.recovery.replayed_records.add(17);
         let snap = tel.snapshot();
         assert_eq!(snap.counter("net.bytes_in"), Some(123));
         assert_eq!(snap.counter("frontend.events"), Some(456));
         assert_eq!(snap.counter("mlog.appends"), Some(99));
+        assert_eq!(snap.counter("checkpoint.written"), Some(1));
+        assert_eq!(snap.counter("checkpoint.bytes"), Some(2048));
+        assert_eq!(snap.counter("checkpoint.write_ms"), Some(0));
+        assert_eq!(snap.counter("recovery.replayed_records"), Some(17));
+        assert_eq!(snap.counter("recovery.ms"), Some(0));
+        assert_eq!(snap.counter("frontend.dedup_evicted"), Some(0));
         assert_eq!(snap.hist("backend.batch_ns").unwrap().count, 1);
 
         let mut buf = Vec::new();

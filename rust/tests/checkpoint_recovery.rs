@@ -1,0 +1,610 @@
+//! Checkpointed-recovery harness (`cargo test --test
+//! checkpoint_recovery`; the abort scenario additionally needs
+//! `--features failpoints` so the spawned `railgun serve` binary carries
+//! the `checkpoint.abort_mid_write` site): a node taking plan snapshots
+//! must produce reply bytes and sealed reservoir chunk files
+//! **byte-identical** to a full-replay control run across
+//!
+//! * a clean restart that recovers from the newest snapshot and replays
+//!   only the post-snapshot tail,
+//! * a process abort in the middle of a snapshot write (the torn temp
+//!   file is swept, never loaded), and
+//! * a restart over a corrupted newest snapshot (CRC rejects it; the
+//!   next-older snapshot takes over).
+//!
+//! Everything is driven at the wire level against real `railgun serve`
+//! child processes, exactly like the crash-retry harness — the explicit
+//! `checkpoint` stdin command gives each scenario a deterministic
+//! snapshot point.
+
+use railgun::event::{codec, Event, RawEvent, Value};
+use railgun::frontend::ReplyMsg;
+use railgun::net::wire::{self, Frame};
+use railgun::util::tmp::TempDir;
+use railgun::workload::payments_schema;
+use std::collections::BTreeMap;
+use std::io::{BufRead, BufReader, Write};
+use std::path::{Path, PathBuf};
+use std::time::{Duration, Instant};
+
+const LONG: Duration = Duration::from_secs(20);
+
+/// Reply fanout per event: the payments stream has two entities.
+const FANOUT: usize = 2;
+
+/// chunk_events=1: every appended record seals — and therefore survives
+/// a restart — immediately, so a snapshot taken at a quiesced point
+/// covers exactly the records processed so far on every task processor
+/// regardless of how the key hash distributed them. That is what makes
+/// the replay-count assertions below *exact* (an open-chunk remainder
+/// would be lost on restart and re-fed from the mlog instead of
+/// replayed). The snapshot cadence is effectively "manual only" (one
+/// hour) — snapshots happen exactly when a scenario sends the
+/// `checkpoint` command.
+const SNAP_ENGINE_JSON: &str = r#"{"data_dir": "DATA_DIR", "processor_units": 1,
+    "partitions_per_topic": 2, "reply_partitions": 2, "chunk_events": 1,
+    "checkpoint_interval": 3600}"#;
+
+/// Full-replay control: identical engine, snapshots off (the default).
+const CTL_ENGINE_JSON: &str = r#"{"data_dir": "DATA_DIR", "processor_units": 1,
+    "partitions_per_topic": 2, "reply_partitions": 2, "chunk_events": 1}"#;
+
+const STREAM_JSON: &str = r#"{
+    "name": "payments",
+    "schema": [
+        {"name": "card", "type": "str"},
+        {"name": "merchant", "type": "str"},
+        {"name": "amount", "type": "f64"},
+        {"name": "cnp", "type": "bool"}
+    ],
+    "entities": ["card", "merchant"],
+    "metrics": [
+        {"name": "sum_by_card", "agg": "sum", "field": "amount",
+         "window_ms": 300000, "group_by": ["card"]},
+        {"name": "cnt_by_merchant", "agg": "count",
+         "window_ms": 300000, "group_by": ["merchant"]}
+    ]
+}"#;
+
+fn ev(ts: i64, card: &str, merchant: &str, amount: f64) -> Event {
+    Event::new(
+        ts,
+        vec![
+            Value::Str(card.into()),
+            Value::Str(merchant.into()),
+            Value::F64(amount),
+            Value::Bool(false),
+        ],
+    )
+}
+
+/// Integer amounts keep replayed sums bit-exact regardless of
+/// re-summation order (the crash-retry harness discipline).
+fn sample_events(n: usize) -> Vec<Event> {
+    (0..n)
+        .map(|i| {
+            ev(
+                1_000 * i as i64,
+                &format!("c{}", i % 5),
+                &format!("m{}", i % 3),
+                (i % 7) as f64,
+            )
+        })
+        .collect()
+}
+
+/// Five 10-event batches and their pre-encoded v2 ingest frames
+/// (seq 1..=5) — every scenario and its control replay this schedule.
+fn schedule() -> (Vec<Vec<Event>>, Vec<Vec<u8>>) {
+    let events = sample_events(50);
+    let batches: Vec<Vec<Event>> = events.chunks(10).map(|c| c.to_vec()).collect();
+    let frames = batches
+        .iter()
+        .enumerate()
+        .map(|(i, b)| encode_batch_frame(i as u64 + 1, b))
+        .collect();
+    (batches, frames)
+}
+
+fn encode_batch_frame(seq: u64, events: &[Event]) -> Vec<u8> {
+    let schema = payments_schema();
+    let encoded: Vec<Vec<u8>> = events
+        .iter()
+        .map(|e| {
+            let mut v = Vec::new();
+            codec::encode_values_into(&mut v, e, &schema);
+            v
+        })
+        .collect();
+    let raws: Vec<RawEvent<'_>> = events
+        .iter()
+        .zip(&encoded)
+        .map(|(e, v)| RawEvent {
+            timestamp: e.timestamp,
+            values: v,
+        })
+        .collect();
+    let mut frame = Vec::new();
+    wire::encode_raw_batch_frame(&mut frame, seq, &raws);
+    frame
+}
+
+/// Canonical bytes of one event's reply set, with the front-end-chosen
+/// ingest id normalized away so independent runs compare equal.
+fn normalize(per_event: Vec<Vec<ReplyMsg>>) -> Vec<Vec<u8>> {
+    per_event
+        .into_iter()
+        .map(|mut msgs| {
+            for m in &mut msgs {
+                m.ingest_id = 0;
+            }
+            msgs.sort_by(|a, b| a.topic.cmp(&b.topic).then(a.partition.cmp(&b.partition)));
+            let mut buf = Vec::new();
+            for m in &msgs {
+                m.encode_into(&mut buf);
+            }
+            buf
+        })
+        .collect()
+}
+
+/// Relative path → bytes of files with `ext` under `dir`.
+fn files_with_ext(dir: &Path, ext: &str) -> BTreeMap<String, Vec<u8>> {
+    fn walk(dir: &Path, root: &Path, ext: &str, out: &mut BTreeMap<String, Vec<u8>>) {
+        let entries = match std::fs::read_dir(dir) {
+            Ok(e) => e,
+            Err(_) => return,
+        };
+        for e in entries.flatten() {
+            let p = e.path();
+            if p.is_dir() {
+                walk(&p, root, ext, out);
+            } else if p.extension().map(|x| x == ext).unwrap_or(false) {
+                let rel = p
+                    .strip_prefix(root)
+                    .unwrap()
+                    .to_string_lossy()
+                    .replace('\\', "/");
+                out.insert(rel, std::fs::read(&p).unwrap());
+            }
+        }
+    }
+    let mut out = BTreeMap::new();
+    walk(dir, dir, ext, &mut out);
+    out
+}
+
+/// Sealed reservoir chunk files under a node's data dir.
+fn chunk_files(data_dir: &Path) -> BTreeMap<String, Vec<u8>> {
+    files_with_ext(data_dir, "chk")
+}
+
+/// Snapshot files under a node's data dir.
+fn snapshot_files(data_dir: &Path) -> BTreeMap<String, Vec<u8>> {
+    files_with_ext(data_dir, "rgc")
+}
+
+struct Serve {
+    child: std::process::Child,
+    addr: String,
+    stdout: BufReader<std::process::ChildStdout>,
+}
+
+/// Spawn `railgun serve` on an ephemeral port, optionally arming
+/// failpoints in the child via `RAILGUN_FAILPOINTS`, and parse the
+/// announced address.
+fn spawn_serve(engine_path: &Path, stream_path: &Path, failpoints: Option<&str>) -> Serve {
+    let mut cmd = std::process::Command::new(env!("CARGO_BIN_EXE_railgun"));
+    cmd.arg("serve")
+        .arg("--config")
+        .arg(engine_path)
+        .arg("--stream")
+        .arg(stream_path)
+        .arg("--listen")
+        .arg("127.0.0.1:0")
+        .stdin(std::process::Stdio::piped())
+        .stdout(std::process::Stdio::piped())
+        .stderr(std::process::Stdio::null());
+    match failpoints {
+        Some(spec) => {
+            cmd.env("RAILGUN_FAILPOINTS", spec);
+        }
+        None => {
+            cmd.env_remove("RAILGUN_FAILPOINTS");
+        }
+    }
+    let mut child = cmd.spawn().expect("spawn railgun serve");
+    let mut stdout = BufReader::new(child.stdout.take().expect("piped stdout"));
+    let mut line = String::new();
+    stdout
+        .read_line(&mut line)
+        .expect("reading serve announcement");
+    assert!(!line.is_empty(), "serve exited before announcing its address");
+    let addr = line
+        .strip_prefix("LISTEN ")
+        .unwrap_or_else(|| panic!("unexpected announcement: {line}"))
+        .trim()
+        .to_string();
+    Serve {
+        child,
+        addr,
+        stdout,
+    }
+}
+
+impl Serve {
+    /// Ask the serving process for a synchronous snapshot of every task
+    /// processor and wait for its acknowledgement.
+    fn request_checkpoint(&mut self) {
+        let stdin = self.child.stdin.as_mut().expect("piped stdin");
+        stdin.write_all(b"checkpoint\n").unwrap();
+        stdin.flush().unwrap();
+        let mut line = String::new();
+        self.stdout
+            .read_line(&mut line)
+            .expect("reading checkpoint ack");
+        assert_eq!(
+            line.trim(),
+            "CHECKPOINT ok",
+            "checkpoint command must succeed"
+        );
+    }
+
+    /// Send the checkpoint command to a process armed to die mid-write
+    /// and wait for the abort (non-success exit).
+    fn request_checkpoint_expect_abort(mut self) {
+        {
+            let stdin = self.child.stdin.as_mut().expect("piped stdin");
+            stdin.write_all(b"checkpoint\n").unwrap();
+            stdin.flush().unwrap();
+        }
+        let status = self.child.wait().expect("wait on aborted serve");
+        assert!(
+            !status.success(),
+            "serve must die mid-checkpoint, got {status}"
+        );
+    }
+
+    /// Close stdin and wait for a clean exit (flushes and seals the
+    /// reservoir chunks).
+    fn shutdown(mut self) {
+        drop(self.child.stdin.take());
+        let deadline = Instant::now() + Duration::from_secs(30);
+        loop {
+            match self.child.try_wait().expect("try_wait") {
+                Some(status) => {
+                    assert!(status.success(), "serve exited with {status}");
+                    return;
+                }
+                None if Instant::now() > deadline => {
+                    let _ = self.child.kill();
+                    panic!("serve did not exit within 30s of stdin EOF");
+                }
+                None => std::thread::sleep(Duration::from_millis(50)),
+            }
+        }
+    }
+}
+
+/// HELLO at the wire level, presenting a producer claim; returns the
+/// socket and the authoritative `(producer_id, epoch)`.
+fn hello(addr: &str, producer_id: u32, epoch: u32) -> (std::net::TcpStream, u32, u32) {
+    let mut sock = std::net::TcpStream::connect(addr).unwrap();
+    sock.set_nodelay(true).unwrap();
+    wire::write_frame(
+        &mut sock,
+        &Frame::Hello {
+            version: wire::PROTOCOL_VERSION,
+            stream: "payments".into(),
+            producer_id,
+            epoch,
+        },
+        None,
+    )
+    .unwrap();
+    sock.set_read_timeout(Some(LONG)).unwrap();
+    match wire::read_frame(&mut sock, None, wire::DEFAULT_MAX_FRAME).unwrap() {
+        Some(Frame::HelloOk {
+            producer_id, epoch, ..
+        }) => (sock, producer_id, epoch),
+        other => panic!("expected HELLO_OK, got {other:?}"),
+    }
+}
+
+/// Read frames until the in-flight batch's ack *and* all
+/// `count × FANOUT` replies for its id range have arrived.
+fn collect_batch(
+    sock: &mut std::net::TcpStream,
+    count: u64,
+) -> railgun::Result<(u64, bool, Vec<Vec<ReplyMsg>>)> {
+    let mut ack: Option<(u64, bool)> = None;
+    let mut by_id: BTreeMap<u64, Vec<ReplyMsg>> = BTreeMap::new();
+    loop {
+        let frame = wire::read_frame(sock, None, wire::DEFAULT_MAX_FRAME)?
+            .ok_or_else(|| railgun::Error::invalid("connection closed mid-batch"))?;
+        match frame {
+            Frame::IngestAck {
+                first_ingest_id,
+                duplicate,
+                ..
+            } => ack = Some((first_ingest_id, duplicate)),
+            Frame::ReplyBatch { msgs } => {
+                for m in msgs {
+                    by_id.entry(m.ingest_id).or_default().push(m);
+                }
+            }
+            other => {
+                return Err(railgun::Error::invalid(format!(
+                    "unexpected frame mid-batch: {other:?}"
+                )))
+            }
+        }
+        if let Some((first, dup)) = ack {
+            let complete = (first..first + count)
+                .all(|id| by_id.get(&id).map(|v| v.len()).unwrap_or(0) >= FANOUT);
+            if complete {
+                let per_event = (first..first + count)
+                    .map(|id| by_id.remove(&id).unwrap())
+                    .collect();
+                return Ok((first, dup, per_event));
+            }
+        }
+    }
+}
+
+/// Send `frames[range]`, awaiting each batch's full reply set; every
+/// batch must be fresh (never a duplicate in these schedules).
+fn send_range(
+    sock: &mut std::net::TcpStream,
+    frames: &[Vec<u8>],
+    batches: &[Vec<Event>],
+    range: std::ops::Range<usize>,
+    replies: &mut Vec<Vec<ReplyMsg>>,
+) {
+    for i in range {
+        sock.write_all(&frames[i]).unwrap();
+        let (_, dup, per_event) = collect_batch(sock, batches[i].len() as u64).unwrap();
+        assert!(!dup, "batch {i} unexpectedly classified as a duplicate");
+        replies.extend(per_event);
+    }
+}
+
+/// Write an engine config whose data dir is `data`.
+fn write_engine(tmp: &TempDir, name: &str, template: &str, data: &Path) -> PathBuf {
+    let path = tmp.join(name);
+    std::fs::write(&path, template.replace("DATA_DIR", &data.display().to_string())).unwrap();
+    path
+}
+
+/// Full-replay control: one un-faulted, snapshot-free process runs the
+/// whole schedule. Returns (normalized replies, sealed chunk files).
+fn control_run(
+    tmp: &TempDir,
+    stream_path: &Path,
+    batches: &[Vec<Event>],
+    frames: &[Vec<u8>],
+) -> (Vec<Vec<u8>>, BTreeMap<String, Vec<u8>>) {
+    let data = tmp.join("control-data");
+    let engine = write_engine(tmp, "engine-control.json", CTL_ENGINE_JSON, &data);
+    let serve = spawn_serve(&engine, stream_path, None);
+    let mut replies = Vec::new();
+    {
+        let (mut sock, _, _) = hello(&serve.addr, 0, 0);
+        send_range(&mut sock, frames, batches, 0..batches.len(), &mut replies);
+    }
+    serve.shutdown();
+    let chunks = chunk_files(&data);
+    assert!(!chunks.is_empty(), "control run sealed no chunk files");
+    (normalize(replies), chunks)
+}
+
+/// Clean restart: snapshot after the second batch, one more batch, shut
+/// down cleanly, restart over the same data dir. Recovery must come
+/// from the snapshot — replaying only the one post-snapshot batch (10
+/// events × 2 entity records), not the 30-event first-life history —
+/// and the bytes must match the full-replay control exactly.
+#[test]
+fn clean_restart_recovers_from_snapshot_with_bounded_replay() {
+    let tmp = TempDir::new("ckpt_clean_restart");
+    let stream_path = tmp.join("stream.json");
+    std::fs::write(&stream_path, STREAM_JSON).unwrap();
+    let (batches, frames) = schedule();
+    let (control_replies, control_chunks) = control_run(&tmp, &stream_path, &batches, &frames);
+
+    let data = tmp.join("snap-data");
+    let engine = write_engine(&tmp, "engine-snap.json", SNAP_ENGINE_JSON, &data);
+
+    // first life: 2 batches, snapshot, a third batch, clean exit
+    let mut serve = spawn_serve(&engine, &stream_path, None);
+    let mut replies = Vec::new();
+    let (mut sock, pid, epoch) = hello(&serve.addr, 0, 0);
+    assert_ne!(pid, 0);
+    send_range(&mut sock, &frames, &batches, 0..2, &mut replies);
+    serve.request_checkpoint();
+    let stats = railgun::net::fetch_stats(serve.addr.as_str(), LONG).unwrap();
+    assert!(
+        stats.counter("checkpoint.written").unwrap() >= 1,
+        "snapshot write counted"
+    );
+    assert!(
+        stats.counter("checkpoint.bytes").unwrap() >= 1,
+        "snapshot bytes counted"
+    );
+    assert!(
+        stats.counter("checkpoint.write_ms").is_some(),
+        "snapshot timing row present"
+    );
+    send_range(&mut sock, &frames, &batches, 2..3, &mut replies);
+    drop(sock);
+    serve.shutdown();
+    assert!(
+        !snapshot_files(&data).is_empty(),
+        "expected durable snapshot files"
+    );
+
+    // second life: recover, then the rest of the schedule
+    let serve = spawn_serve(&engine, &stream_path, None);
+    let (mut sock, pid2, _) = hello(&serve.addr, pid, epoch);
+    assert_eq!(pid2, pid, "restarted server resumes the presented identity");
+    send_range(&mut sock, &frames, &batches, 3..5, &mut replies);
+    let stats = railgun::net::fetch_stats(serve.addr.as_str(), LONG).unwrap();
+    // 20 of the first life's 30 events were inside the snapshot; only
+    // the remaining 10 (×2 entity records each) may be replayed. A full
+    // replay would have counted 60.
+    assert_eq!(
+        stats.counter("recovery.replayed_records"),
+        Some(20),
+        "recovery must replay only the post-snapshot tail"
+    );
+    assert!(
+        stats.counter("recovery.ms").is_some(),
+        "recovery timing row present"
+    );
+    drop(sock);
+    serve.shutdown();
+
+    assert_eq!(
+        normalize(replies),
+        control_replies,
+        "reply bytes diverge from the full-replay control"
+    );
+    assert_eq!(
+        chunk_files(&data),
+        control_chunks,
+        "sealed chunk files diverge from the full-replay control"
+    );
+}
+
+/// Abort mid-snapshot-write: `checkpoint.abort_mid_write=abort@2` kills
+/// the serve process while its second task processor's snapshot is
+/// sitting half-written in a temp file. The restart must sweep the temp
+/// file, recover from whatever *completed* state exists (an earlier
+/// snapshot or full replay — never the torn write) and end
+/// byte-identical to the control.
+#[cfg(feature = "failpoints")]
+#[test]
+fn abort_mid_checkpoint_write_recovers_byte_identical() {
+    let tmp = TempDir::new("ckpt_abort_mid_write");
+    let stream_path = tmp.join("stream.json");
+    std::fs::write(&stream_path, STREAM_JSON).unwrap();
+    let (batches, frames) = schedule();
+    let (control_replies, control_chunks) = control_run(&tmp, &stream_path, &batches, &frames);
+
+    let data = tmp.join("abort-data");
+    let engine = write_engine(&tmp, "engine-abort.json", SNAP_ENGINE_JSON, &data);
+
+    // first life: 3 batches, then die inside the snapshot pass
+    let serve = spawn_serve(
+        &engine,
+        &stream_path,
+        Some("checkpoint.abort_mid_write=abort@2"),
+    );
+    let mut replies = Vec::new();
+    let (mut sock, pid, epoch) = hello(&serve.addr, 0, 0);
+    send_range(&mut sock, &frames, &batches, 0..3, &mut replies);
+    drop(sock);
+    serve.request_checkpoint_expect_abort();
+
+    // second life over the same data dir, no faults armed
+    let serve = spawn_serve(&engine, &stream_path, None);
+    let (mut sock, pid2, _) = hello(&serve.addr, pid, epoch);
+    assert_eq!(pid2, pid, "restarted server resumes the presented identity");
+    send_range(&mut sock, &frames, &batches, 3..5, &mut replies);
+    drop(sock);
+    serve.shutdown();
+    assert!(
+        files_with_ext(&data, "tmp").is_empty(),
+        "the torn snapshot temp file must be swept on recovery"
+    );
+
+    assert_eq!(
+        normalize(replies),
+        control_replies,
+        "reply bytes diverge across the mid-checkpoint abort"
+    );
+    assert_eq!(
+        chunk_files(&data),
+        control_chunks,
+        "sealed chunk files diverge across the mid-checkpoint abort"
+    );
+}
+
+/// Corrupted newest snapshot: two snapshot generations exist; a bit flip
+/// in every newest file must push recovery to the next-older snapshot
+/// (visible in the replay count), and the bytes must still match the
+/// control.
+#[test]
+fn corrupted_latest_snapshot_falls_back_to_the_older_one() {
+    let tmp = TempDir::new("ckpt_corrupt_latest");
+    let stream_path = tmp.join("stream.json");
+    std::fs::write(&stream_path, STREAM_JSON).unwrap();
+    let (batches, frames) = schedule();
+    let (control_replies, control_chunks) = control_run(&tmp, &stream_path, &batches, &frames);
+
+    let data = tmp.join("corrupt-data");
+    let engine = write_engine(&tmp, "engine-corrupt.json", SNAP_ENGINE_JSON, &data);
+
+    // first life: snapshot after batch 2 (20 events) and after batch 4
+    // (40 events), then clean exit
+    let mut serve = spawn_serve(&engine, &stream_path, None);
+    let mut replies = Vec::new();
+    let (mut sock, pid, epoch) = hello(&serve.addr, 0, 0);
+    send_range(&mut sock, &frames, &batches, 0..2, &mut replies);
+    serve.request_checkpoint();
+    send_range(&mut sock, &frames, &batches, 2..4, &mut replies);
+    serve.request_checkpoint();
+    drop(sock);
+    serve.shutdown();
+
+    // flip one byte in the newest snapshot of every task processor
+    let mut newest_per_dir: BTreeMap<PathBuf, PathBuf> = BTreeMap::new();
+    for rel in snapshot_files(&data).keys() {
+        let abs = data.join(rel);
+        let dir = abs.parent().unwrap().to_path_buf();
+        // lexical max == numeric max (zero-padded names)
+        match newest_per_dir.get(&dir) {
+            Some(cur) if cur >= &abs => {}
+            _ => {
+                newest_per_dir.insert(dir, abs);
+            }
+        }
+    }
+    assert!(
+        !newest_per_dir.is_empty(),
+        "expected snapshot files to corrupt"
+    );
+    for path in newest_per_dir.values() {
+        let mut bytes = std::fs::read(path).unwrap();
+        let last = bytes.len() - 1;
+        bytes[last] ^= 0x40;
+        std::fs::write(path, bytes).unwrap();
+    }
+
+    // second life: the CRC rejects every newest snapshot; recovery must
+    // come from the older generation (20 events in) — so the 20 events
+    // (×2 records) between the two snapshots replay: not 0 (the corrupt
+    // newest), and not the full 80 records
+    let serve = spawn_serve(&engine, &stream_path, None);
+    let (mut sock, pid2, _) = hello(&serve.addr, pid, epoch);
+    assert_eq!(pid2, pid, "restarted server resumes the presented identity");
+    send_range(&mut sock, &frames, &batches, 4..5, &mut replies);
+    let stats = railgun::net::fetch_stats(serve.addr.as_str(), LONG).unwrap();
+    assert_eq!(
+        stats.counter("recovery.replayed_records"),
+        Some(40),
+        "recovery must fall back to the older snapshot's horizon"
+    );
+    drop(sock);
+    serve.shutdown();
+
+    assert_eq!(
+        normalize(replies),
+        control_replies,
+        "reply bytes diverge across the corrupted-snapshot restart"
+    );
+    assert_eq!(
+        chunk_files(&data),
+        control_chunks,
+        "sealed chunk files diverge across the corrupted-snapshot restart"
+    );
+}

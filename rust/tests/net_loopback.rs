@@ -980,14 +980,21 @@ fn stats_scrape_roundtrips_and_counts_ingested_events() {
     assert!(s1.counter("net.frames_out").unwrap() > 0);
     assert!(s1.hist("backend.batch_ns").unwrap().count > 0);
 
-    // the reliable-ingest counters are always rendered (zero on a
-    // fault-free run) and ride the monotonicity check below
+    // the reliable-ingest, checkpoint and recovery counters are always
+    // rendered (zero on a fault-free, snapshot-free run) and ride the
+    // monotonicity check below
     for name in [
         "net.retries",
         "net.reply_drop_conns",
         "frontend.dedup_hits",
         "frontend.dup_suffix_published",
+        "frontend.dedup_evicted",
         "failpoints.triggered",
+        "checkpoint.written",
+        "checkpoint.bytes",
+        "checkpoint.write_ms",
+        "recovery.replayed_records",
+        "recovery.ms",
     ] {
         assert!(
             s1.counter(name).is_some(),
