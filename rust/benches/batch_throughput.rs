@@ -84,13 +84,35 @@
 //! throughput (enforced on full-size runs; `--quick` reports without
 //! the gate), emitted as `BENCH_conn_scale.json`.
 //!
+//! **Part 6 — aggregate kernels** (`--agg-kernels-only` runs just
+//! this). The gather→kernel evaluation core in isolation, no plan or
+//! storage in the loop: 4096 groups' worth of aggregate states driven
+//! through identical row streams by both shapes:
+//!
+//! * **kernel(runs)** — rows gathered into reusable per-group columnar
+//!   buffers, then applied per group via `agg::kernel::add_run_emit` /
+//!   `evict_run` (the production `advance_batch` shape);
+//! * **per-event (emulated)** — op-for-op what the pre-kernel dispatch
+//!   paid: one `AggState::add`/`evict` enum match per row plus the
+//!   per-row `state.value()` read (a division for AVG, division +
+//!   `sqrt` for STDDEV) the old update path performed on every add
+//!   *and* evict.
+//!
+//! Both paths must land bit-identical states (asserted state-for-state
+//! as the series run). Headline check: the kernel path sustains
+//! **≥ 1.2×** the per-event baseline over the moments-family kinds
+//! (COUNT/SUM/AVG/STDDEV/ANOMALY_SCORE; MIN/MAX/COUNT_DISTINCT are
+//! reported unguarded — their kernels are the same pointer-chasing
+//! loops either way), enforced on full-size runs; `--quick` reports
+//! without the gate. Emitted as `BENCH_agg_kernels.json`.
+//!
 //! ```text
 //! cargo bench --bench batch_throughput
 //!     [-- --quick] [-- --hotpath-only] [-- --ingest-only]
-//!     [-- --net-ingest-only] [-- --conn-scale-only]
+//!     [-- --net-ingest-only] [-- --conn-scale-only] [-- --agg-kernels-only]
 //! ```
 
-use railgun::agg::AggKind;
+use railgun::agg::{kernel, AggKind, AggState};
 use railgun::config::{EngineConfig, StreamDef};
 use railgun::coordinator::Node;
 use railgun::event::{codec, Event, EventView, Value, ViewScratch};
@@ -227,7 +249,8 @@ const HOTPATH_WINDOW: i64 = 60 * ms::SECOND;
 const HOTPATH_BATCH: usize = 1024;
 
 /// Every aggregation kind over one shared sliding window, grouped by
-/// card — one window node, one group node, seven aggregator leaves.
+/// card — one window node, one group node, eight aggregator leaves
+/// (`dmerch` stays last: `LegacySink` indexes it by position).
 fn hotpath_specs() -> Vec<MetricSpec> {
     let w = WindowSpec::sliding(HOTPATH_WINDOW);
     vec![
@@ -237,6 +260,7 @@ fn hotpath_specs() -> Vec<MetricSpec> {
         MetricSpec::new("sdev", AggKind::StdDev, Some("amount"), w, &["card"]),
         MetricSpec::new("min", AggKind::Min, Some("amount"), w, &["card"]),
         MetricSpec::new("max", AggKind::Max, Some("amount"), w, &["card"]),
+        MetricSpec::new("zscore", AggKind::AnomalyScore, Some("amount"), w, &["card"]),
         MetricSpec::new(
             "dmerch",
             AggKind::CountDistinct,
@@ -1124,6 +1148,212 @@ fn conn_scale(opts: &BenchOpts) -> (Vec<Series>, f64) {
     (series, ratio16)
 }
 
+// ---------------------------------------------------------------------------
+// Part 6: aggregate kernels (gathered columnar runs vs per-event add/evict)
+// ---------------------------------------------------------------------------
+
+const KERNEL_GROUPS: usize = 4096;
+const KERNEL_RUN: usize = 32; // rows per group per gathered batch
+
+/// Deterministic row `r`: (seq, value, raw-hash) — the same stream feeds
+/// both paths and every kind, round-robin across `KERNEL_GROUPS`.
+#[inline]
+fn kernel_row(r: u64) -> (u64, f64, u64) {
+    (r, (r % 997) as f64 / 7.0, hash64(&(r % 503).to_le_bytes()))
+}
+
+/// Reusable per-group gather columns (the bench-local miniature of the
+/// plan's run buffers — gathered, applied, cleared, never reallocated).
+#[derive(Default)]
+struct KernelCols {
+    seqs: Vec<u64>,
+    vals: Vec<f64>,
+    hashes: Vec<u64>,
+}
+
+impl KernelCols {
+    fn clear(&mut self) {
+        self.seqs.clear();
+        self.vals.clear();
+        self.hashes.clear();
+    }
+}
+
+/// Scatter rows `[from, from + n)` into their groups' columns.
+fn kernel_gather(cols: &mut [KernelCols], from: u64, n: u64) {
+    for r in from..from + n {
+        let (seq, val, hash) = kernel_row(r);
+        let c = &mut cols[(r % KERNEL_GROUPS as u64) as usize];
+        c.seqs.push(seq);
+        c.vals.push(val);
+        c.hashes.push(hash);
+    }
+}
+
+/// Op-for-op emulation of the pre-kernel dispatch: every arrival and
+/// expiration pays one `AggState` enum match plus the per-row aggregate
+/// value read the old update path performed on both roles. Returns the
+/// final states and the timed seconds.
+fn agg_scalar_drive(kind: AggKind, iters: usize) -> (Vec<AggState>, f64) {
+    let groups = KERNEL_GROUPS as u64;
+    let batch = groups * KERNEL_RUN as u64;
+    let mut states: Vec<AggState> = (0..KERNEL_GROUPS).map(|_| AggState::new(kind)).collect();
+    // standing window: one untimed prefill batch, so timed evictions
+    // never empty a group (steady state, not the drift-reset edge)
+    let mut add_r = 0u64;
+    while add_r < batch {
+        let (seq, val, hash) = kernel_row(add_r);
+        states[(add_r % groups) as usize].add(seq, val, hash);
+        add_r += 1;
+    }
+    let mut evict_r = 0u64;
+    let t0 = Instant::now();
+    for _ in 0..iters {
+        for _ in 0..batch {
+            let (seq, val, hash) = kernel_row(add_r);
+            let st = &mut states[(add_r % groups) as usize];
+            st.add(seq, val, hash);
+            std::hint::black_box(st.value());
+            add_r += 1;
+        }
+        for _ in 0..batch {
+            let (seq, val, hash) = kernel_row(evict_r);
+            let st = &mut states[(evict_r % groups) as usize];
+            st.evict(seq, val, hash);
+            std::hint::black_box(st.value());
+            evict_r += 1;
+        }
+    }
+    (states, t0.elapsed().as_secs_f64())
+}
+
+/// The production `advance_batch` shape in miniature: gather each batch
+/// into per-group columns, apply arrivals through the emitting kernel
+/// (one reply value per row, as the live path produces) and expirations
+/// through the non-emitting kernel. Returns states + timed seconds.
+fn agg_kernel_drive(kind: AggKind, iters: usize) -> (Vec<AggState>, f64) {
+    let groups = KERNEL_GROUPS as u64;
+    let batch = groups * KERNEL_RUN as u64;
+    let mut states: Vec<AggState> = (0..KERNEL_GROUPS).map(|_| AggState::new(kind)).collect();
+    let mut add_cols: Vec<KernelCols> =
+        (0..KERNEL_GROUPS).map(|_| KernelCols::default()).collect();
+    let mut evict_cols: Vec<KernelCols> =
+        (0..KERNEL_GROUPS).map(|_| KernelCols::default()).collect();
+    let incl = vec![true; KERNEL_RUN];
+    let mut out: Vec<Option<f64>> = Vec::with_capacity(KERNEL_RUN);
+    // untimed prefill batch, mirroring the scalar series
+    let mut add_r = 0u64;
+    kernel_gather(&mut add_cols, add_r, batch);
+    add_r += batch;
+    for (g, c) in add_cols.iter_mut().enumerate() {
+        kernel::add_run(&mut states[g], &c.seqs, &c.vals, &c.hashes);
+        c.clear();
+    }
+    let mut evict_r = 0u64;
+    let t0 = Instant::now();
+    for _ in 0..iters {
+        kernel_gather(&mut add_cols, add_r, batch);
+        add_r += batch;
+        for (g, c) in add_cols.iter_mut().enumerate() {
+            out.clear();
+            kernel::add_run_emit(&mut states[g], &c.seqs, &c.vals, &c.hashes, &incl, &mut out);
+            std::hint::black_box(out.last().copied());
+            c.clear();
+        }
+        kernel_gather(&mut evict_cols, evict_r, batch);
+        evict_r += batch;
+        for (g, c) in evict_cols.iter_mut().enumerate() {
+            kernel::evict_run(&mut states[g], &c.seqs, &c.vals, &c.hashes);
+            c.clear();
+        }
+    }
+    (states, t0.elapsed().as_secs_f64())
+}
+
+/// Run one kind family through both paths, asserting bit-identical final
+/// states; accumulates timed seconds into `(t_kernel, t_scalar)`.
+fn agg_kernels_family(kinds: &[AggKind], iters: usize) -> (f64, f64) {
+    let (mut t_kernel, mut t_scalar) = (0.0f64, 0.0f64);
+    for &kind in kinds {
+        let (kernel_states, tk) = agg_kernel_drive(kind, iters);
+        let (scalar_states, ts) = agg_scalar_drive(kind, iters);
+        assert_eq!(
+            kernel_states, scalar_states,
+            "{kind:?}: kernel and per-event paths must agree state-for-state"
+        );
+        t_kernel += tk;
+        t_scalar += ts;
+    }
+    (t_kernel, t_scalar)
+}
+
+/// Returns the four series plus the gated (moments-family) speedup and
+/// emits `BENCH_agg_kernels.json`.
+fn agg_kernels(opts: &BenchOpts) -> (Vec<Series>, f64) {
+    let iters = opts.scale(40).max(2) as usize;
+    let batch = (KERNEL_GROUPS * KERNEL_RUN) as u64;
+    let gated = [
+        AggKind::Count,
+        AggKind::Sum,
+        AggKind::Avg,
+        AggKind::StdDev,
+        AggKind::AnomalyScore,
+    ];
+    let other = [AggKind::Min, AggKind::Max, AggKind::CountDistinct];
+
+    let (t_kernel, t_scalar) = agg_kernels_family(&gated, iters);
+    let n = gated.len() as u64 * iters as u64 * batch;
+    let mut kernel_s = Series::new("kernel(runs)");
+    kernel_s.throughput_eps = n as f64 / t_kernel;
+    kernel_s.note("rows", n);
+    kernel_s.note("kinds", gated.len());
+    let mut scalar_s = Series::new("per-event(emulated)");
+    scalar_s.throughput_eps = n as f64 / t_scalar;
+    scalar_s.note("rows", n);
+    scalar_s.note("kinds", gated.len());
+    let speedup = t_scalar / t_kernel;
+
+    let (t_kernel_o, t_scalar_o) = agg_kernels_family(&other, iters);
+    let n_o = other.len() as u64 * iters as u64 * batch;
+    let mut kernel_o = Series::new("kernel(runs,other)");
+    kernel_o.throughput_eps = n_o as f64 / t_kernel_o;
+    kernel_o.note("rows", n_o);
+    kernel_o.note("kinds", other.len());
+    let mut scalar_o = Series::new("per-event(emulated,other)");
+    scalar_o.throughput_eps = n_o as f64 / t_scalar_o;
+    scalar_o.note("rows", n_o);
+    scalar_o.note("kinds", other.len());
+    let speedup_other = t_scalar_o / t_kernel_o;
+
+    let series = vec![kernel_s, scalar_s, kernel_o, scalar_o];
+    let json = Json::obj([
+        ("bench", Json::Str("agg_kernels".into())),
+        ("groups", Json::Int(KERNEL_GROUPS as i64)),
+        ("run_len", Json::Int(KERNEL_RUN as i64)),
+        ("rows_gated", Json::Int(n as i64)),
+        (
+            "series",
+            Json::Arr(
+                series
+                    .iter()
+                    .map(|s| {
+                        Json::obj([
+                            ("label", Json::Str(s.label.clone())),
+                            ("throughput_eps", Json::Float(s.throughput_eps)),
+                        ])
+                    })
+                    .collect(),
+            ),
+        ),
+        ("speedup", Json::Float(speedup)),
+        ("speedup_other", Json::Float(speedup_other)),
+        ("target", Json::Float(1.2)),
+    ]);
+    std::fs::write("BENCH_agg_kernels.json", format!("{json}\n"))
+        .expect("write BENCH_agg_kernels.json");
+    (series, speedup)
+}
+
 fn main() {
     railgun::util::logging::init();
     let opts = BenchOpts::from_args();
@@ -1131,7 +1361,12 @@ fn main() {
     let ingest_only = std::env::args().any(|a| a == "--ingest-only");
     let net_ingest_only = std::env::args().any(|a| a == "--net-ingest-only");
     let conn_scale_only = std::env::args().any(|a| a == "--conn-scale-only");
-    let none_only = !hotpath_only && !ingest_only && !net_ingest_only && !conn_scale_only;
+    let agg_kernels_only = std::env::args().any(|a| a == "--agg-kernels-only");
+    let none_only = !hotpath_only
+        && !ingest_only
+        && !net_ingest_only
+        && !conn_scale_only
+        && !agg_kernels_only;
 
     if none_only {
         let n = opts.scale(30_000);
@@ -1239,6 +1474,29 @@ fn main() {
                  baseline (got {speedup:.2}x)"
             );
             println!("shape check passed: net ingest ≥ 1.2x decode/re-encode baseline");
+        }
+    }
+
+    if none_only || agg_kernels_only {
+        let (series, speedup) = agg_kernels(&opts);
+        print_table(
+            "Aggregate kernels — gathered columnar runs vs per-event add/evict (4096 groups)",
+            &series,
+        );
+        print_csv("agg_kernels", &series);
+        println!(
+            "\nkernel vs per-event speedup (moments family): {speedup:.2}x (target ≥ 1.2x) — \
+             BENCH_agg_kernels.json written"
+        );
+        if opts.quick {
+            println!("quick mode: speedup gate reported, not enforced");
+        } else {
+            assert!(
+                speedup >= 1.2,
+                "columnar kernels must sustain ≥ 1.2x the per-event add/evict baseline \
+                 (got {speedup:.2}x)"
+            );
+            println!("shape check passed: agg kernels ≥ 1.2x per-event baseline");
         }
     }
 

@@ -1,0 +1,294 @@
+//! Batch aggregation kernels: apply a **run** of gathered updates to one
+//! state with tight slice loops.
+//!
+//! The plan's dispatch pass no longer mutates [`AggState`] inline; it
+//! gathers each batch's `(seq, value, raw_hash)` rows into per-(metric,
+//! slot) columnar buffers (see `plan::dispatch`) and flushes them through
+//! these entry points. Hoisting the work out of the per-event loop buys:
+//!
+//! * one enum match per run instead of one per row;
+//! * one slot resolution + dirty-mark per run instead of one per row;
+//! * no per-row aggregate-value computation on non-emitting runs — the
+//!   scalar path paid a division (AVG), a division + `sqrt` (STDDEV) or
+//!   a map probe on **every** add/evict, emitted or not;
+//! * moment updates become plain slice sweeps (`sum += v` / `sumsq += v*v`
+//!   over `&[f64]`) with independent accumulator chains the CPU can
+//!   pipeline.
+//!
+//! ## Bit-identity contract
+//!
+//! Accumulation is **in row order** — no pairwise/SIMD reassociation of
+//! float sums — so a run produces exactly the state bytes the scalar
+//! `add`/`evict` sequence would. The emitting kernel computes per-row
+//! values through the same shared helpers (`Moments::value_of`,
+//! `Welford::value`) the scalar [`AggState::value`] uses. Reply streams
+//! and persisted states are therefore byte-identical across paths
+//! (`rust/tests/batch_equivalence.rs` is the referee). The win comes from
+//! removing per-row dispatch overhead, not from changing float math.
+
+use crate::agg::state::MonoEntry;
+use crate::agg::AggState;
+
+/// Apply a run of window **arrivals** (no replies needed — backfill,
+/// non-zero-offset bundles, hopping pane maintenance).
+///
+/// Columns are parallel: `vals[i]` and `hashes[i]` belong to the event
+/// with sequence `seqs[i]`; rows are in dispatch order.
+pub fn add_run(st: &mut AggState, seqs: &[u64], vals: &[f64], hashes: &[u64]) {
+    debug_assert_eq!(seqs.len(), vals.len());
+    debug_assert_eq!(seqs.len(), hashes.len());
+    match st {
+        AggState::Moments(_, m) => {
+            let (mut sum, mut sumsq) = (m.sum, m.sumsq);
+            for &v in vals {
+                sum += v;
+                sumsq += v * v;
+            }
+            m.sum = sum;
+            m.sumsq = sumsq;
+            m.count += vals.len() as u64;
+        }
+        AggState::Extremum { is_min, deque } => {
+            let is_min = *is_min;
+            for (i, &v) in vals.iter().enumerate() {
+                while let Some(back) = deque.back() {
+                    let keep = if is_min { back.value < v } else { back.value > v };
+                    if keep {
+                        break;
+                    }
+                    deque.pop_back();
+                }
+                deque.push_back(MonoEntry { seq: seqs[i], value: v });
+            }
+        }
+        AggState::Distinct(map) => {
+            for &h in hashes {
+                *map.entry(h).or_insert(0) += 1;
+            }
+        }
+        AggState::Anomaly(w) => {
+            for &v in vals {
+                w.add(v);
+            }
+        }
+    }
+}
+
+/// Apply a run of window **expirations** (never emits; rows are in
+/// dispatch order, which for expirations is seq order).
+pub fn evict_run(st: &mut AggState, seqs: &[u64], vals: &[f64], hashes: &[u64]) {
+    debug_assert_eq!(seqs.len(), vals.len());
+    debug_assert_eq!(seqs.len(), hashes.len());
+    match st {
+        AggState::Moments(_, m) => {
+            // the scalar path resets sum/sumsq exactly when count hits
+            // zero (drift cancellation); a run that cannot empty the
+            // window takes the branch-free sweep
+            if (m.count as usize) > vals.len() {
+                let (mut sum, mut sumsq) = (m.sum, m.sumsq);
+                for &v in vals {
+                    sum -= v;
+                    sumsq -= v * v;
+                }
+                m.sum = sum;
+                m.sumsq = sumsq;
+                m.count -= vals.len() as u64;
+            } else {
+                for &v in vals {
+                    debug_assert!(m.count > 0, "evict from empty aggregation");
+                    m.count = m.count.saturating_sub(1);
+                    m.sum -= v;
+                    m.sumsq -= v * v;
+                    if m.count == 0 {
+                        m.sum = 0.0;
+                        m.sumsq = 0.0;
+                    }
+                }
+            }
+        }
+        AggState::Extremum { deque, .. } => {
+            for &seq in seqs {
+                if let Some(front) = deque.front() {
+                    if front.seq == seq {
+                        deque.pop_front();
+                    }
+                }
+            }
+        }
+        AggState::Distinct(map) => {
+            for &h in hashes {
+                if let Some(c) = map.get_mut(&h) {
+                    debug_assert!(*c > 0, "distinct evict below zero multiplicity");
+                    *c = c.saturating_sub(1);
+                    if *c == 0 {
+                        map.remove(&h);
+                    }
+                }
+            }
+        }
+        AggState::Anomaly(w) => {
+            for &v in vals {
+                w.evict(v);
+            }
+        }
+    }
+}
+
+/// Apply a run of **live arrivals**, recording the post-row aggregate
+/// value for each (one reply per row). Rows with `incl[i] == false` are
+/// excluded from the aggregate (SQL null semantics) but still produce the
+/// current value for their reply, exactly like the scalar path's
+/// read-only `state.value()`.
+pub fn add_run_emit(
+    st: &mut AggState,
+    seqs: &[u64],
+    vals: &[f64],
+    hashes: &[u64],
+    incl: &[bool],
+    out: &mut Vec<Option<f64>>,
+) {
+    debug_assert_eq!(seqs.len(), vals.len());
+    debug_assert_eq!(seqs.len(), hashes.len());
+    debug_assert_eq!(seqs.len(), incl.len());
+    match st {
+        AggState::Moments(kind, m) => {
+            let kind = *kind;
+            for (i, &v) in vals.iter().enumerate() {
+                if incl[i] {
+                    m.count += 1;
+                    m.sum += v;
+                    m.sumsq += v * v;
+                }
+                out.push(m.value_of(kind));
+            }
+        }
+        AggState::Extremum { is_min, deque } => {
+            let is_min = *is_min;
+            for (i, &v) in vals.iter().enumerate() {
+                if incl[i] {
+                    while let Some(back) = deque.back() {
+                        let keep = if is_min { back.value < v } else { back.value > v };
+                        if keep {
+                            break;
+                        }
+                        deque.pop_back();
+                    }
+                    deque.push_back(MonoEntry { seq: seqs[i], value: v });
+                }
+                out.push(deque.front().map(|e| e.value));
+            }
+        }
+        AggState::Distinct(map) => {
+            for (i, &h) in hashes.iter().enumerate() {
+                if incl[i] {
+                    *map.entry(h).or_insert(0) += 1;
+                }
+                out.push(Some(map.len() as f64));
+            }
+        }
+        AggState::Anomaly(w) => {
+            for (i, &v) in vals.iter().enumerate() {
+                if incl[i] {
+                    w.add(v);
+                }
+                out.push(w.value());
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::agg::AggKind;
+    use crate::util::rng::Rng;
+
+    const ALL: [AggKind; 8] = [
+        AggKind::Count,
+        AggKind::Sum,
+        AggKind::Avg,
+        AggKind::Min,
+        AggKind::Max,
+        AggKind::StdDev,
+        AggKind::CountDistinct,
+        AggKind::AnomalyScore,
+    ];
+
+    /// Kernels must equal the scalar add/evict sequence **bitwise** —
+    /// states and per-row emitted values alike.
+    #[test]
+    fn runs_match_scalar_sequence_bitwise() {
+        let mut rng = Rng::new(0xA66);
+        for kind in ALL {
+            let mut scalar = AggState::new(kind);
+            let mut kerneled = AggState::new(kind);
+            let mut seq = 0u64;
+            let mut window: std::collections::VecDeque<(u64, f64, u64)> = Default::default();
+            for round in 0..40 {
+                let n = rng.index(24) + 1;
+                let rows: Vec<(u64, f64, u64)> = (0..n)
+                    .map(|_| {
+                        let v = (rng.next_f64() * 100.0) - 30.0;
+                        let s = seq;
+                        seq += 1;
+                        (s, v, rng.next_below(8))
+                    })
+                    .collect();
+                let seqs: Vec<u64> = rows.iter().map(|r| r.0).collect();
+                let vals: Vec<f64> = rows.iter().map(|r| r.1).collect();
+                let hashes: Vec<u64> = rows.iter().map(|r| r.2).collect();
+                let incl: Vec<bool> = rows.iter().map(|r| r.2 != 0).collect();
+
+                if round % 3 == 2 {
+                    // emitting run: compare per-row values too
+                    let mut out = Vec::new();
+                    add_run_emit(&mut kerneled, &seqs, &vals, &hashes, &incl, &mut out);
+                    for (i, r) in rows.iter().enumerate() {
+                        if incl[i] {
+                            scalar.add(r.0, r.1, r.2);
+                            window.push_back(*r);
+                        }
+                        let expect = scalar.value();
+                        assert_eq!(
+                            out[i].map(f64::to_bits),
+                            expect.map(f64::to_bits),
+                            "{kind:?} emit row {i}"
+                        );
+                    }
+                } else {
+                    add_run(&mut kerneled, &seqs, &vals, &hashes);
+                    for r in &rows {
+                        scalar.add(r.0, r.1, r.2);
+                        window.push_back(*r);
+                    }
+                }
+                assert_eq!(kerneled, scalar, "{kind:?} after add round {round}");
+
+                // evict a prefix of the live window through both paths
+                let k = rng.index(window.len() + 1);
+                let evicted: Vec<(u64, f64, u64)> = window.drain(..k).collect();
+                let seqs: Vec<u64> = evicted.iter().map(|r| r.0).collect();
+                let vals: Vec<f64> = evicted.iter().map(|r| r.1).collect();
+                let hashes: Vec<u64> = evicted.iter().map(|r| r.2).collect();
+                evict_run(&mut kerneled, &seqs, &vals, &hashes);
+                for r in &evicted {
+                    scalar.evict(r.0, r.1, r.2);
+                }
+                assert_eq!(kerneled, scalar, "{kind:?} after evict round {round}");
+            }
+        }
+    }
+
+    #[test]
+    fn evict_run_empties_window_with_drift_reset() {
+        let vals = [3.5, 1.25, -2.0, 9.75];
+        let seqs = [0u64, 1, 2, 3];
+        let hashes = [0u64; 4];
+        for kind in [AggKind::Sum, AggKind::StdDev, AggKind::AnomalyScore] {
+            let mut st = AggState::new(kind);
+            add_run(&mut st, &seqs, &vals, &hashes);
+            evict_run(&mut st, &seqs, &vals, &hashes);
+            assert_eq!(st, AggState::new(kind), "{kind:?} resets exactly at empty");
+        }
+    }
+}

@@ -5,14 +5,32 @@
 //! the window (tail iterator) and `evict` when it leaves (head iterator).
 //! Invertible aggregates (count/sum/avg/variance) are O(1) both ways;
 //! min/max use a monotonic deque keyed by event sequence number (amortized
-//! O(1), exact); distinct-count keeps an exact value→multiplicity map.
+//! O(1), exact); distinct-count keeps an exact value→multiplicity map;
+//! ANOMALY_SCORE keeps Welford online mean/variance (forward and reverse
+//! updates) and surfaces the z-score of the newest observation with
+//! configurable severity bands (3σ/4σ/5σ by default).
+//!
+//! ## Batch kernels
+//!
+//! The scalar [`AggState::add`]/[`AggState::evict`] pair stays the
+//! semantic reference, but the evaluation hot path applies whole **runs**
+//! of updates at once through [`kernel`]: the plan gathers each batch's
+//! `(seq, value, raw_hash)` rows into reusable per-(metric, slot)
+//! columnar buffers and the kernels sweep them with tight slice loops —
+//! the enum dispatch, slot bookkeeping and per-row value computation are
+//! hoisted out of the loop. Kernels accumulate **in row order** (no
+//! reassociation), so the resulting states and reply values are
+//! bit-identical to the scalar path; `rust/tests/batch_equivalence.rs`
+//! referees that contract.
 //!
 //! States serialize to compact bytes for the kvstore-backed state store
-//! (paper §3.3.2: aggregation states persisted in RocksDB).
+//! (paper §3.3.2: aggregation states persisted in RocksDB). The codec is
+//! tag-versioned: new kinds append tags, old tags decode unchanged.
 
+pub mod kernel;
 mod state;
 
-pub use state::AggState;
+pub use state::{AggState, Welford, DEFAULT_BANDS};
 
 use crate::error::{Error, Result};
 use crate::event::ValueRef;
@@ -35,6 +53,9 @@ pub enum AggKind {
     StdDev,
     /// Exact number of distinct values of `field` in the window.
     CountDistinct,
+    /// Online z-score of the newest observation against the window's
+    /// Welford mean/variance (streaming anomaly detection).
+    AnomalyScore,
 }
 
 impl AggKind {
@@ -48,6 +69,7 @@ impl AggKind {
             AggKind::Max => 4,
             AggKind::StdDev => 5,
             AggKind::CountDistinct => 6,
+            AggKind::AnomalyScore => 7,
         }
     }
 
@@ -61,6 +83,7 @@ impl AggKind {
             4 => AggKind::Max,
             5 => AggKind::StdDev,
             6 => AggKind::CountDistinct,
+            7 => AggKind::AnomalyScore,
             t => return Err(Error::corrupt(format!("unknown agg tag {t}"))),
         })
     }
@@ -75,6 +98,7 @@ impl AggKind {
             "max" => AggKind::Max,
             "stddev" | "std" => AggKind::StdDev,
             "count_distinct" | "distinct" => AggKind::CountDistinct,
+            "anomaly_score" | "anomaly" => AggKind::AnomalyScore,
             other => return Err(Error::invalid(format!("unknown aggregation '{other}'"))),
         })
     }
@@ -125,6 +149,13 @@ pub fn resolve_input(
     }
 }
 
+/// Severity band of a z-score: `0` = nominal, `1..=3` = number of
+/// thresholds (3σ/4σ/5σ by default) that `|z|` clears.
+#[inline]
+pub fn severity(z: f64, bands: &[f64; 3]) -> u8 {
+    bands.iter().filter(|b| z.abs() >= **b).count() as u8
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -139,6 +170,7 @@ mod tests {
             AggKind::Max,
             AggKind::StdDev,
             AggKind::CountDistinct,
+            AggKind::AnomalyScore,
         ] {
             assert_eq!(AggKind::from_tag(k.tag()).unwrap(), k);
         }
@@ -150,6 +182,8 @@ mod tests {
         assert_eq!(AggKind::parse("SUM").unwrap(), AggKind::Sum);
         assert_eq!(AggKind::parse("count").unwrap(), AggKind::Count);
         assert_eq!(AggKind::parse("mean").unwrap(), AggKind::Avg);
+        assert_eq!(AggKind::parse("anomaly_score").unwrap(), AggKind::AnomalyScore);
+        assert_eq!(AggKind::parse("ANOMALY").unwrap(), AggKind::AnomalyScore);
         assert!(AggKind::parse("median").is_err());
     }
 
@@ -157,5 +191,15 @@ mod tests {
     fn needs_field() {
         assert!(!AggKind::Count.needs_field());
         assert!(AggKind::Sum.needs_field());
+        assert!(AggKind::AnomalyScore.needs_field());
+    }
+
+    #[test]
+    fn severity_bands() {
+        assert_eq!(severity(0.0, &DEFAULT_BANDS), 0);
+        assert_eq!(severity(-3.2, &DEFAULT_BANDS), 1);
+        assert_eq!(severity(4.0, &DEFAULT_BANDS), 2);
+        assert_eq!(severity(-17.0, &DEFAULT_BANDS), 3);
+        assert_eq!(severity(2.5, &[1.0, 2.0, 9.0]), 2, "custom bands");
     }
 }

@@ -6,18 +6,131 @@ use crate::util::varint;
 use std::collections::VecDeque;
 
 /// Numeric moments shared by count/sum/avg/stddev.
+///
+/// Fields are crate-visible so [`crate::agg::kernel`] can run its batch
+/// loops directly over the accumulators.
 #[derive(Debug, Clone, Default, PartialEq)]
 pub struct Moments {
-    count: u64,
-    sum: f64,
-    sumsq: f64,
+    pub(crate) count: u64,
+    pub(crate) sum: f64,
+    pub(crate) sumsq: f64,
+}
+
+impl Moments {
+    /// Aggregate value for `kind`. Shared by [`AggState::value`] and the
+    /// kernel module's emitting batch loop so both paths compute
+    /// bit-identical results.
+    #[inline]
+    pub(crate) fn value_of(&self, kind: AggKind) -> Option<f64> {
+        match kind {
+            AggKind::Count => Some(self.count as f64),
+            AggKind::Sum => Some(self.sum),
+            AggKind::Avg => {
+                if self.count == 0 {
+                    None
+                } else {
+                    Some(self.sum / self.count as f64)
+                }
+            }
+            AggKind::StdDev => {
+                if self.count == 0 {
+                    None
+                } else {
+                    let mean = self.sum / self.count as f64;
+                    let var = (self.sumsq / self.count as f64 - mean * mean).max(0.0);
+                    Some(var.sqrt())
+                }
+            }
+            _ => unreachable!("non-moment kind in Moments"),
+        }
+    }
+}
+
+/// Default ANOMALY_SCORE severity thresholds, in σ units.
+pub const DEFAULT_BANDS: [f64; 3] = [3.0, 4.0, 5.0];
+
+/// Welford online mean/variance for ANOMALY_SCORE: the window's running
+/// moments plus the most recently arrived observation, surfaced as the
+/// z-score `(last - mean) / stddev`.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Welford {
+    pub(crate) count: u64,
+    pub(crate) mean: f64,
+    pub(crate) m2: f64,
+    /// Most recently added value — the observation being scored.
+    pub(crate) last: f64,
+    /// Severity thresholds in σ units (3σ/4σ/5σ by default).
+    pub(crate) bands: [f64; 3],
+}
+
+impl Default for Welford {
+    fn default() -> Welford {
+        Welford {
+            count: 0,
+            mean: 0.0,
+            m2: 0.0,
+            last: 0.0,
+            bands: DEFAULT_BANDS,
+        }
+    }
+}
+
+impl Welford {
+    /// Forward Welford update: `x` enters the window.
+    #[inline]
+    pub(crate) fn add(&mut self, x: f64) {
+        self.count += 1;
+        let d = x - self.mean;
+        self.mean += d / self.count as f64;
+        self.m2 += d * (x - self.mean);
+        self.last = x;
+    }
+
+    /// Reverse Welford update: `x` leaves the window. At the empty point
+    /// the moments reset exactly, cancelling accumulated float drift —
+    /// the same contract [`Moments`] eviction keeps.
+    #[inline]
+    pub(crate) fn evict(&mut self, x: f64) {
+        debug_assert!(self.count > 0, "evict from empty anomaly window");
+        self.count = self.count.saturating_sub(1);
+        if self.count == 0 {
+            self.mean = 0.0;
+            self.m2 = 0.0;
+        } else {
+            let old_mean = self.mean;
+            self.mean = (old_mean * (self.count + 1) as f64 - x) / self.count as f64;
+            self.m2 -= (x - old_mean) * (x - self.mean);
+        }
+    }
+
+    /// Current z-score of the last observation (`None` on an empty
+    /// window; `0.0` when the window has no spread).
+    #[inline]
+    pub(crate) fn value(&self) -> Option<f64> {
+        if self.count == 0 {
+            return None;
+        }
+        // reverse updates can leave m2 a hair below zero: clamp
+        let var = (self.m2 / self.count as f64).max(0.0);
+        if var <= 0.0 {
+            return Some(0.0);
+        }
+        Some((self.last - self.mean) / var.sqrt())
+    }
+
+    /// Severity band of the current score: `0` = nominal, `1..=3` = the
+    /// number of thresholds (3σ/4σ/5σ by default) the |z| clears.
+    pub fn severity(&self) -> Option<u8> {
+        let z = self.value()?;
+        Some(crate::agg::severity(z, &self.bands))
+    }
 }
 
 /// Monotonic deque entry for min/max.
 #[derive(Debug, Clone, PartialEq)]
 pub struct MonoEntry {
-    seq: u64,
-    value: f64,
+    pub(crate) seq: u64,
+    pub(crate) value: f64,
 }
 
 /// Serializable, incrementally-updatable aggregation state.
@@ -38,6 +151,9 @@ pub enum AggState {
     /// would conflate two values — acceptable at fraud-profile
     /// cardinalities (~1e5 ⇒ collision odds ~1e-9).
     Distinct(std::collections::BTreeMap<u64, u32>),
+    /// ANOMALY_SCORE: Welford online mean/variance surfacing the z-score
+    /// of the most recent observation, with severity bands.
+    Anomaly(Welford),
 }
 
 impl AggState {
@@ -56,6 +172,19 @@ impl AggState {
                 deque: VecDeque::new(),
             },
             AggKind::CountDistinct => AggState::Distinct(Default::default()),
+            AggKind::AnomalyScore => AggState::Anomaly(Welford::default()),
+        }
+    }
+
+    /// Empty state for `kind` with explicit ANOMALY_SCORE severity bands
+    /// (other kinds ignore `bands`).
+    pub fn new_banded(kind: AggKind, bands: [f64; 3]) -> AggState {
+        match kind {
+            AggKind::AnomalyScore => AggState::Anomaly(Welford {
+                bands,
+                ..Welford::default()
+            }),
+            _ => AggState::new(kind),
         }
     }
 
@@ -88,6 +217,7 @@ impl AggState {
             AggState::Distinct(map) => {
                 *map.entry(raw_hash).or_insert(0) += 1;
             }
+            AggState::Anomaly(w) => w.add(value),
         }
     }
 
@@ -115,12 +245,16 @@ impl AggState {
             }
             AggState::Distinct(map) => {
                 if let Some(c) = map.get_mut(&raw_hash) {
-                    *c -= 1;
+                    // a hash evicted more times than added (corrupt replay
+                    // input) must not wrap to ~4e9 distinct in release
+                    debug_assert!(*c > 0, "distinct evict below zero multiplicity");
+                    *c = c.saturating_sub(1);
                     if *c == 0 {
                         map.remove(&raw_hash);
                     }
                 }
             }
+            AggState::Anomaly(w) => w.evict(value),
         }
     }
 
@@ -128,29 +262,10 @@ impl AggState {
     /// function has no identity, e.g. MIN/AVG of nothing).
     pub fn value(&self) -> Option<f64> {
         match self {
-            AggState::Moments(kind, m) => match kind {
-                AggKind::Count => Some(m.count as f64),
-                AggKind::Sum => Some(m.sum),
-                AggKind::Avg => {
-                    if m.count == 0 {
-                        None
-                    } else {
-                        Some(m.sum / m.count as f64)
-                    }
-                }
-                AggKind::StdDev => {
-                    if m.count == 0 {
-                        None
-                    } else {
-                        let mean = m.sum / m.count as f64;
-                        let var = (m.sumsq / m.count as f64 - mean * mean).max(0.0);
-                        Some(var.sqrt())
-                    }
-                }
-                _ => unreachable!("non-moment kind in Moments"),
-            },
+            AggState::Moments(kind, m) => m.value_of(*kind),
             AggState::Extremum { deque, .. } => deque.front().map(|e| e.value),
             AggState::Distinct(map) => Some(map.len() as f64),
+            AggState::Anomaly(w) => w.value(),
         }
     }
 
@@ -160,6 +275,7 @@ impl AggState {
             AggState::Moments(..) => 1,
             AggState::Extremum { deque, .. } => deque.len(),
             AggState::Distinct(map) => map.len(),
+            AggState::Anomaly(..) => 1,
         }
     }
 
@@ -190,6 +306,16 @@ impl AggState {
                 for (h, c) in map {
                     varint::write_u64(out, *h);
                     varint::write_u32(out, *c);
+                }
+            }
+            AggState::Anomaly(w) => {
+                out.push(AggKind::AnomalyScore.tag());
+                varint::write_u64(out, w.count);
+                out.extend_from_slice(&w.mean.to_bits().to_le_bytes());
+                out.extend_from_slice(&w.m2.to_bits().to_le_bytes());
+                out.extend_from_slice(&w.last.to_bits().to_le_bytes());
+                for b in &w.bands {
+                    out.extend_from_slice(&b.to_bits().to_le_bytes());
                 }
             }
         }
@@ -240,6 +366,23 @@ impl AggState {
                     map.insert(h, c);
                 }
                 AggState::Distinct(map)
+            }
+            AggKind::AnomalyScore => {
+                let count = varint::read_u64(buf, pos)?;
+                let mean = read_f64(buf, pos)?;
+                let m2 = read_f64(buf, pos)?;
+                let last = read_f64(buf, pos)?;
+                let mut bands = [0.0; 3];
+                for b in &mut bands {
+                    *b = read_f64(buf, pos)?;
+                }
+                AggState::Anomaly(Welford {
+                    count,
+                    mean,
+                    m2,
+                    last,
+                    bands,
+                })
             }
         })
     }
@@ -350,6 +493,7 @@ mod tests {
             AggKind::Max,
             AggKind::StdDev,
             AggKind::CountDistinct,
+            AggKind::AnomalyScore,
         ] {
             let mut st = AggState::new(kind);
             st.add(0, 5.0, 1);
@@ -374,6 +518,7 @@ mod tests {
             AggKind::Max,
             AggKind::StdDev,
             AggKind::CountDistinct,
+            AggKind::AnomalyScore,
         ] {
             let mut st = AggState::new(kind);
             for i in 0..50u64 {
@@ -423,6 +568,7 @@ mod tests {
                     AggKind::Max,
                     AggKind::StdDev,
                     AggKind::CountDistinct,
+                    AggKind::AnomalyScore,
                 ] {
                     let mut st = AggState::new(kind);
                     for (i, v) in vals.iter().enumerate() {
@@ -456,10 +602,26 @@ mod tests {
                                 }
                                 Some(set.len() as f64)
                             }
+                            AggKind::AnomalyScore => {
+                                // batch oracle: z-score of the newest
+                                // observation against the live window's
+                                // population mean/variance
+                                let mean = live.iter().sum::<f64>() / live.len() as f64;
+                                let var = live.iter().map(|v| (v - mean) * (v - mean)).sum::<f64>()
+                                    / live.len() as f64;
+                                if var <= 0.0 {
+                                    Some(0.0)
+                                } else {
+                                    Some((vals[i] as f64 - mean) / var.sqrt())
+                                }
+                            }
                         };
                         let got = st.value();
+                        // z-scores get a looser bound: reverse Welford near
+                        // zero spread amplifies rounding in the ratio
+                        let tol = if kind == AggKind::AnomalyScore { 1e-4 } else { 1e-6 };
                         let ok = match (got, expect) {
-                            (Some(a), Some(b)) => (a - b).abs() < 1e-6,
+                            (Some(a), Some(b)) => (a - b).abs() < tol,
                             (None, None) => true,
                             _ => false,
                         };
@@ -475,4 +637,95 @@ mod tests {
         );
     }
 
+    #[test]
+    fn anomaly_scores_outliers() {
+        let mut st = AggState::new(AggKind::AnomalyScore);
+        // steady baseline around 10 with a little spread
+        for (i, v) in [10.0, 10.5, 9.5, 10.0, 10.2, 9.8, 10.1, 9.9].iter().enumerate() {
+            st.add(i as u64, *v, 0);
+            assert!(st.value().unwrap().abs() < 3.0, "baseline is nominal");
+        }
+        st.add(8, 40.0, 0);
+        let z = st.value().unwrap();
+        assert!(z > 2.5, "spike scores high, got {z}");
+        let AggState::Anomaly(w) = &st else { panic!() };
+        assert!(w.severity().unwrap() >= 1, "spike clears at least one band");
+    }
+
+    #[test]
+    fn anomaly_constant_window_scores_zero() {
+        let mut st = AggState::new(AggKind::AnomalyScore);
+        for i in 0..10u64 {
+            st.add(i, 42.0, 0);
+        }
+        assert_eq!(st.value(), Some(0.0), "no spread ⇒ nominal");
+    }
+
+    /// Drift cancellation: a fully-evicted anomaly window resets its
+    /// moments **exactly**, so the encoded state is bitwise identical to a
+    /// fresh one and later windows start clean.
+    #[test]
+    fn anomaly_empty_window_cancels_drift() {
+        let mut rng = Rng::new(0xD21F7);
+        let mut st = AggState::new_banded(AggKind::AnomalyScore, [2.0, 3.0, 4.0]);
+        let fresh = st.clone();
+        for _ in 0..20 {
+            let vals: Vec<f64> = (0..rng.index(30) + 1)
+                .map(|_| rng.next_f64() * 1000.0 - 300.0)
+                .collect();
+            for (i, v) in vals.iter().enumerate() {
+                st.add(i as u64, *v, 0);
+            }
+            for (i, v) in vals.iter().enumerate() {
+                st.evict(i as u64, *v, 0);
+            }
+            assert_eq!(st.value(), None);
+            let (mut a, mut b) = (Vec::new(), Vec::new());
+            st.encode(&mut a);
+            fresh.encode(&mut b);
+            assert_eq!(a, b, "empty window must encode byte-identical to fresh");
+        }
+    }
+
+    /// Tag-7 state codec: non-default bands and mid-window moments
+    /// roundtrip exactly; old tags are untouched by the new kind.
+    #[test]
+    fn anomaly_codec_roundtrip_with_bands() {
+        let mut st = AggState::new_banded(AggKind::AnomalyScore, [1.5, 2.5, 6.0]);
+        for (i, v) in [3.25, -7.5, 11.0, 0.125].iter().enumerate() {
+            st.add(i as u64, *v, 0);
+        }
+        let mut buf = Vec::new();
+        st.encode(&mut buf);
+        assert_eq!(buf[0], AggKind::AnomalyScore.tag());
+        let mut pos = 0;
+        let back = AggState::decode(&buf, &mut pos).unwrap();
+        assert_eq!(pos, buf.len());
+        assert_eq!(back, st);
+        let AggState::Anomaly(w) = back else { panic!() };
+        assert_eq!(w.bands, [1.5, 2.5, 6.0]);
+        // truncated tag-7 payloads are rejected, not misparsed
+        let mut pos = 0;
+        assert!(AggState::decode(&buf[..buf.len() - 3], &mut pos).is_err());
+    }
+
+    /// Regression: a hash evicted more times than added (corrupt replay
+    /// input — only reachable through a decoded zero-multiplicity entry)
+    /// must not wrap the count to ~4e9 in release builds.
+    #[test]
+    fn distinct_overeviction_saturates() {
+        let mut map = std::collections::BTreeMap::new();
+        map.insert(7u64, 0u32); // corrupt: zero multiplicity
+        let mut st = AggState::Distinct(map);
+        let caught = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            st.evict(0, 0.0, 7);
+        }));
+        if cfg!(debug_assertions) {
+            assert!(caught.is_err(), "debug build asserts on over-eviction");
+        } else {
+            caught.unwrap();
+            assert_eq!(st.value(), Some(0.0), "saturated, not wrapped to ~4e9");
+            assert_eq!(st.footprint(), 0, "zeroed entry is dropped");
+        }
+    }
 }

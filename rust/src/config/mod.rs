@@ -439,7 +439,20 @@ impl StreamDef {
                 delay_ms,
                 ..WindowSpec::sliding(window_ms)
             };
-            metrics.push(MetricSpec::new(mname, agg, field, window, &group_by));
+            let mut spec = MetricSpec::new(mname, agg, field, window, &group_by);
+            if let Some(bands) = m.get("bands") {
+                let arr = bands
+                    .as_arr()
+                    .ok_or_else(|| Error::invalid("metric: 'bands' must be an array"))?;
+                let vals: Vec<f64> = arr.iter().filter_map(|j| j.as_f64()).collect();
+                if vals.len() != 3 || arr.len() != 3 {
+                    return Err(Error::invalid(
+                        "metric: 'bands' must be three numeric severity thresholds",
+                    ));
+                }
+                spec = spec.with_bands([vals[0], vals[1], vals[2]]);
+            }
+            metrics.push(spec);
         }
         let def = StreamDef {
             name,
@@ -543,6 +556,34 @@ mod tests {
         assert_eq!(d.metrics.len(), 2);
         assert_eq!(d.metrics[0].agg, AggKind::Sum);
         assert_eq!(d.schema.len(), 2);
+    }
+
+    #[test]
+    fn anomaly_metric_bands_from_json() {
+        let text = r#"{
+            "name": "payments",
+            "schema": [
+                {"name": "card", "type": "str"},
+                {"name": "amount", "type": "f64"}
+            ],
+            "entities": ["card"],
+            "metrics": [
+                {"name": "z5m", "agg": "anomaly_score", "field": "amount",
+                 "window_ms": 300000, "group_by": ["card"],
+                 "bands": [2.5, 3.5, 4.5]},
+                {"name": "z1h", "agg": "anomaly_score", "field": "amount",
+                 "window_ms": 3600000, "group_by": ["card"]}
+            ]
+        }"#;
+        let d = StreamDef::from_json(&Json::parse(text).unwrap()).unwrap();
+        assert_eq!(d.metrics[0].agg, AggKind::AnomalyScore);
+        assert_eq!(d.metrics[0].bands, Some([2.5, 3.5, 4.5]));
+        assert_eq!(d.metrics[1].bands, None, "bands optional, defaults apply");
+        // malformed band lists are rejected
+        for bad in [r#""bands": [3.0, 4.0]"#, r#""bands": [3.0, 4.0, "x"]"#] {
+            let t = text.replace(r#""bands": [2.5, 3.5, 4.5]"#, bad);
+            assert!(StreamDef::from_json(&Json::parse(&t).unwrap()).is_err(), "{bad}");
+        }
     }
 
     #[test]

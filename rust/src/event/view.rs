@@ -320,9 +320,19 @@ impl<'a> EventView<'a> {
         // offsets only exist for buffers scan_values validated; re-reads
         // along them cannot fail
         match self.schema.fields()[idx].ftype {
-            FieldType::Str => ValueRef::Str(
-                varint::read_str(self.buf, &mut pos).expect("validated by scan_values"),
-            ),
+            FieldType::Str => {
+                let bytes =
+                    varint::read_bytes(self.buf, &mut pos).expect("validated by scan_values");
+                debug_assert!(std::str::from_utf8(bytes).is_ok());
+                // SAFETY: `offsets` exist only for buffers accepted by
+                // `codec::scan_values`, whose Str check runs
+                // `varint::read_str` — full UTF-8 validation — over these
+                // exact bytes. The buffer is borrowed immutably for the
+                // view's lifetime, so the bytes cannot have changed since
+                // that validation; re-validating on every access would put
+                // an O(len) scan on the group-key/display hot path.
+                ValueRef::Str(unsafe { std::str::from_utf8_unchecked(bytes) })
+            }
             FieldType::I64 => ValueRef::I64(
                 varint::read_i64(self.buf, &mut pos).expect("validated by scan_values"),
             ),

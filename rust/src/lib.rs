@@ -78,6 +78,16 @@
 //! server-side stage breakdown next to the external latency
 //! percentiles so inside and outside views line up in one run.
 //!
+//! ## Unsafe code
+//!
+//! Outside the raw epoll/eventfd syscall bindings in [`net::poll`], the
+//! crate contains exactly one `unsafe` block — the first on the data
+//! path: [`event::EventView::value_at`] skips re-running UTF-8
+//! validation on `Str` field access (`from_utf8_unchecked`), justified
+//! by the ingest-time invariant that view offsets exist only for
+//! buffers `codec::scan_values` already validated — including UTF-8 —
+//! and guarded by a `debug_assert`.
+//!
 //! ## Recovery contract
 //!
 //! A restarted task processor must converge on the same state, and

@@ -4,8 +4,10 @@
 //! The pre-interning hot path re-rendered every group on every reply
 //! (`Vec<String>` + `join`) and keyed the state cache by freshly-composed
 //! `Vec<u8>`s. The interner collapses all of that to **one hash lookup
-//! per (event, group node)**: `Plan::dispatch` builds the group's key
-//! bytes in a reusable scratch buffer, resolves them to a dense
+//! per (event, group node)**: the plan's gather dispatch builds the
+//! group's key bytes in a reusable scratch buffer — prefixed with the
+//! group-node index as a salt, so colliding byte tuples from different
+//! group nodes cannot share an entry — resolves them to a dense
 //! [`GroupId`], and everything downstream — state slab indexing, reply
 //! routing, display rendering — works with the `u32` id. The interner
 //! owns the canonical key bytes (the map keys) and the display string,

@@ -23,6 +23,24 @@
 //! while iterator positions carry over between evaluations and
 //! state-store write-throughs are coalesced across the batch.
 //!
+//! ## Gather → kernel evaluation
+//!
+//! Dispatch does not mutate aggregation states inline. It **gathers**
+//! each batch's `(seq, value, raw_hash)` rows into columnar run buffers
+//! — one run per (metric, state slot) touched, so consecutive events
+//! for the same group land contiguously — and a flush pass applies each
+//! run through [`crate::agg::kernel`]'s tight slice loops, then walks
+//! an ordered emit log to stream replies exactly as inline evaluation
+//! would have. The enum dispatch, slot resolution and per-row aggregate
+//! value computation are paid once per run instead of once per row.
+//! Run buffers and the emit log are **reused across batches** (recycled
+//! through a pool — cleared, never deallocated), so gathering allocates
+//! nothing in steady state; a slot holding a gathered run is pinned in
+//! the state store until the flush applies it. Kernels accumulate in
+//! row order (no float reassociation), keeping replies and persisted
+//! states byte-identical to per-event evaluation — see
+//! `rust/tests/batch_equivalence.rs`.
+//!
 //! ## Zero allocations per event (steady state)
 //!
 //! The per-event evaluation path allocates nothing once every live group
@@ -59,11 +77,12 @@ pub use expr::{CmpOp, CompiledExpr, FilterExpr};
 pub use interner::{GroupId, GroupInterner};
 pub use statestore::StateStore;
 
-use crate::agg::{AggKind, AggState};
+use crate::agg::{kernel, AggKind, AggState, DEFAULT_BANDS};
 use crate::error::{Error, Result};
 use crate::event::{EventRead, SchemaRef, Value};
 use crate::reservoir::{ResIterator, Reservoir};
 use crate::util::clock::TimestampMs;
+use crate::util::varint;
 use crate::window::WindowSpec;
 use std::fmt::Write as _;
 
@@ -82,6 +101,9 @@ pub struct MetricSpec {
     pub group_by: Vec<String>,
     /// Optional pre-aggregation filter.
     pub filter: Option<FilterExpr>,
+    /// ANOMALY_SCORE severity bands in σ units (`None` = 3σ/4σ/5σ);
+    /// ignored by every other aggregation.
+    pub bands: Option<[f64; 3]>,
 }
 
 impl MetricSpec {
@@ -100,12 +122,19 @@ impl MetricSpec {
             window,
             group_by: group_by.iter().map(|s| s.to_string()).collect(),
             filter: None,
+            bands: None,
         }
     }
 
     /// Attach a filter.
     pub fn with_filter(mut self, f: FilterExpr) -> MetricSpec {
         self.filter = Some(f);
+        self
+    }
+
+    /// Configure ANOMALY_SCORE severity bands (σ thresholds, ascending).
+    pub fn with_bands(mut self, bands: [f64; 3]) -> MetricSpec {
+        self.bands = Some(bands);
         self
     }
 }
@@ -223,6 +252,11 @@ struct AggNode {
     metric_id: u32,
     kind: AggKind,
     field_idx: Option<usize>,
+    /// Owning group node — salts the intern key, and lets the query path
+    /// rebuild the salted key for lookups.
+    group_idx: usize,
+    /// ANOMALY_SCORE severity bands baked into fresh states.
+    bands: [f64; 3],
 }
 
 struct GroupNode {
@@ -256,12 +290,104 @@ struct Topo {
     metric_names: Vec<String>,
 }
 
+/// `run_of` sentinel: this slot has no gathered run. In the emit log it
+/// additionally marks a reply whose (metric, group) has no state
+/// anywhere — the value is `None` without touching a run.
+const NO_RUN: u32 = u32::MAX;
+
+/// A maximal stretch of equally-shaped rows within a run: all additions
+/// or all evictions, all emitting replies or none.
+struct RunSeg {
+    add: bool,
+    emit: bool,
+    len: u32,
+}
+
+/// Pending columnar updates for one (metric, state slot): parallel
+/// `(seq, value, raw_hash, include)` columns in dispatch order, split
+/// into [`RunSeg`]s and flushed through the batch kernels.
+#[derive(Default)]
+struct Run {
+    slot: u32,
+    segs: Vec<RunSeg>,
+    seqs: Vec<u64>,
+    vals: Vec<f64>,
+    hashes: Vec<u64>,
+    /// Row participates in the aggregate (SQL null semantics); excluded
+    /// rows exist only to read the current value for their reply.
+    incl: Vec<bool>,
+    /// Post-row aggregate values of emitting rows, filled by the flush.
+    out: Vec<Option<f64>>,
+    /// Emitting rows gathered so far (= the next row's `out` index).
+    n_emit: u32,
+    /// At least one row mutates the state (persistence is skipped for
+    /// read-only runs, like the scalar path's `value()` reads).
+    mutated: bool,
+}
+
+impl Run {
+    /// Re-arm a pooled (or fresh) buffer for `slot`: row columns empty,
+    /// capacity retained.
+    fn reset(&mut self, slot: u32) {
+        self.slot = slot;
+        self.segs.clear();
+        self.seqs.clear();
+        self.vals.clear();
+        self.hashes.clear();
+        self.incl.clear();
+        self.out.clear();
+        self.n_emit = 0;
+        self.mutated = false;
+    }
+
+    fn push_row(&mut self, add: bool, emit: bool, seq: u64, val: f64, hash: u64, include: bool) {
+        match self.segs.last_mut() {
+            Some(s) if s.add == add && s.emit == emit => s.len += 1,
+            _ => self.segs.push(RunSeg { add, emit, len: 1 }),
+        }
+        self.seqs.push(seq);
+        self.vals.push(val);
+        self.hashes.push(hash);
+        self.incl.push(include);
+    }
+}
+
+/// One sink callback recorded during gather, replayed in order by the
+/// flush — the reply stream is byte-identical to inline evaluation.
+enum EmitLogEntry {
+    /// `sink.push` of one metric reply; the value is
+    /// `runs[run].out[out_idx]`, or `None` when `run == NO_RUN`.
+    Reply {
+        run: u32,
+        out_idx: u32,
+        metric_id: u32,
+        group: GroupId,
+        event_ts: TimestampMs,
+    },
+    /// `sink.event_done` of a successfully gathered evaluation.
+    EventDone(TimestampMs),
+}
+
+/// Reusable gather buffers: live runs in creation order, a recycling
+/// pool, the slot→run index and the ordered emit log. All four are
+/// drained by the flush and reused by the next batch — no per-batch
+/// allocation in steady state.
+#[derive(Default)]
+struct GatherBufs {
+    runs: Vec<Run>,
+    pool: Vec<Run>,
+    /// Slot id → index into `runs` (`NO_RUN` when none), lazily sized.
+    run_of: Vec<u32>,
+    emit_log: Vec<EmitLogEntry>,
+}
+
 /// A compiled plan over one task processor's reservoir + state store.
 pub struct Plan {
     topo: Topo,
     bundles: Vec<Bundle>,
     state: StateStore,
     interner: GroupInterner,
+    gather: GatherBufs,
     last_t_eval: TimestampMs,
     key_scratch: Vec<u8>,
 }
@@ -288,6 +414,7 @@ impl Plan {
             bundles: Vec::new(),
             state,
             interner: GroupInterner::new(),
+            gather: GatherBufs::default(),
             last_t_eval: i64::MIN,
             key_scratch: Vec::with_capacity(64),
         };
@@ -393,8 +520,13 @@ impl Plan {
             metric_id,
             kind: spec.agg,
             field_idx,
+            group_idx: g_idx,
+            bands: spec.bands.unwrap_or(DEFAULT_BANDS),
         });
         let a_idx = self.topo.aggs.len() - 1;
+        // one agg node per metric, pushed in registration order — the
+        // query path relies on aggs[metric_id] being this metric's node
+        debug_assert_eq!(a_idx as u32, metric_id);
         self.topo.groups[g_idx].aggs.push(a_idx);
         Ok(metric_id)
     }
@@ -431,6 +563,20 @@ impl Plan {
         t_eval: TimestampMs,
         sink: &mut S,
     ) -> Result<()> {
+        let gathered = self.gather_eval(t_eval);
+        // flush even when the gather failed: the replies of the gathered
+        // prefix must still reach the sink, and pinned slots release
+        let flushed = self.flush_runs(sink);
+        gathered.and(flushed)
+    }
+
+    /// Gather one evaluation's rows into the columnar run buffers
+    /// without applying them. On success the emit log gains the
+    /// evaluation's replies and its `event_done`; on failure the rows
+    /// gathered so far stay pending — the caller must still
+    /// [`flush_runs`](Plan::flush_runs) to release pinned slots and
+    /// deliver the successfully gathered prefix.
+    fn gather_eval(&mut self, t_eval: TimestampMs) -> Result<()> {
         if t_eval < self.last_t_eval {
             return Err(Error::invalid(format!(
                 "advance: t_eval went backwards ({t_eval} < {})",
@@ -460,15 +606,17 @@ impl Plan {
                 let topo = &self.topo;
                 let state = &mut self.state;
                 let interner = &mut self.interner;
+                let gather = &mut self.gather;
                 let scratch = &mut self.key_scratch;
                 let subs = &b.subs;
                 let mut inner_err: Option<Error> = None;
                 let stepped = b.iter.next(|seq, event| {
                     for (w_idx, role) in subs {
-                        if let Err(e) = dispatch(
+                        if let Err(e) = gather_dispatch(
                             topo,
                             state,
                             interner,
+                            gather,
                             scratch,
                             *w_idx,
                             *role,
@@ -476,7 +624,6 @@ impl Plan {
                             event,
                             emit,
                             None,
-                            sink,
                         ) {
                             inner_err = Some(e);
                             return;
@@ -502,14 +649,85 @@ impl Plan {
             return Err(e);
         }
         self.last_t_eval = t_eval;
-        sink.event_done(
-            &ReplyCtx {
-                topo: &self.topo,
-                interner: &self.interner,
-            },
-            t_eval,
-        );
+        self.gather.emit_log.push(EmitLogEntry::EventDone(t_eval));
         Ok(())
+    }
+
+    /// Apply every gathered run through the batch kernels
+    /// ([`crate::agg::kernel`]) and replay the emit log into `sink`.
+    /// Always drains the gather buffers completely — every pinned slot
+    /// releases even when a run fails to persist (the first error is
+    /// reported after the walk) — and recycles the run buffers into the
+    /// pool for the next batch.
+    fn flush_runs<S: ReplySink + ?Sized>(&mut self, sink: &mut S) -> Result<()> {
+        let mut first_err: Option<Error> = None;
+        let mut runs = std::mem::take(&mut self.gather.runs);
+        for run in &mut runs {
+            self.gather.run_of[run.slot as usize] = NO_RUN;
+            let res = self.state.apply_run(run.slot, run.mutated, |st| {
+                let mut start = 0usize;
+                for seg in &run.segs {
+                    let end = start + seg.len as usize;
+                    let seqs = &run.seqs[start..end];
+                    let vals = &run.vals[start..end];
+                    let hashes = &run.hashes[start..end];
+                    if seg.emit {
+                        kernel::add_run_emit(
+                            st,
+                            seqs,
+                            vals,
+                            hashes,
+                            &run.incl[start..end],
+                            &mut run.out,
+                        );
+                    } else if seg.add {
+                        kernel::add_run(st, seqs, vals, hashes);
+                    } else {
+                        kernel::evict_run(st, seqs, vals, hashes);
+                    }
+                    start = end;
+                }
+            });
+            if let Err(e) = res {
+                first_err.get_or_insert(e);
+            }
+        }
+        let ctx = ReplyCtx {
+            topo: &self.topo,
+            interner: &self.interner,
+        };
+        for entry in self.gather.emit_log.drain(..) {
+            match entry {
+                EmitLogEntry::Reply {
+                    run,
+                    out_idx,
+                    metric_id,
+                    group,
+                    event_ts,
+                } => {
+                    let value = if run == NO_RUN {
+                        None
+                    } else {
+                        runs[run as usize].out[out_idx as usize]
+                    };
+                    sink.push(
+                        &ctx,
+                        MetricReply {
+                            metric_id,
+                            group_id: group,
+                            value,
+                            event_ts,
+                        },
+                    );
+                }
+                EmitLogEntry::EventDone(t) => sink.event_done(&ctx, t),
+            }
+        }
+        self.gather.pool.append(&mut runs);
+        match first_err {
+            Some(e) => Err(e),
+            None => Ok(()),
+        }
     }
 
     /// [`Plan::advance_into`] with collected, display-resolved replies —
@@ -528,10 +746,13 @@ impl Plan {
     /// **Every window is still evaluated at every event timestamp** —
     /// batching changes none of the paper's per-event accuracy semantics.
     /// What it amortizes: the iterator bundles keep their positions
-    /// between consecutive evaluations (no re-seek), and state-store
-    /// write-throughs are deferred and coalesced so a group touched by
-    /// many events in the batch is persisted once
-    /// ([`StateStore::begin_deferred`]).
+    /// between consecutive evaluations (no re-seek), dispatch gathers the
+    /// whole batch's rows into columnar runs applied through the batch
+    /// kernels in one flush (so a group touched by many events pays slot
+    /// resolution and kernel dispatch once), and state-store
+    /// write-throughs are deferred and coalesced so that group is also
+    /// persisted once ([`StateStore::begin_deferred`]). Replies still
+    /// reach `sink` in exact per-event order.
     ///
     /// On error, the sink has received the replies of the successfully
     /// evaluated prefix (so callers can still publish them), and the
@@ -547,18 +768,20 @@ impl Plan {
         self.state.begin_deferred();
         let mut failed: Option<Error> = None;
         for &t_eval in t_evals {
-            if let Err(e) = self.advance_into(t_eval, sink) {
+            if let Err(e) = self.gather_eval(t_eval) {
                 failed = Some(e);
                 break;
             }
         }
-        // flush coalesced writes even on failure: the kvstore must not
-        // lag the cache for states already mutated by this batch
+        // apply + emit the gathered prefix even on failure, then flush
+        // the coalesced writes: the kvstore must not lag the cache for
+        // states already mutated by this batch
+        let applied = self.flush_runs(sink);
         let flushed = self.state.end_deferred();
         if let Some(e) = failed {
             return Err(e);
         }
-        flushed
+        applied.and(flushed)
     }
 
     /// Add a metric at runtime and **backfill** its state from the
@@ -580,29 +803,38 @@ impl Plan {
             .iter()
             .position(|w| w.spec == spec.window)
             .expect("window registered above");
-        // replay history into this metric only, via temp iterators
-        for (offset, role) in [
+        // replay history into this metric only, via temp iterators; the
+        // rows gather like any batch and flush through the kernels once
+        // both passes finish (add rows precede evict rows in each run,
+        // matching the pass order)
+        let mut gathered: Result<()> = Ok(());
+        'passes: for (offset, role) in [
             (spec.window.tail_offset(), Role::Arrive),
             (spec.window.head_offset(), Role::Expire),
         ] {
             let bound = self.last_t_eval - offset;
             let mut it = reservoir.iterator_at(0);
             loop {
-                match it.peek_ts()? {
-                    Some(ts) if ts < bound => {}
-                    _ => break,
+                match it.peek_ts() {
+                    Ok(Some(ts)) if ts < bound => {}
+                    Ok(_) => break,
+                    Err(e) => {
+                        gathered = Err(e);
+                        break 'passes;
+                    }
                 }
                 let topo = &self.topo;
                 let state = &mut self.state;
                 let interner = &mut self.interner;
+                let gather = &mut self.gather;
                 let scratch = &mut self.key_scratch;
                 let mut inner_err: Option<Error> = None;
-                let mut sink = ();
-                it.next(|seq, event| {
-                    if let Err(e) = dispatch(
+                let stepped = it.next(|seq, event| {
+                    if let Err(e) = gather_dispatch(
                         topo,
                         state,
                         interner,
+                        gather,
                         scratch,
                         w_idx,
                         role,
@@ -610,13 +842,17 @@ impl Plan {
                         event,
                         false,
                         Some(metric_id),
-                        &mut sink,
                     ) {
                         inner_err = Some(e);
                     }
-                })?;
+                });
                 if let Some(e) = inner_err {
-                    return Err(e);
+                    gathered = Err(e);
+                    break 'passes;
+                }
+                if let Err(e) = stepped {
+                    gathered = Err(e);
+                    break 'passes;
                 }
             }
             // a freshly-created bundle must start where the backfill ended
@@ -626,6 +862,9 @@ impl Plan {
                 }
             }
         }
+        // flush even on failure so pinned slots release
+        let flushed = self.flush_runs(&mut ());
+        gathered.and(flushed)?;
         Ok(metric_id)
     }
 
@@ -638,16 +877,22 @@ impl Plan {
             .position(|n| n == metric)
             .ok_or_else(|| Error::not_found(format!("metric '{metric}'")))?
             as u32;
+        // rebuild the salted intern key (group-node index prefix); the
+        // salt is stripped again for state-store keys, which stay in the
+        // on-disk format
+        let g_idx = self.topo.aggs[metric_id as usize].group_idx;
         let mut key = Vec::with_capacity(32);
+        varint::write_u32(&mut key, g_idx as u32);
+        let salt_len = key.len();
         for v in group_values {
             v.key_bytes(&mut key);
             key.push(0x1f);
         }
         match self.interner.lookup(&key) {
-            Some(group) => self.state.value(metric_id, group, &key),
+            Some(group) => self.state.value(metric_id, group, &key[salt_len..]),
             // a group this plan instance never dispatched can only exist
             // as a persisted state in a reopened kvstore
-            None => self.state.value_by_key(metric_id, &key),
+            None => self.state.value_by_key(metric_id, &key[salt_len..]),
         }
     }
 
@@ -752,14 +997,18 @@ fn render_group<E: EventRead + ?Sized>(gnode: &GroupNode, event: &E) -> String {
     s
 }
 
-/// Route one event through a window node's sub-DAG. Generic over
-/// [`EventRead`]: the data plane dispatches borrowed reservoir views
-/// (`EventView`), while tests and oracles dispatch owned `Event`s.
+/// Route one event through a window node's sub-DAG, **gathering** its
+/// rows into the columnar run buffers instead of mutating states
+/// inline; [`Plan::flush_runs`] applies them through the batch kernels.
+/// Generic over [`EventRead`]: the data plane dispatches borrowed
+/// reservoir views (`EventView`), while tests and oracles dispatch
+/// owned `Event`s.
 #[allow(clippy::too_many_arguments)]
-fn dispatch<S: ReplySink + ?Sized, E: EventRead + ?Sized>(
+fn gather_dispatch<E: EventRead + ?Sized>(
     topo: &Topo,
     state: &mut StateStore,
     interner: &mut GroupInterner,
+    gather: &mut GatherBufs,
     scratch: &mut Vec<u8>,
     w_idx: usize,
     role: Role,
@@ -767,7 +1016,6 @@ fn dispatch<S: ReplySink + ?Sized, E: EventRead + ?Sized>(
     event: &E,
     emit: bool,
     only_metric: Option<u32>,
-    sink: &mut S,
 ) -> Result<()> {
     let win = &topo.windows[w_idx];
     for &f_idx in &win.filters {
@@ -780,8 +1028,15 @@ fn dispatch<S: ReplySink + ?Sized, E: EventRead + ?Sized>(
         for &g_idx in &fnode.groups {
             let gnode = &topo.groups[g_idx];
             // group key: field key-bytes joined by 0x1f separators,
-            // hashed once by the interner and resolved to a dense id
+            // hashed once by the interner and resolved to a dense id.
+            // The group-node index salts the interned bytes (varint
+            // prefix), so colliding byte tuples from differently-typed
+            // field sets cannot share a display string; the salt is
+            // stripped before the key reaches the state store, keeping
+            // the on-disk key format unchanged.
             scratch.clear();
+            varint::write_u32(scratch, g_idx as u32);
+            let salt_len = scratch.len();
             for &idx in &gnode.field_idxs {
                 event.value_ref(idx).key_bytes(scratch);
                 scratch.push(0x1f);
@@ -806,34 +1061,60 @@ fn dispatch<S: ReplySink + ?Sized, E: EventRead + ?Sized>(
                         group_key_len,
                     ),
                 };
+                let emitting = emit && role == Role::Arrive;
+                if !include && !emitting {
+                    // the scalar path only did a read-only value() here;
+                    // nothing to gather
+                    continue;
+                }
                 let kind = anode.kind;
-                let value = if include {
-                    state.update(
-                        anode.metric_id,
-                        group,
-                        &scratch[..group_key_len],
-                        || AggState::new(kind),
-                        |st| match role {
-                            Role::Arrive => st.add(seq, val, raw_hash),
-                            Role::Expire => st.evict(seq, val, raw_hash),
-                        },
-                    )?
+                let bands = anode.bands;
+                let group_key = &scratch[salt_len..group_key_len];
+                let slot = if include {
+                    let mut init = || AggState::new_banded(kind, bands);
+                    state.gather_slot(anode.metric_id, group, group_key, Some(&mut init))?
                 } else {
-                    state.value(anode.metric_id, group, &scratch[..group_key_len])?
+                    state.gather_slot(anode.metric_id, group, group_key, None)?
                 };
-                if emit && role == Role::Arrive {
-                    sink.push(
-                        &ReplyCtx {
-                            topo,
-                            interner: &*interner,
-                        },
-                        MetricReply {
-                            metric_id: anode.metric_id,
-                            group_id: group,
-                            value,
-                            event_ts: event.timestamp(),
-                        },
-                    );
+                let Some(slot) = slot else {
+                    // excluded row over a state that exists nowhere: the
+                    // reply value is None, recorded without a run
+                    gather.emit_log.push(EmitLogEntry::Reply {
+                        run: NO_RUN,
+                        out_idx: 0,
+                        metric_id: anode.metric_id,
+                        group,
+                        event_ts: event.timestamp(),
+                    });
+                    continue;
+                };
+                // resolve (or start) this slot's run
+                let s = slot as usize;
+                if gather.run_of.len() <= s {
+                    gather.run_of.resize(s + 1, NO_RUN);
+                }
+                let mut r = gather.run_of[s];
+                if r == NO_RUN {
+                    r = gather.runs.len() as u32;
+                    gather.run_of[s] = r;
+                    let mut run = gather.pool.pop().unwrap_or_default();
+                    run.reset(slot);
+                    gather.runs.push(run);
+                }
+                let run = &mut gather.runs[r as usize];
+                run.push_row(role == Role::Arrive, emitting, seq, val, raw_hash, include);
+                if include {
+                    run.mutated = true;
+                }
+                if emitting {
+                    gather.emit_log.push(EmitLogEntry::Reply {
+                        run: r,
+                        out_idx: run.n_emit,
+                        metric_id: anode.metric_id,
+                        group,
+                        event_ts: event.timestamp(),
+                    });
+                    run.n_emit += 1;
                 }
             }
         }

@@ -70,6 +70,11 @@ struct Slot {
     /// Second-chance bit: set on every touch, cleared by the clock
     /// sweep; an unreferenced slot is the next eviction victim.
     referenced: bool,
+    /// Slot holds a pending gather run ([`StateStore::gather_slot`]):
+    /// the clock sweep must not evict it, or the plan's slot→run
+    /// linkage would dangle mid-batch. Cleared by
+    /// [`StateStore::apply_run`].
+    pinned: bool,
 }
 
 /// Cached, persistent aggregation states keyed by `(metric_id, GroupId)`.
@@ -222,6 +227,7 @@ impl StateStore {
                 s.dirty = false;
                 s.live = true;
                 s.referenced = true;
+                s.pinned = false;
                 id
             }
             None => {
@@ -234,6 +240,7 @@ impl StateStore {
                     dirty: false,
                     live: true,
                     referenced: true,
+                    pinned: false,
                 });
                 id
             }
@@ -275,7 +282,7 @@ impl StateStore {
                     continue;
                 }
                 let slot = &mut self.slots[id as usize];
-                if !slot.live {
+                if !slot.live || slot.pinned {
                     continue;
                 }
                 if slot.referenced {
@@ -319,6 +326,7 @@ impl StateStore {
         slot.live = false;
         slot.dirty = false;
         slot.referenced = false;
+        slot.pinned = false;
         // drop the heavy payloads now, not at recycling time
         slot.state = AggState::new(AggKind::Count);
         slot.key = Box::default();
@@ -363,6 +371,64 @@ impl StateStore {
             self.kv_writes += 1;
         }
         Ok(value)
+    }
+
+    /// Resolve `(metric_id, group)` to a slot for a gather pass — the
+    /// batch path's replacement for per-event [`StateStore::update`]
+    /// resolution. Same semantics as the internal load: a spilled state
+    /// reloads from the kvstore; with `init` None, a state that exists
+    /// nowhere resolves to `Ok(None)`.
+    ///
+    /// The returned slot is **pinned**: the clock sweep will not evict it
+    /// until its gathered run is applied via [`StateStore::apply_run`],
+    /// so the caller's slot→run linkage stays valid for the whole batch.
+    /// Every pinned slot must therefore see exactly one `apply_run`
+    /// before the next insert-heavy workload, or it stays unevictable.
+    pub(crate) fn gather_slot(
+        &mut self,
+        metric_id: u32,
+        group: GroupId,
+        group_key: &[u8],
+        init: Option<&mut dyn FnMut() -> AggState>,
+    ) -> Result<Option<u32>> {
+        let slot = self.load_slot(metric_id, group, group_key, init)?;
+        if let Some(id) = slot {
+            self.slots[id as usize].pinned = true;
+        }
+        Ok(slot)
+    }
+
+    /// Apply a gathered run to a pinned slot's state and release the pin.
+    /// With `mutated` set the slot then persists exactly like an
+    /// [`StateStore::update`] (write-through, or dirty-mark in deferred
+    /// mode); a read-only run (every row excluded by null semantics)
+    /// skips persistence, like the scalar path's `value()` reads did.
+    pub(crate) fn apply_run<R>(
+        &mut self,
+        id: u32,
+        mutated: bool,
+        f: impl FnOnce(&mut AggState) -> R,
+    ) -> Result<R> {
+        let slot = &mut self.slots[id as usize];
+        debug_assert!(slot.live && slot.pinned, "apply_run on an unpinned slot");
+        slot.pinned = false;
+        let r = f(&mut slot.state);
+        if !mutated {
+            return Ok(r);
+        }
+        if self.deferred {
+            // coalesced write-through: persist once at end_deferred
+            if !slot.dirty {
+                slot.dirty = true;
+                self.dirty.push(id);
+            }
+        } else {
+            self.scratch.clear();
+            slot.state.encode(&mut self.scratch);
+            self.store.put(&slot.key, &self.scratch)?;
+            self.kv_writes += 1;
+        }
+        Ok(r)
     }
 
     /// Read the current aggregate value for `(metric_id, group)` (no
@@ -696,6 +762,43 @@ mod tests {
                 "g{i}"
             );
         }
+    }
+
+    #[test]
+    fn pinned_slots_survive_the_eviction_sweep() {
+        let (_tmp, mut ss) = setup(16);
+        let mut init = || AggState::new(AggKind::Sum);
+        let pinned = ss
+            .gather_slot(1, GroupId(0), b"pinned", Some(&mut init))
+            .unwrap()
+            .expect("init always yields a slot");
+        // flood the cache far past capacity: the pinned slot is the
+        // oldest, coldest slot, yet must never be chosen as a victim
+        for i in 0..100u32 {
+            add(&mut ss, 1, i + 1, format!("filler_{i}").as_bytes(), 0, 1.0);
+        }
+        assert!(ss.cached_states() <= 16);
+        // the slot is still live and holds the same state: applying the
+        // deferred run lands on it, then releases the pin
+        ss.apply_run(pinned, true, |st| st.add(0, 4.0, 0)).unwrap();
+        assert_eq!(ss.value(1, GroupId(0), b"pinned").unwrap(), Some(4.0));
+        // unpinned now: heavy churn may spill it like any other slot,
+        // and the persisted state must survive the round-trip
+        for i in 0..100u32 {
+            add(&mut ss, 1, i + 101, format!("late_{i}").as_bytes(), 0, 1.0);
+        }
+        assert_eq!(ss.value(1, GroupId(0), b"pinned").unwrap(), Some(4.0));
+    }
+
+    #[test]
+    fn apply_run_without_mutation_skips_persistence() {
+        let (_tmp, mut ss) = setup(100);
+        add(&mut ss, 1, 0, b"k", 0, 2.5);
+        let writes = ss.kv_writes;
+        let slot = ss.gather_slot(1, GroupId(0), b"k", None).unwrap().unwrap();
+        let v = ss.apply_run(slot, false, |st| st.value()).unwrap();
+        assert_eq!(v, Some(2.5));
+        assert_eq!(ss.kv_writes, writes, "read-only run writes nothing");
     }
 
     #[test]

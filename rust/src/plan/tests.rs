@@ -605,6 +605,70 @@ fn advance_batch_rejects_time_regression_mid_batch() {
 }
 
 #[test]
+fn colliding_group_keys_across_group_nodes_get_distinct_displays() {
+    // "a\x1fb" under GROUP BY card produces the same key bytes as
+    // ("a", "b") under GROUP BY card, merchant — the 0x1f join is not
+    // injective across group nodes. The group-node salt in the intern
+    // key must keep the two groups (and their display strings) apart.
+    let specs = vec![
+        MetricSpec::new(
+            "by_card",
+            AggKind::Count,
+            None,
+            WindowSpec::sliding(ms::MINUTE),
+            &["card"],
+        ),
+        MetricSpec::new(
+            "by_card_merchant",
+            AggKind::Count,
+            None,
+            WindowSpec::sliding(ms::MINUTE),
+            &["card", "merchant"],
+        ),
+    ];
+    let mut r = rig(&specs);
+    let first = r.feed(ev(0, "a\u{1f}b", "x", 1.0));
+    let second = r.feed(ev(1, "a", "b", 1.0));
+    let one = first.iter().find(|x| x.metric == "by_card").unwrap();
+    assert_eq!(one.group, "a\u{1f}b");
+    let two = second
+        .iter()
+        .find(|x| x.metric == "by_card_merchant")
+        .unwrap();
+    assert_eq!(two.group, "a,b", "colliding bytes must not share a display");
+    assert_eq!(one.value, Some(1.0));
+    assert_eq!(two.value, Some(1.0));
+    // four distinct groups were interned: without the salt, the
+    // colliding pair collapsed into one entry (and one display)
+    assert_eq!(r.plan.interned_groups(), 4);
+}
+
+#[test]
+fn anomaly_score_streams_through_the_plan() {
+    let specs = vec![MetricSpec::new(
+        "amount_anomaly",
+        AggKind::AnomalyScore,
+        Some("amount"),
+        WindowSpec::sliding(5 * ms::MINUTE),
+        &["card"],
+    )
+    .with_bands([2.0, 3.0, 4.0])];
+    let mut r = rig(&specs);
+    for (i, v) in [10.0, 10.4, 9.6, 10.1, 9.9, 10.2].iter().enumerate() {
+        let replies = r.feed(ev(i as i64 * 1000, "c1", "m1", *v));
+        let z = replies[0].value.unwrap();
+        assert!(z.abs() < 2.0, "baseline stays nominal, got {z}");
+    }
+    let replies = r.feed(ev(7_000, "c1", "m1", 50.0));
+    let z = replies[0].value.unwrap();
+    assert!(z > 2.0, "outlier amount scores high, got {z}");
+    // far in the future the old window has fully expired: a fresh
+    // single-observation window has no spread and scores 0
+    let replies = r.feed(ev(20 * ms::MINUTE, "c1", "m1", 10.0));
+    assert_eq!(replies[0].value, Some(0.0));
+}
+
+#[test]
 fn checkpoint_positions_roundtrip() {
     let mut r = rig(&q1_specs());
     for i in 0..40 {

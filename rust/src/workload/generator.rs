@@ -108,6 +108,31 @@ impl FraudGenerator {
             })
             .collect()
     }
+
+    /// Generate a burst of `n` events from the *same* card at `ts` whose
+    /// amounts sit far out on the log-normal tail (≈4σ above the
+    /// configured μ in log space) — the stimulus an `ANOMALY_SCORE`
+    /// metric over `amount` is meant to flag.
+    pub fn anomaly_burst(&mut self, ts: TimestampMs, n: usize, spacing_ms: i64) -> Vec<Event> {
+        let card = "card_anomaly".to_string();
+        let merchant = self.merchants.sample(&mut self.rng);
+        let mu = self.cfg.amount_mu + 4.0 * self.cfg.amount_sigma;
+        let sigma = self.cfg.amount_sigma / 4.0;
+        (0..n)
+            .map(|i| {
+                let amount = self.rng.next_lognormal(mu, sigma);
+                Event::new(
+                    ts + i as i64 * spacing_ms,
+                    vec![
+                        Value::Str(card.clone()),
+                        Value::Str(format!("m_{merchant:05}")),
+                        Value::F64((amount * 100.0).round() / 100.0),
+                        Value::Bool(true),
+                    ],
+                )
+            })
+            .collect()
+    }
 }
 
 #[cfg(test)]
@@ -179,5 +204,28 @@ mod tests {
         let cards: HashSet<&str> = burst.iter().map(|e| e.values[0].as_str().unwrap()).collect();
         assert_eq!(cards.len(), 1);
         assert_eq!(burst[4].timestamp - burst[0].timestamp, 4 * 60_000);
+    }
+
+    #[test]
+    fn anomaly_burst_amounts_are_tail_outliers() {
+        let mut g = FraudGenerator::new(small());
+        // empirical median of the baseline amount distribution ≈ exp(μ)
+        let mut baseline: Vec<f64> = (0..1001)
+            .map(|i| g.next_event(i).values[2].as_f64().unwrap())
+            .collect();
+        baseline.sort_unstable_by(|a, b| a.partial_cmp(b).unwrap());
+        let median = baseline[baseline.len() / 2];
+        let burst = g.anomaly_burst(10_000, 8, 1000);
+        assert_eq!(burst.len(), 8);
+        let cards: HashSet<&str> = burst.iter().map(|e| e.values[0].as_str().unwrap()).collect();
+        assert_eq!(cards.len(), 1, "single card");
+        let schema = payments_schema();
+        for e in &burst {
+            schema.validate(e).unwrap();
+            let a = e.values[2].as_f64().unwrap();
+            // burst amounts live ≈4σ up the log-normal tail: far above
+            // the body of the baseline distribution
+            assert!(a > 20.0 * median, "outlier {a} vs baseline median {median}");
+        }
     }
 }
